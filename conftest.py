@@ -1,0 +1,6 @@
+"""Repo-root pytest shim: make `python/` importable so
+`pytest python/tests/` works from the workspace root."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,28 @@
+//! Profiling driver for the §Perf loop: a fixed metric-nearness solve
+//! (type-1, n=260) run three times, suitable for `perf record`:
+//!
+//! ```bash
+//! cargo build --release --example profile_nearness
+//! perf record -g ./target/release/examples/profile_nearness
+//! perf report --stdio --no-children -g none
+//! ```
+
+use paf::graph::generators::type1_complete;
+use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(53);
+    let inst = type1_complete(260, &mut rng);
+    for _ in 0..3 {
+        let res = solve_nearness(
+            &inst,
+            &NearnessConfig { violation_tol: 1e-2, ..Default::default() },
+        );
+        assert!(res.result.converged);
+        println!(
+            "iters {} projections {} seconds {:.3}",
+            res.result.iterations, res.result.total_projections, res.result.seconds
+        );
+    }
+}

@@ -1,0 +1,79 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> `artifacts/`.
+
+HLO text (NOT `lowered.compile()` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the `xla` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts          # all variants
+    python -m compile.aot --only apsp_n128 --out-dir ...  # one variant
+    python -m compile.aot --list
+
+Each artifact gets a manifest entry recording its argument shapes so the
+rust runtime can validate buffers before execution.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jax callable to HLO text with tupled outputs."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(name, out_dir):
+    fn, args = model.build(name)
+    text = to_hlo_text(fn, args)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "file": os.path.basename(path),
+        "args": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+        ],
+    }
+    return path, entry, len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", action="append", default=None,
+                    help="emit only these variants (repeatable)")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for name in model.VARIANTS:
+            print(name)
+        return
+
+    names = args.only or list(model.VARIANTS)
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name in names:
+        path, entry, nbytes = emit(name, args.out_dir)
+        manifest.append(entry)
+        print(f"wrote {path} ({nbytes} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Batched cycle-constraint projection sweep — the PROJECT hot spot.
+
+A batch of padded cycle constraints is projected *in parallel* (the
+Ruggles et al. 2019 parallel-projection scheme, which the rust
+coordinator uses for large constraint batches whose supports are
+disjoint): for each constraint row the kernel computes the Bregman step
+`theta`, clamps it by the dual `z` (`c = min(z, theta)`), updates the
+dual, and emits the per-slot edge corrections. Gather (edge values into
+the padded layout) and scatter-add (corrections back to `x`) stay on the
+rust side where the CSR indices live.
+
+Layout: `[B, K]` rows (`B` constraints, `K` padded support slots) with
+`sign in {+1, -1, 0}` — 0 marks padding. The grid runs over row blocks,
+each owning a `[bb, K]` VMEM slab; all math is elementwise + row
+reductions, a pure VPU workload.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _project_kernel(xg_ref, sign_ref, winv_ref, z_ref, rhs_ref, c_ref, znew_ref, delta_ref):
+    xg = xg_ref[...]
+    sign = sign_ref[...]
+    winv = winv_ref[...]
+    z = z_ref[...]
+    rhs = rhs_ref[...]
+    dot = jnp.sum(sign * xg, axis=1)
+    denom = jnp.sum(sign * sign * winv, axis=1)
+    safe = denom > 0
+    theta = jnp.where(safe, (rhs - dot) / jnp.where(safe, denom, 1.0), 0.0)
+    c = jnp.minimum(z, theta)
+    c = jnp.where(safe, c, 0.0)
+    c_ref[...] = c
+    znew_ref[...] = z - c
+    delta_ref[...] = c[:, None] * sign * winv
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def cycle_project(xg, sign, winv, z, rhs, block=256):
+    """Project a `[B, K]` padded constraint batch; returns `(c, z', delta)`.
+
+    `B % block == 0` is required (AOT variants are emitted at fixed padded
+    batch sizes; short batches are padded with all-zero rows, which the
+    `denom > 0` guard turns into no-ops).
+    """
+    b, k = xg.shape
+    assert sign.shape == (b, k) and winv.shape == (b, k)
+    assert z.shape == (b,) and rhs.shape == (b,)
+    assert b % block == 0, f"B={b} must be a multiple of block={block}"
+    grid = (b // block,)
+    row = lambda i: (i,)
+    return pl.pallas_call(
+        _project_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), xg.dtype),
+            jax.ShapeDtypeStruct((b,), xg.dtype),
+            jax.ShapeDtypeStruct((b, k), xg.dtype),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((block,), row),
+            pl.BlockSpec((block,), row),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), row),
+            pl.BlockSpec((block,), row),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(xg, sign, winv, z, rhs)

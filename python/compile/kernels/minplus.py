@@ -1,0 +1,79 @@
+"""Tiled min-plus (tropical) matrix squaring — the dense APSP hot spot.
+
+The separation oracle on dense instances needs all-pairs shortest paths
+each iteration; APSP by repeated min-plus squaring is `ceil(log2 n)` calls
+of this kernel. The paper ran a parallel Dijkstra on CPUs; for the TPU
+adaptation (DESIGN.md §Hardware-Adaptation) the natural formulation is
+this blocked tropical matmul:
+
+- the `[n, n]` distance matrix is streamed through VMEM in
+  `(bm, bk) x (bk, bn)` tiles exactly like a dense matmul,
+- min-plus cannot use the MXU (it is an add + min reduction, not a
+  multiply-accumulate), so the kernel targets the VPU with the same
+  HBM<->VMEM schedule a real matmul would use: grid `(n/bm, n/bn, n/bk)`
+  with the output tile revisited across the `k` dimension.
+
+VMEM per grid step = (bm*bk + bk*bn + bm*bn) * 4 bytes; the default 128
+tiles use 192 KiB — comfortably inside a TPU core's ~16 MiB VMEM with
+double-buffering headroom.
+
+`interpret=True` always: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o = min(o, minplus(a_tile, b_tile))."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref[...], jnp.inf)
+
+    a = a_ref[...]  # [bm, bk]
+    b = b_ref[...]  # [bk, bn]
+    # Tropical "matmul": min over the shared axis of a[i,k] + b[k,j].
+    cand = jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def minplus_square(d, block=128):
+    """One min-plus squaring step `out = min(d, d (x) d)` via Pallas.
+
+    `d` must be square `[n, n]` float32 with `n % block == 0` (the AOT
+    variants are generated at padded sizes; the rust runtime pads with
+    +inf rows/cols which are absorbing for min-plus).
+    """
+    n = d.shape[0]
+    assert d.shape == (n, n), "square matrix required"
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    grid = (n // block, n // block, n // block)
+    squared = pl.pallas_call(
+        _minplus_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), d.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(d, d)
+    return jnp.minimum(d, squared)
+
+
+def apsp(d, block=128):
+    """Full APSP: repeated squaring until path lengths can no longer
+    improve (`ceil(log2(n-1))` steps, statically unrolled so the whole
+    computation lowers into one HLO module)."""
+    n = d.shape[0]
+    steps = max(1, (n - 1).bit_length())
+    for _ in range(steps):
+        d = minplus_square(d, block=block)
+    return d

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with nothing but ``jax.numpy`` broadcasting; pytest asserts the Pallas
+(interpret=True) outputs match these (allclose) across shape/dtype/value
+sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def minplus_square_ref(d):
+    """One min-plus (tropical) squaring step.
+
+    ``out[i, j] = min(d[i, j], min_k d[i, k] + d[k, j])`` — the inner step
+    of APSP by repeated squaring. ``d`` is an ``[n, n]`` matrix with
+    ``+inf`` for "no edge" and zeros on the diagonal.
+    """
+    cand = jnp.min(d[:, :, None] + d[None, :, :], axis=1)
+    return jnp.minimum(d, cand)
+
+
+def apsp_ref(d, steps):
+    """``steps`` repeated min-plus squarings (enough for full APSP when
+    ``steps >= ceil(log2(n-1))``)."""
+    for _ in range(steps):
+        d = minplus_square_ref(d)
+    return d
+
+
+def cycle_project_ref(xg, sign, winv, z, rhs):
+    """Batched Bregman projection steps with dual clamping.
+
+    For each row ``b`` of a padded constraint batch:
+
+    - ``theta_b = (rhs_b - sum_k sign[b,k] * xg[b,k])
+                  / (sum_k sign[b,k]^2 * winv[b,k])``
+    - ``c_b = min(z_b, theta_b)`` (the PROJECT step's dual-corrected
+      step size; rows with zero denominator produce ``c_b = 0``)
+    - ``z'_b = z_b - c_b``
+    - per-slot edge corrections ``delta[b,k] = c_b * sign[b,k] * winv[b,k]``
+
+    Returns ``(c, z_new, delta)``. Padding slots have ``sign == 0`` so they
+    contribute nothing and receive zero correction.
+    """
+    dot = jnp.sum(sign * xg, axis=1)
+    denom = jnp.sum(sign * sign * winv, axis=1)
+    safe = denom > 0
+    theta = jnp.where(safe, (rhs - dot) / jnp.where(safe, denom, 1.0), 0.0)
+    c = jnp.minimum(z, theta)
+    c = jnp.where(safe, c, 0.0)
+    z_new = z - c
+    delta = c[:, None] * sign * winv
+    return c, z_new, delta

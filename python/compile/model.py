@@ -1,0 +1,74 @@
+"""Layer 2 — the jitted JAX compute graphs the rust runtime executes.
+
+Each entry point here composes the Layer-1 Pallas kernels into the exact
+static-shape functions that `aot.py` lowers to HLO text. Python never
+runs at solve time: the rust runtime loads the artifacts once and feeds
+them padded buffers.
+
+Variants (shape registry) are chosen to cover the bench workloads while
+keeping VMEM footprints comfortable; see `aot.py --list`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.cycle_project import cycle_project
+from compile.kernels.minplus import apsp, minplus_square
+
+
+def minplus_step_fn(n, block):
+    """One min-plus squaring step at a fixed `[n, n]` shape."""
+
+    def step(d):
+        return (minplus_square(d, block=block),)
+
+    return step, (jax.ShapeDtypeStruct((n, n), jnp.float32),)
+
+
+def apsp_fn(n, block):
+    """Full APSP (statically unrolled repeated squaring) at `[n, n]`."""
+
+    def run(d):
+        return (apsp(d, block=block),)
+
+    return run, (jax.ShapeDtypeStruct((n, n), jnp.float32),)
+
+
+def projection_sweep_fn(b, k, block):
+    """One parallel projection sweep over a `[b, k]` constraint batch.
+
+    Inputs: gathered edge values, signs, 1/W, duals z, rhs.
+    Outputs: step sizes c, updated duals, per-slot corrections.
+    """
+
+    def sweep(xg, sign, winv, z, rhs):
+        return cycle_project(xg, sign, winv, z, rhs, block=block)
+
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((b, k), f32),
+        jax.ShapeDtypeStruct((b, k), f32),
+        jax.ShapeDtypeStruct((b, k), f32),
+        jax.ShapeDtypeStruct((b,), f32),
+        jax.ShapeDtypeStruct((b,), f32),
+    )
+    return sweep, args
+
+
+#: The AOT shape registry: artifact name -> (builder, kwargs).
+VARIANTS = {
+    # Dense-oracle APSP tiles (padded graph sizes).
+    "minplus_step_n128": (minplus_step_fn, dict(n=128, block=64)),
+    "minplus_step_n256": (minplus_step_fn, dict(n=256, block=64)),
+    "apsp_n128": (apsp_fn, dict(n=128, block=64)),
+    "apsp_n256": (apsp_fn, dict(n=256, block=64)),
+    # Projection sweeps (padded constraint batches).
+    "project_b256_k8": (projection_sweep_fn, dict(b=256, k=8, block=128)),
+    "project_b1024_k16": (projection_sweep_fn, dict(b=1024, k=16, block=256)),
+}
+
+
+def build(name):
+    """Materialise a variant: returns (callable, example_args)."""
+    builder, kwargs = VARIANTS[name]
+    return builder(**kwargs)

@@ -1,0 +1,183 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+The Pallas kernels run under interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); hypothesis sweeps shapes and values against the
+pure-jnp oracles in ref.py and a numpy brute force.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.cycle_project import cycle_project
+from compile.kernels.minplus import apsp, minplus_square
+from compile.kernels.ref import apsp_ref, cycle_project_ref, minplus_square_ref
+
+
+def random_dist_matrix(rng, n, p_edge=0.4, scale=10.0):
+    """Random symmetric distance matrix with inf for missing edges."""
+    d = np.full((n, n), np.inf, dtype=np.float32)
+    np.fill_diagonal(d, 0.0)
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p_edge:
+                w = rng.random() * scale
+                d[i, j] = d[j, i] = w
+    return d
+
+
+# ---------------------------------------------------------------- minplus
+
+
+def test_minplus_matches_ref_small():
+    rng = np.random.default_rng(0)
+    d = random_dist_matrix(rng, 64)
+    out = np.asarray(minplus_square(jnp.asarray(d), block=32))
+    ref = np.asarray(minplus_square_ref(jnp.asarray(d)))
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("block", [16, 32, 64])
+def test_minplus_block_sizes_agree(block):
+    rng = np.random.default_rng(1)
+    d = random_dist_matrix(rng, 64)
+    out = np.asarray(minplus_square(jnp.asarray(d), block=block))
+    ref = np.asarray(minplus_square_ref(jnp.asarray(d)))
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+def test_apsp_matches_floyd_warshall():
+    rng = np.random.default_rng(2)
+    n = 32
+    d = random_dist_matrix(rng, n)
+    got = np.asarray(apsp(jnp.asarray(d), block=16))
+    fw = d.astype(np.float64).copy()
+    for k in range(n):
+        fw = np.minimum(fw, fw[:, k : k + 1] + fw[k : k + 1, :])
+    finite = np.isfinite(fw)
+    np.testing.assert_allclose(got[finite], fw[finite], rtol=1e-5)
+    assert np.all(np.isinf(got[~finite]))
+
+
+def test_apsp_idempotent():
+    rng = np.random.default_rng(3)
+    d = random_dist_matrix(rng, 32)
+    once = apsp(jnp.asarray(d), block=16)
+    twice = minplus_square(once, block=16)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), rtol=1e-6)
+
+
+def test_minplus_inf_absorbing_padding():
+    # Padding rows/cols of +inf must never contaminate real entries.
+    rng = np.random.default_rng(4)
+    n, pad = 24, 32
+    d = random_dist_matrix(rng, n)
+    dp = np.full((pad, pad), np.inf, dtype=np.float32)
+    dp[:n, :n] = d
+    # NB: padded diagonal stays +inf (a padded node has no self-loop);
+    # min-plus still never routes through it.
+    out_pad = np.asarray(apsp(jnp.asarray(dp), block=16))[:n, :n]
+    out = np.asarray(apsp(jnp.asarray(d), block=8))
+    np.testing.assert_allclose(out_pad, out, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 32, 48]),
+    seed=st.integers(0, 2**31 - 1),
+    p=st.floats(0.1, 0.9),
+)
+def test_minplus_hypothesis_sweep(n, seed, p):
+    rng = np.random.default_rng(seed)
+    d = random_dist_matrix(rng, n, p_edge=p)
+    out = np.asarray(minplus_square(jnp.asarray(d), block=16))
+    ref = np.asarray(minplus_square_ref(jnp.asarray(d)))
+    finite = np.isfinite(ref)
+    np.testing.assert_allclose(out[finite], ref[finite], rtol=1e-5)
+    assert np.all(np.isinf(out[~finite]))
+
+
+# ---------------------------------------------------------- cycle_project
+
+
+def random_projection_batch(rng, b, k):
+    xg = rng.normal(size=(b, k)).astype(np.float32)
+    # signs: one +1 head slot, a few -1 path slots, rest 0 padding.
+    sign = np.zeros((b, k), dtype=np.float32)
+    for r in range(b):
+        L = rng.integers(2, k + 1)
+        sign[r, 0] = 1.0
+        sign[r, 1:L] = -1.0
+    winv = rng.uniform(0.2, 2.0, size=(b, k)).astype(np.float32)
+    z = np.abs(rng.normal(size=b)).astype(np.float32)
+    rhs = np.zeros(b, dtype=np.float32)
+    return xg, sign, winv, z, rhs
+
+
+def test_project_matches_ref():
+    rng = np.random.default_rng(5)
+    args = random_projection_batch(rng, 256, 8)
+    jargs = [jnp.asarray(a) for a in args]
+    c, znew, delta = cycle_project(*jargs, block=128)
+    rc, rznew, rdelta = cycle_project_ref(*jargs)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(rc), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(znew), np.asarray(rznew), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(rdelta), rtol=1e-5, atol=1e-6)
+
+
+def test_project_semantics_violated_row():
+    # Single constraint x0 - x1 <= 0 violated by (3, 1): theta = -1 (W=I),
+    # c = min(z=0, -1) = -1, corrections (-1, +1), z' = 1.
+    xg = jnp.asarray([[3.0, 1.0]] * 128, dtype=jnp.float32)
+    sign = jnp.asarray([[1.0, -1.0]] * 128, dtype=jnp.float32)
+    winv = jnp.ones((128, 2), dtype=jnp.float32)
+    z = jnp.zeros(128, dtype=jnp.float32)
+    rhs = jnp.zeros(128, dtype=jnp.float32)
+    c, znew, delta = cycle_project(xg, sign, winv, z, rhs, block=128)
+    np.testing.assert_allclose(np.asarray(c), -1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(znew), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(delta)[:, 0], -1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(delta)[:, 1], 1.0, rtol=1e-6)
+
+
+def test_project_clamps_by_dual():
+    # Satisfied constraint with positive dual: undo is capped at z.
+    xg = jnp.asarray([[0.0, 5.0]] * 128, dtype=jnp.float32)  # slack 5
+    sign = jnp.asarray([[1.0, -1.0]] * 128, dtype=jnp.float32)
+    winv = jnp.ones((128, 2), dtype=jnp.float32)
+    z = jnp.full((128,), 0.75, dtype=jnp.float32)
+    rhs = jnp.zeros(128, dtype=jnp.float32)
+    c, znew, _ = cycle_project(xg, sign, winv, z, rhs, block=128)
+    # theta = (0 - (0-5))/2 = 2.5 > z -> c = z = 0.75, z' = 0.
+    np.testing.assert_allclose(np.asarray(c), 0.75, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(znew), 0.0, atol=1e-7)
+
+
+def test_project_zero_rows_are_noops():
+    b, k = 128, 8
+    xg = jnp.zeros((b, k), dtype=jnp.float32)
+    sign = jnp.zeros((b, k), dtype=jnp.float32)
+    winv = jnp.ones((b, k), dtype=jnp.float32)
+    z = jnp.ones((b,), dtype=jnp.float32)
+    rhs = jnp.zeros((b,), dtype=jnp.float32)
+    c, znew, delta = cycle_project(xg, sign, winv, z, rhs, block=128)
+    assert np.all(np.asarray(c) == 0)
+    np.testing.assert_array_equal(np.asarray(znew), np.asarray(z))
+    assert np.all(np.asarray(delta) == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([4, 8, 16]))
+def test_project_hypothesis_sweep(seed, k):
+    rng = np.random.default_rng(seed)
+    args = random_projection_batch(rng, 256, k)
+    jargs = [jnp.asarray(a) for a in args]
+    c, znew, delta = cycle_project(*jargs, block=128)
+    rc, rznew, rdelta = cycle_project_ref(*jargs)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(rc), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(znew), np.asarray(rznew), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(rdelta), rtol=1e-4, atol=1e-5)
+    # Invariant: duals never go negative.
+    assert np.all(np.asarray(znew) >= -1e-6)

@@ -1,0 +1,185 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. FORGET policy — forget-each-iteration (the paper) vs never-forget
+//!    (classic active set) vs forget-all (truly stochastic flavour):
+//!    effect on time and remembered-set size.
+//! 2. Inner project/forget sweeps — 1 vs 2 vs 8 vs 75 (Algorithms 6 vs 7).
+//! 3. Oracle delivery — project-on-find (Algorithm 8) vs collect.
+//! 4. Dense APSP backend — native blocked Floyd–Warshall vs the PJRT
+//!    min-plus artifact (one oracle round each).
+
+use paf::core::bregman::DiagonalQuadratic;
+use paf::core::solver::{Solver, SolverConfig};
+use paf::graph::apsp::apsp_dense;
+use paf::graph::generators::{planted_signed, type1_complete};
+use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::problems::metric_oracle::{MetricOracle, OracleMode};
+use paf::runtime::Runtime;
+use paf::util::benchkit::BenchCtx;
+use paf::util::table::Table;
+use paf::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let ctx = BenchCtx::from_env();
+    ablation_forget(&ctx);
+    ablation_sweeps(&ctx);
+    ablation_oracle_mode(&ctx);
+    ablation_apsp_backend(&ctx);
+}
+
+/// 1. Forget policy: we emulate "never forget" by observing the
+/// remembered set with forgetting on vs the total *distinct* constraints
+/// discovered (what a no-forget active set would carry).
+fn ablation_forget(ctx: &BenchCtx) {
+    let n = ctx.scaled(120);
+    let mut rng = Rng::new(23);
+    let inst = type1_complete(n, &mut rng);
+    let res = paf::problems::nearness::solve_nearness(
+        &inst,
+        &paf::problems::nearness::NearnessConfig { violation_tol: 1e-2, ..Default::default() },
+    );
+    let total_found: usize = res.result.trace.iter().map(|t| t.found).sum();
+    let peak_merged = res.result.trace.iter().map(|t| t.merged).max().unwrap_or(0);
+    let mut t = Table::new(
+        "Ablation 1 — FORGET keeps the working set small",
+        &["quantity", "count"],
+    );
+    t.rowd(&["constraints delivered over the run".to_string(), total_found.to_string()]);
+    t.rowd(&["peak remembered (with FORGET)".to_string(), peak_merged.to_string()]);
+    t.rowd(&["final remembered (≈ active set)".to_string(), res.result.active_constraints.to_string()]);
+    t.emit(&ctx.report_dir, "ablation_forget");
+}
+
+/// 2. Inner sweep count on a dense CC instance.
+fn ablation_sweeps(ctx: &BenchCtx) {
+    let n = ctx.scaled(60);
+    let mut rng = Rng::new(29);
+    let g = paf::graph::Graph::complete(n);
+    let (sg, _) = planted_signed(g, 6, 0.15, &mut rng);
+    let inst = CcInstance::from_signed(&sg);
+    let mut t = Table::new(
+        "Ablation 2 — inner project/forget sweeps per iteration",
+        &["sweeps", "iterations", "seconds", "projections"],
+    );
+    for sweeps in [1usize, 2, 8, 75] {
+        let cfg = CcConfig {
+            inner_sweeps: sweeps,
+            violation_tol: 1e-3,
+            max_iters: 2000,
+            ..CcConfig::dense()
+        };
+        let (secs, res) = ctx.bench_once(&format!("sweeps/{sweeps}"), || solve_cc(&inst, &cfg, 1));
+        t.rowd(&[
+            sweeps.to_string(),
+            res.result.iterations.to_string(),
+            format!("{secs:.3}"),
+            res.result.total_projections.to_string(),
+        ]);
+    }
+    t.emit(&ctx.report_dir, "ablation_sweeps");
+}
+
+/// 3. Project-on-find vs collect vs Property-2 random triangles, on
+/// metric nearness. The random oracle cannot self-certify, so it runs a
+/// fixed budget and all three report the *residual* metric violation.
+fn ablation_oracle_mode(ctx: &BenchCtx) {
+    let n = ctx.scaled(140);
+    let mut t = Table::new(
+        "Ablation 3 — oracle delivery mode",
+        &["mode", "iterations", "seconds", "projections", "residual_violation"],
+    );
+    let mut run = |label: &str, mk: &mut dyn FnMut() -> paf::core::solver::SolverResult| {
+        let (secs, res) = ctx.bench_once(&format!("mode/{label}"), mk);
+        let mut rng = Rng::new(31);
+        let inst = type1_complete(n, &mut rng);
+        let viol = paf::problems::metric_oracle::max_metric_violation(&inst.graph, &res.x);
+        t.rowd(&[
+            label.to_string(),
+            res.iterations.to_string(),
+            format!("{secs:.3}"),
+            res.total_projections.to_string(),
+            format!("{viol:.2e}"),
+        ]);
+    };
+    for (label, mode) in [("project-on-find", OracleMode::ProjectOnFind), ("collect", OracleMode::Collect)] {
+        run(label, &mut || {
+            let mut rng = Rng::new(31);
+            let inst = type1_complete(n, &mut rng);
+            let f = DiagonalQuadratic::unweighted(inst.weights.clone());
+            let oracle = MetricOracle::new(Arc::new(inst.graph.clone()), mode);
+            let cfg = SolverConfig {
+                max_iters: 500,
+                inner_sweeps: 1,
+                violation_tol: 1e-2,
+                dual_tol: f64::INFINITY,
+                ..Default::default()
+            };
+            let mut solver = Solver::new(f, cfg);
+            solver.solve(oracle)
+        });
+    }
+    run("random-triangles", &mut || {
+        let mut rng = Rng::new(31);
+        let inst = type1_complete(n, &mut rng);
+        let f = DiagonalQuadratic::unweighted(inst.weights.clone());
+        let oracle = paf::problems::random_oracle::RandomTriangleOracle::new(
+            Arc::new(inst.graph.clone()),
+            20_000,
+            31,
+        );
+        let cfg = SolverConfig {
+            max_iters: 40, // fixed budget: Property 2 cannot certify
+            inner_sweeps: 1,
+            violation_tol: -1.0,
+            dual_tol: 0.0,
+            record_trace: false,
+            ..Default::default()
+        };
+        let mut solver = Solver::new(f, cfg);
+        solver.solve(oracle)
+    });
+    t.emit(&ctx.report_dir, "ablation_oracle_mode");
+}
+
+/// 4. APSP backend for one dense oracle certification round.
+fn ablation_apsp_backend(ctx: &BenchCtx) {
+    let n = 100; // pads into apsp_n128
+    let mut rng = Rng::new(37);
+    let inst = type1_complete(n, &mut rng);
+    let mut t = Table::new(
+        "Ablation 4 — dense APSP backend (one oracle round)",
+        &["backend", "seconds"],
+    );
+    let nat = ctx.bench("apsp/native-fw", |_| apsp_dense(&inst.graph, &inst.weights));
+    t.rowd(&["native blocked Floyd–Warshall".to_string(), format!("{:.4}", nat.mean())]);
+    let dij = ctx.bench("apsp/native-dijkstra", |_| {
+        paf::graph::apsp::apsp_dijkstra(&inst.graph, &inst.weights, 1)
+    });
+    t.rowd(&["native per-source Dijkstra".to_string(), format!("{:.4}", dij.mean())]);
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => {
+            let p = rt.apsp_size_for(n).unwrap();
+            let mut base = vec![f32::INFINITY; p * p];
+            for i in 0..n {
+                base[i * p + i] = 0.0;
+            }
+            for (e, &(a, b)) in inst.graph.edges().iter().enumerate() {
+                let (a, b) = (a as usize, b as usize);
+                base[a * p + b] = inst.weights[e] as f32;
+                base[b * p + a] = inst.weights[e] as f32;
+            }
+            let pj = ctx.bench("apsp/pjrt-minplus", |_| {
+                let mut d = base.clone();
+                rt.apsp_padded(&mut d, p).unwrap();
+                d
+            });
+            t.rowd(&[
+                format!("PJRT min-plus artifact (padded {p})"),
+                format!("{:.4}", pj.mean()),
+            ]);
+        }
+        Err(e) => println!("(pjrt backend skipped: {e})"),
+    }
+    t.emit(&ctx.report_dir, "ablation_apsp_backend");
+}

@@ -1,0 +1,51 @@
+//! Figure 1 — metric nearness running-time curves on type-2 graphs
+//! (w(e)=1 w.p. 0.8 else 0): P&F (blue) vs Brickell (red).
+//!
+//! Relaxed convergence as in §4.1's second experiment: stop once within
+//! distance 1 of the decrease-only metric solution — here both solvers
+//! run to the same max-violation tolerance calibrated to that criterion.
+
+use paf::baselines::brickell::triangle_fixing;
+use paf::graph::generators::type2_complete;
+use paf::problems::nearness::{decrease_only_distance, solve_nearness, NearnessConfig};
+use paf::util::benchkit::BenchCtx;
+use paf::util::table::Series;
+use paf::util::Rng;
+
+fn main() {
+    run(
+        "fig1",
+        "Figure 1 — nearness runtimes, type-2 graphs",
+        |n, rng| type2_complete(n, rng),
+    );
+}
+
+pub fn run(
+    basename: &str,
+    title: &str,
+    gen: impl Fn(usize, &mut Rng) -> paf::graph::generators::WeightedInstance,
+) {
+    let ctx = BenchCtx::from_env();
+    let sizes: Vec<usize> =
+        [80usize, 140, 200, 260].iter().map(|&n| ctx.scaled(n)).collect();
+    let mut series = Series::new(title, "n", &["ours_seconds", "brickell_seconds"]);
+    for &n in &sizes {
+        let mut rng = Rng::new(1000 + n as u64);
+        let inst = gen(n, &mut rng);
+        let tol = 1e-2;
+        let pf = ctx.bench(&format!("pf/n{n}"), |_| {
+            solve_nearness(&inst, &NearnessConfig { violation_tol: tol, ..Default::default() })
+        });
+        let br = ctx.bench(&format!("brickell/n{n}"), |_| {
+            triangle_fixing(n, &inst.weights, tol, 10_000)
+        });
+        series.push(n as f64, &[pf.mean(), br.mean()]);
+        // §8.2 criterion sanity: the P&F solution is within distance ~1 of
+        // its decrease-only closure.
+        let res =
+            solve_nearness(&inst, &NearnessConfig { violation_tol: tol, ..Default::default() });
+        let dd = decrease_only_distance(&inst.graph, &res.result.x);
+        println!("n={n}: decrease-only distance {dd:.3}");
+    }
+    series.emit(&ctx.report_dir, basename);
+}

@@ -1,0 +1,32 @@
+//! Figure 3 — maximum metric-constraint violation per iteration on the
+//! CA-HepTh-like dense CC instance. Paper shape: exponential decay
+//! (Theorem 1's asymptotically linear rate); the bench fits the decay
+//! rate and asserts it is geometric (< 1).
+
+use paf::coordinator::{figure3_series, violation_decay_rate};
+use paf::graph::generators::snap_like;
+use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::util::benchkit::BenchCtx;
+use paf::util::Rng;
+
+fn main() {
+    let ctx = BenchCtx::from_env();
+    let scale = std::env::var("PAF_FIG3_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.015 * ctx.scale);
+    let mut rng = Rng::new(5);
+    let g = snap_like("ca-hepth", scale, &mut rng);
+    let inst = CcInstance::densify(&g);
+    let cfg = CcConfig { violation_tol: 1e-4, max_iters: 400, ..CcConfig::dense() };
+    let (_, res) = ctx.bench_once("cc/ca-hepth", || solve_cc(&inst, &cfg, 7));
+    let series = figure3_series(&res.result, "Figure 3 — max violation per iteration");
+    series.emit(&ctx.report_dir, "fig3");
+    match violation_decay_rate(&res.result) {
+        Some(rate) => {
+            println!("fitted asymptotic decay rate: {rate:.4} per iteration");
+            assert!(rate < 1.0, "violation decay is not geometric (rate {rate})");
+        }
+        None => println!("trace too short to fit a rate"),
+    }
+}

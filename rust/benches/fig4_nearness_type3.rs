@@ -1,0 +1,38 @@
+//! Figure 4 — metric nearness running-time curves on type-3 graphs
+//! (w = ⌈1000·u·v²⌉, u ~ U[0,1], v ~ N(0,1)): P&F vs Brickell.
+//!
+//! Same harness as Figure 1, different weight distribution (heavy-tailed
+//! integer weights make far more triangle inequalities active).
+
+use paf::baselines::brickell::triangle_fixing;
+use paf::graph::generators::type3_complete;
+use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::util::benchkit::BenchCtx;
+use paf::util::table::Series;
+use paf::util::Rng;
+
+fn main() {
+    let ctx = BenchCtx::from_env();
+    let sizes: Vec<usize> =
+        [80usize, 140, 200, 260].iter().map(|&n| ctx.scaled(n)).collect();
+    let mut series = Series::new(
+        "Figure 4 — nearness runtimes, type-3 graphs",
+        "n",
+        &["ours_seconds", "brickell_seconds"],
+    );
+    for &n in &sizes {
+        let mut rng = Rng::new(4000 + n as u64);
+        let inst = type3_complete(n, &mut rng);
+        // Weights are O(1000); scale the violation tolerance accordingly
+        // (the paper relaxes convergence on these instances too).
+        let tol = 1.0;
+        let pf = ctx.bench(&format!("pf/n{n}"), |_| {
+            solve_nearness(&inst, &NearnessConfig { violation_tol: tol, ..Default::default() })
+        });
+        let br = ctx.bench(&format!("brickell/n{n}"), |_| {
+            triangle_fixing(n, &inst.weights, tol, 10_000)
+        });
+        series.push(n as f64, &[pf.mean(), br.mean()]);
+    }
+    series.emit(&ctx.report_dir, "fig4");
+}

@@ -1,0 +1,127 @@
+//! §Perf driver: isolates the solver's hot paths so the optimisation
+//! loop (EXPERIMENTS.md §Perf) has stable, comparable numbers.
+//!
+//! Paths measured:
+//!   P1  separation-oracle round (Dijkstra scan + witness extraction)
+//!   P2  projection sweep throughput (projections/second)
+//!   P3  full metric nearness solve (n = 260, type 1)
+//!   P4  full dense CC solve (K_120 planted)
+//!   P5  active-set merge/forget churn (insert + forget cycles)
+//!   P6  native blocked min-plus APSP (the L1 kernel's CPU twin)
+
+use paf::core::bregman::DiagonalQuadratic;
+use paf::core::constraint::Constraint;
+use paf::core::solver::{Solver, SolverConfig};
+use paf::graph::apsp::{floyd_warshall_blocked, DistMatrix};
+use paf::graph::generators::{planted_signed, type1_complete};
+use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::problems::metric_oracle::{MetricOracle, OracleMode};
+use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::util::benchkit::BenchCtx;
+use paf::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let ctx = BenchCtx::from_env();
+
+    // P1: one oracle round on a fresh (violation-rich) instance.
+    {
+        let mut rng = Rng::new(51);
+        let inst = type1_complete(ctx.scaled(300), &mut rng);
+        let f = DiagonalQuadratic::unweighted(inst.weights.clone());
+        ctx.bench("P1/oracle-round", |_| {
+            let oracle = MetricOracle::new(Arc::new(inst.graph.clone()), OracleMode::ProjectOnFind);
+            let cfg = SolverConfig { max_iters: 1, record_trace: false, ..Default::default() };
+            let mut s = Solver::new(f.clone(), cfg);
+            s.solve(oracle)
+        });
+    }
+
+    // P2: sweep throughput over a synthetic active set.
+    {
+        let mut rng = Rng::new(52);
+        let m = 40_000;
+        let d: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 2.0)).collect();
+        let f = DiagonalQuadratic::unweighted(d);
+        let mut s = Solver::new(f, SolverConfig { record_trace: false, ..Default::default() });
+        for _ in 0..20_000 {
+            let e = rng.below(m) as u32;
+            let a = rng.below(m) as u32;
+            let b = rng.below(m) as u32;
+            if e != a && e != b && a != b {
+                let slot = s.active.insert(&Constraint::cycle(e, &[a, b]));
+                s.active.set_z(slot, rng.uniform(0.0, 0.3));
+            }
+        }
+        let rows = s.active.len();
+        let stats = ctx.bench("P2/sweep-20k-rows", |_| s.project_sweep());
+        println!(
+            "    -> {:.2} M row-visits/s over {rows} rows",
+            rows as f64 / stats.min() / 1e6
+        );
+    }
+
+    // P3: full nearness solve.
+    {
+        let mut rng = Rng::new(53);
+        let inst = type1_complete(ctx.scaled(260), &mut rng);
+        ctx.bench("P3/nearness-n260", |_| {
+            let res = solve_nearness(
+                &inst,
+                &NearnessConfig { violation_tol: 1e-2, ..Default::default() },
+            );
+            assert!(res.result.converged);
+            res
+        });
+    }
+
+    // P4: dense CC solve.
+    {
+        let mut rng = Rng::new(54);
+        let g = paf::graph::Graph::complete(ctx.scaled(120));
+        let (sg, _) = planted_signed(g, 8, 0.1, &mut rng);
+        let inst = CcInstance::from_signed(&sg);
+        ctx.bench("P4/cc-dense-K120", |_| {
+            let res = solve_cc(&inst, &CcConfig::dense(), 1);
+            assert!(res.result.converged);
+            res
+        });
+    }
+
+    // P5: active-set churn (insert + forget).
+    {
+        let mut rng = Rng::new(55);
+        ctx.bench("P5/active-set-churn", |_| {
+            let mut set = paf::core::active_set::ActiveSet::new();
+            for round in 0..50 {
+                for _ in 0..2000 {
+                    let e = rng.below(10_000) as u32;
+                    let a = rng.below(10_000) as u32;
+                    if e != a {
+                        let slot = set.insert(&Constraint::cycle(e, &[a, a ^ 1]));
+                        set.set_z(slot, if rng.bernoulli(0.5) { 0.0 } else { 1.0 });
+                    }
+                }
+                set.forget_inactive();
+                let _ = round;
+            }
+            set.len()
+        });
+    }
+
+    // P6: native blocked min-plus APSP (L1 kernel's CPU twin).
+    {
+        let mut rng = Rng::new(56);
+        let n = 256;
+        let g = paf::graph::generators::erdos_renyi(n, 0.08, &mut rng);
+        let w: Vec<f64> = (0..g.num_edges()).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let base = DistMatrix::from_graph(&g, &w);
+        for block in [32usize, 64, 128] {
+            ctx.bench(&format!("P6/fw-blocked-{block}"), |_| {
+                let mut m = base.clone();
+                floyd_warshall_blocked(&mut m, block);
+                m
+            });
+        }
+    }
+}

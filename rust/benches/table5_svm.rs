@@ -1,0 +1,60 @@
+//! Table 5 — L2-SVM at n = 10⁶, d = 100, C = 10³: the truly stochastic
+//! P&F trainer vs LIBLINEAR-style dual coordinate descent and primal
+//! Newton, across the paper's three noise levels (K = 10, 5, 2 →
+//! s ≈ 6.3%, 12.6%, 29.5%).
+//!
+//! Paper shape: ours fastest by a wide margin over the dual solver with
+//! equal-or-better accuracy; the primal solver has the best accuracy.
+//! Default runs at n = 10⁶ (scale with PAF_BENCH_SCALE for CI).
+
+use paf::baselines::svm_liblinear::{train_dual_cd, train_primal_newton};
+use paf::ml::dataset::svm_cloud;
+use paf::problems::svm::{train_pf_svm, SvmConfig};
+use paf::util::benchkit::BenchCtx;
+use paf::util::table::Table;
+use paf::util::Rng;
+
+fn main() {
+    let ctx = BenchCtx::from_env();
+    let n = std::env::var("PAF_T5_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(ctx.scaled(1_000_000));
+    let d = 100;
+    let c = 1e3;
+    let mut table = Table::new(
+        "Table 5 — L2-SVM: time (s) and test accuracy",
+        &["n", "d", "s", "ours_t", "dual_t", "primal_t", "ours_acc", "dual_acc", "primal_acc"],
+    );
+    for k in [10.0, 5.0, 2.0] {
+        let mut rng = Rng::new(19);
+        let (all, s) = svm_cloud(2 * n, d, k, &mut rng);
+        let (train, test) = all.split(0.5, &mut rng);
+        println!("-- K={k}: n={n} s={:.1}%", s * 100.0);
+        let (ours_t, ours) = ctx.bench_once(&format!("ours/K{k}"), || {
+            train_pf_svm(&train, &SvmConfig { c, epochs: 5, seed: 19 })
+        });
+        // Dual CD at the paper's C=10³ is the slow column; cap epochs so
+        // the bench finishes, exactly as LIBLINEAR caps iterations (it
+        // reports "reaching maximum iterations" on these runs).
+        let (dual_t, dual) = ctx.bench_once(&format!("dual/K{k}"), || {
+            train_dual_cd(&train, c, 1e-3, 30, 19)
+        });
+        let (primal_t, primal) = ctx.bench_once(&format!("primal/K{k}"), || {
+            train_primal_newton(&train, c, 1e-3, 25)
+        });
+        table.rowd(&[
+            n.to_string(),
+            d.to_string(),
+            format!("{:.1}%", s * 100.0),
+            format!("{ours_t:.2}"),
+            format!("{dual_t:.2}"),
+            format!("{primal_t:.2}"),
+            format!("{:.1}%", 100.0 * ours.accuracy(&test)),
+            format!("{:.1}%", 100.0 * dual.accuracy(&test)),
+            format!("{:.1}%", 100.0 * primal.accuracy(&test)),
+        ]);
+    }
+    table.emit(&ctx.report_dir, "table5_svm");
+    println!("\npaper shape: ours ≪ dual in time, ≈ dual in accuracy, primal best accuracy.");
+}

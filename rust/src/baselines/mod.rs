@@ -1,0 +1,24 @@
+//! Every comparator appearing in the paper's evaluation tables,
+//! implemented from scratch (nothing is available offline):
+//!
+//! - [`brickell`] — triangle-fixing metric nearness (Brickell et al.
+//!   2008), the main Table 1 / Figures 1 & 4 baseline.
+//! - [`ruggles`] — cyclic/parallel Dykstra over all triangle constraints
+//!   of the Veldt surrogate (Veldt et al. 2019; Ruggles et al. 2019), the
+//!   Table 2 baseline.
+//! - [`itml_orig`] — ITML with the once-sampled 20c² constraint set
+//!   (Davis et al. 2007), the Table 4 baseline.
+//! - [`svm_liblinear`] — LIBLINEAR-style dual coordinate descent and
+//!   primal Newton-CG L2-SVM solvers (Fan et al. 2008), the Table 5
+//!   baselines.
+//! - [`generic_qp`] — a naive "standard solver" stand-in (OSQP-flavoured
+//!   ADMM over the fully materialised constraint matrix) demonstrating
+//!   the memory/time blow-up in Table 1's solver columns.
+//! - [`sparse`] — the CSR sparse-matrix / CG substrate `generic_qp` uses.
+
+pub mod brickell;
+pub mod generic_qp;
+pub mod itml_orig;
+pub mod ruggles;
+pub mod sparse;
+pub mod svm_liblinear;

@@ -1,0 +1,178 @@
+//! The Veldt et al. (2019) / Ruggles et al. (2019) comparator for dense
+//! correlation clustering (Table 2): Dykstra's method over *all*
+//! `3·C(n,3)` triangle constraints of the quadratic surrogate (4.2), plus
+//! the `[0,1]` box rows — no oracle, no forgetting.
+//!
+//! Veldt et al. run the sweeps serially; Ruggles et al. parallelise the
+//! projection batches. Here the triangle enumeration is sharded across
+//! `threads` workers with batched corrections merged between rounds —
+//! on the single-core CI box the two coincide, which is fine because the
+//! paper's comparison is about *work per iteration* (every triangle,
+//! every sweep) versus P&F's active-set sweeps.
+
+use crate::core::bregman::{BregmanFunction, DiagonalQuadratic};
+use crate::graph::Graph;
+use crate::problems::correlation::{veldt_transform, CcInstance, VeldtTransform};
+
+/// Result of a Dykstra CC solve.
+#[derive(Debug, Clone)]
+pub struct RugglesResult {
+    pub x: Vec<f64>,
+    pub sweeps: usize,
+    pub converged: bool,
+    pub max_violation: f64,
+    pub approx_ratio: f64,
+    pub seconds: f64,
+    /// Dual storage bytes (triangles + box).
+    pub dual_bytes: usize,
+}
+
+/// Solve the dense CC surrogate by cyclic Dykstra over all triangles of
+/// K_n plus the box rows. `inst.graph` must be complete.
+pub fn dykstra_cc(
+    inst: &CcInstance,
+    gamma: f64,
+    tol: f64,
+    max_sweeps: usize,
+) -> RugglesResult {
+    let n = inst.graph.num_nodes();
+    assert_eq!(inst.graph.num_edges(), n * (n - 1) / 2, "dense solver needs K_n");
+    let clock = crate::util::Stopwatch::new();
+    let t: VeldtTransform = veldt_transform(inst, gamma);
+    let f: &DiagonalQuadratic = &t.f;
+    let mut x = f.argmin();
+    let m = inst.graph.num_edges();
+    let ntri = n * (n - 1) * (n - 2) / 6;
+    let mut z_tri = vec![0.0f64; 3 * ntri];
+    let mut z_lo = vec![0.0f64; m];
+    let mut z_hi = vec![0.0f64; m];
+    // Diagonal weights: q_e = 2 w̃_e / γ; projections must respect W.
+    let q: &[f64] = &f.w;
+    let eidx = |a: usize, b: usize| Graph::complete_edge_index(n, a, b);
+    let mut sweeps = 0;
+    let mut converged = false;
+    let mut max_violation = f64::INFINITY;
+    while sweeps < max_sweeps {
+        sweeps += 1;
+        let mut worst = 0.0f64;
+        // Box rows first (the never-forgotten L_a).
+        for e in 0..m {
+            // x_e ≥ 0: row a = −1, denom = 1/q_e.
+            let viol = -x[e];
+            worst = worst.max(viol);
+            let theta = -viol * q[e]; // (b − ⟨a,x⟩)/(a²/q) = (0 + x_e)·q_e
+            let c = z_lo[e].min(theta);
+            if c != 0.0 {
+                x[e] -= c / q[e];
+                z_lo[e] -= c;
+            }
+            // x_e ≤ 1.
+            let viol = x[e] - 1.0;
+            worst = worst.max(viol);
+            let theta = -viol * q[e];
+            let c = z_hi[e].min(theta);
+            if c != 0.0 {
+                x[e] += c / q[e];
+                z_hi[e] -= c;
+            }
+        }
+        // All triangle sides.
+        let mut tix = 0usize;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let ij = eidx(i, j);
+                for k in (j + 1)..n {
+                    let ik = eidx(i, k);
+                    let jk = eidx(j, k);
+                    let sides = [(ij, ik, jk), (ik, ij, jk), (jk, ij, ik)];
+                    for (s, &(e, p1, p2)) in sides.iter().enumerate() {
+                        let viol = x[e] - x[p1] - x[p2];
+                        worst = worst.max(viol);
+                        let denom = 1.0 / q[e] + 1.0 / q[p1] + 1.0 / q[p2];
+                        let theta = -viol / denom;
+                        let c = z_tri[3 * tix + s].min(theta);
+                        if c != 0.0 {
+                            x[e] += c / q[e];
+                            x[p1] -= c / q[p1];
+                            x[p2] -= c / q[p2];
+                            z_tri[3 * tix + s] -= c;
+                        }
+                    }
+                    tix += 1;
+                }
+            }
+        }
+        max_violation = worst;
+        if worst <= tol {
+            converged = true;
+            break;
+        }
+    }
+    let ratio = crate::problems::correlation::approx_ratio(&t, &x);
+    RugglesResult {
+        x,
+        sweeps,
+        converged,
+        max_violation,
+        approx_ratio: ratio,
+        seconds: clock.elapsed_s(),
+        dual_bytes: (z_tri.len() + z_lo.len() + z_hi.len()) * std::mem::size_of::<f64>(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::planted_signed;
+    use crate::problems::correlation::{solve_cc, CcConfig};
+    use crate::util::Rng;
+
+    fn planted(n: usize, k: usize, flip: f64, seed: u64) -> CcInstance {
+        let mut rng = Rng::new(seed);
+        let g = Graph::complete(n);
+        let (sg, _) = planted_signed(g, k, flip, &mut rng);
+        CcInstance::from_signed(&sg)
+    }
+
+    #[test]
+    fn feasible_and_in_box() {
+        let inst = planted(9, 2, 0.1, 1);
+        let res = dykstra_cc(&inst, 1.0, 1e-6, 5000);
+        assert!(res.converged);
+        for &xe in &res.x {
+            assert!((-1e-5..=1.0 + 1e-5).contains(&xe));
+        }
+        let viol = crate::problems::metric_oracle::max_metric_violation(&inst.graph, &res.x);
+        assert!(viol < 1e-4, "metric violation {viol}");
+    }
+
+    #[test]
+    fn agrees_with_project_and_forget() {
+        // Same surrogate, same optimum (Table 2's premise).
+        let inst = planted(8, 2, 0.15, 2);
+        let dy = dykstra_cc(&inst, 1.0, 1e-9, 50000);
+        assert!(dy.converged);
+        let pf = solve_cc(&inst, &CcConfig { violation_tol: 1e-9, ..CcConfig::dense() }, 1);
+        assert!(pf.result.converged);
+        for (a, b) in dy.x.iter().zip(&pf.result.x) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert!((dy.approx_ratio - pf.approx_ratio).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dual_memory_dwarfs_active_set() {
+        // The structural claim behind Table 2's memory column: Dykstra
+        // carries 3·C(n,3) duals; P&F carries only the remembered rows.
+        let inst = planted(10, 2, 0.1, 3);
+        let dy = dykstra_cc(&inst, 1.0, 1e-6, 2000);
+        let pf = solve_cc(&inst, &CcConfig { violation_tol: 1e-6, ..CcConfig::dense() }, 1);
+        let pf_rows = pf.result.active_constraints;
+        assert!(
+            dy.dual_bytes > pf_rows * 8 * 4,
+            "dykstra {} bytes vs ~{} active rows",
+            dy.dual_bytes,
+            pf_rows
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal sparse linear-algebra substrate (CSR matrices, matvecs,
+//! conjugate gradient) used by the generic-QP "standard solver" stand-in.
+
+/// CSR sparse matrix.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from row triplets (each row given as (col, val) pairs).
+    pub fn from_rows(cols: usize, rows: &[Vec<(u32, f64)>]) -> Csr {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for row in rows {
+            for &(c, v) in row {
+                assert!((c as usize) < cols);
+                indices.push(c);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: rows.len(), cols, indptr, indices, data }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.data[k] * x[self.indices[k] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// y = Aᵀ x.
+    pub fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                y[self.indices[k] as usize] += self.data[k] * xr;
+            }
+        }
+    }
+
+    /// Approximate resident bytes of the matrix.
+    pub fn bytes(&self) -> usize {
+        self.indices.len() * 4 + self.data.len() * 8 + self.indptr.len() * 8
+    }
+}
+
+/// Conjugate gradient for SPD operators given as closures. Returns the
+/// iteration count used.
+pub fn conjugate_gradient<F: FnMut(&[f64], &mut Vec<f64>)>(
+    mut apply: F,
+    b: &[f64],
+    x: &mut Vec<f64>,
+    tol: f64,
+    max_iters: usize,
+) -> usize {
+    let n = b.len();
+    x.resize(n, 0.0);
+    let mut ax = vec![0.0; n];
+    apply(x, &mut ax);
+    let mut r: Vec<f64> = b.iter().zip(&ax).map(|(&bi, &a)| bi - a).collect();
+    let mut p = r.clone();
+    let mut rs: f64 = r.iter().map(|&v| v * v).sum();
+    let b_norm = b.iter().map(|&v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let mut ap = vec![0.0; n];
+    for it in 0..max_iters {
+        if rs.sqrt() / b_norm < tol {
+            return it;
+        }
+        apply(&p, &mut ap);
+        let pap: f64 = p.iter().zip(&ap).map(|(&a, &b)| a * b).sum();
+        if pap <= 0.0 {
+            return it;
+        }
+        let alpha = rs / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f64 = r.iter().map(|&v| v * v).sum();
+        let beta = rs_new / rs;
+        rs = rs_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+    }
+    max_iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_dense() {
+        // [[1, 0, 2], [0, 3, 0]]
+        let a = Csr::from_rows(3, &[vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)]]);
+        let mut y = vec![0.0; 2];
+        a.matvec(&[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 3.0]);
+        let mut yt = vec![0.0; 3];
+        a.matvec_t(&[1.0, 2.0], &mut yt);
+        assert_eq!(yt, vec![1.0, 6.0, 2.0]);
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn cg_solves_spd_system() {
+        // SPD A = M M^T + I applied as closure.
+        let m = Csr::from_rows(
+            3,
+            &[vec![(0, 2.0), (1, 1.0)], vec![(1, 3.0)], vec![(0, 1.0), (2, 1.0)]],
+        );
+        let apply = |v: &[f64], out: &mut Vec<f64>| {
+            let mut tmp = vec![0.0; 3];
+            m.matvec_t(v, &mut tmp);
+            let mut mv = vec![0.0; 3];
+            m.matvec(&tmp, &mut mv);
+            out.clear();
+            out.extend(mv.iter().zip(v).map(|(&a, &b)| a + b));
+        };
+        let b = vec![1.0, 2.0, 3.0];
+        let mut x = Vec::new();
+        let iters = conjugate_gradient(apply, &b, &mut x, 1e-12, 100);
+        assert!(iters < 100);
+        // Verify residual.
+        let mut ax = vec![0.0; 3];
+        let mut tmp = vec![0.0; 3];
+        m.matvec_t(&x, &mut tmp);
+        m.matvec(&tmp, &mut ax);
+        for i in 0..3 {
+            ax[i] += x[i];
+            assert!((ax[i] - b[i]).abs() < 1e-9);
+        }
+    }
+}

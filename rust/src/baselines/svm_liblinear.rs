@@ -1,0 +1,253 @@
+//! LIBLINEAR-style L2-SVM solvers (Fan et al. 2008) — Table 5's
+//! comparators.
+//!
+//! - [`train_dual_cd`] — dual coordinate descent for the L2-loss SVM dual
+//!   `min ½αᵀQ̄α − eᵀα, α ≥ 0` with `Q̄ = Q + I/(2C)` (Hsieh et al. 2008,
+//!   the `-s 1`-style solver).
+//! - [`train_primal_newton`] — primal trust-region-flavoured Newton-CG on
+//!   `P(w) = ½‖w‖² + C Σ max(0, 1 − y_i⟨w, x_i⟩)²` (the `-s 2` TRON-style
+//!   solver; here a damped Newton with CG on Hessian-vector products).
+
+use crate::ml::dataset::Dataset;
+use crate::util::{Rng, Stopwatch};
+
+/// A trained linear model.
+#[derive(Debug, Clone)]
+pub struct LinearModel {
+    pub w: Vec<f64>,
+    pub seconds: f64,
+    pub iterations: usize,
+}
+
+impl LinearModel {
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..data.n {
+            let dot: f64 = self.w.iter().zip(data.row(i)).map(|(&w, &x)| w * x).sum();
+            if (dot >= 0.0) == (data.y[i] == 1) {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.n.max(1) as f64
+    }
+}
+
+/// Dual coordinate descent: random-permutation epochs over coordinates
+/// with the closed-form single-variable update
+/// `α_i ← max(0, α_i − (y_i⟨w,x_i⟩ − 1 + α_i/(2C)) / (‖x_i‖² + 1/(2C)))`.
+/// Stops when the largest projected-gradient magnitude in an epoch is
+/// below `tol` or after `max_epochs`.
+pub fn train_dual_cd(data: &Dataset, c: f64, tol: f64, max_epochs: usize, seed: u64) -> LinearModel {
+    let clock = Stopwatch::new();
+    let (n, d) = (data.n, data.d);
+    let mut w = vec![0.0f64; d];
+    let mut alpha = vec![0.0f64; n];
+    let diag = 1.0 / (2.0 * c);
+    let norms: Vec<f64> = (0..n)
+        .map(|i| data.row(i).iter().map(|&v| v * v).sum::<f64>() + diag)
+        .collect();
+    let mut rng = Rng::new(seed);
+    let mut epochs = 0;
+    for _ in 0..max_epochs {
+        epochs += 1;
+        let perm = rng.permutation(n);
+        let mut worst_pg = 0.0f64;
+        for &i in &perm {
+            let row = data.row(i);
+            let yi = if data.y[i] == 1 { 1.0 } else { -1.0 };
+            let dot: f64 = w.iter().zip(row).map(|(&wv, &xv)| wv * xv).sum();
+            let g = yi * dot - 1.0 + alpha[i] * diag;
+            // Projected gradient for the α_i ≥ 0 bound.
+            let pg = if alpha[i] == 0.0 { g.min(0.0) } else { g };
+            worst_pg = worst_pg.max(pg.abs());
+            if pg.abs() > 1e-14 {
+                let old = alpha[i];
+                alpha[i] = (alpha[i] - g / norms[i]).max(0.0);
+                let delta = (alpha[i] - old) * yi;
+                if delta != 0.0 {
+                    for (wv, &xv) in w.iter_mut().zip(row) {
+                        *wv += delta * xv;
+                    }
+                }
+            }
+        }
+        if worst_pg < tol {
+            break;
+        }
+    }
+    LinearModel { w, seconds: clock.elapsed_s(), iterations: epochs }
+}
+
+/// Primal Newton-CG: full-gradient damped Newton steps, with the
+/// generalized Hessian `I + 2C·X_svᵀ X_sv` applied matrix-free inside CG.
+pub fn train_primal_newton(
+    data: &Dataset,
+    c: f64,
+    tol: f64,
+    max_newton: usize,
+) -> LinearModel {
+    let clock = Stopwatch::new();
+    let (n, d) = (data.n, data.d);
+    let mut w = vec![0.0f64; d];
+    let mut iterations = 0;
+    // Reused buffers.
+    let mut margins = vec![0.0f64; n]; // 1 − y_i ⟨w, x_i⟩
+    let mut grad = vec![0.0f64; d];
+    let y_of = |i: usize| if data.y[i] == 1 { 1.0 } else { -1.0 };
+    for _ in 0..max_newton {
+        iterations += 1;
+        // Gradient: w − 2C Σ_{i: m_i > 0} m_i y_i x_i.
+        for i in 0..n {
+            let dot: f64 = w.iter().zip(data.row(i)).map(|(&wv, &xv)| wv * xv).sum();
+            margins[i] = 1.0 - y_of(i) * dot;
+        }
+        grad.copy_from_slice(&w);
+        for i in 0..n {
+            if margins[i] > 0.0 {
+                let coef = -2.0 * c * margins[i] * y_of(i);
+                for (g, &xv) in grad.iter_mut().zip(data.row(i)) {
+                    *g += coef * xv;
+                }
+            }
+        }
+        let gnorm = grad.iter().map(|&g| g * g).sum::<f64>().sqrt();
+        if gnorm < tol {
+            break;
+        }
+        // CG solve H s = −grad with H v = v + 2C Σ_sv (xᵀv) x.
+        let hv = |v: &[f64], out: &mut Vec<f64>| {
+            out.copy_from_slice(v);
+            for i in 0..n {
+                if margins[i] > 0.0 {
+                    let row = data.row(i);
+                    let dot: f64 = row.iter().zip(v).map(|(&xv, &vv)| xv * vv).sum();
+                    let coef = 2.0 * c * dot;
+                    for (o, &xv) in out.iter_mut().zip(row) {
+                        *o += coef * xv;
+                    }
+                }
+            }
+        };
+        let mut s = vec![0.0f64; d];
+        let mut r: Vec<f64> = grad.iter().map(|&g| -g).collect();
+        let mut p = r.clone();
+        let mut rs: f64 = r.iter().map(|&v| v * v).sum();
+        let mut hp = vec![0.0f64; d];
+        for _ in 0..(2 * d).min(200) {
+            hv(&p, &mut hp);
+            let php: f64 = p.iter().zip(&hp).map(|(&a, &b)| a * b).sum();
+            if php <= 0.0 {
+                break;
+            }
+            let alpha = rs / php;
+            for j in 0..d {
+                s[j] += alpha * p[j];
+                r[j] -= alpha * hp[j];
+            }
+            let rs_new: f64 = r.iter().map(|&v| v * v).sum();
+            if rs_new.sqrt() < 0.1 * gnorm.min(1.0) * 1e-2 {
+                break;
+            }
+            let beta = rs_new / rs;
+            rs = rs_new;
+            for j in 0..d {
+                p[j] = r[j] + beta * p[j];
+            }
+        }
+        // Backtracking line search on the primal objective.
+        let obj = |w: &[f64]| -> f64 {
+            let mut o = 0.5 * w.iter().map(|&v| v * v).sum::<f64>();
+            for i in 0..n {
+                let dot: f64 = w.iter().zip(data.row(i)).map(|(&wv, &xv)| wv * xv).sum();
+                let m = 1.0 - y_of(i) * dot;
+                if m > 0.0 {
+                    o += c * m * m;
+                }
+            }
+            o
+        };
+        let base = obj(&w);
+        let mut step = 1.0;
+        let mut accepted = false;
+        for _ in 0..30 {
+            let trial: Vec<f64> = w.iter().zip(&s).map(|(&wv, &sv)| wv + step * sv).collect();
+            if obj(&trial) < base - 1e-12 {
+                w = trial;
+                accepted = true;
+                break;
+            }
+            step *= 0.5;
+        }
+        if !accepted {
+            break;
+        }
+    }
+    LinearModel { w, seconds: clock.elapsed_s(), iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::svm_cloud;
+    use crate::problems::svm::{train_pf_svm, SvmConfig};
+
+    #[test]
+    fn dual_cd_fits_separable_data() {
+        let mut rng = Rng::new(1);
+        let (train, s) = svm_cloud(1500, 10, 50.0, &mut rng);
+        let model = train_dual_cd(&train, 1e3, 1e-3, 50, 1);
+        assert!(model.accuracy(&train) > 0.96 - s);
+    }
+
+    #[test]
+    fn primal_newton_fits_separable_data() {
+        let mut rng = Rng::new(2);
+        let (train, s) = svm_cloud(1500, 10, 50.0, &mut rng);
+        let model = train_primal_newton(&train, 1e3, 1e-4, 30);
+        assert!(model.accuracy(&train) > 0.96 - s);
+    }
+
+    #[test]
+    fn all_three_solvers_agree_on_test_accuracy() {
+        // Table 5's qualitative claim: P&F matches the dual solver; the
+        // primal solver is at least as good.
+        let mut rng = Rng::new(3);
+        let (all, _) = svm_cloud(4000, 15, 8.0, &mut rng);
+        let (tr, te) = all.split(0.5, &mut rng);
+        let pf = train_pf_svm(&tr, &SvmConfig { epochs: 8, seed: 3, ..Default::default() });
+        let dual = train_dual_cd(&tr, 1e3, 1e-3, 60, 3);
+        let primal = train_primal_newton(&tr, 1e3, 1e-4, 40);
+        let (a_pf, a_du, a_pr) = (pf.accuracy(&te), dual.accuracy(&te), primal.accuracy(&te));
+        assert!((a_pf - a_du).abs() < 0.05, "pf {a_pf} vs dual {a_du}");
+        assert!(a_pr >= a_du - 0.03, "primal {a_pr} vs dual {a_du}");
+    }
+
+    #[test]
+    fn dual_and_primal_reach_similar_objectives() {
+        // NB: on *well-conditioned* data (unit-variance features, small C)
+        // dual CD closes the duality gap quickly. At C = 10³ on raw
+        // features it crawls — which is precisely the Table 5 phenomenon
+        // (LIBLINEAR-dual 547–1532 s vs primal ~10 s) reproduced by the
+        // table5 bench, not a solver bug.
+        let mut rng = Rng::new(4);
+        let (train, _) = svm_cloud(800, 8, 1.0, &mut rng);
+        let c = 1.0;
+        let obj = |w: &[f64]| -> f64 {
+            let mut o = 0.5 * w.iter().map(|&v| v * v).sum::<f64>();
+            for i in 0..train.n {
+                let yi = if train.y[i] == 1 { 1.0 } else { -1.0 };
+                let dot: f64 = w.iter().zip(train.row(i)).map(|(&wv, &xv)| wv * xv).sum();
+                let m = 1.0 - yi * dot;
+                if m > 0.0 {
+                    o += c * m * m;
+                }
+            }
+            o
+        };
+        let dual = train_dual_cd(&train, c, 1e-6, 400, 4);
+        let primal = train_primal_newton(&train, c, 1e-6, 100);
+        let (od, op) = (obj(&dual.w), obj(&primal.w));
+        let rel = (od - op).abs() / op.max(1.0);
+        assert!(rel < 0.01, "dual obj {od} vs primal obj {op}");
+    }
+}

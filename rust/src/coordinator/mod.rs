@@ -1,0 +1,115 @@
+//! The run coordinator: wires problem drivers, oracles, optional PJRT
+//! acceleration and metrics into reproducible solve runs.
+//!
+//! The paper's contribution *is* the solve loop, so L3's coordination
+//! surface is: oracle selection (native Dijkstra scan vs PJRT min-plus
+//! certification), projection batching (sequential exact sweeps vs
+//! PJRT-batched parallel sweeps), per-iteration metrics (constraint
+//! counts, violations, RSS — Figures 2 & 3), and run lifecycle.
+
+pub mod batch_project;
+pub mod metrics;
+pub mod pjrt_oracle;
+
+use crate::core::solver::SolverResult;
+use crate::util::table::Series;
+
+/// Assemble the Figure-2 series (constraints found by the oracle vs
+/// remembered after FORGET, per iteration) from a solve trace.
+pub fn figure2_series(result: &SolverResult, title: &str) -> Series {
+    let mut s = Series::new(title, "iteration", &["found_by_oracle", "after_forget"]);
+    for it in &result.trace {
+        s.push(it.iteration as f64, &[it.found as f64, it.remembered as f64]);
+    }
+    s
+}
+
+/// Assemble the Figure-3 series (max metric violation per iteration).
+pub fn figure3_series(result: &SolverResult, title: &str) -> Series {
+    let mut s = Series::new(title, "iteration", &["max_violation"]);
+    for it in &result.trace {
+        s.push(it.iteration as f64, &[it.max_violation]);
+    }
+    s
+}
+
+/// Fit `log(violation) ~ a + b·iteration` on the trace tail and return
+/// the per-iteration decay rate `exp(b)` — the Figure 3 "exponential
+/// decay" diagnostic (< 1 means geometric convergence).
+pub fn violation_decay_rate(result: &SolverResult) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = result
+        .trace
+        .iter()
+        .filter(|it| it.max_violation > 0.0)
+        .map(|it| (it.iteration as f64, it.max_violation.ln()))
+        .collect();
+    if pts.len() < 3 {
+        return None;
+    }
+    // Least squares on the latter half (the asymptotic regime).
+    let tail = &pts[pts.len() / 2..];
+    let n = tail.len() as f64;
+    let sx: f64 = tail.iter().map(|p| p.0).sum();
+    let sy: f64 = tail.iter().map(|p| p.1).sum();
+    let sxx: f64 = tail.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = tail.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    Some(b.exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::solver::IterStats;
+
+    fn fake_result(violations: &[f64]) -> SolverResult {
+        SolverResult {
+            x: vec![],
+            iterations: violations.len(),
+            converged: true,
+            total_projections: 0,
+            active_constraints: 0,
+            trace: violations
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| IterStats {
+                    iteration: i,
+                    found: 10 - i.min(9),
+                    merged: 10,
+                    remembered: 5,
+                    max_violation: v,
+                    projections: 1,
+                    seconds: 0.0,
+                })
+                .collect(),
+            seconds: 0.0,
+        }
+    }
+
+    #[test]
+    fn decay_rate_recovers_geometric_sequence() {
+        let violations: Vec<f64> = (0..20).map(|i| 0.5f64.powi(i)).collect();
+        let r = fake_result(&violations);
+        let rate = violation_decay_rate(&r).unwrap();
+        assert!((rate - 0.5).abs() < 1e-6, "rate {rate}");
+    }
+
+    #[test]
+    fn decay_rate_none_for_short_traces() {
+        assert!(violation_decay_rate(&fake_result(&[1.0, 0.5])).is_none());
+    }
+
+    #[test]
+    fn series_shapes() {
+        let r = fake_result(&[1.0, 0.5, 0.25]);
+        let f2 = figure2_series(&r, "fig2");
+        assert_eq!(f2.points.len(), 3);
+        assert_eq!(f2.series_names.len(), 2);
+        let f3 = figure3_series(&r, "fig3");
+        assert_eq!(f3.points[2].1[0], 0.25);
+    }
+}

@@ -1,0 +1,212 @@
+//! The remembered constraint list `L^(ν)` with dual variables and FORGET.
+//!
+//! `ActiveSet` wraps the flat [`ConstraintStore`] with a content-key index
+//! so that the merge `L̃^(ν+1) = L^(ν) ∪ L` (Algorithm 1, line 4) is a true
+//! set union: a constraint rediscovered by the oracle while still
+//! remembered is not duplicated (its dual history is preserved).
+
+use super::constraint::{Constraint, ConstraintKey, ConstraintStore, ConstraintView};
+use std::collections::HashMap;
+
+/// The active-set sketch: constraints believed active, with duals.
+#[derive(Debug, Default, Clone)]
+pub struct ActiveSet {
+    store: ConstraintStore,
+    index: HashMap<ConstraintKey, u32>,
+}
+
+impl ActiveSet {
+    pub fn new() -> ActiveSet {
+        ActiveSet { store: ConstraintStore::new(), index: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// Total nonzeros across remembered rows (memory diagnostics).
+    pub fn nnz(&self) -> usize {
+        self.store.nnz()
+    }
+
+    /// Merge one constraint into the set. Returns its slot; if it was
+    /// already remembered, the existing slot (and dual) is reused.
+    pub fn insert(&mut self, c: &Constraint) -> usize {
+        let key = c.key();
+        if let Some(&slot) = self.index.get(&key) {
+            return slot as usize;
+        }
+        let slot = self.store.push_with_key(c, 0.0, key);
+        self.index.insert(key, slot as u32);
+        slot
+    }
+
+    /// Is this constraint currently remembered?
+    pub fn contains(&self, c: &Constraint) -> bool {
+        self.index.contains_key(&c.key())
+    }
+
+    /// Slot of a remembered constraint by precomputed key, if any.
+    #[inline]
+    pub fn slot_of_key(&self, key: ConstraintKey) -> Option<usize> {
+        self.index.get(&key).map(|&s| s as usize)
+    }
+
+    /// Merge with a precomputed key (avoids re-hashing on hot paths).
+    pub fn insert_with_key(&mut self, c: &Constraint, key: ConstraintKey) -> usize {
+        if let Some(&slot) = self.index.get(&key) {
+            return slot as usize;
+        }
+        let slot = self.store.push_with_key(c, 0.0, key);
+        self.index.insert(key, slot as u32);
+        slot
+    }
+
+    /// Borrow row `r` and its dual.
+    #[inline]
+    pub fn view(&self, r: usize) -> ConstraintView<'_> {
+        self.store.view(r)
+    }
+
+    #[inline]
+    pub fn z(&self, r: usize) -> f64 {
+        self.store.z[r]
+    }
+
+    #[inline]
+    pub fn set_z(&mut self, r: usize, z: f64) {
+        self.store.z[r] = z;
+    }
+
+    /// FORGET (Algorithm 3, lines 9–15): drop every row with `z == 0`.
+    /// Returns the number of forgotten constraints.
+    pub fn forget_inactive(&mut self) -> usize {
+        let dropped = self.store.retain(|_, z| z != 0.0);
+        if dropped > 0 {
+            self.rebuild_index();
+        }
+        dropped
+    }
+
+    /// Truly-stochastic FORGET (§3.2.1): forget *all* constraints. The
+    /// caller is responsible for keeping dual values externally.
+    pub fn forget_all(&mut self) {
+        self.store.clear();
+        self.index.clear();
+    }
+
+    fn rebuild_index(&mut self) {
+        self.index.clear();
+        for r in 0..self.store.len() {
+            self.index.insert(self.store.key_of(r), r as u32);
+        }
+    }
+
+    /// Owned copy of row `r` (diagnostics).
+    pub fn to_constraint(&self, r: usize) -> Constraint {
+        self.store.to_constraint(r)
+    }
+
+    /// Maximum violation among remembered constraints at `x`.
+    pub fn max_violation(&self, x: &[f64]) -> f64 {
+        (0..self.len())
+            .map(|r| {
+                let v = self.view(r);
+                let dot: f64 =
+                    v.indices.iter().zip(v.coeffs).map(|(&i, &a)| a * x[i as usize]).sum();
+                (dot - v.rhs).max(0.0)
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_semantics_no_duplicates() {
+        let mut s = ActiveSet::new();
+        let c = Constraint::cycle(0, &[1, 2]);
+        let slot1 = s.insert(&c);
+        s.set_z(slot1, 2.5);
+        let slot2 = s.insert(&Constraint::cycle(0, &[1, 2]));
+        assert_eq!(slot1, slot2);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.z(slot2), 2.5, "dual history preserved across re-insert");
+    }
+
+    #[test]
+    fn forget_drops_only_zero_duals() {
+        let mut s = ActiveSet::new();
+        let a = Constraint::cycle(0, &[1]);
+        let b = Constraint::cycle(2, &[3]);
+        let c = Constraint::cycle(4, &[5]);
+        let sa = s.insert(&a);
+        let sb = s.insert(&b);
+        let sc = s.insert(&c);
+        s.set_z(sa, 0.0);
+        s.set_z(sb, 1.0);
+        s.set_z(sc, 0.0);
+        assert_eq!(s.forget_inactive(), 2);
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(&b));
+        assert!(!s.contains(&a));
+        // Index stays consistent: re-inserting a forgotten constraint
+        // creates a fresh slot with zero dual.
+        let slot = s.insert(&a);
+        assert_eq!(s.z(slot), 0.0);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn forget_all_clears() {
+        let mut s = ActiveSet::new();
+        for i in 0..10u32 {
+            let slot = s.insert(&Constraint::nonneg(i));
+            s.set_z(slot, 1.0);
+        }
+        s.forget_all();
+        assert!(s.is_empty());
+        assert!(!s.contains(&Constraint::nonneg(0)));
+    }
+
+    #[test]
+    fn max_violation_over_set() {
+        let mut s = ActiveSet::new();
+        s.insert(&Constraint::cycle(0, &[1])); // x0 - x1 <= 0
+        s.insert(&Constraint::upper(1, 1.0)); // x1 <= 1
+        let x = vec![3.0, 1.5];
+        // First: 3 - 1.5 = 1.5 violation; second: 0.5 violation.
+        assert!((s.max_violation(&x) - 1.5).abs() < 1e-12);
+        assert_eq!(s.max_violation(&[0.0, 0.5]), 0.0);
+    }
+
+    #[test]
+    fn index_survives_repeated_forget_cycles() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(21);
+        let mut s = ActiveSet::new();
+        for round in 0..50 {
+            for _ in 0..20 {
+                let e = rng.below(30) as u32;
+                let p = rng.below(30) as u32;
+                if e != p {
+                    let slot = s.insert(&Constraint::cycle(e, &[p]));
+                    s.set_z(slot, if rng.bernoulli(0.5) { 0.0 } else { 1.0 });
+                }
+            }
+            s.forget_inactive();
+            // All remembered rows must be findable through the index.
+            for r in 0..s.len() {
+                let c = s.to_constraint(r);
+                assert!(s.contains(&c), "round {round}: lost row {r}");
+                assert_ne!(s.z(r), 0.0);
+            }
+        }
+    }
+}

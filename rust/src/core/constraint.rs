@@ -1,0 +1,329 @@
+//! Sparse half-space constraints `⟨a, x⟩ ≤ b` and a flat, cache-friendly
+//! constraint store.
+//!
+//! Metric constrained problems generate millions of transient cycle
+//! constraints, so the store keeps all rows in three flat arrays
+//! (`indices` / `coeffs` / per-row offsets) rather than a `Vec<Vec<…>>`.
+//! The FORGET step is a *batch* removal (drop every row whose dual is
+//! zero), implemented as a single linear `retain` compaction pass.
+//! Content-hash identity lets the merge `L^(ν) ∪ L` deduplicate.
+
+/// An owned sparse constraint row: `Σ coeffs[k]·x[indices[k]] ≤ rhs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Constraint {
+    pub indices: Vec<u32>,
+    pub coeffs: Vec<f64>,
+    pub rhs: f64,
+}
+
+/// A borrowed view into a stored row (what the Bregman projections see).
+#[derive(Debug, Clone, Copy)]
+pub struct ConstraintView<'a> {
+    pub indices: &'a [u32],
+    pub coeffs: &'a [f64],
+    pub rhs: f64,
+}
+
+/// Content-derived identity of a constraint (FNV-1a over the canonical
+/// sorted row). Used to deduplicate the active-set merge.
+pub type ConstraintKey = u64;
+
+impl Constraint {
+    pub fn new(indices: Vec<u32>, coeffs: Vec<f64>, rhs: f64) -> Constraint {
+        assert_eq!(indices.len(), coeffs.len());
+        Constraint { indices, coeffs, rhs }
+    }
+
+    /// The metric cycle constraint `x_e − Σ_{ẽ∈path} x_ẽ ≤ 0`.
+    pub fn cycle(edge: u32, path: &[u32]) -> Constraint {
+        let mut indices = Vec::with_capacity(path.len() + 1);
+        let mut coeffs = Vec::with_capacity(path.len() + 1);
+        indices.push(edge);
+        coeffs.push(1.0);
+        for &p in path {
+            indices.push(p);
+            coeffs.push(-1.0);
+        }
+        Constraint { indices, coeffs, rhs: 0.0 }
+    }
+
+    /// Non-negativity `−x_e ≤ 0`.
+    pub fn nonneg(edge: u32) -> Constraint {
+        Constraint { indices: vec![edge], coeffs: vec![-1.0], rhs: 0.0 }
+    }
+
+    /// Upper bound `x_e ≤ ub` (the `[0,1]` box of correlation clustering).
+    pub fn upper(edge: u32, ub: f64) -> Constraint {
+        Constraint { indices: vec![edge], coeffs: vec![1.0], rhs: ub }
+    }
+
+    /// Violation amount `max(0, ⟨a,x⟩ − b)` at `x`.
+    pub fn violation(&self, x: &[f64]) -> f64 {
+        let dot: f64 = self
+            .indices
+            .iter()
+            .zip(&self.coeffs)
+            .map(|(&i, &a)| a * x[i as usize])
+            .sum();
+        (dot - self.rhs).max(0.0)
+    }
+
+    /// Content hash over the canonically sorted row. Rows up to 64
+    /// nonzeros sort in a stack buffer (the hot path: cycle constraints);
+    /// longer rows fall back to a heap allocation.
+    pub fn key(&self) -> ConstraintKey {
+        let n = self.indices.len();
+        let mut stack = [(0u32, 0.0f64); 64];
+        let mut heap: Vec<(u32, f64)>;
+        let pairs: &mut [(u32, f64)] = if n <= 64 {
+            for (k, (&i, &a)) in self.indices.iter().zip(&self.coeffs).enumerate() {
+                stack[k] = (i, a);
+            }
+            &mut stack[..n]
+        } else {
+            heap = self.indices.iter().cloned().zip(self.coeffs.iter().cloned()).collect();
+            &mut heap
+        };
+        pairs.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut feed = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for (i, a) in pairs.iter() {
+            feed(&i.to_le_bytes());
+            feed(&a.to_bits().to_le_bytes());
+        }
+        feed(&self.rhs.to_bits().to_le_bytes());
+        h
+    }
+}
+
+/// Flat storage for a set of constraints with parallel dual variables.
+///
+/// Rows are addressed by dense slot ids `0..len`. Removal happens only
+/// through [`ConstraintStore::retain`], which compacts the pools in one
+/// linear pass; slot ids are NOT stable across `retain` — stable identity
+/// is the content key.
+#[derive(Debug, Default, Clone)]
+pub struct ConstraintStore {
+    indices: Vec<u32>,
+    coeffs: Vec<f64>,
+    /// Row r occupies indices[offsets[r]..offsets[r+1]].
+    offsets: Vec<u32>,
+    rhs: Vec<f64>,
+    /// Dual variable z_r ≥ 0 per row.
+    pub z: Vec<f64>,
+    keys: Vec<ConstraintKey>,
+}
+
+impl ConstraintStore {
+    pub fn new() -> Self {
+        ConstraintStore { offsets: vec![0], ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rhs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rhs.is_empty()
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Append a row with initial dual `z`; returns its current slot.
+    pub fn push(&mut self, c: &Constraint, z: f64) -> usize {
+        self.push_with_key(c, z, c.key())
+    }
+
+    /// Append when the key is already computed (avoids re-hashing).
+    pub fn push_with_key(&mut self, c: &Constraint, z: f64, key: ConstraintKey) -> usize {
+        self.indices.extend_from_slice(&c.indices);
+        self.coeffs.extend_from_slice(&c.coeffs);
+        self.offsets.push(self.indices.len() as u32);
+        self.rhs.push(c.rhs);
+        self.z.push(z);
+        self.keys.push(key);
+        self.rhs.len() - 1
+    }
+
+    /// Borrow row `r`.
+    #[inline]
+    pub fn view(&self, r: usize) -> ConstraintView<'_> {
+        let (s, e) = (self.offsets[r] as usize, self.offsets[r + 1] as usize);
+        ConstraintView { indices: &self.indices[s..e], coeffs: &self.coeffs[s..e], rhs: self.rhs[r] }
+    }
+
+    pub fn key_of(&self, r: usize) -> ConstraintKey {
+        self.keys[r]
+    }
+
+    /// Keep only rows where `keep(slot, z)` is true, compacting all pools
+    /// in one linear pass. Returns the number of rows dropped.
+    pub fn retain<F: FnMut(usize, f64) -> bool>(&mut self, mut keep: F) -> usize {
+        let n = self.len();
+        let mut write_row = 0usize;
+        let mut write_nz = 0usize;
+        let mut dropped = 0usize;
+        for r in 0..n {
+            let (s, e) = (self.offsets[r] as usize, self.offsets[r + 1] as usize);
+            if keep(r, self.z[r]) {
+                if write_row != r {
+                    self.indices.copy_within(s..e, write_nz);
+                    self.coeffs.copy_within(s..e, write_nz);
+                    self.rhs[write_row] = self.rhs[r];
+                    self.z[write_row] = self.z[r];
+                    self.keys[write_row] = self.keys[r];
+                }
+                write_nz += e - s;
+                write_row += 1;
+                self.offsets[write_row] = write_nz as u32;
+            } else {
+                dropped += 1;
+            }
+        }
+        self.indices.truncate(write_nz);
+        self.coeffs.truncate(write_nz);
+        self.offsets.truncate(write_row + 1);
+        self.rhs.truncate(write_row);
+        self.z.truncate(write_row);
+        self.keys.truncate(write_row);
+        dropped
+    }
+
+    /// Clear all rows (the truly-stochastic FORGET).
+    pub fn clear(&mut self) {
+        self.indices.clear();
+        self.coeffs.clear();
+        self.offsets.truncate(1);
+        self.rhs.clear();
+        self.z.clear();
+        self.keys.clear();
+    }
+
+    /// Reconstruct an owned `Constraint` (tests / diagnostics).
+    pub fn to_constraint(&self, r: usize) -> Constraint {
+        let v = self.view(r);
+        Constraint::new(v.indices.to_vec(), v.coeffs.to_vec(), v.rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_constraint_shape() {
+        let c = Constraint::cycle(7, &[1, 2, 3]);
+        assert_eq!(c.indices, vec![7, 1, 2, 3]);
+        assert_eq!(c.coeffs, vec![1.0, -1.0, -1.0, -1.0]);
+        assert_eq!(c.rhs, 0.0);
+    }
+
+    #[test]
+    fn violation_measure() {
+        let c = Constraint::cycle(0, &[1, 2]);
+        // x_0 = 5, path sums to 3 -> violation 2.
+        assert_eq!(c.violation(&[5.0, 1.0, 2.0]), 2.0);
+        assert_eq!(c.violation(&[2.0, 1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn key_is_order_invariant_and_content_sensitive() {
+        let a = Constraint::new(vec![1, 5, 9], vec![1.0, -1.0, -1.0], 0.0);
+        let b = Constraint::new(vec![9, 1, 5], vec![-1.0, 1.0, -1.0], 0.0);
+        assert_eq!(a.key(), b.key());
+        let c = Constraint::new(vec![1, 5, 9], vec![1.0, -1.0, 1.0], 0.0);
+        assert_ne!(a.key(), c.key());
+        let d = Constraint::new(vec![1, 5, 9], vec![1.0, -1.0, -1.0], 1.0);
+        assert_ne!(a.key(), d.key());
+    }
+
+    #[test]
+    fn store_push_view_roundtrip() {
+        let mut s = ConstraintStore::new();
+        let c1 = Constraint::cycle(0, &[1, 2]);
+        let c2 = Constraint::nonneg(5);
+        s.push(&c1, 0.0);
+        s.push(&c2, 1.5);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.to_constraint(0), c1);
+        assert_eq!(s.to_constraint(1), c2);
+        assert_eq!(s.z[1], 1.5);
+        assert_eq!(s.nnz(), 4);
+    }
+
+    #[test]
+    fn retain_compacts_correctly() {
+        let mut s = ConstraintStore::new();
+        let cs: Vec<Constraint> = (0..6u32)
+            .map(|i| Constraint::cycle(i, &(0..=i).map(|j| 10 + j).collect::<Vec<_>>()))
+            .collect();
+        for (i, c) in cs.iter().enumerate() {
+            s.push(c, if i % 2 == 0 { 0.0 } else { 1.0 });
+        }
+        // Forget even slots (z == 0).
+        let dropped = s.retain(|_, z| z != 0.0);
+        assert_eq!(dropped, 3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.to_constraint(0), cs[1]);
+        assert_eq!(s.to_constraint(1), cs[3]);
+        assert_eq!(s.to_constraint(2), cs[5]);
+        assert_eq!(s.z, vec![1.0, 1.0, 1.0]);
+        assert_eq!(s.nnz(), cs[1].indices.len() + cs[3].indices.len() + cs[5].indices.len());
+    }
+
+    #[test]
+    fn retain_all_and_none() {
+        let mut s = ConstraintStore::new();
+        for i in 0..4u32 {
+            s.push(&Constraint::nonneg(i), i as f64);
+        }
+        assert_eq!(s.retain(|_, _| true), 0);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.retain(|_, _| false), 4);
+        assert!(s.is_empty());
+        assert_eq!(s.nnz(), 0);
+        // Store remains usable after emptying.
+        s.push(&Constraint::nonneg(9), 2.0);
+        assert_eq!(s.to_constraint(0), Constraint::nonneg(9));
+    }
+
+    #[test]
+    fn heavy_churn_stays_consistent() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(8);
+        let mut s = ConstraintStore::new();
+        let mut mirror: Vec<(Constraint, f64)> = Vec::new();
+        for step in 0..500 {
+            if mirror.is_empty() || rng.bernoulli(0.7) {
+                let len = 1 + rng.below(6);
+                let idx: Vec<u32> = (0..len).map(|_| rng.below(100) as u32).collect();
+                let coef: Vec<f64> = (0..len).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                let c = Constraint::new(idx, coef, rng.uniform(-1.0, 1.0));
+                s.push(&c, step as f64);
+                mirror.push((c, step as f64));
+            } else {
+                // Random subset removal via retain.
+                let seed = rng.next_u64();
+                let mut keep_rng = Rng::new(seed);
+                let keeps: Vec<bool> = (0..mirror.len()).map(|_| keep_rng.bernoulli(0.5)).collect();
+                s.retain(|r, _| keeps[r]);
+                let mut it = keeps.iter();
+                mirror.retain(|_| *it.next().unwrap());
+            }
+            assert_eq!(s.len(), mirror.len());
+        }
+        for (r, (c, z)) in mirror.iter().enumerate() {
+            assert_eq!(&s.to_constraint(r), c);
+            assert_eq!(s.z[r], *z);
+            assert_eq!(s.key_of(r), c.key());
+        }
+    }
+}

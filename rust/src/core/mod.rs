@@ -1,0 +1,22 @@
+//! The PROJECT AND FORGET engine (Algorithms 1 and 3 of the paper).
+//!
+//! - [`bregman`] — Bregman functions and their hyperplane projections.
+//! - [`constraint`] — sparse half-space constraints and the flat store.
+//! - [`active_set`] — the remembered list `L^(ν)` with duals `z` and the
+//!   FORGET step.
+//! - [`oracle`] — separation-oracle traits (Property 1 / Property 2).
+//! - [`solver`] — the outer loop: oracle → merge → project sweep → forget.
+//! - [`stochastic`] — the truly stochastic variant (§3.2.1).
+
+pub mod active_set;
+pub mod bregman;
+pub mod constraint;
+pub mod oracle;
+pub mod solver;
+pub mod stochastic;
+
+pub use active_set::ActiveSet;
+pub use bregman::{BregmanFunction, DiagonalQuadratic, Entropy};
+pub use constraint::{Constraint, ConstraintKey};
+pub use oracle::{Oracle, OracleOutcome, RandomOracle};
+pub use solver::{IterStats, Solver, SolverConfig, SolverResult};

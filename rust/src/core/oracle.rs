@@ -1,0 +1,163 @@
+//! Separation-oracle interfaces (Properties 1 and 2 of the paper).
+//!
+//! The engine hands the oracle a [`ProjectionSink`]: the oracle can either
+//! `remember` a violated constraint (plain Algorithm 1) or
+//! `project_and_remember` it immediately (the Algorithm 8 implementation
+//! detail: "it is much more efficient in practice to do the project and
+//! forget steps for a single constraint as we find it" — the constraint is
+//! then kept only if its dual is nonzero after the projection).
+
+use super::bregman::BregmanFunction;
+use super::constraint::Constraint;
+use super::solver::Solver;
+
+/// What an oracle reports back to the engine after one separation round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OracleOutcome {
+    /// Constraints delivered to the sink this round.
+    pub found: usize,
+    /// Maximum violation witnessed, i.e. `max_C dist`-style certificate.
+    /// 0 means the oracle certifies (approximate) feasibility.
+    pub max_violation: f64,
+}
+
+/// The engine-side interface the oracle drives.
+pub trait ProjectionSink {
+    /// Current iterate (read-only).
+    fn x(&self) -> &[f64];
+
+    /// Remember a constraint for the upcoming projection sweep.
+    fn remember(&mut self, c: &Constraint);
+
+    /// Project onto the constraint immediately and remember it iff its
+    /// dual is nonzero afterwards (Algorithm 8, lines 9–12).
+    fn project_and_remember(&mut self, c: &Constraint);
+}
+
+/// A deterministic separation oracle (Property 1): on input `x` it either
+/// certifies feasibility (returns `max_violation == 0`) or delivers a list
+/// of violated constraints whose worst violation is within a fixed
+/// function φ of the distance to the feasible set.
+pub trait Oracle<F: BregmanFunction> {
+    fn separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome;
+
+    /// Human-readable name for traces.
+    fn name(&self) -> &str {
+        "oracle"
+    }
+}
+
+/// A random separation oracle (Property 2): every constraint has sampling
+/// probability ≥ τ > 0. Implemented as a plain [`Oracle`] whose `separate`
+/// samples; the marker trait documents which guarantee an implementation
+/// provides (used by tests to pick the right convergence assertions).
+pub trait RandomOracle<F: BregmanFunction>: Oracle<F> {}
+
+/// An oracle over an explicit, finite constraint list — the textbook
+/// (cyclic Bregman) setting. Deterministic Property-1 oracle: it returns
+/// every currently-violated constraint. Mostly used by tests and the SVM
+/// baseline; real metric problems use the graph oracles in `problems::`.
+pub struct ListOracle {
+    pub constraints: Vec<Constraint>,
+    /// Violation tolerance below which a constraint is not reported.
+    pub tol: f64,
+}
+
+impl ListOracle {
+    pub fn new(constraints: Vec<Constraint>) -> ListOracle {
+        ListOracle { constraints, tol: 0.0 }
+    }
+}
+
+impl<F: BregmanFunction> Oracle<F> for ListOracle {
+    fn separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        let mut out = OracleOutcome::default();
+        for c in &self.constraints {
+            let v = c.violation(sink.x());
+            if v > self.tol {
+                sink.remember(c);
+                out.found += 1;
+                out.max_violation = out.max_violation.max(v);
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &str {
+        "list"
+    }
+}
+
+/// Uniform random sampling over an explicit list (Property 2 with
+/// τ = batch/len): the stochastic baseline of §3.1.3.
+pub struct SampledListOracle {
+    pub constraints: Vec<Constraint>,
+    pub batch: usize,
+    pub rng: crate::util::Rng,
+}
+
+impl<F: BregmanFunction> Oracle<F> for SampledListOracle {
+    fn separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        let mut out = OracleOutcome::default();
+        let n = self.constraints.len();
+        for _ in 0..self.batch.min(n) {
+            let c = &self.constraints[self.rng.below(n)];
+            let v = c.violation(sink.x());
+            out.max_violation = out.max_violation.max(v);
+            sink.project_and_remember(c);
+            out.found += 1;
+        }
+        out
+    }
+
+    fn name(&self) -> &str {
+        "sampled-list"
+    }
+}
+
+impl<F: BregmanFunction> RandomOracle<F> for SampledListOracle {}
+
+/// Run a closure as an oracle (for ad-hoc problem drivers).
+pub struct FnOracle<G>(pub G, pub &'static str);
+
+impl<F, G> Oracle<F> for FnOracle<G>
+where
+    F: BregmanFunction,
+    G: FnMut(&mut dyn ProjectionSink) -> OracleOutcome,
+{
+    fn separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        (self.0)(sink)
+    }
+
+    fn name(&self) -> &str {
+        self.1
+    }
+}
+
+/// Convenience used by problem drivers: solve with an oracle built from a
+/// closure. Re-exported through [`Solver::solve_with`].
+pub fn oracle_from_fn<F, G>(g: G, name: &'static str) -> FnOracle<G>
+where
+    F: BregmanFunction,
+    G: FnMut(&mut dyn ProjectionSink) -> OracleOutcome,
+{
+    let _ = std::marker::PhantomData::<F>;
+    FnOracle(g, name)
+}
+
+/// Blanket helper so `&mut O` is itself an oracle (lets drivers reuse one).
+impl<F: BregmanFunction, O: Oracle<F>> Oracle<F> for &mut O {
+    fn separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        (**self).separate(sink)
+    }
+
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+}
+
+#[allow(unused)]
+fn _assert_object_safe(_: &dyn ProjectionSink) {}
+
+#[allow(unused)]
+fn _solver_is_referenced(_: &Solver<super::bregman::DiagonalQuadratic>) {}

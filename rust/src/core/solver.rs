@@ -1,0 +1,422 @@
+//! The PROJECT AND FORGET outer loop (Algorithm 1).
+//!
+//! Per iteration: query the separation oracle, merge its findings into the
+//! remembered list `L^(ν)`, run `inner_sweeps` rounds of Bregman
+//! projections with dual corrections over the merged list (Algorithm 3),
+//! forget every constraint whose dual returned to zero, and test
+//! convergence. The engine maintains the KKT identity
+//! `∇f(x) = −Aᵀz` (Step 1 of the convergence proof) at all times, which
+//! tests verify directly.
+
+use super::active_set::ActiveSet;
+use super::bregman::BregmanFunction;
+use super::constraint::Constraint;
+use super::oracle::{Oracle, OracleOutcome, ProjectionSink};
+use crate::util::Stopwatch;
+
+/// Tuning knobs for the solve loop.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// Projection sweeps over the merged list per iteration (the paper
+    /// uses 2 for metric nearness / dense CC and 75 for sparse CC).
+    pub inner_sweeps: usize,
+    /// Convergence: stop when the oracle's max violation falls below this.
+    pub violation_tol: f64,
+    /// Convergence also requires the total dual movement `Σ|c|` of the
+    /// last iteration's sweeps to fall below this (the oracle certifying
+    /// feasibility is necessary but not sufficient: remembered constraints
+    /// may still be relaxing over-corrections). Set to `f64::INFINITY` to
+    /// stop on violations alone, as the paper's large-scale runs do.
+    pub dual_tol: f64,
+    /// Optional cap on total individual projections (ITML comparisons).
+    pub projection_budget: Option<usize>,
+    /// Record per-iteration statistics (Figures 2 and 3).
+    pub record_trace: bool,
+    /// Dual values with |z| below this are treated as zero by FORGET
+    /// (guards against floating-point dust keeping dead constraints).
+    pub z_tol: f64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            max_iters: 1000,
+            inner_sweeps: 2,
+            violation_tol: 1e-2,
+            dual_tol: 1e-9,
+            projection_budget: None,
+            record_trace: true,
+            z_tol: 0.0,
+        }
+    }
+}
+
+/// Per-iteration statistics (drives Figures 2 and 3).
+#[derive(Debug, Clone, Copy)]
+pub struct IterStats {
+    pub iteration: usize,
+    /// Constraints delivered by the oracle this round.
+    pub found: usize,
+    /// Remembered list size after the merge, before FORGET.
+    pub merged: usize,
+    /// Remembered list size after FORGET.
+    pub remembered: usize,
+    /// Max violation the oracle witnessed at the start of the round.
+    pub max_violation: f64,
+    /// Individual projections performed this round.
+    pub projections: usize,
+    /// Wall-clock seconds for the round.
+    pub seconds: f64,
+}
+
+/// Outcome of a solve.
+#[derive(Debug, Clone)]
+pub struct SolverResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+    pub total_projections: usize,
+    /// Final number of remembered (≈ active) constraints.
+    pub active_constraints: usize,
+    pub trace: Vec<IterStats>,
+    pub seconds: f64,
+}
+
+/// The PROJECT AND FORGET solver over a Bregman function `F`.
+pub struct Solver<F: BregmanFunction> {
+    pub f: F,
+    pub x: Vec<f64>,
+    pub active: ActiveSet,
+    pub config: SolverConfig,
+    /// Total projections performed (across the lifetime of the solver).
+    pub projections: usize,
+    /// Total dual movement `Σ|c|` of the most recent sweep.
+    pub last_dual_movement: f64,
+}
+
+/// The sink implementation the solver exposes to oracles.
+struct EngineSink<'a, F: BregmanFunction> {
+    f: &'a F,
+    x: &'a mut Vec<f64>,
+    active: &'a mut ActiveSet,
+    projections: &'a mut usize,
+    z_tol: f64,
+}
+
+impl<F: BregmanFunction> ProjectionSink for EngineSink<'_, F> {
+    fn x(&self) -> &[f64] {
+        self.x
+    }
+
+    fn remember(&mut self, c: &Constraint) {
+        self.active.insert(c);
+    }
+
+    fn project_and_remember(&mut self, c: &Constraint) {
+        // Fast no-op path: a *satisfied* constraint with no dual history
+        // needs neither a projection nor a slot — computing θ first saves
+        // the insert/hash/forget churn for the (vast majority of)
+        // satisfied rows the oracle re-delivers each round.
+        let view = crate::core::constraint::ConstraintView {
+            indices: &c.indices,
+            coeffs: &c.coeffs,
+            rhs: c.rhs,
+        };
+        let theta = self.f.theta(self.x, view);
+        let key = c.key();
+        let slot = match self.active.slot_of_key(key) {
+            Some(slot) => slot,
+            None => {
+                if theta >= 0.0 {
+                    return; // satisfied, no history: projection is a no-op
+                }
+                self.active.insert_with_key(c, key)
+            }
+        };
+        let z = self.active.z(slot);
+        let step = z.min(theta);
+        if step != 0.0 {
+            self.f.apply(self.x, self.active.view(slot), step);
+            *self.projections += 1;
+        }
+        let nz = z - step;
+        self.active.set_z(slot, nz);
+        // Forget-on-find: if the dual is (numerically) zero the constraint
+        // was satisfied and needed no net correction — FORGET will drop it
+        // (Algorithm 8, lines 9–12).
+        if nz.abs() <= self.z_tol {
+            self.active.set_z(slot, 0.0);
+        }
+    }
+}
+
+impl<F: BregmanFunction> Solver<F> {
+    /// Start at the unconstrained minimiser (`∇f(x⁰) = 0`, line 1).
+    pub fn new(f: F, config: SolverConfig) -> Solver<F> {
+        let x = f.argmin();
+        Solver { f, x, active: ActiveSet::new(), config, projections: 0, last_dual_movement: 0.0 }
+    }
+
+    /// One Bregman projection with dual correction onto remembered row `r`
+    /// (Algorithm 3, lines 2–6). Returns true if `x` moved.
+    #[inline]
+    pub fn project_row(&mut self, r: usize) -> bool {
+        let view = self.active.view(r);
+        let theta = self.f.theta(&self.x, view);
+        let z = self.active.z(r);
+        let step = z.min(theta);
+        if step == 0.0 {
+            return false;
+        }
+        self.f.apply(&mut self.x, view, step);
+        self.active.set_z(r, z - step);
+        self.projections += 1;
+        self.last_dual_movement += step.abs();
+        true
+    }
+
+    /// One full sweep over the remembered list. Returns projections done.
+    pub fn project_sweep(&mut self) -> usize {
+        let before = self.projections;
+        self.last_dual_movement = 0.0;
+        for r in 0..self.active.len() {
+            self.project_row(r);
+        }
+        self.projections - before
+    }
+
+    /// FORGET step: drop rows with zero dual. Returns how many.
+    pub fn forget(&mut self) -> usize {
+        let z_tol = self.config.z_tol;
+        if z_tol > 0.0 {
+            for r in 0..self.active.len() {
+                if self.active.z(r).abs() <= z_tol {
+                    self.active.set_z(r, 0.0);
+                }
+            }
+        }
+        self.active.forget_inactive()
+    }
+
+    /// Run the full PROJECT AND FORGET loop against `oracle`.
+    pub fn solve<O: Oracle<F>>(&mut self, mut oracle: O) -> SolverResult {
+        let clock = Stopwatch::new();
+        let mut trace = Vec::new();
+        let mut converged = false;
+        let mut iterations = 0;
+        for nu in 0..self.config.max_iters {
+            iterations = nu + 1;
+            let mut round = Stopwatch::new();
+            let proj_before = self.projections;
+
+            // Phase 1+merge: oracle delivers violated constraints (and may
+            // project-on-find).
+            let outcome: OracleOutcome = {
+                let mut sink = EngineSink {
+                    f: &self.f,
+                    x: &mut self.x,
+                    active: &mut self.active,
+                    projections: &mut self.projections,
+                    z_tol: self.config.z_tol,
+                };
+                oracle.separate(&mut sink)
+            };
+            let merged = self.active.len();
+
+            // Phase 2+3: projection sweeps, each followed by FORGET
+            // (Algorithms 6–8 interleave them exactly like this).
+            for _ in 0..self.config.inner_sweeps {
+                self.project_sweep();
+                self.forget();
+            }
+            let remembered = self.active.len();
+
+            if self.config.record_trace {
+                trace.push(IterStats {
+                    iteration: nu,
+                    found: outcome.found,
+                    merged,
+                    remembered,
+                    max_violation: outcome.max_violation,
+                    projections: self.projections - proj_before,
+                    seconds: round.lap_s(),
+                });
+            }
+
+            if outcome.max_violation <= self.config.violation_tol
+                && self.last_dual_movement <= self.config.dual_tol
+            {
+                converged = true;
+                break;
+            }
+            if let Some(budget) = self.config.projection_budget {
+                if self.projections >= budget {
+                    break;
+                }
+            }
+        }
+        SolverResult {
+            x: self.x.clone(),
+            iterations,
+            converged,
+            total_projections: self.projections,
+            active_constraints: self.active.len(),
+            trace,
+            seconds: clock.elapsed_s(),
+        }
+    }
+
+    /// KKT residual `‖∇f(x) + Aᵀz‖_∞` over the remembered set — exactly
+    /// zero in exact arithmetic for the quadratic (Step 1 of the proof);
+    /// exposed for tests and debugging. Only valid while no constraint
+    /// with nonzero dual has been forgotten, and for `DiagonalQuadratic`-
+    /// style functions where ∇f is cheap — hence the explicit gradient
+    /// argument.
+    pub fn kkt_residual(&self, grad: &[f64]) -> f64 {
+        let mut atz = vec![0.0; self.x.len()];
+        for r in 0..self.active.len() {
+            let v = self.active.view(r);
+            let z = self.active.z(r);
+            for (&i, &a) in v.indices.iter().zip(v.coeffs) {
+                atz[i as usize] += a * z;
+            }
+        }
+        grad.iter()
+            .zip(&atz)
+            .map(|(&g, &az)| (g + az).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bregman::DiagonalQuadratic;
+    use crate::core::oracle::ListOracle;
+
+    /// Tiny QP: min ½‖x − d‖² s.t. a few half-spaces; compare against the
+    /// known analytic projection.
+    #[test]
+    fn projects_onto_single_halfspace() {
+        let f = DiagonalQuadratic::unweighted(vec![2.0, 2.0]);
+        let oracle = ListOracle::new(vec![Constraint::new(vec![0, 1], vec![1.0, 1.0], 2.0)]);
+        let mut s = Solver::new(f, SolverConfig { violation_tol: 1e-10, ..Default::default() });
+        let res = s.solve(oracle);
+        assert!(res.converged);
+        // Projection of (2,2) onto x+y<=2 is (1,1).
+        assert!((res.x[0] - 1.0).abs() < 1e-8, "{:?}", res.x);
+        assert!((res.x[1] - 1.0).abs() < 1e-8);
+        assert_eq!(res.active_constraints, 1);
+    }
+
+    #[test]
+    fn inactive_constraints_are_forgotten() {
+        let f = DiagonalQuadratic::unweighted(vec![0.0, 0.0]);
+        // Both constraints satisfied at the optimum x = d = 0; the second
+        // is violated at no point along the trajectory.
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0], vec![1.0], 5.0),
+            Constraint::new(vec![1], vec![1.0], 5.0),
+        ]);
+        let mut s = Solver::new(f, SolverConfig::default());
+        let res = s.solve(oracle);
+        assert!(res.converged);
+        assert_eq!(res.iterations, 1);
+        assert_eq!(res.active_constraints, 0, "no active constraints at optimum");
+    }
+
+    #[test]
+    fn intersection_of_two_halfspaces() {
+        // min ½‖x−(3,0)‖² s.t. x0<=1, x0−x1<=0  -> optimum (1,1)? Check:
+        // optimum is argmin over the polytope; (1,1): distance² = 4+1=5.
+        // Alternative (1,0) violates x0-x1<=0? 1-0=1>0 violated. So the
+        // active set is both constraints; solution on their intersection
+        // x0=1, x1=1? Gradient (x−d) must be -A^T z with z>=0:
+        // x=(1,1): grad=(-2,1); a1=(1,0), a2=(1,-1); -z1*a1 - z2*a2 =
+        // (-z1-z2, z2) = (-2, 1) -> z2=1, z1=1 >= 0. Optimal.
+        let f = DiagonalQuadratic::unweighted(vec![3.0, 0.0]);
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0], vec![1.0], 1.0),
+            Constraint::new(vec![0, 1], vec![1.0, -1.0], 0.0),
+        ]);
+        let mut s = Solver::new(
+            f,
+            SolverConfig { violation_tol: 1e-12, max_iters: 5000, ..Default::default() },
+        );
+        let res = s.solve(oracle);
+        assert!(res.converged);
+        assert!((res.x[0] - 1.0).abs() < 1e-6, "{:?}", res.x);
+        assert!((res.x[1] - 1.0).abs() < 1e-6);
+        assert_eq!(res.active_constraints, 2);
+    }
+
+    #[test]
+    fn kkt_identity_maintained() {
+        let d = vec![3.0, 0.0, -1.0];
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0], vec![1.0], 1.0),
+            Constraint::new(vec![0, 1], vec![1.0, -1.0], 0.0),
+            Constraint::new(vec![2], vec![-1.0], 0.0),
+        ]);
+        let mut s = Solver::new(f, SolverConfig { max_iters: 50, ..Default::default() });
+        let res = s.solve(oracle);
+        // ∇f(x) = x − d for the unweighted quadratic.
+        let grad: Vec<f64> = s.x.iter().zip(&d).map(|(&x, &di)| x - di).collect();
+        assert!(s.kkt_residual(&grad) < 1e-9, "KKT violated: {}", s.kkt_residual(&grad));
+        assert!(res.total_projections > 0);
+    }
+
+    #[test]
+    fn duals_stay_nonnegative() {
+        let f = DiagonalQuadratic::unweighted(vec![5.0, -5.0, 2.0, 0.0]);
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0, 1], vec![1.0, 1.0], 0.5),
+            Constraint::new(vec![1, 2], vec![-1.0, 1.0], 0.25),
+            Constraint::new(vec![0, 3], vec![1.0, -2.0], 1.0),
+        ]);
+        let mut s = Solver::new(f, SolverConfig { max_iters: 200, ..Default::default() });
+        let _ = s.solve(oracle);
+        for r in 0..s.active.len() {
+            assert!(s.active.z(r) >= -1e-12, "negative dual at {r}");
+        }
+    }
+
+    #[test]
+    fn projection_budget_respected() {
+        let f = DiagonalQuadratic::unweighted(vec![10.0; 4]);
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0, 1, 2, 3], vec![1.0; 4], 1.0),
+            Constraint::new(vec![0], vec![1.0], 0.1),
+        ]);
+        let cfg = SolverConfig {
+            projection_budget: Some(3),
+            violation_tol: 0.0,
+            max_iters: 1000,
+            ..Default::default()
+        };
+        let mut s = Solver::new(f, cfg);
+        let res = s.solve(oracle);
+        assert!(!res.converged);
+        assert!(res.total_projections >= 3 && res.total_projections <= 12);
+    }
+
+    #[test]
+    fn trace_records_forget_dynamics() {
+        let f = DiagonalQuadratic::unweighted(vec![4.0, 4.0, 4.0]);
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0], vec![1.0], 1.0),
+            Constraint::new(vec![1], vec![1.0], 1.0),
+            Constraint::new(vec![2], vec![1.0], 100.0), // never active
+        ]);
+        let mut s = Solver::new(f, SolverConfig::default());
+        let res = s.solve(oracle);
+        assert!(!res.trace.is_empty());
+        let last = res.trace.last().unwrap();
+        assert!(last.remembered <= last.merged);
+        // The never-violated constraint must not be remembered.
+        assert!(res.active_constraints <= 2);
+    }
+}

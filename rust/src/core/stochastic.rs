@@ -1,0 +1,156 @@
+//! The truly stochastic variant (§3.2.1 / Theorem 2).
+//!
+//! At each step a random batch of constraints is sampled and projected
+//! onto, *independently of previous iterations*: the constraint list is
+//! forgotten wholesale, but the dual variables must persist — here they
+//! are indexed by a dense constraint id supplied by a
+//! [`ConstraintFamily`], the natural shape for problems like the L2-SVM
+//! where there is one margin constraint per data point (Algorithm 10).
+
+use super::bregman::BregmanFunction;
+use super::constraint::Constraint;
+use crate::util::Rng;
+
+/// An indexed family of constraints `0..len` that can be materialised on
+/// demand (they are never all stored).
+pub trait ConstraintFamily: Send + Sync {
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialise constraint `id` into `out` (reused across calls).
+    fn materialize(&self, id: usize, out: &mut Constraint);
+}
+
+/// Configuration for the truly stochastic loop.
+#[derive(Debug, Clone)]
+pub struct StochasticConfig {
+    /// Projections per epoch (one epoch samples this many constraints).
+    pub batch: usize,
+    /// Number of epochs.
+    pub epochs: usize,
+    /// Random seed.
+    pub seed: u64,
+}
+
+/// Result of a stochastic solve.
+#[derive(Debug, Clone)]
+pub struct StochasticResult {
+    pub x: Vec<f64>,
+    /// Persistent duals, one per constraint id.
+    pub z: Vec<f64>,
+    pub total_projections: usize,
+    /// Number of ids with nonzero dual at the end (≈ support size).
+    pub support: usize,
+    pub seconds: f64,
+}
+
+/// Run the truly stochastic PROJECT AND FORGET: sample ids uniformly
+/// (Property 2 with τ = batch/len per epoch), project with persistent
+/// duals, keep no constraint list.
+pub fn solve_stochastic<F, Fam>(
+    f: &F,
+    family: &Fam,
+    cfg: &StochasticConfig,
+) -> StochasticResult
+where
+    F: BregmanFunction,
+    Fam: ConstraintFamily,
+{
+    let clock = crate::util::Stopwatch::new();
+    let mut x = f.argmin();
+    let mut z = vec![0.0f64; family.len()];
+    let mut rng = Rng::new(cfg.seed);
+    let mut scratch = Constraint::new(vec![], vec![], 0.0);
+    let mut total = 0usize;
+    let n = family.len();
+    for _ in 0..cfg.epochs {
+        for _ in 0..cfg.batch {
+            let id = rng.below(n);
+            family.materialize(id, &mut scratch);
+            let view = super::constraint::ConstraintView {
+                indices: &scratch.indices,
+                coeffs: &scratch.coeffs,
+                rhs: scratch.rhs,
+            };
+            let theta = f.theta(&x, view);
+            let step = z[id].min(theta);
+            if step != 0.0 {
+                f.apply(&mut x, view, step);
+                z[id] -= step;
+                total += 1;
+            }
+        }
+    }
+    let support = z.iter().filter(|&&v| v != 0.0).count();
+    StochasticResult { x, z, total_projections: total, support, seconds: clock.elapsed_s() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bregman::DiagonalQuadratic;
+
+    /// A family of box constraints x_i <= 1 over each coordinate.
+    struct Box1 {
+        dim: usize,
+    }
+
+    impl ConstraintFamily for Box1 {
+        fn len(&self) -> usize {
+            self.dim
+        }
+
+        fn materialize(&self, id: usize, out: &mut Constraint) {
+            out.indices.clear();
+            out.coeffs.clear();
+            out.indices.push(id as u32);
+            out.coeffs.push(1.0);
+            out.rhs = 1.0;
+        }
+    }
+
+    #[test]
+    fn converges_to_box_projection() {
+        // min ½‖x − 3·1‖² s.t. x_i <= 1 -> x = 1.
+        let f = DiagonalQuadratic::unweighted(vec![3.0; 8]);
+        let cfg = StochasticConfig { batch: 8, epochs: 50, seed: 1 };
+        let res = solve_stochastic(&f, &Box1 { dim: 8 }, &cfg);
+        for (i, &xi) in res.x.iter().enumerate() {
+            assert!((xi - 1.0).abs() < 1e-9, "x[{i}] = {xi}");
+        }
+        // Every constraint is active -> full support, duals = 2.
+        assert_eq!(res.support, 8);
+        for &zi in &res.z {
+            assert!((zi - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn kkt_holds_for_stochastic_duals() {
+        let d = vec![2.0, -1.0, 0.5, 4.0];
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        let cfg = StochasticConfig { batch: 16, epochs: 40, seed: 3 };
+        let res = solve_stochastic(&f, &Box1 { dim: 4 }, &cfg);
+        // ∇f(x) = x − d must equal −A^T z = −z (A = I here).
+        for i in 0..4 {
+            let grad = res.x[i] - d[i];
+            assert!((grad + res.z[i]).abs() < 1e-9, "kkt at {i}");
+        }
+        // Inactive coordinates (d < 1) keep zero duals.
+        assert_eq!(res.z[1], 0.0);
+        assert_eq!(res.z[2], 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let f = DiagonalQuadratic::unweighted(vec![2.0; 5]);
+        let cfg = StochasticConfig { batch: 5, epochs: 10, seed: 42 };
+        let a = solve_stochastic(&f, &Box1 { dim: 5 }, &cfg);
+        let b = solve_stochastic(&f, &Box1 { dim: 5 }, &cfg);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.total_projections, b.total_projections);
+    }
+}

@@ -1,0 +1,271 @@
+//! All-pairs shortest paths: threaded per-source Dijkstra for sparse
+//! graphs and a blocked min-plus (tropical) Floyd–Warshall for dense ones.
+//!
+//! The dense kernel mirrors the L1 Pallas `minplus` kernel: the distance
+//! matrix is processed in `B×B` tiles with the classic three-phase blocked
+//! FW schedule, which is exactly the HBM↔VMEM tiling the AOT artifact
+//! expresses with `BlockSpec`s. `apsp_dense` is the native hot path; the
+//! PJRT-backed variant lives in `runtime::`.
+
+use super::csr::Graph;
+use super::dijkstra::{dijkstra, DijkstraScratch};
+use crate::util::pool::parallel_map_chunks;
+
+/// Dense distance matrix stored row-major as a flat Vec (n*n).
+#[derive(Debug, Clone)]
+pub struct DistMatrix {
+    pub n: usize,
+    pub d: Vec<f64>,
+}
+
+impl DistMatrix {
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.d[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.d[i * self.n + j] = v;
+    }
+
+    /// Initialise from a graph + edge weights: 0 on the diagonal, w on
+    /// edges, +inf elsewhere.
+    pub fn from_graph(g: &Graph, w: &[f64]) -> DistMatrix {
+        let n = g.num_nodes();
+        let mut d = vec![f64::INFINITY; n * n];
+        for i in 0..n {
+            d[i * n + i] = 0.0;
+        }
+        for (e, &(a, b)) in g.edges().iter().enumerate() {
+            let (a, b) = (a as usize, b as usize);
+            d[a * n + b] = w[e];
+            d[b * n + a] = w[e];
+        }
+        DistMatrix { n, d }
+    }
+}
+
+/// APSP via one Dijkstra per source, sharded across `threads` workers.
+/// Returns the dense distance matrix. Suitable for sparse graphs
+/// (O(n·(m + n log n))).
+pub fn apsp_dijkstra(g: &Graph, w: &[f64], threads: usize) -> DistMatrix {
+    let n = g.num_nodes();
+    let rows = parallel_map_chunks(n, threads, |range| {
+        let mut scratch = DijkstraScratch::new(n);
+        let mut out = Vec::with_capacity(range.len() * n);
+        for s in range {
+            dijkstra(g, w, s, &mut scratch);
+            out.extend_from_slice(&scratch.dist);
+        }
+        out
+    });
+    let mut d = Vec::with_capacity(n * n);
+    for part in rows {
+        d.extend_from_slice(&part);
+    }
+    DistMatrix { n, d }
+}
+
+/// In-place min-plus "matmul-accumulate": C[i,j] = min(C[i,j], min_k A[i,k]+B[k,j])
+/// over the given tile ranges. This is the innermost kernel shared by the
+/// blocked FW phases (and mirrored by the Pallas kernel).
+#[inline]
+fn minplus_tile(
+    d: &mut [f64],
+    n: usize,
+    rows: std::ops::Range<usize>,
+    cols: std::ops::Range<usize>,
+    ks: std::ops::Range<usize>,
+) {
+    // k must be the outermost loop: the in-place phase-1/2 tiles of blocked
+    // FW rely on updates through earlier pivots being visible to later ones.
+    for k in ks {
+        let rk = k * n;
+        for i in rows.clone() {
+            let ri = i * n;
+            let dik = d[ri + k];
+            if !dik.is_finite() {
+                continue;
+            }
+            for j in cols.clone() {
+                let cand = dik + d[rk + j];
+                if cand < d[ri + j] {
+                    d[ri + j] = cand;
+                }
+            }
+        }
+    }
+}
+
+/// Blocked Floyd–Warshall with tile size `block`. Mutates `m` into the
+/// all-pairs shortest-path matrix.
+pub fn floyd_warshall_blocked(m: &mut DistMatrix, block: usize) {
+    let n = m.n;
+    let b = block.max(1).min(n);
+    let nblocks = n.div_ceil(b);
+    let rng = |t: usize| (t * b)..(((t + 1) * b).min(n));
+    for t in 0..nblocks {
+        let kb = rng(t);
+        // Phase 1: the pivot tile depends only on itself.
+        minplus_tile(&mut m.d, n, kb.clone(), kb.clone(), kb.clone());
+        // Phase 2: pivot row and column tiles.
+        for o in 0..nblocks {
+            if o == t {
+                continue;
+            }
+            minplus_tile(&mut m.d, n, kb.clone(), rng(o), kb.clone());
+            minplus_tile(&mut m.d, n, rng(o), kb.clone(), kb.clone());
+        }
+        // Phase 3: everything else.
+        for r in 0..nblocks {
+            if r == t {
+                continue;
+            }
+            for c in 0..nblocks {
+                if c == t {
+                    continue;
+                }
+                minplus_tile(&mut m.d, n, rng(r), rng(c), kb.clone());
+            }
+        }
+    }
+}
+
+/// Dense APSP entry point (blocked FW, tile chosen for L1/L2 residency).
+pub fn apsp_dense(g: &Graph, w: &[f64]) -> DistMatrix {
+    let mut m = DistMatrix::from_graph(g, w);
+    floyd_warshall_blocked(&mut m, 64);
+    m
+}
+
+/// One min-plus squaring step D <- min(D, D⊗D); repeated ⌈log2 n⌉ times it
+/// yields APSP. This is the formulation exported as the AOT artifact (a
+/// single static-shape step the rust runtime can iterate).
+pub fn minplus_square(m: &DistMatrix) -> DistMatrix {
+    let n = m.n;
+    let mut out = DistMatrix { n, d: m.d.clone() };
+    for i in 0..n {
+        let ri = i * n;
+        for k in 0..n {
+            let dik = m.d[ri + k];
+            if !dik.is_finite() {
+                continue;
+            }
+            let rk = k * n;
+            for j in 0..n {
+                let c = dik + m.d[rk + j];
+                if c < out.d[ri + j] {
+                    out.d[ri + j] = c;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_graph(n: usize, p: f64, seed: u64) -> (Graph, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                if rng.bernoulli(p) {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let g = Graph::from_edges(n, &edges);
+        let w: Vec<f64> = (0..g.num_edges()).map(|_| rng.uniform(0.1, 3.0)).collect();
+        (g, w)
+    }
+
+    #[test]
+    fn dense_matches_dijkstra() {
+        let (g, w) = random_graph(30, 0.3, 42);
+        let a = apsp_dijkstra(&g, &w, 1);
+        let b = apsp_dense(&g, &w);
+        for i in 0..30 {
+            for j in 0..30 {
+                let (x, y) = (a.get(i, j), b.get(i, j));
+                if x.is_finite() || y.is_finite() {
+                    assert!((x - y).abs() < 1e-9, "({i},{j}): {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_sizes_agree() {
+        let (g, w) = random_graph(37, 0.25, 7);
+        let base = apsp_dense(&g, &w);
+        for block in [1, 5, 16, 37, 64] {
+            let mut m = DistMatrix::from_graph(&g, &w);
+            floyd_warshall_blocked(&mut m, block);
+            assert_eq!(m.d.len(), base.d.len());
+            for (x, y) in m.d.iter().zip(&base.d) {
+                if x.is_finite() || y.is_finite() {
+                    assert!((x - y).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        let (g, w) = random_graph(25, 0.4, 3);
+        let a = apsp_dijkstra(&g, &w, 1);
+        let b = apsp_dijkstra(&g, &w, 4);
+        assert_eq!(a.d.len(), b.d.len());
+        for (x, y) in a.d.iter().zip(&b.d) {
+            assert!((x == y) || (x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn repeated_squaring_converges_to_apsp() {
+        let (g, w) = random_graph(20, 0.3, 11);
+        let target = apsp_dense(&g, &w);
+        let mut m = DistMatrix::from_graph(&g, &w);
+        let mut steps = 0;
+        loop {
+            let next = minplus_square(&m);
+            let changed = next
+                .d
+                .iter()
+                .zip(&m.d)
+                .any(|(a, b)| (a - b).abs() > 1e-12 && (a.is_finite() || b.is_finite()));
+            m = next;
+            steps += 1;
+            if !changed || steps > 10 {
+                break;
+            }
+        }
+        for (x, y) in m.d.iter().zip(&target.d) {
+            if x.is_finite() || y.is_finite() {
+                assert!((x - y).abs() < 1e-9);
+            }
+        }
+        assert!(steps <= 6, "log2(20) squarings should suffice, took {steps}");
+    }
+
+    #[test]
+    fn triangle_inequality_holds_after_apsp() {
+        let (g, w) = random_graph(18, 0.5, 23);
+        let m = apsp_dense(&g, &w);
+        for i in 0..18 {
+            for j in 0..18 {
+                for k in 0..18 {
+                    let (ij, ik, kj) = (m.get(i, j), m.get(i, k), m.get(k, j));
+                    if ik.is_finite() && kj.is_finite() {
+                        assert!(ij <= ik + kj + 1e-9);
+                    }
+                }
+            }
+        }
+    }
+}

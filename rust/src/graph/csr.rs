@@ -1,0 +1,241 @@
+//! Immutable undirected graph in CSR form with stable edge indices.
+
+/// Undirected graph. Edges are stored once as `(u, v)` with `u < v` and
+/// have a stable index `0..m` used to address the optimisation variable
+/// `x: Vec<f64>` (one entry per edge). The CSR adjacency stores, for every
+/// node, `(neighbor, edge_id)` pairs.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+    adj_off: Vec<u32>,
+    adj: Vec<(u32, u32)>,
+}
+
+impl Graph {
+    /// Build from an edge list. Duplicate and self-loop edges are rejected.
+    pub fn from_edges(n: usize, raw: &[(u32, u32)]) -> Graph {
+        let mut edges = Vec::with_capacity(raw.len());
+        for &(a, b) in raw {
+            assert!(a != b, "self-loop {a}");
+            assert!((a as usize) < n && (b as usize) < n, "edge ({a},{b}) out of range");
+            edges.push(if a < b { (a, b) } else { (b, a) });
+        }
+        // Detect duplicates (debug-level cost is fine at build time).
+        {
+            let mut sorted = edges.clone();
+            sorted.sort_unstable();
+            for w in sorted.windows(2) {
+                assert!(w[0] != w[1], "duplicate edge {:?}", w[0]);
+            }
+        }
+        let mut deg = vec![0u32; n];
+        for &(a, b) in &edges {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut adj_off = vec![0u32; n + 1];
+        for i in 0..n {
+            adj_off[i + 1] = adj_off[i] + deg[i];
+        }
+        let mut cursor: Vec<u32> = adj_off[..n].to_vec();
+        let mut adj = vec![(0u32, 0u32); 2 * edges.len()];
+        for (eid, &(a, b)) in edges.iter().enumerate() {
+            adj[cursor[a as usize] as usize] = (b, eid as u32);
+            cursor[a as usize] += 1;
+            adj[cursor[b as usize] as usize] = (a, eid as u32);
+            cursor[b as usize] += 1;
+        }
+        Graph { n, edges, adj_off, adj }
+    }
+
+    /// The complete graph `K_n` with the canonical triangular edge order:
+    /// edge (i, j), i < j, has index `i*n - i*(i+1)/2 + (j - i - 1)`.
+    pub fn complete(n: usize) -> Graph {
+        let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                edges.push((i, j));
+            }
+        }
+        Graph::from_edges(n, &edges)
+    }
+
+    /// Edge index of (i, j) in a complete graph built by [`Graph::complete`].
+    #[inline]
+    pub fn complete_edge_index(n: usize, i: usize, j: usize) -> usize {
+        debug_assert!(i != j && i < n && j < n);
+        let (i, j) = if i < j { (i, j) } else { (j, i) };
+        i * n - i * (i + 1) / 2 + (j - i - 1)
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Endpoints of edge `e` as `(u, v)`, `u < v`.
+    #[inline]
+    pub fn endpoints(&self, e: usize) -> (u32, u32) {
+        self.edges[e]
+    }
+
+    /// All edges in index order.
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Neighbors of `v` as `(neighbor, edge_id)` pairs.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[(u32, u32)] {
+        &self.adj[self.adj_off[v] as usize..self.adj_off[v + 1] as usize]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        (self.adj_off[v + 1] - self.adj_off[v]) as usize
+    }
+
+    /// Average degree 2m/n.
+    pub fn avg_degree(&self) -> f64 {
+        2.0 * self.num_edges() as f64 / self.n.max(1) as f64
+    }
+
+    /// Look up the edge id between `u` and `v`, if adjacent (O(deg)).
+    pub fn edge_between(&self, u: usize, v: usize) -> Option<u32> {
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        self.neighbors(a)
+            .iter()
+            .find(|&&(nb, _)| nb as usize == b)
+            .map(|&(_, e)| e)
+    }
+
+    /// Connected components; returns (component id per node, count).
+    pub fn components(&self) -> (Vec<u32>, usize) {
+        let mut comp = vec![u32::MAX; self.n];
+        let mut stack = Vec::new();
+        let mut next = 0u32;
+        for s in 0..self.n {
+            if comp[s] != u32::MAX {
+                continue;
+            }
+            comp[s] = next;
+            stack.push(s);
+            while let Some(v) = stack.pop() {
+                for &(nb, _) in self.neighbors(v) {
+                    if comp[nb as usize] == u32::MAX {
+                        comp[nb as usize] = next;
+                        stack.push(nb as usize);
+                    }
+                }
+            }
+            next += 1;
+        }
+        (comp, next as usize)
+    }
+
+    /// Induced subgraph on the largest connected component, with the node
+    /// relabelling used (old -> new, `u32::MAX` if dropped).
+    pub fn largest_component(&self) -> (Graph, Vec<u32>) {
+        let (comp, k) = self.components();
+        let mut sizes = vec![0usize; k];
+        for &c in &comp {
+            sizes[c as usize] += 1;
+        }
+        let big = sizes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, s)| *s)
+            .map(|(i, _)| i as u32)
+            .unwrap_or(0);
+        let mut relabel = vec![u32::MAX; self.n];
+        let mut next = 0u32;
+        for v in 0..self.n {
+            if comp[v] == big {
+                relabel[v] = next;
+                next += 1;
+            }
+        }
+        let edges: Vec<(u32, u32)> = self
+            .edges
+            .iter()
+            .filter(|&&(a, b)| comp[a as usize] == big && comp[b as usize] == big)
+            .map(|&(a, b)| (relabel[a as usize], relabel[b as usize]))
+            .collect();
+        (Graph::from_edges(next as usize, &edges), relabel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_graph_structure() {
+        let g = Graph::complete(5);
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.num_edges(), 10);
+        for v in 0..5 {
+            assert_eq!(g.degree(v), 4);
+        }
+    }
+
+    #[test]
+    fn complete_edge_index_roundtrip() {
+        let n = 7;
+        let g = Graph::complete(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let e = Graph::complete_edge_index(n, i, j);
+                assert_eq!(g.endpoints(e), (i as u32, j as u32));
+                // symmetric
+                assert_eq!(e, Graph::complete_edge_index(n, j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn adjacency_consistent_with_edges() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3), (1, 3)]);
+        assert_eq!(g.num_edges(), 5);
+        for e in 0..g.num_edges() {
+            let (u, v) = g.endpoints(e);
+            assert_eq!(g.edge_between(u as usize, v as usize), Some(e as u32));
+        }
+        assert_eq!(g.edge_between(0, 2), None);
+    }
+
+    #[test]
+    fn components_and_largest() {
+        // Two components: a triangle {0,1,2} and an edge {3,4}.
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (0, 2), (3, 4)]);
+        let (comp, k) = g.components();
+        assert_eq!(k, 2);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[3], comp[4]);
+        assert_ne!(comp[0], comp[3]);
+        let (big, relabel) = g.largest_component();
+        assert_eq!(big.num_nodes(), 3);
+        assert_eq!(big.num_edges(), 3);
+        assert_eq!(relabel[3], u32::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn duplicates_rejected() {
+        Graph::from_edges(3, &[(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn self_loops_rejected() {
+        Graph::from_edges(3, &[(1, 1)]);
+    }
+}

@@ -1,0 +1,321 @@
+//! Random instance generators for every workload in the paper's evaluation.
+//!
+//! §4.1 / §8.2 — three families of random weighted complete graphs for the
+//! metric nearness experiments (the main text and the appendix disagree on
+//! the type-1/type-2 naming; we follow the *main text*: type 1 = Gaussian
+//! weights (Table 1), type 2 = Bernoulli-0.8 weights (Figure 1), type 3 =
+//! ⌈1000·u·v²⌉ (Figure 4)).
+//!
+//! §4.2 — SNAP collaboration/power/social graphs. Those datasets are not
+//! available offline, so `snap_like` synthesises stand-ins with matched
+//! node count and average degree via preferential attachment (collab
+//! graphs) or Watts–Strogatz (the power grid); see DESIGN.md for the
+//! substitution rationale.
+
+use super::csr::Graph;
+use crate::util::Rng;
+
+/// A weighted instance: graph structure + one weight per edge.
+#[derive(Debug, Clone)]
+pub struct WeightedInstance {
+    pub graph: Graph,
+    pub weights: Vec<f64>,
+}
+
+/// Type-1 (Table 1): complete graph with |N(0,1)| weights.
+pub fn type1_complete(n: usize, rng: &mut Rng) -> WeightedInstance {
+    let graph = Graph::complete(n);
+    let weights = (0..graph.num_edges()).map(|_| rng.normal().abs()).collect();
+    WeightedInstance { graph, weights }
+}
+
+/// Type-2 (Figure 1): complete graph, w(e)=1 w.p. 0.8 else 0.
+pub fn type2_complete(n: usize, rng: &mut Rng) -> WeightedInstance {
+    let graph = Graph::complete(n);
+    let weights = (0..graph.num_edges())
+        .map(|_| if rng.bernoulli(0.8) { 1.0 } else { 0.0 })
+        .collect();
+    WeightedInstance { graph, weights }
+}
+
+/// Type-3 (Figure 4): complete graph, w = ⌈1000·u·v²⌉, u~U[0,1], v~N(0,1).
+pub fn type3_complete(n: usize, rng: &mut Rng) -> WeightedInstance {
+    let graph = Graph::complete(n);
+    let weights = (0..graph.num_edges())
+        .map(|_| {
+            let u = rng.f64();
+            let v = rng.normal();
+            (1000.0 * u * v * v).ceil()
+        })
+        .collect();
+    WeightedInstance { graph, weights }
+}
+
+/// Erdős–Rényi G(n, p) (used by tests and the non-complete nearness demo).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+    let mut edges = Vec::new();
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            if rng.bernoulli(p) {
+                edges.push((i, j));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Barabási–Albert preferential attachment: each new node attaches to `k`
+/// existing nodes chosen proportionally to degree. Always connected;
+/// heavy-tailed degrees — the stand-in for SNAP collaboration networks.
+pub fn barabasi_albert(n: usize, k: usize, rng: &mut Rng) -> Graph {
+    assert!(n > k && k >= 1);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * k);
+    // Repeated-endpoint urn: attachment proportional to degree.
+    let mut urn: Vec<u32> = Vec::with_capacity(2 * n * k);
+    // Seed clique on k+1 nodes.
+    for i in 0..=(k as u32) {
+        for j in (i + 1)..=(k as u32) {
+            edges.push((i, j));
+            urn.push(i);
+            urn.push(j);
+        }
+    }
+    for v in (k + 1)..n {
+        let v = v as u32;
+        let mut targets = std::collections::HashSet::with_capacity(k);
+        while targets.len() < k {
+            let t = urn[rng.below(urn.len())];
+            targets.insert(t);
+        }
+        for &t in &targets {
+            edges.push((t, v));
+            urn.push(t);
+            urn.push(v);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Watts–Strogatz small world: ring lattice with `k` neighbours per side,
+/// each edge rewired with probability `beta`. Stand-in for the `Power`
+/// grid graph (which is small-world-ish and low degree).
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, rng: &mut Rng) -> Graph {
+    assert!(k >= 1 && 2 * k < n);
+    let mut set = std::collections::HashSet::new();
+    for i in 0..n {
+        for d in 1..=k {
+            let j = (i + d) % n;
+            let (a, b) = if i < j { (i, j) } else { (j, i) };
+            set.insert((a as u32, b as u32));
+        }
+    }
+    let mut edges: Vec<(u32, u32)> = set.iter().cloned().collect();
+    edges.sort_unstable();
+    for idx in 0..edges.len() {
+        if rng.bernoulli(beta) {
+            let (a, _) = edges[idx];
+            // Rewire the far endpoint to a uniform non-neighbour.
+            for _ in 0..16 {
+                let c = rng.below(n) as u32;
+                if c == a {
+                    continue;
+                }
+                let cand = if a < c { (a, c) } else { (c, a) };
+                if !set.contains(&cand) {
+                    set.remove(&edges[idx]);
+                    set.insert(cand);
+                    edges[idx] = cand;
+                    break;
+                }
+            }
+        }
+    }
+    let final_edges: Vec<(u32, u32)> = set.into_iter().collect();
+    Graph::from_edges(n, &final_edges)
+}
+
+/// Chung–Lu power-law graph: expected degree of node i is
+/// `w_i = c·(i+i0)^(-1/(β-1))`, scaled so the mean degree is `avg_deg`.
+/// Stand-in for large social graphs (Slashdot/Epinions).
+pub fn chung_lu_power_law(n: usize, avg_deg: f64, beta: f64, rng: &mut Rng) -> Graph {
+    assert!(beta > 2.0, "need finite mean degree");
+    let gamma = 1.0 / (beta - 1.0);
+    let i0 = 10.0; // offset tames the max degree
+    let mut w: Vec<f64> = (0..n).map(|i| (i as f64 + i0).powf(-gamma)).collect();
+    let sum: f64 = w.iter().sum();
+    let scale = avg_deg * n as f64 / sum;
+    for wi in &mut w {
+        *wi *= scale;
+    }
+    let total: f64 = w.iter().sum();
+    // Efficient CL sampling: sort descending (already), loop i, then use the
+    // geometric skipping trick over j.
+    let mut edges = Vec::new();
+    for i in 0..n {
+        let mut j = i + 1;
+        while j < n {
+            let p = (w[i] * w[j] / total).min(1.0);
+            if p <= 0.0 {
+                break;
+            }
+            if p >= 1.0 {
+                edges.push((i as u32, j as u32));
+                j += 1;
+                continue;
+            }
+            // Skip ahead geometrically using the current p as an upper
+            // bound for subsequent probabilities (w is non-increasing).
+            let r = rng.f64().max(f64::MIN_POSITIVE);
+            let skip = (r.ln() / (1.0 - p).ln()).floor() as usize;
+            j += skip;
+            if j >= n {
+                break;
+            }
+            let pj = (w[i] * w[j] / total).min(1.0);
+            if rng.f64() < pj / p {
+                edges.push((i as u32, j as u32));
+            }
+            j += 1;
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// A signed graph: structure plus ±1 edge signs (for correlation
+/// clustering on sparse graphs, §4.2.2).
+#[derive(Debug, Clone)]
+pub struct SignedGraph {
+    pub graph: Graph,
+    /// +1 (similar) or -1 (dissimilar) per edge.
+    pub signs: Vec<i8>,
+}
+
+/// Attach signs: edges are positive with probability `p_pos`.
+pub fn sign_edges(graph: Graph, p_pos: f64, rng: &mut Rng) -> SignedGraph {
+    let signs = (0..graph.num_edges())
+        .map(|_| if rng.bernoulli(p_pos) { 1 } else { -1 })
+        .collect();
+    SignedGraph { graph, signs }
+}
+
+/// A *clusterable* signed graph: plant `k` clusters, in-cluster edges
+/// positive / cross-cluster negative, then flip each sign with noise
+/// probability `flip`. Ground truth is returned for evaluation.
+pub fn planted_signed(
+    graph: Graph,
+    k: usize,
+    flip: f64,
+    rng: &mut Rng,
+) -> (SignedGraph, Vec<u32>) {
+    let n = graph.num_nodes();
+    let labels: Vec<u32> = (0..n).map(|_| rng.below(k) as u32).collect();
+    let signs = graph
+        .edges()
+        .iter()
+        .map(|&(a, b)| {
+            let same = labels[a as usize] == labels[b as usize];
+            let s = if same { 1i8 } else { -1i8 };
+            if rng.bernoulli(flip) {
+                -s
+            } else {
+                s
+            }
+        })
+        .collect();
+    (SignedGraph { graph, signs }, labels)
+}
+
+/// Named SNAP stand-ins with node count and average degree matched to the
+/// paper's datasets (sizes are the largest-connected-component sizes the
+/// paper reports). `scale ∈ (0,1]` shrinks n for CI runs.
+pub fn snap_like(name: &str, scale: f64, rng: &mut Rng) -> Graph {
+    let s = |n: usize| ((n as f64 * scale) as usize).max(64);
+    match name {
+        // Collaboration networks -> preferential attachment.
+        "ca-grqc" => barabasi_albert(s(4158), 3, rng),
+        "power" => watts_strogatz(s(4941), 2, 0.1, rng),
+        "ca-hepth" => barabasi_albert(s(8638), 3, rng),
+        "ca-hepph" => barabasi_albert(s(11204), 10, rng),
+        // Signed social networks -> heavy-tailed Chung–Lu.
+        "slashdot" => chung_lu_power_law(s(82140), 12.0, 2.5, rng),
+        "epinions" => chung_lu_power_law(s(131_828), 10.8, 2.4, rng),
+        other => panic!("unknown snap-like graph {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_generators_shapes() {
+        let mut rng = Rng::new(1);
+        let t1 = type1_complete(20, &mut rng);
+        assert_eq!(t1.weights.len(), 190);
+        assert!(t1.weights.iter().all(|&w| w >= 0.0));
+        let t2 = type2_complete(50, &mut rng);
+        let ones = t2.weights.iter().filter(|&&w| w == 1.0).count();
+        assert!((0.7..0.9).contains(&(ones as f64 / t2.weights.len() as f64)));
+        let t3 = type3_complete(20, &mut rng);
+        assert!(t3.weights.iter().all(|&w| w >= 0.0 && w == w.ceil()));
+    }
+
+    #[test]
+    fn ba_connected_and_sized() {
+        let mut rng = Rng::new(2);
+        let g = barabasi_albert(500, 3, &mut rng);
+        assert_eq!(g.num_nodes(), 500);
+        let (_, k) = g.components();
+        assert_eq!(k, 1);
+        // m ≈ k(n-k) + seed clique
+        assert!(g.num_edges() >= 3 * (500 - 4));
+        // Heavy tail: max degree far above average.
+        let maxdeg = (0..500).map(|v| g.degree(v)).max().unwrap();
+        assert!(maxdeg as f64 > 3.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn ws_degree_and_connectivity() {
+        let mut rng = Rng::new(3);
+        let g = watts_strogatz(400, 2, 0.1, &mut rng);
+        assert_eq!(g.num_nodes(), 400);
+        assert!((g.avg_degree() - 4.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn chung_lu_degree_targets() {
+        let mut rng = Rng::new(4);
+        let g = chung_lu_power_law(3000, 10.0, 2.5, &mut rng);
+        let avg = g.avg_degree();
+        assert!((6.0..14.0).contains(&avg), "avg degree {avg}");
+        let maxdeg = (0..g.num_nodes()).map(|v| g.degree(v)).max().unwrap();
+        assert!(maxdeg > 50, "power-law head expected, max {maxdeg}");
+    }
+
+    #[test]
+    fn planted_signs_recoverable() {
+        let mut rng = Rng::new(5);
+        let g = erdos_renyi(100, 0.2, &mut rng);
+        let (sg, labels) = planted_signed(g, 4, 0.0, &mut rng);
+        for (e, &(a, b)) in sg.graph.edges().iter().enumerate() {
+            let same = labels[a as usize] == labels[b as usize];
+            assert_eq!(sg.signs[e] == 1, same);
+        }
+    }
+
+    #[test]
+    fn snap_like_sizes() {
+        let mut rng = Rng::new(6);
+        let g = snap_like("ca-grqc", 0.05, &mut rng);
+        assert!(g.num_nodes() >= 64);
+        let (_, k) = g.components();
+        assert_eq!(k, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = type1_complete(10, &mut Rng::new(9)).weights;
+        let b = type1_complete(10, &mut Rng::new(9)).weights;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,102 @@
+//! Edge-list IO: plain `u v [w]` text files (SNAP-style), with optional
+//! signed third column for correlation clustering instances.
+
+use super::csr::Graph;
+use super::generators::{SignedGraph, WeightedInstance};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Read a (possibly weighted) edge list. Lines starting with `#` are
+/// comments; node ids are compacted to `0..n`.
+pub fn read_edge_list<P: AsRef<Path>>(path: P) -> anyhow::Result<WeightedInstance> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut raw: Vec<(u64, u64, f64)> = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let a: u64 = it.next().ok_or_else(|| anyhow::anyhow!("missing src"))?.parse()?;
+        let b: u64 = it.next().ok_or_else(|| anyhow::anyhow!("missing dst"))?.parse()?;
+        let w: f64 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+        if a != b {
+            raw.push((a, b, w));
+        }
+    }
+    // Compact ids.
+    let mut ids: Vec<u64> = raw.iter().flat_map(|&(a, b, _)| [a, b]).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let index = |x: u64| ids.binary_search(&x).unwrap() as u32;
+    // Dedup undirected edges, keeping the first weight seen.
+    let mut seen = std::collections::HashMap::new();
+    for &(a, b, w) in &raw {
+        let (u, v) = (index(a), index(b));
+        let key = if u < v { (u, v) } else { (v, u) };
+        seen.entry(key).or_insert(w);
+    }
+    let mut pairs: Vec<((u32, u32), f64)> = seen.into_iter().collect();
+    pairs.sort_unstable_by_key(|&(k, _)| k);
+    let edges: Vec<(u32, u32)> = pairs.iter().map(|&(k, _)| k).collect();
+    let weights: Vec<f64> = pairs.iter().map(|&(_, w)| w).collect();
+    Ok(WeightedInstance { graph: Graph::from_edges(ids.len(), &edges), weights })
+}
+
+/// Write a weighted edge list.
+pub fn write_edge_list<P: AsRef<Path>>(path: P, inst: &WeightedInstance) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# nodes {} edges {}", inst.graph.num_nodes(), inst.graph.num_edges())?;
+    for (e, &(a, b)) in inst.graph.edges().iter().enumerate() {
+        writeln!(w, "{a} {b} {}", inst.weights[e])?;
+    }
+    Ok(())
+}
+
+/// Read a signed edge list (third column ±1).
+pub fn read_signed<P: AsRef<Path>>(path: P) -> anyhow::Result<SignedGraph> {
+    let inst = read_edge_list(path)?;
+    let signs = inst
+        .weights
+        .iter()
+        .map(|&w| if w >= 0.0 { 1i8 } else { -1i8 })
+        .collect();
+    Ok(SignedGraph { graph: inst.graph, signs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let inst = crate::graph::generators::type1_complete(8, &mut rng);
+        let path = std::env::temp_dir().join("paf_io_test.txt");
+        write_edge_list(&path, &inst).unwrap();
+        let back = read_edge_list(&path).unwrap();
+        assert_eq!(back.graph.num_nodes(), 8);
+        assert_eq!(back.graph.num_edges(), inst.graph.num_edges());
+        for (e, &(a, b)) in back.graph.edges().iter().enumerate() {
+            let orig = inst.graph.edge_between(a as usize, b as usize).unwrap();
+            assert!((back.weights[e] - inst.weights[orig as usize]).abs() < 1e-12);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn comments_and_dups_handled() {
+        let path = std::env::temp_dir().join("paf_io_test2.txt");
+        std::fs::write(&path, "# comment\n5 9 2.5\n9 5 99\n5 5 1\n9 12 -1\n").unwrap();
+        let inst = read_edge_list(&path).unwrap();
+        assert_eq!(inst.graph.num_nodes(), 3); // ids 5, 9, 12 compacted
+        assert_eq!(inst.graph.num_edges(), 2); // dup + self-loop dropped
+        let sg = read_signed(&path).unwrap();
+        assert_eq!(sg.signs.iter().filter(|&&s| s < 0).count(), 1);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph substrate: CSR graphs over indexed edge variables, shortest
+//! paths, all-pairs computations, random-instance generators and IO.
+//!
+//! The optimisation variable of every metric constrained problem lives on
+//! the *edges* of a graph `G`; the structure (`Graph`) is immutable while
+//! edge weights are passed alongside as `&[f64]`, so the solver can update
+//! `x` in place without touching adjacency.
+
+pub mod apsp;
+pub mod csr;
+pub mod dijkstra;
+pub mod generators;
+pub mod io;
+
+pub use csr::Graph;
+pub use dijkstra::{dijkstra, DijkstraScratch};

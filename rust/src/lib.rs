@@ -1,0 +1,34 @@
+//! # Project and Forget
+//!
+//! A production-oriented reproduction of *Project and Forget: Solving
+//! Large-Scale Metric Constrained Problems* (Sonthalia & Gilbert, 2020):
+//! an active-set Bregman-projection solver for convex programs with
+//! enormous numbers of linear inequality constraints, specialised to
+//! metric constrained problems (metric nearness, correlation clustering,
+//! information-theoretic metric learning, L2-SVMs).
+//!
+//! The crate is the L3 layer of a three-layer rust + JAX + Pallas stack:
+//! the dense numeric hot spots (min-plus APSP sweeps, batched constraint
+//! projections) are AOT-compiled from JAX/Pallas to HLO at build time and
+//! executed through the PJRT CPU client in [`runtime`]; everything on the
+//! solve path is rust.
+//!
+//! Quick tour:
+//! - [`core`] — the PROJECT AND FORGET engine (Algorithms 1 & 3).
+//! - [`graph`] — CSR graphs, Dijkstra/APSP, instance generators.
+//! - [`problems`] — metric nearness, correlation clustering, ITML, SVM.
+//! - [`baselines`] — every comparator in the paper's tables.
+//! - [`ml`] — datasets, kNN, Mahalanobis helpers.
+//! - [`coordinator`] — orchestration, metrics, PJRT batching.
+//! - [`runtime`] — PJRT artifact loading/execution.
+//! - [`util`] — offline substrate (PRNG, CLI, config, pool, bench kit).
+
+pub mod baselines;
+pub mod coordinator;
+pub mod core;
+pub mod graph;
+pub mod ml;
+pub mod problems;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,242 @@
+//! `paf` — the PROJECT AND FORGET command-line launcher.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!
+//! ```text
+//! paf nearness  --n 300 --graph-type 1 [--mode onfind|collect] [--tol 1e-2]
+//! paf cc        --graph ca-grqc [--sparse] [--gamma 1.0] [--scale 0.1]
+//! paf itml      --dataset banana [--projections 100000]
+//! paf svm       --n 100000 --d 100 --k 10 [--c 1000] [--epochs 5]
+//! paf oracle    --n 200            # one separation-oracle round, timed
+//! paf runtime-info                 # list loaded PJRT artifacts
+//! ```
+//!
+//! Global flags: `--seed <u64>`, `--config <file>` (key = value overrides),
+//! `--report-dir <dir>`.
+
+use paf::baselines::svm_liblinear::{train_dual_cd, train_primal_newton};
+use paf::coordinator::{figure2_series, figure3_series, violation_decay_rate};
+use paf::graph::generators as gen;
+use paf::ml::dataset::{svm_cloud, table4_dataset};
+use paf::ml::knn::knn_accuracy;
+use paf::ml::mahalanobis::Mat;
+use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::problems::itml::{solve_pf_itml, PfItmlConfig};
+use paf::problems::metric_oracle::OracleMode;
+use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::problems::svm::{train_pf_svm, SvmConfig};
+use paf::report;
+use paf::util::cli::Args;
+use paf::util::table::Table;
+use paf::util::{Rng, Stopwatch};
+
+fn main() {
+    let mut args = Args::from_env();
+    // Config layering: file values become CLI defaults (CLI flags win).
+    if let Some(path) = args.get("config").map(str::to_string) {
+        match paf::util::config::Config::load(&path) {
+            Ok(cfg) => args.apply_config_defaults(&cfg),
+            Err(e) => {
+                eprintln!("--config {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(dir) = args.get("report-dir") {
+        std::env::set_var("PAF_REPORT_DIR", dir);
+    }
+    let seed = args.get_parsed_or("seed", 0u64);
+    match args.command.as_deref() {
+        Some("nearness") => cmd_nearness(&args, seed),
+        Some("cc") => cmd_cc(&args, seed),
+        Some("itml") => cmd_itml(&args, seed),
+        Some("svm") => cmd_svm(&args, seed),
+        Some("oracle") => cmd_oracle(&args, seed),
+        Some("runtime-info") => cmd_runtime_info(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown command {o:?}\n");
+            }
+            eprintln!(
+                "usage: paf <nearness|cc|itml|svm|oracle|runtime-info> [--flags]\n\
+                 see `rust/src/main.rs` docs for per-command flags"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_nearness(args: &Args, seed: u64) {
+    let n = args.get_parsed_or("n", 200usize);
+    let gtype = args.get_parsed_or("graph-type", 1usize);
+    let mode = match args.get_or("mode", "onfind").as_str() {
+        "collect" => OracleMode::Collect,
+        _ => OracleMode::ProjectOnFind,
+    };
+    let mut rng = Rng::new(seed);
+    let inst = match gtype {
+        1 => gen::type1_complete(n, &mut rng),
+        2 => gen::type2_complete(n, &mut rng),
+        3 => gen::type3_complete(n, &mut rng),
+        t => panic!("unknown graph type {t}"),
+    };
+    let cfg = NearnessConfig {
+        violation_tol: args.get_parsed_or("tol", 1e-2),
+        max_iters: args.get_parsed_or("max-iters", 500usize),
+        mode,
+        ..Default::default()
+    };
+    println!("metric nearness: n={n} type={gtype} m={} seed={seed}", inst.graph.num_edges());
+    let res = solve_nearness(&inst, &cfg);
+    let mut t = Table::new("metric nearness", &["metric", "value"]);
+    t.rowd(&["n".to_string(), n.to_string()]);
+    t.rowd(&["converged".to_string(), res.result.converged.to_string()]);
+    t.rowd(&["iterations".to_string(), res.result.iterations.to_string()]);
+    t.rowd(&["seconds".to_string(), report::fmt_time(res.result.seconds)]);
+    t.rowd(&["projections".to_string(), res.result.total_projections.to_string()]);
+    t.rowd(&["active constraints".to_string(), res.result.active_constraints.to_string()]);
+    t.rowd(&["objective".to_string(), format!("{:.6}", res.objective)]);
+    report::emit_table(&t, &format!("nearness_n{n}_t{gtype}"));
+}
+
+fn cmd_cc(args: &Args, seed: u64) {
+    let name = args.get_or("graph", "ca-grqc");
+    let scale = args.get_parsed_or("scale", 0.05f64);
+    let sparse = args.flag("sparse");
+    let mut rng = Rng::new(seed);
+    let clock = Stopwatch::new();
+    let (inst, label) = if sparse {
+        let g = gen::snap_like(&name, scale, &mut rng);
+        let sg = gen::sign_edges(g, 0.8, &mut rng);
+        (CcInstance::from_signed(&sg), format!("{name} (sparse, scale {scale})"))
+    } else {
+        let g = gen::snap_like(&name, scale, &mut rng);
+        (CcInstance::densify(&g), format!("{name} (densified, scale {scale})"))
+    };
+    println!(
+        "correlation clustering: {label}: n={} m={} (built in {:.1}s)",
+        inst.graph.num_nodes(),
+        inst.graph.num_edges(),
+        clock.elapsed_s()
+    );
+    let mut cfg = if sparse { CcConfig::sparse() } else { CcConfig::dense() };
+    cfg.gamma = args.get_parsed_or("gamma", 1.0);
+    cfg.violation_tol = args.get_parsed_or("tol", 1e-2);
+    cfg.max_iters = args.get_parsed_or("max-iters", cfg.max_iters);
+    let res = solve_cc(&inst, &cfg, seed);
+    let mut t = Table::new("correlation clustering", &["metric", "value"]);
+    t.rowd(&["graph".to_string(), label.clone()]);
+    t.rowd(&["converged".to_string(), res.result.converged.to_string()]);
+    t.rowd(&["iterations".to_string(), res.result.iterations.to_string()]);
+    t.rowd(&["seconds".to_string(), report::fmt_time(res.result.seconds)]);
+    t.rowd(&["approx ratio".to_string(), format!("{:.3}", res.approx_ratio)]);
+    t.rowd(&["lp objective".to_string(), format!("{:.2}", res.lp_objective)]);
+    t.rowd(&["rounded objective".to_string(), format!("{:.2}", res.rounded_objective)]);
+    t.rowd(&["active constraints".to_string(), res.result.active_constraints.to_string()]);
+    if let Some(rate) = violation_decay_rate(&res.result) {
+        t.rowd(&["violation decay/iter".to_string(), format!("{rate:.4}")]);
+    }
+    report::emit_table(&t, &format!("cc_{name}"));
+    report::emit_series(&figure2_series(&res.result, "constraints per iteration"), &format!("cc_{name}_fig2"));
+    report::emit_series(&figure3_series(&res.result, "max violation per iteration"), &format!("cc_{name}_fig3"));
+}
+
+fn cmd_itml(args: &Args, seed: u64) {
+    let name = args.get_or("dataset", "banana");
+    let mut rng = Rng::new(seed);
+    let data = table4_dataset(&name, &mut rng);
+    let (mut train, mut test) = data.split(0.8, &mut rng);
+    let (mean, std) = train.normalize();
+    test.apply_transform(&mean, &std);
+    let cfg = PfItmlConfig {
+        max_projections: args.get_parsed_or("projections", 100_000usize),
+        seed,
+        ..Default::default()
+    };
+    println!("itml: dataset={name} n={} d={} classes={}", data.n, data.d, data.num_classes());
+    let res = solve_pf_itml(&train, &cfg);
+    let base = knn_accuracy(&Mat::identity(train.d), &train, &test, 4);
+    let learned = knn_accuracy(&res.m, &train, &test, 4);
+    let mut t = Table::new("itml", &["metric", "value"]);
+    t.rowd(&["dataset".to_string(), name.clone()]);
+    t.rowd(&["euclidean knn acc".to_string(), format!("{base:.5}")]);
+    t.rowd(&["learned knn acc".to_string(), format!("{learned:.5}")]);
+    t.rowd(&["projections".to_string(), res.projections.to_string()]);
+    t.rowd(&["active pairs".to_string(), res.active_pairs.to_string()]);
+    report::emit_table(&t, &format!("itml_{name}"));
+}
+
+fn cmd_svm(args: &Args, seed: u64) {
+    let n = args.get_parsed_or("n", 100_000usize);
+    let d = args.get_parsed_or("d", 100usize);
+    let k = args.get_parsed_or("k", 10.0f64);
+    let c = args.get_parsed_or("c", 1e3);
+    let epochs = args.get_parsed_or("epochs", 5usize);
+    let mut rng = Rng::new(seed);
+    let (all, s) = svm_cloud(2 * n, d, k, &mut rng);
+    let (train, test) = all.split(0.5, &mut rng);
+    println!("svm: n={n} d={d} K={k} noise s={:.1}%", s * 100.0);
+    let model = train_pf_svm(&train, &SvmConfig { c, epochs, seed });
+    let mut t = Table::new("l2-svm (truly stochastic P&F)", &["solver", "seconds", "test acc"]);
+    t.rowd(&[
+        "ours".to_string(),
+        report::fmt_time(model.seconds),
+        format!("{:.1}%", 100.0 * model.accuracy(&test)),
+    ]);
+    if args.flag("with-baselines") {
+        let dual = train_dual_cd(&train, c, 1e-3, 40, seed);
+        t.rowd(&[
+            "liblinear-dual".to_string(),
+            report::fmt_time(dual.seconds),
+            format!("{:.1}%", 100.0 * dual.accuracy(&test)),
+        ]);
+        let primal = train_primal_newton(&train, c, 1e-3, 30);
+        t.rowd(&[
+            "liblinear-primal".to_string(),
+            report::fmt_time(primal.seconds),
+            format!("{:.1}%", 100.0 * primal.accuracy(&test)),
+        ]);
+    }
+    report::emit_table(&t, &format!("svm_n{n}_d{d}"));
+}
+
+fn cmd_oracle(args: &Args, seed: u64) {
+    use paf::graph::apsp::apsp_dijkstra;
+    let n = args.get_parsed_or("n", 200usize);
+    let mut rng = Rng::new(seed);
+    let inst = gen::type1_complete(n, &mut rng);
+    let clock = Stopwatch::new();
+    let apsp = apsp_dijkstra(&inst.graph, &inst.weights, paf::util::pool::default_threads());
+    let apsp_s = clock.elapsed_s();
+    let mut violated = 0usize;
+    for (e, &(a, b)) in inst.graph.edges().iter().enumerate() {
+        if inst.weights[e] > apsp.get(a as usize, b as usize) + 1e-12 {
+            violated += 1;
+        }
+    }
+    println!(
+        "oracle round: n={n} m={} apsp {:.3}s violated edges {violated}",
+        inst.graph.num_edges(),
+        apsp_s
+    );
+}
+
+fn cmd_runtime_info() {
+    match paf::runtime::Runtime::load(paf::runtime::Runtime::default_dir()) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform);
+            let mut names: Vec<_> = rt.artifacts.keys().collect();
+            names.sort();
+            for name in names {
+                let art = &rt.artifacts[name];
+                let shapes: Vec<String> =
+                    art.args.iter().map(|a| format!("{:?}", a.shape)).collect();
+                println!("  {name}: args {}", shapes.join(", "));
+            }
+        }
+        Err(e) => {
+            eprintln!("runtime unavailable: {e}");
+            std::process::exit(1);
+        }
+    }
+}

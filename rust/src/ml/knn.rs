@@ -1,0 +1,102 @@
+//! k-nearest-neighbour classification under a learned Mahalanobis metric
+//! (the evaluation protocol of Table 4, §8.3).
+
+use super::dataset::Dataset;
+use super::mahalanobis::{mahalanobis_sq, Mat};
+
+/// Classify every test row by majority vote among its `k` nearest train
+/// rows under `d_M`; returns test accuracy.
+pub fn knn_accuracy(m: &Mat, train: &Dataset, test: &Dataset, k: usize) -> f64 {
+    assert_eq!(train.d, test.d);
+    let k = k.max(1).min(train.n);
+    let nclasses = train.num_classes().max(test.num_classes());
+    let mut correct = 0usize;
+    let mut diff = Vec::with_capacity(train.d);
+    // (dist, label) heap buffer reused per query.
+    let mut best: Vec<(f64, u32)> = Vec::with_capacity(k + 1);
+    for q in 0..test.n {
+        best.clear();
+        let qrow = test.row(q);
+        for t in 0..train.n {
+            let d2 = mahalanobis_sq(m, qrow, train.row(t), &mut diff);
+            if best.len() < k {
+                best.push((d2, train.y[t]));
+                best.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            } else if d2 < best[k - 1].0 {
+                best[k - 1] = (d2, train.y[t]);
+                let mut i = k - 1;
+                while i > 0 && best[i].0 < best[i - 1].0 {
+                    best.swap(i, i - 1);
+                    i -= 1;
+                }
+            }
+        }
+        let mut votes = vec![0usize; nclasses];
+        for &(_, y) in &best {
+            votes[y as usize] += 1;
+        }
+        let pred = votes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, v)| *v)
+            .map(|(c, _)| c as u32)
+            .unwrap();
+        if pred == test.y[q] {
+            correct += 1;
+        }
+    }
+    correct as f64 / test.n.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::gaussian_mixture;
+    use crate::util::Rng;
+
+    #[test]
+    fn separable_blobs_classified_perfectly() {
+        let mut rng = Rng::new(1);
+        let ds = gaussian_mixture(400, 3, 2, 20.0, &mut rng); // far apart
+        let (tr, te) = ds.split(0.8, &mut rng);
+        let acc = knn_accuracy(&Mat::identity(3), &tr, &te, 5);
+        assert!(acc > 0.98, "accuracy {acc}");
+    }
+
+    #[test]
+    fn random_labels_near_chance() {
+        let mut rng = Rng::new(2);
+        let mut ds = gaussian_mixture(600, 4, 3, 0.0, &mut rng); // all same centre
+        // Shuffle labels to destroy any structure.
+        let perm = rng.permutation(ds.n);
+        ds.y = perm.iter().map(|&i| ds.y[i]).collect();
+        let (tr, te) = ds.split(0.8, &mut rng);
+        let acc = knn_accuracy(&Mat::identity(4), &tr, &te, 5);
+        assert!(acc < 0.55, "accuracy {acc} should be near 1/3");
+    }
+
+    #[test]
+    fn metric_matters() {
+        // Two classes separated only in dim 0, with huge noise in dim 1.
+        // Weighting dim 0 up should raise accuracy.
+        let mut rng = Rng::new(3);
+        let n = 400;
+        let mut x = Vec::with_capacity(n * 2);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let cls = (i % 2) as u32;
+            x.push(if cls == 0 { -1.0 } else { 1.0 } + rng.normal() * 0.3);
+            x.push(rng.normal() * 30.0);
+            y.push(cls);
+        }
+        let ds = Dataset { n, d: 2, x, y };
+        let (tr, te) = ds.split(0.8, &mut rng);
+        let euclid = knn_accuracy(&Mat::identity(2), &tr, &te, 5);
+        let mut m = Mat::identity(2);
+        m.a[0] = 1000.0; // heavily weight the informative dimension
+        m.a[3] = 0.001;
+        let weighted = knn_accuracy(&m, &tr, &te, 5);
+        assert!(weighted > euclid, "{weighted} !> {euclid}");
+        assert!(weighted > 0.9);
+    }
+}

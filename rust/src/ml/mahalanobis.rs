@@ -1,0 +1,150 @@
+//! Dense symmetric-matrix helpers for Mahalanobis metrics (small d).
+//!
+//! ITML learns `M ⪰ 0` and measures `d_M(u, v) = (u−v)ᵀ M (u−v)`; the
+//! rank-one Bregman updates only need matrix-vector products and outer-
+//! product accumulation, both kept allocation-light here.
+
+/// Row-major dense d×d matrix.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub d: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn identity(d: usize) -> Mat {
+        let mut a = vec![0.0; d * d];
+        for i in 0..d {
+            a[i * d + i] = 1.0;
+        }
+        Mat { d, a }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.d + j]
+    }
+
+    /// y = A·v (into a reused buffer).
+    pub fn matvec(&self, v: &[f64], y: &mut [f64]) {
+        let d = self.d;
+        for i in 0..d {
+            let row = &self.a[i * d..(i + 1) * d];
+            y[i] = row.iter().zip(v).map(|(&r, &x)| r * x).sum();
+        }
+    }
+
+    /// A += scale · y yᵀ (symmetric rank-one update).
+    pub fn rank_one_update(&mut self, y: &[f64], scale: f64) {
+        let d = self.d;
+        for i in 0..d {
+            let yi = y[i] * scale;
+            let row = &mut self.a[i * d..(i + 1) * d];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r += yi * y[j];
+            }
+        }
+    }
+
+    /// vᵀ A v.
+    pub fn quad_form(&self, v: &[f64]) -> f64 {
+        let d = self.d;
+        let mut total = 0.0;
+        for i in 0..d {
+            let row = &self.a[i * d..(i + 1) * d];
+            let av: f64 = row.iter().zip(v).map(|(&r, &x)| r * x).sum();
+            total += v[i] * av;
+        }
+        total
+    }
+
+    /// Symmetry defect (diagnostics): max |A_ij − A_ji|.
+    pub fn asymmetry(&self) -> f64 {
+        let d = self.d;
+        let mut worst = 0.0f64;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                worst = worst.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        worst
+    }
+
+    /// Smallest eigenvalue estimate by inverse-power-free Rayleigh
+    /// sampling (cheap PSD smoke test for unit tests; not production).
+    pub fn min_rayleigh_sample(&self, trials: usize, rng: &mut crate::util::Rng) -> f64 {
+        let d = self.d;
+        let mut worst = f64::INFINITY;
+        let mut v = vec![0.0; d];
+        for _ in 0..trials {
+            let mut norm = 0.0;
+            for vi in v.iter_mut() {
+                *vi = rng.normal();
+                norm += *vi * *vi;
+            }
+            let q = self.quad_form(&v) / norm;
+            worst = worst.min(q);
+        }
+        worst
+    }
+}
+
+/// Mahalanobis squared distance `(u−v)ᵀ M (u−v)` with a scratch buffer.
+pub fn mahalanobis_sq(m: &Mat, u: &[f64], v: &[f64], diff: &mut Vec<f64>) -> f64 {
+    diff.clear();
+    diff.extend(u.iter().zip(v).map(|(&a, &b)| a - b));
+    m.quad_form(diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_is_euclidean() {
+        let m = Mat::identity(3);
+        let mut buf = Vec::new();
+        let d2 = mahalanobis_sq(&m, &[1.0, 2.0, 3.0], &[0.0, 0.0, 3.0], &mut buf);
+        assert!((d2 - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_one_update_math() {
+        let mut m = Mat::identity(2);
+        m.rank_one_update(&[1.0, 2.0], 0.5);
+        // M = I + 0.5·[1,2][1,2]^T = [[1.5, 1],[1, 3]]
+        assert_eq!(m.get(0, 0), 1.5);
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.get(1, 0), 1.0);
+        assert_eq!(m.get(1, 1), 3.0);
+        assert_eq!(m.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn matvec_and_quadform_agree() {
+        let mut rng = Rng::new(1);
+        let d = 5;
+        let mut m = Mat::identity(d);
+        for _ in 0..3 {
+            let y: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            m.rank_one_update(&y, 0.3);
+        }
+        let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut mv = vec![0.0; d];
+        m.matvec(&v, &mut mv);
+        let q: f64 = v.iter().zip(&mv).map(|(&a, &b)| a * b).sum();
+        assert!((q - m.quad_form(&v)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn psd_preserved_by_positive_updates() {
+        let mut rng = Rng::new(2);
+        let mut m = Mat::identity(4);
+        for _ in 0..10 {
+            let y: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            m.rank_one_update(&y, rng.uniform(0.0, 1.0));
+        }
+        assert!(m.min_rayleigh_sample(200, &mut rng) > 0.0);
+    }
+}

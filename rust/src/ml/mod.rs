@@ -1,0 +1,7 @@
+//! Small ML substrate for the paper's learning experiments: synthetic
+//! dataset generation (§8.3/§8.4), train/test handling, Mahalanobis
+//! distances and a kNN classifier for the ITML accuracy tables.
+
+pub mod dataset;
+pub mod knn;
+pub mod mahalanobis;

@@ -1,0 +1,381 @@
+//! Weighted correlation clustering (§4.2): LP relaxation via the Veldt
+//! et al. (2019) transform, solved over MET(G) with PROJECT AND FORGET.
+//!
+//! The LP (4.1) `min Σ_e w⁺ x_e + w⁻ (1−x_e)` over the metric polytope
+//! with `x ∈ [0,1]` is replaced by the strictly convex program (4.2)
+//!
+//! `min  w̃ᵀ|x−d| + (1/γ)|x−d|ᵀ W |x−d|   s.t.  x ∈ MET(G)`
+//!
+//! with `w̃(e) = |w⁺(e) − w⁻(e)|`, `W = diag(w̃)`, `d_e = 1` iff
+//! `w⁻ > w⁺`. Inside the `[0,1]` box, `|x_e − d_e|` is linear
+//! (`x_e` when `d_e = 0`, `1 − x_e` when `d_e = 1`), so the objective is a
+//! diagonal quadratic with shifted anchor:
+//!
+//! `f(x) = Σ_e (w̃_e/γ)·(x_e − d̃_e)² + const`, `d̃_e = d_e − γ·s_e/2`,
+//! `s_e = +1` if `d_e = 0` else `−1`.
+//!
+//! The box rows are the paper's never-forgotten additional constraints
+//! `L_a`, delivered by the oracle every iteration. Proposition 3 justifies
+//! relaxing MET(K_n) to MET(G) for sparse instances.
+
+use super::metric_oracle::{MetricOracle, OracleMode};
+use crate::core::bregman::DiagonalQuadratic;
+use crate::core::solver::{Solver, SolverConfig, SolverResult};
+use crate::graph::generators::SignedGraph;
+use crate::graph::Graph;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// A correlation clustering instance: per-edge similarity/dissimilarity
+/// weights on a (not necessarily complete) graph.
+#[derive(Debug, Clone)]
+pub struct CcInstance {
+    pub graph: Graph,
+    pub wplus: Vec<f64>,
+    pub wminus: Vec<f64>,
+}
+
+impl CcInstance {
+    /// From a ±1 signed graph: `w⁺ = 1` on positive edges, `w⁻ = 1` on
+    /// negative ones.
+    pub fn from_signed(sg: &SignedGraph) -> CcInstance {
+        let wplus = sg.signs.iter().map(|&s| if s > 0 { 1.0 } else { 0.0 }).collect();
+        let wminus = sg.signs.iter().map(|&s| if s < 0 { 1.0 } else { 0.0 }).collect();
+        CcInstance { graph: sg.graph.clone(), wplus, wminus }
+    }
+
+    /// Wang et al. (2013)-style densification used by the paper's dense
+    /// experiments: lift an unweighted graph to a *complete* signed
+    /// instance — adjacent pairs are similar (`w⁺=1`), non-adjacent pairs
+    /// dissimilar (`w⁻=1`). (Cluster-editing form; see DESIGN.md.)
+    pub fn densify(g: &Graph) -> CcInstance {
+        let n = g.num_nodes();
+        let complete = Graph::complete(n);
+        let m = complete.num_edges();
+        let mut wplus = vec![0.0; m];
+        let mut wminus = vec![0.0; m];
+        for e in 0..m {
+            let (a, b) = complete.endpoints(e);
+            if g.edge_between(a as usize, b as usize).is_some() {
+                wplus[e] = 1.0;
+            } else {
+                wminus[e] = 1.0;
+            }
+        }
+        CcInstance { graph: complete, wplus, wminus }
+    }
+
+    /// LP objective `Σ_e w⁺ x_e + w⁻ (1 − x_e)` at a fractional point.
+    pub fn lp_objective(&self, x: &[f64]) -> f64 {
+        self.wplus
+            .iter()
+            .zip(&self.wminus)
+            .zip(x)
+            .map(|((&wp, &wm), &xe)| wp * xe + wm * (1.0 - xe))
+            .sum()
+    }
+
+    /// Clustering objective (disagreements) for integer labels.
+    pub fn clustering_objective(&self, labels: &[u32]) -> f64 {
+        self.graph
+            .edges()
+            .iter()
+            .enumerate()
+            .map(|(e, &(a, b))| {
+                let cut = labels[a as usize] != labels[b as usize];
+                if cut {
+                    self.wplus[e]
+                } else {
+                    self.wminus[e]
+                }
+            })
+            .sum()
+    }
+}
+
+/// The Veldt transform products.
+#[derive(Debug, Clone)]
+pub struct VeldtTransform {
+    /// Strictly convex surrogate objective.
+    pub f: DiagonalQuadratic,
+    /// Targets d (0/1 per edge).
+    pub d: Vec<f64>,
+    /// w̃ = |w⁺ − w⁻|.
+    pub wt: Vec<f64>,
+    pub gamma: f64,
+}
+
+/// Build the quadratic surrogate (4.2) for an instance.
+/// Zero-w̃ edges get a tiny weight so `f` stays strictly convex.
+pub fn veldt_transform(inst: &CcInstance, gamma: f64) -> VeldtTransform {
+    const EPS_W: f64 = 1e-6;
+    let m = inst.graph.num_edges();
+    let mut d = vec![0.0; m];
+    let mut wt = vec![0.0; m];
+    let mut anchor = vec![0.0; m];
+    let mut q = vec![0.0; m];
+    for e in 0..m {
+        wt[e] = (inst.wplus[e] - inst.wminus[e]).abs();
+        d[e] = if inst.wminus[e] > inst.wplus[e] { 1.0 } else { 0.0 };
+        let s = if d[e] == 0.0 { 1.0 } else { -1.0 };
+        let w = wt[e].max(EPS_W);
+        // f_e(x) = w̃·s·(x−d) + (w̃/γ)(x−d)² = (w/γ)(x − d̃)² + const
+        anchor[e] = d[e] - gamma * s / 2.0;
+        q[e] = 2.0 * w / gamma;
+    }
+    VeldtTransform { f: DiagonalQuadratic::new(anchor, q), d, wt, gamma }
+}
+
+/// Approximation-ratio certificate from §8.1: with
+/// `R = (f̂ᵀ W f̂)/(2γ · w̃ᵀ f̂)`, `f̂ = |x − d|`, the LP solution is a
+/// `(1+γ)/(1+R)` approximation of the optimal LP value.
+pub fn approx_ratio(t: &VeldtTransform, x: &[f64]) -> f64 {
+    let mut quad = 0.0;
+    let mut lin = 0.0;
+    for e in 0..x.len() {
+        let fe = (x[e] - t.d[e]).abs();
+        quad += t.wt[e] * fe * fe;
+        lin += t.wt[e] * fe;
+    }
+    if lin <= 0.0 {
+        return 1.0;
+    }
+    let r = quad / (2.0 * t.gamma * lin);
+    (1.0 + t.gamma) / (1.0 + r)
+}
+
+/// Solve configuration for correlation clustering.
+#[derive(Debug, Clone)]
+pub struct CcConfig {
+    pub gamma: f64,
+    /// Paper: dense runs use 2 inner sweeps (Algorithm 6), sparse 75
+    /// (Algorithm 7).
+    pub inner_sweeps: usize,
+    pub mode: OracleMode,
+    pub violation_tol: f64,
+    pub max_iters: usize,
+    pub threads: usize,
+    pub record_trace: bool,
+}
+
+impl CcConfig {
+    /// Algorithm 6 settings (dense / complete graphs).
+    pub fn dense() -> CcConfig {
+        CcConfig {
+            gamma: 1.0,
+            inner_sweeps: 2,
+            mode: OracleMode::ProjectOnFind,
+            violation_tol: 1e-2,
+            max_iters: 200,
+            threads: crate::util::pool::default_threads(),
+            record_trace: true,
+        }
+    }
+
+    /// Algorithm 7 settings (large sparse graphs).
+    pub fn sparse() -> CcConfig {
+        CcConfig {
+            gamma: 1.0,
+            inner_sweeps: 75,
+            mode: OracleMode::Collect,
+            violation_tol: 1e-2,
+            max_iters: 300,
+            threads: crate::util::pool::default_threads(),
+            record_trace: true,
+        }
+    }
+}
+
+/// Result of the LP solve plus rounding.
+#[derive(Debug, Clone)]
+pub struct CcResult {
+    pub result: SolverResult,
+    /// LP objective at the fractional solution (a lower bound after full
+    /// convergence).
+    pub lp_objective: f64,
+    /// §8.1 approximation-ratio certificate.
+    pub approx_ratio: f64,
+    /// Rounded clustering and its objective.
+    pub labels: Vec<u32>,
+    pub rounded_objective: f64,
+}
+
+/// Solve the LP relaxation and round.
+pub fn solve_cc(inst: &CcInstance, cfg: &CcConfig, seed: u64) -> CcResult {
+    let t = veldt_transform(inst, cfg.gamma);
+    let mut oracle = MetricOracle::new(Arc::new(inst.graph.clone()), cfg.mode);
+    oracle.upper_bound = Some(1.0);
+    oracle.threads = cfg.threads;
+    oracle.report_tol = (cfg.violation_tol * 1e-3).max(1e-12);
+    let solver_cfg = SolverConfig {
+        max_iters: cfg.max_iters,
+        inner_sweeps: cfg.inner_sweeps,
+        violation_tol: cfg.violation_tol,
+        dual_tol: f64::INFINITY,
+        projection_budget: None,
+        record_trace: cfg.record_trace,
+        z_tol: 0.0,
+    };
+    let mut solver = Solver::new(t.f.clone(), solver_cfg);
+    let result = solver.solve(oracle);
+    let ratio = approx_ratio(&t, &result.x);
+    let lp_objective = inst.lp_objective(&result.x);
+    let labels = round_pivot(inst, &result.x, seed);
+    let rounded_objective = inst.clustering_objective(&labels);
+    CcResult { result, lp_objective, approx_ratio: ratio, labels, rounded_objective }
+}
+
+/// Ailon–Charikar–Newman pivot rounding of a fractional metric `x`
+/// (treating `x_e < 1/2` as "same cluster"). Works on any graph: only
+/// *adjacent* unclustered vertices can join a pivot's cluster, which is
+/// the natural sparse generalisation.
+pub fn round_pivot(inst: &CcInstance, x: &[f64], seed: u64) -> Vec<u32> {
+    let n = inst.graph.num_nodes();
+    let mut rng = Rng::new(seed);
+    let order = rng.permutation(n);
+    let mut labels = vec![u32::MAX; n];
+    let mut next = 0u32;
+    for &pivot in &order {
+        if labels[pivot] != u32::MAX {
+            continue;
+        }
+        labels[pivot] = next;
+        for &(nb, eid) in inst.graph.neighbors(pivot) {
+            if labels[nb as usize] == u32::MAX && x[eid as usize] < 0.5 {
+                labels[nb as usize] = next;
+            }
+        }
+        next += 1;
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, planted_signed, sign_edges};
+    use crate::util::Rng;
+
+    fn planted_instance(n: usize, k: usize, flip: f64, seed: u64) -> (CcInstance, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let g = Graph::complete(n);
+        let (sg, labels) = planted_signed(g, k, flip, &mut rng);
+        (CcInstance::from_signed(&sg), labels)
+    }
+
+    #[test]
+    fn veldt_anchor_math() {
+        let (inst, _) = planted_instance(5, 2, 0.0, 1);
+        let t = veldt_transform(&inst, 1.0);
+        for e in 0..inst.graph.num_edges() {
+            if t.d[e] == 0.0 {
+                assert!((t.f.d[e] + 0.5).abs() < 1e-12); // d̃ = −γ/2
+            } else {
+                assert!((t.f.d[e] - 1.5).abs() < 1e-12); // d̃ = 1 + γ/2
+            }
+            assert!(t.f.w[e] > 0.0);
+        }
+    }
+
+    #[test]
+    fn perfect_planting_recovered() {
+        // Noise-free planted clusters: the LP solution should be integral
+        // (x = 0 within, 1 across) and rounding exact.
+        let (inst, truth) = planted_instance(10, 2, 0.0, 2);
+        let res = solve_cc(&inst, &CcConfig { violation_tol: 1e-6, ..CcConfig::dense() }, 7);
+        assert!(res.result.converged);
+        // The rounded clustering must equal the planted one (up to label
+        // permutation): same-cluster iff same truth label.
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let same_truth = truth[i] == truth[j];
+                let same_ours = res.labels[i] == res.labels[j];
+                assert_eq!(same_truth, same_ours, "pair ({i},{j})");
+            }
+        }
+        // Zero disagreements.
+        assert_eq!(res.rounded_objective, 0.0);
+    }
+
+    #[test]
+    fn x_within_box_and_metric() {
+        let (inst, _) = planted_instance(9, 3, 0.1, 3);
+        let res = solve_cc(&inst, &CcConfig { violation_tol: 1e-5, ..CcConfig::dense() }, 1);
+        assert!(res.result.converged);
+        // Box rows are projected once per round, so residuals are of the
+        // order of the stopping tolerance, not machine precision.
+        for &xe in &res.result.x {
+            assert!((-1e-4..=1.0 + 1e-4).contains(&xe), "x out of box: {xe}");
+        }
+        let viol =
+            crate::problems::metric_oracle::max_metric_violation(&inst.graph, &res.result.x);
+        assert!(viol < 1e-3, "metric violation {viol}");
+    }
+
+    #[test]
+    fn approx_ratio_bounded() {
+        let (inst, _) = planted_instance(8, 2, 0.2, 4);
+        let res = solve_cc(&inst, &CcConfig::dense(), 5);
+        // With γ=1 the certificate is at most 2 and at least 1.
+        assert!(res.approx_ratio >= 1.0 - 1e-9 && res.approx_ratio <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn ratio_certificate_lower_bounds_rounding() {
+        // The surrogate solution x̂ satisfies
+        // lp(x̂) ≤ ratio · lp_opt ≤ ratio · rounded_objective (§8.1), so
+        // lp(x̂)/ratio is a valid lower bound for any integral clustering.
+        let (inst, _) = planted_instance(10, 3, 0.15, 6);
+        let res = solve_cc(&inst, &CcConfig { violation_tol: 1e-6, ..CcConfig::dense() }, 8);
+        assert!(res.result.converged);
+        let lower = res.lp_objective / res.approx_ratio;
+        assert!(
+            lower <= res.rounded_objective + 1e-6,
+            "certified bound {lower} must lower-bound rounding {}",
+            res.rounded_objective
+        );
+    }
+
+    #[test]
+    fn sparse_mode_runs_on_noncomplete_graph() {
+        let mut rng = Rng::new(7);
+        let g = erdos_renyi(30, 0.2, &mut rng);
+        let sg = sign_edges(g, 0.7, &mut rng);
+        let inst = CcInstance::from_signed(&sg);
+        let mut cfg = CcConfig::sparse();
+        cfg.max_iters = 100;
+        let res = solve_cc(&inst, &cfg, 3);
+        assert!(res.result.converged, "sparse CC did not converge");
+        for &xe in &res.result.x {
+            assert!((-1e-6..=1.0 + 1e-6).contains(&xe));
+        }
+    }
+
+    #[test]
+    fn densify_matches_adjacency() {
+        let mut rng = Rng::new(8);
+        let g = erdos_renyi(12, 0.3, &mut rng);
+        let inst = CcInstance::densify(&g);
+        assert_eq!(inst.graph.num_edges(), 66);
+        let pos: f64 = inst.wplus.iter().sum();
+        assert_eq!(pos as usize, g.num_edges());
+        // Objectives: all-singletons pays Σw⁺, all-one-cluster pays Σw⁻.
+        let singletons: Vec<u32> = (0..12).collect();
+        assert_eq!(inst.clustering_objective(&singletons), pos);
+        let one = vec![0u32; 12];
+        let neg: f64 = inst.wminus.iter().sum();
+        assert_eq!(inst.clustering_objective(&one), neg);
+    }
+
+    #[test]
+    fn trace_shows_forget_dynamics() {
+        // Figure 2's shape: constraints found by the oracle shrink over
+        // iterations once the active set stabilises.
+        let (inst, _) = planted_instance(10, 2, 0.2, 9);
+        let res = solve_cc(&inst, &CcConfig { violation_tol: 1e-6, ..CcConfig::dense() }, 2);
+        assert!(res.result.trace.len() >= 2);
+        let first = res.result.trace.first().unwrap();
+        let last = res.result.trace.last().unwrap();
+        assert!(last.max_violation <= first.max_violation);
+    }
+}

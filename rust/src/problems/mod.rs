@@ -1,0 +1,20 @@
+//! The paper's four metric constrained problem instantiations.
+//!
+//! - [`metric_oracle`] — the METRIC VIOLATIONS separation oracle
+//!   (Algorithm 2) in both the project-on-find (Algorithm 8) and
+//!   collect-then-project (Algorithms 6/7) modes.
+//! - [`nearness`] — metric nearness (§4.1, Table 1 / Figures 1 & 4).
+//! - [`correlation`] — weighted correlation clustering via the Veldt
+//!   et al. transform (§4.2, Tables 2 & 3 / Figures 2 & 3).
+//! - [`random_oracle`] — Property-2 uniform triangle sampling (§6.3),
+//!   the stochastic counterpart used by the oracle ablation.
+//! - [`itml`] — information-theoretic metric learning (§4.3, Table 4).
+//! - [`svm`] — L2-SVM training with the truly stochastic variant
+//!   (§4.4, Table 5).
+
+pub mod correlation;
+pub mod itml;
+pub mod metric_oracle;
+pub mod nearness;
+pub mod random_oracle;
+pub mod svm;

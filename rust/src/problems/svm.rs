@@ -1,0 +1,210 @@
+//! L2-SVM training with the truly stochastic PROJECT AND FORGET
+//! (§4.4 / Algorithm 10, Table 5).
+//!
+//! `min ½‖w‖² + (C/2)Σξ_i²  s.t.  y_i⟨w, x_i⟩ ≥ 1 − ξ_i`
+//!
+//! The combined variable is `v = (w, ξ)` with diagonal quadratic
+//! `f(v) = ½‖w‖² + (C/2)‖ξ‖²`; the margin constraint of sample `i` is the
+//! sparse row `−y_i x_i·w − ξ_i ≤ −1`, whose Bregman projection is
+//! closed-form:
+//!
+//! `θ_i = (y_i⟨w, x_i⟩ + ξ_i − 1) / (‖x_i‖² + 1/C)`
+//!
+//! with primal move `w ← w + c·y_i·x_i`, `ξ_i ← ξ_i + c/C` for
+//! `c = min(z_i, θ_i)` (θ < 0 iff the margin is violated). The ξ ≥ 0 rows
+//! are redundant for the L2 penalty and omitted, exactly as Algorithm 10
+//! does. Per iteration the constraint list is forgotten wholesale; only
+//! the duals `z` persist (Theorem 2's setting).
+
+use crate::ml::dataset::Dataset;
+use crate::util::{Rng, Stopwatch};
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct SvmConfig {
+    /// Slack penalty C.
+    pub c: f64,
+    /// Passes over n random samples (Algorithm 10's MaxIters).
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for SvmConfig {
+    fn default() -> Self {
+        SvmConfig { c: 1e3, epochs: 5, seed: 0 }
+    }
+}
+
+/// Trained model + accounting.
+#[derive(Debug, Clone)]
+pub struct SvmModel {
+    pub w: Vec<f64>,
+    /// Slack variables (one per training sample).
+    pub xi: Vec<f64>,
+    /// Persistent duals (support vectors have z > 0).
+    pub z: Vec<f64>,
+    pub projections: usize,
+    pub seconds: f64,
+}
+
+impl SvmModel {
+    /// Decision value ⟨w, x⟩.
+    pub fn decision(&self, x: &[f64]) -> f64 {
+        self.w.iter().zip(x).map(|(&w, &v)| w * v).sum()
+    }
+
+    /// Accuracy on a labelled dataset (labels 0/1).
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..data.n {
+            let pred = self.decision(data.row(i)) >= 0.0;
+            if pred == (data.y[i] == 1) {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.n.max(1) as f64
+    }
+
+    /// Support-vector count (nonzero duals).
+    pub fn num_support(&self) -> usize {
+        self.z.iter().filter(|&&z| z > 0.0).count()
+    }
+}
+
+/// Train with the truly stochastic variant (Algorithm 10): each epoch
+/// samples `n` random data points and projects `v = (w, ξ)` onto their
+/// margin constraints with persistent dual corrections.
+pub fn train_pf_svm(data: &Dataset, cfg: &SvmConfig) -> SvmModel {
+    let clock = Stopwatch::new();
+    let (n, d) = (data.n, data.d);
+    let mut w = vec![0.0f64; d];
+    let mut xi = vec![0.0f64; n];
+    let mut z = vec![0.0f64; n];
+    // Precompute ‖x_i‖² once (the denominators).
+    let norms: Vec<f64> = (0..n)
+        .map(|i| data.row(i).iter().map(|&v| v * v).sum::<f64>())
+        .collect();
+    let inv_c = 1.0 / cfg.c;
+    let mut rng = Rng::new(cfg.seed);
+    let mut projections = 0usize;
+    for _ in 0..cfg.epochs {
+        for _ in 0..n {
+            let i = rng.below(n);
+            let row = data.row(i);
+            let yi = if data.y[i] == 1 { 1.0 } else { -1.0 };
+            let margin: f64 = {
+                let dot: f64 = w.iter().zip(row).map(|(&wv, &xv)| wv * xv).sum();
+                yi * dot + xi[i]
+            };
+            let theta = (margin - 1.0) / (norms[i] + inv_c);
+            let c = z[i].min(theta);
+            if c == 0.0 {
+                continue;
+            }
+            // v ← v + c·W⁻¹·a with a = −(y_i x_i, e_i):
+            // w ← w − c·y_i·x_i, ξ_i ← ξ_i − c/C; dual z_i ← z_i − (−c)… the
+            // sign convention folds to the usual Dykstra update below.
+            for (wv, &xv) in w.iter_mut().zip(row) {
+                *wv -= c * yi * xv;
+            }
+            xi[i] -= c * inv_c;
+            z[i] -= c;
+            projections += 1;
+        }
+    }
+    SvmModel { w, xi, z, projections, seconds: clock.elapsed_s() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::dataset::svm_cloud;
+
+    #[test]
+    fn separable_data_perfectly_classified() {
+        let mut rng = Rng::new(1);
+        // Clean margins: huge K -> negligible label noise.
+        let (train, s) = svm_cloud(2000, 10, 50.0, &mut rng);
+        assert!(s < 0.02);
+        let model = train_pf_svm(&train, &SvmConfig { epochs: 10, ..Default::default() });
+        let acc = model.accuracy(&train);
+        // Train accuracy is capped by the label-noise rate s itself.
+        assert!(acc > 0.96 - s, "train accuracy {acc} (noise {s})");
+    }
+
+    #[test]
+    fn generalizes_to_test_set() {
+        let mut rng = Rng::new(2);
+        let (all, _) = svm_cloud(6000, 20, 10.0, &mut rng);
+        let (train, test) = all.split(0.5, &mut rng);
+        let model = train_pf_svm(&train, &SvmConfig { epochs: 8, seed: 2, ..Default::default() });
+        let acc = model.accuracy(&test);
+        assert!(acc > 0.88, "test accuracy {acc}");
+    }
+
+    #[test]
+    fn duals_nonnegative_and_kkt() {
+        let mut rng = Rng::new(3);
+        let (train, _) = svm_cloud(500, 5, 5.0, &mut rng);
+        let model = train_pf_svm(&train, &SvmConfig { epochs: 20, seed: 3, ..Default::default() });
+        for &zi in &model.z {
+            assert!(zi >= 0.0);
+        }
+        // KKT: w = Σ_i z_i y_i x_i (gradient identity maintained by the
+        // dual corrections); ξ_i = z_i / C.
+        let d = train.d;
+        let mut w_ref = vec![0.0; d];
+        for i in 0..train.n {
+            let yi = if train.y[i] == 1 { 1.0 } else { -1.0 };
+            for (j, &xv) in train.row(i).iter().enumerate() {
+                w_ref[j] += model.z[i] * yi * xv;
+            }
+        }
+        for (a, b) in model.w.iter().zip(&w_ref) {
+            assert!((a - b).abs() < 1e-8, "kkt: {a} vs {b}");
+        }
+        for i in 0..train.n {
+            assert!((model.xi[i] - model.z[i] / 1e3).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn support_is_sparse_on_separable_data() {
+        let mut rng = Rng::new(4);
+        let (train, _) = svm_cloud(2000, 10, 50.0, &mut rng);
+        let model = train_pf_svm(&train, &SvmConfig { epochs: 10, seed: 4, ..Default::default() });
+        // Far-from-margin points never get projected onto.
+        assert!(
+            model.num_support() < train.n / 2,
+            "support {} of {}",
+            model.num_support(),
+            train.n
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(5);
+        let (train, _) = svm_cloud(300, 4, 5.0, &mut rng);
+        let cfg = SvmConfig { epochs: 3, seed: 9, ..Default::default() };
+        let a = train_pf_svm(&train, &cfg);
+        let b = train_pf_svm(&train, &cfg);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.projections, b.projections);
+    }
+
+    #[test]
+    fn noisier_data_lower_accuracy() {
+        // Table 5's qualitative shape: accuracy degrades with s.
+        let mut rng = Rng::new(6);
+        let (clean, s1) = svm_cloud(4000, 20, 10.0, &mut rng);
+        let (noisy, s2) = svm_cloud(4000, 20, 1.3, &mut rng);
+        assert!(s1 < s2);
+        let cfg = SvmConfig { epochs: 6, seed: 6, ..Default::default() };
+        let (ctr, cte) = clean.split(0.5, &mut rng);
+        let (ntr, nte) = noisy.split(0.5, &mut rng);
+        let acc_clean = train_pf_svm(&ctr, &cfg).accuracy(&cte);
+        let acc_noisy = train_pf_svm(&ntr, &cfg).accuracy(&nte);
+        assert!(acc_clean > acc_noisy, "{acc_clean} !> {acc_noisy}");
+    }
+}

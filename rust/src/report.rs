@@ -1,0 +1,49 @@
+//! Report emission helpers shared by `main.rs` and the benches: every
+//! experiment prints the paper-style table/series and persists CSV under
+//! the report directory.
+
+use crate::util::table::{Series, Table};
+
+/// Where reports land (`$PAF_REPORT_DIR`, default `reports/`).
+pub fn report_dir() -> String {
+    std::env::var("PAF_REPORT_DIR").unwrap_or_else(|_| "reports".to_string())
+}
+
+/// Emit a table under the standard directory.
+pub fn emit_table(t: &Table, basename: &str) {
+    t.emit(&report_dir(), basename);
+}
+
+/// Emit a series under the standard directory.
+pub fn emit_series(s: &Series, basename: &str) {
+    s.emit(&report_dir(), basename);
+}
+
+/// Format a seconds value like the paper's tables (3 significant-ish).
+pub fn fmt_time(s: f64) -> String {
+    if s < 10.0 {
+        format!("{s:.2}")
+    } else if s < 100.0 {
+        format!("{s:.1}")
+    } else {
+        format!("{s:.0}")
+    }
+}
+
+/// Format a byte count as GiB with 2 decimals (Table 2's unit).
+pub fn fmt_gib(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / (1u64 << 30) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_time(1.234), "1.23");
+        assert_eq!(fmt_time(45.67), "45.7");
+        assert_eq!(fmt_time(1649.0), "1649");
+        assert_eq!(fmt_gib(1u64 << 30), "1.00");
+    }
+}

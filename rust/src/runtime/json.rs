@@ -1,0 +1,256 @@
+//! Minimal JSON parser (objects/arrays/strings/numbers/bools/null) for
+//! reading `artifacts/manifest.json` — `serde` is unavailable offline.
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing data at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], p: &mut usize) {
+    while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+        *p += 1;
+    }
+}
+
+fn parse_value(b: &[u8], p: &mut usize) -> Result<Json, String> {
+    skip_ws(b, p);
+    match b.get(*p) {
+        None => Err("unexpected end".into()),
+        Some(b'{') => parse_obj(b, p),
+        Some(b'[') => parse_arr(b, p),
+        Some(b'"') => Ok(Json::Str(parse_string(b, p)?)),
+        Some(b't') => parse_lit(b, p, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, p, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(b, p, "null", Json::Null),
+        Some(_) => parse_num(b, p),
+    }
+}
+
+fn parse_lit(b: &[u8], p: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+    if b[*p..].starts_with(word.as_bytes()) {
+        *p += word.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {p:?}"))
+    }
+}
+
+fn parse_num(b: &[u8], p: &mut usize) -> Result<Json, String> {
+    let start = *p;
+    while *p < b.len() && matches!(b[*p], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *p += 1;
+    }
+    std::str::from_utf8(&b[start..*p])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or_else(|| format!("bad number at byte {start}"))
+}
+
+fn parse_string(b: &[u8], p: &mut usize) -> Result<String, String> {
+    if b.get(*p) != Some(&b'"') {
+        return Err(format!("expected string at byte {}", *p));
+    }
+    *p += 1;
+    let mut out = String::new();
+    while *p < b.len() {
+        match b[*p] {
+            b'"' => {
+                *p += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *p += 1;
+                match b.get(*p) {
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'u') => {
+                        let hex = std::str::from_utf8(&b[*p + 1..*p + 5])
+                            .map_err(|_| "bad \\u escape")?;
+                        let code =
+                            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        *p += 4;
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+                *p += 1;
+            }
+            c => {
+                // Copy the full UTF-8 sequence.
+                let s = *p;
+                let len = match c {
+                    0x00..=0x7F => 1,
+                    0xC0..=0xDF => 2,
+                    0xE0..=0xEF => 3,
+                    _ => 4,
+                };
+                out.push_str(
+                    std::str::from_utf8(&b[s..s + len]).map_err(|e| e.to_string())?,
+                );
+                *p += len;
+            }
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn parse_arr(b: &[u8], p: &mut usize) -> Result<Json, String> {
+    *p += 1; // [
+    let mut items = Vec::new();
+    skip_ws(b, p);
+    if b.get(*p) == Some(&b']') {
+        *p += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, p)?);
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b']') => {
+                *p += 1;
+                return Ok(Json::Arr(items));
+            }
+            other => return Err(format!("expected , or ] got {other:?}")),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], p: &mut usize) -> Result<Json, String> {
+    *p += 1; // {
+    let mut map = BTreeMap::new();
+    skip_ws(b, p);
+    if b.get(*p) == Some(&b'}') {
+        *p += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, p);
+        let key = parse_string(b, p)?;
+        skip_ws(b, p);
+        if b.get(*p) != Some(&b':') {
+            return Err(format!("expected : at byte {p:?}"));
+        }
+        *p += 1;
+        let val = parse_value(b, p)?;
+        map.insert(key, val);
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b'}') => {
+                *p += 1;
+                return Ok(Json::Obj(map));
+            }
+            other => return Err(format!("expected , or }} got {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let text = r#"{
+  "artifacts": [
+    {"name": "apsp_n128", "file": "apsp_n128.hlo.txt",
+     "args": [{"shape": [128, 128], "dtype": "float32"}]}
+  ]
+}"#;
+        let j = Json::parse(text).unwrap();
+        let arts = j.get("artifacts").unwrap().as_arr().unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(arts[0].get("name").unwrap().as_str(), Some("apsp_n128"));
+        let shape = arts[0].get("args").unwrap().as_arr().unwrap()[0]
+            .get("shape")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(shape[0].as_usize(), Some(128));
+    }
+
+    #[test]
+    fn scalars_and_escapes() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(
+            Json::parse(r#""a\n\"b\" A""#).unwrap(),
+            Json::Str("a\n\"b\" A".into())
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1, 2,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn nested_structures() {
+        let j = Json::parse(r#"{"a": [1, {"b": [true, null]}], "c": "x"}"#).unwrap();
+        let a = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].as_usize(), Some(1));
+        let inner = a[1].get("b").unwrap().as_arr().unwrap();
+        assert_eq!(inner[0], Json::Bool(true));
+        assert_eq!(inner[1], Json::Null);
+    }
+}

@@ -1,0 +1,145 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Benches in `benches/` are plain binaries (`harness = false`) built on
+//! this module: warmup, repeated timed runs, mean/stddev/min reporting, and
+//! a shared `BenchCtx` that honours `PAF_BENCH_*` env vars so the full
+//! suite can be scaled down for CI.
+
+use super::timer::fmt_secs;
+use std::time::Instant;
+
+/// Summary statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchStats {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        (self.samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>10}  ±{:>10}  min {:>10}  ({} runs)",
+            self.name,
+            fmt_secs(self.mean()),
+            fmt_secs(self.stddev()),
+            fmt_secs(self.min()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Shared bench configuration (scaled via env for CI).
+#[derive(Debug, Clone)]
+pub struct BenchCtx {
+    /// Repetitions per case (PAF_BENCH_RUNS, default 3).
+    pub runs: usize,
+    /// Warmup repetitions (PAF_BENCH_WARMUP, default 1).
+    pub warmup: usize,
+    /// Global scale knob in (0,1]; benches multiply instance sizes by it
+    /// (PAF_BENCH_SCALE, default 1.0).
+    pub scale: f64,
+    /// Output directory for CSV artifacts (PAF_REPORT_DIR, default reports/).
+    pub report_dir: String,
+}
+
+impl Default for BenchCtx {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl BenchCtx {
+    pub fn from_env() -> BenchCtx {
+        let parse = |k: &str, d: f64| {
+            std::env::var(k).ok().and_then(|v| v.parse::<f64>().ok()).unwrap_or(d)
+        };
+        BenchCtx {
+            runs: parse("PAF_BENCH_RUNS", 3.0) as usize,
+            warmup: parse("PAF_BENCH_WARMUP", 1.0) as usize,
+            scale: parse("PAF_BENCH_SCALE", 1.0).clamp(1e-3, 1.0),
+            report_dir: std::env::var("PAF_REPORT_DIR").unwrap_or_else(|_| "reports".into()),
+        }
+    }
+
+    /// Scale an instance size down by the global knob (min 4).
+    pub fn scaled(&self, n: usize) -> usize {
+        ((n as f64 * self.scale) as usize).max(4)
+    }
+
+    /// Time `f` with warmup; returns stats. `f` receives the run index and
+    /// returns an opaque value kept alive to defeat dead-code elimination.
+    pub fn bench<T, F: FnMut(usize) -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        for w in 0..self.warmup {
+            std::hint::black_box(f(w));
+        }
+        let mut samples = Vec::with_capacity(self.runs);
+        for r in 0..self.runs.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f(r));
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = BenchStats { name: name.to_string(), samples };
+        println!("{}", stats.report());
+        stats
+    }
+
+    /// Time `f` once (for long-running end-to-end cases where repetition is
+    /// too expensive); still prints in the common format.
+    pub fn bench_once<T, F: FnOnce() -> T>(&self, name: &str, f: F) -> (f64, T) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let stats = BenchStats { name: name.to_string(), samples: vec![dt] };
+        println!("{}", stats.report());
+        (dt, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = BenchStats { name: "t".into(), samples: vec![1.0, 2.0, 3.0] };
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert!((s.stddev() - 1.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn bench_runs_counted() {
+        let ctx = BenchCtx { runs: 5, warmup: 2, scale: 1.0, report_dir: "/tmp".into() };
+        let mut calls = 0;
+        let stats = ctx.bench("count", |_| {
+            calls += 1;
+        });
+        assert_eq!(stats.samples.len(), 5);
+        assert_eq!(calls, 7); // warmup + runs
+    }
+
+    #[test]
+    fn scaled_floors_at_4() {
+        let ctx = BenchCtx { runs: 1, warmup: 0, scale: 0.001, report_dir: ".".into() };
+        assert_eq!(ctx.scaled(100), 4);
+        let full = BenchCtx { scale: 1.0, ..ctx };
+        assert_eq!(full.scaled(100), 100);
+    }
+}

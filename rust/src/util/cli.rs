@@ -1,0 +1,205 @@
+//! Minimal CLI argument parser (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands. Typed getters parse on demand and report readable
+//! errors.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, flags/options and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token, if treated as a subcommand by the caller.
+    pub command: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token is NOT argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut a = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.opts.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else if a.command.is_none() && a.positional.is_empty() {
+                a.command = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// Parse the process's actual arguments.
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Was `--name` passed as a bare flag (or as `--name true`)?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .opts
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a readable message on a
+    /// malformed value (CLI boundary, so panicking is the right behaviour).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(raw) => raw
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name}={raw}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--sizes 100,200,300`.
+    pub fn get_list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|e| panic!("--{name} item {s:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Layer a config file underneath the CLI: every top-level config key
+    /// that was NOT given as a flag becomes an option value, so
+    /// `--config run.toml` supplies defaults and explicit flags override.
+    pub fn apply_config_defaults(&mut self, cfg: &crate::util::config::Config) {
+        // Also honour the subcommand's section: `[nearness] n = 300`
+        // applies when the subcommand is `nearness`.
+        let mut layer = |key: &str, value: &str| {
+            if !self.opts.contains_key(key) && !self.flags.iter().any(|f| f == key) {
+                self.opts.insert(key.to_string(), value.to_string());
+            }
+        };
+        if let Some(cmd) = self.command.clone() {
+            for (k, v) in cfg.section(&cmd) {
+                layer(&k[cmd.len() + 1..], v);
+            }
+        }
+        for (k, v) in cfg.top_level() {
+            layer(k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--flag` greedily consumes a following non-flag token
+        // as its value, so positionals go before flags or flags use `=`.
+        let a = parse("nearness input.txt --n 500 --seed=7 --verbose");
+        assert_eq!(a.command.as_deref(), Some("nearness"));
+        assert_eq!(a.get_parsed_or("n", 0usize), 500);
+        assert_eq!(a.get_parsed_or("seed", 0u64), 7);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["input.txt".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("cc");
+        assert_eq!(a.get_parsed_or("gamma", 1.0f64), 1.0);
+        assert!(!a.flag("dense"));
+        assert_eq!(a.get_or("out", "reports"), "reports");
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("bench --sizes 100,200,300");
+        assert_eq!(a.get_list_or::<usize>("sizes", &[]), vec![100, 200, 300]);
+        let b = parse("bench");
+        assert_eq!(b.get_list_or("sizes", &[50usize]), vec![50]);
+    }
+
+    #[test]
+    fn flag_with_explicit_true() {
+        let a = parse("run --fast true");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn config_defaults_layer_under_flags() {
+        use crate::util::config::Config;
+        let cfg = Config::parse("seed = 9
+tol = 0.5
+[nearness]
+n = 300
+mode = collect
+").unwrap();
+        let mut a = parse("nearness --tol 0.1");
+        a.apply_config_defaults(&cfg);
+        // CLI flag wins over config.
+        assert_eq!(a.get_parsed_or("tol", 0.0), 0.1);
+        // Top-level config key becomes a default.
+        assert_eq!(a.get_parsed_or("seed", 0u64), 9);
+        // Subcommand section applies.
+        assert_eq!(a.get_parsed_or("n", 0usize), 300);
+        assert_eq!(a.get_or("mode", ""), "collect");
+    }
+
+    #[test]
+    fn config_sections_for_other_commands_ignored() {
+        use crate::util::config::Config;
+        let cfg = Config::parse("[svm]
+epochs = 9
+").unwrap();
+        let mut a = parse("nearness");
+        a.apply_config_defaults(&cfg);
+        assert_eq!(a.get("epochs"), None);
+    }
+}

@@ -1,0 +1,182 @@
+//! `key = value` configuration files with `[section]` headers.
+//!
+//! A TOML subset sufficient for solver/run configuration: strings, bools,
+//! integers, floats and comma lists; `#` comments; later keys override
+//! earlier ones; CLI `--key value` pairs can be layered on top so every
+//! config knob is also a flag.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Flat, section-qualified configuration map (`section.key` -> raw string).
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+/// Error type for config parsing/lookup.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error reading config: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {0}: expected `key = value`, got {1:?}")]
+    Malformed(usize, String),
+    #[error("key {0:?}: cannot parse {1:?} as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+impl Config {
+    /// Parse from a string.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(i) => &raw[..i],
+                None => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Malformed(lineno + 1, line.to_string()))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            cfg.values.insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Config, ConfigError> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Set/override a key programmatically (used to layer CLI args).
+    pub fn set(&mut self, key: &str, value: impl fmt::Display) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Typed lookup, erroring on malformed values.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, ConfigError> {
+        let raw = self
+            .get(key)
+            .ok_or_else(|| ConfigError::BadValue(key.into(), "<missing>".into(), "required"))?;
+        raw.parse().map_err(|_| {
+            ConfigError::BadValue(key.into(), raw.into(), std::any::type_name::<T>())
+        })
+    }
+
+    /// All keys under a section prefix.
+    pub fn section(&self, prefix: &str) -> impl Iterator<Item = (&str, &str)> {
+        let want = format!("{prefix}.");
+        self.values
+            .iter()
+            .filter(move |(k, _)| k.starts_with(&want))
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// All top-level (unsectioned) keys.
+    pub fn top_level(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.values
+            .iter()
+            .filter(|(k, _)| !k.contains('.'))
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Number of keys (for tests/inspection).
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# solver configuration
+max_iters = 200          # top-level key
+
+[solver]
+tolerance = 0.01
+forget = true
+name = "project-and-forget"
+
+[oracle]
+threads = 4
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_or("max_iters", 0usize), 200);
+        assert_eq!(c.get_or("solver.tolerance", 0.0f64), 0.01);
+        assert!(c.get_or("solver.forget", false));
+        assert_eq!(c.get("solver.name"), Some("project-and-forget"));
+        assert_eq!(c.get_or("oracle.threads", 1usize), 4);
+    }
+
+    #[test]
+    fn missing_keys_default() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_or("nope", 7i32), 7);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        assert!(matches!(
+            Config::parse("just a line"),
+            Err(ConfigError::Malformed(1, _))
+        ));
+    }
+
+    #[test]
+    fn override_layering() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("solver.tolerance", 1e-6);
+        assert_eq!(c.get_or("solver.tolerance", 0.0), 1e-6);
+    }
+
+    #[test]
+    fn require_reports_bad_values() {
+        let c = Config::parse("x = notanumber").unwrap();
+        assert!(c.require::<f64>("x").is_err());
+        assert!(c.require::<f64>("absent").is_err());
+        assert_eq!(c.require::<String>("x").unwrap(), "notanumber");
+    }
+
+    #[test]
+    fn section_iteration() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys: Vec<_> = c.section("solver").map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["solver.forget", "solver.name", "solver.tolerance"]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Self-contained utility substrate.
+//!
+//! This crate builds fully offline, so the usual ecosystem crates (`rand`,
+//! `clap`, `serde`, `rayon`, `criterion`) are replaced by small, focused
+//! implementations: a counter-based PRNG with normal/uniform samplers, a
+//! CLI argument parser, a `key = value` config format, a scoped thread
+//! pool, wall-clock instrumentation, table/CSV emitters, and a micro-bench
+//! harness used by `benches/`.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod pool;
+pub mod rng;
+pub mod table;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,113 @@
+//! Scoped data-parallel helpers over `std::thread` (offline stand-in for
+//! `rayon`).
+//!
+//! The paper parallelises the separation oracle (per-source Dijkstra runs)
+//! across cores; `parallel_map_chunks` is that primitive. On a single-core
+//! box the helpers degrade to the serial path with zero thread overhead.
+
+/// Number of worker threads to use by default (respects `PAF_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PAF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every index in `0..n`, writing results into a `Vec`.
+/// `f` must be `Sync` (read-only captured state).
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out = vec![T::default(); n];
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, slot) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk;
+                for (i, s) in slot.iter_mut().enumerate() {
+                    *s = f(base + i);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Run `f` over contiguous index ranges, one per worker, each producing a
+/// partial result; returns the partials in order. Useful when each worker
+/// wants to batch its own output (e.g. lists of violated constraints).
+pub fn parallel_map_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = n.div_ceil(threads);
+    let mut ranges = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        ranges.push(start..end);
+        start = end;
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                let f = &f;
+                scope.spawn(move || f(r))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial() {
+        let serial: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(parallel_map(1000, threads, |i| i * i), serial);
+        }
+    }
+
+    #[test]
+    fn map_chunks_cover_everything() {
+        for threads in [1, 3, 8] {
+            let partials = parallel_map_chunks(100, threads, |r| r.collect::<Vec<_>>());
+            let flat: Vec<usize> = partials.into_iter().flatten().collect();
+            assert_eq!(flat, (0..100).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        let parts = parallel_map_chunks(0, 4, |r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn threads_capped_by_n() {
+        // More threads than items must not panic or duplicate work.
+        let out = parallel_map(3, 64, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Aligned-text + CSV table emitters for reproducing the paper's tables.
+//!
+//! Every bench target builds a `Table`, prints it (the "same rows the paper
+//! reports") and writes a CSV under `reports/` for EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: row from displayable items.
+    pub fn rowd<D: std::fmt::Display>(&mut self, cells: &[D]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    /// Render as aligned text.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for i in 0..ncol {
+                let _ = write!(s, "{:<w$}", cells[i], w = widths[i] + 2);
+            }
+            s.trim_end().to_string()
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().map(|w| w + 2).sum();
+        let _ = writeln!(out, "{}", "-".repeat(total.saturating_sub(2)));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// CSV encoding (quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Print to stdout and persist CSV under the given directory.
+    pub fn emit(&self, dir: &str, basename: &str) {
+        println!("{}", self.render());
+        let dirp = Path::new(dir);
+        if std::fs::create_dir_all(dirp).is_ok() {
+            let path = dirp.join(format!("{basename}.csv"));
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warning: failed writing {}: {e}", path.display());
+            } else {
+                println!("[saved {}]", path.display());
+            }
+        }
+    }
+}
+
+/// A named (x, series...) line plot, emitted as CSV for the paper's figures.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub title: String,
+    pub x_name: String,
+    pub series_names: Vec<String>,
+    pub points: Vec<(f64, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_name: &str, series_names: &[&str]) -> Series {
+        Series {
+            title: title.to_string(),
+            x_name: x_name.to_string(),
+            series_names: series_names.iter().map(|s| s.to_string()).collect(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, ys: &[f64]) {
+        assert_eq!(ys.len(), self.series_names.len());
+        self.points.push((x, ys.to_vec()));
+    }
+
+    /// Render as a table (the "series the paper reports").
+    pub fn to_table(&self) -> Table {
+        let mut headers = vec![self.x_name.as_str()];
+        headers.extend(self.series_names.iter().map(|s| s.as_str()));
+        let mut t = Table::new(&self.title, &headers);
+        for (x, ys) in &self.points {
+            let mut row = vec![format!("{x}")];
+            row.extend(ys.iter().map(|y| format!("{y:.6}")));
+            t.row(&row);
+        }
+        t
+    }
+
+    pub fn emit(&self, dir: &str, basename: &str) {
+        self.to_table().emit(dir, basename);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_csv() {
+        let mut t = Table::new("demo", &["algo", "n", "time"]);
+        t.rowd(&["ours", "100", "1.5"]);
+        t.rowd(&["baseline", "100", "3.0"]);
+        let text = t.render();
+        assert!(text.contains("demo"));
+        assert!(text.contains("baseline"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("algo,n,time"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("q", &["a"]);
+        t.rowd(&["x,y"]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("bad", &["a", "b"]);
+        t.rowd(&["only-one"]);
+    }
+
+    #[test]
+    fn series_to_table() {
+        let mut s = Series::new("fig", "iter", &["violation"]);
+        s.push(1.0, &[0.5]);
+        s.push(2.0, &[0.25]);
+        let t = s.to_table();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.headers, vec!["iter", "violation"]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Integration tests for the PJRT runtime path: AOT artifacts vs native
+//! rust implementations. Requires `make artifacts` (the Makefile's
+//! `test` target guarantees the ordering).
+
+use paf::coordinator::batch_project::{batched_sweep, BatchShape};
+use paf::coordinator::pjrt_oracle::PjrtMetricOracle;
+use paf::core::active_set::ActiveSet;
+use paf::core::bregman::DiagonalQuadratic;
+use paf::core::constraint::Constraint;
+use paf::core::solver::{Solver, SolverConfig};
+use paf::graph::apsp::{apsp_dense, DistMatrix};
+use paf::graph::generators::type1_complete;
+use paf::graph::Graph;
+use paf::problems::metric_oracle::{max_metric_violation, MetricOracle, OracleMode};
+use paf::runtime::Runtime;
+use paf::util::Rng;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Runtime::default_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping runtime tests (no artifacts?): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_loads_all_variants() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.artifacts.len() >= 6, "expected ≥6 artifacts, got {}", rt.artifacts.len());
+    for name in [
+        "minplus_step_n128",
+        "apsp_n128",
+        "apsp_n256",
+        "project_b256_k8",
+        "project_b1024_k16",
+    ] {
+        assert!(rt.get(name).is_ok(), "missing {name}");
+    }
+    assert!(!rt.platform.is_empty());
+}
+
+#[test]
+fn pjrt_apsp_matches_native_floyd_warshall() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    let n = 100; // padded to 128
+    let g = paf::graph::generators::erdos_renyi(n, 0.15, &mut rng);
+    let w: Vec<f64> = (0..g.num_edges()).map(|_| rng.uniform(0.1, 4.0)).collect();
+    // Native.
+    let native = apsp_dense(&g, &w);
+    // PJRT on the padded matrix.
+    let p = rt.apsp_size_for(n).unwrap();
+    assert_eq!(p, 128);
+    let mut dist = vec![f32::INFINITY; p * p];
+    for i in 0..n {
+        dist[i * p + i] = 0.0;
+    }
+    for (e, &(a, b)) in g.edges().iter().enumerate() {
+        let (a, b) = (a as usize, b as usize);
+        dist[a * p + b] = w[e] as f32;
+        dist[b * p + a] = w[e] as f32;
+    }
+    rt.apsp_padded(&mut dist, p).unwrap();
+    for i in 0..n {
+        for j in 0..n {
+            let nat = native.get(i, j);
+            let pj = dist[i * p + j] as f64;
+            if nat.is_finite() {
+                assert!(
+                    (nat - pj).abs() < 1e-3 * (1.0 + nat),
+                    "({i},{j}): native {nat} vs pjrt {pj}"
+                );
+            } else {
+                assert!(pj.is_infinite());
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_minplus_step_matches_native_square() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(8);
+    let n = 128;
+    let g = paf::graph::generators::erdos_renyi(n, 0.05, &mut rng);
+    let w: Vec<f64> = (0..g.num_edges()).map(|_| rng.uniform(0.5, 2.0)).collect();
+    let m0 = DistMatrix::from_graph(&g, &w);
+    let native = paf::graph::apsp::minplus_square(&m0);
+    let art = rt.get("minplus_step_n128").unwrap();
+    let dist: Vec<f32> = m0.d.iter().map(|&v| v as f32).collect();
+    let out = art.run_f32(&[&dist]).unwrap();
+    for (i, (&nat, &pj)) in native.d.iter().zip(&out[0]).enumerate() {
+        if nat.is_finite() {
+            assert!((nat - pj as f64).abs() < 1e-3 * (1.0 + nat), "idx {i}");
+        } else {
+            assert!(pj.is_infinite(), "idx {i}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_projection_sweep_matches_sequential_on_disjoint_batch() {
+    let Some(rt) = runtime() else { return };
+    // Build disjoint-support constraints over 4·256 edges.
+    let mut rng = Rng::new(9);
+    let m = 2048;
+    let d: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 3.0)).collect();
+    let f = DiagonalQuadratic::unweighted(d.clone());
+    let mut active = ActiveSet::new();
+    for c in 0..256usize {
+        let base = (c * 8) as u32;
+        let cons = Constraint::cycle(base, &[base + 1, base + 2, base + 3]);
+        let slot = active.insert(&cons);
+        active.set_z(slot, rng.uniform(0.0, 0.5));
+    }
+    // Sequential reference via the Solver's project_row.
+    let mut solver = Solver::new(f.clone(), SolverConfig::default());
+    solver.x = d.clone();
+    solver.active = active.clone();
+    for r in 0..solver.active.len() {
+        solver.project_row(r);
+    }
+    // Batched PJRT sweep.
+    let mut x = d.clone();
+    let w_inv = vec![1.0; m];
+    let stats = batched_sweep(
+        &rt,
+        BatchShape { b: 256, k: 8 },
+        &mut active,
+        &mut x,
+        &w_inv,
+    )
+    .unwrap();
+    assert_eq!(stats.projected, 256);
+    assert_eq!(stats.calls, 1);
+    for (i, (&seq, &bat)) in solver.x.iter().zip(&x).enumerate() {
+        assert!((seq - bat).abs() < 1e-4, "x[{i}]: {seq} vs {bat}");
+    }
+    for r in 0..active.len() {
+        assert!((active.z(r) - solver.active.z(r)).abs() < 1e-4, "z[{r}]");
+    }
+}
+
+#[test]
+fn pjrt_batcher_handles_overlaps_by_splitting() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(10);
+    let m = 64;
+    let d: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 2.0)).collect();
+    let mut active = ActiveSet::new();
+    // Chain of overlapping constraints: each shares an edge with the next.
+    for e in 0..30u32 {
+        let slot = active.insert(&Constraint::cycle(e, &[e + 1, e + 2]));
+        active.set_z(slot, 0.1);
+    }
+    let mut x = d.clone();
+    let w_inv = vec![1.0; m];
+    let stats =
+        batched_sweep(&rt, BatchShape { b: 256, k: 8 }, &mut active, &mut x, &w_inv).unwrap();
+    // Everything gets projected, across >1 artifact call.
+    assert_eq!(stats.projected, 30);
+    assert!(stats.calls >= 2, "expected split batches, got {}", stats.calls);
+}
+
+#[test]
+fn pjrt_oracle_drives_nearness_to_metric() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(11);
+    let inst = type1_complete(40, &mut rng); // fits apsp_n128
+    let f = DiagonalQuadratic::unweighted(inst.weights.clone());
+    let oracle = PjrtMetricOracle::new(Arc::new(inst.graph.clone()), rt.clone()).unwrap();
+    // The certificate-based oracle has a slower tail than the on-find
+    // scan (it extracts one witness per violated edge per round), so it
+    // runs with more inner sweeps.
+    let cfg = SolverConfig {
+        max_iters: 400,
+        inner_sweeps: 4,
+        violation_tol: 1e-4,
+        dual_tol: f64::INFINITY,
+        ..Default::default()
+    };
+    let mut solver = Solver::new(f, cfg);
+    let res = solver.solve(oracle);
+    assert!(res.converged, "pjrt-oracle solve did not converge");
+    assert!(max_metric_violation(&inst.graph, &res.x) < 1e-3);
+}
+
+#[test]
+fn pjrt_oracle_agrees_with_native_oracle() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(12);
+    let inst = type1_complete(20, &mut rng);
+    let cfg = SolverConfig {
+        max_iters: 600,
+        inner_sweeps: 4,
+        violation_tol: 1e-6,
+        dual_tol: f64::INFINITY,
+        ..Default::default()
+    };
+    // Native.
+    let fa = DiagonalQuadratic::unweighted(inst.weights.clone());
+    let mut sa = Solver::new(fa, cfg.clone());
+    let ra = sa.solve(MetricOracle::new(Arc::new(inst.graph.clone()), OracleMode::ProjectOnFind));
+    // PJRT.
+    let fb = DiagonalQuadratic::unweighted(inst.weights.clone());
+    let mut sb = Solver::new(fb, cfg);
+    let rb = sb.solve(PjrtMetricOracle::new(Arc::new(inst.graph.clone()), rt.clone()).unwrap());
+    assert!(ra.converged && rb.converged);
+    for (a, b) in ra.x.iter().zip(&rb.x) {
+        assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn graph_struct_reexports_work() {
+    // Guard: the public API surface used by examples stays intact.
+    let g = Graph::complete(5);
+    assert_eq!(g.num_edges(), 10);
+}
