@@ -3,7 +3,9 @@
 //!
 //! Paths measured:
 //!   P1  separation-oracle round (Dijkstra scan + witness extraction)
-//!   P2  projection sweep throughput (projections/second)
+//!   P2  projection sweep throughput (projections/second), with a
+//!       sweep-strategy axis: sequential Gauss–Seidel vs the sharded
+//!       parallel executor at 2 and 4 threads
 //!   P3  full metric nearness solve (n = 260, type 1)
 //!   P4  full dense CC solve (K_120 planted)
 //!   P5  active-set merge/forget churn (insert + forget cycles)
@@ -11,6 +13,7 @@
 
 use paf::core::bregman::DiagonalQuadratic;
 use paf::core::constraint::Constraint;
+use paf::core::engine::SweepStrategy;
 use paf::core::solver::{Solver, SolverConfig};
 use paf::graph::apsp::{floyd_warshall_blocked, DistMatrix};
 use paf::graph::generators::{planted_signed, type1_complete};
@@ -37,12 +40,14 @@ fn main() {
         });
     }
 
-    // P2: sweep throughput over a synthetic active set.
+    // P2: sweep throughput over a synthetic active set, across sweep
+    // strategies (the tentpole's sequential-vs-sharded axis; duals are
+    // re-seeded per run so every strategy does identical work).
     {
         let mut rng = Rng::new(52);
         let m = 40_000;
         let d: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 2.0)).collect();
-        let f = DiagonalQuadratic::unweighted(d);
+        let f = DiagonalQuadratic::unweighted(d.clone());
         let mut s = Solver::new(f, SolverConfig { record_trace: false, ..Default::default() });
         for _ in 0..20_000 {
             let e = rng.below(m) as u32;
@@ -54,11 +59,27 @@ fn main() {
             }
         }
         let rows = s.active.len();
-        let stats = ctx.bench("P2/sweep-20k-rows", |_| s.project_sweep());
-        println!(
-            "    -> {:.2} M row-visits/s over {rows} rows",
-            rows as f64 / stats.min() / 1e6
-        );
+        let seed_z: Vec<f64> = (0..rows).map(|r| s.active.z(r)).collect();
+        for (label, strategy) in [
+            ("sequential", SweepStrategy::Sequential),
+            ("sharded-t2", SweepStrategy::ShardedParallel { threads: 2 }),
+            ("sharded-t4", SweepStrategy::ShardedParallel { threads: 4 }),
+        ] {
+            s.set_sweep_strategy(strategy);
+            let stats = ctx.bench(&format!("P2/sweep-20k-rows/{label}"), |_| {
+                // Reset the iterate and duals so each run sweeps the
+                // same state (and the strategies are comparable).
+                s.x.copy_from_slice(&d);
+                for (r, &z) in seed_z.iter().enumerate() {
+                    s.active.set_z(r, z);
+                }
+                s.project_sweep()
+            });
+            println!(
+                "    -> {:.2} M row-visits/s over {rows} rows ({label})",
+                rows as f64 / stats.min() / 1e6
+            );
+        }
     }
 
     // P3: full nearness solve.

@@ -1,18 +1,25 @@
-//! Batched parallel projection through the `project_b*_k*` artifacts.
+//! Batched parallel projection through the `project_b*_k*` artifacts —
+//! a [`SweepExecutor`] over the same shard plans as the native engine.
 //!
-//! Takes a slice of remembered constraints, gathers their supports into
-//! the padded `[B, K]` layout, executes one AOT sweep (θ computation,
-//! dual clamping, per-slot corrections) and scatter-adds the corrections
-//! back into `x`.
+//! [`PjrtSweep`] is the PJRT twin of `core::engine::ShardedSweep`: the
+//! shared planner (`core::engine::shards`) partitions the remembered rows
+//! into support-disjoint shards capped at the artifact's `[B, K]` shape;
+//! each shard is gathered into the padded layout, executed as one AOT
+//! sweep (θ computation, dual clamping, per-slot corrections), and the
+//! corrections scatter-added back into `x`.
 //!
-//! Exactness caveat (documented in DESIGN.md): constraints within one
-//! batch are projected against the *same* snapshot of `x` — the Ruggles
-//! et al. parallel scheme — which coincides with the sequential Bregman
-//! sweep exactly when supports within the batch are edge-disjoint. The
-//! packer therefore greedily builds disjoint batches; leftovers wait for
-//! the next sweep.
+//! Exactness (documented in DESIGN.md): constraints within one shard are
+//! projected against the *same* snapshot of `x` — the Ruggles et al.
+//! parallel scheme — which coincides with the sequential Bregman sweep
+//! exactly because supports within a shard are disjoint. Rows whose
+//! support exceeds `K` are skipped (the caller's native sweep covers
+//! them); conflict-chain tails past the planner's pass cap are projected
+//! natively, one row at a time.
 
 use crate::core::active_set::ActiveSet;
+use crate::core::bregman::DiagonalQuadratic;
+use crate::core::engine::shards::{ShardLimits, ShardPlan};
+use crate::core::engine::{SweepExecutor, SweepStats};
 use crate::runtime::Runtime;
 
 /// Shape of the projection artifact to use.
@@ -25,9 +32,10 @@ pub struct BatchShape {
 /// Result of one batched sweep.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatchStats {
-    /// Constraints projected (placed into some batch).
+    /// Constraints projected (placed into some shard, or handled by the
+    /// native tail path).
     pub projected: usize,
-    /// Constraints skipped (support too long or conflicting).
+    /// Constraints skipped (support longer than `K`).
     pub skipped: usize,
     /// Artifact invocations.
     pub calls: usize,
@@ -35,9 +43,149 @@ pub struct BatchStats {
     pub dual_movement: f64,
 }
 
-/// Run one parallel projection pass over `active` rows `0..len`, with
-/// edge-disjoint batches of shape `shape`, updating `x` and the duals.
-/// `w_inv[e] = 1/W_e` for the diagonal quadratic geometry.
+/// The PJRT-batched sweep executor (diagonal-quadratic geometry only:
+/// the artifacts hard-code the `x += c·a/W` update rule).
+pub struct PjrtSweep<'rt> {
+    runtime: &'rt Runtime,
+    shape: BatchShape,
+    plan: ShardPlan,
+    /// Artifact calls made by the most recent sweep.
+    pub calls: usize,
+    /// Rows skipped as oversized by the most recent sweep.
+    pub skipped: usize,
+    /// First runtime error of the most recent sweep (the trait's sweep
+    /// signature is infallible; callers check this afterwards).
+    pub error: Option<anyhow::Error>,
+    // Reused padded gather buffers.
+    xg: Vec<f32>,
+    sg: Vec<f32>,
+    wg: Vec<f32>,
+    zg: Vec<f32>,
+    rhs: Vec<f32>,
+}
+
+impl<'rt> PjrtSweep<'rt> {
+    pub fn new(runtime: &'rt Runtime, shape: BatchShape) -> PjrtSweep<'rt> {
+        let (b, k) = (shape.b, shape.k);
+        PjrtSweep {
+            runtime,
+            shape,
+            plan: ShardPlan::new(),
+            calls: 0,
+            skipped: 0,
+            error: None,
+            xg: vec![0.0; b * k],
+            sg: vec![0.0; b * k],
+            wg: vec![1.0; b * k],
+            zg: vec![0.0; b],
+            rhs: vec![0.0; b],
+        }
+    }
+
+    /// Gather one shard, run the artifact, scatter the corrections back
+    /// into `x`/`active` and account them in `stats`.
+    fn run_shard(
+        &mut self,
+        rows: &[u32],
+        f: &DiagonalQuadratic,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        stats: &mut SweepStats,
+    ) -> anyhow::Result<()> {
+        let (bcap, kcap) = (self.shape.b, self.shape.k);
+        debug_assert!(rows.len() <= bcap);
+        self.xg.fill(0.0);
+        self.sg.fill(0.0);
+        self.wg.fill(1.0);
+        self.zg.fill(0.0);
+        self.rhs.fill(0.0);
+        let w_inv = f.inv_weights();
+        for (slot, &r) in rows.iter().enumerate() {
+            let v = active.view(r as usize);
+            for (k, (&i, &a)) in v.indices.iter().zip(v.coeffs).enumerate() {
+                self.xg[slot * kcap + k] = x[i as usize] as f32;
+                self.sg[slot * kcap + k] = a as f32;
+                self.wg[slot * kcap + k] = w_inv[i as usize] as f32;
+            }
+            self.zg[slot] = active.z(r as usize) as f32;
+            self.rhs[slot] = v.rhs as f32;
+        }
+        let (c, znew, delta) = self.runtime.projection_sweep(
+            bcap,
+            kcap,
+            &self.xg,
+            &self.sg,
+            &self.wg,
+            &self.zg,
+            &self.rhs,
+        )?;
+        self.calls += 1;
+        for (slot, &r) in rows.iter().enumerate() {
+            let v = active.view(r as usize);
+            for (k, &i) in v.indices.iter().enumerate() {
+                x[i as usize] += delta[slot * kcap + k] as f64;
+            }
+            active.set_z(r as usize, znew[slot] as f64);
+            stats.dual_movement += c[slot].abs() as f64;
+            stats.projections += 1;
+        }
+        Ok(())
+    }
+}
+
+impl SweepExecutor<DiagonalQuadratic> for PjrtSweep<'_> {
+    fn sweep(
+        &mut self,
+        f: &DiagonalQuadratic,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+    ) -> SweepStats {
+        let mut stats = SweepStats::default();
+        self.calls = 0;
+        self.error = None;
+        if !self.plan.is_current(active) {
+            self.plan
+                .rebuild(active, x.len(), &ShardLimits::batched(self.shape.b, self.shape.k));
+        }
+        self.skipped = self.plan.oversized.len();
+        let shards = std::mem::take(&mut self.plan.shards);
+        for shard in &shards {
+            stats.shards += 1;
+            if let Err(e) = self.run_shard(shard, f, x, active, &mut stats) {
+                self.error = Some(e);
+                break;
+            }
+        }
+        self.plan.shards = shards;
+        // Conflict-chain tail past the planner's pass cap: project
+        // natively row by row (exact Gauss–Seidel, counted as projected
+        // whether or not the row moved, matching the batched accounting).
+        if self.error.is_none() && !self.plan.tail.is_empty() {
+            stats.shards += 1;
+            for &r in &self.plan.tail {
+                stats.dual_movement +=
+                    crate::core::engine::project_row_in_place(f, x, active, r as usize);
+                stats.projections += 1;
+            }
+        }
+        stats
+    }
+
+    fn after_forget(&mut self, map: &[u32], generation_before: u64, generation_after: u64) {
+        if self.plan.generation() == generation_before {
+            self.plan.remap_after_forget(map, generation_after);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-batched"
+    }
+}
+
+/// Run one parallel projection pass over all remembered rows with
+/// support-disjoint batches of shape `shape`, updating `x` and the duals.
+/// `w_inv[e] = 1/W_e` for the diagonal quadratic geometry. Thin adapter
+/// over [`PjrtSweep`] kept for the historical call sites.
 pub fn batched_sweep(
     runtime: &Runtime,
     shape: BatchShape,
@@ -45,77 +193,20 @@ pub fn batched_sweep(
     x: &mut [f64],
     w_inv: &[f64],
 ) -> anyhow::Result<BatchStats> {
-    let (bcap, kcap) = (shape.b, shape.k);
-    let mut stats = BatchStats::default();
-    let m = x.len();
-    // Edge ownership marker per batch (epoch trick avoids clearing).
-    let mut owner = vec![0u32; m];
-    let mut epoch = 0u32;
-
-    let mut queue: Vec<usize> = (0..active.len()).collect();
-    let mut xg = vec![0f32; bcap * kcap];
-    let mut sg = vec![0f32; bcap * kcap];
-    let mut wg = vec![0f32; bcap * kcap];
-    let mut zg = vec![0f32; bcap];
-    let mut rhs = vec![0f32; bcap];
-    while !queue.is_empty() {
-        epoch += 1;
-        xg.fill(0.0);
-        sg.fill(0.0);
-        wg.fill(1.0);
-        zg.fill(0.0);
-        rhs.fill(0.0);
-        let mut placed: Vec<usize> = Vec::with_capacity(bcap);
-        let mut leftover: Vec<usize> = Vec::new();
-        for &r in &queue {
-            if placed.len() == bcap {
-                leftover.push(r);
-                continue;
-            }
-            let v = active.view(r);
-            if v.indices.len() > kcap {
-                stats.skipped += 1;
-                continue; // too long for this artifact; native sweep covers it
-            }
-            // Disjointness check against edges already claimed this batch.
-            if v.indices.iter().any(|&i| owner[i as usize] == epoch) {
-                leftover.push(r);
-                continue;
-            }
-            for &i in v.indices {
-                owner[i as usize] = epoch;
-            }
-            let slot = placed.len();
-            for (k, (&i, &a)) in v.indices.iter().zip(v.coeffs).enumerate() {
-                xg[slot * kcap + k] = x[i as usize] as f32;
-                sg[slot * kcap + k] = a as f32;
-                wg[slot * kcap + k] = w_inv[i as usize] as f32;
-            }
-            zg[slot] = active.z(r) as f32;
-            rhs[slot] = v.rhs as f32;
-            placed.push(r);
-        }
-        if placed.is_empty() {
-            break;
-        }
-        let (c, znew, delta) =
-            runtime.projection_sweep(bcap, kcap, &xg, &sg, &wg, &zg, &rhs)?;
-        stats.calls += 1;
-        for (slot, &r) in placed.iter().enumerate() {
-            let v = active.view(r);
-            let nnz = v.indices.len();
-            let idx: Vec<u32> = v.indices.to_vec();
-            for (k, &i) in idx.iter().enumerate().take(nnz) {
-                x[i as usize] += delta[slot * kcap + k] as f64;
-            }
-            active.set_z(r, znew[slot] as f64);
-            stats.dual_movement += c[slot].abs() as f64;
-            stats.projected += 1;
-        }
-        queue = leftover;
+    let f = DiagonalQuadratic::from_inverse_weights(vec![0.0; x.len()], w_inv.to_vec());
+    let mut exec = PjrtSweep::new(runtime, shape);
+    let stats = exec.sweep(&f, x, active);
+    if let Some(e) = exec.error.take() {
+        return Err(e);
     }
-    Ok(stats)
+    Ok(BatchStats {
+        projected: stats.projections,
+        skipped: exec.skipped,
+        calls: exec.calls,
+        dual_movement: stats.dual_movement,
+    })
 }
 
 // Correctness tests (vs the sequential sweep) live in
-// rust/tests/runtime_integration.rs.
+// rust/tests/runtime_integration.rs; the shared planner's unit tests in
+// core::engine::shards.

@@ -98,7 +98,7 @@ impl<F: BregmanFunction> Oracle<F> for PjrtMetricOracle {
         if let Err(err) = self.runtime.apsp_padded(&mut self.dist, p) {
             // Runtime failure is not a solve failure: fall back to
             // reporting nothing (the caller's native oracle covers it).
-            log::warn!("pjrt apsp failed: {err}");
+            eprintln!("warning: pjrt apsp failed: {err}");
             return out;
         }
         // Extract witnesses for violated edges only. The f32 certificate

@@ -13,11 +13,22 @@ use std::collections::HashMap;
 pub struct ActiveSet {
     store: ConstraintStore,
     index: HashMap<ConstraintKey, u32>,
+    /// Bumped on every membership change (new slot, forget, clear) —
+    /// NOT on dual updates. Shard plans and other slot-keyed caches use
+    /// it to detect staleness without diffing the set.
+    generation: u64,
 }
 
 impl ActiveSet {
     pub fn new() -> ActiveSet {
-        ActiveSet { store: ConstraintStore::new(), index: HashMap::new() }
+        ActiveSet { store: ConstraintStore::new(), index: HashMap::new(), generation: 0 }
+    }
+
+    /// Membership generation: two observations with equal generation saw
+    /// identical slot→constraint assignments (duals may differ).
+    #[inline]
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn len(&self) -> usize {
@@ -37,12 +48,7 @@ impl ActiveSet {
     /// already remembered, the existing slot (and dual) is reused.
     pub fn insert(&mut self, c: &Constraint) -> usize {
         let key = c.key();
-        if let Some(&slot) = self.index.get(&key) {
-            return slot as usize;
-        }
-        let slot = self.store.push_with_key(c, 0.0, key);
-        self.index.insert(key, slot as u32);
-        slot
+        self.insert_with_key(c, key)
     }
 
     /// Is this constraint currently remembered?
@@ -63,6 +69,7 @@ impl ActiveSet {
         }
         let slot = self.store.push_with_key(c, 0.0, key);
         self.index.insert(key, slot as u32);
+        self.generation += 1;
         slot
     }
 
@@ -87,6 +94,20 @@ impl ActiveSet {
     pub fn forget_inactive(&mut self) -> usize {
         let dropped = self.store.retain(|_, z| z != 0.0);
         if dropped > 0 {
+            self.generation += 1;
+            self.rebuild_index();
+        }
+        dropped
+    }
+
+    /// FORGET that also records the stable-slot compaction map (see
+    /// [`ConstraintStore::retain_with_map`]): `map[old_slot]` is the new
+    /// slot or `SLOT_DROPPED`. The map is always filled, even when
+    /// nothing was dropped (then it is the identity).
+    pub fn forget_inactive_with_map(&mut self, map: &mut Vec<u32>) -> usize {
+        let dropped = self.store.retain_with_map(|_, z| z != 0.0, map);
+        if dropped > 0 {
+            self.generation += 1;
             self.rebuild_index();
         }
         dropped
@@ -95,6 +116,9 @@ impl ActiveSet {
     /// Truly-stochastic FORGET (§3.2.1): forget *all* constraints. The
     /// caller is responsible for keeping dual values externally.
     pub fn forget_all(&mut self) {
+        if !self.store.is_empty() {
+            self.generation += 1;
+        }
         self.store.clear();
         self.index.clear();
     }
@@ -184,6 +208,92 @@ mod tests {
         // First: 3 - 1.5 = 1.5 violation; second: 0.5 violation.
         assert!((s.max_violation(&x) - 1.5).abs() < 1e-12);
         assert_eq!(s.max_violation(&[0.0, 0.5]), 0.0);
+    }
+
+    #[test]
+    fn interleaved_insert_forget_reinsert_keeps_slots_and_index_consistent() {
+        // The hot-path sequence the engine refactor leans on:
+        // insert_with_key → forget_inactive (compaction) → re-insert.
+        let mut s = ActiveSet::new();
+        let cons: Vec<Constraint> = (0..8u32).map(|i| Constraint::cycle(i, &[i + 8])).collect();
+        let keys: Vec<_> = cons.iter().map(|c| c.key()).collect();
+        for (c, &k) in cons.iter().zip(&keys) {
+            let slot = s.insert_with_key(c, k);
+            s.set_z(slot, if slot % 2 == 0 { 0.0 } else { (slot + 1) as f64 });
+        }
+        // insert_with_key on a remembered key returns the existing slot.
+        assert_eq!(s.insert_with_key(&cons[3], keys[3]), 3);
+        assert_eq!(s.forget_inactive(), 4);
+        // Survivors (old odd slots) compacted to 0..4 with duals intact,
+        // and the key index follows the compaction.
+        assert_eq!(s.len(), 4);
+        for r in 0..s.len() {
+            let c = s.to_constraint(r);
+            let slot = s.slot_of_key(c.key()).expect("index lost a surviving row");
+            assert_eq!(slot, r);
+            assert_eq!(s.z(r), (2 * r + 2) as f64);
+        }
+        // Re-inserting a forgotten constraint allocates a fresh tail slot.
+        let slot = s.insert_with_key(&cons[0], keys[0]);
+        assert_eq!(slot, 4);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn forgotten_then_rediscovered_restarts_with_zero_dual() {
+        let mut s = ActiveSet::new();
+        let c = Constraint::cycle(1, &[2, 3]);
+        let slot = s.insert(&c);
+        s.set_z(slot, 7.5);
+        s.set_z(slot, 0.0); // projection relaxed the dual back to zero
+        assert_eq!(s.forget_inactive(), 1);
+        assert!(!s.contains(&c));
+        let slot = s.insert(&c);
+        assert_eq!(s.z(slot), 0.0, "rediscovered constraint must restart at z = 0");
+    }
+
+    #[test]
+    fn generation_tracks_membership_not_duals() {
+        let mut s = ActiveSet::new();
+        let g0 = s.generation();
+        let slot = s.insert(&Constraint::nonneg(0));
+        let g1 = s.generation();
+        assert_ne!(g0, g1, "insert must bump the generation");
+        // Dual updates and duplicate merges leave membership unchanged.
+        s.set_z(slot, 3.0);
+        s.insert(&Constraint::nonneg(0));
+        assert_eq!(s.generation(), g1);
+        // A forget that drops nothing is also not a membership change.
+        assert_eq!(s.forget_inactive(), 0);
+        assert_eq!(s.generation(), g1);
+        s.set_z(slot, 0.0);
+        assert_eq!(s.forget_inactive(), 1);
+        assert_ne!(s.generation(), g1);
+        let g2 = s.generation();
+        s.forget_all(); // already empty: no membership change
+        assert_eq!(s.generation(), g2);
+    }
+
+    #[test]
+    fn forget_with_map_matches_compaction() {
+        let mut s = ActiveSet::new();
+        for i in 0..10u32 {
+            let slot = s.insert(&Constraint::nonneg(i));
+            s.set_z(slot, if i % 3 == 0 { 0.0 } else { 1.0 });
+        }
+        let snapshot: Vec<Constraint> = (0..s.len()).map(|r| s.to_constraint(r)).collect();
+        let mut map = Vec::new();
+        let dropped = s.forget_inactive_with_map(&mut map);
+        assert_eq!(dropped, 4);
+        assert_eq!(map.len(), snapshot.len());
+        for (old, &new) in map.iter().enumerate() {
+            if new == crate::core::constraint::SLOT_DROPPED {
+                assert!(!s.contains(&snapshot[old]));
+            } else {
+                assert_eq!(s.to_constraint(new as usize), snapshot[old]);
+                assert_eq!(s.slot_of_key(snapshot[old].key()), Some(new as usize));
+            }
+        }
     }
 
     #[test]

@@ -65,6 +65,22 @@ impl DiagonalQuadratic {
         let m = d.len();
         DiagonalQuadratic::new(d, vec![1.0; m])
     }
+
+    /// Build from precomputed inverse weights `1/W` (exact, no double
+    /// reciprocal): the geometry callers that already hold `w_inv`
+    /// (e.g. the PJRT batch adapter) reproduce it bit for bit.
+    pub fn from_inverse_weights(d: Vec<f64>, w_inv: Vec<f64>) -> Self {
+        assert_eq!(d.len(), w_inv.len());
+        assert!(w_inv.iter().all(|&wi| wi > 0.0), "inverse weights must be positive");
+        let w = w_inv.iter().map(|&wi| 1.0 / wi).collect();
+        DiagonalQuadratic { d, w, w_inv }
+    }
+
+    /// Precomputed `1/W` (the hot-path view batched executors gather).
+    #[inline]
+    pub fn inv_weights(&self) -> &[f64] {
+        &self.w_inv
+    }
 }
 
 impl BregmanFunction for DiagonalQuadratic {

@@ -28,6 +28,10 @@ pub struct ConstraintView<'a> {
 /// sorted row). Used to deduplicate the active-set merge.
 pub type ConstraintKey = u64;
 
+/// Sentinel in a [`ConstraintStore::retain_with_map`] slot map marking a
+/// row that was dropped by the compaction.
+pub const SLOT_DROPPED: u32 = u32::MAX;
+
 impl Constraint {
     pub fn new(indices: Vec<u32>, coeffs: Vec<f64>, rhs: f64) -> Constraint {
         assert_eq!(indices.len(), coeffs.len());
@@ -166,7 +170,31 @@ impl ConstraintStore {
 
     /// Keep only rows where `keep(slot, z)` is true, compacting all pools
     /// in one linear pass. Returns the number of rows dropped.
-    pub fn retain<F: FnMut(usize, f64) -> bool>(&mut self, mut keep: F) -> usize {
+    pub fn retain<F: FnMut(usize, f64) -> bool>(&mut self, keep: F) -> usize {
+        self.retain_impl(keep, None)
+    }
+
+    /// [`ConstraintStore::retain`] that additionally records the
+    /// stable-slot compaction map: after the call, `map[old_slot]` holds
+    /// the row's new slot, or [`SLOT_DROPPED`] if it was removed. Lets
+    /// callers holding slot references (shard plans, external dual
+    /// mirrors) survive a FORGET in O(rows) instead of re-resolving
+    /// through content keys.
+    pub fn retain_with_map<F: FnMut(usize, f64) -> bool>(
+        &mut self,
+        keep: F,
+        map: &mut Vec<u32>,
+    ) -> usize {
+        map.clear();
+        map.reserve(self.len());
+        self.retain_impl(keep, Some(map))
+    }
+
+    fn retain_impl<F: FnMut(usize, f64) -> bool>(
+        &mut self,
+        mut keep: F,
+        mut map: Option<&mut Vec<u32>>,
+    ) -> usize {
         let n = self.len();
         let mut write_row = 0usize;
         let mut write_nz = 0usize;
@@ -181,11 +209,17 @@ impl ConstraintStore {
                     self.z[write_row] = self.z[r];
                     self.keys[write_row] = self.keys[r];
                 }
+                if let Some(m) = map.as_deref_mut() {
+                    m.push(write_row as u32);
+                }
                 write_nz += e - s;
                 write_row += 1;
                 self.offsets[write_row] = write_nz as u32;
             } else {
                 dropped += 1;
+                if let Some(m) = map.as_deref_mut() {
+                    m.push(SLOT_DROPPED);
+                }
             }
         }
         self.indices.truncate(write_nz);
@@ -277,6 +311,26 @@ mod tests {
         assert_eq!(s.to_constraint(2), cs[5]);
         assert_eq!(s.z, vec![1.0, 1.0, 1.0]);
         assert_eq!(s.nnz(), cs[1].indices.len() + cs[3].indices.len() + cs[5].indices.len());
+    }
+
+    #[test]
+    fn retain_with_map_reports_slot_moves() {
+        let mut s = ConstraintStore::new();
+        for i in 0..6u32 {
+            s.push(&Constraint::nonneg(i), if i % 2 == 0 { 0.0 } else { 1.0 });
+        }
+        let mut map = Vec::new();
+        let dropped = s.retain_with_map(|_, z| z != 0.0, &mut map);
+        assert_eq!(dropped, 3);
+        assert_eq!(map, vec![SLOT_DROPPED, 0, SLOT_DROPPED, 1, SLOT_DROPPED, 2]);
+        // The surviving rows really live at the mapped slots.
+        for (old, &new) in map.iter().enumerate() {
+            if new != SLOT_DROPPED {
+                assert_eq!(s.to_constraint(new as usize), Constraint::nonneg(old as u32));
+            }
+        }
+        // A map-less retain over the same store still works.
+        assert_eq!(s.retain(|_, _| true), 0);
     }
 
     #[test]

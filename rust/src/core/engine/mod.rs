@@ -1,0 +1,211 @@
+//! The projection engine: pluggable executors for the Bregman projection
+//! sweep over the remembered list `L^(ν)` (Algorithm 3, lines 2–6).
+//!
+//! The solver's hot loop is the sweep; this subsystem factors it behind
+//! the [`SweepExecutor`] trait so the same outer loop can run
+//!
+//! - [`sequential::SequentialSweep`] — the exact Gauss–Seidel sweep in
+//!   slot order, arithmetic-identical to the historical in-solver loop
+//!   (and therefore bit-identical in its results);
+//! - [`sharded::ShardedSweep`] — the Ruggles/Veldt/Gleich parallel
+//!   scheme: rows are partitioned into support-disjoint shards by
+//!   [`shards::ShardPlan`], shards execute one after another, and the
+//!   rows *within* a shard are projected concurrently (their projections
+//!   commute because they touch disjoint coordinates of `x`);
+//! - the PJRT-batched executor in `coordinator::batch_project`, which
+//!   gathers each shard into the padded `[B, K]` artifact layout instead
+//!   of running native arithmetic.
+//!
+//! The shard plan is recomputed lazily: [`crate::core::ActiveSet`] bumps
+//! a generation counter whenever membership changes, and FORGET hands the
+//! executor a stable-slot compaction map so a pure forget remaps the
+//! existing plan in O(rows) instead of replanning from scratch.
+
+pub mod sequential;
+pub mod sharded;
+pub mod shards;
+
+pub use sequential::SequentialSweep;
+pub use sharded::ShardedSweep;
+pub use shards::{ShardLimits, ShardPlan};
+
+use super::active_set::ActiveSet;
+use super::bregman::BregmanFunction;
+
+/// Which sweep executor the solver runs (the `SolverConfig::sweep` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SweepStrategy {
+    /// Exact sequential Gauss–Seidel in slot order — the default, and
+    /// bit-identical to the historical solver loop.
+    #[default]
+    Sequential,
+    /// Support-disjoint sharded parallel sweep. `threads == 0` means
+    /// "auto" (`PAF_THREADS` or the machine's available parallelism).
+    /// Results are deterministic: independent of the thread count.
+    ShardedParallel {
+        threads: usize,
+    },
+}
+
+/// What one sweep did (the executor-side view of `IterStats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    /// Individual projections that moved `x` (sequential/sharded), or
+    /// rows handed to the batched artifact (PJRT adapter).
+    pub projections: usize,
+    /// Total dual movement `Σ|c|` — reduced deterministically in slot
+    /// order within each shard, shard by shard.
+    pub dual_movement: f64,
+    /// Shards executed (1 for the sequential executor).
+    pub shards: usize,
+}
+
+/// A projection-sweep executor over the remembered list.
+///
+/// One `sweep` call performs one full pass over rows `0..active.len()`:
+/// for each row, the Bregman projection with dual correction
+/// `c = min(z, θ)`, `x ← x'` with `∇f(x') − ∇f(x) = c·a`, `z ← z − c`.
+/// Implementations may reorder rows (and run support-disjoint rows
+/// concurrently) but must visit every row exactly once per sweep.
+pub trait SweepExecutor<F: BregmanFunction> {
+    /// Run one full sweep, updating `x` and the duals in place.
+    fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats;
+
+    /// FORGET notification: `map[old_slot]` is the row's new slot, or
+    /// [`crate::core::constraint::SLOT_DROPPED`] if it was forgotten;
+    /// the generations bracket the compaction (the active set's value
+    /// just before and just after it). Executors with cached plans keyed
+    /// to `generation_before` remap instead of replanning.
+    fn after_forget(&mut self, map: &[u32], generation_before: u64, generation_after: u64) {
+        let _ = (map, generation_before, generation_after);
+    }
+
+    /// Human-readable name for traces and benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Build the executor for a strategy (used by `Solver::new`).
+pub fn executor_for<F: BregmanFunction>(strategy: SweepStrategy) -> Box<dyn SweepExecutor<F>> {
+    match strategy {
+        SweepStrategy::Sequential => Box::new(SequentialSweep::new()),
+        SweepStrategy::ShardedParallel { threads } => Box::new(ShardedSweep::new(threads)),
+    }
+}
+
+/// The single-row projection kernel (Algorithm 3, lines 2–6): `θ`, the
+/// dual clamp `c = min(z, θ)`, the primal move and the dual update, in
+/// place. Returns `|c|`, or `0.0` when the projection was a no-op.
+///
+/// This is THE projection arithmetic — every native execution path
+/// (sequential executor, sharded serial path, the PJRT adapter's tail,
+/// `Solver::project_row`) calls this one function so the clamp rule and
+/// accounting can never drift between them.
+pub fn project_row_in_place<F: BregmanFunction>(
+    f: &F,
+    x: &mut [f64],
+    active: &mut ActiveSet,
+    r: usize,
+) -> f64 {
+    let view = active.view(r);
+    let theta = f.theta(x, view);
+    let z = active.z(r);
+    let step = z.min(theta);
+    if step == 0.0 {
+        return 0.0;
+    }
+    f.apply(x, view, step);
+    active.set_z(r, z - step);
+    step.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bregman::DiagonalQuadratic;
+    use crate::core::constraint::Constraint;
+    use crate::util::Rng;
+
+    /// Random overlapping constraint soup shared by the executor tests.
+    fn random_active_set(seed: u64, dim: usize, rows: usize) -> ActiveSet {
+        let mut rng = Rng::new(seed);
+        let mut active = ActiveSet::new();
+        while active.len() < rows {
+            let nnz = 1 + rng.below(4);
+            let idx: Vec<u32> =
+                rng.sample_indices(dim, nnz).into_iter().map(|i| i as u32).collect();
+            let coeffs: Vec<f64> = (0..nnz).map(|_| rng.uniform(-1.5, 1.5)).collect();
+            let slot = active.insert(&Constraint::new(idx, coeffs, rng.uniform(-0.5, 0.5)));
+            active.set_z(slot, rng.uniform(0.0, 0.4));
+        }
+        active
+    }
+
+    #[test]
+    fn sharded_sweep_is_thread_count_invariant() {
+        let dim = 40;
+        let mut rng = Rng::new(5);
+        let d: Vec<f64> = (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        let base = random_active_set(6, dim, 60);
+        let mut reference: Option<(Vec<f64>, Vec<f64>)> = None;
+        for threads in [1usize, 2, 4, 7] {
+            let mut active = base.clone();
+            let mut x = d.clone();
+            let mut exec = ShardedSweep::new(threads);
+            exec.parallel_min_rows = 2; // force the parallel path
+            let stats =
+                SweepExecutor::<DiagonalQuadratic>::sweep(&mut exec, &f, &mut x, &mut active);
+            assert!(stats.projections > 0);
+            let zs: Vec<f64> = (0..active.len()).map(|r| active.z(r)).collect();
+            match &reference {
+                None => reference = Some((x, zs)),
+                Some((rx, rz)) => {
+                    // Bitwise: the schedule is deterministic by design.
+                    assert_eq!(rx, &x, "x differs at {threads} threads");
+                    assert_eq!(rz, &zs, "z differs at {threads} threads");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_sequential_on_disjoint_rows() {
+        // With mutually disjoint supports the Gauss–Seidel order is
+        // irrelevant, so sequential and sharded must agree bitwise.
+        let dim = 64;
+        let mut rng = Rng::new(11);
+        let d: Vec<f64> = (0..dim).map(|_| rng.uniform(-1.0, 3.0)).collect();
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        let mut active = ActiveSet::new();
+        for c in 0..16u32 {
+            let base = c * 4;
+            let slot = active.insert(&Constraint::cycle(base, &[base + 1, base + 2, base + 3]));
+            active.set_z(slot, rng.uniform(0.0, 0.5));
+        }
+        let mut seq_active = active.clone();
+        let mut seq_x = d.clone();
+        let mut seq = SequentialSweep::new();
+        let s1 =
+            SweepExecutor::<DiagonalQuadratic>::sweep(&mut seq, &f, &mut seq_x, &mut seq_active);
+        let mut par_active = active.clone();
+        let mut par_x = d.clone();
+        let mut par = ShardedSweep::new(4);
+        par.parallel_min_rows = 2; // force the parallel path
+        let s2 =
+            SweepExecutor::<DiagonalQuadratic>::sweep(&mut par, &f, &mut par_x, &mut par_active);
+        assert_eq!(seq_x, par_x);
+        for r in 0..seq_active.len() {
+            assert_eq!(seq_active.z(r), par_active.z(r), "z[{r}]");
+        }
+        assert_eq!(s1.projections, s2.projections);
+        assert!((s1.dual_movement - s2.dual_movement).abs() < 1e-15);
+    }
+
+    #[test]
+    fn executor_factory_names() {
+        let seq = executor_for::<DiagonalQuadratic>(SweepStrategy::Sequential);
+        assert_eq!(seq.name(), "sequential");
+        let par = executor_for::<DiagonalQuadratic>(SweepStrategy::ShardedParallel { threads: 2 });
+        assert_eq!(par.name(), "sharded-parallel");
+    }
+}

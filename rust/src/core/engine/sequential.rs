@@ -1,0 +1,36 @@
+//! The exact sequential Gauss–Seidel sweep (the historical solver loop).
+
+use super::{project_row_in_place, SweepExecutor, SweepStats};
+use crate::core::active_set::ActiveSet;
+use crate::core::bregman::BregmanFunction;
+
+/// Projects rows `0..len` in slot order, each against the `x` already
+/// updated by its predecessors. Arithmetic-identical to the pre-engine
+/// `Solver::project_sweep`, so `SweepStrategy::Sequential` reproduces the
+/// historical results bit for bit.
+#[derive(Debug, Default, Clone)]
+pub struct SequentialSweep;
+
+impl SequentialSweep {
+    pub fn new() -> SequentialSweep {
+        SequentialSweep
+    }
+}
+
+impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
+    fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+        let mut stats = SweepStats { shards: 1, ..SweepStats::default() };
+        for r in 0..active.len() {
+            let moved = project_row_in_place(f, x, active, r);
+            if moved != 0.0 {
+                stats.projections += 1;
+                stats.dual_movement += moved;
+            }
+        }
+        stats
+    }
+
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+}

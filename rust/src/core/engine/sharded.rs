@@ -1,0 +1,122 @@
+//! Support-disjoint sharded parallel sweep (Ruggles, Veldt & Gleich).
+//!
+//! Shards run one after another; the rows inside a shard have pairwise
+//! disjoint supports, so their projections commute: computing every `θ`
+//! against the shard-entry snapshot of `x` and then applying the moves is
+//! *exactly* the sequential result for any within-shard order. The `θ`
+//! phase (the dot products — the dominant cost) fans out over
+//! `util::pool`; the apply phase and the `last_dual_movement` reduction
+//! run serially in slot order, which makes the whole sweep deterministic
+//! and independent of the thread count.
+
+use super::shards::{ShardLimits, ShardPlan};
+use super::{project_row_in_place, SweepExecutor, SweepStats};
+use crate::core::active_set::ActiveSet;
+use crate::core::bregman::BregmanFunction;
+use crate::util::pool::{default_threads, parallel_map};
+
+/// Default for [`ShardedSweep::parallel_min_rows`]: below this many rows
+/// a shard is projected serially — scoped-thread spawn overhead would
+/// eat the win on tiny shards. (Serial and parallel paths are
+/// arithmetic-identical on a disjoint shard, so this is purely a
+/// scheduling choice and never changes results.)
+pub const PARALLEL_MIN_ROWS: usize = 64;
+
+/// The sharded executor with its lazily maintained plan.
+#[derive(Debug)]
+pub struct ShardedSweep {
+    /// Worker threads; 0 = auto (`PAF_THREADS` / available cores).
+    pub threads: usize,
+    /// Shards smaller than this run serially (see [`PARALLEL_MIN_ROWS`]).
+    pub parallel_min_rows: usize,
+    plan: ShardPlan,
+}
+
+impl Default for ShardedSweep {
+    fn default() -> Self {
+        ShardedSweep::new(0)
+    }
+}
+
+impl ShardedSweep {
+    pub fn new(threads: usize) -> ShardedSweep {
+        ShardedSweep { threads, parallel_min_rows: PARALLEL_MIN_ROWS, plan: ShardPlan::new() }
+    }
+
+    /// The current plan (benches/tests observability).
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+}
+
+impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
+    fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+        if !self.plan.is_current(active) {
+            self.plan.rebuild(active, x.len(), &ShardLimits::none());
+        }
+        let threads = if self.threads == 0 { default_threads() } else { self.threads };
+        let parallel_min = self.parallel_min_rows.max(2);
+        let mut stats = SweepStats::default();
+        let plan = &self.plan;
+        for shard in &plan.shards {
+            stats.shards += 1;
+            if threads > 1 && shard.len() >= parallel_min {
+                // Parallel θ against the shard-entry snapshot (reads only;
+                // disjoint supports make this equal to in-place order).
+                let xr: &[f64] = x;
+                let act: &ActiveSet = active;
+                let steps: Vec<f64> = parallel_map(shard.len(), threads, |k| {
+                    let r = shard[k] as usize;
+                    let theta = f.theta(xr, act.view(r));
+                    act.z(r).min(theta)
+                });
+                // Serial apply + deterministic reduction in slot order.
+                for (k, &step) in steps.iter().enumerate() {
+                    if step == 0.0 {
+                        continue;
+                    }
+                    let r = shard[k] as usize;
+                    let view = active.view(r);
+                    f.apply(x, view, step);
+                    let z = active.z(r);
+                    active.set_z(r, z - step);
+                    stats.projections += 1;
+                    stats.dual_movement += step.abs();
+                }
+            } else {
+                for &r in shard {
+                    let moved = project_row_in_place(f, x, active, r as usize);
+                    if moved != 0.0 {
+                        stats.projections += 1;
+                        stats.dual_movement += moved;
+                    }
+                }
+            }
+        }
+        // Tail rows (conflict chains past the shard cap): plain
+        // Gauss–Seidel, exact by construction.
+        if !plan.tail.is_empty() {
+            stats.shards += 1;
+            for &r in &plan.tail {
+                let moved = project_row_in_place(f, x, active, r as usize);
+                if moved != 0.0 {
+                    stats.projections += 1;
+                    stats.dual_movement += moved;
+                }
+            }
+        }
+        stats
+    }
+
+    fn after_forget(&mut self, map: &[u32], generation_before: u64, generation_after: u64) {
+        // Only a plan built against the pre-forget set can be remapped;
+        // anything staler is rebuilt lazily at the next sweep.
+        if self.plan.generation() == generation_before {
+            self.plan.remap_after_forget(map, generation_after);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-parallel"
+    }
+}

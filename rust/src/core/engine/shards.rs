@@ -1,0 +1,290 @@
+//! Greedy support-disjoint shard planning over the remembered list.
+//!
+//! Two rows *conflict* when their index sets intersect; projections onto
+//! non-conflicting rows commute (they read and write disjoint coordinates
+//! of `x`), so any independent set of the conflict graph can be projected
+//! concurrently with a result identical to processing it sequentially in
+//! any order. The planner greedily colors rows in slot order with the
+//! epoch-marker trick (one `u32` per variable, no clearing between
+//! shards): repeated first-fit passes, each pass claiming the rows whose
+//! support is still free this epoch. Each pass places at least one row,
+//! so planning terminates; rows still unplaced after `max_shards` passes
+//! land in a sequential `tail` (adversarial conflict chains degrade to
+//! Gauss–Seidel instead of exploding the shard count).
+//!
+//! The plan is keyed to [`ActiveSet::generation`]: membership changes
+//! invalidate it, but a FORGET compaction only *removes* rows, so
+//! [`ShardPlan::remap_after_forget`] rewrites slot ids through the
+//! stable-slot compaction map in O(rows) — disjointness is preserved
+//! under taking subsets.
+
+use crate::core::active_set::ActiveSet;
+use crate::core::constraint::SLOT_DROPPED;
+
+/// Planner limits; the native sharded executor uses [`ShardLimits::none`],
+/// the PJRT batch adapter caps shards at the artifact's `[B, K]` shape.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardLimits {
+    /// Disjoint passes before the remainder is dumped into the tail.
+    pub max_shards: usize,
+    /// Rows per shard (the artifact batch dimension `B`).
+    pub max_shard_rows: usize,
+    /// Rows with more nonzeros than this are excluded from shards
+    /// entirely (the artifact support dimension `K`) and reported in
+    /// [`ShardPlan::oversized`].
+    pub max_row_nnz: usize,
+}
+
+impl ShardLimits {
+    /// No artifact-shape limits; shard-count cap keeps planning linear.
+    pub fn none() -> ShardLimits {
+        ShardLimits { max_shards: 64, max_shard_rows: usize::MAX, max_row_nnz: usize::MAX }
+    }
+
+    /// Limits for a padded `[b, k]` projection artifact.
+    pub fn batched(b: usize, k: usize) -> ShardLimits {
+        ShardLimits { max_shards: 4096, max_shard_rows: b, max_row_nnz: k }
+    }
+}
+
+/// A partition of the remembered rows into support-disjoint shards, plus
+/// a sequential tail and the rows excluded as oversized.
+#[derive(Debug, Clone, Default)]
+pub struct ShardPlan {
+    /// Support-disjoint row groups, each safe to project concurrently.
+    pub shards: Vec<Vec<u32>>,
+    /// Rows unplaced after `max_shards` passes — must run sequentially.
+    pub tail: Vec<u32>,
+    /// Rows whose support exceeds `max_row_nnz` (PJRT adapter only; the
+    /// caller is responsible for covering them natively).
+    pub oversized: Vec<u32>,
+    /// `ActiveSet::generation` this plan was built against.
+    generation: u64,
+    /// Reused epoch-marker buffer (one entry per variable index).
+    owner: Vec<u32>,
+    epoch: u32,
+}
+
+impl ShardPlan {
+    pub fn new() -> ShardPlan {
+        ShardPlan::default()
+    }
+
+    /// Is this plan current for `active`? (Fresh plans over an empty set
+    /// are trivially current.) Besides the generation key, the row count
+    /// must line up — generations are per-instance counters, so a caller
+    /// swapping in a *different* `ActiveSet` (the solver's `active` field
+    /// is public) could otherwise alias a stale plan and index out of
+    /// bounds.
+    pub fn is_current(&self, active: &ActiveSet) -> bool {
+        self.generation == active.generation()
+            && self.planned_rows() + self.oversized.len() == active.len()
+    }
+
+    /// The generation this plan was built against.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Rows covered by the plan (shards + tail; excludes oversized).
+    pub fn planned_rows(&self) -> usize {
+        self.shards.iter().map(Vec::len).sum::<usize>() + self.tail.len()
+    }
+
+    /// Rebuild from scratch for the current contents of `active`.
+    /// `dim` is the length of `x` (an upper bound on variable indices).
+    pub fn rebuild(&mut self, active: &ActiveSet, dim: usize, limits: &ShardLimits) {
+        self.shards.clear();
+        self.tail.clear();
+        self.oversized.clear();
+        if self.owner.len() < dim {
+            self.owner.resize(dim, self.epoch);
+        }
+        let n = active.len();
+        let mut queue: Vec<u32> = Vec::with_capacity(n);
+        for r in 0..n {
+            if active.view(r).indices.len() > limits.max_row_nnz {
+                self.oversized.push(r as u32);
+            } else {
+                queue.push(r as u32);
+            }
+        }
+        let mut leftover: Vec<u32> = Vec::new();
+        while !queue.is_empty() {
+            if self.shards.len() == limits.max_shards {
+                self.tail.append(&mut queue);
+                break;
+            }
+            // Epoch wrap: reset markers once per ~4G passes.
+            if self.epoch == u32::MAX {
+                self.owner.iter_mut().for_each(|o| *o = 0);
+                self.epoch = 0;
+            }
+            self.epoch += 1;
+            let epoch = self.epoch;
+            let mut shard: Vec<u32> = Vec::new();
+            for &r in &queue {
+                if shard.len() == limits.max_shard_rows {
+                    leftover.push(r);
+                    continue;
+                }
+                let v = active.view(r as usize);
+                if v.indices.iter().any(|&i| self.owner[i as usize] == epoch) {
+                    leftover.push(r);
+                } else {
+                    for &i in v.indices {
+                        self.owner[i as usize] = epoch;
+                    }
+                    shard.push(r);
+                }
+            }
+            debug_assert!(!shard.is_empty(), "a planning pass must place >= 1 row");
+            self.shards.push(shard);
+            std::mem::swap(&mut queue, &mut leftover);
+            leftover.clear();
+        }
+        self.generation = active.generation();
+    }
+
+    /// Cheap update after FORGET: rewrite every row id through the
+    /// stable-slot compaction `map` (`SLOT_DROPPED` = forgotten), drop
+    /// emptied shards, and adopt the post-compaction `generation`.
+    /// Subsets of disjoint shards stay disjoint, and since FORGET only
+    /// removes rows the remapped plan still covers every surviving slot.
+    pub fn remap_after_forget(&mut self, map: &[u32], generation: u64) {
+        let remap = |rows: &mut Vec<u32>| {
+            rows.retain_mut(|r| {
+                let new = map[*r as usize];
+                *r = new;
+                new != SLOT_DROPPED
+            });
+        };
+        for shard in &mut self.shards {
+            remap(shard);
+        }
+        self.shards.retain(|s| !s.is_empty());
+        remap(&mut self.tail);
+        remap(&mut self.oversized);
+        self.generation = generation;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::constraint::Constraint;
+    use crate::util::Rng;
+
+    fn assert_disjoint_and_covering(plan: &ShardPlan, active: &ActiveSet) {
+        let mut seen = vec![false; active.len()];
+        for shard in &plan.shards {
+            let mut used: std::collections::HashSet<u32> = std::collections::HashSet::new();
+            for &r in shard {
+                assert!(!seen[r as usize], "row {r} planned twice");
+                seen[r as usize] = true;
+                for &i in active.view(r as usize).indices {
+                    assert!(used.insert(i), "index {i} reused inside a shard");
+                }
+            }
+        }
+        for &r in plan.tail.iter().chain(&plan.oversized) {
+            assert!(!seen[r as usize], "row {r} planned twice");
+            seen[r as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "some row left unplanned");
+    }
+
+    fn soup(seed: u64, dim: usize, rows: usize) -> ActiveSet {
+        let mut rng = Rng::new(seed);
+        let mut active = ActiveSet::new();
+        while active.len() < rows {
+            let nnz = 1 + rng.below(5);
+            let idx: Vec<u32> =
+                rng.sample_indices(dim, nnz).into_iter().map(|i| i as u32).collect();
+            let slot =
+                active.insert(&Constraint::new(idx, vec![1.0; nnz], rng.uniform(-1.0, 1.0)));
+            active.set_z(slot, 1.0);
+        }
+        active
+    }
+
+    #[test]
+    fn plan_is_disjoint_and_covers_all_rows() {
+        for seed in 0..8u64 {
+            let active = soup(seed, 30, 40);
+            let mut plan = ShardPlan::new();
+            plan.rebuild(&active, 30, &ShardLimits::none());
+            assert_disjoint_and_covering(&plan, &active);
+            assert!(plan.is_current(&active));
+        }
+    }
+
+    #[test]
+    fn fully_disjoint_rows_form_one_shard() {
+        let mut active = ActiveSet::new();
+        for c in 0..10u32 {
+            let base = c * 3;
+            let slot = active.insert(&Constraint::cycle(base, &[base + 1, base + 2]));
+            active.set_z(slot, 1.0);
+        }
+        let mut plan = ShardPlan::new();
+        plan.rebuild(&active, 30, &ShardLimits::none());
+        assert_eq!(plan.shards.len(), 1);
+        assert_eq!(plan.shards[0].len(), 10);
+        assert!(plan.tail.is_empty());
+    }
+
+    #[test]
+    fn max_shards_cap_spills_to_tail() {
+        // A clique on one shared index: every row conflicts with every
+        // other, so each pass places exactly one row.
+        let mut active = ActiveSet::new();
+        for c in 0..10u32 {
+            let slot = active.insert(&Constraint::new(vec![0, c + 1], vec![1.0, -1.0], 0.0));
+            active.set_z(slot, 1.0);
+        }
+        let limits = ShardLimits { max_shards: 3, ..ShardLimits::none() };
+        let mut plan = ShardPlan::new();
+        plan.rebuild(&active, 16, &limits);
+        assert_eq!(plan.shards.len(), 3);
+        assert_eq!(plan.tail.len(), 7);
+        assert_disjoint_and_covering(&plan, &active);
+    }
+
+    #[test]
+    fn batched_limits_respected() {
+        let active = soup(3, 50, 60);
+        let mut plan = ShardPlan::new();
+        plan.rebuild(&active, 50, &ShardLimits::batched(4, 3));
+        for shard in &plan.shards {
+            assert!(shard.len() <= 4);
+            for &r in shard {
+                assert!(active.view(r as usize).indices.len() <= 3);
+            }
+        }
+        for &r in &plan.oversized {
+            assert!(active.view(r as usize).indices.len() > 3);
+        }
+        assert_disjoint_and_covering(&plan, &active);
+    }
+
+    #[test]
+    fn remap_after_forget_tracks_compaction() {
+        let mut active = soup(9, 25, 30);
+        let mut plan = ShardPlan::new();
+        plan.rebuild(&active, 25, &ShardLimits::none());
+        // Zero out every third dual and forget.
+        for r in 0..active.len() {
+            if r % 3 == 0 {
+                active.set_z(r, 0.0);
+            }
+        }
+        let mut map = Vec::new();
+        let dropped = active.forget_inactive_with_map(&mut map);
+        assert!(dropped > 0);
+        plan.remap_after_forget(&map, active.generation());
+        assert!(plan.is_current(&active));
+        assert_eq!(plan.planned_rows() + plan.oversized.len(), active.len());
+        assert_disjoint_and_covering(&plan, &active);
+    }
+}

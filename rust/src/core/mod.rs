@@ -5,12 +5,15 @@
 //! - [`active_set`] — the remembered list `L^(ν)` with duals `z` and the
 //!   FORGET step.
 //! - [`oracle`] — separation-oracle traits (Property 1 / Property 2).
+//! - [`engine`] — pluggable projection-sweep executors (sequential
+//!   Gauss–Seidel and the support-disjoint sharded parallel sweep).
 //! - [`solver`] — the outer loop: oracle → merge → project sweep → forget.
 //! - [`stochastic`] — the truly stochastic variant (§3.2.1).
 
 pub mod active_set;
 pub mod bregman;
 pub mod constraint;
+pub mod engine;
 pub mod oracle;
 pub mod solver;
 pub mod stochastic;
@@ -18,5 +21,6 @@ pub mod stochastic;
 pub use active_set::ActiveSet;
 pub use bregman::{BregmanFunction, DiagonalQuadratic, Entropy};
 pub use constraint::{Constraint, ConstraintKey};
+pub use engine::{SweepExecutor, SweepStats, SweepStrategy};
 pub use oracle::{Oracle, OracleOutcome, RandomOracle};
 pub use solver::{IterStats, Solver, SolverConfig, SolverResult};

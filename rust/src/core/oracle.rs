@@ -12,12 +12,28 @@ use super::constraint::Constraint;
 use super::solver::Solver;
 
 /// What an oracle reports back to the engine after one separation round.
+///
+/// # The `max_violation == 0` feasibility-certificate convention
+///
+/// `max_violation` is the oracle's convergence certificate, and the
+/// convention is load-bearing: the solver stops (together with the dual
+/// test) exactly when `max_violation <= violation_tol`. An oracle that
+/// witnessed **no** violation above its reporting tolerance must leave
+/// `max_violation` at `0.0` — that is the certificate "the iterate is
+/// feasible up to my tolerance". Conversely, violations at or below the
+/// oracle's reporting tolerance must not leak into `max_violation`:
+/// every implementation here applies one tolerance symmetrically to
+/// *reporting a constraint* and to *witnessing its violation*, so the
+/// certificate and the delivered list always agree. Property-2 (random)
+/// oracles can sample an all-satisfied batch and emit a spurious
+/// certificate; their solves disable violation-based stopping instead
+/// (see `SampledListOracle`).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OracleOutcome {
     /// Constraints delivered to the sink this round.
     pub found: usize,
-    /// Maximum violation witnessed, i.e. `max_C dist`-style certificate.
-    /// 0 means the oracle certifies (approximate) feasibility.
+    /// Maximum violation witnessed above the oracle's reporting
+    /// tolerance; `0.0` certifies (approximate) feasibility.
     pub max_violation: f64,
 }
 
@@ -59,13 +75,24 @@ pub trait RandomOracle<F: BregmanFunction>: Oracle<F> {}
 /// baseline; real metric problems use the graph oracles in `problems::`.
 pub struct ListOracle {
     pub constraints: Vec<Constraint>,
-    /// Violation tolerance below which a constraint is not reported.
+    /// Reporting tolerance, with the same semantics as
+    /// `MetricOracle::report_tol`: violations at or below `tol` are
+    /// neither delivered nor counted into `max_violation`, so when every
+    /// violation is within `tol` the outcome is the
+    /// `max_violation == 0` feasibility certificate. Keep `tol` below
+    /// the solver's `violation_tol`, or the oracle certifies earlier
+    /// than the solver intends.
     pub tol: f64,
 }
 
 impl ListOracle {
     pub fn new(constraints: Vec<Constraint>) -> ListOracle {
         ListOracle { constraints, tol: 0.0 }
+    }
+
+    /// Like [`ListOracle::new`] with an explicit reporting tolerance.
+    pub fn with_tol(constraints: Vec<Constraint>, tol: f64) -> ListOracle {
+        ListOracle { constraints, tol }
     }
 }
 
@@ -89,11 +116,16 @@ impl<F: BregmanFunction> Oracle<F> for ListOracle {
 }
 
 /// Uniform random sampling over an explicit list (Property 2 with
-/// τ = batch/len): the stochastic baseline of §3.1.3.
+/// τ = batch/len): the stochastic baseline of §3.1.3. Its
+/// `max_violation` is only the max over the *sampled* batch — a
+/// `0.0` outcome is NOT a feasibility certificate (see
+/// [`OracleOutcome`]); solves using it disable violation stopping.
 pub struct SampledListOracle {
     pub constraints: Vec<Constraint>,
     pub batch: usize,
     pub rng: crate::util::Rng,
+    /// Reporting tolerance, symmetric with [`ListOracle::tol`].
+    pub tol: f64,
 }
 
 impl<F: BregmanFunction> Oracle<F> for SampledListOracle {
@@ -103,7 +135,11 @@ impl<F: BregmanFunction> Oracle<F> for SampledListOracle {
         for _ in 0..self.batch.min(n) {
             let c = &self.constraints[self.rng.below(n)];
             let v = c.violation(sink.x());
-            out.max_violation = out.max_violation.max(v);
+            if v > self.tol {
+                out.max_violation = out.max_violation.max(v);
+            }
+            // Delivered regardless: satisfied rows with dual history
+            // still need their relaxation projection.
             sink.project_and_remember(c);
             out.found += 1;
         }
@@ -161,3 +197,87 @@ fn _assert_object_safe(_: &dyn ProjectionSink) {}
 
 #[allow(unused)]
 fn _solver_is_referenced(_: &Solver<super::bregman::DiagonalQuadratic>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal sink that records deliveries without projecting.
+    struct RecordingSink {
+        x: Vec<f64>,
+        remembered: usize,
+    }
+
+    impl ProjectionSink for RecordingSink {
+        fn x(&self) -> &[f64] {
+            &self.x
+        }
+        fn remember(&mut self, _c: &Constraint) {
+            self.remembered += 1;
+        }
+        fn project_and_remember(&mut self, _c: &Constraint) {
+            self.remembered += 1;
+        }
+    }
+
+    #[test]
+    fn list_oracle_tol_is_symmetric_between_reporting_and_certificate() {
+        // Two constraints violated by 0.05 and 0.20 at x.
+        let cons = vec![
+            Constraint::new(vec![0], vec![1.0], 1.0),
+            Constraint::new(vec![1], vec![1.0], 1.0),
+        ];
+        let mut sink = RecordingSink { x: vec![1.05, 1.20], remembered: 0 };
+        // tol below both: both delivered, certificate reports the worst.
+        let mut oracle = ListOracle::with_tol(cons.clone(), 1e-3);
+        let out = Oracle::<crate::core::bregman::DiagonalQuadratic>::separate(
+            &mut oracle,
+            &mut sink,
+        );
+        assert_eq!(out.found, 2);
+        assert!((out.max_violation - 0.20).abs() < 1e-12);
+        // tol between the two violations: the sub-tol row is neither
+        // delivered nor counted into the certificate.
+        let mut sink = RecordingSink { x: vec![1.05, 1.20], remembered: 0 };
+        let mut oracle = ListOracle::with_tol(cons.clone(), 0.1);
+        let out = Oracle::<crate::core::bregman::DiagonalQuadratic>::separate(
+            &mut oracle,
+            &mut sink,
+        );
+        assert_eq!(out.found, 1);
+        assert_eq!(sink.remembered, 1);
+        assert!((out.max_violation - 0.20).abs() < 1e-12);
+        // tol above both: max_violation == 0 is the feasibility
+        // certificate, and — symmetrically — nothing is delivered.
+        let mut sink = RecordingSink { x: vec![1.05, 1.20], remembered: 0 };
+        let mut oracle = ListOracle::with_tol(cons, 0.5);
+        let out = Oracle::<crate::core::bregman::DiagonalQuadratic>::separate(
+            &mut oracle,
+            &mut sink,
+        );
+        assert_eq!(out.found, 0);
+        assert_eq!(sink.remembered, 0);
+        assert_eq!(out.max_violation, 0.0);
+    }
+
+    #[test]
+    fn sampled_oracle_respects_tol_in_certificate() {
+        let cons = vec![Constraint::new(vec![0], vec![1.0], 1.0)];
+        let mut sink = RecordingSink { x: vec![1.05], remembered: 0 };
+        let mut oracle = SampledListOracle {
+            constraints: cons,
+            batch: 4,
+            rng: crate::util::Rng::new(3),
+            tol: 0.1,
+        };
+        let out = Oracle::<crate::core::bregman::DiagonalQuadratic>::separate(
+            &mut oracle,
+            &mut sink,
+        );
+        // Sub-tol violations are still delivered (relaxation needs them)
+        // but never leak into the certificate.
+        assert!(out.found > 0);
+        assert!(sink.remembered > 0);
+        assert_eq!(out.max_violation, 0.0);
+    }
+}

@@ -11,6 +11,7 @@
 use super::active_set::ActiveSet;
 use super::bregman::BregmanFunction;
 use super::constraint::Constraint;
+use super::engine::{self, SweepExecutor, SweepStrategy};
 use super::oracle::{Oracle, OracleOutcome, ProjectionSink};
 use crate::util::Stopwatch;
 
@@ -37,6 +38,11 @@ pub struct SolverConfig {
     /// Dual values with |z| below this are treated as zero by FORGET
     /// (guards against floating-point dust keeping dead constraints).
     pub z_tol: f64,
+    /// Which sweep executor runs the projection sweeps (see
+    /// [`SweepStrategy`]). `Sequential` reproduces the historical solver
+    /// bit for bit; `ShardedParallel` runs support-disjoint rows
+    /// concurrently with deterministic results.
+    pub sweep: SweepStrategy,
 }
 
 impl Default for SolverConfig {
@@ -49,6 +55,7 @@ impl Default for SolverConfig {
             projection_budget: None,
             record_trace: true,
             z_tol: 0.0,
+            sweep: SweepStrategy::Sequential,
         }
     }
 }
@@ -94,6 +101,10 @@ pub struct Solver<F: BregmanFunction> {
     pub projections: usize,
     /// Total dual movement `Σ|c|` of the most recent sweep.
     pub last_dual_movement: f64,
+    /// The projection engine executing sweeps (chosen by `config.sweep`).
+    executor: Box<dyn SweepExecutor<F>>,
+    /// Reused FORGET compaction-map buffer.
+    slot_map: Vec<u32>,
 }
 
 /// The sink implementation the solver exposes to oracles.
@@ -156,38 +167,56 @@ impl<F: BregmanFunction> Solver<F> {
     /// Start at the unconstrained minimiser (`∇f(x⁰) = 0`, line 1).
     pub fn new(f: F, config: SolverConfig) -> Solver<F> {
         let x = f.argmin();
-        Solver { f, x, active: ActiveSet::new(), config, projections: 0, last_dual_movement: 0.0 }
+        let executor = engine::executor_for::<F>(config.sweep);
+        Solver {
+            f,
+            x,
+            active: ActiveSet::new(),
+            config,
+            projections: 0,
+            last_dual_movement: 0.0,
+            executor,
+            slot_map: Vec::new(),
+        }
+    }
+
+    /// Swap the sweep executor (e.g. to compare strategies on one
+    /// solver). Also updates `config.sweep` to match.
+    pub fn set_sweep_strategy(&mut self, strategy: SweepStrategy) {
+        self.config.sweep = strategy;
+        self.executor = engine::executor_for::<F>(strategy);
+    }
+
+    /// Name of the active sweep executor (traces/benches).
+    pub fn sweep_executor_name(&self) -> &'static str {
+        self.executor.name()
     }
 
     /// One Bregman projection with dual correction onto remembered row `r`
     /// (Algorithm 3, lines 2–6). Returns true if `x` moved.
     #[inline]
     pub fn project_row(&mut self, r: usize) -> bool {
-        let view = self.active.view(r);
-        let theta = self.f.theta(&self.x, view);
-        let z = self.active.z(r);
-        let step = z.min(theta);
-        if step == 0.0 {
+        let moved = engine::project_row_in_place(&self.f, &mut self.x, &mut self.active, r);
+        if moved == 0.0 {
             return false;
         }
-        self.f.apply(&mut self.x, view, step);
-        self.active.set_z(r, z - step);
         self.projections += 1;
-        self.last_dual_movement += step.abs();
+        self.last_dual_movement += moved;
         true
     }
 
-    /// One full sweep over the remembered list. Returns projections done.
+    /// One full sweep over the remembered list, delegated to the
+    /// configured [`SweepExecutor`]. Returns projections done.
     pub fn project_sweep(&mut self) -> usize {
-        let before = self.projections;
-        self.last_dual_movement = 0.0;
-        for r in 0..self.active.len() {
-            self.project_row(r);
-        }
-        self.projections - before
+        let stats = self.executor.sweep(&self.f, &mut self.x, &mut self.active);
+        self.projections += stats.projections;
+        self.last_dual_movement = stats.dual_movement;
+        stats.projections
     }
 
-    /// FORGET step: drop rows with zero dual. Returns how many.
+    /// FORGET step: drop rows with zero dual. Returns how many. The
+    /// stable-slot compaction map is forwarded to the sweep executor so
+    /// a cached shard plan survives the compaction without replanning.
     pub fn forget(&mut self) -> usize {
         let z_tol = self.config.z_tol;
         if z_tol > 0.0 {
@@ -197,7 +226,16 @@ impl<F: BregmanFunction> Solver<F> {
                 }
             }
         }
-        self.active.forget_inactive()
+        let generation_before = self.active.generation();
+        let dropped = self.active.forget_inactive_with_map(&mut self.slot_map);
+        if dropped > 0 {
+            self.executor.after_forget(
+                &self.slot_map,
+                generation_before,
+                self.active.generation(),
+            );
+        }
+        dropped
     }
 
     /// Run the full PROJECT AND FORGET loop against `oracle`.
@@ -381,6 +419,92 @@ mod tests {
         let _ = s.solve(oracle);
         for r in 0..s.active.len() {
             assert!(s.active.z(r) >= -1e-12, "negative dual at {r}");
+        }
+    }
+
+    #[test]
+    fn kkt_identity_maintained_sharded() {
+        let d = vec![3.0, 0.0, -1.0];
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0], vec![1.0], 1.0),
+            Constraint::new(vec![0, 1], vec![1.0, -1.0], 0.0),
+            Constraint::new(vec![2], vec![-1.0], 0.0),
+        ]);
+        let cfg = SolverConfig {
+            max_iters: 50,
+            sweep: SweepStrategy::ShardedParallel { threads: 4 },
+            ..Default::default()
+        };
+        let mut s = Solver::new(f, cfg);
+        let res = s.solve(oracle);
+        let grad: Vec<f64> = s.x.iter().zip(&d).map(|(&x, &di)| x - di).collect();
+        assert!(s.kkt_residual(&grad) < 1e-9, "KKT violated: {}", s.kkt_residual(&grad));
+        assert!(res.total_projections > 0);
+        assert_eq!(s.sweep_executor_name(), "sharded-parallel");
+    }
+
+    #[test]
+    fn duals_stay_nonnegative_sharded() {
+        let f = DiagonalQuadratic::unweighted(vec![5.0, -5.0, 2.0, 0.0]);
+        let oracle = ListOracle::new(vec![
+            Constraint::new(vec![0, 1], vec![1.0, 1.0], 0.5),
+            Constraint::new(vec![1, 2], vec![-1.0, 1.0], 0.25),
+            Constraint::new(vec![0, 3], vec![1.0, -2.0], 1.0),
+        ]);
+        let cfg = SolverConfig {
+            max_iters: 200,
+            sweep: SweepStrategy::ShardedParallel { threads: 3 },
+            ..Default::default()
+        };
+        let mut s = Solver::new(f, cfg);
+        let _ = s.solve(oracle);
+        for r in 0..s.active.len() {
+            assert!(s.active.z(r) >= -1e-12, "negative dual at {r}");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_sequential_objective() {
+        // Overlapping constraint soup around a known interior point, so
+        // both strategies must converge to the same (unique) projection.
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        let dim = 12;
+        let interior: Vec<f64> = (0..dim).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut cons = Vec::new();
+        for _ in 0..40 {
+            let nnz = 1 + rng.below(4);
+            let idx: Vec<u32> =
+                rng.sample_indices(dim, nnz).into_iter().map(|i| i as u32).collect();
+            let coeffs: Vec<f64> = (0..nnz).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let at: f64 =
+                idx.iter().zip(&coeffs).map(|(&i, &a)| a * interior[i as usize]).sum();
+            cons.push(Constraint::new(idx, coeffs, at + rng.uniform(0.05, 0.6)));
+        }
+        let d: Vec<f64> = (0..dim).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let mut solve = |sweep: SweepStrategy| {
+            let cfg = SolverConfig {
+                max_iters: 20000,
+                violation_tol: 1e-10,
+                dual_tol: 1e-10,
+                record_trace: false,
+                sweep,
+                ..Default::default()
+            };
+            let mut s = Solver::new(DiagonalQuadratic::unweighted(d.clone()), cfg);
+            let res = s.solve(ListOracle::new(cons.clone()));
+            assert!(res.converged, "{:?} did not converge", sweep);
+            (s.f.value(&res.x), res.x)
+        };
+        let (obj_seq, x_seq) = solve(SweepStrategy::Sequential);
+        let (obj_par, x_par) = solve(SweepStrategy::ShardedParallel { threads: 4 });
+        assert!(
+            (obj_seq - obj_par).abs() <= 1e-6 * (1.0 + obj_seq.abs()),
+            "objectives diverge: {obj_seq} vs {obj_par}"
+        );
+        for (a, b) in x_seq.iter().zip(&x_par) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
     }
 

@@ -20,6 +20,7 @@
 
 use super::metric_oracle::{MetricOracle, OracleMode};
 use crate::core::bregman::DiagonalQuadratic;
+use crate::core::engine::SweepStrategy;
 use crate::core::solver::{Solver, SolverConfig, SolverResult};
 use crate::graph::generators::SignedGraph;
 use crate::graph::Graph;
@@ -156,6 +157,8 @@ pub struct CcConfig {
     pub max_iters: usize,
     pub threads: usize,
     pub record_trace: bool,
+    /// Projection-sweep executor (sequential vs sharded parallel).
+    pub sweep: SweepStrategy,
 }
 
 impl CcConfig {
@@ -169,6 +172,7 @@ impl CcConfig {
             max_iters: 200,
             threads: crate::util::pool::default_threads(),
             record_trace: true,
+            sweep: SweepStrategy::Sequential,
         }
     }
 
@@ -182,6 +186,7 @@ impl CcConfig {
             max_iters: 300,
             threads: crate::util::pool::default_threads(),
             record_trace: true,
+            sweep: SweepStrategy::Sequential,
         }
     }
 }
@@ -207,6 +212,9 @@ pub fn solve_cc(inst: &CcInstance, cfg: &CcConfig, seed: u64) -> CcResult {
     oracle.upper_bound = Some(1.0);
     oracle.threads = cfg.threads;
     oracle.report_tol = (cfg.violation_tol * 1e-3).max(1e-12);
+    // Shard-bucketed delivery helps exactly when the sharded engine
+    // consumes it; sequential solves keep the historical slot order.
+    oracle.shard_bucket = matches!(cfg.sweep, SweepStrategy::ShardedParallel { .. });
     let solver_cfg = SolverConfig {
         max_iters: cfg.max_iters,
         inner_sweeps: cfg.inner_sweeps,
@@ -215,6 +223,7 @@ pub fn solve_cc(inst: &CcInstance, cfg: &CcConfig, seed: u64) -> CcResult {
         projection_budget: None,
         record_trace: cfg.record_trace,
         z_tol: 0.0,
+        sweep: cfg.sweep,
     };
     let mut solver = Solver::new(t.f.clone(), solver_cfg);
     let result = solver.solve(oracle);

@@ -50,6 +50,14 @@ pub struct MetricOracle {
     pub nonneg: bool,
     /// Optional upper bound per edge (correlation clustering's x ≤ 1).
     pub upper_bound: Option<f64>,
+    /// Collect mode only: deliver the found constraints pre-bucketed by
+    /// support-disjoint shard, so the engine's first-fit planner
+    /// reconstructs the buckets as large shards. Off by default because
+    /// it reorders delivery (and therefore slot order): the problem
+    /// drivers enable it exactly when `SweepStrategy::ShardedParallel`
+    /// is selected, keeping sequential solves bit-identical to the
+    /// historical delivery order.
+    pub shard_bucket: bool,
     scratch: DijkstraScratch,
 }
 
@@ -63,6 +71,7 @@ impl MetricOracle {
             report_tol: 1e-12,
             nonneg: true,
             upper_bound: None,
+            shard_bucket: false,
             scratch: DijkstraScratch::new(n),
         }
     }
@@ -186,11 +195,49 @@ impl MetricOracle {
             }
             list
         });
-        for part in found {
-            for (viol, c) in part {
-                out.max_violation = out.max_violation.max(viol);
-                out.found += 1;
-                sink.remember(&c);
+        let mut all: Vec<(f64, Constraint)> = found.into_iter().flatten().collect();
+        for &(viol, _) in &all {
+            out.max_violation = out.max_violation.max(viol);
+            out.found += 1;
+        }
+        if !self.shard_bucket {
+            // Historical delivery order (deterministic: per-source lists
+            // concatenated in source order).
+            for (_, c) in &all {
+                sink.remember(c);
+            }
+        } else {
+            // Deliver pre-bucketed by support-disjoint shard: consecutive
+            // slots then form long disjoint runs, so the engine's
+            // first-fit planner (which scans in slot order) reconstructs
+            // these exact buckets as shards — bigger shards, cheaper
+            // planning. The bucketing is the same epoch trick as the
+            // planner; delivery order within a bucket follows discovery
+            // order, so the set of delivered constraints is unchanged.
+            let mut owner = vec![0u32; self.graph.num_edges()];
+            let mut epoch = 0u32;
+            let mut leftover: Vec<(f64, Constraint)> = Vec::new();
+            const MAX_BUCKET_PASSES: u32 = 32;
+            while !all.is_empty() {
+                epoch += 1;
+                if epoch > MAX_BUCKET_PASSES {
+                    // Adversarial conflict chains: deliver the rest as-is.
+                    for (_, c) in &all {
+                        sink.remember(c);
+                    }
+                    break;
+                }
+                for (viol, c) in all.drain(..) {
+                    if c.indices.iter().any(|&i| owner[i as usize] == epoch) {
+                        leftover.push((viol, c));
+                    } else {
+                        for &i in &c.indices {
+                            owner[i as usize] = epoch;
+                        }
+                        sink.remember(&c);
+                    }
+                }
+                std::mem::swap(&mut all, &mut leftover);
             }
         }
         self.deliver_box(sink, &mut out);
@@ -276,6 +323,34 @@ mod tests {
         let (_, xa) = solve_nearness_with(OracleMode::ProjectOnFind, 10, 3);
         let (_, xb) = solve_nearness_with(OracleMode::Collect, 10, 3);
         for (a, b) in xa.iter().zip(&xb) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn shard_bucketed_collect_reaches_same_optimum() {
+        // Bucketing only permutes delivery order; the strictly convex
+        // program still has one optimum, and the sharded engine must
+        // agree with the plain sequential Collect solve.
+        let mut rng = Rng::new(3);
+        let inst = crate::graph::generators::type1_complete(10, &mut rng);
+        let g = Arc::new(inst.graph.clone());
+        let f = DiagonalQuadratic::unweighted(inst.weights.clone());
+        let mut oracle = MetricOracle::new(g, OracleMode::Collect);
+        oracle.shard_bucket = true;
+        let cfg = SolverConfig {
+            max_iters: 300,
+            inner_sweeps: 1,
+            violation_tol: 1e-8,
+            dual_tol: 1e-8,
+            sweep: crate::core::engine::SweepStrategy::ShardedParallel { threads: 2 },
+            ..Default::default()
+        };
+        let mut solver = Solver::new(f, cfg);
+        let res = solver.solve(oracle);
+        assert!(res.converged, "bucketed collect did not converge");
+        let (_, xb) = solve_nearness_with(OracleMode::Collect, 10, 3);
+        for (a, b) in res.x.iter().zip(&xb) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
     }

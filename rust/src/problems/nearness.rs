@@ -9,6 +9,7 @@
 
 use super::metric_oracle::{MetricOracle, OracleMode};
 use crate::core::bregman::{BregmanFunction, DiagonalQuadratic};
+use crate::core::engine::SweepStrategy;
 use crate::core::solver::{Solver, SolverConfig, SolverResult};
 use crate::graph::generators::WeightedInstance;
 use crate::graph::Graph;
@@ -28,6 +29,8 @@ pub struct NearnessConfig {
     /// Constraint delivery mode (paper uses project-on-find).
     pub mode: OracleMode,
     pub record_trace: bool,
+    /// Projection-sweep executor (sequential vs sharded parallel).
+    pub sweep: SweepStrategy,
 }
 
 impl Default for NearnessConfig {
@@ -39,6 +42,7 @@ impl Default for NearnessConfig {
             max_iters: 500,
             mode: OracleMode::ProjectOnFind,
             record_trace: true,
+            sweep: SweepStrategy::Sequential,
         }
     }
 }
@@ -58,6 +62,9 @@ pub fn solve_nearness(inst: &WeightedInstance, cfg: &NearnessConfig) -> Nearness
     let f = DiagonalQuadratic::new(inst.weights.clone(), w);
     let mut oracle = MetricOracle::new(Arc::new(inst.graph.clone()), cfg.mode);
     oracle.report_tol = (cfg.violation_tol * 1e-3).max(1e-12);
+    // Shard-bucketed delivery helps exactly when the sharded engine
+    // consumes it; sequential solves keep the historical slot order.
+    oracle.shard_bucket = matches!(cfg.sweep, SweepStrategy::ShardedParallel { .. });
     let solver_cfg = SolverConfig {
         max_iters: cfg.max_iters,
         // Algorithm 8: one extra sweep after the on-find projections.
@@ -67,6 +74,7 @@ pub fn solve_nearness(inst: &WeightedInstance, cfg: &NearnessConfig) -> Nearness
         projection_budget: None,
         record_trace: cfg.record_trace,
         z_tol: 0.0,
+        sweep: cfg.sweep,
     };
     let mut solver = Solver::new(f, solver_cfg);
     let result = solver.solve(oracle);

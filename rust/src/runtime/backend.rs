@@ -1,0 +1,171 @@
+//! The real PJRT-backed runtime (requires the `xla` bindings; compiled
+//! only with the `pjrt` cargo feature).
+
+use super::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Declared argument signature of an artifact.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One loaded, compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute on `f32` buffers shaped per the manifest; returns the
+    /// tuple elements as flat `f32` vectors.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.args.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.args.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.args) {
+            let want: usize = spec.shape.iter().product();
+            anyhow::ensure!(
+                buf.len() == want,
+                "{}: input size {} != shape {:?}",
+                self.name,
+                buf.len(),
+                spec.shape
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            out.push(part.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The artifact registry: PJRT client + all compiled entry points.
+pub struct Runtime {
+    pub artifacts: HashMap<String, Artifact>,
+    pub platform: String,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let manifest =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let platform = client.platform_name();
+        let mut artifacts = HashMap::new();
+        let entries = manifest
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?;
+        for entry in entries {
+            let name = entry
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?;
+            let mut args = Vec::new();
+            for a in entry.get("args").and_then(|a| a.as_arr()).unwrap_or(&[]) {
+                let shape = a
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                    .unwrap_or_default();
+                let dtype = a
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string();
+                args.push(ArgSpec { shape, dtype });
+            }
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            artifacts.insert(name.clone(), Artifact { name, args, exe });
+        }
+        Ok(Runtime { artifacts, platform })
+    }
+
+    /// Default artifact directory: `$PAF_ARTIFACTS` or `artifacts/`
+    /// found by walking up from the current directory.
+    pub fn default_dir() -> PathBuf {
+        super::locate_default_dir()
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not loaded"))
+    }
+
+    /// Dense APSP on a padded `[n, n]` matrix through the `apsp_n{n}`
+    /// artifact. `dist` is row-major, `f32::INFINITY` for non-edges;
+    /// the matrix must already be at an artifact-supported size.
+    pub fn apsp_padded(&self, dist: &mut [f32], n: usize) -> anyhow::Result<()> {
+        let art = self.get(&format!("apsp_n{n}"))?;
+        let out = art.run_f32(&[dist])?;
+        dist.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    /// One parallel projection sweep through `project_b{B}_k{K}`.
+    /// Returns (c, z_new, delta).
+    #[allow(clippy::type_complexity)]
+    pub fn projection_sweep(
+        &self,
+        b: usize,
+        k: usize,
+        xg: &[f32],
+        sign: &[f32],
+        winv: &[f32],
+        z: &[f32],
+        rhs: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let art = self.get(&format!("project_b{b}_k{k}"))?;
+        let mut out = art.run_f32(&[xg, sign, winv, z, rhs])?;
+        anyhow::ensure!(out.len() == 3, "projection artifact must return 3 outputs");
+        let delta = out.pop().unwrap();
+        let znew = out.pop().unwrap();
+        let c = out.pop().unwrap();
+        Ok((c, znew, delta))
+    }
+
+    /// Smallest padded APSP size that fits `n` nodes, if any artifact does.
+    pub fn apsp_size_for(&self, n: usize) -> Option<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("apsp_n").and_then(|s| s.parse().ok()))
+            .collect();
+        sizes.sort_unstable();
+        sizes.into_iter().find(|&s| s >= n)
+    }
+}

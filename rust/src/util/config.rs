@@ -15,15 +15,43 @@ pub struct Config {
     values: BTreeMap<String, String>,
 }
 
-/// Error type for config parsing/lookup.
-#[derive(Debug, thiserror::Error)]
+/// Error type for config parsing/lookup. (Display/Error are implemented
+/// by hand — this crate's offline policy avoids proc-macro crates like
+/// `thiserror`; see `util/mod.rs`.)
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io error reading config: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("line {0}: expected `key = value`, got {1:?}")]
+    Io(std::io::Error),
     Malformed(usize, String),
-    #[error("key {0:?}: cannot parse {1:?} as {2}")]
     BadValue(String, String, &'static str),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "io error reading config: {e}"),
+            ConfigError::Malformed(line, got) => {
+                write!(f, "line {line}: expected `key = value`, got {got:?}")
+            }
+            ConfigError::BadValue(key, raw, ty) => {
+                write!(f, "key {key:?}: cannot parse {raw:?} as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl Config {

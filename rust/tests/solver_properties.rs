@@ -254,6 +254,7 @@ fn property_random_oracle_matches_deterministic() {
             constraints: cons.clone(),
             batch: 8,
             rng: Rng::new(seed * 31 + 1),
+            tol: 0.0,
         });
         for (a, b) in det.x.iter().zip(&sto.x) {
             assert!((a - b).abs() < 1e-4, "seed {seed}: {a} vs {b}");

@@ -1,0 +1,120 @@
+//! Offline stand-in for the `anyhow` crate, in the spirit of the main
+//! crate's `util` substrate (no network, no proc macros). Implements the
+//! subset this workspace uses: [`Error`], [`Result`], [`anyhow!`],
+//! [`ensure!`], and `?`-conversion from any `std::error::Error`.
+//!
+//! The one intentional parallel with the real crate: [`Error`] does NOT
+//! implement `std::error::Error` itself, which is what keeps the blanket
+//! `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// A boxed dynamic error with a display-oriented `Debug` (so
+/// `fn main() -> anyhow::Result<()>` prints the message, not the
+/// struct).
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Construct from a plain message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(Message(message.to_string())) }
+    }
+
+    /// Borrow the underlying error.
+    pub fn as_dyn(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        &*self.inner
+    }
+}
+
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Message {}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        while let Some(s) = source {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] when `$cond` is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Return early with a formatted [`Error`] unconditionally.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // From<ParseIntError>
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+        let e = parse("-1").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -1");
+        let io: Error = std::io::Error::other("boom").into();
+        assert_eq!(io.to_string(), "boom");
+        assert_eq!(format!("{:?}", anyhow!("a {}", 1)), "a 1");
+    }
+}
