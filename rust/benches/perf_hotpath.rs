@@ -5,11 +5,19 @@
 //!   P1  separation-oracle round (Dijkstra scan + witness extraction)
 //!   P2  projection sweep throughput (projections/second), with a
 //!       sweep-strategy axis: sequential Gauss–Seidel vs the sharded
-//!       parallel executor at 2 and 4 threads
+//!       executor (parallel θ+apply on the persistent pool) at 2 and 4
+//!       threads
 //!   P3  full metric nearness solve (n = 260, type 1)
-//!   P4  full dense CC solve (K_120 planted)
+//!   P4  full dense CC solve (K_120 planted), with the cross-PR
+//!       trajectory axis: sequential vs sharded vs sharded+overlap
+//!       (oracle scan overlapped with the sweeps), all in Collect mode
+//!       so only the runtime changes between variants
 //!   P5  active-set merge/forget churn (insert + forget cycles)
 //!   P6  native blocked min-plus APSP (the L1 kernel's CPU twin)
+//!
+//! All timings are also written to `reports/BENCH_perf_hotpath.json`
+//! (machine-readable; see `BenchCtx::write_json`) so the perf trajectory
+//! is tracked across PRs.
 
 use paf::core::bregman::DiagonalQuadratic;
 use paf::core::constraint::Constraint;
@@ -26,23 +34,24 @@ use std::sync::Arc;
 
 fn main() {
     let ctx = BenchCtx::from_env();
+    let mut all = Vec::new();
 
     // P1: one oracle round on a fresh (violation-rich) instance.
     {
         let mut rng = Rng::new(51);
         let inst = type1_complete(ctx.scaled(300), &mut rng);
         let f = DiagonalQuadratic::unweighted(inst.weights.clone());
-        ctx.bench("P1/oracle-round", |_| {
+        all.push(ctx.bench("P1/oracle-round", |_| {
             let oracle = MetricOracle::new(Arc::new(inst.graph.clone()), OracleMode::ProjectOnFind);
             let cfg = SolverConfig { max_iters: 1, record_trace: false, ..Default::default() };
             let mut s = Solver::new(f.clone(), cfg);
             s.solve(oracle)
-        });
+        }));
     }
 
     // P2: sweep throughput over a synthetic active set, across sweep
-    // strategies (the tentpole's sequential-vs-sharded axis; duals are
-    // re-seeded per run so every strategy does identical work).
+    // strategies (the sequential-vs-sharded axis; duals are re-seeded
+    // per run so every strategy does identical work).
     {
         let mut rng = Rng::new(52);
         let m = 40_000;
@@ -66,19 +75,24 @@ fn main() {
             ("sharded-t4", SweepStrategy::ShardedParallel { threads: 4 }),
         ] {
             s.set_sweep_strategy(strategy);
-            let stats = ctx.bench(&format!("P2/sweep-20k-rows/{label}"), |_| {
-                // Reset the iterate and duals so each run sweeps the
-                // same state (and the strategies are comparable).
+            // Reset the iterate and duals before every sweep so each run
+            // sweeps the same state (strategies stay comparable), but
+            // keep the O(m + rows) reset *outside* the timed region —
+            // timing it would compress the very strategy differences the
+            // cross-PR JSON tracks.
+            let stats = ctx.bench_marked(&format!("P2/sweep-20k-rows/{label}"), |_, region| {
                 s.x.copy_from_slice(&d);
                 for (r, &z) in seed_z.iter().enumerate() {
                     s.active.set_z(r, z);
                 }
+                region.start();
                 s.project_sweep()
             });
             println!(
                 "    -> {:.2} M row-visits/s over {rows} rows ({label})",
                 rows as f64 / stats.min() / 1e6
             );
+            all.push(stats);
         }
     }
 
@@ -86,33 +100,62 @@ fn main() {
     {
         let mut rng = Rng::new(53);
         let inst = type1_complete(ctx.scaled(260), &mut rng);
-        ctx.bench("P3/nearness-n260", |_| {
+        all.push(ctx.bench("P3/nearness-n260", |_| {
             let res = solve_nearness(
                 &inst,
                 &NearnessConfig { violation_tol: 1e-2, ..Default::default() },
             );
             assert!(res.result.converged);
             res
-        });
+        }));
     }
 
-    // P4: dense CC solve.
+    // P4: dense CC solve. The first case is the historical axis
+    // (ProjectOnFind + sequential sweep); the Collect-mode cases isolate
+    // the runtime axis — same oracle, same constraints, only the sweep
+    // executor and the oracle/sweep overlap change.
     {
         let mut rng = Rng::new(54);
         let g = paf::graph::Graph::complete(ctx.scaled(120));
         let (sg, _) = planted_signed(g, 8, 0.1, &mut rng);
         let inst = CcInstance::from_signed(&sg);
-        ctx.bench("P4/cc-dense-K120", |_| {
+        all.push(ctx.bench("P4/cc-dense-K120", |_| {
             let res = solve_cc(&inst, &CcConfig::dense(), 1);
             assert!(res.result.converged);
             res
-        });
+        }));
+        for (label, sweep, overlap) in [
+            ("collect-seq", SweepStrategy::Sequential, false),
+            ("sharded-t4", SweepStrategy::ShardedParallel { threads: 4 }, false),
+            ("sharded-t4-overlap", SweepStrategy::ShardedParallel { threads: 4 }, true),
+        ] {
+            let cfg = CcConfig {
+                mode: OracleMode::Collect,
+                // Collect mode converges in fewer, heavier rounds than
+                // ProjectOnFind; give it sweep and iteration headroom so
+                // an unconverged run can't silently pollute the cross-PR
+                // JSON with an incomparable timing (hence the assert).
+                inner_sweeps: 4,
+                max_iters: 600,
+                sweep,
+                overlap,
+                ..CcConfig::dense()
+            };
+            let mut iters = 0;
+            all.push(ctx.bench(&format!("P4/cc-dense-K120/{label}"), |_| {
+                let res = solve_cc(&inst, &cfg, 1);
+                assert!(res.result.converged, "{label} did not converge");
+                iters = res.result.iterations;
+                res
+            }));
+            println!("    -> {iters} iterations ({label})");
+        }
     }
 
     // P5: active-set churn (insert + forget).
     {
         let mut rng = Rng::new(55);
-        ctx.bench("P5/active-set-churn", |_| {
+        all.push(ctx.bench("P5/active-set-churn", |_| {
             let mut set = paf::core::active_set::ActiveSet::new();
             for round in 0..50 {
                 for _ in 0..2000 {
@@ -127,7 +170,7 @@ fn main() {
                 let _ = round;
             }
             set.len()
-        });
+        }));
     }
 
     // P6: native blocked min-plus APSP (L1 kernel's CPU twin).
@@ -138,11 +181,15 @@ fn main() {
         let w: Vec<f64> = (0..g.num_edges()).map(|_| rng.uniform(0.1, 2.0)).collect();
         let base = DistMatrix::from_graph(&g, &w);
         for block in [32usize, 64, 128] {
-            ctx.bench(&format!("P6/fw-blocked-{block}"), |_| {
+            all.push(ctx.bench(&format!("P6/fw-blocked-{block}"), |_| {
                 let mut m = base.clone();
                 floyd_warshall_blocked(&mut m, block);
                 m
-            });
+            }));
         }
+    }
+
+    if let Err(e) = ctx.write_json("perf_hotpath", &all) {
+        eprintln!("could not write BENCH_perf_hotpath.json: {e}");
     }
 }

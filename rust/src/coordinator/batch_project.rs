@@ -171,8 +171,16 @@ impl SweepExecutor<DiagonalQuadratic> for PjrtSweep<'_> {
         stats
     }
 
-    fn after_forget(&mut self, map: &[u32], generation_before: u64, generation_after: u64) {
-        if self.plan.generation() == generation_before {
+    fn after_forget(
+        &mut self,
+        map: &[u32],
+        instance: u64,
+        generation_before: u64,
+        generation_after: u64,
+    ) {
+        // Same (instance, generation) key as the native sharded executor:
+        // a foreign set's compaction map must never touch this plan.
+        if self.plan.instance() == instance && self.plan.generation() == generation_before {
             self.plan.remap_after_forget(map, generation_after);
         }
     }

@@ -7,21 +7,66 @@
 
 use super::constraint::{Constraint, ConstraintKey, ConstraintStore, ConstraintView};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-unique [`ActiveSet::instance_id`] source (0 is never issued,
+/// so a default [`crate::core::engine::ShardPlan`] matches no set).
+static NEXT_INSTANCE_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_instance_id() -> u64 {
+    NEXT_INSTANCE_ID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// The active-set sketch: constraints believed active, with duals.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug)]
 pub struct ActiveSet {
     store: ConstraintStore,
     index: HashMap<ConstraintKey, u32>,
     /// Bumped on every membership change (new slot, forget, clear) —
     /// NOT on dual updates. Shard plans and other slot-keyed caches use
-    /// it to detect staleness without diffing the set.
+    /// it (together with [`ActiveSet::instance_id`]) to detect staleness
+    /// without diffing the set.
     generation: u64,
+    /// Process-unique identity of this set. Generations are per-instance
+    /// counters, so a cache keyed on the generation alone could be
+    /// aliased by a *different* set that happens to share the count —
+    /// with the sharded executor's scatter-safe parallel apply that
+    /// aliasing would be a data race, not just wrong numbers. Clones get
+    /// a fresh id: they start identical but diverge independently.
+    instance_id: u64,
+}
+
+impl Default for ActiveSet {
+    fn default() -> Self {
+        ActiveSet::new()
+    }
+}
+
+impl Clone for ActiveSet {
+    fn clone(&self) -> Self {
+        ActiveSet {
+            store: self.store.clone(),
+            index: self.index.clone(),
+            generation: self.generation,
+            instance_id: next_instance_id(),
+        }
+    }
 }
 
 impl ActiveSet {
     pub fn new() -> ActiveSet {
-        ActiveSet { store: ConstraintStore::new(), index: HashMap::new(), generation: 0 }
+        ActiveSet {
+            store: ConstraintStore::new(),
+            index: HashMap::new(),
+            generation: 0,
+            instance_id: next_instance_id(),
+        }
+    }
+
+    /// Process-unique identity of this instance (see the field docs).
+    #[inline]
+    pub fn instance_id(&self) -> u64 {
+        self.instance_id
     }
 
     /// Membership generation: two observations with equal generation saw

@@ -16,6 +16,7 @@
 //! 2007); entropy is included to exercise the engine's generality.
 
 use super::constraint::ConstraintView;
+use crate::util::pool::DisjointCell;
 
 /// A Bregman function over `R^m` supporting sparse hyperplane projections.
 pub trait BregmanFunction: Send + Sync {
@@ -36,6 +37,23 @@ pub trait BregmanFunction: Send + Sync {
 
     /// Apply the primal move `∇f(x') − ∇f(x) = step·a` in place.
     fn apply(&self, x: &mut [f64], c: ConstraintView<'_>, step: f64);
+
+    /// Fused θ + clamped apply for one row, reading and writing the
+    /// iterate through a shared [`DisjointCell`] so that support-disjoint
+    /// rows can be projected *and applied* concurrently (the sharded
+    /// executor's scatter-safe parallel apply). Computes `θ`, clamps
+    /// `step = min(z, θ)`, applies the primal move, and returns the step
+    /// (`0.0` for a no-op). Implementations must be arithmetic-identical
+    /// to `theta` followed by `apply` on exclusively-owned data — that
+    /// identity is what keeps the sharded sweep bit-deterministic across
+    /// thread counts (and equal to its serial in-shard path).
+    ///
+    /// # Safety
+    /// No other thread may read or write any index in `c.indices` for
+    /// the duration of the call. The sharded executor guarantees this via
+    /// the support-disjointness invariant of `ShardPlan`.
+    unsafe fn project_disjoint(&self, x: &DisjointCell<'_>, c: ConstraintView<'_>, z: f64)
+        -> f64;
 }
 
 /// `f(x) = ½ (x − d)ᵀ W (x − d)` with diagonal positive `W`.
@@ -128,6 +146,34 @@ impl BregmanFunction for DiagonalQuadratic {
             x[i] += step * a * self.w_inv[i];
         }
     }
+
+    #[inline]
+    unsafe fn project_disjoint(
+        &self,
+        x: &DisjointCell<'_>,
+        c: ConstraintView<'_>,
+        z: f64,
+    ) -> f64 {
+        // Same operations in the same order as `theta` + `apply`, so the
+        // result is bit-identical to the exclusive-access path.
+        let mut dot = 0.0;
+        let mut denom = 0.0;
+        for (&i, &a) in c.indices.iter().zip(c.coeffs) {
+            let i = i as usize;
+            dot += a * x.get(i);
+            denom += a * a * self.w_inv[i];
+        }
+        let theta = (c.rhs - dot) / denom;
+        let step = z.min(theta);
+        if step == 0.0 {
+            return 0.0;
+        }
+        for (&i, &a) in c.indices.iter().zip(c.coeffs) {
+            let i = i as usize;
+            x.add(i, step * a * self.w_inv[i]);
+        }
+        step
+    }
 }
 
 /// Negative entropy `f(x) = Σ x_i ln x_i − x_i` with zone `x > 0`.
@@ -149,25 +195,34 @@ impl Entropy {
 
     /// Solve `g(θ) = Σ a_e x_e exp(θ a_e) − b = 0` by Newton + bisection.
     fn solve_theta(x: &[f64], c: ConstraintView<'_>, tol: f64) -> f64 {
-        let g = |t: f64| -> (f64, f64) {
-            let mut v = 0.0;
-            let mut dv = 0.0;
-            for (&i, &a) in c.indices.iter().zip(c.coeffs) {
-                let e = x[i as usize] * (t * a).exp();
-                v += a * e;
-                dv += a * a * e;
-            }
-            (v - c.rhs, dv)
-        };
+        Entropy::solve_theta_with(
+            |t| {
+                let mut v = 0.0;
+                let mut dv = 0.0;
+                for (&i, &a) in c.indices.iter().zip(c.coeffs) {
+                    let e = x[i as usize] * (t * a).exp();
+                    v += a * e;
+                    dv += a * a * e;
+                }
+                (v - c.rhs, dv)
+            },
+            tol,
+        )
+    }
+
+    /// Safeguarded Newton + bisection on the strictly increasing `g`
+    /// given as `eval(θ) -> (g(θ), g'(θ))` — shared by the full-vector
+    /// and gathered-support paths so their arithmetic cannot drift.
+    fn solve_theta_with(eval: impl Fn(f64) -> (f64, f64), tol: f64) -> f64 {
         // Bracket the root: g is strictly increasing (dv > 0).
         let (mut lo, mut hi) = (-1.0f64, 1.0f64);
-        while g(lo).0 > 0.0 {
+        while eval(lo).0 > 0.0 {
             lo *= 2.0;
             if lo < -1e6 {
                 break;
             }
         }
-        while g(hi).0 < 0.0 {
+        while eval(hi).0 < 0.0 {
             hi *= 2.0;
             if hi > 1e6 {
                 break;
@@ -175,7 +230,7 @@ impl Entropy {
         }
         let mut t = 0.0;
         for _ in 0..100 {
-            let (v, dv) = g(t);
+            let (v, dv) = eval(t);
             if v.abs() < tol {
                 return t;
             }
@@ -220,6 +275,40 @@ impl BregmanFunction for Entropy {
             let i = i as usize;
             x[i] *= (step * a).exp();
         }
+    }
+
+    unsafe fn project_disjoint(
+        &self,
+        x: &DisjointCell<'_>,
+        c: ConstraintView<'_>,
+        z: f64,
+    ) -> f64 {
+        // Run the shared Newton solve reading the support through the
+        // cell each evaluation — the row's indices are exclusively owned
+        // for the whole call, so the values (and therefore the
+        // arithmetic, op for op) are identical to `theta`'s, with no
+        // per-row gather allocation in the parallel hot loop.
+        let theta = Entropy::solve_theta_with(
+            |t| {
+                let mut v = 0.0;
+                let mut dv = 0.0;
+                for (&i, &a) in c.indices.iter().zip(c.coeffs) {
+                    let e = x.get(i as usize) * (t * a).exp();
+                    v += a * e;
+                    dv += a * a * e;
+                }
+                (v - c.rhs, dv)
+            },
+            1e-12,
+        );
+        let step = z.min(theta);
+        if step == 0.0 {
+            return 0.0;
+        }
+        for (&i, &a) in c.indices.iter().zip(c.coeffs) {
+            x.scale(i as usize, (step * a).exp());
+        }
+        step
     }
 }
 
@@ -320,6 +409,51 @@ mod tests {
         assert!((f.divergence(&x, &y) - kl).abs() < 1e-12);
         assert!(f.divergence(&x, &y) > 0.0);
         assert!(f.divergence(&x, &x).abs() < 1e-15);
+    }
+
+    #[test]
+    fn quadratic_project_disjoint_matches_theta_apply() {
+        let f = DiagonalQuadratic::new(vec![0.5, -1.0, 2.0], vec![1.0, 2.0, 4.0]);
+        let c = Constraint::new(vec![0, 2], vec![1.0, -0.5], 0.25);
+        for z in [0.0, 0.1, 5.0] {
+            let mut xa = vec![1.0, 2.0, -0.5];
+            let theta = f.theta(&xa, view(&c));
+            let step = z.min(theta);
+            if step != 0.0 {
+                f.apply(&mut xa, view(&c), step);
+            }
+            let mut xb = vec![1.0, 2.0, -0.5];
+            let got = {
+                let cell = crate::util::pool::DisjointCell::new(&mut xb);
+                // SAFETY: exclusive access, no concurrency in this test.
+                unsafe { f.project_disjoint(&cell, view(&c), z) }
+            };
+            // Bitwise: the fused kernel must reproduce the two-step path.
+            assert_eq!(got, if step == 0.0 { 0.0 } else { step }, "z = {z}");
+            assert_eq!(xa, xb, "z = {z}");
+        }
+    }
+
+    #[test]
+    fn entropy_project_disjoint_matches_theta_apply() {
+        let f = Entropy::new(3);
+        let c = Constraint::new(vec![0, 1, 2], vec![1.0, 1.0, 1.0], 1.0);
+        for z in [0.0, 0.2, 10.0] {
+            let mut xa = vec![1.0, 0.5, 0.25];
+            let theta = f.theta(&xa, view(&c));
+            let step = z.min(theta);
+            if step != 0.0 {
+                f.apply(&mut xa, view(&c), step);
+            }
+            let mut xb = vec![1.0, 0.5, 0.25];
+            let got = {
+                let cell = crate::util::pool::DisjointCell::new(&mut xb);
+                // SAFETY: exclusive access, no concurrency in this test.
+                unsafe { f.project_disjoint(&cell, view(&c), z) }
+            };
+            assert_eq!(got, if step == 0.0 { 0.0 } else { step }, "z = {z}");
+            assert_eq!(xa, xb, "z = {z}");
+        }
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //! - [`sharded::ShardedSweep`] — the Ruggles/Veldt/Gleich parallel
 //!   scheme: rows are partitioned into support-disjoint shards by
 //!   [`shards::ShardPlan`], shards execute one after another, and the
-//!   rows *within* a shard are projected concurrently (their projections
-//!   commute because they touch disjoint coordinates of `x`);
+//!   rows *within* a shard are both projected **and applied**
+//!   concurrently on the persistent worker pool (their projections
+//!   commute and their writes are race-free because they touch disjoint
+//!   coordinates of `x` — the scatter-safe
+//!   `BregmanFunction::project_disjoint` path);
 //! - the PJRT-batched executor in `coordinator::batch_project`, which
 //!   gathers each shard into the padded `[B, K]` artifact layout instead
 //!   of running native arithmetic.
@@ -26,7 +29,7 @@ pub mod sharded;
 pub mod shards;
 
 pub use sequential::SequentialSweep;
-pub use sharded::ShardedSweep;
+pub use sharded::{parallel_min_rows_default, ShardedSweep, PARALLEL_MIN_ROWS};
 pub use shards::{ShardLimits, ShardPlan};
 
 use super::active_set::ActiveSet;
@@ -73,22 +76,51 @@ pub trait SweepExecutor<F: BregmanFunction> {
 
     /// FORGET notification: `map[old_slot]` is the row's new slot, or
     /// [`crate::core::constraint::SLOT_DROPPED`] if it was forgotten;
-    /// the generations bracket the compaction (the active set's value
-    /// just before and just after it). Executors with cached plans keyed
-    /// to `generation_before` remap instead of replanning.
-    fn after_forget(&mut self, map: &[u32], generation_before: u64, generation_after: u64) {
-        let _ = (map, generation_before, generation_after);
+    /// `instance` is the compacted set's `ActiveSet::instance_id` and the
+    /// generations bracket the compaction (the set's value just before
+    /// and just after it). Executors with cached plans keyed to
+    /// (`instance`, `generation_before`) remap instead of replanning;
+    /// both halves of the key matter — generations are per-instance
+    /// counters, so a map from a *different* set could otherwise be
+    /// applied to (or panic on) a foreign plan.
+    fn after_forget(
+        &mut self,
+        map: &[u32],
+        instance: u64,
+        generation_before: u64,
+        generation_after: u64,
+    ) {
+        let _ = (map, instance, generation_before, generation_after);
     }
 
     /// Human-readable name for traces and benches.
     fn name(&self) -> &'static str;
 }
 
-/// Build the executor for a strategy (used by `Solver::new`).
+/// Build the executor for a strategy with the default parallel-apply
+/// threshold (`PAF_PARALLEL_MIN_ROWS` or the tuned constant).
 pub fn executor_for<F: BregmanFunction>(strategy: SweepStrategy) -> Box<dyn SweepExecutor<F>> {
+    executor_with::<F>(strategy, None)
+}
+
+/// Build the executor for a strategy; `parallel_min_rows` overrides the
+/// sharded executor's serial/parallel threshold (`None` = env override or
+/// [`PARALLEL_MIN_ROWS`]). Used by `Solver::new` to thread the
+/// `SolverConfig::parallel_min_rows` knob through. Purely a scheduling
+/// choice — it never changes results.
+pub fn executor_with<F: BregmanFunction>(
+    strategy: SweepStrategy,
+    parallel_min_rows: Option<usize>,
+) -> Box<dyn SweepExecutor<F>> {
     match strategy {
         SweepStrategy::Sequential => Box::new(SequentialSweep::new()),
-        SweepStrategy::ShardedParallel { threads } => Box::new(ShardedSweep::new(threads)),
+        SweepStrategy::ShardedParallel { threads } => {
+            let mut exec = ShardedSweep::new(threads);
+            if let Some(rows) = parallel_min_rows {
+                exec.parallel_min_rows = rows.max(2);
+            }
+            Box::new(exec)
+        }
     }
 }
 

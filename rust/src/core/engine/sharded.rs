@@ -1,33 +1,55 @@
 //! Support-disjoint sharded parallel sweep (Ruggles, Veldt & Gleich).
 //!
 //! Shards run one after another; the rows inside a shard have pairwise
-//! disjoint supports, so their projections commute: computing every `θ`
-//! against the shard-entry snapshot of `x` and then applying the moves is
-//! *exactly* the sequential result for any within-shard order. The `θ`
-//! phase (the dot products — the dominant cost) fans out over
-//! `util::pool`; the apply phase and the `last_dual_movement` reduction
-//! run serially in slot order, which makes the whole sweep deterministic
-//! and independent of the thread count.
+//! disjoint supports, so their projections commute: each row reads and
+//! writes only its own coordinates of `x`, which makes any within-shard
+//! order — including a fully concurrent one — *exactly* the sequential
+//! result. Both phases of a shard fan out over the persistent pool
+//! (`util::pool`): workers run the fused θ+apply kernel
+//! [`BregmanFunction::project_disjoint`] through a [`DisjointCell`]
+//! (scatter-safe: disjointness makes the per-index writes race-free),
+//! and only the O(1)-per-row dual bookkeeping plus the `dual_movement`
+//! reduction stay serial, in slot order — which keeps the whole sweep
+//! deterministic and independent of the thread count.
 
 use super::shards::{ShardLimits, ShardPlan};
 use super::{project_row_in_place, SweepExecutor, SweepStats};
 use crate::core::active_set::ActiveSet;
 use crate::core::bregman::BregmanFunction;
-use crate::util::pool::{default_threads, parallel_map};
+use crate::util::pool::{default_threads, parallel_map, DisjointCell};
 
-/// Default for [`ShardedSweep::parallel_min_rows`]: below this many rows
-/// a shard is projected serially — scoped-thread spawn overhead would
-/// eat the win on tiny shards. (Serial and parallel paths are
-/// arithmetic-identical on a disjoint shard, so this is purely a
+/// Baseline for [`ShardedSweep::parallel_min_rows`]: below this many rows
+/// a shard is projected serially. With the persistent worker pool there
+/// is no per-sweep thread spawn to amortise any more, so the threshold
+/// sits far below the scoped-thread era's 64. (Serial and parallel paths
+/// are arithmetic-identical on a disjoint shard, so this is purely a
 /// scheduling choice and never changes results.)
-pub const PARALLEL_MIN_ROWS: usize = 64;
+pub const PARALLEL_MIN_ROWS: usize = 8;
+
+/// The effective default threshold: the `PAF_PARALLEL_MIN_ROWS` env
+/// override if set (clamped to ≥ 2), else [`PARALLEL_MIN_ROWS`]. A
+/// per-solve override lives on `SolverConfig::parallel_min_rows`.
+pub fn parallel_min_rows_default() -> usize {
+    min_rows_from(std::env::var("PAF_PARALLEL_MIN_ROWS").ok().as_deref())
+}
+
+/// Pure core of [`parallel_min_rows_default`], split out so tests cover
+/// the parse/clamp rules without mutating process-global env state
+/// (concurrent `setenv`/`getenv` in one test binary is libc UB).
+fn min_rows_from(raw: Option<&str>) -> usize {
+    match raw.and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => n.max(2),
+        None => PARALLEL_MIN_ROWS,
+    }
+}
 
 /// The sharded executor with its lazily maintained plan.
 #[derive(Debug)]
 pub struct ShardedSweep {
     /// Worker threads; 0 = auto (`PAF_THREADS` / available cores).
     pub threads: usize,
-    /// Shards smaller than this run serially (see [`PARALLEL_MIN_ROWS`]).
+    /// Shards smaller than this run serially (see
+    /// [`parallel_min_rows_default`]).
     pub parallel_min_rows: usize,
     plan: ShardPlan,
 }
@@ -40,7 +62,11 @@ impl Default for ShardedSweep {
 
 impl ShardedSweep {
     pub fn new(threads: usize) -> ShardedSweep {
-        ShardedSweep { threads, parallel_min_rows: PARALLEL_MIN_ROWS, plan: ShardPlan::new() }
+        ShardedSweep {
+            threads,
+            parallel_min_rows: parallel_min_rows_default(),
+            plan: ShardPlan::new(),
+        }
     }
 
     /// The current plan (benches/tests observability).
@@ -61,23 +87,26 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         for shard in &plan.shards {
             stats.shards += 1;
             if threads > 1 && shard.len() >= parallel_min {
-                // Parallel θ against the shard-entry snapshot (reads only;
-                // disjoint supports make this equal to in-place order).
-                let xr: &[f64] = x;
+                // Parallel θ+apply: every row reads and writes only its
+                // own support (the ShardPlan invariant), so the fused
+                // kernel is race-free and each step equals the serial one
+                // bit for bit, for any chunking.
+                let cell = DisjointCell::new(&mut *x);
                 let act: &ActiveSet = active;
                 let steps: Vec<f64> = parallel_map(shard.len(), threads, |k| {
                     let r = shard[k] as usize;
-                    let theta = f.theta(xr, act.view(r));
-                    act.z(r).min(theta)
+                    // SAFETY: supports within a shard are pairwise
+                    // disjoint, so no index of row `r` is touched by any
+                    // other worker during the map.
+                    unsafe { f.project_disjoint(&cell, act.view(r), act.z(r)) }
                 });
-                // Serial apply + deterministic reduction in slot order.
+                // Serial dual bookkeeping + deterministic reduction in
+                // slot order.
                 for (k, &step) in steps.iter().enumerate() {
                     if step == 0.0 {
                         continue;
                     }
                     let r = shard[k] as usize;
-                    let view = active.view(r);
-                    f.apply(x, view, step);
                     let z = active.z(r);
                     active.set_z(r, z - step);
                     stats.projections += 1;
@@ -108,15 +137,38 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         stats
     }
 
-    fn after_forget(&mut self, map: &[u32], generation_before: u64, generation_after: u64) {
-        // Only a plan built against the pre-forget set can be remapped;
-        // anything staler is rebuilt lazily at the next sweep.
-        if self.plan.generation() == generation_before {
+    fn after_forget(
+        &mut self,
+        map: &[u32],
+        instance: u64,
+        generation_before: u64,
+        generation_after: u64,
+    ) {
+        // Only a plan built against the pre-forget state of this exact
+        // set instance can be remapped; anything staler (or any foreign
+        // set's map) is rebuilt lazily at the next sweep.
+        if self.plan.instance() == instance && self.plan.generation() == generation_before {
             self.plan.remap_after_forget(map, generation_after);
         }
     }
 
     fn name(&self) -> &'static str {
         "sharded-parallel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_override_parse_and_clamp_rules() {
+        // Tested through the pure core — mutating the process env from a
+        // multithreaded test binary races libc's getenv/setenv.
+        assert_eq!(min_rows_from(Some("17")), 17);
+        assert_eq!(min_rows_from(Some("0")), 2, "clamped to >= 2");
+        assert_eq!(min_rows_from(Some("1")), 2, "clamped to >= 2");
+        assert_eq!(min_rows_from(Some("not a number")), PARALLEL_MIN_ROWS);
+        assert_eq!(min_rows_from(None), PARALLEL_MIN_ROWS);
     }
 }

@@ -60,6 +60,8 @@ pub struct ShardPlan {
     pub oversized: Vec<u32>,
     /// `ActiveSet::generation` this plan was built against.
     generation: u64,
+    /// `ActiveSet::instance_id` this plan was built against (0 = none).
+    instance: u64,
     /// Reused epoch-marker buffer (one entry per variable index).
     owner: Vec<u32>,
     epoch: u32,
@@ -70,20 +72,29 @@ impl ShardPlan {
         ShardPlan::default()
     }
 
-    /// Is this plan current for `active`? (Fresh plans over an empty set
-    /// are trivially current.) Besides the generation key, the row count
-    /// must line up — generations are per-instance counters, so a caller
-    /// swapping in a *different* `ActiveSet` (the solver's `active` field
-    /// is public) could otherwise alias a stale plan and index out of
-    /// bounds.
+    /// Is this plan current for `active`? The key is the pair
+    /// (`instance_id`, `generation`): generations are per-instance
+    /// counters, so without the process-unique instance id a caller
+    /// swapping in a *different* `ActiveSet` (the solver's `active`
+    /// field is public) could alias a stale plan whose shards are not
+    /// support-disjoint for the new set — under the parallel apply that
+    /// would be a data race, not just wrong numbers. The row-count check
+    /// stays as a cheap sanity belt.
     pub fn is_current(&self, active: &ActiveSet) -> bool {
-        self.generation == active.generation()
+        self.instance == active.instance_id()
+            && self.generation == active.generation()
             && self.planned_rows() + self.oversized.len() == active.len()
     }
 
     /// The generation this plan was built against.
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// The `ActiveSet::instance_id` this plan was built against
+    /// (0 = no set yet).
+    pub fn instance(&self) -> u64 {
+        self.instance
     }
 
     /// Rows covered by the plan (shards + tail; excludes oversized).
@@ -144,6 +155,7 @@ impl ShardPlan {
             leftover.clear();
         }
         self.generation = active.generation();
+        self.instance = active.instance_id();
     }
 
     /// Cheap update after FORGET: rewrite every row id through the
@@ -266,6 +278,25 @@ mod tests {
             assert!(active.view(r as usize).indices.len() > 3);
         }
         assert_disjoint_and_covering(&plan, &active);
+    }
+
+    #[test]
+    fn plan_is_not_aliased_by_a_different_set_with_equal_generation() {
+        // Two independently built sets with identical generation and row
+        // count: only the process-unique instance id tells them apart,
+        // and reusing a plan across them would hand non-disjoint rows to
+        // the parallel apply.
+        let a = soup(1, 30, 20);
+        let b = soup(2, 30, 20);
+        assert_eq!(a.generation(), b.generation());
+        assert_eq!(a.len(), b.len());
+        let mut plan = ShardPlan::new();
+        plan.rebuild(&a, 30, &ShardLimits::none());
+        assert!(plan.is_current(&a));
+        assert!(!plan.is_current(&b), "different instance must invalidate the plan");
+        // Clones diverge independently, so they get a fresh id too.
+        let c = a.clone();
+        assert!(!plan.is_current(&c), "a clone must not alias its source's plan");
     }
 
     #[test]

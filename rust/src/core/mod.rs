@@ -22,5 +22,5 @@ pub use active_set::ActiveSet;
 pub use bregman::{BregmanFunction, DiagonalQuadratic, Entropy};
 pub use constraint::{Constraint, ConstraintKey};
 pub use engine::{SweepExecutor, SweepStats, SweepStrategy};
-pub use oracle::{Oracle, OracleOutcome, RandomOracle};
+pub use oracle::{Oracle, OracleOutcome, OverlappableOracle, RandomOracle};
 pub use solver::{IterStats, Solver, SolverConfig, SolverResult};

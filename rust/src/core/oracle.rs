@@ -69,6 +69,35 @@ pub trait Oracle<F: BregmanFunction> {
 /// provides (used by tests to pick the right convergence assertions).
 pub trait RandomOracle<F: BregmanFunction>: Oracle<F> {}
 
+/// An oracle whose separation *scan* is a pure, read-only function of a
+/// snapshot of the iterate, with constraint delivery deferred to a
+/// second step.
+///
+/// This is the seam for oracle/sweep overlap
+/// (`Solver::solve_overlapped`): `scan` runs on the worker pool against
+/// the back buffer of a double-buffered `x` while the engine drains the
+/// current round's projection sweeps on the front buffer; `deliver`
+/// merges the findings at the sweep barrier. Implementations must keep
+/// `scan` free of observable mutation and deterministic in `x` — both
+/// are what makes the overlapped solve bit-reproducible at every thread
+/// count. `separate` should be equivalent to `scan` + `deliver` run
+/// back-to-back, so the overlapped pipeline differs from the plain one
+/// only in *which* snapshot each scan sees (one round staler), never in
+/// what a scan of a given snapshot produces.
+pub trait OverlappableOracle<F: BregmanFunction>: Oracle<F> {
+    /// Findings of one scan (crosses the sweep barrier, hence `Send`).
+    type Scan: Send;
+
+    /// Read-only separation scan of `x`.
+    fn scan(&self, x: &[f64]) -> Self::Scan;
+
+    /// Merge a scan's findings into the sink. The returned certificate's
+    /// `max_violation` refers to the scanned snapshot — in the
+    /// overlapped pipeline that snapshot is one round stale, so the
+    /// solver's convergence test is correspondingly conservative.
+    fn deliver(&mut self, scan: Self::Scan, sink: &mut dyn ProjectionSink) -> OracleOutcome;
+}
+
 /// An oracle over an explicit, finite constraint list — the textbook
 /// (cyclic Bregman) setting. Deterministic Property-1 oracle: it returns
 /// every currently-violated constraint. Mostly used by tests and the SVM

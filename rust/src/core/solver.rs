@@ -12,7 +12,8 @@ use super::active_set::ActiveSet;
 use super::bregman::BregmanFunction;
 use super::constraint::Constraint;
 use super::engine::{self, SweepExecutor, SweepStrategy};
-use super::oracle::{Oracle, OracleOutcome, ProjectionSink};
+use super::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
+use crate::util::pool;
 use crate::util::Stopwatch;
 
 /// Tuning knobs for the solve loop.
@@ -43,6 +44,12 @@ pub struct SolverConfig {
     /// bit for bit; `ShardedParallel` runs support-disjoint rows
     /// concurrently with deterministic results.
     pub sweep: SweepStrategy,
+    /// Minimum shard size for the sharded executor's parallel θ+apply
+    /// path; `None` = auto (`PAF_PARALLEL_MIN_ROWS` env override or the
+    /// tuned default). Purely a scheduling threshold — serial and
+    /// parallel in-shard paths are arithmetic-identical, so this never
+    /// changes results.
+    pub parallel_min_rows: Option<usize>,
 }
 
 impl Default for SolverConfig {
@@ -56,6 +63,7 @@ impl Default for SolverConfig {
             record_trace: true,
             z_tol: 0.0,
             sweep: SweepStrategy::Sequential,
+            parallel_min_rows: None,
         }
     }
 }
@@ -167,7 +175,7 @@ impl<F: BregmanFunction> Solver<F> {
     /// Start at the unconstrained minimiser (`∇f(x⁰) = 0`, line 1).
     pub fn new(f: F, config: SolverConfig) -> Solver<F> {
         let x = f.argmin();
-        let executor = engine::executor_for::<F>(config.sweep);
+        let executor = engine::executor_with::<F>(config.sweep, config.parallel_min_rows);
         Solver {
             f,
             x,
@@ -184,7 +192,7 @@ impl<F: BregmanFunction> Solver<F> {
     /// solver). Also updates `config.sweep` to match.
     pub fn set_sweep_strategy(&mut self, strategy: SweepStrategy) {
         self.config.sweep = strategy;
-        self.executor = engine::executor_for::<F>(strategy);
+        self.executor = engine::executor_with::<F>(strategy, self.config.parallel_min_rows);
     }
 
     /// Name of the active sweep executor (traces/benches).
@@ -231,6 +239,7 @@ impl<F: BregmanFunction> Solver<F> {
         if dropped > 0 {
             self.executor.after_forget(
                 &self.slot_map,
+                self.active.instance_id(),
                 generation_before,
                 self.active.generation(),
             );
@@ -294,6 +303,153 @@ impl<F: BregmanFunction> Solver<F> {
                     break;
                 }
             }
+        }
+        SolverResult {
+            x: self.x.clone(),
+            iterations,
+            converged,
+            total_projections: self.projections,
+            active_constraints: self.active.len(),
+            trace,
+            seconds: clock.elapsed_s(),
+        }
+    }
+
+    /// Run PROJECT AND FORGET with the oracle's scan phase overlapped
+    /// with the projection sweeps (the async pipeline from the ROADMAP).
+    ///
+    /// Buffer ownership and the barrier:
+    /// - the solver owns and mutates `self.x` (the front buffer);
+    /// - `shadow` (the back buffer, owned by this loop) is a snapshot of
+    ///   `x` taken right after the merge, before the round's sweeps;
+    /// - the oracle's [`OverlappableOracle::scan`] runs on the worker
+    ///   pool against `shadow` while this thread drains the sweeps on
+    ///   `x`; the end of the pool scope is the **sweep barrier**, where
+    ///   the scan's findings are handed back and merged at the top of
+    ///   the next round.
+    ///
+    /// Consequently round ν delivers constraints scanned against round
+    /// ν−1's post-merge, pre-sweep iterate: the certificate is one round
+    /// staler than in [`Solver::solve`] (which already certifies the
+    /// pre-sweep iterate of the same round). To keep the certificate
+    /// meaningful despite that extra round of drift, convergence
+    /// requires the dual-movement test to hold in **two consecutive
+    /// rounds** — the round that produced the certified snapshot and
+    /// the round that checks it — which bounds `‖x_final − x_certified‖`
+    /// by the same `dual_tol`-scale quantity as the plain loop (and
+    /// degenerates to the plain violation-only rule when
+    /// `dual_tol = ∞`, as in the paper's large-scale runs). The
+    /// pipeline structure is fixed — scan results depend only on the
+    /// snapshot, merges happen only at the barrier — so the solve is
+    /// bit-deterministic and independent of the thread count.
+    pub fn solve_overlapped<O>(&mut self, mut oracle: O) -> SolverResult
+    where
+        O: OverlappableOracle<F> + Sync,
+    {
+        let clock = Stopwatch::new();
+        let mut trace = Vec::new();
+        let mut converged = false;
+        let mut iterations = 0;
+        // The oracle-side back buffer of the double-buffered iterate.
+        let mut shadow = self.x.clone();
+        // Dual movement of the *previous* round's last sweep — the round
+        // whose pre-sweep iterate the current certificate refers to.
+        let mut prev_dual_movement = f64::INFINITY;
+        // Round 0 has nothing to overlap with: scan synchronously.
+        let mut pending = Some(oracle.scan(&self.x));
+        for nu in 0..self.config.max_iters {
+            iterations = nu + 1;
+            let mut round = Stopwatch::new();
+            let proj_before = self.projections;
+
+            // Merge the findings scanned during the previous round's
+            // sweeps (or synchronously, for round 0).
+            let scan = pending.take().expect("overlap pipeline lost a scan");
+            let outcome: OracleOutcome = {
+                let mut sink = EngineSink {
+                    f: &self.f,
+                    x: &mut self.x,
+                    active: &mut self.active,
+                    projections: &mut self.projections,
+                    z_tol: self.config.z_tol,
+                };
+                oracle.deliver(scan, &mut sink)
+            };
+            let merged = self.active.len();
+
+            // Snapshot for the oracle, then overlap: the next round's
+            // scan runs on the pool while this thread drains the sweeps.
+            // Exception: two of the three stop-rule inputs (the stale
+            // certificate and the previous round's dual movement) are
+            // already known here — when both pass, this round is very
+            // likely final, so skip the speculative scan instead of
+            // paying a full discarded Dijkstra pass. If the post-sweep
+            // dual test then fails after all, the pipeline is refilled
+            // below with a synchronous scan of the *same* snapshot —
+            // identical input, identical findings, so the trajectory
+            // (and bit-determinism) is unchanged either way.
+            shadow.copy_from_slice(&self.x);
+            let likely_final = outcome.max_violation <= self.config.violation_tol
+                && prev_dual_movement <= self.config.dual_tol;
+            let mut next_scan: Option<O::Scan> = None;
+            if likely_final {
+                for _ in 0..self.config.inner_sweeps {
+                    self.project_sweep();
+                    self.forget();
+                }
+            } else {
+                let oracle_ref = &oracle;
+                let shadow_ref: &[f64] = &shadow;
+                let slot = &mut next_scan;
+                pool::global().scope(|s| {
+                    s.spawn(move || {
+                        *slot = Some(oracle_ref.scan(shadow_ref));
+                    });
+                    for _ in 0..self.config.inner_sweeps {
+                        self.project_sweep();
+                        self.forget();
+                    }
+                });
+            }
+            let remembered = self.active.len();
+
+            if self.config.record_trace {
+                trace.push(IterStats {
+                    iteration: nu,
+                    found: outcome.found,
+                    merged,
+                    remembered,
+                    max_violation: outcome.max_violation,
+                    projections: self.projections - proj_before,
+                    seconds: round.lap_s(),
+                });
+            }
+
+            // Two consecutive quiet rounds: `prev_dual_movement` bounds
+            // the drift between the certified snapshot and this round's
+            // start, `last_dual_movement` bounds this round's sweeps —
+            // without the former, a stale "feasible" certificate could
+            // be declared on an iterate the scan never saw.
+            if outcome.max_violation <= self.config.violation_tol
+                && self.last_dual_movement <= self.config.dual_tol
+                && prev_dual_movement <= self.config.dual_tol
+            {
+                converged = true;
+                break;
+            }
+            prev_dual_movement = self.last_dual_movement;
+            if let Some(budget) = self.config.projection_budget {
+                if self.projections >= budget {
+                    break;
+                }
+            }
+            // Refill the pipeline; the synchronous fallback only fires
+            // when the speculative scan was skipped above but the round
+            // turned out not to be final.
+            pending = Some(match next_scan {
+                Some(scan) => scan,
+                None => oracle.scan(&shadow),
+            });
         }
         SolverResult {
             x: self.x.clone(),
@@ -506,6 +662,101 @@ mod tests {
         for (a, b) in x_seq.iter().zip(&x_par) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
+    }
+
+    /// Minimal [`OverlappableOracle`]: scan records violated list rows,
+    /// deliver remembers them (the ListOracle semantics, split in two).
+    struct OverlapHalfspaces {
+        constraints: Vec<Constraint>,
+    }
+
+    impl Oracle<DiagonalQuadratic> for OverlapHalfspaces {
+        fn separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+            let scan = OverlappableOracle::<DiagonalQuadratic>::scan(self, sink.x());
+            OverlappableOracle::<DiagonalQuadratic>::deliver(self, scan, sink)
+        }
+    }
+
+    impl OverlappableOracle<DiagonalQuadratic> for OverlapHalfspaces {
+        type Scan = Vec<(f64, usize)>;
+
+        fn scan(&self, x: &[f64]) -> Self::Scan {
+            self.constraints
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| {
+                    let v = c.violation(x);
+                    if v > 0.0 {
+                        Some((v, i))
+                    } else {
+                        None
+                    }
+                })
+                .collect()
+        }
+
+        fn deliver(
+            &mut self,
+            scan: Self::Scan,
+            sink: &mut dyn ProjectionSink,
+        ) -> OracleOutcome {
+            let mut out = OracleOutcome::default();
+            for (v, i) in scan {
+                out.found += 1;
+                out.max_violation = out.max_violation.max(v);
+                sink.remember(&self.constraints[i]);
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn overlapped_solve_matches_plain_solve() {
+        // The overlapped pipeline scans a one-round-stale snapshot, so
+        // the trajectory differs — but the program is strictly convex, so
+        // both must land on the unique projection.
+        let cons = vec![
+            Constraint::new(vec![0, 1], vec![1.0, 1.0], 2.0),
+            Constraint::new(vec![0], vec![1.0], 1.5),
+        ];
+        let cfg = SolverConfig {
+            violation_tol: 1e-10,
+            dual_tol: 1e-10,
+            max_iters: 5000,
+            ..Default::default()
+        };
+        let mut plain = Solver::new(DiagonalQuadratic::unweighted(vec![2.0, 2.0]), cfg.clone());
+        let rp = plain.solve(ListOracle::new(cons.clone()));
+        let mut over = Solver::new(DiagonalQuadratic::unweighted(vec![2.0, 2.0]), cfg);
+        let ro = over.solve_overlapped(OverlapHalfspaces { constraints: cons });
+        assert!(rp.converged, "plain solve diverged");
+        assert!(ro.converged, "overlapped solve diverged");
+        for (a, b) in rp.x.iter().zip(&ro.x) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+        // Projection of (2,2) onto {x+y<=2, x0<=1.5} is (1,1).
+        assert!((ro.x[0] - 1.0).abs() < 1e-8 && (ro.x[1] - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn overlapped_solve_with_sharded_sweep_keeps_kkt() {
+        let d = vec![3.0, 0.0, -1.0, 2.0];
+        let cons = vec![
+            Constraint::new(vec![0], vec![1.0], 1.0),
+            Constraint::new(vec![1, 2], vec![1.0, -1.0], 0.0),
+            Constraint::new(vec![3], vec![-1.0], 0.0),
+        ];
+        let cfg = SolverConfig {
+            max_iters: 200,
+            sweep: SweepStrategy::ShardedParallel { threads: 4 },
+            parallel_min_rows: Some(2),
+            ..Default::default()
+        };
+        let mut s = Solver::new(DiagonalQuadratic::unweighted(d.clone()), cfg);
+        let res = s.solve_overlapped(OverlapHalfspaces { constraints: cons });
+        assert!(res.total_projections > 0);
+        let grad: Vec<f64> = s.x.iter().zip(&d).map(|(&x, &di)| x - di).collect();
+        assert!(s.kkt_residual(&grad) < 1e-9, "KKT violated: {}", s.kkt_residual(&grad));
     }
 
     #[test]

@@ -159,6 +159,11 @@ pub struct CcConfig {
     pub record_trace: bool,
     /// Projection-sweep executor (sequential vs sharded parallel).
     pub sweep: SweepStrategy,
+    /// Overlap the oracle's Dijkstra scan with the projection sweeps
+    /// (`Solver::solve_overlapped`; Collect mode only — ignored for
+    /// ProjectOnFind). The scan then certifies the previous round's
+    /// iterate, so convergence detection is one round more conservative.
+    pub overlap: bool,
 }
 
 impl CcConfig {
@@ -173,6 +178,7 @@ impl CcConfig {
             threads: crate::util::pool::default_threads(),
             record_trace: true,
             sweep: SweepStrategy::Sequential,
+            overlap: false,
         }
     }
 
@@ -187,6 +193,7 @@ impl CcConfig {
             threads: crate::util::pool::default_threads(),
             record_trace: true,
             sweep: SweepStrategy::Sequential,
+            overlap: false,
         }
     }
 }
@@ -224,9 +231,14 @@ pub fn solve_cc(inst: &CcInstance, cfg: &CcConfig, seed: u64) -> CcResult {
         record_trace: cfg.record_trace,
         z_tol: 0.0,
         sweep: cfg.sweep,
+        parallel_min_rows: None,
     };
     let mut solver = Solver::new(t.f.clone(), solver_cfg);
-    let result = solver.solve(oracle);
+    let result = if cfg.overlap && cfg.mode == OracleMode::Collect {
+        solver.solve_overlapped(oracle)
+    } else {
+        solver.solve(oracle)
+    };
     let ratio = approx_ratio(&t, &result.x);
     let lp_objective = inst.lp_objective(&result.x);
     let labels = round_pivot(inst, &result.x, seed);

@@ -13,7 +13,11 @@
 //!   down on memory usage").
 //! - [`OracleMode::Collect`] — deliver the whole list and let the solver
 //!   sweep (Algorithm 7); Dijkstra runs are sharded across threads since
-//!   nothing mutates `x` during the scan.
+//!   nothing mutates `x` during the scan. The scan phase is also exposed
+//!   on its own ([`MetricOracle::scan_cycles`] behind
+//!   [`OverlappableOracle`]) so `Solver::solve_overlapped` can run it on
+//!   the worker pool against a snapshot of `x` while the engine drains
+//!   the current round's projection sweeps.
 //!
 //! The oracle also polices the non-metric faces of MET(G): `x ≥ 0` always,
 //! plus optional `x ≤ ub` box rows (correlation clustering's `Ax ≤ b`);
@@ -22,7 +26,7 @@
 
 use crate::core::bregman::BregmanFunction;
 use crate::core::constraint::Constraint;
-use crate::core::oracle::{Oracle, OracleOutcome, ProjectionSink};
+use crate::core::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
 use crate::graph::dijkstra::{dijkstra, DijkstraScratch};
 use crate::graph::Graph;
 use crate::util::pool::parallel_map_chunks;
@@ -165,25 +169,30 @@ impl MetricOracle {
         out
     }
 
-    fn separate_collect(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
-        let mut out = OracleOutcome::default();
-        self.deliver_box(sink, &mut out);
+    /// Read-only Collect scan: Dijkstra from every source against a
+    /// clamped snapshot of `x`, returning the violated cycle rows in
+    /// deterministic source order (per-source lists concatenated in
+    /// source order — independent of chunking and of the pool's worker
+    /// count). Safe to run concurrently with projection sweeps mutating
+    /// a *different* buffer of the iterate; that is exactly what
+    /// `Solver::solve_overlapped` does with it.
+    pub fn scan_cycles(&self, x: &[f64]) -> MetricScan {
         let g = self.graph.clone();
         let n = g.num_nodes();
-        // Snapshot x for the threaded scan (clamped for Dijkstra; any
-        // cycle violated under the clamp is violated under x itself).
-        let x: Vec<f64> = sink.x().iter().map(|&v| v.max(0.0)).collect();
+        // Clamp for Dijkstra; any cycle violated under the clamp is
+        // violated under x itself.
+        let w: Vec<f64> = x.iter().map(|&v| v.max(0.0)).collect();
         let tol = self.report_tol;
         let found = parallel_map_chunks(n, self.threads, |range| {
             let mut scratch = DijkstraScratch::new(n);
             let mut list: Vec<(f64, Constraint)> = Vec::new();
             for src in range {
-                dijkstra(&g, &x, src, &mut scratch);
+                dijkstra(&g, &w, src, &mut scratch);
                 for &(nb, eid) in g.neighbors(src) {
                     if (nb as usize) < src {
                         continue;
                     }
-                    let viol = x[eid as usize] - scratch.dist[nb as usize];
+                    let viol = w[eid as usize] - scratch.dist[nb as usize];
                     if viol > tol {
                         let path = scratch.path_edges(nb as usize);
                         if path.len() == 1 && path[0] == eid {
@@ -195,7 +204,18 @@ impl MetricOracle {
             }
             list
         });
-        let mut all: Vec<(f64, Constraint)> = found.into_iter().flatten().collect();
+        MetricScan { found: found.into_iter().flatten().collect() }
+    }
+
+    /// Count a scan into the certificate and hand its rows to the sink —
+    /// in historical source order, or pre-bucketed by support-disjoint
+    /// shard when `shard_bucket` is set.
+    fn deliver_found(
+        &self,
+        mut all: Vec<(f64, Constraint)>,
+        sink: &mut dyn ProjectionSink,
+        out: &mut OracleOutcome,
+    ) {
         for &(viol, _) in &all {
             out.max_violation = out.max_violation.max(viol);
             out.found += 1;
@@ -240,6 +260,54 @@ impl MetricOracle {
                 std::mem::swap(&mut all, &mut leftover);
             }
         }
+    }
+
+    fn separate_collect(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        let mut out = OracleOutcome::default();
+        // Box rows first: Dijkstra needs the iterate inside the box
+        // faces before the cycle scan.
+        self.deliver_box(sink, &mut out);
+        let scan = self.scan_cycles(sink.x());
+        self.deliver_found(scan.found, sink, &mut out);
+        self.deliver_box(sink, &mut out);
+        out
+    }
+}
+
+/// Findings of one Collect-mode separation scan: the violated cycle rows
+/// with their violations, in deterministic source order. Produced by
+/// [`MetricOracle::scan_cycles`] — possibly on the worker pool, against
+/// the back buffer of an overlapped solve — and consumed at the sweep
+/// barrier by [`OverlappableOracle::deliver`].
+pub struct MetricScan {
+    found: Vec<(f64, Constraint)>,
+}
+
+impl MetricScan {
+    /// Number of violated cycle rows found.
+    pub fn len(&self) -> usize {
+        self.found.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.found.is_empty()
+    }
+}
+
+impl<F: BregmanFunction> OverlappableOracle<F> for MetricOracle {
+    type Scan = MetricScan;
+
+    fn scan(&self, x: &[f64]) -> MetricScan {
+        self.scan_cycles(x)
+    }
+
+    /// Same shape as `separate_collect` with the scan factored out: box
+    /// rows (measured against the *current* iterate), the scanned cycle
+    /// rows (violations refer to the scanned snapshot), box rows again.
+    fn deliver(&mut self, scan: MetricScan, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        let mut out = OracleOutcome::default();
+        self.deliver_box(sink, &mut out);
+        self.deliver_found(scan.found, sink, &mut out);
         self.deliver_box(sink, &mut out);
         out
     }

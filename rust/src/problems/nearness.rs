@@ -31,6 +31,12 @@ pub struct NearnessConfig {
     pub record_trace: bool,
     /// Projection-sweep executor (sequential vs sharded parallel).
     pub sweep: SweepStrategy,
+    /// Overlap the oracle's Dijkstra scan with the projection sweeps
+    /// (`Solver::solve_overlapped`; Collect mode only — ignored for
+    /// ProjectOnFind, whose scan mutates `x` as it goes). The scan then
+    /// certifies the previous round's iterate, so convergence detection
+    /// is one round more conservative.
+    pub overlap: bool,
 }
 
 impl Default for NearnessConfig {
@@ -43,6 +49,7 @@ impl Default for NearnessConfig {
             mode: OracleMode::ProjectOnFind,
             record_trace: true,
             sweep: SweepStrategy::Sequential,
+            overlap: false,
         }
     }
 }
@@ -75,9 +82,14 @@ pub fn solve_nearness(inst: &WeightedInstance, cfg: &NearnessConfig) -> Nearness
         record_trace: cfg.record_trace,
         z_tol: 0.0,
         sweep: cfg.sweep,
+        parallel_min_rows: None,
     };
     let mut solver = Solver::new(f, solver_cfg);
-    let result = solver.solve(oracle);
+    let result = if cfg.overlap && cfg.mode == OracleMode::Collect {
+        solver.solve_overlapped(oracle)
+    } else {
+        solver.solve(oracle)
+    };
     let objective = solver.f.value(&result.x);
     NearnessResult { result, objective }
 }

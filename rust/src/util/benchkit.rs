@@ -45,6 +45,20 @@ impl BenchStats {
     }
 }
 
+/// Marker handed to [`BenchCtx::bench_marked`] closures: calling
+/// [`TimedRegion::start`] moves the beginning of the measured region to
+/// "now", excluding whatever ran before it (per-run setup).
+pub struct TimedRegion {
+    t0: Instant,
+}
+
+impl TimedRegion {
+    /// Restart the measured region at the current instant.
+    pub fn start(&mut self) {
+        self.t0 = Instant::now();
+    }
+}
+
 /// Shared bench configuration (scaled via env for CI).
 #[derive(Debug, Clone)]
 pub struct BenchCtx {
@@ -85,15 +99,32 @@ impl BenchCtx {
 
     /// Time `f` with warmup; returns stats. `f` receives the run index and
     /// returns an opaque value kept alive to defeat dead-code elimination.
+    /// (One timing loop for the whole kit: this is [`BenchCtx::bench_marked`]
+    /// with a region that starts at closure entry.)
     pub fn bench<T, F: FnMut(usize) -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        self.bench_marked(name, |run, _| f(run))
+    }
+
+    /// Like [`BenchCtx::bench`], but the closure receives a
+    /// [`TimedRegion`] marker and may call `start()` to exclude per-run
+    /// setup (state resets, cache priming) from the measured region; the
+    /// sample is the time from the last `start()` call (or closure entry
+    /// if never called) to the closure's return. One closure handles
+    /// both setup and the timed work so they can share `&mut` state.
+    pub fn bench_marked<T, F>(&self, name: &str, mut f: F) -> BenchStats
+    where
+        F: FnMut(usize, &mut TimedRegion) -> T,
+    {
         for w in 0..self.warmup {
-            std::hint::black_box(f(w));
+            let mut region = TimedRegion { t0: Instant::now() };
+            std::hint::black_box(f(w, &mut region));
         }
         let mut samples = Vec::with_capacity(self.runs);
         for r in 0..self.runs.max(1) {
-            let t0 = Instant::now();
-            std::hint::black_box(f(r));
-            samples.push(t0.elapsed().as_secs_f64());
+            let mut region = TimedRegion { t0: Instant::now() };
+            let out = f(r, &mut region);
+            samples.push(region.t0.elapsed().as_secs_f64());
+            std::hint::black_box(out);
         }
         let stats = BenchStats { name: name.to_string(), samples };
         println!("{}", stats.report());
@@ -109,6 +140,42 @@ impl BenchCtx {
         let stats = BenchStats { name: name.to_string(), samples: vec![dt] };
         println!("{}", stats.report());
         (dt, out)
+    }
+
+    /// Write machine-readable timings as `BENCH_<stem>.json` under
+    /// `report_dir` so the perf trajectory can be tracked across PRs
+    /// (consumed by CI artifacts and diffing scripts). Case names are
+    /// code-controlled and must not contain `"` or `\`; the emitter does
+    /// no escaping. Returns the written path.
+    pub fn write_json(
+        &self,
+        stem: &str,
+        cases: &[BenchStats],
+    ) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(&self.report_dir)?;
+        let path = std::path::Path::new(&self.report_dir).join(format!("BENCH_{stem}.json"));
+        let mut body = String::new();
+        body.push_str(&format!(
+            "{{\n  \"bench\": \"{}\",\n  \"runs\": {},\n  \"scale\": {},\n  \"cases\": [\n",
+            stem, self.runs, self.scale
+        ));
+        for (k, s) in cases.iter().enumerate() {
+            let samples: Vec<String> = s.samples.iter().map(|v| format!("{v:.9}")).collect();
+            body.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_s\": {:.9}, \"stddev_s\": {:.9}, \
+                 \"min_s\": {:.9}, \"samples\": [{}]}}{}\n",
+                s.name,
+                s.mean(),
+                s.stddev(),
+                s.min(),
+                samples.join(", "),
+                if k + 1 == cases.len() { "" } else { "," }
+            ));
+        }
+        body.push_str("  ]\n}\n");
+        std::fs::write(&path, body)?;
+        println!("  wrote {}", path.display());
+        Ok(path)
     }
 }
 
@@ -133,6 +200,47 @@ mod tests {
         });
         assert_eq!(stats.samples.len(), 5);
         assert_eq!(calls, 7); // warmup + runs
+    }
+
+    #[test]
+    fn marked_region_excludes_setup() {
+        let ctx = BenchCtx { runs: 2, warmup: 0, scale: 1.0, report_dir: "/tmp".into() };
+        let stats = ctx.bench_marked("marked", |_, region| {
+            std::thread::sleep(std::time::Duration::from_millis(50)); // "setup"
+            region.start();
+        });
+        assert_eq!(stats.samples.len(), 2);
+        // The 50 ms of setup ran before start(), so samples are tiny.
+        assert!(stats.mean() < 0.025, "setup leaked into the sample: {}", stats.mean());
+    }
+
+    #[test]
+    fn json_report_is_parseable() {
+        let dir = std::env::temp_dir().join("paf_benchkit_json_test");
+        let ctx = BenchCtx {
+            runs: 2,
+            warmup: 0,
+            scale: 1.0,
+            report_dir: dir.to_string_lossy().into_owned(),
+        };
+        let stats = vec![
+            BenchStats { name: "A/case".into(), samples: vec![0.5, 1.5] },
+            BenchStats { name: "B/case".into(), samples: vec![2.0] },
+        ];
+        let path = ctx.write_json("unit", &stats).expect("write failed");
+        assert!(path.file_name().unwrap().to_string_lossy() == "BENCH_unit.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Validate with the in-tree JSON parser: schema and numbers.
+        let json = crate::runtime::json::Json::parse(&text).expect("invalid JSON");
+        assert_eq!(json.get("bench").and_then(|b| b.as_str()), Some("unit"));
+        let cases = json.get("cases").and_then(|c| c.as_arr()).expect("cases array");
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("name").and_then(|n| n.as_str()), Some("A/case"));
+        match cases[0].get("mean_s") {
+            Some(crate::runtime::json::Json::Num(v)) => assert!((v - 1.0).abs() < 1e-9),
+            other => panic!("missing mean_s: {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -3,9 +3,9 @@
 //! This crate builds fully offline, so the usual ecosystem crates (`rand`,
 //! `clap`, `serde`, `rayon`, `criterion`) are replaced by small, focused
 //! implementations: a counter-based PRNG with normal/uniform samplers, a
-//! CLI argument parser, a `key = value` config format, a scoped thread
-//! pool, wall-clock instrumentation, table/CSV emitters, and a micro-bench
-//! harness used by `benches/`.
+//! CLI argument parser, a `key = value` config format, a persistent
+//! work-stealing worker pool, wall-clock instrumentation, table/CSV
+//! emitters, and a micro-bench harness used by `benches/`.
 
 pub mod benchkit;
 pub mod cli;

@@ -1,0 +1,73 @@
+//! A shared write window over `&mut [f64]` for provably disjoint writes.
+
+use std::marker::PhantomData;
+
+/// Wraps an exclusive slice so that multiple workers can read and write
+/// it concurrently **at disjoint indices** — the scatter-safe apply the
+/// sharded sweep uses: rows inside a support-disjoint shard touch
+/// pairwise disjoint coordinates of `x`, so their fused θ+apply updates
+/// are race-free by construction.
+///
+/// All accessors are `unsafe`: the caller owns the disjointness proof
+/// (here, the `ShardPlan` invariant checked by its tests). The borrow
+/// held by the cell keeps the underlying slice exclusive for the cell's
+/// lifetime, so no safe alias can observe a torn state. Indices are
+/// bounds-checked even in release builds (parity with the serial path's
+/// checked slice indexing — a bad index panics instead of corrupting
+/// memory); the unsafety is purely the aliasing contract.
+pub struct DisjointCell<'a> {
+    ptr: *mut f64,
+    len: usize,
+    _borrow: PhantomData<&'a mut [f64]>,
+}
+
+// SAFETY: the cell is a window onto plain `f64`s; cross-thread use is
+// governed by the per-index disjointness contract of the unsafe methods.
+unsafe impl Send for DisjointCell<'_> {}
+unsafe impl Sync for DisjointCell<'_> {}
+
+impl<'a> DisjointCell<'a> {
+    pub fn new(x: &'a mut [f64]) -> Self {
+        DisjointCell { ptr: x.as_mut_ptr(), len: x.len(), _borrow: PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read index `i`.
+    ///
+    /// # Safety
+    /// No other thread may write index `i` for the duration of the call.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> f64 {
+        assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// `x[i] += delta` (the additive Bregman primal move).
+    ///
+    /// # Safety
+    /// No other thread may access index `i` for the duration of the call.
+    #[inline]
+    pub unsafe fn add(&self, i: usize, delta: f64) {
+        assert!(i < self.len);
+        *self.ptr.add(i) += delta;
+    }
+
+    /// `x[i] *= factor` (the multiplicative/entropy primal move).
+    ///
+    /// # Safety
+    /// No other thread may access index `i` for the duration of the call.
+    #[inline]
+    pub unsafe fn scale(&self, i: usize, factor: f64) {
+        assert!(i < self.len);
+        *self.ptr.add(i) *= factor;
+    }
+}

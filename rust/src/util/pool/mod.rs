@@ -1,0 +1,250 @@
+//! Persistent work-stealing worker pool (offline stand-in for `rayon`).
+//!
+//! The paper parallelises the separation oracle (per-source Dijkstra
+//! runs) across cores, and Ruggles/Veldt/Gleich parallelise the
+//! projection sweep over support-disjoint rows; both primitives live
+//! here. Earlier revisions spawned fresh scoped OS threads per parallel
+//! region — at many-small-shards scale the spawn/join overhead forced a
+//! high `PARALLEL_MIN_ROWS` threshold. This module instead keeps a
+//! process-wide pool of long-lived workers ([`global`]): one deque per
+//! worker, newest-first pops for the owner, oldest-first steals for
+//! everyone else, and a [`WorkerPool::scope`] API for irregular task
+//! graphs (the solver's oracle/sweep overlap).
+//!
+//! The historical `parallel_map` / `parallel_map_chunks` signatures are
+//! kept as thin wrappers so call sites did not churn. Determinism
+//! contract: chunk layouts depend only on the caller-visible `threads`
+//! argument, never on the pool's worker count or on which worker runs
+//! what — results are bit-identical for any `PAF_THREADS`.
+
+mod cell;
+mod runtime;
+
+pub use cell::DisjointCell;
+pub use runtime::{global, Scope, WorkerPool};
+
+use std::mem::{ManuallyDrop, MaybeUninit};
+
+/// Number of worker threads to use by default (respects `PAF_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PAF_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every index in `0..n`, writing results into a `Vec`.
+/// `f` must be `Sync` (read-only captured state). Results are written
+/// exactly once through `MaybeUninit` slots — no `Default` zero-fill
+/// pass over the output buffer, and no `Default + Clone` bound.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<MaybeUninit<T>> = (0..n).map(|_| MaybeUninit::uninit()).collect();
+    let chunk = n.div_ceil(threads);
+    global().scope(|s| {
+        for (t, slot) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = t * chunk;
+                for (i, cell) in slot.iter_mut().enumerate() {
+                    cell.write(f(base + i));
+                }
+            });
+        }
+    });
+    // SAFETY: the scope joined every task and none panicked (a task panic
+    // would have propagated out of `scope`, leaking — not double-freeing —
+    // the buffer), so all `n` disjoint slots were initialised exactly
+    // once; `Vec<MaybeUninit<T>>` and `Vec<T>` have identical layout.
+    unsafe {
+        let mut raw = ManuallyDrop::new(out);
+        Vec::from_raw_parts(raw.as_mut_ptr() as *mut T, raw.len(), raw.capacity())
+    }
+}
+
+/// Run `f` over contiguous index ranges, one per requested worker, each
+/// producing a partial result; returns the partials in range order.
+/// Useful when each worker wants to batch its own output (e.g. lists of
+/// violated constraints). The number of ranges — and therefore the
+/// output — depends only on `threads`, not on the pool size.
+pub fn parallel_map_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return vec![f(0..n)];
+    }
+    let chunk = n.div_ceil(threads);
+    let mut ranges = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        ranges.push(start..end);
+        start = end;
+    }
+    let mut out: Vec<Option<T>> = (0..ranges.len()).map(|_| None).collect();
+    global().scope(|s| {
+        for (range, slot) in ranges.into_iter().zip(out.iter_mut()) {
+            let f = &f;
+            s.spawn(move || {
+                *slot = Some(f(range));
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("pool task did not run")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn map_matches_serial() {
+        let serial: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(parallel_map(1000, threads, |i| i * i), serial);
+        }
+    }
+
+    #[test]
+    fn map_chunks_cover_everything() {
+        for threads in [1, 3, 8] {
+            let partials = parallel_map_chunks(100, threads, |r| r.collect::<Vec<_>>());
+            let flat: Vec<usize> = partials.into_iter().flatten().collect();
+            assert_eq!(flat, (0..100).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        let parts = parallel_map_chunks(0, 4, |r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn threads_capped_by_n() {
+        // More threads than items must not panic or duplicate work.
+        let out = parallel_map(3, 64, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn map_supports_non_default_types() {
+        // The MaybeUninit path: no `Default + Clone` bound, results are
+        // written exactly once.
+        #[derive(Debug, PartialEq)]
+        struct NoDefault(String);
+        let out = parallel_map(50, 4, |i| NoDefault(format!("v{i}")));
+        assert_eq!(out.len(), 50);
+        assert_eq!(out[7], NoDefault("v7".to_string()));
+        assert_eq!(out[49], NoDefault("v49".to_string()));
+    }
+
+    #[test]
+    fn scope_runs_borrowed_tasks() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let counter = AtomicUsize::new(0);
+        let data: Vec<usize> = (0..100).collect();
+        pool.scope(|s| {
+            for chunk in data.chunks(7) {
+                let counter = &counter;
+                s.spawn(move || {
+                    counter.fetch_add(chunk.iter().sum::<usize>(), Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn scope_propagates_task_panics() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| {});
+                s.spawn(|| panic!("pool task panic"));
+                s.spawn(|| {});
+            });
+        }));
+        assert!(caught.is_err(), "scope must rethrow a task panic");
+        // The pool survives a panicked scope: workers caught the panic.
+        assert_eq!(pool.scope(|_| 7), 7);
+        let still: Vec<usize> = parallel_map(10, 2, |i| i);
+        assert_eq!(still, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        // Workers executing outer tasks open inner scopes; the help-
+        // while-waiting join makes this deadlock-free even when every
+        // worker is blocked in an inner join.
+        let outer: Vec<usize> = parallel_map(8, 8, |i| {
+            parallel_map(8, 4, move |j| i * j).into_iter().sum::<usize>()
+        });
+        let expect: Vec<usize> = (0..8).map(|i| i * 28).collect();
+        assert_eq!(outer, expect);
+    }
+
+    #[test]
+    fn stress_many_small_scopes() {
+        // Scopes are barriers: round k's tasks all complete before round
+        // k+1 spawns — 200 rounds back-to-back exercise the sleep/wake
+        // handshake under churn.
+        let pool = WorkerPool::new(4);
+        let log = Mutex::new(Vec::new());
+        for round in 0..200 {
+            pool.scope(|s| {
+                for t in 0..4 {
+                    let log = &log;
+                    s.spawn(move || {
+                        if t == 0 {
+                            log.lock().unwrap().push(round);
+                        }
+                    });
+                }
+            });
+        }
+        let seen = log.into_inner().unwrap();
+        assert_eq!(seen, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn disjoint_cell_reads_and_writes() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        {
+            let cell = DisjointCell::new(&mut x);
+            assert_eq!(cell.len(), 4);
+            assert!(!cell.is_empty());
+            // Disjoint index sets per task: {0, 1} and {2, 3}.
+            global().scope(|s| {
+                let c = &cell;
+                s.spawn(move || unsafe {
+                    c.add(0, 1.0);
+                    c.scale(1, 2.0);
+                });
+                s.spawn(move || unsafe {
+                    let v = c.get(2);
+                    c.add(3, v);
+                });
+            });
+        }
+        assert_eq!(x, vec![2.0, 4.0, 3.0, 7.0]);
+    }
+}

@@ -1,0 +1,321 @@
+//! The long-lived worker runtime behind `util::pool`.
+//!
+//! One deque per worker: owners pop newest-first (keeps caches warm),
+//! thieves steal oldest-first. Tasks enter round-robin so the chunks of a
+//! single `scope` spread across workers even before any stealing happens.
+//! A [`Scope`] pins borrowed data: `spawn` erases the closure's lifetime
+//! (the classic scoped-pool trick), which is sound because `scope` joins
+//! every spawned task — running its own scope's queued tasks while it
+//! waits — before returning, even when the body or a task panics.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// A lifetime-erased task body (see [`Scope::spawn`]).
+type TaskFn = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued unit of work, tagged with its owning scope so joiners can
+/// help with *their own* scope's tasks only.
+struct Task {
+    /// Identity of the owning scope: the `ScopeState` allocation address.
+    /// Stable for as long as any of the scope's tasks are queued, because
+    /// every queued closure holds an `Arc` to that state (no ABA).
+    scope: usize,
+    run: TaskFn,
+}
+
+/// Pretend a boxed task body is `'static`.
+///
+/// # Safety
+/// The caller must guarantee the task runs (or is dropped) before any
+/// borrow it captures expires — `WorkerPool::scope` enforces this by
+/// joining every spawned task before it returns.
+// The named lifetime exists to annotate the transmute explicitly; elision
+// would hide which lifetime is being erased.
+#[allow(clippy::needless_lifetimes)]
+unsafe fn erase_task_lifetime<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> TaskFn {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, TaskFn>(task)
+}
+
+type PanicPayload = Box<dyn Any + Send + 'static>;
+
+struct Shared {
+    /// One deque per worker.
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Tasks pushed but not yet taken (the workers' sleep gate).
+    pending: AtomicUsize,
+    /// Workers currently inside the sleep path. Lets `push` skip the
+    /// lock+notify entirely while everyone is awake — otherwise every
+    /// spawn in the process would serialize on `sleep`.
+    sleepers: AtomicUsize,
+    /// Round-robin cursor for pushes.
+    next_push: AtomicUsize,
+    /// Sleep handshake: see `worker_loop` / `push`. Orderings are SeqCst
+    /// on (`pending`, `sleepers`) so the Dekker-style "W(pending) then
+    /// R(sleepers)" vs "W(sleepers) then R(pending)" pair can never both
+    /// miss; the wait timeout is a second line of defence only.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Pop newest-first from `me`'s own deque, else steal oldest-first
+    /// from the other workers.
+    fn take(&self, me: usize) -> Option<Task> {
+        let k = self.deques.len();
+        if let Some(task) = self.deques[me].lock().unwrap().pop_back() {
+            self.pending.fetch_sub(1, Ordering::AcqRel);
+            return Some(task);
+        }
+        for off in 1..k {
+            if let Some(task) = self.deques[(me + off) % k].lock().unwrap().pop_front() {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(task);
+            }
+        }
+        None
+    }
+
+    /// Remove one queued task belonging to `scope_id`, searching every
+    /// deque oldest-first. Joiners help with their *own* scope's work
+    /// only: inlining a foreign task would serialize it into this
+    /// scope's barrier (e.g. a long oracle scan into a sweep join) and
+    /// would also reintroduce cross-scope borrow reasoning into the
+    /// soundness argument.
+    fn steal_scoped(&self, scope_id: usize) -> Option<TaskFn> {
+        for deque in &self.deques {
+            let mut queue = deque.lock().unwrap();
+            if let Some(pos) = queue.iter().position(|t| t.scope == scope_id) {
+                let task = queue.remove(pos).expect("position came from this queue");
+                drop(queue);
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(task.run);
+            }
+        }
+        None
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    loop {
+        if let Some(task) = shared.take(me) {
+            (task.run)();
+            continue;
+        }
+        let guard = shared.sleep.lock().unwrap();
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Dekker handshake with `push`: advertise the sleeper FIRST, then
+        // re-check `pending` (push does W(pending) then R(sleepers), both
+        // SeqCst) — at least one side always sees the other.
+        shared.sleepers.fetch_add(1, Ordering::SeqCst);
+        if shared.pending.load(Ordering::SeqCst) > 0 {
+            shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+            continue; // raced with a push: retry before sleeping
+        }
+        // The timeout is defence in depth only; the handshake above
+        // already rules out lost wakeups.
+        let _unused = shared.wake.wait_timeout(guard, Duration::from_millis(100)).unwrap();
+        shared.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A persistent pool of worker threads with per-worker deques and work
+/// stealing. One process-wide instance lives behind [`global`]; private
+/// pools are mainly for tests and for `Drop`-based shutdown coverage.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads.max(1)` long-lived workers.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            sleepers: AtomicUsize::new(0),
+            next_push: AtomicUsize::new(0),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|me| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("paf-pool-{me}"))
+                    .spawn(move || worker_loop(shared, me))
+                    .expect("spawning a pool worker failed")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Worker count. This is the pool's parallelism, not a chunking
+    /// contract: `parallel_map*` take an explicit `threads` argument
+    /// precisely so results never depend on this number.
+    pub fn threads(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    fn push(&self, task: Task) {
+        let k = self.shared.deques.len();
+        let at = self.shared.next_push.fetch_add(1, Ordering::Relaxed) % k;
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.shared.deques[at].lock().unwrap().push_back(task);
+        // Fast path: nobody is (about to be) asleep, skip the lock. See
+        // the `Shared::sleep` field docs for the handshake argument.
+        if self.shared.sleepers.load(Ordering::SeqCst) > 0 {
+            let _guard = self.shared.sleep.lock().unwrap();
+            self.shared.wake.notify_one();
+        }
+    }
+
+    /// Run `body` with a [`Scope`] onto which tasks borrowing the
+    /// caller's data can be spawned; returns only after every spawned
+    /// task completed. The joining thread *helps*: while it waits it
+    /// executes queued tasks **of this scope** itself. That keeps nested
+    /// scopes (a pool task opening its own scope) deadlock-free — every
+    /// joiner can always run its own queued work, and tasks executing
+    /// elsewhere terminate by induction on nesting depth — without ever
+    /// pulling a foreign long-running task into this scope's barrier.
+    /// Panics in the body or in any task are propagated after the join
+    /// (body panic first, else the first task panic).
+    pub fn scope<'env, R>(
+        &'env self,
+        body: impl for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> R,
+    ) -> R {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState {
+                remaining: AtomicUsize::new(0),
+                panic: Mutex::new(None),
+                done: Mutex::new(()),
+                done_wake: Condvar::new(),
+            }),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        let scope_id = Arc::as_ptr(&scope.state) as usize;
+        let result = catch_unwind(AssertUnwindSafe(|| body(&scope)));
+        // Join: run this scope's queued tasks while any are live.
+        loop {
+            if scope.state.remaining.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            if let Some(run) = self.shared.steal_scoped(scope_id) {
+                run();
+                continue;
+            }
+            let guard = scope.state.done.lock().unwrap();
+            if scope.state.remaining.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            // None of this scope's tasks are queued: they are in flight
+            // on workers. The short timeout re-polls the queues in case
+            // an in-flight task spawns more work into this scope.
+            let _unused =
+                scope.state.done_wake.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+        }
+        let task_panic = scope.state.panic.lock().unwrap().take();
+        match (result, task_panic) {
+            (Ok(value), None) => value,
+            (Ok(_), Some(payload)) => resume_unwind(payload),
+            (Err(payload), _) => resume_unwind(payload),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _guard = self.shared.sleep.lock().unwrap();
+            self.shared.wake.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _unused = handle.join();
+        }
+    }
+}
+
+struct ScopeState {
+    /// Tasks spawned but not yet completed.
+    remaining: AtomicUsize,
+    /// First task panic, rethrown by `scope` after the join.
+    panic: Mutex<Option<PanicPayload>>,
+    /// Completion handshake (same recheck-under-lock pattern as `sleep`).
+    done: Mutex<()>,
+    done_wake: Condvar,
+}
+
+/// Spawn handle passed to [`WorkerPool::scope`] bodies.
+///
+/// The two lifetimes mirror `std::thread::Scope<'scope, 'env>`: `'scope`
+/// is the higher-ranked region of the scope itself (invariant via the
+/// `PhantomData`, so it cannot shrink), while the early-bound `'env`
+/// (with `'env: 'scope`) represents the environment the scope call was
+/// made from. Every spawned closure must satisfy `F: 'scope`; borrows of
+/// data that outlives the `scope` call reach `'scope` through
+/// `'env: 'scope`, whereas a borrow of a scope-body local — which would
+/// dangle by the time the join loop runs the task — cannot, and is
+/// rejected at compile time.
+pub struct Scope<'scope, 'env: 'scope> {
+    pool: &'scope WorkerPool,
+    state: Arc<ScopeState>,
+    /// Invariance in `'scope` (same trick as `std::thread::Scope`):
+    /// without it the region could shrink to admit body-local borrows.
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Spawn a task that may borrow data owned by the caller of `scope`
+    /// (`F: 'scope` enforces that the borrows outlive the scope's join,
+    /// which is what makes the internal lifetime erasure sound).
+    pub fn spawn<F>(&'scope self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        self.state.remaining.fetch_add(1, Ordering::AcqRel);
+        let state = Arc::clone(&self.state);
+        let wrapped = move || {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if state.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let _guard = state.done.lock().unwrap();
+                state.done_wake.notify_all();
+            }
+        };
+        let boxed: Box<dyn FnOnce() + Send + '_> = Box::new(wrapped);
+        // SAFETY: `WorkerPool::scope` blocks until `remaining` hits zero
+        // (incremented above, decremented by `wrapped` only after `f`
+        // ran), so every borrow captured by `f` outlives the task.
+        let run = unsafe { erase_task_lifetime(boxed) };
+        self.pool.push(Task { scope: Arc::as_ptr(&self.state) as usize, run });
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide persistent pool, created on first use and sized by
+/// `PAF_THREADS` / available parallelism (see [`super::default_threads`]).
+/// It lives for the remainder of the process; per-call thread spawning is
+/// gone, which is what lets the sharded sweep profit from much smaller
+/// shards than the scoped-thread implementation could.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(super::default_threads()))
+}

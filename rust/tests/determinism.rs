@@ -1,0 +1,149 @@
+//! Thread-count determinism of the parallel runtime (PR-2 tentpole).
+//!
+//! The sharded executor's scatter-safe parallel apply and the overlapped
+//! oracle pipeline are both designed to be *bit-deterministic*: chunk
+//! layouts depend only on the configured `threads` value, per-row
+//! arithmetic is independent of which worker runs it, and scan results
+//! are merged only at the sweep barrier. These tests pin that contract
+//! on the two paper workloads: full `SolverResult`s must be bit-identical
+//! across thread counts 1, 2 and 8 (the same sweep across `PAF_THREADS`
+//! values is covered by the CI matrix, which runs this whole suite under
+//! `PAF_THREADS=1` and `PAF_THREADS=4`).
+
+use paf::core::engine::SweepStrategy;
+use paf::core::solver::SolverResult;
+use paf::graph::generators::type1_complete;
+use paf::graph::Graph;
+use paf::problems::correlation::{solve_cc, CcConfig, CcInstance, CcResult};
+use paf::problems::metric_oracle::OracleMode;
+use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::util::Rng;
+
+fn assert_bit_identical(reference: &SolverResult, got: &SolverResult, label: &str) {
+    assert_eq!(reference.x, got.x, "{label}: x differs (bitwise)");
+    assert_eq!(reference.iterations, got.iterations, "{label}: iteration count differs");
+    assert_eq!(reference.converged, got.converged, "{label}: convergence differs");
+    assert_eq!(
+        reference.total_projections, got.total_projections,
+        "{label}: projection count differs"
+    );
+    assert_eq!(
+        reference.active_constraints, got.active_constraints,
+        "{label}: active-set size differs"
+    );
+}
+
+fn nearness_cfg(threads: usize, overlap: bool) -> NearnessConfig {
+    NearnessConfig {
+        mode: OracleMode::Collect,
+        sweep: SweepStrategy::ShardedParallel { threads },
+        overlap,
+        violation_tol: 1e-6,
+        dual_tol: 1e-6,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn nearness_sharded_is_thread_count_invariant() {
+    let mut rng = Rng::new(41);
+    let inst = type1_complete(14, &mut rng);
+    let mut reference: Option<SolverResult> = None;
+    for threads in [1usize, 2, 8] {
+        let res = solve_nearness(&inst, &nearness_cfg(threads, false)).result;
+        assert!(res.converged, "nearness (t={threads}) did not converge");
+        match &reference {
+            None => reference = Some(res),
+            Some(r) => assert_bit_identical(r, &res, &format!("nearness t={threads}")),
+        }
+    }
+}
+
+#[test]
+fn nearness_sharded_overlap_is_thread_count_invariant() {
+    let mut rng = Rng::new(42);
+    let inst = type1_complete(14, &mut rng);
+    let mut reference: Option<SolverResult> = None;
+    for threads in [1usize, 2, 8] {
+        let res = solve_nearness(&inst, &nearness_cfg(threads, true)).result;
+        assert!(res.converged, "overlapped nearness (t={threads}) did not converge");
+        match &reference {
+            None => reference = Some(res),
+            Some(r) => assert_bit_identical(r, &res, &format!("nearness+overlap t={threads}")),
+        }
+    }
+}
+
+#[test]
+fn nearness_overlap_reaches_the_nonoverlapped_optimum() {
+    // Overlap changes the trajectory (each scan is one round stale), but
+    // the program is strictly convex: same unique optimum.
+    let mut rng = Rng::new(43);
+    let inst = type1_complete(12, &mut rng);
+    let mut tight = nearness_cfg(2, false);
+    tight.violation_tol = 1e-8;
+    tight.dual_tol = 1e-8;
+    let plain = solve_nearness(&inst, &tight);
+    tight.overlap = true;
+    let overlapped = solve_nearness(&inst, &tight);
+    assert!(plain.result.converged && overlapped.result.converged);
+    for (a, b) in plain.result.x.iter().zip(&overlapped.result.x) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+fn cc_instance(seed: u64) -> CcInstance {
+    let mut rng = Rng::new(seed);
+    let g = Graph::complete(12);
+    let (sg, _) = paf::graph::generators::planted_signed(g, 3, 0.15, &mut rng);
+    CcInstance::from_signed(&sg)
+}
+
+fn solve_cc_with(inst: &CcInstance, threads: usize, overlap: bool) -> CcResult {
+    let cfg = CcConfig {
+        mode: OracleMode::Collect,
+        sweep: SweepStrategy::ShardedParallel { threads },
+        overlap,
+        violation_tol: 1e-4,
+        inner_sweeps: 4,
+        max_iters: 800,
+        ..CcConfig::dense()
+    };
+    solve_cc(inst, &cfg, 7)
+}
+
+#[test]
+fn correlation_sharded_overlap_is_thread_count_invariant() {
+    let inst = cc_instance(44);
+    let mut reference: Option<CcResult> = None;
+    for threads in [1usize, 2, 8] {
+        let res = solve_cc_with(&inst, threads, true);
+        assert!(res.result.converged, "overlapped CC (t={threads}) did not converge");
+        match &reference {
+            None => reference = Some(res),
+            Some(r) => {
+                assert_bit_identical(&r.result, &res.result, &format!("cc+overlap t={threads}"));
+                // Bit-identical x must round to the identical clustering.
+                assert_eq!(r.labels, res.labels, "t={threads}: rounding differs");
+                assert_eq!(r.lp_objective, res.lp_objective, "t={threads}: LP objective");
+            }
+        }
+    }
+}
+
+#[test]
+fn correlation_sharded_parallel_apply_is_thread_count_invariant() {
+    let inst = cc_instance(45);
+    let mut reference: Option<CcResult> = None;
+    for threads in [1usize, 2, 8] {
+        let res = solve_cc_with(&inst, threads, false);
+        assert!(res.result.converged, "sharded CC (t={threads}) did not converge");
+        match &reference {
+            None => reference = Some(res),
+            Some(r) => {
+                assert_bit_identical(&r.result, &res.result, &format!("cc t={threads}"));
+                assert_eq!(r.labels, res.labels, "t={threads}: rounding differs");
+            }
+        }
+    }
+}
