@@ -22,7 +22,8 @@
 
 use paf::coordinator::{figure2_series, figure3_series, violation_decay_rate};
 use paf::graph::generators::{chung_lu_power_law, planted_signed};
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::core::problem::SolveOptions;
+use paf::problems::correlation::{CcInstance, Correlation};
 use paf::util::cli::Args;
 use paf::util::table::Table;
 use paf::util::timer::{fmt_bytes, peak_rss_bytes};
@@ -54,10 +55,10 @@ fn main() {
     println!("implicit triangle-constraint count: {implicit:.3e}");
 
     // --- 2. Solve (Algorithm 7 config).
-    let mut cfg = CcConfig::sparse();
-    cfg.violation_tol = args.get_parsed_or("tol", 1e-2);
-    cfg.max_iters = args.get_parsed_or("max-iters", 120usize);
-    let res = solve_cc(&inst, &cfg, seed);
+    let opts = SolveOptions::new()
+        .violation_tol(args.get_parsed_or("tol", 1e-2))
+        .max_iters(args.get_parsed_or("max-iters", 120usize));
+    let res = Correlation::sparse(&inst).seed(seed).solve(&opts);
 
     // --- 3. Headline metrics (Table 3's row shape).
     let mut t = Table::new(

@@ -10,7 +10,8 @@ use paf::baselines::svm_liblinear::{train_dual_cd, train_primal_newton};
 use paf::ml::dataset::{svm_cloud, table4_dataset};
 use paf::ml::knn::knn_accuracy;
 use paf::ml::mahalanobis::Mat;
-use paf::problems::itml::{solve_pf_itml, PfItmlConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::itml::{PfItml, PfItmlConfig};
 use paf::problems::svm::{train_pf_svm, SvmConfig};
 use paf::util::table::Table;
 use paf::util::Rng;
@@ -23,7 +24,8 @@ fn main() {
     let (mean, std) = train.normalize();
     test.apply_transform(&mean, &std);
     let budget = 50_000;
-    let pf = solve_pf_itml(&train, &PfItmlConfig { max_projections: budget, seed: 3, ..Default::default() });
+    let pf = PfItml::new(&train, PfItmlConfig { max_projections: budget, seed: 3, ..Default::default() })
+        .solve(&SolveOptions::default());
     let orig = solve_itml_orig(&train, &ItmlOrigConfig { max_projections: budget, seed: 3, ..Default::default() });
     let k = 4;
     let mut t = Table::new("ITML on ionosphere-like data (Table 4 shape)", &["method", "test acc"]);

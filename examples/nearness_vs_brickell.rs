@@ -7,7 +7,8 @@
 
 use paf::baselines::brickell::triangle_fixing;
 use paf::graph::generators::type1_complete;
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::nearness::Nearness;
 use paf::util::cli::Args;
 use paf::util::table::Table;
 use paf::util::Rng;
@@ -19,10 +20,7 @@ fn main() {
     let mut rng = Rng::new(args.get_parsed_or("seed", 1u64));
     let inst = type1_complete(n, &mut rng);
 
-    let pf = solve_nearness(
-        &inst,
-        &NearnessConfig { violation_tol: tol, ..Default::default() },
-    );
+    let pf = Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(tol));
     let br = triangle_fixing(n, &inst.weights, tol, 10_000);
 
     let mut t = Table::new(

@@ -8,17 +8,15 @@
 //! ```
 
 use paf::graph::generators::type1_complete;
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::nearness::Nearness;
 use paf::util::Rng;
 
 fn main() {
     let mut rng = Rng::new(53);
     let inst = type1_complete(260, &mut rng);
     for _ in 0..3 {
-        let res = solve_nearness(
-            &inst,
-            &NearnessConfig { violation_tol: 1e-2, ..Default::default() },
-        );
+        let res = Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(1e-2));
         assert!(res.result.converged);
         println!(
             "iters {} projections {} seconds {:.3}",

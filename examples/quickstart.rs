@@ -6,7 +6,8 @@
 
 use paf::graph::generators::type1_complete;
 use paf::problems::metric_oracle::max_metric_violation;
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::nearness::Nearness;
 use paf::util::Rng;
 
 fn main() {
@@ -22,8 +23,7 @@ fn main() {
     );
 
     // 2. PROJECT AND FORGET: find the closest metric in L2.
-    let cfg = NearnessConfig { violation_tol: 1e-4, ..Default::default() };
-    let res = solve_nearness(&inst, &cfg);
+    let res = Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(1e-4));
 
     // 3. The output is a metric; the active set is tiny relative to the
     //    ~n³/6 triangle constraints the problem formally has.

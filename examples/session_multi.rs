@@ -1,0 +1,93 @@
+//! Multi-instance `Session` demo: a fleet of metric-nearness instances
+//! plus an ITML fold, solved together through the unified solve API —
+//! with live events, a mid-solve checkpoint, and per-instance results.
+//!
+//! ```bash
+//! cargo run --release --example session_multi
+//! ```
+//!
+//! The three nearness instances are mapped into block-offset regions of
+//! ONE variable vector; with the sharded executor the support-disjoint
+//! planner packs rows from all of them into the same shards, so a
+//! single sharded sweep advances the whole fleet. The ITML fold rides
+//! along as a round-driven block. Every per-instance result is
+//! bit-identical to solving that instance alone (see
+//! `rust/tests/determinism.rs`).
+
+use paf::core::problem::{SolveEvent, SolveOptions};
+use paf::core::session::Session;
+use paf::graph::generators::type1_complete;
+use paf::ml::dataset::gaussian_mixture;
+use paf::problems::itml::{PfItml, PfItmlConfig};
+use paf::problems::metric_oracle::OracleMode;
+use paf::problems::nearness::Nearness;
+use paf::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let instances: Vec<_> = [40usize, 56, 48].iter().map(|&n| type1_complete(n, &mut rng)).collect();
+    let fold = gaussian_mixture(150, 4, 3, 2.5, &mut rng);
+    let itml_cfg = PfItmlConfig { max_projections: 8_000, batch: 100, seed: 7, ..Default::default() };
+
+    // One option set for the whole fleet: sharded sweeps, auto threads.
+    let opts = SolveOptions::new().violation_tol(1e-4).dual_tol(1e-4).sharded(0);
+
+    let mut session = Session::new(opts);
+    let near_handles: Vec<_> = instances
+        .iter()
+        .map(|inst| session.add(Nearness::new(inst).mode(OracleMode::Collect)))
+        .collect();
+    let itml_handle = session.add(PfItml::new(&fold, itml_cfg));
+
+    session.on_event(|event| match event {
+        SolveEvent::Round(ev) => println!(
+            "round {:>3}: {} live blocks, {} found, {} remembered, worst violation {:.2e} \
+             (oracle {:.1}ms / sweep {:.1}ms / forget {:.1}ms)",
+            ev.round,
+            ev.live_blocks,
+            ev.found,
+            ev.remembered,
+            ev.max_violation,
+            ev.phases.oracle_s * 1e3,
+            ev.phases.sweep_s * 1e3,
+            ev.phases.forget_s * 1e3,
+        ),
+        SolveEvent::BlockDone(done) => println!(
+            "  -> block {} ({}) done: converged={} after {} rounds, {} projections",
+            done.block, done.name, done.converged, done.iterations, done.projections
+        ),
+        _ => {}
+    });
+
+    // Drive a few rounds stepwise, checkpoint, then run to completion —
+    // the checkpoint could equally be restored into a fresh process.
+    for _ in 0..2 {
+        session.step();
+    }
+    let ck = session.checkpoint();
+    println!(
+        "checkpoint at round {}: {} remembered constraints captured",
+        ck.round(),
+        ck.remembered()
+    );
+    let summary = session.run();
+    println!(
+        "fleet finished: {} rounds, all_converged={}, cancelled={}",
+        summary.rounds, summary.all_converged, summary.cancelled
+    );
+
+    for (k, h) in near_handles.into_iter().enumerate() {
+        let res = session.take(h);
+        assert!(res.result.converged, "nearness block {k} did not converge");
+        println!(
+            "nearness[{k}]: {} iterations, {} projections, objective {:.4}",
+            res.result.iterations, res.result.total_projections, res.objective
+        );
+    }
+    let itml = session.take(itml_handle);
+    println!(
+        "itml fold: {} projections, {} active pairs",
+        itml.projections, itml.active_pairs
+    );
+    assert!(itml.projections >= 8_000);
+}

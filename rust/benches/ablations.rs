@@ -16,7 +16,8 @@ use paf::core::engine::SweepStrategy;
 use paf::core::solver::{Solver, SolverConfig};
 use paf::graph::apsp::apsp_dense;
 use paf::graph::generators::{planted_signed, type1_complete};
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::core::problem::SolveOptions;
+use paf::problems::correlation::{CcInstance, Correlation};
 use paf::problems::metric_oracle::{MetricOracle, OracleMode};
 use paf::runtime::Runtime;
 use paf::util::benchkit::BenchCtx;
@@ -40,10 +41,8 @@ fn ablation_forget(ctx: &BenchCtx) {
     let n = ctx.scaled(120);
     let mut rng = Rng::new(23);
     let inst = type1_complete(n, &mut rng);
-    let res = paf::problems::nearness::solve_nearness(
-        &inst,
-        &paf::problems::nearness::NearnessConfig { violation_tol: 1e-2, ..Default::default() },
-    );
+    let res = paf::problems::nearness::Nearness::new(&inst)
+        .solve(&SolveOptions::new().violation_tol(1e-2));
     let total_found: usize = res.result.trace.iter().map(|t| t.found).sum();
     let peak_merged = res.result.trace.iter().map(|t| t.merged).max().unwrap_or(0);
     let mut t = Table::new(
@@ -68,13 +67,13 @@ fn ablation_sweeps(ctx: &BenchCtx) {
         &["sweeps", "iterations", "seconds", "projections"],
     );
     for sweeps in [1usize, 2, 8, 75] {
-        let cfg = CcConfig {
-            inner_sweeps: sweeps,
-            violation_tol: 1e-3,
-            max_iters: 2000,
-            ..CcConfig::dense()
-        };
-        let (secs, res) = ctx.bench_once(&format!("sweeps/{sweeps}"), || solve_cc(&inst, &cfg, 1));
+        let opts = SolveOptions::new()
+            .inner_sweeps(sweeps)
+            .violation_tol(1e-3)
+            .max_iters(2000);
+        let (secs, res) = ctx.bench_once(&format!("sweeps/{sweeps}"), || {
+            Correlation::dense(&inst).seed(1).solve(&opts)
+        });
         t.rowd(&[
             sweeps.to_string(),
             res.result.iterations.to_string(),
@@ -165,16 +164,12 @@ fn ablation_sweep_strategy(ctx: &BenchCtx) {
     ] {
         let mut rng = Rng::new(41);
         let inst = type1_complete(n, &mut rng);
-        let cfg = paf::problems::nearness::NearnessConfig {
-            violation_tol: 1e-4,
-            mode: OracleMode::Collect,
-            sweep: strategy,
-            ..Default::default()
-        };
-        let (secs, res) =
-            ctx.bench_once(&format!("strategy/{label}"), || {
-                paf::problems::nearness::solve_nearness(&inst, &cfg)
-            });
+        let opts = SolveOptions::new().violation_tol(1e-4).sweep(strategy);
+        let (secs, res) = ctx.bench_once(&format!("strategy/{label}"), || {
+            paf::problems::nearness::Nearness::new(&inst)
+                .mode(OracleMode::Collect)
+                .solve(&opts)
+        });
         // Strategies (and bucketed delivery) take different trajectories
         // to the same optimum; at violation_tol = 1e-4 the objectives
         // agree to the stopping accuracy, not machine precision.

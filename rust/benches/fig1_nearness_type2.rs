@@ -7,7 +7,8 @@
 
 use paf::baselines::brickell::triangle_fixing;
 use paf::graph::generators::type2_complete;
-use paf::problems::nearness::{decrease_only_distance, solve_nearness, NearnessConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::nearness::{decrease_only_distance, Nearness};
 use paf::util::benchkit::BenchCtx;
 use paf::util::table::Series;
 use paf::util::Rng;
@@ -34,7 +35,7 @@ pub fn run(
         let inst = gen(n, &mut rng);
         let tol = 1e-2;
         let pf = ctx.bench(&format!("pf/n{n}"), |_| {
-            solve_nearness(&inst, &NearnessConfig { violation_tol: tol, ..Default::default() })
+            Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(tol))
         });
         let br = ctx.bench(&format!("brickell/n{n}"), |_| {
             triangle_fixing(n, &inst.weights, tol, 10_000)
@@ -42,8 +43,7 @@ pub fn run(
         series.push(n as f64, &[pf.mean(), br.mean()]);
         // §8.2 criterion sanity: the P&F solution is within distance ~1 of
         // its decrease-only closure.
-        let res =
-            solve_nearness(&inst, &NearnessConfig { violation_tol: tol, ..Default::default() });
+        let res = Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(tol));
         let dd = decrease_only_distance(&inst.graph, &res.result.x);
         println!("n={n}: decrease-only distance {dd:.3}");
     }

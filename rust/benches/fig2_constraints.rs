@@ -5,7 +5,8 @@
 
 use paf::coordinator::figure2_series;
 use paf::graph::generators::snap_like;
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::core::problem::SolveOptions;
+use paf::problems::correlation::{CcInstance, Correlation};
 use paf::util::benchkit::BenchCtx;
 use paf::util::Rng;
 
@@ -23,8 +24,8 @@ fn main() {
         inst.graph.num_nodes(),
         inst.graph.num_edges()
     );
-    let cfg = CcConfig { violation_tol: 1e-2, ..CcConfig::dense() };
-    let (_, res) = ctx.bench_once("cc/ca-hepth", || solve_cc(&inst, &cfg, 7));
+    let opts = SolveOptions::new().violation_tol(1e-2).max_iters(200);
+    let (_, res) = ctx.bench_once("cc/ca-hepth", || Correlation::dense(&inst).seed(7).solve(&opts));
     assert!(res.result.converged);
     let series = figure2_series(&res.result, "Figure 2 — oracle vs post-forget constraint counts");
     series.emit(&ctx.report_dir, "fig2");

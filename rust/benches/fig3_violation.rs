@@ -5,7 +5,8 @@
 
 use paf::coordinator::{figure3_series, violation_decay_rate};
 use paf::graph::generators::snap_like;
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::core::problem::SolveOptions;
+use paf::problems::correlation::{CcInstance, Correlation};
 use paf::util::benchkit::BenchCtx;
 use paf::util::Rng;
 
@@ -18,8 +19,8 @@ fn main() {
     let mut rng = Rng::new(5);
     let g = snap_like("ca-hepth", scale, &mut rng);
     let inst = CcInstance::densify(&g);
-    let cfg = CcConfig { violation_tol: 1e-4, max_iters: 400, ..CcConfig::dense() };
-    let (_, res) = ctx.bench_once("cc/ca-hepth", || solve_cc(&inst, &cfg, 7));
+    let opts = SolveOptions::new().violation_tol(1e-4).max_iters(400);
+    let (_, res) = ctx.bench_once("cc/ca-hepth", || Correlation::dense(&inst).seed(7).solve(&opts));
     let series = figure3_series(&res.result, "Figure 3 — max violation per iteration");
     series.emit(&ctx.report_dir, "fig3");
     match violation_decay_rate(&res.result) {

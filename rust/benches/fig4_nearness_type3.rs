@@ -6,7 +6,8 @@
 
 use paf::baselines::brickell::triangle_fixing;
 use paf::graph::generators::type3_complete;
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::nearness::Nearness;
 use paf::util::benchkit::BenchCtx;
 use paf::util::table::Series;
 use paf::util::Rng;
@@ -27,7 +28,7 @@ fn main() {
         // (the paper relaxes convergence on these instances too).
         let tol = 1.0;
         let pf = ctx.bench(&format!("pf/n{n}"), |_| {
-            solve_nearness(&inst, &NearnessConfig { violation_tol: tol, ..Default::default() })
+            Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(tol))
         });
         let br = ctx.bench(&format!("brickell/n{n}"), |_| {
             triangle_fixing(n, &inst.weights, tol, 10_000)

@@ -14,6 +14,9 @@
 //!       so only the runtime changes between variants
 //!   P5  active-set merge/forget churn (insert + forget cycles)
 //!   P6  native blocked min-plus APSP (the L1 kernel's CPU twin)
+//!   P7  multi-instance batching: K nearness instances as a sequential
+//!       loop vs one Session fleet sharing a single sharded sweep (the
+//!       block-offset multi-instance axis)
 //!
 //! All timings are also written to `reports/BENCH_perf_hotpath.json`
 //! (machine-readable; see `BenchCtx::write_json`) so the perf trajectory
@@ -22,12 +25,14 @@
 use paf::core::bregman::DiagonalQuadratic;
 use paf::core::constraint::Constraint;
 use paf::core::engine::SweepStrategy;
+use paf::core::problem::SolveOptions;
+use paf::core::session::Session;
 use paf::core::solver::{Solver, SolverConfig};
 use paf::graph::apsp::{floyd_warshall_blocked, DistMatrix};
 use paf::graph::generators::{planted_signed, type1_complete};
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::problems::correlation::{CcInstance, Correlation};
 use paf::problems::metric_oracle::{MetricOracle, OracleMode};
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::problems::nearness::Nearness;
 use paf::util::benchkit::BenchCtx;
 use paf::util::Rng;
 use std::sync::Arc;
@@ -101,10 +106,7 @@ fn main() {
         let mut rng = Rng::new(53);
         let inst = type1_complete(ctx.scaled(260), &mut rng);
         all.push(ctx.bench("P3/nearness-n260", |_| {
-            let res = solve_nearness(
-                &inst,
-                &NearnessConfig { violation_tol: 1e-2, ..Default::default() },
-            );
+            let res = Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(1e-2));
             assert!(res.result.converged);
             res
         }));
@@ -120,7 +122,7 @@ fn main() {
         let (sg, _) = planted_signed(g, 8, 0.1, &mut rng);
         let inst = CcInstance::from_signed(&sg);
         all.push(ctx.bench("P4/cc-dense-K120", |_| {
-            let res = solve_cc(&inst, &CcConfig::dense(), 1);
+            let res = Correlation::dense(&inst).seed(1).solve(&SolveOptions::new().max_iters(200));
             assert!(res.result.converged);
             res
         }));
@@ -129,26 +131,81 @@ fn main() {
             ("sharded-t4", SweepStrategy::ShardedParallel { threads: 4 }, false),
             ("sharded-t4-overlap", SweepStrategy::ShardedParallel { threads: 4 }, true),
         ] {
-            let cfg = CcConfig {
-                mode: OracleMode::Collect,
-                // Collect mode converges in fewer, heavier rounds than
-                // ProjectOnFind; give it sweep and iteration headroom so
-                // an unconverged run can't silently pollute the cross-PR
-                // JSON with an incomparable timing (hence the assert).
-                inner_sweeps: 4,
-                max_iters: 600,
-                sweep,
-                overlap,
-                ..CcConfig::dense()
-            };
+            // Collect mode converges in fewer, heavier rounds than
+            // ProjectOnFind; give it sweep and iteration headroom so an
+            // unconverged run can't silently pollute the cross-PR JSON
+            // with an incomparable timing (hence the assert).
+            let opts = SolveOptions::new()
+                .inner_sweeps(4)
+                .max_iters(600)
+                .sweep(sweep)
+                .overlap(overlap);
             let mut iters = 0;
             all.push(ctx.bench(&format!("P4/cc-dense-K120/{label}"), |_| {
-                let res = solve_cc(&inst, &cfg, 1);
+                let res = Correlation::dense(&inst)
+                    .mode(OracleMode::Collect)
+                    .seed(1)
+                    .solve(&opts);
                 assert!(res.result.converged, "{label} did not converge");
                 iters = res.result.iterations;
                 res
             }));
             println!("    -> {iters} iterations ({label})");
+        }
+    }
+
+    // P7: multi-instance batching (the Session fleet axis). K
+    // independent nearness instances: a sequential loop of solo solves
+    // vs ONE session whose blocks share a single sharded sweep — the
+    // support-disjoint planner packs rows from every instance into the
+    // same shards, so the fleet parallelises even when each instance
+    // alone is too small to.
+    {
+        let mut rng = Rng::new(57);
+        let k = 4;
+        let n = ctx.scaled(100);
+        let instances: Vec<_> = (0..k).map(|_| type1_complete(n, &mut rng)).collect();
+        let opts_for = |sweep| {
+            SolveOptions::new().violation_tol(1e-4).dual_tol(1e-4).record_trace(false).sweep(sweep)
+        };
+        all.push(ctx.bench(&format!("P7/multi-nearness-k{k}/seq-loop"), |_| {
+            let opts = opts_for(SweepStrategy::Sequential);
+            let mut objectives = Vec::new();
+            for inst in &instances {
+                let res = Nearness::new(inst).mode(OracleMode::Collect).solve(&opts);
+                assert!(res.result.converged);
+                objectives.push(res.objective);
+            }
+            objectives
+        }));
+        for (label, sweep) in [
+            ("sharded-t4-loop", SweepStrategy::ShardedParallel { threads: 4 }),
+            ("session-batch-sharded-t4", SweepStrategy::ShardedParallel { threads: 4 }),
+        ] {
+            let batched = label.starts_with("session-batch");
+            all.push(ctx.bench(&format!("P7/multi-nearness-k{k}/{label}"), |_| {
+                let opts = opts_for(sweep);
+                let mut objectives = Vec::new();
+                if batched {
+                    let mut session = Session::new(opts);
+                    let handles: Vec<_> = instances
+                        .iter()
+                        .map(|inst| session.add(Nearness::new(inst).mode(OracleMode::Collect)))
+                        .collect();
+                    let summary = session.run();
+                    assert!(summary.all_converged, "batched fleet did not converge");
+                    for h in handles {
+                        objectives.push(session.take(h).objective);
+                    }
+                } else {
+                    for inst in &instances {
+                        let res = Nearness::new(inst).mode(OracleMode::Collect).solve(&opts);
+                        assert!(res.result.converged);
+                        objectives.push(res.objective);
+                    }
+                }
+                objectives
+            }));
         }
     }
 

@@ -11,7 +11,8 @@
 use paf::baselines::brickell::triangle_fixing;
 use paf::baselines::generic_qp::{admm_metric_nearness, QpConfig, QpOutcome};
 use paf::graph::generators::type1_complete;
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::nearness::Nearness;
 use paf::util::benchkit::BenchCtx;
 use paf::util::table::Table;
 use paf::util::Rng;
@@ -50,16 +51,10 @@ fn main() {
         let mut rng = Rng::new(42 + n as u64);
         let inst = type1_complete(n, &mut rng);
         let stats = ctx.bench(&format!("pf/n{n}"), |_| {
-            solve_nearness(
-                &inst,
-                &NearnessConfig { violation_tol: tol, ..Default::default() },
-            )
+            Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(tol))
         });
         // Re-run once to read result fields (benched run discards them).
-        let res = solve_nearness(
-            &inst,
-            &NearnessConfig { violation_tol: tol, ..Default::default() },
-        );
+        let res = Nearness::new(&inst).solve(&SolveOptions::new().violation_tol(tol));
         assert!(res.result.converged, "pf must converge at n={n}");
         ours.push(format!("{:.2}", stats.mean()));
         ours_active.push(res.result.active_constraints.to_string());

@@ -12,7 +12,8 @@
 use paf::baselines::ruggles::dykstra_cc;
 use paf::coordinator::metrics::MemoryProbe;
 use paf::graph::generators::snap_like;
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::core::problem::SolveOptions;
+use paf::problems::correlation::{CcInstance, Correlation};
 use paf::util::benchkit::BenchCtx;
 use paf::util::table::Table;
 use paf::util::timer::fmt_bytes;
@@ -42,8 +43,9 @@ fn main() {
         println!("-- {name}: densified K_{n} ({} edges)", inst.graph.num_edges());
 
         let probe = MemoryProbe::start();
-        let cfg = CcConfig { violation_tol: 1e-2, ..CcConfig::dense() };
-        let (ours_t, ours) = ctx.bench_once(&format!("ours/{name}"), || solve_cc(&inst, &cfg, 3));
+        let opts = SolveOptions::new().violation_tol(1e-2).max_iters(200);
+        let (ours_t, ours) =
+            ctx.bench_once(&format!("ours/{name}"), || Correlation::dense(&inst).seed(3).solve(&opts));
         let mem = probe.finish();
         assert!(ours.result.converged, "{name}: P&F did not converge");
 

@@ -8,7 +8,8 @@
 //! 46.7h/121.2h runtimes).
 
 use paf::graph::generators::{sign_edges, snap_like};
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
+use paf::core::problem::SolveOptions;
+use paf::problems::correlation::{CcInstance, Correlation};
 use paf::util::benchkit::BenchCtx;
 use paf::util::table::Table;
 use paf::util::Rng;
@@ -31,9 +32,9 @@ fn main() {
         let n = inst.graph.num_nodes() as f64;
         let implicit = n * (n - 1.0) * (n - 2.0) / 2.0;
         println!("-- {name}: n={} m={}", inst.graph.num_nodes(), inst.graph.num_edges());
-        let cfg = CcConfig { max_iters: 250, ..CcConfig::sparse() };
+        let opts = SolveOptions::new().max_iters(250);
         let (secs, res) = ctx.bench_once(&format!("sparse-cc/{name}"), || {
-            solve_cc(&inst, &cfg, 13)
+            Correlation::sparse(&inst).seed(13).solve(&opts)
         });
         assert!(res.result.converged, "{name} did not converge");
         table.rowd(&[

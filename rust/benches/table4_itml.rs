@@ -11,7 +11,8 @@ use paf::baselines::itml_orig::{solve_itml_orig, ItmlOrigConfig};
 use paf::ml::dataset::table4_dataset;
 use paf::ml::knn::knn_accuracy;
 use paf::ml::mahalanobis::Mat;
-use paf::problems::itml::{solve_pf_itml, PfItmlConfig};
+use paf::core::problem::SolveOptions;
+use paf::problems::itml::{PfItml, PfItmlConfig};
 use paf::util::benchkit::BenchCtx;
 use paf::util::table::Table;
 use paf::util::Rng;
@@ -39,10 +40,11 @@ fn main() {
         test.apply_transform(&mean, &std);
         let k = 4;
         let (_, pf) = ctx.bench_once(&format!("pf-itml/{name}"), || {
-            solve_pf_itml(
+            PfItml::new(
                 &train,
-                &PfItmlConfig { max_projections: budget, seed: 17, ..Default::default() },
+                PfItmlConfig { max_projections: budget, seed: 17, ..Default::default() },
             )
+            .solve(&SolveOptions::default())
         });
         let (_, orig) = ctx.bench_once(&format!("itml/{name}"), || {
             solve_itml_orig(

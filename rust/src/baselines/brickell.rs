@@ -91,7 +91,8 @@ mod tests {
     use super::*;
     use crate::graph::generators::type1_complete;
     use crate::problems::metric_oracle::max_metric_violation;
-    use crate::problems::nearness::{solve_nearness, NearnessConfig};
+    use crate::core::problem::SolveOptions;
+    use crate::problems::nearness::Nearness;
     use crate::util::Rng;
 
     #[test]
@@ -111,10 +112,8 @@ mod tests {
         let inst = type1_complete(10, &mut rng);
         let brick = triangle_fixing(10, &inst.weights, 1e-10, 20000);
         assert!(brick.converged);
-        let pf = solve_nearness(
-            &inst,
-            &NearnessConfig { violation_tol: 1e-10, dual_tol: 1e-10, ..Default::default() },
-        );
+        let pf = Nearness::new(&inst)
+            .solve(&SolveOptions::new().violation_tol(1e-10).dual_tol(1e-10));
         assert!(pf.result.converged);
         for (a, b) in brick.x.iter().zip(&pf.result.x) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");

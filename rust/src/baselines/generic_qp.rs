@@ -167,13 +167,8 @@ mod tests {
         let QpOutcome::Solved { x, .. } = admm_metric_nearness(7, &inst.weights, &cfg) else {
             panic!("admm failed");
         };
-        let pf = crate::problems::nearness::solve_nearness(
-            &inst,
-            &crate::problems::nearness::NearnessConfig {
-                violation_tol: 1e-9,
-                dual_tol: 1e-9,
-                ..Default::default()
-            },
+        let pf = crate::problems::nearness::Nearness::new(&inst).solve(
+            &crate::core::problem::SolveOptions::new().violation_tol(1e-9).dual_tol(1e-9),
         );
         for (a, b) in x.iter().zip(&pf.result.x) {
             assert!((a - b).abs() < 1e-2, "{a} vs {b}");

@@ -124,7 +124,8 @@ pub fn dykstra_cc(
 mod tests {
     use super::*;
     use crate::graph::generators::planted_signed;
-    use crate::problems::correlation::{solve_cc, CcConfig};
+    use crate::core::problem::SolveOptions;
+    use crate::problems::correlation::Correlation;
     use crate::util::Rng;
 
     fn planted(n: usize, k: usize, flip: f64, seed: u64) -> CcInstance {
@@ -152,7 +153,9 @@ mod tests {
         let inst = planted(8, 2, 0.15, 2);
         let dy = dykstra_cc(&inst, 1.0, 1e-9, 50000);
         assert!(dy.converged);
-        let pf = solve_cc(&inst, &CcConfig { violation_tol: 1e-9, ..CcConfig::dense() }, 1);
+        let pf = Correlation::dense(&inst)
+            .seed(1)
+            .solve(&SolveOptions::new().violation_tol(1e-9));
         assert!(pf.result.converged);
         for (a, b) in dy.x.iter().zip(&pf.result.x) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
@@ -166,7 +169,9 @@ mod tests {
         // carries 3·C(n,3) duals; P&F carries only the remembered rows.
         let inst = planted(10, 2, 0.1, 3);
         let dy = dykstra_cc(&inst, 1.0, 1e-6, 2000);
-        let pf = solve_cc(&inst, &CcConfig { violation_tol: 1e-6, ..CcConfig::dense() }, 1);
+        let pf = Correlation::dense(&inst)
+            .seed(1)
+            .solve(&SolveOptions::new().violation_tol(1e-6));
         let pf_rows = pf.result.active_constraints;
         assert!(
             dy.dual_bytes > pf_rows * 8 * 4,

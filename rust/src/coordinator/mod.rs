@@ -83,10 +83,11 @@ mod tests {
                     remembered: 5,
                     max_violation: v,
                     projections: 1,
-                    seconds: 0.0,
+                    ..Default::default()
                 })
                 .collect(),
             seconds: 0.0,
+            phases: Default::default(),
         }
     }
 

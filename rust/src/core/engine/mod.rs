@@ -74,6 +74,27 @@ pub trait SweepExecutor<F: BregmanFunction> {
     /// Run one full sweep, updating `x` and the duals in place.
     fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats;
 
+    /// Like [`SweepExecutor::sweep`], additionally invoking
+    /// `record(slot, movement)` for every row whose projection moved,
+    /// with `movement = |c|` — the *exact* clamped dual step the engine
+    /// applied — in the executor's deterministic serial bookkeeping
+    /// order. This is the `Session` batch driver's per-block accounting
+    /// channel: restricting the calls to one block's rows reproduces
+    /// that block's solo projection count and dual-movement sum bit for
+    /// bit (recomputing the movement from dual snapshots would not —
+    /// `z − (z − c)` need not round back to `c`). Executors without
+    /// recording support return `None` (the PJRT batch adapter).
+    fn sweep_recorded(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        record: &mut dyn FnMut(u32, f64),
+    ) -> Option<SweepStats> {
+        let _ = (f, x, active, record);
+        None
+    }
+
     /// FORGET notification: `map[old_slot]` is the row's new slot, or
     /// [`crate::core::constraint::SLOT_DROPPED`] if it was forgotten;
     /// `instance` is the compacted set's `ActiveSet::instance_id` and the

@@ -17,17 +17,42 @@ impl SequentialSweep {
     }
 }
 
-impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
-    fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+impl SequentialSweep {
+    /// The one sweep loop, monomorphized over the recorder so the plain
+    /// path keeps its exact historical shape (the no-op recorder
+    /// compiles away).
+    fn sweep_impl<F: BregmanFunction>(
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        mut record: impl FnMut(u32, f64),
+    ) -> SweepStats {
         let mut stats = SweepStats { shards: 1, ..SweepStats::default() };
         for r in 0..active.len() {
             let moved = project_row_in_place(f, x, active, r);
             if moved != 0.0 {
                 stats.projections += 1;
                 stats.dual_movement += moved;
+                record(r as u32, moved);
             }
         }
         stats
+    }
+}
+
+impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
+    fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+        SequentialSweep::sweep_impl(f, x, active, |_, _| {})
+    }
+
+    fn sweep_recorded(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        record: &mut dyn FnMut(u32, f64),
+    ) -> Option<SweepStats> {
+        Some(SequentialSweep::sweep_impl(f, x, active, record))
     }
 
     fn name(&self) -> &'static str {

@@ -75,8 +75,19 @@ impl ShardedSweep {
     }
 }
 
-impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
-    fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+impl ShardedSweep {
+    /// The one sweep loop, monomorphized over the recorder so the plain
+    /// path keeps its exact historical shape (the no-op recorder
+    /// compiles away). `record(slot, |step|)` runs inside the serial
+    /// bookkeeping, in the same deterministic slot order as the
+    /// `dual_movement` reduction.
+    fn sweep_impl<F: BregmanFunction>(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        mut record: impl FnMut(u32, f64),
+    ) -> SweepStats {
         if !self.plan.is_current(active) {
             self.plan.rebuild(active, x.len(), &ShardLimits::none());
         }
@@ -111,6 +122,7 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
                     active.set_z(r, z - step);
                     stats.projections += 1;
                     stats.dual_movement += step.abs();
+                    record(r as u32, step.abs());
                 }
             } else {
                 for &r in shard {
@@ -118,6 +130,7 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
                     if moved != 0.0 {
                         stats.projections += 1;
                         stats.dual_movement += moved;
+                        record(r, moved);
                     }
                 }
             }
@@ -131,10 +144,27 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
                 if moved != 0.0 {
                     stats.projections += 1;
                     stats.dual_movement += moved;
+                    record(r, moved);
                 }
             }
         }
         stats
+    }
+}
+
+impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
+    fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+        self.sweep_impl(f, x, active, |_, _| {})
+    }
+
+    fn sweep_recorded(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        record: &mut dyn FnMut(u32, f64),
+    ) -> Option<SweepStats> {
+        Some(self.sweep_impl(f, x, active, record))
     }
 
     fn after_forget(

@@ -8,6 +8,11 @@
 //! - [`engine`] — pluggable projection-sweep executors (sequential
 //!   Gauss–Seidel and the support-disjoint sharded parallel sweep).
 //! - [`solver`] — the outer loop: oracle → merge → project sweep → forget.
+//! - [`problem`] — the unified problem layer: [`SolveOptions`] and the
+//!   [`Problem`] trait every workload lowers through.
+//! - [`session`] — the [`Session`] driver: stepwise solves with typed
+//!   events, cancellation, checkpoint/resume, and multi-instance block
+//!   batching over the shard planner.
 //! - [`stochastic`] — the truly stochastic variant (§3.2.1).
 
 pub mod active_set;
@@ -15,6 +20,8 @@ pub mod bregman;
 pub mod constraint;
 pub mod engine;
 pub mod oracle;
+pub mod problem;
+pub mod session;
 pub mod solver;
 pub mod stochastic;
 
@@ -23,4 +30,9 @@ pub use bregman::{BregmanFunction, DiagonalQuadratic, Entropy};
 pub use constraint::{Constraint, ConstraintKey};
 pub use engine::{SweepExecutor, SweepStats, SweepStrategy};
 pub use oracle::{Oracle, OracleOutcome, OverlappableOracle, RandomOracle};
-pub use solver::{IterStats, Solver, SolverConfig, SolverResult};
+pub use problem::{
+    CancelToken, Handle, Lowered, Problem, RoundProblem, SessionSummary, SolveEvent,
+    SolveOptions, VectorPart,
+};
+pub use session::{Checkpoint, Session};
+pub use solver::{IterStats, PhaseTimes, Solver, SolverConfig, SolverResult};

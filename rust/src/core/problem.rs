@@ -1,0 +1,568 @@
+//! The unified problem layer: one [`SolveOptions`] vocabulary for every
+//! workload, and the [`Problem`] trait that lowers a typed problem
+//! (metric nearness, correlation clustering, ITML, …) into something the
+//! [`Session`](crate::core::session::Session) driver can execute.
+//!
+//! Two execution families exist:
+//!
+//! - **Vector problems** ([`Lowered::Vector`]) build a
+//!   [`DiagonalQuadratic`] Bregman block plus a separation oracle and are
+//!   executed by the shared PROJECT AND FORGET engine. Many independent
+//!   vector problems batch into *one* solver: each block occupies a
+//!   block-offset region of a single concatenated variable vector, and
+//!   because blocks never share coordinates the support-disjoint shard
+//!   planner parallelises across the whole fleet in one sharded sweep
+//!   (the Ruggles et al. observation that disjoint constraint blocks
+//!   parallelise trivially).
+//! - **Round-driven problems** ([`Lowered::Rounds`]) own their iterate
+//!   (e.g. ITML's Mahalanobis matrix, which lives in a LogDet geometry
+//!   the vector engine does not cover) and expose one
+//!   oracle/sweep/forget round at a time via [`RoundProblem`]; the
+//!   session steps them in lockstep with the vector fleet.
+//!
+//! The legacy free functions (`solve_nearness`, `solve_cc`,
+//! `solve_pf_itml`) and their per-problem config structs are thin
+//! deprecated wrappers over this layer.
+
+use super::bregman::DiagonalQuadratic;
+use super::engine::SweepStrategy;
+use super::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
+use super::solver::{PhaseTimes, SolverConfig, SolverResult};
+use std::any::Any;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// The consolidated solve-knob vocabulary, defined once for every
+/// workload (previously re-declared per problem config). Engine knobs
+/// (`sweep`, `overlap`, `parallel_min_rows`) and stop knobs
+/// (`violation_tol`, `dual_tol`, `max_iters`, `projection_budget`) live
+/// here; problem-structural knobs (oracle mode, γ, inner sweeps) live on
+/// the individual [`Problem`] builders.
+///
+/// Environment overrides are preserved: `PAF_THREADS` sizes the worker
+/// pool, `PAF_PARALLEL_MIN_ROWS` tunes the sharded executor's
+/// serial/parallel threshold, and [`SolveOptions::from_env`] additionally
+/// honours `PAF_SWEEP` / `PAF_OVERLAP` for engine selection.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// Hard iteration cap per block.
+    pub max_iters: usize,
+    /// Convergence: the oracle's max violation must fall below this.
+    pub violation_tol: f64,
+    /// Convergence also requires the last sweep's dual movement below
+    /// this; the default `INFINITY` reproduces the paper's large-scale
+    /// violation-only stopping.
+    pub dual_tol: f64,
+    /// Projection sweeps per round; `None` = the problem's own default
+    /// (1 for nearness per Algorithm 8, 2/75 for dense/sparse CC).
+    pub inner_sweeps: Option<usize>,
+    /// Optional cap on total projections per block.
+    pub projection_budget: Option<usize>,
+    /// Record per-iteration statistics.
+    pub record_trace: bool,
+    /// FORGET treats duals with `|z|` below this as zero.
+    pub z_tol: f64,
+    /// Projection-sweep executor (sequential vs support-disjoint sharded
+    /// parallel).
+    pub sweep: SweepStrategy,
+    /// Sharded executor's serial/parallel shard-size threshold
+    /// (`None` = `PAF_PARALLEL_MIN_ROWS` or the tuned default).
+    pub parallel_min_rows: Option<usize>,
+    /// Overlap the oracle scan with the projection sweeps
+    /// (single-block sessions with an overlap-capable oracle only; the
+    /// certificate is then one round stale, so convergence detection is
+    /// one round more conservative).
+    pub overlap: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            max_iters: 500,
+            violation_tol: 1e-2,
+            dual_tol: f64::INFINITY,
+            inner_sweeps: None,
+            projection_budget: None,
+            record_trace: true,
+            z_tol: 0.0,
+            sweep: SweepStrategy::Sequential,
+            parallel_min_rows: None,
+            overlap: false,
+        }
+    }
+}
+
+impl SolveOptions {
+    pub fn new() -> SolveOptions {
+        SolveOptions::default()
+    }
+
+    /// Defaults plus the `PAF_SWEEP` (`sequential`, `sharded`,
+    /// `sharded:<threads>`) and `PAF_OVERLAP` (`1`/`true`) env overrides.
+    pub fn from_env() -> SolveOptions {
+        let mut opts = SolveOptions::default();
+        if let Ok(v) = std::env::var("PAF_SWEEP") {
+            opts.sweep = parse_sweep(&v).unwrap_or(opts.sweep);
+        }
+        if let Ok(v) = std::env::var("PAF_OVERLAP") {
+            opts.overlap = v == "1" || v.eq_ignore_ascii_case("true");
+        }
+        opts
+    }
+
+    pub fn max_iters(mut self, n: usize) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    pub fn violation_tol(mut self, tol: f64) -> Self {
+        self.violation_tol = tol;
+        self
+    }
+
+    pub fn dual_tol(mut self, tol: f64) -> Self {
+        self.dual_tol = tol;
+        self
+    }
+
+    pub fn inner_sweeps(mut self, n: usize) -> Self {
+        self.inner_sweeps = Some(n);
+        self
+    }
+
+    pub fn projection_budget(mut self, budget: usize) -> Self {
+        self.projection_budget = Some(budget);
+        self
+    }
+
+    pub fn record_trace(mut self, on: bool) -> Self {
+        self.record_trace = on;
+        self
+    }
+
+    pub fn z_tol(mut self, tol: f64) -> Self {
+        self.z_tol = tol;
+        self
+    }
+
+    pub fn sweep(mut self, sweep: SweepStrategy) -> Self {
+        self.sweep = sweep;
+        self
+    }
+
+    /// Shorthand for the sharded executor (`threads == 0` = auto).
+    pub fn sharded(mut self, threads: usize) -> Self {
+        self.sweep = SweepStrategy::ShardedParallel { threads };
+        self
+    }
+
+    pub fn parallel_min_rows(mut self, rows: usize) -> Self {
+        self.parallel_min_rows = Some(rows);
+        self
+    }
+
+    pub fn overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// The per-block [`SolverConfig`] these options induce;
+    /// `inner_sweeps_default` is the problem's structural default, used
+    /// when the options leave `inner_sweeps` unset.
+    pub fn solver_config(&self, inner_sweeps_default: usize) -> SolverConfig {
+        SolverConfig {
+            max_iters: self.max_iters,
+            inner_sweeps: self.inner_sweeps.unwrap_or(inner_sweeps_default),
+            violation_tol: self.violation_tol,
+            dual_tol: self.dual_tol,
+            projection_budget: self.projection_budget,
+            record_trace: self.record_trace,
+            z_tol: self.z_tol,
+            sweep: self.sweep,
+            parallel_min_rows: self.parallel_min_rows,
+        }
+    }
+}
+
+/// Parse a `PAF_SWEEP`-style strategy string.
+pub fn parse_sweep(s: &str) -> Option<SweepStrategy> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("sequential") {
+        return Some(SweepStrategy::Sequential);
+    }
+    if s.eq_ignore_ascii_case("sharded") {
+        return Some(SweepStrategy::ShardedParallel { threads: 0 });
+    }
+    if let Some(t) = s.strip_prefix("sharded:") {
+        return t.parse::<usize>().ok().map(|threads| SweepStrategy::ShardedParallel { threads });
+    }
+    None
+}
+
+/// A typed problem instance that a [`Session`](crate::core::session::Session)
+/// can solve: it builds the Bregman geometry, the separation oracle and
+/// (implicitly, via the geometry's `argmin`) the initial iterate, and it
+/// interprets the final iterate into a typed result.
+///
+/// The lifetime `'a` bounds borrows the problem carries into the session
+/// (instances typically borrow their input data).
+pub trait Problem<'a> {
+    /// Typed interpretation of the solved block.
+    type Output: 'static;
+
+    /// Lower this instance into session-executable form. `opts` is the
+    /// session's option set — oracles may depend on it (e.g. the metric
+    /// oracle pre-buckets delivery by disjoint shard exactly when the
+    /// sharded engine is selected).
+    fn lower(self, opts: &SolveOptions) -> Lowered<'a, Self::Output>;
+}
+
+/// What a [`Problem`] lowers to.
+pub enum Lowered<'a, T> {
+    /// A diagonal-quadratic vector block solved by the shared engine
+    /// (batchable with other vector blocks into one sharded sweep).
+    Vector(VectorPart<'a, T>),
+    /// A self-driving round-based problem (e.g. ITML's matrix iterate).
+    Rounds(Box<dyn RoundProblem<Output = T> + 'a>),
+}
+
+/// The vector-block lowering: geometry + oracle + per-block solver
+/// config + result interpretation.
+pub struct VectorPart<'a, T> {
+    /// Display name (traces and events).
+    pub name: &'static str,
+    /// The block's Bregman geometry; its `argmin` is the initial
+    /// iterate, and it is handed back to `interpret` for objective
+    /// evaluation.
+    pub f: DiagonalQuadratic,
+    /// The block's separation oracle, in block-local coordinates
+    /// (`0..f.dim()`); the session offsets deliveries when batching.
+    pub oracle: VectorOracle<'a>,
+    /// Per-block solver knobs (stop rules may differ per block; the
+    /// structural knobs `inner_sweeps`/`z_tol`/`sweep` must agree across
+    /// the blocks of one session).
+    pub config: SolverConfig,
+    /// Interpret the block's final iterate + statistics.
+    pub interpret: Box<dyn FnOnce(&DiagonalQuadratic, SolverResult) -> T + 'a>,
+}
+
+/// An erased vector-block oracle. `Overlappable` additionally supports
+/// the scan/deliver split required by the overlapped pipeline.
+pub enum VectorOracle<'a> {
+    Plain(Box<dyn Oracle<DiagonalQuadratic> + 'a>),
+    Overlappable(ErasedOverlappable<'a>),
+}
+
+impl VectorOracle<'_> {
+    /// Human-readable oracle name.
+    pub fn name(&self) -> &str {
+        match self {
+            VectorOracle::Plain(o) => o.name(),
+            VectorOracle::Overlappable(o) => Oracle::<DiagonalQuadratic>::name(o),
+        }
+    }
+}
+
+/// Object-safe mirror of [`OverlappableOracle`] with the scan payload
+/// boxed as `Any`. Implemented blanket-wise for every overlappable
+/// oracle whose scan type is `'static`.
+pub trait DynOverlappable: Send + Sync {
+    fn dyn_separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome;
+    fn dyn_scan(&self, x: &[f64]) -> Box<dyn Any + Send>;
+    fn dyn_deliver(
+        &mut self,
+        scan: Box<dyn Any + Send>,
+        sink: &mut dyn ProjectionSink,
+    ) -> OracleOutcome;
+    fn dyn_name(&self) -> &str;
+}
+
+impl<O> DynOverlappable for O
+where
+    O: OverlappableOracle<DiagonalQuadratic> + Send + Sync,
+    O::Scan: 'static,
+{
+    fn dyn_separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        Oracle::<DiagonalQuadratic>::separate(self, sink)
+    }
+
+    fn dyn_scan(&self, x: &[f64]) -> Box<dyn Any + Send> {
+        Box::new(OverlappableOracle::<DiagonalQuadratic>::scan(self, x))
+    }
+
+    fn dyn_deliver(
+        &mut self,
+        scan: Box<dyn Any + Send>,
+        sink: &mut dyn ProjectionSink,
+    ) -> OracleOutcome {
+        let scan = scan
+            .downcast::<O::Scan>()
+            .expect("overlap pipeline delivered a foreign scan payload");
+        OverlappableOracle::<DiagonalQuadratic>::deliver(self, *scan, sink)
+    }
+
+    fn dyn_name(&self) -> &str {
+        Oracle::<DiagonalQuadratic>::name(self)
+    }
+}
+
+/// A boxed [`DynOverlappable`] presented back as a concrete
+/// [`OverlappableOracle`], so the erased oracle can flow through the
+/// exact same `solve_overlapped` machinery as a typed one (same calls,
+/// same arithmetic — erasure never changes results).
+pub struct ErasedOverlappable<'a>(Box<dyn DynOverlappable + 'a>);
+
+impl<'a> ErasedOverlappable<'a> {
+    pub fn new<O>(oracle: O) -> ErasedOverlappable<'a>
+    where
+        O: OverlappableOracle<DiagonalQuadratic> + Send + Sync + 'a,
+        O::Scan: 'static,
+    {
+        ErasedOverlappable(Box::new(oracle))
+    }
+}
+
+impl Oracle<DiagonalQuadratic> for ErasedOverlappable<'_> {
+    fn separate(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        self.0.dyn_separate(sink)
+    }
+
+    fn name(&self) -> &str {
+        self.0.dyn_name()
+    }
+}
+
+impl OverlappableOracle<DiagonalQuadratic> for ErasedOverlappable<'_> {
+    type Scan = Box<dyn Any + Send>;
+
+    fn scan(&self, x: &[f64]) -> Self::Scan {
+        self.0.dyn_scan(x)
+    }
+
+    fn deliver(&mut self, scan: Self::Scan, sink: &mut dyn ProjectionSink) -> OracleOutcome {
+        self.0.dyn_deliver(scan, sink)
+    }
+}
+
+/// Opaque state snapshot of a round-driven problem (for
+/// checkpoint/resume). `Arc`ed so checkpoints stay cheaply clonable.
+pub type RoundSnapshot = Arc<dyn Any + Send + Sync>;
+
+/// What one round of a round-driven problem did (event reporting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundReport {
+    /// Constraints the round's oracle batch delivered.
+    pub found: usize,
+    /// Projections performed this round.
+    pub projections: usize,
+    /// Remembered (active) constraints after the round's FORGET.
+    pub active: usize,
+}
+
+/// A problem that drives its own iterate but exposes the PROJECT AND
+/// FORGET loop at round granularity, so the session can step it in
+/// lockstep with the vector fleet (observers, cancellation and
+/// checkpointing all compose).
+pub trait RoundProblem {
+    type Output: 'static;
+
+    fn name(&self) -> &'static str {
+        "round-problem"
+    }
+
+    /// Execute one oracle/sweep/forget round.
+    fn round(&mut self) -> RoundReport;
+
+    /// Has the problem reached its stop rule?
+    fn done(&self) -> bool;
+
+    /// Interpret the final state into the typed result.
+    fn finish(self: Box<Self>) -> Self::Output;
+
+    /// Snapshot the full solve state, if the problem supports
+    /// checkpointing (`None` otherwise).
+    fn snapshot(&self) -> Option<RoundSnapshot> {
+        None
+    }
+
+    /// Restore a snapshot produced by [`RoundProblem::snapshot`].
+    fn restore(&mut self, snapshot: &RoundSnapshot) {
+        let _ = snapshot;
+        panic!("this round-driven problem does not support checkpoint/restore");
+    }
+}
+
+/// Cooperative cancellation for a running session: clone the token,
+/// call [`CancelToken::cancel`] from anywhere (another thread, a signal
+/// handler, an observer), and the session stops at the next round
+/// boundary with a [`SolveEvent::Cancelled`].
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Typed handle to one problem added to a session; redeem with
+/// [`Session::take`](crate::core::session::Session::take) once the
+/// session finished.
+pub struct Handle<T> {
+    pub(crate) idx: usize,
+    pub(crate) _marker: PhantomData<fn() -> T>,
+}
+
+impl<T> Handle<T> {
+    pub(crate) fn new(idx: usize) -> Handle<T> {
+        Handle { idx, _marker: PhantomData }
+    }
+
+    /// The block index inside the session (event correlation).
+    pub fn index(&self) -> usize {
+        self.idx
+    }
+}
+
+impl<T> Clone for Handle<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for Handle<T> {}
+
+impl<T> std::fmt::Debug for Handle<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Handle({})", self.idx)
+    }
+}
+
+/// One completed session round, aggregated over the live blocks.
+#[derive(Debug, Clone)]
+pub struct RoundEvent {
+    /// 0-based session round.
+    pub round: usize,
+    /// Blocks still being driven this round.
+    pub live_blocks: usize,
+    /// Constraints delivered across live vector blocks.
+    pub found: usize,
+    /// Remembered rows after the merge (all vector blocks).
+    pub merged: usize,
+    /// Remembered rows after the sweeps' FORGETs.
+    pub remembered: usize,
+    /// Worst oracle-certificate violation over the live vector blocks.
+    pub max_violation: f64,
+    /// Projections performed this round (vector fleet + round-driven).
+    pub projections: usize,
+    /// Per-phase timing breakdown of the round.
+    pub phases: PhaseTimes,
+    /// Wall-clock seconds for the round.
+    pub seconds: f64,
+}
+
+/// A block reached its stop rule.
+#[derive(Debug, Clone)]
+pub struct BlockDone {
+    pub block: usize,
+    pub name: &'static str,
+    /// For vector blocks: the convergence certificate held (false on a
+    /// session-imposed iteration/projection cap). For round-driven
+    /// blocks: the problem's *own* stop rule completed — e.g. PF-ITML's
+    /// equalised projection budget counts as converged, matching the
+    /// paper's protocol. Always false when finalized by cancellation.
+    pub converged: bool,
+    pub iterations: usize,
+    pub projections: usize,
+}
+
+/// Per-block summary in the final certificate.
+#[derive(Debug, Clone)]
+pub struct BlockSummary {
+    pub name: &'static str,
+    pub converged: bool,
+    pub iterations: usize,
+    pub projections: usize,
+}
+
+/// The session's final certificate: what happened, per block.
+#[derive(Debug, Clone)]
+pub struct SessionSummary {
+    /// Session rounds driven.
+    pub rounds: usize,
+    /// Every block converged.
+    pub all_converged: bool,
+    /// The cancel token fired before completion.
+    pub cancelled: bool,
+    pub blocks: Vec<BlockSummary>,
+}
+
+/// Typed events yielded by [`Session::step`](crate::core::session::Session::step)
+/// and delivered to observers.
+#[derive(Debug, Clone)]
+pub enum SolveEvent {
+    /// One session round completed.
+    Round(RoundEvent),
+    /// A block reached its stop rule (emitted before the enclosing
+    /// round/finished event).
+    BlockDone(BlockDone),
+    /// The cancel token fired; the session stopped early.
+    Cancelled { round: usize },
+    /// All blocks are done (also returned by further `step` calls).
+    Finished(SessionSummary),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_strings_parse() {
+        assert_eq!(parse_sweep("sequential"), Some(SweepStrategy::Sequential));
+        assert_eq!(parse_sweep("Sharded"), Some(SweepStrategy::ShardedParallel { threads: 0 }));
+        assert_eq!(
+            parse_sweep("sharded:4"),
+            Some(SweepStrategy::ShardedParallel { threads: 4 })
+        );
+        assert_eq!(parse_sweep("sharded:x"), None);
+        assert_eq!(parse_sweep("mystery"), None);
+    }
+
+    #[test]
+    fn options_induce_solver_config() {
+        let opts = SolveOptions::new()
+            .max_iters(7)
+            .violation_tol(1e-5)
+            .dual_tol(1e-6)
+            .z_tol(1e-14)
+            .sharded(3)
+            .record_trace(false);
+        let cfg = opts.solver_config(2);
+        assert_eq!(cfg.max_iters, 7);
+        assert_eq!(cfg.inner_sweeps, 2, "problem default wins when unset");
+        assert_eq!(opts.clone().inner_sweeps(5).solver_config(2).inner_sweeps, 5);
+        assert_eq!(cfg.violation_tol, 1e-5);
+        assert_eq!(cfg.dual_tol, 1e-6);
+        assert_eq!(cfg.z_tol, 1e-14);
+        assert!(!cfg.record_trace);
+        assert_eq!(cfg.sweep, SweepStrategy::ShardedParallel { threads: 3 });
+    }
+
+    #[test]
+    fn cancel_token_is_shared() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled());
+    }
+}

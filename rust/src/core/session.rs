@@ -1,0 +1,1062 @@
+//! The [`Session`] solve driver: one entry point for every workload,
+//! stepwise execution with typed events, cooperative cancellation,
+//! checkpoint/resume, and **multi-instance block solving**.
+//!
+//! A session holds any number of lowered [`Problem`]s. Vector blocks are
+//! concatenated into one variable vector (block `k` occupies
+//! `offsets[k]..offsets[k+1]`), share one [`Solver`] and one
+//! [`ActiveSet`], and are driven with *per-block* convergence
+//! accounting. Because blocks never share coordinates, every constraint
+//! of block A is support-disjoint from every constraint of block B, so
+//! the sharded executor's first-fit planner packs rows from the whole
+//! fleet into the same shards — one sharded sweep advances every
+//! instance at once (the ROADMAP multi-instance item; cf. Ruggles et
+//! al., 1901.10084).
+//!
+//! # Per-block bit-identity
+//!
+//! A batch solve is bit-identical, per block, to solving each instance
+//! alone with the same options (pinned in `tests/determinism.rs`):
+//!
+//! - per-block oracles see exactly their slice of `x` (via
+//!   [`OffsetSink`]) and deliver in the same order as a solo solve;
+//! - both executors visit rows in slot order (the sharded planner's
+//!   first-fit passes restrict to a block exactly as they would run on
+//!   that block alone, since foreign blocks touch disjoint coordinates);
+//! - projections of foreign rows never read or write this block's
+//!   coordinates (diagonal geometry, disjoint supports);
+//! - a block that reaches its stop rule is **frozen**: its rows are
+//!   dropped from the shared set, so later rounds leave it untouched —
+//!   exactly where the solo solve stopped.
+//!
+//! Per-block dual movement and projection counts come from the
+//! executors' exact per-row recording channel
+//! ([`Solver::project_sweep_recorded`]) — observation only, the sweep's
+//! arithmetic is untouched, and restricting the recorded movements to
+//! one block reproduces that block's solo sums bit for bit.
+
+use super::active_set::ActiveSet;
+use super::bregman::DiagonalQuadratic;
+use super::constraint::Constraint;
+use super::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
+use super::problem::{
+    BlockDone, BlockSummary, CancelToken, Handle, Lowered, Problem, RoundEvent, RoundProblem,
+    RoundReport, RoundSnapshot, SessionSummary, SolveEvent, SolveOptions, VectorOracle,
+};
+use super::solver::{
+    round_verdict, IterStats, PhaseTimes, RoundVerdict, Solver, SolverConfig, SolverResult,
+};
+use crate::util::Stopwatch;
+use std::any::Any;
+use std::ops::Range;
+
+/// The unified solve entry point. See the module docs.
+///
+/// Lifecycle: [`Session::add`] problems, then either [`Session::run`]
+/// to completion or drive [`Session::step`] round by round; redeem
+/// typed results with [`Session::take`].
+pub struct Session<'a> {
+    opts: SolveOptions,
+    blocks: Vec<VectorBlock<'a>>,
+    rounds: Vec<RoundBlock<'a>>,
+    solver: Option<Solver<DiagonalQuadratic>>,
+    /// Block start offsets into the concatenated vector
+    /// (`len == blocks.len() + 1` once built).
+    offsets: Vec<usize>,
+    built: bool,
+    round: usize,
+    finished: bool,
+    cancelled: bool,
+    cancel: CancelToken,
+    observers: Vec<Box<dyn FnMut(&SolveEvent) + 'a>>,
+    outputs: Vec<Option<Box<dyn Any>>>,
+    /// Overlapped pipeline state (single-vector-block sessions): the
+    /// oracle-side back buffer and the scan taken from it.
+    shadow: Option<Vec<f64>>,
+    pending: Option<Box<dyn Any + Send>>,
+    prev_dual_movement: f64,
+    clock: Option<Stopwatch>,
+    /// Reused slot→block classification (multi-block accounting).
+    rowblock: Vec<u32>,
+}
+
+struct VectorBlock<'a> {
+    name: &'static str,
+    /// Block-local geometry (kept for `interpret`; the solver runs the
+    /// concatenation).
+    f: DiagonalQuadratic,
+    oracle: VectorOracle<'a>,
+    config: SolverConfig,
+    interpret: Option<BoxedInterpret<'a>>,
+    handle: usize,
+    range: Range<usize>,
+    iterations: usize,
+    converged: bool,
+    done: bool,
+    projections: usize,
+    last_dual_movement: f64,
+    trace: Vec<IterStats>,
+    phases: PhaseTimes,
+    /// Captured at finalize (checkpoint/resume re-interprets from it).
+    result: Option<SolverResult>,
+}
+
+type BoxedInterpret<'a> =
+    Box<dyn FnOnce(&DiagonalQuadratic, SolverResult) -> Box<dyn Any> + 'a>;
+
+struct RoundBlock<'a> {
+    name: &'static str,
+    prob: Option<Box<dyn ErasedRoundProblem + 'a>>,
+    handle: usize,
+    iterations: usize,
+    projections: usize,
+    done: bool,
+    /// Reached its own stop rule (false when cancel-finalized).
+    converged: bool,
+    /// State snapshot taken just before `finish` (checkpoint support).
+    final_state: Option<RoundSnapshot>,
+}
+
+/// Object-level mirror of [`RoundProblem`] with the output boxed.
+trait ErasedRoundProblem {
+    fn round_erased(&mut self) -> RoundReport;
+    fn done_erased(&self) -> bool;
+    fn finish_erased(self: Box<Self>) -> Box<dyn Any>;
+    fn snapshot_erased(&self) -> Option<RoundSnapshot>;
+    fn restore_erased(&mut self, snapshot: &RoundSnapshot);
+}
+
+struct RoundShim<'a, T: 'static>(Box<dyn RoundProblem<Output = T> + 'a>);
+
+impl<T: 'static> ErasedRoundProblem for RoundShim<'_, T> {
+    fn round_erased(&mut self) -> RoundReport {
+        self.0.round()
+    }
+
+    fn done_erased(&self) -> bool {
+        self.0.done()
+    }
+
+    fn finish_erased(self: Box<Self>) -> Box<dyn Any> {
+        Box::new(self.0.finish())
+    }
+
+    fn snapshot_erased(&self) -> Option<RoundSnapshot> {
+        self.0.snapshot()
+    }
+
+    fn restore_erased(&mut self, snapshot: &RoundSnapshot) {
+        self.0.restore(snapshot)
+    }
+}
+
+/// Sink adapter mapping a block-local oracle onto the shared vector:
+/// `x()` exposes the block's slice, deliveries are index-shifted by the
+/// block offset. Values and keys are otherwise untouched, so a block's
+/// trajectory matches its solo solve bit for bit.
+struct OffsetSink<'s> {
+    inner: &'s mut dyn ProjectionSink,
+    range: Range<usize>,
+    scratch: Constraint,
+}
+
+impl<'s> OffsetSink<'s> {
+    fn new(inner: &'s mut dyn ProjectionSink, range: Range<usize>) -> OffsetSink<'s> {
+        OffsetSink { inner, range, scratch: Constraint::new(Vec::new(), Vec::new(), 0.0) }
+    }
+
+    fn shift(&mut self, c: &Constraint) {
+        let off = self.range.start as u32;
+        self.scratch.indices.clear();
+        self.scratch.indices.extend(c.indices.iter().map(|&i| i + off));
+        self.scratch.coeffs.clear();
+        self.scratch.coeffs.extend_from_slice(&c.coeffs);
+        self.scratch.rhs = c.rhs;
+    }
+}
+
+impl ProjectionSink for OffsetSink<'_> {
+    fn x(&self) -> &[f64] {
+        &self.inner.x()[self.range.clone()]
+    }
+
+    fn remember(&mut self, c: &Constraint) {
+        self.shift(c);
+        self.inner.remember(&self.scratch);
+    }
+
+    fn project_and_remember(&mut self, c: &Constraint) {
+        self.shift(c);
+        self.inner.project_and_remember(&self.scratch);
+    }
+}
+
+/// Block index owning variable `idx` (`offsets` is sorted, starts at 0).
+fn block_of(offsets: &[usize], idx: u32) -> usize {
+    offsets.partition_point(|&o| o <= idx as usize) - 1
+}
+
+/// Remembered-row count per block (slot classification by first index —
+/// supports never cross block boundaries).
+fn rows_per_block(solver: &Solver<DiagonalQuadratic>, offsets: &[usize]) -> Vec<usize> {
+    let mut counts = vec![0usize; offsets.len().saturating_sub(1)];
+    for r in 0..solver.active.len() {
+        counts[block_of(offsets, solver.active.view(r).indices[0])] += 1;
+    }
+    counts
+}
+
+/// Round-level aggregates for the event stream.
+#[derive(Default)]
+struct RoundAgg {
+    found: usize,
+    merged: usize,
+    remembered: usize,
+    max_violation: f64,
+    projections: usize,
+    phases: PhaseTimes,
+}
+
+/// A resumable snapshot of a session's solve state: the iterate, the
+/// remembered constraints with their duals, per-block accounting, and
+/// (for the overlapped pipeline) the oracle-side back buffer. Restore it
+/// into a fresh session holding the *same problems in the same order*;
+/// the continuation is bit-identical to never having stopped.
+#[derive(Clone)]
+pub struct Checkpoint {
+    round: usize,
+    finished: bool,
+    cancelled: bool,
+    x: Vec<f64>,
+    rows: Vec<(Constraint, f64)>,
+    projections: usize,
+    last_dual_movement: f64,
+    prev_dual_movement: f64,
+    shadow: Option<Vec<f64>>,
+    blocks: Vec<BlockCkpt>,
+    rounds: Vec<RoundCkpt>,
+}
+
+#[derive(Clone)]
+struct BlockCkpt {
+    iterations: usize,
+    done: bool,
+    converged: bool,
+    projections: usize,
+    last_dual_movement: f64,
+    trace: Vec<IterStats>,
+    phases: PhaseTimes,
+    result: Option<SolverResult>,
+}
+
+#[derive(Clone)]
+struct RoundCkpt {
+    iterations: usize,
+    projections: usize,
+    done: bool,
+    converged: bool,
+    state: Option<RoundSnapshot>,
+}
+
+impl Checkpoint {
+    /// Session rounds completed when the checkpoint was taken.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Remembered constraints captured (all vector blocks).
+    pub fn remembered(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+impl<'a> Session<'a> {
+    pub fn new(opts: SolveOptions) -> Session<'a> {
+        Session {
+            opts,
+            blocks: Vec::new(),
+            rounds: Vec::new(),
+            solver: None,
+            offsets: Vec::new(),
+            built: false,
+            round: 0,
+            finished: false,
+            cancelled: false,
+            cancel: CancelToken::new(),
+            observers: Vec::new(),
+            outputs: Vec::new(),
+            shadow: None,
+            pending: None,
+            prev_dual_movement: f64::INFINITY,
+            clock: None,
+            rowblock: Vec::new(),
+        }
+    }
+
+    /// The session's option set.
+    pub fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    /// Add one problem instance. Returns a typed handle to redeem with
+    /// [`Session::take`] once the session finished. Panics if called
+    /// after stepping started.
+    pub fn add<P: Problem<'a>>(&mut self, problem: P) -> Handle<P::Output> {
+        assert!(!self.built, "Session::add after stepping started");
+        let handle = self.outputs.len();
+        self.outputs.push(None);
+        match problem.lower(&self.opts) {
+            Lowered::Vector(part) => {
+                let interpret = part.interpret;
+                let erased: BoxedInterpret<'a> =
+                    Box::new(move |f, r| Box::new(interpret(f, r)) as Box<dyn Any>);
+                self.blocks.push(VectorBlock {
+                    name: part.name,
+                    f: part.f,
+                    oracle: part.oracle,
+                    config: part.config,
+                    interpret: Some(erased),
+                    handle,
+                    range: 0..0,
+                    iterations: 0,
+                    converged: false,
+                    done: false,
+                    projections: 0,
+                    last_dual_movement: f64::INFINITY,
+                    trace: Vec::new(),
+                    phases: PhaseTimes::default(),
+                    result: None,
+                });
+            }
+            Lowered::Rounds(rp) => {
+                let name = rp.name();
+                self.rounds.push(RoundBlock {
+                    name,
+                    prob: Some(Box::new(RoundShim(rp))),
+                    handle,
+                    iterations: 0,
+                    projections: 0,
+                    done: false,
+                    converged: false,
+                    final_state: None,
+                });
+            }
+        }
+        Handle::new(handle)
+    }
+
+    /// Register an observer invoked on every [`SolveEvent`].
+    pub fn on_event(&mut self, observer: impl FnMut(&SolveEvent) + 'a) {
+        self.observers.push(Box::new(observer));
+    }
+
+    /// A cooperative cancellation token for this session.
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Number of problems added.
+    pub fn len(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.outputs.is_empty()
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// One-problem convenience: add, run to completion, take.
+    pub fn solve_one<P: Problem<'a>>(opts: SolveOptions, problem: P) -> P::Output {
+        let mut session = Session::new(opts);
+        let handle = session.add(problem);
+        session.run();
+        session.take(handle)
+    }
+
+    /// Redeem a handle's typed output. Panics before the session
+    /// finished, on double-take, or on a foreign handle.
+    pub fn take<T: 'static>(&mut self, handle: Handle<T>) -> T {
+        assert!(self.finished, "Session::take before the session finished");
+        let boxed = self.outputs[handle.idx]
+            .take()
+            .expect("Session::take: output already taken");
+        *boxed.downcast::<T>().expect("Session::take: handle type mismatch")
+    }
+
+    fn notify(&mut self, event: &SolveEvent) {
+        for obs in &mut self.observers {
+            obs(event);
+        }
+    }
+
+    fn session_seconds(&self) -> f64 {
+        self.clock.as_ref().map(Stopwatch::elapsed_s).unwrap_or(0.0)
+    }
+
+    /// Lay out the concatenated vector fleet. Called lazily by the first
+    /// `step`/`run`/`restore`.
+    fn build(&mut self) {
+        if self.built {
+            return;
+        }
+        self.built = true;
+        self.clock = Some(Stopwatch::new());
+        self.offsets.clear();
+        self.offsets.push(0);
+        if self.blocks.is_empty() {
+            return;
+        }
+        // Structural knobs are shared by the one solver driving the
+        // fleet; per-block *stop* knobs may differ freely.
+        let sweeps0 = self.blocks[0].config.inner_sweeps;
+        let z0 = self.blocks[0].config.z_tol;
+        let mut d = Vec::new();
+        let mut w = Vec::new();
+        for b in &mut self.blocks {
+            assert_eq!(
+                b.config.inner_sweeps, sweeps0,
+                "all vector blocks in one session must agree on inner_sweeps \
+                 (block {:?} wants {}, session runs {})",
+                b.name, b.config.inner_sweeps, sweeps0
+            );
+            assert!(
+                b.config.z_tol == z0,
+                "all vector blocks in one session must agree on z_tol \
+                 (block {:?} wants {}, session runs {})",
+                b.name, b.config.z_tol, z0
+            );
+            let start = d.len();
+            d.extend_from_slice(&b.f.d);
+            w.extend_from_slice(&b.f.w);
+            b.range = start..d.len();
+            self.offsets.push(d.len());
+        }
+        let mut cfg = self.blocks[0].config.clone();
+        cfg.max_iters = self.blocks.iter().map(|b| b.config.max_iters).max().unwrap_or(1);
+        // The session does its own per-block trace/budget accounting.
+        cfg.record_trace = false;
+        cfg.projection_budget = None;
+        self.solver = Some(Solver::new(DiagonalQuadratic::new(d, w), cfg));
+    }
+
+    fn overlap_active(&self) -> bool {
+        self.opts.overlap
+            && self.blocks.len() == 1
+            && matches!(self.blocks[0].oracle, VectorOracle::Overlappable(_))
+    }
+
+    /// Drive one session round across all live blocks. Returns the
+    /// round's event ([`SolveEvent::Finished`] when this round completed
+    /// the solve, or on every call thereafter).
+    pub fn step(&mut self) -> SolveEvent {
+        self.build();
+        if self.finished {
+            return SolveEvent::Finished(self.summary());
+        }
+        if self.cancel.is_cancelled() {
+            self.finish_cancelled();
+            let event = SolveEvent::Cancelled { round: self.round };
+            self.notify(&event);
+            return event;
+        }
+        let live = self.blocks.iter().filter(|b| !b.done).count()
+            + self.rounds.iter().filter(|r| !r.done).count();
+        let round_clock = Stopwatch::new();
+        let mut agg = RoundAgg::default();
+        let mut done_events: Vec<BlockDone> = Vec::new();
+
+        if self.blocks.iter().any(|b| !b.done) {
+            if self.overlap_active() {
+                self.overlapped_vector_round(&mut agg, &mut done_events);
+            } else {
+                self.plain_vector_round(&mut agg, &mut done_events);
+            }
+        }
+
+        for rb in &mut self.rounds {
+            if rb.done {
+                continue;
+            }
+            let prob = rb.prob.as_mut().expect("live round block lost its problem");
+            let report = prob.round_erased();
+            rb.iterations += 1;
+            rb.projections += report.projections;
+            agg.found += report.found;
+            agg.projections += report.projections;
+            if prob.done_erased() {
+                rb.done = true;
+                rb.converged = true;
+                rb.final_state = prob.snapshot_erased();
+                let prob = rb.prob.take().expect("round block finished twice");
+                self.outputs[rb.handle] = Some(prob.finish_erased());
+                done_events.push(BlockDone {
+                    block: rb.handle,
+                    name: rb.name,
+                    converged: true,
+                    iterations: rb.iterations,
+                    projections: rb.projections,
+                });
+            }
+        }
+
+        let seconds = round_clock.elapsed_s();
+        let round_event = SolveEvent::Round(RoundEvent {
+            round: self.round,
+            live_blocks: live,
+            found: agg.found,
+            merged: agg.merged,
+            remembered: agg.remembered,
+            max_violation: agg.max_violation,
+            projections: agg.projections,
+            phases: agg.phases,
+            seconds,
+        });
+        self.round += 1;
+        for done in done_events {
+            self.notify(&SolveEvent::BlockDone(done));
+        }
+        self.notify(&round_event);
+        if self.blocks.iter().all(|b| b.done) && self.rounds.iter().all(|r| r.done) {
+            self.finished = true;
+            let finished = SolveEvent::Finished(self.summary());
+            self.notify(&finished);
+            return finished;
+        }
+        round_event
+    }
+
+    /// Run to completion (or cancellation) and return the certificate.
+    pub fn run(&mut self) -> SessionSummary {
+        loop {
+            match self.step() {
+                SolveEvent::Finished(summary) => return summary,
+                SolveEvent::Cancelled { .. } => return self.summary(),
+                _ => {}
+            }
+        }
+    }
+
+    /// The current per-block certificate.
+    pub fn summary(&self) -> SessionSummary {
+        let mut blocks: Vec<Option<BlockSummary>> =
+            (0..self.outputs.len()).map(|_| None).collect();
+        for b in &self.blocks {
+            blocks[b.handle] = Some(BlockSummary {
+                name: b.name,
+                converged: b.converged,
+                iterations: b.iterations,
+                projections: b.projections,
+            });
+        }
+        for r in &self.rounds {
+            blocks[r.handle] = Some(BlockSummary {
+                name: r.name,
+                converged: r.converged,
+                iterations: r.iterations,
+                projections: r.projections,
+            });
+        }
+        let blocks: Vec<BlockSummary> = blocks.into_iter().flatten().collect();
+        SessionSummary {
+            rounds: self.round,
+            all_converged: !self.cancelled && blocks.iter().all(|b| b.converged),
+            cancelled: self.cancelled,
+            blocks,
+        }
+    }
+
+    /// One plain (non-overlapped) round of the vector fleet: every live
+    /// block's oracle in block order, then the shared sweeps with
+    /// per-block accounting, then per-block stop decisions.
+    fn plain_vector_round(&mut self, agg: &mut RoundAgg, done: &mut Vec<BlockDone>) {
+        let nb = self.blocks.len();
+        let multi = nb > 1;
+        let solver = self.solver.as_mut().expect("vector fleet not built");
+        let record_trace = self.opts.record_trace;
+        let round_clock = Stopwatch::new();
+
+        // Phase 1: separation oracles, block by block. Each block's
+        // deliveries touch only its own coordinates, so block order is
+        // immaterial to any block's trajectory.
+        let mut outcomes: Vec<Option<OracleOutcome>> = vec![None; nb];
+        let mut oracle_proj = vec![0usize; nb];
+        let mut oracle_s = vec![0.0f64; nb];
+        for (bi, b) in self.blocks.iter_mut().enumerate() {
+            if b.done {
+                continue;
+            }
+            let before = solver.projections;
+            let mut lap = Stopwatch::new();
+            let range = b.range.clone();
+            let outcome = match &mut b.oracle {
+                VectorOracle::Plain(o) => {
+                    if multi {
+                        solver.with_sink(|sink| {
+                            let mut off = OffsetSink::new(sink, range);
+                            o.separate(&mut off)
+                        })
+                    } else {
+                        solver.separate_with(&mut **o)
+                    }
+                }
+                VectorOracle::Overlappable(o) => {
+                    if multi {
+                        solver.with_sink(|sink| {
+                            let mut off = OffsetSink::new(sink, range);
+                            o.separate(&mut off)
+                        })
+                    } else {
+                        solver.separate_with(o)
+                    }
+                }
+            };
+            oracle_s[bi] = lap.lap_s();
+            oracle_proj[bi] = solver.projections - before;
+            outcomes[bi] = Some(outcome);
+        }
+        let merged_per = rows_per_block(solver, &self.offsets);
+        let proj_after_oracle = solver.projections;
+
+        // Phases 2+3: shared sweeps over the union. For batches, the
+        // executor's recording channel reports every row's exact
+        // movement in bookkeeping order; classified by block, that
+        // reproduces each block's solo projection count and (for the
+        // last sweep — the stop rule's input) its solo dual-movement
+        // sum bit for bit.
+        let inner_sweeps = solver.config.inner_sweeps;
+        let mut sweep_proj = vec![0usize; nb];
+        let mut last_move = vec![0.0f64; nb];
+        let mut sweep_s = 0.0;
+        let mut forget_s = 0.0;
+        for sweep in 0..inner_sweeps {
+            let mut lap = Stopwatch::new();
+            if multi {
+                // Slot→block map for this sweep (membership is stable
+                // within a sweep; FORGET below invalidates it).
+                self.rowblock.clear();
+                for r in 0..solver.active.len() {
+                    self.rowblock
+                        .push(block_of(&self.offsets, solver.active.view(r).indices[0]) as u32);
+                }
+                let last = sweep + 1 == inner_sweeps;
+                let rowblock = &self.rowblock;
+                let sweep_proj = &mut sweep_proj;
+                let last_move = &mut last_move;
+                lap.lap_s();
+                solver.project_sweep_recorded(&mut |slot, movement| {
+                    let bi = rowblock[slot as usize] as usize;
+                    sweep_proj[bi] += 1;
+                    if last {
+                        last_move[bi] += movement;
+                    }
+                });
+            } else {
+                solver.project_sweep();
+            }
+            sweep_s += lap.lap_s();
+            solver.forget();
+            forget_s += lap.lap_s();
+        }
+        if !multi {
+            sweep_proj[0] = solver.projections - proj_after_oracle;
+            last_move[0] = solver.last_dual_movement;
+        }
+        let remembered_per = rows_per_block(solver, &self.offsets);
+
+        // Per-block bookkeeping + the shared stop rule.
+        let seconds = round_clock.elapsed_s();
+        agg.merged += merged_per.iter().sum::<usize>();
+        agg.remembered += remembered_per.iter().sum::<usize>();
+        agg.phases.sweep_s += sweep_s;
+        agg.phases.forget_s += forget_s;
+        for bi in 0..nb {
+            let Some(outcome) = outcomes[bi] else { continue };
+            let b = &mut self.blocks[bi];
+            let proj_round = oracle_proj[bi] + sweep_proj[bi];
+            b.projections += proj_round;
+            b.last_dual_movement = last_move[bi];
+            let phases =
+                PhaseTimes { oracle_s: oracle_s[bi], sweep_s, forget_s };
+            b.phases.accumulate(&phases);
+            if record_trace {
+                b.trace.push(IterStats {
+                    iteration: b.iterations,
+                    found: outcome.found,
+                    merged: merged_per[bi],
+                    remembered: remembered_per[bi],
+                    max_violation: outcome.max_violation,
+                    projections: proj_round,
+                    seconds,
+                    oracle_s: phases.oracle_s,
+                    sweep_s,
+                    forget_s,
+                });
+            }
+            b.iterations += 1;
+            agg.found += outcome.found;
+            agg.max_violation = agg.max_violation.max(outcome.max_violation);
+            agg.projections += proj_round;
+            agg.phases.oracle_s += oracle_s[bi];
+            let verdict = round_verdict(
+                &b.config,
+                &outcome,
+                b.last_dual_movement,
+                None,
+                b.projections,
+            );
+            let stop = match verdict {
+                RoundVerdict::Converged => Some(true),
+                RoundVerdict::BudgetExhausted => Some(false),
+                RoundVerdict::Continue => (b.iterations >= b.config.max_iters).then_some(false),
+            };
+            if let Some(converged) = stop {
+                let seconds = self.clock.as_ref().map(Stopwatch::elapsed_s).unwrap_or(0.0);
+                finalize_block(
+                    b,
+                    &mut self.outputs,
+                    &solver.x,
+                    remembered_per[bi],
+                    converged,
+                    seconds,
+                    done,
+                );
+                if multi {
+                    // Freeze: drop the finished block's rows so later
+                    // rounds leave it exactly where its solo solve
+                    // stopped. (After the sweeps' FORGETs no other row
+                    // has a zero dual, so only this block is dropped.)
+                    for r in 0..solver.active.len() {
+                        if block_of(&self.offsets, solver.active.view(r).indices[0]) == bi {
+                            solver.active.set_z(r, 0.0);
+                        }
+                    }
+                    solver.forget();
+                }
+            }
+        }
+    }
+
+    /// One overlapped round (single vector block): the exact
+    /// `Solver::solve_overlapped` pipeline, driven stepwise through the
+    /// shared `overlapped_round` helper.
+    fn overlapped_vector_round(&mut self, agg: &mut RoundAgg, done: &mut Vec<BlockDone>) {
+        let solver = self.solver.as_mut().expect("vector fleet not built");
+        let record_trace = self.opts.record_trace;
+        let round_clock = Stopwatch::new();
+        let b = &mut self.blocks[0];
+        let VectorOracle::Overlappable(oracle) = &mut b.oracle else {
+            unreachable!("overlap_active guarantees an overlappable oracle");
+        };
+        // Prime (fresh start) or re-prime (post-restore) the pipeline:
+        // the pending scan is always the scan of `shadow`, so resuming
+        // from a checkpointed shadow reproduces it exactly.
+        if self.pending.is_none() {
+            if self.shadow.is_none() {
+                self.shadow = Some(solver.x.clone());
+            }
+            let mut lap = Stopwatch::new();
+            let scan = OverlappableOracle::<DiagonalQuadratic>::scan(
+                oracle,
+                self.shadow.as_ref().unwrap(),
+            );
+            b.phases.oracle_s += lap.lap_s();
+            self.pending = Some(scan);
+        }
+        let scan = self.pending.take().unwrap();
+        let proj_before = solver.projections;
+        let prev = self.prev_dual_movement;
+        let (round, next_scan) =
+            solver.overlapped_round(oracle, scan, self.shadow.as_mut().unwrap(), prev);
+        let proj_round = solver.projections - proj_before;
+        b.projections += proj_round;
+        b.last_dual_movement = solver.last_dual_movement;
+        b.phases.accumulate(&round.phases);
+        let seconds = round_clock.elapsed_s();
+        if record_trace {
+            b.trace.push(IterStats {
+                iteration: b.iterations,
+                found: round.outcome.found,
+                merged: round.merged,
+                remembered: round.remembered,
+                max_violation: round.outcome.max_violation,
+                projections: proj_round,
+                seconds,
+                oracle_s: round.phases.oracle_s,
+                sweep_s: round.phases.sweep_s,
+                forget_s: round.phases.forget_s,
+            });
+        }
+        b.iterations += 1;
+        agg.found += round.outcome.found;
+        agg.merged += round.merged;
+        agg.remembered += round.remembered;
+        agg.max_violation = agg.max_violation.max(round.outcome.max_violation);
+        agg.projections += proj_round;
+        agg.phases.accumulate(&round.phases);
+        let verdict = round_verdict(
+            &b.config,
+            &round.outcome,
+            b.last_dual_movement,
+            Some(prev),
+            b.projections,
+        );
+        match verdict {
+            RoundVerdict::Continue if b.iterations < b.config.max_iters => {
+                self.prev_dual_movement = b.last_dual_movement;
+                self.pending = Some(match next_scan {
+                    Some(scan) => scan,
+                    None => {
+                        let mut lap = Stopwatch::new();
+                        let scan = OverlappableOracle::<DiagonalQuadratic>::scan(
+                            oracle,
+                            self.shadow.as_ref().unwrap(),
+                        );
+                        b.phases.oracle_s += lap.lap_s();
+                        scan
+                    }
+                });
+            }
+            verdict => {
+                let converged = verdict == RoundVerdict::Converged;
+                let seconds = self.clock.as_ref().map(Stopwatch::elapsed_s).unwrap_or(0.0);
+                finalize_block(
+                    b,
+                    &mut self.outputs,
+                    &solver.x,
+                    round.remembered,
+                    converged,
+                    seconds,
+                    done,
+                );
+            }
+        }
+    }
+
+    /// Cancellation: finalize every live block in its current state
+    /// (`converged == false`) so outputs stay redeemable, emit the
+    /// corresponding [`SolveEvent::BlockDone`]s, and mark the session
+    /// finished.
+    fn finish_cancelled(&mut self) {
+        self.cancelled = true;
+        self.finished = true;
+        let seconds = self.session_seconds();
+        let mut done_events: Vec<BlockDone> = Vec::new();
+        if let Some(solver) = self.solver.as_mut() {
+            let per_block = rows_per_block(solver, &self.offsets);
+            for (bi, b) in self.blocks.iter_mut().enumerate() {
+                if b.done {
+                    continue;
+                }
+                finalize_block(
+                    b,
+                    &mut self.outputs,
+                    &solver.x,
+                    per_block[bi],
+                    false,
+                    seconds,
+                    &mut done_events,
+                );
+            }
+        }
+        for rb in &mut self.rounds {
+            if rb.done {
+                continue;
+            }
+            rb.done = true;
+            let prob = rb.prob.take().expect("live round block lost its problem");
+            rb.final_state = prob.snapshot_erased();
+            self.outputs[rb.handle] = Some(prob.finish_erased());
+            done_events.push(BlockDone {
+                block: rb.handle,
+                name: rb.name,
+                converged: false,
+                iterations: rb.iterations,
+                projections: rb.projections,
+            });
+        }
+        for done in done_events {
+            self.notify(&SolveEvent::BlockDone(done));
+        }
+    }
+
+    /// Snapshot the full solve state for later [`Session::restore`].
+    /// Valid after at least one `step`; cheap to clone.
+    pub fn checkpoint(&self) -> Checkpoint {
+        assert!(self.built, "Session::checkpoint before the first step()");
+        let (x, rows, projections, last_dual_movement) = match &self.solver {
+            Some(s) => (
+                s.x.clone(),
+                (0..s.active.len())
+                    .map(|r| (s.active.to_constraint(r), s.active.z(r)))
+                    .collect(),
+                s.projections,
+                s.last_dual_movement,
+            ),
+            None => (Vec::new(), Vec::new(), 0, 0.0),
+        };
+        Checkpoint {
+            round: self.round,
+            finished: self.finished,
+            cancelled: self.cancelled,
+            x,
+            rows,
+            projections,
+            last_dual_movement,
+            prev_dual_movement: self.prev_dual_movement,
+            shadow: self.shadow.clone(),
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| BlockCkpt {
+                    iterations: b.iterations,
+                    done: b.done,
+                    converged: b.converged,
+                    projections: b.projections,
+                    last_dual_movement: b.last_dual_movement,
+                    trace: b.trace.clone(),
+                    phases: b.phases,
+                    result: b.result.clone(),
+                })
+                .collect(),
+            rounds: self
+                .rounds
+                .iter()
+                .map(|r| RoundCkpt {
+                    iterations: r.iterations,
+                    projections: r.projections,
+                    done: r.done,
+                    converged: r.converged,
+                    state: if r.done {
+                        Some(r.final_state.clone().expect(
+                            "this round-driven problem does not support checkpointing",
+                        ))
+                    } else {
+                        Some(
+                            r.prob
+                                .as_ref()
+                                .expect("live round block lost its problem")
+                                .snapshot_erased()
+                                .expect(
+                                    "this round-driven problem does not support checkpointing",
+                                ),
+                        )
+                    },
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore a [`Checkpoint`] taken from a session holding the same
+    /// problems in the same order. Continuing with `step`/`run` is then
+    /// bit-identical to the uninterrupted solve (oracles are rebuilt
+    /// from the problems; all solve state — iterate, duals, per-block
+    /// accounting, the overlap back buffer — comes from the checkpoint).
+    pub fn restore(&mut self, ck: &Checkpoint) {
+        self.build();
+        assert_eq!(
+            self.blocks.len(),
+            ck.blocks.len(),
+            "checkpoint/session mismatch: vector block count"
+        );
+        assert_eq!(
+            self.rounds.len(),
+            ck.rounds.len(),
+            "checkpoint/session mismatch: round-driven block count"
+        );
+        if let Some(solver) = self.solver.as_mut() {
+            assert_eq!(
+                solver.x.len(),
+                ck.x.len(),
+                "checkpoint/session mismatch: variable dimensions"
+            );
+            solver.x.copy_from_slice(&ck.x);
+            solver.active = ActiveSet::new();
+            for (c, z) in &ck.rows {
+                let slot = solver.active.insert(c);
+                solver.active.set_z(slot, *z);
+            }
+            solver.projections = ck.projections;
+            solver.last_dual_movement = ck.last_dual_movement;
+        }
+        for (b, bc) in self.blocks.iter_mut().zip(&ck.blocks) {
+            b.iterations = bc.iterations;
+            b.done = bc.done;
+            b.converged = bc.converged;
+            b.projections = bc.projections;
+            b.last_dual_movement = bc.last_dual_movement;
+            b.trace = bc.trace.clone();
+            b.phases = bc.phases;
+            b.result = bc.result.clone();
+            if bc.done {
+                let result =
+                    bc.result.clone().expect("checkpointed finished block without result");
+                let interpret = b.interpret.take().expect("block finalized twice");
+                self.outputs[b.handle] = Some(interpret(&b.f, result));
+            }
+        }
+        for (rb, rc) in self.rounds.iter_mut().zip(&ck.rounds) {
+            rb.iterations = rc.iterations;
+            rb.projections = rc.projections;
+            rb.done = rc.done;
+            rb.converged = rc.converged;
+            if let Some(state) = &rc.state {
+                let prob = rb.prob.as_mut().expect("round block restored twice");
+                prob.restore_erased(state);
+                if rc.done {
+                    rb.final_state = Some(state.clone());
+                    let prob = rb.prob.take().unwrap();
+                    self.outputs[rb.handle] = Some(prob.finish_erased());
+                }
+            }
+        }
+        self.round = ck.round;
+        self.finished = ck.finished;
+        self.cancelled = ck.cancelled;
+        self.prev_dual_movement = ck.prev_dual_movement;
+        self.shadow = ck.shadow.clone();
+        // The pending scan is not serialised: it is always the scan of
+        // `shadow`, and scans are pure functions of their snapshot, so
+        // the next step re-derives it bit-identically.
+        self.pending = None;
+        self.clock = Some(Stopwatch::new());
+    }
+}
+
+/// Capture a finished block's [`SolverResult`], interpret it into the
+/// typed output, and emit its [`BlockDone`].
+fn finalize_block(
+    b: &mut VectorBlock<'_>,
+    outputs: &mut [Option<Box<dyn Any>>],
+    x: &[f64],
+    active_constraints: usize,
+    converged: bool,
+    seconds: f64,
+    done: &mut Vec<BlockDone>,
+) {
+    b.done = true;
+    b.converged = converged;
+    let result = SolverResult {
+        x: x[b.range.clone()].to_vec(),
+        iterations: b.iterations,
+        converged,
+        total_projections: b.projections,
+        active_constraints,
+        trace: std::mem::take(&mut b.trace),
+        seconds,
+        phases: b.phases,
+    };
+    b.result = Some(result.clone());
+    let interpret = b.interpret.take().expect("block finalized twice");
+    outputs[b.handle] = Some(interpret(&b.f, result));
+    done.push(BlockDone {
+        block: b.handle,
+        name: b.name,
+        converged,
+        iterations: b.iterations,
+        projections: b.projections,
+    });
+}
+

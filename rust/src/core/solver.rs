@@ -68,8 +68,33 @@ impl Default for SolverConfig {
     }
 }
 
+/// Wall-clock seconds spent in each phase of the PROJECT AND FORGET
+/// round: the separation oracle (scan + delivery), the projection
+/// sweeps, and the FORGET compactions. Attached to both [`IterStats`]
+/// (per round) and [`SolverResult`] (accumulated over the solve).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    pub oracle_s: f64,
+    pub sweep_s: f64,
+    pub forget_s: f64,
+}
+
+impl PhaseTimes {
+    /// Sum of all phase times.
+    pub fn total(&self) -> f64 {
+        self.oracle_s + self.sweep_s + self.forget_s
+    }
+
+    /// Accumulate another breakdown into this one.
+    pub fn accumulate(&mut self, other: &PhaseTimes) {
+        self.oracle_s += other.oracle_s;
+        self.sweep_s += other.sweep_s;
+        self.forget_s += other.forget_s;
+    }
+}
+
 /// Per-iteration statistics (drives Figures 2 and 3).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct IterStats {
     pub iteration: usize,
     /// Constraints delivered by the oracle this round.
@@ -84,6 +109,20 @@ pub struct IterStats {
     pub projections: usize,
     /// Wall-clock seconds for the round.
     pub seconds: f64,
+    /// Oracle time this round (scan + delivery; for the overlapped
+    /// pipeline only the non-overlapped delivery part).
+    pub oracle_s: f64,
+    /// Projection-sweep time this round.
+    pub sweep_s: f64,
+    /// FORGET time this round.
+    pub forget_s: f64,
+}
+
+impl IterStats {
+    /// The round's per-phase breakdown as a [`PhaseTimes`].
+    pub fn phases(&self) -> PhaseTimes {
+        PhaseTimes { oracle_s: self.oracle_s, sweep_s: self.sweep_s, forget_s: self.forget_s }
+    }
 }
 
 /// Outcome of a solve.
@@ -97,6 +136,66 @@ pub struct SolverResult {
     pub active_constraints: usize,
     pub trace: Vec<IterStats>,
     pub seconds: f64,
+    /// Accumulated per-phase timing breakdown (recorded even when
+    /// `record_trace` is off).
+    pub phases: PhaseTimes,
+}
+
+/// The stop decision taken at the end of every round. One shared rule
+/// for `solve`, `solve_overlapped` and the `Session` drivers — the
+/// two-quiet-rounds variant is selected by passing the previous round's
+/// dual movement (see [`round_verdict`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundVerdict {
+    /// Keep iterating.
+    Continue,
+    /// Oracle certificate + dual test passed: converged.
+    Converged,
+    /// The projection budget is exhausted (not converged).
+    BudgetExhausted,
+}
+
+/// THE stop rule (previously copy-drifted between `solve` and
+/// `solve_overlapped`): converged when the oracle's certificate is
+/// within `violation_tol` AND the last sweep's dual movement is within
+/// `dual_tol` — and, if `prev_dual_movement` is supplied (the overlapped
+/// pipeline, whose certificate is one round stale), the *previous*
+/// round's dual movement as well, so a stale "feasible" certificate is
+/// never declared on an iterate the scan never saw. A non-converged
+/// round then stops iff the projection budget is spent.
+pub fn round_verdict(
+    config: &SolverConfig,
+    outcome: &OracleOutcome,
+    last_dual_movement: f64,
+    prev_dual_movement: Option<f64>,
+    total_projections: usize,
+) -> RoundVerdict {
+    let prev_quiet = match prev_dual_movement {
+        Some(prev) => prev <= config.dual_tol,
+        None => true,
+    };
+    let quiet = last_dual_movement <= config.dual_tol && prev_quiet;
+    if outcome.max_violation <= config.violation_tol && quiet {
+        return RoundVerdict::Converged;
+    }
+    if let Some(budget) = config.projection_budget {
+        if total_projections >= budget {
+            return RoundVerdict::BudgetExhausted;
+        }
+    }
+    RoundVerdict::Continue
+}
+
+/// What one round of the overlapped pipeline produced (the shared shape
+/// between `solve_overlapped` and the stepwise `Session` driver).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct OverlappedRound {
+    pub outcome: OracleOutcome,
+    /// Remembered list size after the merge, before the sweeps.
+    pub merged: usize,
+    /// Remembered list size after the sweeps' FORGETs.
+    pub remembered: usize,
+    pub phases: PhaseTimes,
 }
 
 /// The PROJECT AND FORGET solver over a Bregman function `F`.
@@ -222,6 +321,22 @@ impl<F: BregmanFunction> Solver<F> {
         stats.projections
     }
 
+    /// [`Solver::project_sweep`] with exact per-row movement recording
+    /// (`record(slot, |step|)` for every row that moved, in the
+    /// executor's deterministic bookkeeping order) — the `Session`
+    /// batch driver's per-block accounting channel. Panics for
+    /// executors without recording support; both built-in strategies
+    /// support it.
+    pub fn project_sweep_recorded(&mut self, record: &mut dyn FnMut(u32, f64)) -> usize {
+        let stats = self
+            .executor
+            .sweep_recorded(&self.f, &mut self.x, &mut self.active, record)
+            .expect("the configured sweep executor does not support recorded sweeps");
+        self.projections += stats.projections;
+        self.last_dual_movement = stats.dual_movement;
+        stats.projections
+    }
+
     /// FORGET step: drop rows with zero dual. Returns how many. The
     /// stable-slot compaction map is forwarded to the sweep executor so
     /// a cached shard plan survives the compaction without replanning.
@@ -247,10 +362,94 @@ impl<F: BregmanFunction> Solver<F> {
         dropped
     }
 
+    /// Run `body` against the engine-side [`ProjectionSink`] (the same
+    /// sink `solve` hands to its oracle). This is the seam the `Session`
+    /// layer uses to drive oracles itself — e.g. wrapped in a
+    /// block-offset adapter for multi-instance solves.
+    pub fn with_sink<R>(&mut self, body: impl FnOnce(&mut dyn ProjectionSink) -> R) -> R {
+        let mut sink = EngineSink {
+            f: &self.f,
+            x: &mut self.x,
+            active: &mut self.active,
+            projections: &mut self.projections,
+            z_tol: self.config.z_tol,
+        };
+        body(&mut sink)
+    }
+
+    /// Phase 1 + merge: run one separation round of `oracle` against the
+    /// engine sink.
+    pub fn separate_with<O: Oracle<F> + ?Sized>(&mut self, oracle: &mut O) -> OracleOutcome {
+        self.with_sink(|sink| oracle.separate(sink))
+    }
+
+    /// Phases 2+3: `inner_sweeps` × (projection sweep + FORGET) —
+    /// Algorithms 6–8 interleave them exactly like this. Returns the
+    /// measured sweep/forget times (oracle_s stays zero).
+    pub fn sweep_phase(&mut self) -> PhaseTimes {
+        let mut t = PhaseTimes::default();
+        let mut lap = Stopwatch::new();
+        for _ in 0..self.config.inner_sweeps {
+            self.project_sweep();
+            t.sweep_s += lap.lap_s();
+            self.forget();
+            t.forget_s += lap.lap_s();
+        }
+        t
+    }
+
+    /// Shared per-round trace entry (stats bookkeeping for every driver).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn round_stats(
+        &self,
+        iteration: usize,
+        outcome: &OracleOutcome,
+        merged: usize,
+        remembered: usize,
+        proj_before: usize,
+        seconds: f64,
+        phases: &PhaseTimes,
+    ) -> IterStats {
+        IterStats {
+            iteration,
+            found: outcome.found,
+            merged,
+            remembered,
+            max_violation: outcome.max_violation,
+            projections: self.projections - proj_before,
+            seconds,
+            oracle_s: phases.oracle_s,
+            sweep_s: phases.sweep_s,
+            forget_s: phases.forget_s,
+        }
+    }
+
+    /// Shared result assembly.
+    pub(crate) fn finish_result(
+        &self,
+        iterations: usize,
+        converged: bool,
+        trace: Vec<IterStats>,
+        phases: PhaseTimes,
+        seconds: f64,
+    ) -> SolverResult {
+        SolverResult {
+            x: self.x.clone(),
+            iterations,
+            converged,
+            total_projections: self.projections,
+            active_constraints: self.active.len(),
+            trace,
+            seconds,
+            phases,
+        }
+    }
+
     /// Run the full PROJECT AND FORGET loop against `oracle`.
     pub fn solve<O: Oracle<F>>(&mut self, mut oracle: O) -> SolverResult {
         let clock = Stopwatch::new();
         let mut trace = Vec::new();
+        let mut phases = PhaseTimes::default();
         let mut converged = false;
         let mut iterations = 0;
         for nu in 0..self.config.max_iters {
@@ -260,59 +459,44 @@ impl<F: BregmanFunction> Solver<F> {
 
             // Phase 1+merge: oracle delivers violated constraints (and may
             // project-on-find).
-            let outcome: OracleOutcome = {
-                let mut sink = EngineSink {
-                    f: &self.f,
-                    x: &mut self.x,
-                    active: &mut self.active,
-                    projections: &mut self.projections,
-                    z_tol: self.config.z_tol,
-                };
-                oracle.separate(&mut sink)
-            };
+            let mut lap = Stopwatch::new();
+            let outcome = self.separate_with(&mut oracle);
+            let oracle_s = lap.lap_s();
             let merged = self.active.len();
 
-            // Phase 2+3: projection sweeps, each followed by FORGET
-            // (Algorithms 6–8 interleave them exactly like this).
-            for _ in 0..self.config.inner_sweeps {
-                self.project_sweep();
-                self.forget();
-            }
+            // Phases 2+3: projection sweeps, each followed by FORGET.
+            let round_phases = PhaseTimes { oracle_s, ..self.sweep_phase() };
             let remembered = self.active.len();
+            phases.accumulate(&round_phases);
 
             if self.config.record_trace {
-                trace.push(IterStats {
-                    iteration: nu,
-                    found: outcome.found,
+                trace.push(self.round_stats(
+                    nu,
+                    &outcome,
                     merged,
                     remembered,
-                    max_violation: outcome.max_violation,
-                    projections: self.projections - proj_before,
-                    seconds: round.lap_s(),
-                });
+                    proj_before,
+                    round.lap_s(),
+                    &round_phases,
+                ));
             }
 
-            if outcome.max_violation <= self.config.violation_tol
-                && self.last_dual_movement <= self.config.dual_tol
-            {
-                converged = true;
-                break;
-            }
-            if let Some(budget) = self.config.projection_budget {
-                if self.projections >= budget {
+            match round_verdict(
+                &self.config,
+                &outcome,
+                self.last_dual_movement,
+                None,
+                self.projections,
+            ) {
+                RoundVerdict::Converged => {
+                    converged = true;
                     break;
                 }
+                RoundVerdict::BudgetExhausted => break,
+                RoundVerdict::Continue => {}
             }
         }
-        SolverResult {
-            x: self.x.clone(),
-            iterations,
-            converged,
-            total_projections: self.projections,
-            active_constraints: self.active.len(),
-            trace,
-            seconds: clock.elapsed_s(),
-        }
+        self.finish_result(iterations, converged, trace, phases, clock.elapsed_s())
     }
 
     /// Run PROJECT AND FORGET with the oracle's scan phase overlapped
@@ -348,6 +532,7 @@ impl<F: BregmanFunction> Solver<F> {
     {
         let clock = Stopwatch::new();
         let mut trace = Vec::new();
+        let mut phases = PhaseTimes::default();
         let mut converged = false;
         let mut iterations = 0;
         // The oracle-side back buffer of the double-buffered iterate.
@@ -359,70 +544,24 @@ impl<F: BregmanFunction> Solver<F> {
         let mut pending = Some(oracle.scan(&self.x));
         for nu in 0..self.config.max_iters {
             iterations = nu + 1;
-            let mut round = Stopwatch::new();
+            let mut round_clock = Stopwatch::new();
             let proj_before = self.projections;
 
-            // Merge the findings scanned during the previous round's
-            // sweeps (or synchronously, for round 0).
             let scan = pending.take().expect("overlap pipeline lost a scan");
-            let outcome: OracleOutcome = {
-                let mut sink = EngineSink {
-                    f: &self.f,
-                    x: &mut self.x,
-                    active: &mut self.active,
-                    projections: &mut self.projections,
-                    z_tol: self.config.z_tol,
-                };
-                oracle.deliver(scan, &mut sink)
-            };
-            let merged = self.active.len();
-
-            // Snapshot for the oracle, then overlap: the next round's
-            // scan runs on the pool while this thread drains the sweeps.
-            // Exception: two of the three stop-rule inputs (the stale
-            // certificate and the previous round's dual movement) are
-            // already known here — when both pass, this round is very
-            // likely final, so skip the speculative scan instead of
-            // paying a full discarded Dijkstra pass. If the post-sweep
-            // dual test then fails after all, the pipeline is refilled
-            // below with a synchronous scan of the *same* snapshot —
-            // identical input, identical findings, so the trajectory
-            // (and bit-determinism) is unchanged either way.
-            shadow.copy_from_slice(&self.x);
-            let likely_final = outcome.max_violation <= self.config.violation_tol
-                && prev_dual_movement <= self.config.dual_tol;
-            let mut next_scan: Option<O::Scan> = None;
-            if likely_final {
-                for _ in 0..self.config.inner_sweeps {
-                    self.project_sweep();
-                    self.forget();
-                }
-            } else {
-                let oracle_ref = &oracle;
-                let shadow_ref: &[f64] = &shadow;
-                let slot = &mut next_scan;
-                pool::global().scope(|s| {
-                    s.spawn(move || {
-                        *slot = Some(oracle_ref.scan(shadow_ref));
-                    });
-                    for _ in 0..self.config.inner_sweeps {
-                        self.project_sweep();
-                        self.forget();
-                    }
-                });
-            }
-            let remembered = self.active.len();
+            let (round, next_scan) =
+                self.overlapped_round(&mut oracle, scan, &mut shadow, prev_dual_movement);
+            phases.accumulate(&round.phases);
 
             if self.config.record_trace {
-                trace.push(IterStats {
-                    iteration: nu,
-                    found: outcome.found,
-                    merged,
-                    remembered,
-                    max_violation: outcome.max_violation,
-                    projections: self.projections - proj_before,
-                    seconds: round.lap_s(),
-                });
+                trace.push(self.round_stats(
+                    nu,
+                    &round.outcome,
+                    round.merged,
+                    round.remembered,
+                    proj_before,
+                    round_clock.lap_s(),
+                    &round.phases,
+                ));
             }
 
             // Two consecutive quiet rounds: `prev_dual_movement` bounds
@@ -430,36 +569,93 @@ impl<F: BregmanFunction> Solver<F> {
             // start, `last_dual_movement` bounds this round's sweeps —
             // without the former, a stale "feasible" certificate could
             // be declared on an iterate the scan never saw.
-            if outcome.max_violation <= self.config.violation_tol
-                && self.last_dual_movement <= self.config.dual_tol
-                && prev_dual_movement <= self.config.dual_tol
-            {
-                converged = true;
-                break;
-            }
-            prev_dual_movement = self.last_dual_movement;
-            if let Some(budget) = self.config.projection_budget {
-                if self.projections >= budget {
+            match round_verdict(
+                &self.config,
+                &round.outcome,
+                self.last_dual_movement,
+                Some(prev_dual_movement),
+                self.projections,
+            ) {
+                RoundVerdict::Converged => {
+                    converged = true;
                     break;
                 }
+                RoundVerdict::BudgetExhausted => break,
+                RoundVerdict::Continue => {}
             }
+            prev_dual_movement = self.last_dual_movement;
             // Refill the pipeline; the synchronous fallback only fires
-            // when the speculative scan was skipped above but the round
-            // turned out not to be final.
+            // when the speculative scan was skipped but the round turned
+            // out not to be final.
             pending = Some(match next_scan {
                 Some(scan) => scan,
-                None => oracle.scan(&shadow),
+                None => {
+                    let mut lap = Stopwatch::new();
+                    let scan = oracle.scan(&shadow);
+                    phases.oracle_s += lap.lap_s();
+                    scan
+                }
             });
         }
-        SolverResult {
-            x: self.x.clone(),
-            iterations,
-            converged,
-            total_projections: self.projections,
-            active_constraints: self.active.len(),
-            trace,
-            seconds: clock.elapsed_s(),
-        }
+        self.finish_result(iterations, converged, trace, phases, clock.elapsed_s())
+    }
+
+    /// One round of the overlapped pipeline, shared verbatim by
+    /// [`Solver::solve_overlapped`] and the stepwise `Session` driver:
+    /// deliver the pending scan, snapshot `x` into `shadow`, then run the
+    /// sweeps while the next scan runs on the pool (unless this round is
+    /// likely final — see the comment inside). Returns the round's
+    /// numbers plus the speculative next scan, if one was taken.
+    pub(crate) fn overlapped_round<O>(
+        &mut self,
+        oracle: &mut O,
+        scan: O::Scan,
+        shadow: &mut [f64],
+        prev_dual_movement: f64,
+    ) -> (OverlappedRound, Option<O::Scan>)
+    where
+        O: OverlappableOracle<F> + Sync,
+    {
+        // Merge the findings scanned during the previous round's sweeps
+        // (or synchronously, for round 0).
+        let mut lap = Stopwatch::new();
+        let outcome = self.with_sink(|sink| oracle.deliver(scan, sink));
+        let oracle_s = lap.lap_s();
+        let merged = self.active.len();
+
+        // Snapshot for the oracle, then overlap: the next round's scan
+        // runs on the pool while this thread drains the sweeps.
+        // Exception: two of the three stop-rule inputs (the stale
+        // certificate and the previous round's dual movement) are
+        // already known here — when both pass, this round is very likely
+        // final, so skip the speculative scan instead of paying a full
+        // discarded Dijkstra pass. If the post-sweep dual test then
+        // fails after all, the pipeline is refilled by the caller with a
+        // synchronous scan of the *same* snapshot — identical input,
+        // identical findings, so the trajectory (and bit-determinism) is
+        // unchanged either way.
+        shadow.copy_from_slice(&self.x);
+        let likely_final = outcome.max_violation <= self.config.violation_tol
+            && prev_dual_movement <= self.config.dual_tol;
+        let mut next_scan: Option<O::Scan> = None;
+        let mut phases = if likely_final {
+            self.sweep_phase()
+        } else {
+            let oracle_ref = &*oracle;
+            let shadow_ref: &[f64] = shadow;
+            let slot = &mut next_scan;
+            let mut sweep_times = PhaseTimes::default();
+            pool::global().scope(|s| {
+                s.spawn(move || {
+                    *slot = Some(oracle_ref.scan(shadow_ref));
+                });
+                sweep_times = self.sweep_phase();
+            });
+            sweep_times
+        };
+        phases.oracle_s = oracle_s;
+        let remembered = self.active.len();
+        (OverlappedRound { outcome, merged, remembered, phases }, next_scan)
     }
 
     /// KKT residual `‖∇f(x) + Aᵀz‖_∞` over the remembered set — exactly

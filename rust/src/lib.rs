@@ -13,8 +13,27 @@
 //! executed through the PJRT CPU client in [`runtime`]; everything on the
 //! solve path is rust.
 //!
+//! Solves enter through the unified **Session API**: a
+//! [`core::problem::Problem`] (metric nearness, correlation
+//! clustering, ITML, …) is added to a [`core::Session`] configured by
+//! one [`core::SolveOptions`], then driven to completion with `run()`
+//! or stepwise with `step()` (typed events, observers, cooperative
+//! cancellation, checkpoint/resume). Many independent instances batch
+//! into one session: each occupies a block-offset region of a single
+//! variable vector, and the support-disjoint shard planner sweeps the
+//! whole fleet in parallel with per-block convergence accounting —
+//! bit-identical, per block, to solving each instance alone.
+//!
+//! ```ignore
+//! use paf::core::{Session, SolveOptions};
+//! use paf::problems::nearness::Nearness;
+//! let res = Nearness::new(&inst).solve(&SolveOptions::new().sharded(0));
+//! ```
+//!
 //! Quick tour:
-//! - [`core`] — the PROJECT AND FORGET engine (Algorithms 1 & 3).
+//! - [`core`] — the PROJECT AND FORGET engine (Algorithms 1 & 3), the
+//!   [`core::problem`] layer (`Problem` trait + `SolveOptions`) and the
+//!   [`core::session`] driver.
 //! - [`graph`] — CSR graphs, Dijkstra/APSP, instance generators.
 //! - [`problems`] — metric nearness, correlation clustering, ITML, SVM.
 //! - [`baselines`] — every comparator in the paper's tables.

@@ -4,6 +4,8 @@
 //!
 //! ```text
 //! paf nearness  --n 300 --graph-type 1 [--mode onfind|collect] [--tol 1e-2]
+//!               [--sweep sequential|sharded|sharded:T] [--overlap]
+//! paf batch     --n 120 --k 4      # K nearness instances in ONE session
 //! paf cc        --graph ca-grqc [--sparse] [--gamma 1.0] [--scale 0.1]
 //! paf itml      --dataset banana [--projections 100000]
 //! paf svm       --n 100000 --d 100 --k 10 [--c 1000] [--epochs 5]
@@ -12,18 +14,22 @@
 //! ```
 //!
 //! Global flags: `--seed <u64>`, `--config <file>` (key = value overrides),
-//! `--report-dir <dir>`.
+//! `--report-dir <dir>`. All solve subcommands run through the unified
+//! `core::Session` API and emit a schema-versioned solver JSON next to
+//! the CSV tables.
 
 use paf::baselines::svm_liblinear::{train_dual_cd, train_primal_newton};
 use paf::coordinator::{figure2_series, figure3_series, violation_decay_rate};
+use paf::core::problem::{parse_sweep, SolveEvent, SolveOptions};
+use paf::core::session::Session;
 use paf::graph::generators as gen;
 use paf::ml::dataset::{svm_cloud, table4_dataset};
 use paf::ml::knn::knn_accuracy;
 use paf::ml::mahalanobis::Mat;
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance};
-use paf::problems::itml::{solve_pf_itml, PfItmlConfig};
+use paf::problems::correlation::{CcInstance, Correlation};
+use paf::problems::itml::{PfItml, PfItmlConfig};
 use paf::problems::metric_oracle::OracleMode;
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::problems::nearness::Nearness;
 use paf::problems::svm::{train_pf_svm, SvmConfig};
 use paf::report;
 use paf::util::cli::Args;
@@ -48,6 +54,7 @@ fn main() {
     let seed = args.get_parsed_or("seed", 0u64);
     match args.command.as_deref() {
         Some("nearness") => cmd_nearness(&args, seed),
+        Some("batch") => cmd_batch(&args, seed),
         Some("cc") => cmd_cc(&args, seed),
         Some("itml") => cmd_itml(&args, seed),
         Some("svm") => cmd_svm(&args, seed),
@@ -58,12 +65,34 @@ fn main() {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!(
-                "usage: paf <nearness|cc|itml|svm|oracle|runtime-info> [--flags]\n\
+                "usage: paf <nearness|batch|cc|itml|svm|oracle|runtime-info> [--flags]\n\
                  see `rust/src/main.rs` docs for per-command flags"
             );
             std::process::exit(2);
         }
     }
+}
+
+/// Shared engine/stop flags -> [`SolveOptions`] (`--sweep`, `--overlap`,
+/// `--tol`, `--max-iters`), layered on the `PAF_SWEEP`/`PAF_OVERLAP` env
+/// defaults.
+fn solve_options(args: &Args) -> SolveOptions {
+    let mut opts = SolveOptions::from_env();
+    if let Some(s) = args.get("sweep") {
+        match parse_sweep(s) {
+            Some(sweep) => opts.sweep = sweep,
+            None => {
+                eprintln!("--sweep {s:?}: expected sequential | sharded | sharded:<threads>");
+                std::process::exit(2);
+            }
+        }
+    }
+    if args.flag("overlap") {
+        opts.overlap = true;
+    }
+    opts.violation_tol = args.get_parsed_or("tol", opts.violation_tol);
+    opts.max_iters = args.get_parsed_or("max-iters", opts.max_iters);
+    opts
 }
 
 fn cmd_nearness(args: &Args, seed: u64) {
@@ -80,14 +109,10 @@ fn cmd_nearness(args: &Args, seed: u64) {
         3 => gen::type3_complete(n, &mut rng),
         t => panic!("unknown graph type {t}"),
     };
-    let cfg = NearnessConfig {
-        violation_tol: args.get_parsed_or("tol", 1e-2),
-        max_iters: args.get_parsed_or("max-iters", 500usize),
-        mode,
-        ..Default::default()
-    };
+    let opts = solve_options(args);
     println!("metric nearness: n={n} type={gtype} m={} seed={seed}", inst.graph.num_edges());
-    let res = solve_nearness(&inst, &cfg);
+    let res = Nearness::new(&inst).mode(mode).solve(&opts);
+    let _ = report::emit_solver_json(&res.result, &format!("SOLVE_nearness_n{n}_t{gtype}"));
     let mut t = Table::new("metric nearness", &["metric", "value"]);
     t.rowd(&["n".to_string(), n.to_string()]);
     t.rowd(&["converged".to_string(), res.result.converged.to_string()]);
@@ -97,6 +122,60 @@ fn cmd_nearness(args: &Args, seed: u64) {
     t.rowd(&["active constraints".to_string(), res.result.active_constraints.to_string()]);
     t.rowd(&["objective".to_string(), format!("{:.6}", res.objective)]);
     report::emit_table(&t, &format!("nearness_n{n}_t{gtype}"));
+}
+
+/// `paf batch`: K independent nearness instances solved in ONE session —
+/// every instance occupies a block-offset region of one variable vector,
+/// and (with `--sweep sharded[:T]`) the support-disjoint shard planner
+/// sweeps the whole fleet in parallel.
+fn cmd_batch(args: &Args, seed: u64) {
+    let n = args.get_parsed_or("n", 120usize);
+    let k = args.get_parsed_or("k", 4usize);
+    if k == 0 {
+        eprintln!("--k must be at least 1");
+        std::process::exit(2);
+    }
+    let mut opts = solve_options(args);
+    if args.get("sweep").is_none() {
+        opts.sweep = paf::core::engine::SweepStrategy::ShardedParallel { threads: 0 };
+    }
+    let mut rng = Rng::new(seed);
+    let instances: Vec<_> = (0..k).map(|_| gen::type1_complete(n, &mut rng)).collect();
+    println!(
+        "nearness batch: k={k} instances of K_{n} ({} variables total)",
+        k * instances[0].graph.num_edges()
+    );
+    let clock = Stopwatch::new();
+    let mut session = Session::new(opts);
+    let handles: Vec<_> = instances
+        .iter()
+        .map(|inst| session.add(Nearness::new(inst).mode(OracleMode::Collect)))
+        .collect();
+    session.on_event(|event| {
+        if let SolveEvent::BlockDone(done) = event {
+            println!(
+                "  block {} ({}) done: converged={} after {} rounds / {} projections",
+                done.block, done.name, done.converged, done.iterations, done.projections
+            );
+        }
+    });
+    let summary = session.run();
+    let mut t = Table::new("nearness batch (one session)", &["instance", "iters", "objective"]);
+    for (i, h) in handles.into_iter().enumerate() {
+        let res = session.take(h);
+        t.rowd(&[
+            i.to_string(),
+            res.result.iterations.to_string(),
+            format!("{:.6}", res.objective),
+        ]);
+    }
+    println!(
+        "batch of {k}: all_converged={} in {} rounds, {}s wall",
+        summary.all_converged,
+        summary.rounds,
+        report::fmt_time(clock.elapsed_s())
+    );
+    report::emit_table(&t, &format!("batch_nearness_n{n}_k{k}"));
 }
 
 fn cmd_cc(args: &Args, seed: u64) {
@@ -119,11 +198,13 @@ fn cmd_cc(args: &Args, seed: u64) {
         inst.graph.num_edges(),
         clock.elapsed_s()
     );
-    let mut cfg = if sparse { CcConfig::sparse() } else { CcConfig::dense() };
-    cfg.gamma = args.get_parsed_or("gamma", 1.0);
-    cfg.violation_tol = args.get_parsed_or("tol", 1e-2);
-    cfg.max_iters = args.get_parsed_or("max-iters", cfg.max_iters);
-    let res = solve_cc(&inst, &cfg, seed);
+    let mut opts = solve_options(args);
+    if args.get("max-iters").is_none() {
+        opts.max_iters = if sparse { 300 } else { 200 };
+    }
+    let problem = if sparse { Correlation::sparse(&inst) } else { Correlation::dense(&inst) };
+    let res = problem.gamma(args.get_parsed_or("gamma", 1.0)).seed(seed).solve(&opts);
+    let _ = report::emit_solver_json(&res.result, &format!("SOLVE_cc_{name}"));
     let mut t = Table::new("correlation clustering", &["metric", "value"]);
     t.rowd(&["graph".to_string(), label.clone()]);
     t.rowd(&["converged".to_string(), res.result.converged.to_string()]);
@@ -154,7 +235,7 @@ fn cmd_itml(args: &Args, seed: u64) {
         ..Default::default()
     };
     println!("itml: dataset={name} n={} d={} classes={}", data.n, data.d, data.num_classes());
-    let res = solve_pf_itml(&train, &cfg);
+    let res = PfItml::new(&train, cfg).solve(&SolveOptions::default());
     let base = knn_accuracy(&Mat::identity(train.d), &train, &test, 4);
     let learned = knn_accuracy(&res.m, &train, &test, 4);
     let mut t = Table::new("itml", &["metric", "value"]);

@@ -21,7 +21,11 @@
 use super::metric_oracle::{MetricOracle, OracleMode};
 use crate::core::bregman::DiagonalQuadratic;
 use crate::core::engine::SweepStrategy;
-use crate::core::solver::{Solver, SolverConfig, SolverResult};
+use crate::core::problem::{
+    ErasedOverlappable, Lowered, Problem, SolveOptions, VectorOracle, VectorPart,
+};
+use crate::core::session::Session;
+use crate::core::solver::SolverResult;
 use crate::graph::generators::SignedGraph;
 use crate::graph::Graph;
 use crate::util::Rng;
@@ -145,7 +149,121 @@ pub fn approx_ratio(t: &VeldtTransform, x: &[f64]) -> f64 {
     (1.0 + t.gamma) / (1.0 + r)
 }
 
+/// Correlation clustering as a [`Problem`]: the Veldt surrogate (4.2)
+/// over MET(G), rounded with Ailon–Charikar–Newman pivoting.
+///
+/// ```ignore
+/// let res: CcResult = Correlation::dense(&inst).solve(&SolveOptions::new());
+/// ```
+pub struct Correlation<'a> {
+    inst: &'a CcInstance,
+    /// Veldt transform sharpness γ.
+    gamma: f64,
+    /// Projection sweeps per round (dense 2 / sparse 75; becomes the
+    /// problem's `inner_sweeps` default, overridable via the options).
+    inner_sweeps: usize,
+    mode: OracleMode,
+    /// Worker threads for the Collect-mode Dijkstra scan.
+    threads: usize,
+    /// Pivot-rounding seed.
+    seed: u64,
+}
+
+impl<'a> Correlation<'a> {
+    /// Algorithm 6 settings (dense / complete graphs).
+    pub fn dense(inst: &'a CcInstance) -> Correlation<'a> {
+        Correlation {
+            inst,
+            gamma: 1.0,
+            inner_sweeps: 2,
+            mode: OracleMode::ProjectOnFind,
+            threads: crate::util::pool::default_threads(),
+            seed: 0,
+        }
+    }
+
+    /// Algorithm 7 settings (large sparse graphs).
+    pub fn sparse(inst: &'a CcInstance) -> Correlation<'a> {
+        Correlation {
+            inst,
+            gamma: 1.0,
+            inner_sweeps: 75,
+            mode: OracleMode::Collect,
+            threads: crate::util::pool::default_threads(),
+            seed: 0,
+        }
+    }
+
+    pub fn gamma(mut self, gamma: f64) -> Self {
+        self.gamma = gamma;
+        self
+    }
+
+    pub fn inner_sweeps(mut self, sweeps: usize) -> Self {
+        self.inner_sweeps = sweeps;
+        self
+    }
+
+    pub fn mode(mut self, mode: OracleMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// One-shot convenience: solve this instance alone.
+    pub fn solve(self, opts: &SolveOptions) -> CcResult {
+        Session::solve_one(opts.clone(), self)
+    }
+}
+
+impl<'a> Problem<'a> for Correlation<'a> {
+    type Output = CcResult;
+
+    fn lower(self, opts: &SolveOptions) -> Lowered<'a, CcResult> {
+        let t = veldt_transform(self.inst, self.gamma);
+        let mut oracle = MetricOracle::new(Arc::new(self.inst.graph.clone()), self.mode);
+        oracle.upper_bound = Some(1.0);
+        oracle.threads = self.threads;
+        oracle.report_tol = (opts.violation_tol * 1e-3).max(1e-12);
+        // Shard-bucketed delivery helps exactly when the sharded engine
+        // consumes it; sequential solves keep the historical slot order.
+        oracle.shard_bucket = matches!(opts.sweep, SweepStrategy::ShardedParallel { .. });
+        let oracle = if self.mode == OracleMode::Collect {
+            VectorOracle::Overlappable(ErasedOverlappable::new(oracle))
+        } else {
+            VectorOracle::Plain(Box::new(oracle))
+        };
+        let config = opts.solver_config(self.inner_sweeps);
+        let inst = self.inst;
+        let seed = self.seed;
+        let f = t.f.clone();
+        Lowered::Vector(VectorPart {
+            name: "correlation-clustering",
+            f,
+            oracle,
+            config,
+            interpret: Box::new(move |_f: &DiagonalQuadratic, result: SolverResult| {
+                let ratio = approx_ratio(&t, &result.x);
+                let lp_objective = inst.lp_objective(&result.x);
+                let labels = round_pivot(inst, &result.x, seed);
+                let rounded_objective = inst.clustering_objective(&labels);
+                CcResult { result, lp_objective, approx_ratio: ratio, labels, rounded_objective }
+            }),
+        })
+    }
+}
+
 /// Solve configuration for correlation clustering.
+#[deprecated(note = "use `Correlation` with `core::problem::SolveOptions` / `core::Session`")]
 #[derive(Debug, Clone)]
 pub struct CcConfig {
     pub gamma: f64,
@@ -166,7 +284,21 @@ pub struct CcConfig {
     pub overlap: bool,
 }
 
+#[allow(deprecated)]
 impl CcConfig {
+    /// The [`SolveOptions`] this legacy config maps onto.
+    pub fn to_options(&self) -> SolveOptions {
+        SolveOptions {
+            max_iters: self.max_iters,
+            violation_tol: self.violation_tol,
+            inner_sweeps: Some(self.inner_sweeps),
+            record_trace: self.record_trace,
+            sweep: self.sweep,
+            overlap: self.overlap,
+            ..SolveOptions::default()
+        }
+    }
+
     /// Algorithm 6 settings (dense / complete graphs).
     pub fn dense() -> CcConfig {
         CcConfig {
@@ -213,37 +345,19 @@ pub struct CcResult {
 }
 
 /// Solve the LP relaxation and round.
+///
+/// Thin wrapper over the [`Session`] API (bit-identical to it; pinned
+/// in `tests/determinism.rs`).
+#[deprecated(note = "use `Correlation::dense(inst)`/`Correlation::sparse(inst)` + `solve`")]
+#[allow(deprecated)]
 pub fn solve_cc(inst: &CcInstance, cfg: &CcConfig, seed: u64) -> CcResult {
-    let t = veldt_transform(inst, cfg.gamma);
-    let mut oracle = MetricOracle::new(Arc::new(inst.graph.clone()), cfg.mode);
-    oracle.upper_bound = Some(1.0);
-    oracle.threads = cfg.threads;
-    oracle.report_tol = (cfg.violation_tol * 1e-3).max(1e-12);
-    // Shard-bucketed delivery helps exactly when the sharded engine
-    // consumes it; sequential solves keep the historical slot order.
-    oracle.shard_bucket = matches!(cfg.sweep, SweepStrategy::ShardedParallel { .. });
-    let solver_cfg = SolverConfig {
-        max_iters: cfg.max_iters,
-        inner_sweeps: cfg.inner_sweeps,
-        violation_tol: cfg.violation_tol,
-        dual_tol: f64::INFINITY,
-        projection_budget: None,
-        record_trace: cfg.record_trace,
-        z_tol: 0.0,
-        sweep: cfg.sweep,
-        parallel_min_rows: None,
-    };
-    let mut solver = Solver::new(t.f.clone(), solver_cfg);
-    let result = if cfg.overlap && cfg.mode == OracleMode::Collect {
-        solver.solve_overlapped(oracle)
-    } else {
-        solver.solve(oracle)
-    };
-    let ratio = approx_ratio(&t, &result.x);
-    let lp_objective = inst.lp_objective(&result.x);
-    let labels = round_pivot(inst, &result.x, seed);
-    let rounded_objective = inst.clustering_objective(&labels);
-    CcResult { result, lp_objective, approx_ratio: ratio, labels, rounded_objective }
+    Correlation::dense(inst)
+        .gamma(cfg.gamma)
+        .inner_sweeps(cfg.inner_sweeps)
+        .mode(cfg.mode)
+        .threads(cfg.threads)
+        .seed(seed)
+        .solve(&cfg.to_options())
 }
 
 /// Ailon–Charikar–Newman pivot rounding of a fractional metric `x`
@@ -272,6 +386,7 @@ pub fn round_pivot(inst: &CcInstance, x: &[f64], seed: u64) -> Vec<u32> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::generators::{erdos_renyi, planted_signed, sign_edges};

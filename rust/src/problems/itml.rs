@@ -13,10 +13,13 @@
 //! pairs with nonzero duals are re-projected in sweeps, and pairs whose
 //! dual returns to zero are forgotten.
 
+use crate::core::problem::{Lowered, Problem, RoundProblem, RoundReport, RoundSnapshot, SolveOptions};
+use crate::core::session::Session;
 use crate::ml::dataset::Dataset;
 use crate::ml::mahalanobis::Mat;
 use crate::util::Rng;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Pair constraints: indices into the dataset plus the similar/dissimilar
 /// tag (δ = +1 similar, −1 dissimilar).
@@ -135,58 +138,239 @@ fn sample_pair(data: &Dataset, similar: bool, rng: &mut Rng) -> Option<Pair> {
     None
 }
 
-/// PROJECT AND FORGET for ITML over the full implicit pair set.
-pub fn solve_pf_itml(data: &Dataset, cfg: &PfItmlConfig) -> ItmlResult {
-    let mut m = Mat::identity(data.d);
-    let mut rng = Rng::new(cfg.seed);
-    let mut remembered: HashMap<Pair, PairState> = HashMap::new();
-    let mut projections = 0usize;
-    let mut mv = Vec::new();
-    let mut diff = Vec::new();
-    let fresh_state = |p: Pair, params: &ItmlParams| PairState {
-        lambda: 0.0,
-        xi: if p.similar { params.u } else { params.l },
-    };
-    while projections < cfg.max_projections {
+/// Insertion-ordered remembered-pair set (the active set of PF-ITML).
+///
+/// The `HashMap` it replaces iterated sweeps in the map's per-process
+/// random order, so two identical runs applied the (non-commuting)
+/// rank-one updates in different orders and produced different matrices.
+/// Discovery order is deterministic given the seed — exactly like the
+/// engine's slot-ordered `ActiveSet` — which makes runs reproducible and
+/// checkpoint/resume exact.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct PairList {
+    pairs: Vec<(Pair, PairState)>,
+    index: HashMap<Pair, usize>,
+}
+
+impl PairList {
+    fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Slot of `pair`, inserting `fresh` at the tail if unknown.
+    fn slot_or_insert(&mut self, pair: Pair, fresh: PairState) -> usize {
+        match self.index.entry(pair) {
+            std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let slot = self.pairs.len();
+                v.insert(slot);
+                self.pairs.push((pair, fresh));
+                slot
+            }
+        }
+    }
+
+    fn get_mut(&mut self, slot: usize) -> (Pair, &mut PairState) {
+        let (pair, st) = &mut self.pairs[slot];
+        (*pair, st)
+    }
+
+    /// FORGET: drop pairs whose dual returned to zero (slot order is
+    /// preserved for survivors, like the engine's stable compaction).
+    fn forget_inactive(&mut self) {
+        self.pairs.retain(|(_, st)| st.lambda != 0.0);
+        self.index.clear();
+        for (slot, (pair, _)) in self.pairs.iter().enumerate() {
+            self.index.insert(*pair, slot);
+        }
+    }
+}
+
+/// PF-ITML as a [`Problem`]: a *round-driven* block (the Mahalanobis
+/// iterate lives in the LogDet geometry, not the vector engine), stepped
+/// by the [`Session`] in lockstep with any vector blocks. ITML over many
+/// folds is the ROADMAP's canonical batched-instance example: add one
+/// `PfItml` per fold to a single session.
+pub struct PfItml<'a> {
+    data: &'a Dataset,
+    cfg: PfItmlConfig,
+}
+
+impl<'a> PfItml<'a> {
+    pub fn new(data: &'a Dataset, cfg: PfItmlConfig) -> PfItml<'a> {
+        PfItml { data, cfg }
+    }
+
+    /// One-shot convenience: solve this instance alone.
+    pub fn solve(self, opts: &SolveOptions) -> ItmlResult {
+        Session::solve_one(opts.clone(), self)
+    }
+}
+
+impl<'a> Problem<'a> for PfItml<'a> {
+    type Output = ItmlResult;
+
+    fn lower(self, _opts: &SolveOptions) -> Lowered<'a, ItmlResult> {
+        Lowered::Rounds(Box::new(PfItmlRun::new(self.data, self.cfg)))
+    }
+}
+
+/// Checkpointable state of one PF-ITML run.
+#[derive(Clone)]
+struct ItmlSnapshot {
+    m: Mat,
+    rng: Rng,
+    remembered: PairList,
+    projections: usize,
+}
+
+/// The running PF-ITML state machine: one `round()` = one oracle batch +
+/// sweeps + FORGET (the body of the historical solve loop).
+pub(crate) struct PfItmlRun<'a> {
+    data: &'a Dataset,
+    cfg: PfItmlConfig,
+    m: Mat,
+    rng: Rng,
+    remembered: PairList,
+    projections: usize,
+    mv: Vec<f64>,
+    diff: Vec<f64>,
+}
+
+impl<'a> PfItmlRun<'a> {
+    fn new(data: &'a Dataset, cfg: PfItmlConfig) -> PfItmlRun<'a> {
+        PfItmlRun {
+            data,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            m: Mat::identity(data.d),
+            remembered: PairList::default(),
+            projections: 0,
+            mv: Vec::new(),
+            diff: Vec::new(),
+        }
+    }
+
+    fn fresh_state(pair: Pair, params: &ItmlParams) -> PairState {
+        PairState { lambda: 0.0, xi: if pair.similar { params.u } else { params.l } }
+    }
+
+    fn one_round(&mut self) -> RoundReport {
+        let proj_before = self.projections;
+        let mut found = 0usize;
         // Phase 1: random oracle — sample a fresh batch (Property 2) and
         // project on find.
-        for b in 0..cfg.batch {
-            if projections >= cfg.max_projections {
+        for b in 0..self.cfg.batch {
+            if self.projections >= self.cfg.max_projections {
                 break;
             }
             let similar = b % 2 == 0;
-            let Some(pair) = sample_pair(data, similar, &mut rng) else { continue };
-            let st = remembered.entry(pair).or_insert_with(|| fresh_state(pair, &cfg.params));
-            let moved = project_pair(&mut m, data, pair, st, &cfg.params, &mut mv, &mut diff);
+            let Some(pair) = sample_pair(self.data, similar, &mut self.rng) else { continue };
+            found += 1;
+            let slot =
+                self.remembered.slot_or_insert(pair, Self::fresh_state(pair, &self.cfg.params));
+            let (pair, st) = self.remembered.get_mut(slot);
+            let moved = project_pair(
+                &mut self.m,
+                self.data,
+                pair,
+                st,
+                &self.cfg.params,
+                &mut self.mv,
+                &mut self.diff,
+            );
             if moved != 0.0 {
-                projections += 1;
+                self.projections += 1;
             }
         }
-        // Phase 2: sweeps over the remembered list.
-        for _ in 0..cfg.sweeps {
-            if projections >= cfg.max_projections {
+        // Phase 2: sweeps over the remembered list, in slot order.
+        for _ in 0..self.cfg.sweeps {
+            if self.projections >= self.cfg.max_projections {
                 break;
             }
-            let pairs: Vec<Pair> = remembered.keys().cloned().collect();
-            for pair in pairs {
-                if projections >= cfg.max_projections {
+            for slot in 0..self.remembered.len() {
+                if self.projections >= self.cfg.max_projections {
                     break;
                 }
-                let st = remembered.get_mut(&pair).unwrap();
-                let moved =
-                    project_pair(&mut m, data, pair, st, &cfg.params, &mut mv, &mut diff);
+                let (pair, st) = self.remembered.get_mut(slot);
+                let moved = project_pair(
+                    &mut self.m,
+                    self.data,
+                    pair,
+                    st,
+                    &self.cfg.params,
+                    &mut self.mv,
+                    &mut self.diff,
+                );
                 if moved != 0.0 {
-                    projections += 1;
+                    self.projections += 1;
                 }
             }
         }
         // Phase 3: FORGET pairs whose dual returned to zero.
-        remembered.retain(|_, st| st.lambda != 0.0);
+        self.remembered.forget_inactive();
+        RoundReport {
+            found,
+            projections: self.projections - proj_before,
+            active: self.remembered.len(),
+        }
     }
-    ItmlResult { m, projections, active_pairs: remembered.len() }
+}
+
+impl RoundProblem for PfItmlRun<'_> {
+    type Output = ItmlResult;
+
+    fn name(&self) -> &'static str {
+        "pf-itml"
+    }
+
+    fn round(&mut self) -> RoundReport {
+        self.one_round()
+    }
+
+    fn done(&self) -> bool {
+        self.projections >= self.cfg.max_projections
+    }
+
+    fn finish(self: Box<Self>) -> ItmlResult {
+        ItmlResult {
+            m: self.m,
+            projections: self.projections,
+            active_pairs: self.remembered.len(),
+        }
+    }
+
+    fn snapshot(&self) -> Option<RoundSnapshot> {
+        Some(Arc::new(ItmlSnapshot {
+            m: self.m.clone(),
+            rng: self.rng.clone(),
+            remembered: self.remembered.clone(),
+            projections: self.projections,
+        }))
+    }
+
+    fn restore(&mut self, snapshot: &RoundSnapshot) {
+        let snap = snapshot
+            .downcast_ref::<ItmlSnapshot>()
+            .expect("foreign snapshot handed to a PF-ITML block");
+        self.m = snap.m.clone();
+        self.rng = snap.rng.clone();
+        self.remembered = snap.remembered.clone();
+        self.projections = snap.projections;
+    }
+}
+
+/// PROJECT AND FORGET for ITML over the full implicit pair set.
+///
+/// Thin wrapper over the [`Session`] API (bit-identical to it; pinned
+/// in `tests/determinism.rs`).
+#[deprecated(note = "use `PfItml::new(data, cfg).solve(&opts)` or `core::Session`")]
+pub fn solve_pf_itml(data: &Dataset, cfg: &PfItmlConfig) -> ItmlResult {
+    PfItml::new(data, cfg.clone()).solve(&SolveOptions::default())
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::ml::dataset::gaussian_mixture;

@@ -10,12 +10,93 @@
 use super::metric_oracle::{MetricOracle, OracleMode};
 use crate::core::bregman::{BregmanFunction, DiagonalQuadratic};
 use crate::core::engine::SweepStrategy;
-use crate::core::solver::{Solver, SolverConfig, SolverResult};
+use crate::core::problem::{
+    ErasedOverlappable, Lowered, Problem, SolveOptions, VectorOracle, VectorPart,
+};
+use crate::core::session::Session;
+use crate::core::solver::SolverResult;
 use crate::graph::generators::WeightedInstance;
 use crate::graph::Graph;
 use std::sync::Arc;
 
+/// Metric nearness as a [`Problem`]: find the closest point of MET(G)
+/// to the instance's dissimilarities in the (weighted) L2 norm.
+///
+/// ```ignore
+/// let res: NearnessResult = Nearness::new(&inst).solve(&SolveOptions::new());
+/// // or batched with other instances:
+/// let mut session = Session::new(SolveOptions::new().sharded(0));
+/// let handles: Vec<_> = insts.iter().map(|i| session.add(Nearness::new(i))).collect();
+/// session.run();
+/// ```
+pub struct Nearness<'a> {
+    inst: &'a WeightedInstance,
+    /// Per-edge norm weights (`None` = unweighted).
+    norm_weights: Option<Vec<f64>>,
+    /// Constraint delivery mode (the paper uses project-on-find).
+    mode: OracleMode,
+}
+
+impl<'a> Nearness<'a> {
+    pub fn new(inst: &'a WeightedInstance) -> Nearness<'a> {
+        Nearness { inst, norm_weights: None, mode: OracleMode::ProjectOnFind }
+    }
+
+    /// Constraint delivery mode; [`OracleMode::Collect`] additionally
+    /// unlocks the oracle/sweep overlap (`SolveOptions::overlap`).
+    pub fn mode(mut self, mode: OracleMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Weighted norm `½ Σ_e w_e (x_e − d_e)²`.
+    pub fn norm_weights(mut self, w: Option<Vec<f64>>) -> Self {
+        self.norm_weights = w;
+        self
+    }
+
+    /// One-shot convenience: solve this instance alone.
+    pub fn solve(self, opts: &SolveOptions) -> NearnessResult {
+        Session::solve_one(opts.clone(), self)
+    }
+}
+
+impl<'a> Problem<'a> for Nearness<'a> {
+    type Output = NearnessResult;
+
+    fn lower(self, opts: &SolveOptions) -> Lowered<'a, NearnessResult> {
+        let m = self.inst.graph.num_edges();
+        let w = self.norm_weights.unwrap_or_else(|| vec![1.0; m]);
+        let f = DiagonalQuadratic::new(self.inst.weights.clone(), w);
+        let mut oracle = MetricOracle::new(Arc::new(self.inst.graph.clone()), self.mode);
+        oracle.report_tol = (opts.violation_tol * 1e-3).max(1e-12);
+        // Shard-bucketed delivery helps exactly when the sharded engine
+        // consumes it; sequential solves keep the historical slot order.
+        oracle.shard_bucket = matches!(opts.sweep, SweepStrategy::ShardedParallel { .. });
+        let oracle = if self.mode == OracleMode::Collect {
+            // Collect scans are pure in the snapshot: overlappable.
+            VectorOracle::Overlappable(ErasedOverlappable::new(oracle))
+        } else {
+            // ProjectOnFind mutates x while scanning: plain only.
+            VectorOracle::Plain(Box::new(oracle))
+        };
+        // Algorithm 8: one extra sweep after the on-find projections.
+        let config = opts.solver_config(1);
+        Lowered::Vector(VectorPart {
+            name: "nearness",
+            f,
+            oracle,
+            config,
+            interpret: Box::new(|f: &DiagonalQuadratic, result: SolverResult| {
+                let objective = f.value(&result.x);
+                NearnessResult { result, objective }
+            }),
+        })
+    }
+}
+
 /// Options for a metric nearness solve.
+#[deprecated(note = "use `Nearness` with `core::problem::SolveOptions` / `core::Session`")]
 #[derive(Debug, Clone)]
 pub struct NearnessConfig {
     /// Per-edge weights for the norm (None = unweighted).
@@ -39,6 +120,7 @@ pub struct NearnessConfig {
     pub overlap: bool,
 }
 
+#[allow(deprecated)]
 impl Default for NearnessConfig {
     fn default() -> Self {
         NearnessConfig {
@@ -54,6 +136,22 @@ impl Default for NearnessConfig {
     }
 }
 
+#[allow(deprecated)]
+impl NearnessConfig {
+    /// The [`SolveOptions`] this legacy config maps onto.
+    pub fn to_options(&self) -> SolveOptions {
+        SolveOptions {
+            max_iters: self.max_iters,
+            violation_tol: self.violation_tol,
+            dual_tol: self.dual_tol,
+            record_trace: self.record_trace,
+            sweep: self.sweep,
+            overlap: self.overlap,
+            ..SolveOptions::default()
+        }
+    }
+}
+
 /// Result: the nearest metric plus solve statistics.
 #[derive(Debug, Clone)]
 pub struct NearnessResult {
@@ -63,35 +161,16 @@ pub struct NearnessResult {
 }
 
 /// Solve metric nearness on the instance's graph.
+///
+/// Thin wrapper over the [`Session`] API (bit-identical to it; pinned
+/// in `tests/determinism.rs`).
+#[deprecated(note = "use `Nearness::new(inst).solve(&opts)` or `core::Session`")]
+#[allow(deprecated)]
 pub fn solve_nearness(inst: &WeightedInstance, cfg: &NearnessConfig) -> NearnessResult {
-    let m = inst.graph.num_edges();
-    let w = cfg.weights.clone().unwrap_or_else(|| vec![1.0; m]);
-    let f = DiagonalQuadratic::new(inst.weights.clone(), w);
-    let mut oracle = MetricOracle::new(Arc::new(inst.graph.clone()), cfg.mode);
-    oracle.report_tol = (cfg.violation_tol * 1e-3).max(1e-12);
-    // Shard-bucketed delivery helps exactly when the sharded engine
-    // consumes it; sequential solves keep the historical slot order.
-    oracle.shard_bucket = matches!(cfg.sweep, SweepStrategy::ShardedParallel { .. });
-    let solver_cfg = SolverConfig {
-        max_iters: cfg.max_iters,
-        // Algorithm 8: one extra sweep after the on-find projections.
-        inner_sweeps: 1,
-        violation_tol: cfg.violation_tol,
-        dual_tol: cfg.dual_tol,
-        projection_budget: None,
-        record_trace: cfg.record_trace,
-        z_tol: 0.0,
-        sweep: cfg.sweep,
-        parallel_min_rows: None,
-    };
-    let mut solver = Solver::new(f, solver_cfg);
-    let result = if cfg.overlap && cfg.mode == OracleMode::Collect {
-        solver.solve_overlapped(oracle)
-    } else {
-        solver.solve(oracle)
-    };
-    let objective = solver.f.value(&result.x);
-    NearnessResult { result, objective }
+    Nearness::new(inst)
+        .mode(cfg.mode)
+        .norm_weights(cfg.weights.clone())
+        .solve(&cfg.to_options())
 }
 
 /// The *decrease-only* metric solution for the current iterate: the
@@ -117,8 +196,10 @@ pub fn decrease_only_distance(g: &Graph, x: &[f64]) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::core::solver::{Solver, SolverConfig};
     use crate::graph::generators::{type1_complete, type2_complete, type3_complete};
     use crate::problems::metric_oracle::max_metric_violation;
     use crate::util::Rng;

@@ -135,7 +135,6 @@ mod tests {
     use crate::core::solver::{Solver, SolverConfig};
     use crate::graph::generators::type1_complete;
     use crate::problems::metric_oracle::max_metric_violation;
-    use crate::problems::nearness::{solve_nearness, NearnessConfig};
 
     #[test]
     fn sampler_returns_valid_triangles() {
@@ -189,9 +188,8 @@ mod tests {
         let mut rng = Rng::new(7);
         let inst = type1_complete(10, &mut rng);
         // Deterministic reference.
-        let det = solve_nearness(
-            &inst,
-            &NearnessConfig { violation_tol: 1e-9, dual_tol: 1e-9, ..Default::default() },
+        let det = crate::problems::nearness::Nearness::new(&inst).solve(
+            &crate::core::problem::SolveOptions::new().violation_tol(1e-9).dual_tol(1e-9),
         );
         // Random-oracle run.
         let g = Arc::new(inst.graph.clone());

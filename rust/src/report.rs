@@ -1,7 +1,10 @@
 //! Report emission helpers shared by `main.rs` and the benches: every
-//! experiment prints the paper-style table/series and persists CSV under
-//! the report directory.
+//! experiment prints the paper-style table/series, persists CSV under
+//! the report directory, and can persist a machine-readable
+//! [`SolverResult`] JSON (schema-versioned; includes the per-phase
+//! oracle/sweep/forget timing breakdown).
 
+use crate::core::solver::SolverResult;
 use crate::util::table::{Series, Table};
 
 /// Where reports land (`$PAF_REPORT_DIR`, default `reports/`).
@@ -17,6 +20,65 @@ pub fn emit_table(t: &Table, basename: &str) {
 /// Emit a series under the standard directory.
 pub fn emit_series(s: &Series, basename: &str) {
     s.emit(&report_dir(), basename);
+}
+
+/// Version of the solver-result JSON schema below. Bump on any
+/// field-shape change so downstream consumers can dispatch.
+pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 1;
+
+/// Serialise a [`SolverResult`] (with its per-phase timing breakdown
+/// and, when recorded, the full per-iteration trace) as JSON. `label`
+/// identifies the run; it must not contain `"` or `\` (the emitter does
+/// no escaping — labels are code-controlled).
+pub fn solver_result_json(label: &str, r: &SolverResult) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema_version\": {SOLVER_JSON_SCHEMA_VERSION},\n"));
+    out.push_str(&format!("  \"label\": \"{label}\",\n"));
+    out.push_str(&format!("  \"converged\": {},\n", r.converged));
+    out.push_str(&format!("  \"iterations\": {},\n", r.iterations));
+    out.push_str(&format!("  \"seconds\": {:.9},\n", r.seconds));
+    out.push_str(&format!("  \"total_projections\": {},\n", r.total_projections));
+    out.push_str(&format!("  \"active_constraints\": {},\n", r.active_constraints));
+    out.push_str(&format!(
+        "  \"phases\": {{\"oracle_s\": {:.9}, \"sweep_s\": {:.9}, \"forget_s\": {:.9}}},\n",
+        r.phases.oracle_s, r.phases.sweep_s, r.phases.forget_s
+    ));
+    out.push_str("  \"trace\": [\n");
+    for (k, it) in r.trace.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"iteration\": {}, \"found\": {}, \"merged\": {}, \"remembered\": {}, \
+             \"max_violation\": {:e}, \"projections\": {}, \"seconds\": {:.9}, \
+             \"oracle_s\": {:.9}, \"sweep_s\": {:.9}, \"forget_s\": {:.9}}}{}\n",
+            it.iteration,
+            it.found,
+            it.merged,
+            it.remembered,
+            it.max_violation,
+            it.projections,
+            it.seconds,
+            it.oracle_s,
+            it.sweep_s,
+            it.forget_s,
+            if k + 1 == r.trace.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Persist a solver result as `<basename>.json` under the report
+/// directory; returns the written path.
+pub fn emit_solver_json(
+    r: &SolverResult,
+    basename: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = std::path::Path::new(&dir).join(format!("{basename}.json"));
+    std::fs::write(&path, solver_result_json(basename, r))?;
+    println!("  wrote {}", path.display());
+    Ok(path)
 }
 
 /// Format a seconds value like the paper's tables (3 significant-ish).
@@ -38,6 +100,7 @@ pub fn fmt_gib(bytes: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::solver::{IterStats, PhaseTimes};
 
     #[test]
     fn formats() {
@@ -45,5 +108,53 @@ mod tests {
         assert_eq!(fmt_time(45.67), "45.7");
         assert_eq!(fmt_time(1649.0), "1649");
         assert_eq!(fmt_gib(1u64 << 30), "1.00");
+    }
+
+    #[test]
+    fn solver_json_is_parseable_and_versioned() {
+        let r = SolverResult {
+            x: vec![0.0; 3],
+            iterations: 2,
+            converged: true,
+            total_projections: 5,
+            active_constraints: 1,
+            trace: vec![
+                IterStats {
+                    iteration: 0,
+                    found: 3,
+                    merged: 3,
+                    remembered: 1,
+                    max_violation: 0.5,
+                    projections: 4,
+                    seconds: 0.01,
+                    oracle_s: 0.004,
+                    sweep_s: 0.005,
+                    forget_s: 0.001,
+                },
+                IterStats { iteration: 1, ..Default::default() },
+            ],
+            seconds: 0.02,
+            phases: PhaseTimes { oracle_s: 0.004, sweep_s: 0.005, forget_s: 0.001 },
+        };
+        let text = solver_result_json("unit", &r);
+        let json = crate::runtime::json::Json::parse(&text).expect("invalid JSON");
+        assert_eq!(
+            json.get("schema_version").and_then(|v| v.as_usize()),
+            Some(SOLVER_JSON_SCHEMA_VERSION as usize)
+        );
+        assert_eq!(json.get("label").and_then(|v| v.as_str()), Some("unit"));
+        assert_eq!(json.get("iterations").and_then(|v| v.as_usize()), Some(2));
+        let phases = json.get("phases").expect("phases object");
+        match phases.get("sweep_s") {
+            Some(crate::runtime::json::Json::Num(v)) => assert!((v - 0.005).abs() < 1e-12),
+            other => panic!("missing sweep_s: {other:?}"),
+        }
+        let trace = json.get("trace").and_then(|t| t.as_arr()).expect("trace array");
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace[0].get("found").and_then(|v| v.as_usize()), Some(3));
+        match trace[0].get("max_violation") {
+            Some(crate::runtime::json::Json::Num(v)) => assert!((v - 0.5).abs() < 1e-12),
+            other => panic!("missing max_violation: {other:?}"),
+        }
     }
 }

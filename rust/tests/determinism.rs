@@ -10,14 +10,21 @@
 //! values is covered by the CI matrix, which runs this whole suite under
 //! `PAF_THREADS=1` and `PAF_THREADS=4`).
 
+#![allow(deprecated)] // the legacy wrappers are pinned against the Session API here
+
+use paf::core::bregman::DiagonalQuadratic;
 use paf::core::engine::SweepStrategy;
-use paf::core::solver::SolverResult;
+use paf::core::problem::{SolveEvent, SolveOptions};
+use paf::core::session::Session;
+use paf::core::solver::{Solver, SolverConfig, SolverResult};
 use paf::graph::generators::type1_complete;
 use paf::graph::Graph;
-use paf::problems::correlation::{solve_cc, CcConfig, CcInstance, CcResult};
-use paf::problems::metric_oracle::OracleMode;
-use paf::problems::nearness::{solve_nearness, NearnessConfig};
+use paf::problems::correlation::{solve_cc, CcConfig, CcInstance, CcResult, Correlation};
+use paf::problems::itml::{PfItml, PfItmlConfig};
+use paf::problems::metric_oracle::{MetricOracle, OracleMode};
+use paf::problems::nearness::{solve_nearness, Nearness, NearnessConfig};
 use paf::util::Rng;
+use std::sync::Arc;
 
 fn assert_bit_identical(reference: &SolverResult, got: &SolverResult, label: &str) {
     assert_eq!(reference.x, got.x, "{label}: x differs (bitwise)");
@@ -146,4 +153,368 @@ fn correlation_sharded_parallel_apply_is_thread_count_invariant() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Session API equivalence (PR-3 tentpole): the stepwise driver, the
+// checkpoint/resume path, and K-instance batches must all be
+// bit-identical to the historical one-shot `Solver::solve` /
+// `solve_overlapped` trajectories.
+// ---------------------------------------------------------------------
+
+/// The historical hand-rolled nearness solve (what `solve_nearness` did
+/// before the Session refactor): raw oracle + `Solver::solve`.
+fn raw_nearness(
+    inst: &paf::graph::generators::WeightedInstance,
+    sweep: SweepStrategy,
+    overlap: bool,
+    tol: f64,
+) -> SolverResult {
+    let f = DiagonalQuadratic::unweighted(inst.weights.clone());
+    let mut oracle = MetricOracle::new(Arc::new(inst.graph.clone()), OracleMode::Collect);
+    oracle.report_tol = (tol * 1e-3).max(1e-12);
+    oracle.shard_bucket = matches!(sweep, SweepStrategy::ShardedParallel { .. });
+    let cfg = SolverConfig {
+        max_iters: 500,
+        inner_sweeps: 1,
+        violation_tol: tol,
+        dual_tol: tol,
+        projection_budget: None,
+        record_trace: true,
+        z_tol: 0.0,
+        sweep,
+        parallel_min_rows: None,
+    };
+    let mut solver = Solver::new(f, cfg);
+    if overlap {
+        solver.solve_overlapped(oracle)
+    } else {
+        solver.solve(oracle)
+    }
+}
+
+fn session_opts(sweep: SweepStrategy, overlap: bool, tol: f64) -> SolveOptions {
+    SolveOptions::new()
+        .max_iters(500)
+        .violation_tol(tol)
+        .dual_tol(tol)
+        .sweep(sweep)
+        .overlap(overlap)
+}
+
+#[test]
+fn session_single_instance_matches_raw_solver() {
+    let mut rng = Rng::new(61);
+    let inst = type1_complete(13, &mut rng);
+    for (sweep, overlap) in [
+        (SweepStrategy::Sequential, false),
+        (SweepStrategy::ShardedParallel { threads: 2 }, false),
+        (SweepStrategy::ShardedParallel { threads: 2 }, true),
+    ] {
+        let reference = raw_nearness(&inst, sweep, overlap, 1e-6);
+        assert!(reference.converged);
+        let got = Nearness::new(&inst)
+            .mode(OracleMode::Collect)
+            .solve(&session_opts(sweep, overlap, 1e-6));
+        assert_bit_identical(
+            &reference,
+            &got.result,
+            &format!("session vs raw ({sweep:?}, overlap={overlap})"),
+        );
+    }
+}
+
+#[test]
+fn session_stepwise_matches_one_shot_run() {
+    let mut rng = Rng::new(62);
+    let inst = type1_complete(12, &mut rng);
+    let opts = session_opts(SweepStrategy::ShardedParallel { threads: 2 }, false, 1e-6);
+    // One-shot run().
+    let mut one_shot = Session::new(opts.clone());
+    let h1 = one_shot.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    one_shot.run();
+    let res_run = one_shot.take(h1);
+    // Manual step() loop, counting events.
+    let mut stepped = Session::new(opts);
+    let h2 = stepped.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    let mut rounds = 0usize;
+    loop {
+        match stepped.step() {
+            SolveEvent::Finished(summary) => {
+                assert!(summary.all_converged);
+                break;
+            }
+            SolveEvent::Round(ev) => {
+                assert_eq!(ev.round, rounds, "round events must be consecutive");
+                rounds += 1;
+            }
+            other => panic!("unexpected event: {other:?}"),
+        }
+    }
+    let res_step = stepped.take(h2);
+    // The final round is reported through the Finished event, so N
+    // iterations surface as N−1 Round returns + 1 Finished.
+    assert_eq!(rounds + 1, res_step.result.iterations, "one Round event per iteration");
+    assert_bit_identical(&res_run.result, &res_step.result, "step loop vs run");
+}
+
+#[test]
+fn session_checkpoint_resume_is_bit_identical() {
+    let mut rng = Rng::new(63);
+    let insts: Vec<_> = (0..2).map(|_| type1_complete(11, &mut rng)).collect();
+    let opts = session_opts(SweepStrategy::ShardedParallel { threads: 2 }, false, 1e-6);
+    // Uninterrupted reference batch.
+    let mut full = Session::new(opts.clone());
+    let hf: Vec<_> = insts
+        .iter()
+        .map(|i| full.add(Nearness::new(i).mode(OracleMode::Collect)))
+        .collect();
+    full.run();
+    let reference: Vec<_> = hf.into_iter().map(|h| full.take(h)).collect();
+    // Interrupted: three rounds, checkpoint, resume in a FRESH session.
+    let mut first = Session::new(opts.clone());
+    let _h: Vec<_> = insts
+        .iter()
+        .map(|i| first.add(Nearness::new(i).mode(OracleMode::Collect)))
+        .collect();
+    for _ in 0..3 {
+        first.step();
+    }
+    let ck = first.checkpoint();
+    assert_eq!(ck.round(), 3);
+    let mut resumed = Session::new(opts);
+    let hr: Vec<_> = insts
+        .iter()
+        .map(|i| resumed.add(Nearness::new(i).mode(OracleMode::Collect)))
+        .collect();
+    resumed.restore(&ck);
+    resumed.run();
+    for (h, want) in hr.into_iter().zip(&reference) {
+        let got = resumed.take(h);
+        assert_bit_identical(&want.result, &got.result, "checkpoint/resume");
+        assert_eq!(want.objective, got.objective, "objective differs after resume");
+    }
+}
+
+#[test]
+fn session_checkpoint_resume_overlapped_pipeline() {
+    let mut rng = Rng::new(64);
+    let inst = type1_complete(12, &mut rng);
+    let opts = session_opts(SweepStrategy::ShardedParallel { threads: 2 }, true, 1e-6);
+    let mut full = Session::new(opts.clone());
+    let h = full.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    full.run();
+    let reference = full.take(h);
+    assert!(reference.result.converged);
+    let mut first = Session::new(opts.clone());
+    let _h = first.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    for _ in 0..2 {
+        first.step();
+    }
+    let ck = first.checkpoint();
+    let mut resumed = Session::new(opts);
+    let hr = resumed.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    resumed.restore(&ck);
+    resumed.run();
+    let got = resumed.take(hr);
+    assert_bit_identical(&reference.result, &got.result, "overlap checkpoint/resume");
+}
+
+#[test]
+fn batch_of_k_instances_matches_individual_solves() {
+    // The acceptance criterion: K disjoint instances in ONE session,
+    // per-instance results bit-identical to K separate solves — for the
+    // sequential executor AND the sharded fleet sweep.
+    let mut rng = Rng::new(65);
+    let insts: Vec<_> =
+        [10usize, 13, 11].iter().map(|&n| type1_complete(n, &mut rng)).collect();
+    for sweep in [SweepStrategy::Sequential, SweepStrategy::ShardedParallel { threads: 4 }] {
+        let opts = session_opts(sweep, false, 1e-6);
+        let solo: Vec<_> = insts
+            .iter()
+            .map(|i| Nearness::new(i).mode(OracleMode::Collect).solve(&opts))
+            .collect();
+        let mut batch = Session::new(opts);
+        let handles: Vec<_> = insts
+            .iter()
+            .map(|i| batch.add(Nearness::new(i).mode(OracleMode::Collect)))
+            .collect();
+        let summary = batch.run();
+        assert!(summary.all_converged, "{sweep:?}: batch did not converge");
+        for (k, (h, want)) in handles.into_iter().zip(&solo).enumerate() {
+            let got = batch.take(h);
+            assert!(want.result.converged, "{sweep:?}: solo {k} did not converge");
+            assert_bit_identical(
+                &want.result,
+                &got.result,
+                &format!("batch block {k} ({sweep:?})"),
+            );
+            assert_eq!(want.objective, got.objective, "block {k}: objective differs");
+        }
+    }
+}
+
+#[test]
+fn batch_of_cc_instances_matches_individual_solves() {
+    let insts = [cc_instance(66), cc_instance(67)];
+    let opts = SolveOptions::new()
+        .max_iters(800)
+        .violation_tol(1e-4)
+        .inner_sweeps(4)
+        .sweep(SweepStrategy::ShardedParallel { threads: 2 });
+    let solo: Vec<CcResult> = insts
+        .iter()
+        .map(|i| Correlation::dense(i).mode(OracleMode::Collect).seed(7).solve(&opts))
+        .collect();
+    let mut batch = Session::new(opts);
+    let handles: Vec<_> = insts
+        .iter()
+        .map(|i| batch.add(Correlation::dense(i).mode(OracleMode::Collect).seed(7)))
+        .collect();
+    let summary = batch.run();
+    assert!(summary.all_converged);
+    for (k, (h, want)) in handles.into_iter().zip(&solo).enumerate() {
+        let got: CcResult = batch.take(h);
+        assert_bit_identical(&want.result, &got.result, &format!("cc batch block {k}"));
+        assert_eq!(want.labels, got.labels, "block {k}: rounding differs");
+        assert_eq!(want.lp_objective, got.lp_objective, "block {k}: LP objective differs");
+    }
+}
+
+#[test]
+fn itml_is_deterministic_and_batches_bit_identically() {
+    // The PairList refactor makes PF-ITML runs reproducible (the old
+    // HashMap sweep order was per-process random), so the wrapper, a
+    // session block, and a 2-fold batch must all agree bitwise.
+    let mut rng = Rng::new(68);
+    let folds: Vec<_> = (0..2)
+        .map(|k| {
+            paf::ml::dataset::gaussian_mixture(80, 4, 2, 2.0, &mut rng)
+                .split(0.8, &mut Rng::new(100 + k))
+                .0
+        })
+        .collect();
+    let cfg = |seed| PfItmlConfig { max_projections: 2000, batch: 50, seed, ..Default::default() };
+    let solo: Vec<_> = folds
+        .iter()
+        .enumerate()
+        .map(|(k, f)| solve_pf_itml(f, &cfg(k as u64)))
+        .collect();
+    // Re-running the wrapper reproduces the matrix exactly.
+    let again = solve_pf_itml(&folds[0], &cfg(0));
+    assert_eq!(solo[0].m.a, again.m.a, "PF-ITML must be run-to-run deterministic");
+    assert_eq!(solo[0].projections, again.projections);
+    // A 2-fold batch in one session matches the individual runs.
+    let mut batch = Session::new(SolveOptions::default());
+    let handles: Vec<_> = folds
+        .iter()
+        .enumerate()
+        .map(|(k, f)| batch.add(PfItml::new(f, cfg(k as u64))))
+        .collect();
+    batch.run();
+    for (k, (h, want)) in handles.into_iter().zip(&solo).enumerate() {
+        let got = batch.take(h);
+        assert_eq!(want.m.a, got.m.a, "fold {k}: matrix differs");
+        assert_eq!(want.projections, got.projections, "fold {k}: projections differ");
+        assert_eq!(want.active_pairs, got.active_pairs, "fold {k}: active pairs differ");
+    }
+}
+
+#[test]
+fn itml_checkpoint_resume_is_bit_identical() {
+    let mut rng = Rng::new(69);
+    let data = paf::ml::dataset::gaussian_mixture(80, 4, 2, 2.0, &mut rng);
+    let cfg = PfItmlConfig { max_projections: 3000, batch: 60, seed: 9, ..Default::default() };
+    let reference = PfItml::new(&data, cfg.clone()).solve(&SolveOptions::default());
+    let mut first = Session::new(SolveOptions::default());
+    let _h = first.add(PfItml::new(&data, cfg.clone()));
+    for _ in 0..2 {
+        first.step();
+    }
+    let ck = first.checkpoint();
+    let mut resumed = Session::new(SolveOptions::default());
+    let h = resumed.add(PfItml::new(&data, cfg));
+    resumed.restore(&ck);
+    resumed.run();
+    let got = resumed.take(h);
+    assert_eq!(reference.m.a, got.m.a, "ITML resume diverged");
+    assert_eq!(reference.projections, got.projections);
+}
+
+#[test]
+fn mixed_vector_and_round_blocks_match_individual_solves() {
+    // A nearness block and an ITML block share one session; each must
+    // match its solo solve exactly.
+    let mut rng = Rng::new(70);
+    let inst = type1_complete(11, &mut rng);
+    let data = paf::ml::dataset::gaussian_mixture(60, 3, 2, 2.0, &mut rng);
+    let icfg = PfItmlConfig { max_projections: 1500, batch: 40, seed: 5, ..Default::default() };
+    let opts = session_opts(SweepStrategy::Sequential, false, 1e-6);
+    let solo_near = Nearness::new(&inst).mode(OracleMode::Collect).solve(&opts);
+    let solo_itml = PfItml::new(&data, icfg.clone()).solve(&opts);
+    let mut session = Session::new(opts);
+    let hn = session.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    let hi = session.add(PfItml::new(&data, icfg));
+    session.run();
+    let got_near = session.take(hn);
+    let got_itml = session.take(hi);
+    assert_bit_identical(&solo_near.result, &got_near.result, "mixed session nearness");
+    assert_eq!(solo_itml.m.a, got_itml.m.a, "mixed session ITML");
+}
+
+#[test]
+fn cancellation_stops_at_round_boundary_with_partial_results() {
+    let mut rng = Rng::new(71);
+    let inst = type1_complete(14, &mut rng);
+    // Tight tolerance so the solve would run many rounds uncancelled.
+    let opts = session_opts(SweepStrategy::Sequential, false, 1e-10);
+    let mut session = Session::new(opts);
+    let h = session.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    let token = session.cancel_token();
+    session.on_event(move |event| {
+        if matches!(event, SolveEvent::Round(ev) if ev.round == 1) {
+            token.cancel();
+        }
+    });
+    let summary = session.run();
+    assert!(summary.cancelled, "cancel token must stop the session");
+    assert!(!summary.all_converged);
+    assert!(session.is_finished());
+    let partial = session.take(h);
+    assert!(!partial.result.converged);
+    assert_eq!(partial.result.iterations, 2, "cancelled after round index 1");
+    assert_eq!(partial.result.x.len(), inst.graph.num_edges());
+}
+
+#[test]
+fn legacy_wrappers_route_through_session_unchanged() {
+    // The deprecated free functions are thin Session wrappers; their
+    // outputs must equal the new API's outputs bit for bit.
+    let mut rng = Rng::new(72);
+    let inst = type1_complete(12, &mut rng);
+    let legacy = solve_nearness(
+        &inst,
+        &NearnessConfig {
+            violation_tol: 1e-6,
+            dual_tol: 1e-6,
+            mode: OracleMode::Collect,
+            ..Default::default()
+        },
+    );
+    let modern = Nearness::new(&inst)
+        .mode(OracleMode::Collect)
+        .solve(&SolveOptions::new().max_iters(500).violation_tol(1e-6).dual_tol(1e-6));
+    assert_bit_identical(&legacy.result, &modern.result, "legacy nearness wrapper");
+    let cc = cc_instance(73);
+    let legacy_cc = solve_cc(
+        &cc,
+        &CcConfig { violation_tol: 1e-4, mode: OracleMode::Collect, ..CcConfig::dense() },
+        5,
+    );
+    let modern_cc = Correlation::dense(&cc)
+        .mode(OracleMode::Collect)
+        .seed(5)
+        .solve(&SolveOptions::new().max_iters(200).violation_tol(1e-4).inner_sweeps(2));
+    assert_bit_identical(&legacy_cc.result, &modern_cc.result, "legacy cc wrapper");
+    assert_eq!(legacy_cc.labels, modern_cc.labels);
 }

@@ -3,6 +3,8 @@
 //! stand-in for `proptest` — seeds sweep a family of cases and every
 //! failure message carries the seed for reproduction.
 
+#![allow(deprecated)] // exercises the legacy wrappers alongside the raw engine
+
 use paf::core::bregman::{BregmanFunction, DiagonalQuadratic, Entropy};
 use paf::core::constraint::Constraint;
 use paf::core::oracle::{ListOracle, SampledListOracle};
