@@ -1,0 +1,85 @@
+//! Serving-subsystem demo: replay a mixed job trace through the
+//! long-running scheduler — mid-solve admission, priorities, and one
+//! (or more) forced checkpoint preemptions at capacity 1.
+//!
+//! ```bash
+//! cargo run --release --example serve_trace
+//! ```
+//!
+//! The trace is generated, serialised to the line-delimited JSON format
+//! `paf serve --trace` consumes, and parsed back — so this example is
+//! also living documentation of the trace format. With capacity 1 the
+//! higher-priority arrivals must preempt the running job: the victim is
+//! checkpointed ([`Session::evict`] under the hood), requeued, and
+//! later resumed bit-identically to an uninterrupted run (pinned in
+//! `rust/tests/determinism.rs`).
+
+use paf::core::problem::SolveOptions;
+use paf::serve::{
+    demo_trace, emit_serve_json, parse_job_trace, JobBank, Scheduler, ServeConfig, ServeEvent,
+};
+
+fn main() {
+    // Generate the mixed nearness + CC demo trace and round-trip it
+    // through the on-disk format.
+    let trace_text: String = demo_trace(7)
+        .iter()
+        .map(|j| j.to_json_line() + "\n")
+        .collect();
+    println!("job trace (line-delimited JSON, `paf serve --trace` format):");
+    print!("{trace_text}");
+    let jobs = parse_job_trace(&trace_text).expect("generated trace must parse");
+
+    // Materialize the instance arena, then serve with capacity 1: every
+    // higher-priority arrival must preempt the running job.
+    let bank = JobBank::materialize(&jobs);
+    let opts = SolveOptions::new()
+        .violation_tol(1e-4)
+        .inner_sweeps(2) // mixed-kind traces pin the shared sweep count
+        .sharded(0);
+    let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
+    let mut scheduler = Scheduler::new(jobs, &bank, cfg);
+    scheduler.on_event(|event| match event {
+        ServeEvent::Admitted { round, job, resumed } => {
+            println!("round {round:>3}: admitted job {job}{}", if *resumed { " (resumed from checkpoint)" } else { "" })
+        }
+        ServeEvent::Preempted { round, job, rounds_done } => {
+            println!("round {round:>3}: PREEMPTED job {job} after {rounds_done} solve rounds")
+        }
+        ServeEvent::Completed { round, job, converged } => {
+            println!("round {round:>3}: job {job} completed (converged={converged})")
+        }
+        ServeEvent::Expired { round, job, rounds_done } => {
+            println!("round {round:>3}: job {job} expired after {rounds_done} rounds")
+        }
+        ServeEvent::Idle { .. } => {}
+    });
+    let stats = scheduler.run();
+
+    println!(
+        "\nserved {} jobs in {} scheduler rounds ({} preemptions)",
+        stats.jobs.len(),
+        stats.rounds,
+        stats.preemptions
+    );
+    for (k, j) in stats.jobs.iter().enumerate() {
+        println!(
+            "  job {k} ({}, prio {}): arrived r{}, done r{}, {} rounds run, {} projections, \
+             preempted {}x, converged={}",
+            j.name,
+            j.priority,
+            j.arrival_round,
+            j.completed_round.map(|r| r.to_string()).unwrap_or_else(|| "-".to_string()),
+            j.rounds_run,
+            j.projections,
+            j.preemptions,
+            j.converged
+        );
+    }
+    assert!(stats.all_completed(), "demo trace must complete every job");
+    assert!(
+        stats.preemptions >= 1,
+        "capacity 1 with a priority spread must force at least one preemption"
+    );
+    let _ = emit_serve_json(&stats, "SERVE_demo_trace");
+}

@@ -77,14 +77,14 @@ fn main() {
     );
 
     for (k, h) in near_handles.into_iter().enumerate() {
-        let res = session.take(h);
+        let res = session.take_unwrap(h);
         assert!(res.result.converged, "nearness block {k} did not converge");
         println!(
             "nearness[{k}]: {} iterations, {} projections, objective {:.4}",
             res.result.iterations, res.result.total_projections, res.objective
         );
     }
-    let itml = session.take(itml_handle);
+    let itml = session.take_unwrap(itml_handle);
     println!(
         "itml fold: {} projections, {} active pairs",
         itml.projections, itml.active_pairs

@@ -17,6 +17,10 @@
 //!   P7  multi-instance batching: K nearness instances as a sequential
 //!       loop vs one Session fleet sharing a single sharded sweep (the
 //!       block-offset multi-instance axis)
+//!   P8  serving: the same K jobs as a sequential solo loop vs the
+//!       serve scheduler with staggered arrivals — the fleet changes
+//!       mid-solve (admissions + compaction), but the sweeps stay
+//!       amortised across whatever is running
 //!
 //! All timings are also written to `reports/BENCH_perf_hotpath.json`
 //! (machine-readable; see `BenchCtx::write_json`) so the perf trajectory
@@ -195,7 +199,7 @@ fn main() {
                     let summary = session.run();
                     assert!(summary.all_converged, "batched fleet did not converge");
                     for h in handles {
-                        objectives.push(session.take(h).objective);
+                        objectives.push(session.take_unwrap(h).objective);
                     }
                 } else {
                     for inst in &instances {
@@ -207,6 +211,52 @@ fn main() {
                 objectives
             }));
         }
+    }
+
+    // P8: serving vs sequential jobs. The same 3 nearness jobs either
+    // run one after another (solo loop) or flow through the serve
+    // scheduler with staggered arrivals — jobs join the RUNNING fleet
+    // between rounds, finished blocks compact out, and one sharded
+    // sweep serves whoever is resident. Results are bit-identical
+    // either way (tests/determinism.rs), so this axis isolates the
+    // scheduling overhead + fleet-amortisation trade.
+    {
+        use paf::serve::{solve_job_solo, Job, JobBank, JobSpec, Scheduler, ServeConfig};
+        let n = ctx.scaled(90);
+        let jobs: Vec<Job> = (0..3)
+            .map(|k| Job {
+                id: k,
+                name: format!("near-{k}"),
+                spec: JobSpec::Nearness { n, graph_type: 1, seed: 60 + k as u64 },
+                priority: 0,
+                arrival_round: 2 * k, // staggered: the fleet changes mid-solve
+                max_rounds: None,
+                deadline_rounds: None,
+            })
+            .collect();
+        let bank = JobBank::materialize(&jobs);
+        let opts =
+            SolveOptions::new().violation_tol(1e-4).record_trace(false).sweep(
+                SweepStrategy::ShardedParallel { threads: 4 },
+            );
+        all.push(ctx.bench("P8/serve-3jobs/seq-loop", |_| {
+            let mut objectives = Vec::new();
+            for job in &jobs {
+                let out = solve_job_solo(job, bank.input(job.id), &opts);
+                assert!(out.result.converged);
+                objectives.push(out.objective);
+            }
+            objectives
+        }));
+        let mut rounds = 0;
+        all.push(ctx.bench("P8/serve-3jobs/scheduler-cap3", |_| {
+            let cfg = ServeConfig { capacity: 3, opts: opts.clone(), ..Default::default() };
+            let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+            assert!(stats.all_completed(), "serve fleet did not complete");
+            rounds = stats.rounds;
+            stats.jobs.iter().map(|j| j.objective.unwrap()).collect::<Vec<_>>()
+        }));
+        println!("    -> {rounds} scheduler rounds (staggered arrivals at 0/2/4)");
     }
 
     // P5: active-set churn (insert + forget).

@@ -158,6 +158,26 @@ impl ActiveSet {
         dropped
     }
 
+    /// Re-offset the remembered rows after a variable range was removed
+    /// from the concatenated fleet vector: every stored index `>= start`
+    /// slides down by `delta` (see
+    /// [`ConstraintStore::shift_indices_from`]). Slots, duals and the
+    /// rows' relative order are untouched — only the coordinate labels
+    /// (and therefore the content keys) change — so this counts as a
+    /// membership-generation bump, and the key index is rebuilt.
+    /// Returns `(generation_before, generation_after)` so slot-keyed
+    /// caches (shard plans) can *adopt* the new generation instead of
+    /// replanning: an injective index relabeling preserves
+    /// support-disjointness.
+    pub fn shift_indices_from(&mut self, start: u32, delta: u32) -> (u64, u64) {
+        let before = self.generation;
+        if self.store.shift_indices_from(start, delta) {
+            self.generation += 1;
+            self.rebuild_index();
+        }
+        (before, self.generation)
+    }
+
     /// Truly-stochastic FORGET (§3.2.1): forget *all* constraints. The
     /// caller is responsible for keeping dual values externally.
     pub fn forget_all(&mut self) {
@@ -339,6 +359,32 @@ mod tests {
                 assert_eq!(s.slot_of_key(snapshot[old].key()), Some(new as usize));
             }
         }
+    }
+
+    #[test]
+    fn shift_indices_bumps_generation_and_rebuilds_index() {
+        let mut s = ActiveSet::new();
+        let a = Constraint::cycle(1, &[2]);
+        let b = Constraint::cycle(9, &[10, 11]);
+        let sa = s.insert(&a);
+        s.set_z(sa, 1.0);
+        let sb = s.insert(&b);
+        s.set_z(sb, 2.0);
+        let g = s.generation();
+        // A variable range [3, 6) was removed: indices >= 6 slide by 3.
+        let (before, after) = s.shift_indices_from(6, 3);
+        assert_eq!(before, g);
+        assert!(after > before, "a content relabeling is a membership-generation bump");
+        // Slots, order and duals unchanged; only the labels moved.
+        assert_eq!(s.to_constraint(0), a);
+        let b_shifted = Constraint::cycle(6, &[7, 8]);
+        assert_eq!(s.to_constraint(1), b_shifted);
+        assert_eq!(s.z(1), 2.0);
+        assert!(s.contains(&b_shifted), "index must resolve the new content key");
+        assert!(!s.contains(&b), "the old key must be gone");
+        // A shift that touches nothing leaves the generation alone.
+        let (b2, a2) = s.shift_indices_from(100, 5);
+        assert_eq!(b2, a2);
     }
 
     #[test]

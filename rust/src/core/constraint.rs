@@ -72,6 +72,14 @@ impl Constraint {
         (dot - self.rhs).max(0.0)
     }
 
+    /// Content hash over the canonically sorted row (see
+    /// [`ConstraintView::key`]).
+    pub fn key(&self) -> ConstraintKey {
+        ConstraintView { indices: &self.indices, coeffs: &self.coeffs, rhs: self.rhs }.key()
+    }
+}
+
+impl ConstraintView<'_> {
     /// Content hash over the canonically sorted row. Rows up to 64
     /// nonzeros sort in a stack buffer (the hot path: cycle constraints);
     /// longer rows fall back to a heap allocation.
@@ -80,7 +88,7 @@ impl Constraint {
         let mut stack = [(0u32, 0.0f64); 64];
         let mut heap: Vec<(u32, f64)>;
         let pairs: &mut [(u32, f64)] = if n <= 64 {
-            for (k, (&i, &a)) in self.indices.iter().zip(&self.coeffs).enumerate() {
+            for (k, (&i, &a)) in self.indices.iter().zip(self.coeffs).enumerate() {
                 stack[k] = (i, a);
             }
             &mut stack[..n]
@@ -231,6 +239,50 @@ impl ConstraintStore {
         dropped
     }
 
+    /// Re-offset all stored variable indices: every index `>= start` is
+    /// decreased by `delta` (the block-removal compaction of the
+    /// `Session` fleet — a variable range `[start − delta, start)` was
+    /// dropped, so the tail of the coordinate space slides down).
+    /// Content keys are recomputed for every row whose indices moved.
+    /// Returns true if any index changed.
+    ///
+    /// The caller must guarantee that no stored index lies inside
+    /// `[start − delta, start)` (debug-asserted) — the map must stay
+    /// injective or content identity (and the disjointness invariants
+    /// downstream shard plans rely on) would silently break.
+    pub fn shift_indices_from(&mut self, start: u32, delta: u32) -> bool {
+        if delta == 0 {
+            return false;
+        }
+        let mut changed = false;
+        for r in 0..self.len() {
+            let (s, e) = (self.offsets[r] as usize, self.offsets[r + 1] as usize);
+            let mut moved = false;
+            for i in &mut self.indices[s..e] {
+                if *i >= start {
+                    *i -= delta;
+                    moved = true;
+                } else {
+                    debug_assert!(
+                        *i < start - delta,
+                        "shift_indices_from: index {} inside the removed range [{}, {})",
+                        *i,
+                        start - delta,
+                        start
+                    );
+                }
+            }
+            if moved {
+                // Only rows whose indices actually moved change content;
+                // everything below the cut keeps its key untouched.
+                let key = self.view(r).key();
+                self.keys[r] = key;
+                changed = true;
+            }
+        }
+        changed
+    }
+
     /// Clear all rows (the truly-stochastic FORGET).
     pub fn clear(&mut self) {
         self.indices.clear();
@@ -347,6 +399,20 @@ mod tests {
         // Store remains usable after emptying.
         s.push(&Constraint::nonneg(9), 2.0);
         assert_eq!(s.to_constraint(0), Constraint::nonneg(9));
+    }
+
+    #[test]
+    fn shift_indices_reoffsets_and_rekeys() {
+        let mut s = ConstraintStore::new();
+        s.push(&Constraint::cycle(2, &[3, 4]), 1.0); // entirely below the cut
+        s.push(&Constraint::cycle(10, &[11]), 2.0); // entirely above it
+        assert!(!s.shift_indices_from(8, 0), "delta 0 is a no-op");
+        // A variable range [5, 8) was removed: indices >= 8 slide by 3.
+        assert!(s.shift_indices_from(8, 3));
+        assert_eq!(s.to_constraint(0), Constraint::cycle(2, &[3, 4]));
+        assert_eq!(s.to_constraint(1), Constraint::cycle(7, &[8]));
+        assert_eq!(s.key_of(1), Constraint::cycle(7, &[8]).key(), "keys must follow content");
+        assert_eq!(s.z, vec![1.0, 2.0], "duals untouched by the relabeling");
     }
 
     #[test]

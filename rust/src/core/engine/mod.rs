@@ -114,6 +114,19 @@ pub trait SweepExecutor<F: BregmanFunction> {
         let _ = (map, instance, generation_before, generation_after);
     }
 
+    /// Fleet re-offset notification: the active set's variable indices
+    /// were uniformly relabeled (a block's coordinate range was removed
+    /// from the concatenated vector and the tail slid down — the
+    /// `Session` eviction/compaction path). Slot ids, row order and
+    /// support-disjointness are all preserved by the injective
+    /// relabeling, so an executor holding a plan keyed to (`instance`,
+    /// `generation_before`) may simply adopt `generation_after` instead
+    /// of replanning. The default does nothing — a stale plan is then
+    /// rebuilt lazily at the next sweep, which is always correct.
+    fn after_reoffset(&mut self, instance: u64, generation_before: u64, generation_after: u64) {
+        let _ = (instance, generation_before, generation_after);
+    }
+
     /// Human-readable name for traces and benches.
     fn name(&self) -> &'static str;
 }
@@ -252,6 +265,40 @@ mod tests {
         }
         assert_eq!(s1.projections, s2.projections);
         assert!((s1.dual_movement - s2.dual_movement).abs() < 1e-15);
+    }
+
+    #[test]
+    fn reoffset_adoption_keeps_plan_current() {
+        // Rows living above a coordinate range that gets removed: after
+        // the uniform index shift the plan's shards (slot ids) are
+        // structurally unchanged, so after_reoffset must adopt the new
+        // generation instead of forcing a replan.
+        let mut active = ActiveSet::new();
+        for c in 0..6u32 {
+            let base = 8 + c * 3;
+            let slot = active.insert(&Constraint::cycle(base, &[base + 1, base + 2]));
+            active.set_z(slot, 1.0);
+        }
+        let f = DiagonalQuadratic::unweighted(vec![0.5; 30]);
+        let mut x = vec![0.5; 30];
+        let mut exec = ShardedSweep::new(2);
+        SweepExecutor::<DiagonalQuadratic>::sweep(&mut exec, &f, &mut x, &mut active);
+        assert!(exec.plan().is_current(&active), "sweep must leave a current plan");
+        // Variable range [0, 8) removed from the fleet vector.
+        let (before, after) = active.shift_indices_from(8, 8);
+        assert_ne!(before, after);
+        assert!(!exec.plan().is_current(&active), "the shift staled the plan's key");
+        SweepExecutor::<DiagonalQuadratic>::after_reoffset(
+            &mut exec,
+            active.instance_id(),
+            before,
+            after,
+        );
+        assert!(exec.plan().is_current(&active), "adoption must revalidate the plan");
+        // A foreign instance must NOT be adopted: a fake further bump
+        // under a wrong id would re-key the plan off the real set.
+        SweepExecutor::<DiagonalQuadratic>::after_reoffset(&mut exec, 0xdead, after, after + 1);
+        assert!(exec.plan().is_current(&active), "foreign adoption must be ignored");
     }
 
     #[test]

@@ -182,6 +182,15 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         }
     }
 
+    fn after_reoffset(&mut self, instance: u64, generation_before: u64, generation_after: u64) {
+        // An injective index relabeling keeps slot ids and disjointness;
+        // a plan built against the pre-reoffset generation of this exact
+        // set stays structurally valid and just adopts the new key.
+        if self.plan.instance() == instance && self.plan.generation() == generation_before {
+            self.plan.adopt_generation(generation_after);
+        }
+    }
+
     fn name(&self) -> &'static str {
         "sharded-parallel"
     }

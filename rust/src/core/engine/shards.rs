@@ -158,6 +158,16 @@ impl ShardPlan {
         self.instance = active.instance_id();
     }
 
+    /// Adopt a new generation without replanning. Valid ONLY when the
+    /// membership change behind the bump kept every slot id, the row
+    /// order, and pairwise support-disjointness intact — i.e. a uniform
+    /// injective relabeling of the variable indices (the `Session`
+    /// fleet's block-removal re-offset). Shards store slot ids, not
+    /// indices, so the plan's structure is untouched by such a change.
+    pub fn adopt_generation(&mut self, generation: u64) {
+        self.generation = generation;
+    }
+
     /// Cheap update after FORGET: rewrite every row id through the
     /// stable-slot compaction `map` (`SLOT_DROPPED` = forgotten), drop
     /// emptied shards, and adopt the post-compaction `generation`.

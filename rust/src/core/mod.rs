@@ -34,5 +34,5 @@ pub use problem::{
     CancelToken, Handle, Lowered, Problem, RoundProblem, SessionSummary, SolveEvent,
     SolveOptions, VectorPart,
 };
-pub use session::{Checkpoint, Session};
+pub use session::{BlockCheckpoint, Checkpoint, Session};
 pub use solver::{IterStats, PhaseTimes, Solver, SolverConfig, SolverResult};

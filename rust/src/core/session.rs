@@ -34,6 +34,19 @@
 //! ([`Solver::project_sweep_recorded`]) — observation only, the sweep's
 //! arithmetic is untouched, and restricting the recorded movements to
 //! one block reproduces that block's solo sums bit for bit.
+//!
+//! # Dynamic fleets (the serving layer)
+//!
+//! The fleet is not fixed at build time: [`Session::admit`] joins a new
+//! block to a *running* session between rounds (the concatenated vector
+//! grows; nothing else moves), [`Session::evict`] checkpoints and
+//! detaches a live block into a [`BlockCheckpoint`] (its coordinate
+//! range is compacted out and everything above it re-offsets uniformly,
+//! with the shard plan surviving through the stable-slot FORGET map and
+//! the executor's `after_reoffset` adoption), and
+//! [`Session::admit_resumed`] continues an evicted block bit-identically
+//! to never having been interrupted. `serve::Scheduler` drives these
+//! from a job queue with priorities and checkpoint-based preemption.
 
 use super::active_set::ActiveSet;
 use super::bregman::DiagonalQuadratic;
@@ -270,6 +283,63 @@ impl Checkpoint {
     }
 }
 
+/// The resumable state of ONE block detached from a live session by
+/// [`Session::evict`] — the serving layer's preemption token. For a
+/// vector block it carries the block's slice of the iterate, its
+/// remembered rows re-based to block-local indices (with duals), and
+/// the per-block accounting; for a round-driven block, the problem's
+/// own snapshot. Feed it back through [`Session::admit_resumed`] (same
+/// problem, same options — in the same session or a different one) and
+/// the block continues bit-identically to never having been preempted.
+#[derive(Clone)]
+pub struct BlockCheckpoint {
+    inner: BlockCkptInner,
+}
+
+#[derive(Clone)]
+enum BlockCkptInner {
+    Vector {
+        x: Vec<f64>,
+        rows: Vec<(Constraint, f64)>,
+        iterations: usize,
+        projections: usize,
+        last_dual_movement: f64,
+        trace: Vec<IterStats>,
+        phases: PhaseTimes,
+    },
+    Round {
+        state: RoundSnapshot,
+        iterations: usize,
+        projections: usize,
+    },
+}
+
+impl BlockCheckpoint {
+    /// Rounds the block had run when it was evicted.
+    pub fn iterations(&self) -> usize {
+        match &self.inner {
+            BlockCkptInner::Vector { iterations, .. } => *iterations,
+            BlockCkptInner::Round { iterations, .. } => *iterations,
+        }
+    }
+
+    /// Projections the block had performed when it was evicted.
+    pub fn projections(&self) -> usize {
+        match &self.inner {
+            BlockCkptInner::Vector { projections, .. } => *projections,
+            BlockCkptInner::Round { projections, .. } => *projections,
+        }
+    }
+
+    /// Remembered constraints captured (vector blocks; 0 otherwise).
+    pub fn remembered(&self) -> usize {
+        match &self.inner {
+            BlockCkptInner::Vector { rows, .. } => rows.len(),
+            BlockCkptInner::Round { .. } => 0,
+        }
+    }
+}
+
 impl<'a> Session<'a> {
     pub fn new(opts: SolveOptions) -> Session<'a> {
         Session {
@@ -373,17 +443,38 @@ impl<'a> Session<'a> {
         let mut session = Session::new(opts);
         let handle = session.add(problem);
         session.run();
-        session.take(handle)
+        session.take_unwrap(handle)
     }
 
-    /// Redeem a handle's typed output. Panics before the session
-    /// finished, on double-take, or on a foreign handle.
-    pub fn take<T: 'static>(&mut self, handle: Handle<T>) -> T {
-        assert!(self.finished, "Session::take before the session finished");
-        let boxed = self.outputs[handle.idx]
-            .take()
-            .expect("Session::take: output already taken");
-        *boxed.downcast::<T>().expect("Session::take: handle type mismatch")
+    /// Redeem a handle's typed output. Returns `None` while the block
+    /// has not finished yet (or after the output was already taken) —
+    /// the serving paths poll this on live sessions, where a preempted
+    /// or still-running job must not panic the scheduler. A finished
+    /// block's output is available as soon as its [`SolveEvent::BlockDone`]
+    /// fired, even while other blocks keep running. Still panics on a
+    /// handle whose type does not match (a programming error, not a
+    /// runtime state).
+    pub fn take<T: 'static>(&mut self, handle: Handle<T>) -> Option<T> {
+        let boxed = self.outputs.get_mut(handle.idx)?.take()?;
+        Some(*boxed.downcast::<T>().expect("Session::take: handle type mismatch"))
+    }
+
+    /// [`Session::take`] for callers that know the block finished:
+    /// panics on an unfinished (or already-taken) handle.
+    pub fn take_unwrap<T: 'static>(&mut self, handle: Handle<T>) -> T {
+        self.take(handle)
+            .expect("Session::take_unwrap: block not finished yet (or output already taken)")
+    }
+
+    /// Has this handle's block reached its stop rule? (Also true once
+    /// the output was taken; false for a block evicted from the
+    /// session.)
+    pub fn block_done(&self, index: usize) -> bool {
+        if self.outputs.get(index).is_some_and(|o| o.is_some()) {
+            return true;
+        }
+        self.blocks.iter().any(|b| b.handle == index && b.done)
+            || self.rounds.iter().any(|r| r.handle == index && r.done)
     }
 
     fn notify(&mut self, event: &SolveEvent) {
@@ -1022,6 +1113,304 @@ impl<'a> Session<'a> {
         // the next step re-derives it bit-identically.
         self.pending = None;
         self.clock = Some(Stopwatch::new());
+    }
+
+    // -----------------------------------------------------------------
+    // Dynamic fleet surgery (the serving layer's admission, preemption
+    // and compaction paths). All three operations happen only *between*
+    // rounds, where the solve state is exactly a post-FORGET snapshot.
+    // -----------------------------------------------------------------
+
+    /// Admit one problem into the session — before OR after stepping
+    /// started. Before the first `step`/`run` this is [`Session::add`];
+    /// afterwards the block joins the *running* fleet dynamically: the
+    /// concatenated variable vector grows by the block's coordinates
+    /// (started at the block's own unconstrained minimiser, exactly as a
+    /// fresh solo solve), existing blocks' offsets, rows and duals are
+    /// untouched, and a cached shard plan stays warm (membership did not
+    /// change — the new block's rows only arrive with its first oracle
+    /// round). The admitted block's trajectory is bit-identical to its
+    /// solo solve (pinned in `tests/determinism.rs`).
+    ///
+    /// Panics when admitting a vector block mid-solve into an overlapped
+    /// session (the overlap pipeline is single-block), or when the new
+    /// block's structural knobs (`inner_sweeps`, `z_tol`) disagree with
+    /// the running fleet's.
+    pub fn admit<P: Problem<'a>>(&mut self, problem: P) -> Handle<P::Output> {
+        if !self.built {
+            return self.add(problem);
+        }
+        assert!(!self.cancelled, "Session::admit into a cancelled session");
+        let handle = self.outputs.len();
+        self.outputs.push(None);
+        match problem.lower(&self.opts) {
+            Lowered::Vector(part) => {
+                assert!(
+                    !self.opts.overlap,
+                    "mid-solve admission of vector blocks requires a non-overlapped \
+                     session (the overlap pipeline is single-block)"
+                );
+                if let Some(solver) = self.solver.as_ref() {
+                    assert_eq!(
+                        part.config.inner_sweeps, solver.config.inner_sweeps,
+                        "admitted block {:?} disagrees with the running fleet on inner_sweeps",
+                        part.name
+                    );
+                    assert!(
+                        part.config.z_tol == solver.config.z_tol,
+                        "admitted block {:?} disagrees with the running fleet on z_tol",
+                        part.name
+                    );
+                }
+                if self.solver.is_none() {
+                    // First vector block of a (previously round-only or
+                    // empty) built session: create the shared solver. As
+                    // in `build`, the session does its own per-block
+                    // trace/budget accounting.
+                    let mut cfg = part.config.clone();
+                    cfg.record_trace = false;
+                    cfg.projection_budget = None;
+                    self.solver =
+                        Some(Solver::new(DiagonalQuadratic::new(Vec::new(), Vec::new()), cfg));
+                }
+                let solver = self.solver.as_mut().expect("solver just ensured above");
+                let range = solver.append_variables(&part.f.d, &part.f.w);
+                self.offsets.push(range.end);
+                let interpret = part.interpret;
+                let erased: BoxedInterpret<'a> =
+                    Box::new(move |f, r| Box::new(interpret(f, r)) as Box<dyn Any>);
+                self.blocks.push(VectorBlock {
+                    name: part.name,
+                    f: part.f,
+                    oracle: part.oracle,
+                    config: part.config,
+                    interpret: Some(erased),
+                    handle,
+                    range,
+                    iterations: 0,
+                    converged: false,
+                    done: false,
+                    projections: 0,
+                    last_dual_movement: f64::INFINITY,
+                    trace: Vec::new(),
+                    phases: PhaseTimes::default(),
+                    result: None,
+                });
+            }
+            Lowered::Rounds(rp) => {
+                let name = rp.name();
+                self.rounds.push(RoundBlock {
+                    name,
+                    prob: Some(Box::new(RoundShim(rp))),
+                    handle,
+                    iterations: 0,
+                    projections: 0,
+                    done: false,
+                    converged: false,
+                    final_state: None,
+                });
+            }
+        }
+        self.finished = false;
+        Handle::new(handle)
+    }
+
+    /// Checkpoint-and-detach a *live* block (the serving layer's
+    /// preemption): its resumable state is captured into a
+    /// [`BlockCheckpoint`], its rows are dropped from the shared set,
+    /// and (for vector blocks) its coordinate range is compacted out of
+    /// the concatenated vector — every later block's offsets, and all
+    /// remembered indices above the range, slide down uniformly. The
+    /// relabeling is injective, so support-disjointness is preserved and
+    /// the shard plan survives through the stable-slot FORGET map plus
+    /// the [`SweepExecutor::after_reoffset`](crate::core::engine::SweepExecutor::after_reoffset)
+    /// adoption — no replan, and no block's own trajectory is perturbed.
+    ///
+    /// `index` is [`Handle::index`]. Panics if no live (not-done) block
+    /// has that handle, if the session is overlapped, or (round-driven
+    /// blocks) if the problem does not support checkpointing.
+    pub fn evict(&mut self, index: usize) -> BlockCheckpoint {
+        assert!(self.built, "Session::evict before the first step()");
+        if let Some(bi) = self.blocks.iter().position(|b| b.handle == index) {
+            assert!(
+                !self.blocks[bi].done,
+                "Session::evict: block {index} already finished — take() its output instead"
+            );
+            assert!(
+                !self.opts.overlap,
+                "evicting vector blocks from an overlapped session is not supported"
+            );
+            let (mut block, x, rows) = self.remove_vector_block(bi);
+            return BlockCheckpoint {
+                inner: BlockCkptInner::Vector {
+                    x,
+                    rows,
+                    iterations: block.iterations,
+                    projections: block.projections,
+                    last_dual_movement: block.last_dual_movement,
+                    trace: std::mem::take(&mut block.trace),
+                    phases: block.phases,
+                },
+            };
+        }
+        if let Some(ri) = self.rounds.iter().position(|r| r.handle == index) {
+            assert!(
+                !self.rounds[ri].done,
+                "Session::evict: block {index} already finished — take() its output instead"
+            );
+            let rb = self.rounds.remove(ri);
+            let prob = rb.prob.expect("live round block lost its problem");
+            let state = prob
+                .snapshot_erased()
+                .expect("this round-driven problem does not support checkpointing");
+            return BlockCheckpoint {
+                inner: BlockCkptInner::Round {
+                    state,
+                    iterations: rb.iterations,
+                    projections: rb.projections,
+                },
+            };
+        }
+        panic!("Session::evict: no live block with handle index {index}");
+    }
+
+    /// Re-admit a previously evicted block and restore its state: the
+    /// problem is lowered afresh (same problem, same options as the
+    /// original admission), its new coordinate range takes the
+    /// checkpointed iterate slice, and its remembered rows re-enter the
+    /// shared set — in their original relative order, re-based to the
+    /// new offset. Stepping on is bit-identical to the uninterrupted
+    /// solve (pinned in `tests/determinism.rs`).
+    pub fn admit_resumed<P: Problem<'a>>(
+        &mut self,
+        problem: P,
+        ck: &BlockCheckpoint,
+    ) -> Handle<P::Output> {
+        self.build();
+        let handle = self.admit(problem);
+        match &ck.inner {
+            BlockCkptInner::Vector {
+                x,
+                rows,
+                iterations,
+                projections,
+                last_dual_movement,
+                trace,
+                phases,
+            } => {
+                let b = self
+                    .blocks
+                    .last_mut()
+                    .expect("admit_resumed: vector checkpoint for a non-vector problem");
+                assert_eq!(
+                    b.handle, handle.idx,
+                    "admit_resumed: vector checkpoint for a non-vector problem"
+                );
+                assert_eq!(
+                    b.range.len(),
+                    x.len(),
+                    "admit_resumed: checkpoint dimension mismatch for block {:?}",
+                    b.name
+                );
+                b.iterations = *iterations;
+                b.projections = *projections;
+                b.last_dual_movement = *last_dual_movement;
+                b.trace = trace.clone();
+                b.phases = *phases;
+                let off = b.range.start as u32;
+                let range = b.range.clone();
+                let solver = self.solver.as_mut().expect("vector fleet not built");
+                solver.x[range].copy_from_slice(x);
+                let mut shifted = Constraint::new(Vec::new(), Vec::new(), 0.0);
+                for (c, z) in rows {
+                    shifted.indices.clear();
+                    shifted.indices.extend(c.indices.iter().map(|&i| i + off));
+                    shifted.coeffs.clear();
+                    shifted.coeffs.extend_from_slice(&c.coeffs);
+                    shifted.rhs = c.rhs;
+                    let slot = solver.active.insert(&shifted);
+                    solver.active.set_z(slot, *z);
+                }
+            }
+            BlockCkptInner::Round { state, iterations, projections } => {
+                let rb = self
+                    .rounds
+                    .last_mut()
+                    .expect("admit_resumed: round checkpoint for a non-round problem");
+                assert_eq!(
+                    rb.handle, handle.idx,
+                    "admit_resumed: round checkpoint for a non-round problem"
+                );
+                rb.iterations = *iterations;
+                rb.projections = *projections;
+                rb.prob
+                    .as_mut()
+                    .expect("live round block lost its problem")
+                    .restore_erased(state);
+            }
+        }
+        handle
+    }
+
+    /// Reclaim the coordinate ranges (and any leftover rows) of finished
+    /// vector blocks, and drop finished round-driven blocks. Long-running
+    /// serving calls this after completions so the concatenated vector
+    /// does not grow without bound; outputs stay redeemable through
+    /// [`Session::take`]. Returns the number of variables reclaimed.
+    pub fn compact_finished(&mut self) -> usize {
+        if !self.built {
+            return 0;
+        }
+        let mut reclaimed = 0;
+        while let Some(bi) = self.blocks.iter().position(|b| b.done) {
+            let (_block, x, _rows) = self.remove_vector_block(bi);
+            reclaimed += x.len();
+        }
+        self.rounds.retain(|r| !r.done);
+        reclaimed
+    }
+
+    /// Detach vector block `bi` from the fleet: capture its slice of the
+    /// iterate and its remembered rows (re-based to block-local indices,
+    /// in slot order), drop those rows through the stable-slot FORGET
+    /// path, then compact the block's coordinate range out of the
+    /// concatenated vector and re-offset every later block.
+    fn remove_vector_block(
+        &mut self,
+        bi: usize,
+    ) -> (VectorBlock<'a>, Vec<f64>, Vec<(Constraint, f64)>) {
+        let range = self.blocks[bi].range.clone();
+        let len = range.len();
+        let solver = self.solver.as_mut().expect("vector fleet not built");
+        let mut rows = Vec::new();
+        for r in 0..solver.active.len() {
+            let first = solver.active.view(r).indices[0] as usize;
+            if range.contains(&first) {
+                let mut c = solver.active.to_constraint(r);
+                for i in &mut c.indices {
+                    *i -= range.start as u32;
+                }
+                rows.push((c, solver.active.z(r)));
+                solver.active.set_z(r, 0.0);
+            }
+        }
+        if !rows.is_empty() {
+            // Post-round state is post-FORGET, so every *other* row has a
+            // nonzero (and > z_tol) dual: only this block's rows drop,
+            // and the shard plan follows through the stable-slot map.
+            solver.forget();
+        }
+        let x = solver.x[range.clone()].to_vec();
+        solver.remove_variable_range(range);
+        let block = self.blocks.remove(bi);
+        for b in &mut self.blocks[bi..] {
+            b.range = b.range.start - len..b.range.end - len;
+        }
+        self.offsets.remove(bi + 1);
+        for o in &mut self.offsets[bi + 1..] {
+            *o -= len;
+        }
+        (block, x, rows)
     }
 }
 

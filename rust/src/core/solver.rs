@@ -9,7 +9,7 @@
 //! tests verify directly.
 
 use super::active_set::ActiveSet;
-use super::bregman::BregmanFunction;
+use super::bregman::{BregmanFunction, DiagonalQuadratic};
 use super::constraint::Constraint;
 use super::engine::{self, SweepExecutor, SweepStrategy};
 use super::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
@@ -677,6 +677,57 @@ impl<F: BregmanFunction> Solver<F> {
             .zip(&atz)
             .map(|(&g, &az)| (g + az).abs())
             .fold(0.0, f64::max)
+    }
+}
+
+/// Dynamic-fleet surgery on the concatenated diagonal-quadratic vector
+/// (the `Session` admission/eviction paths). These are deliberately
+/// specialised to [`DiagonalQuadratic`]: block concatenation is only
+/// defined for the diagonal geometry, where appending/removing a
+/// coordinate range leaves every other coordinate's arithmetic
+/// untouched bit for bit.
+impl Solver<DiagonalQuadratic> {
+    /// Append a new variable block (anchors `d`, weights `w`) at the end
+    /// of the concatenated vector. The new coordinates start at the
+    /// block's unconstrained minimiser (`∇f = 0` there, exactly as a
+    /// fresh solo solve would), existing coordinates, duals and the
+    /// remembered rows are untouched — and since the active set's
+    /// membership did not change, a cached shard plan stays warm.
+    /// Returns the appended coordinate range.
+    pub fn append_variables(&mut self, d: &[f64], w: &[f64]) -> std::ops::Range<usize> {
+        let start = self.x.len();
+        let mut nd = std::mem::take(&mut self.f.d);
+        let mut nw = std::mem::take(&mut self.f.w);
+        nd.extend_from_slice(d);
+        nw.extend_from_slice(w);
+        self.f = DiagonalQuadratic::new(nd, nw);
+        self.x.extend_from_slice(d); // block-local argmin
+        start..self.x.len()
+    }
+
+    /// Remove a variable coordinate range from the concatenated vector
+    /// (a block was evicted or compacted away): the iterate and geometry
+    /// drop the range, and every remembered row's indices `>= range.end`
+    /// slide down by `range.len()`. The caller must already have removed
+    /// every row supported inside `range` (debug-asserted downstream).
+    /// The executor is notified through
+    /// [`SweepExecutor::after_reoffset`], so a current shard plan adopts
+    /// the relabeling instead of replanning.
+    pub fn remove_variable_range(&mut self, range: std::ops::Range<usize>) {
+        if range.is_empty() {
+            return;
+        }
+        let mut nd = std::mem::take(&mut self.f.d);
+        let mut nw = std::mem::take(&mut self.f.w);
+        nd.drain(range.clone());
+        nw.drain(range.clone());
+        self.f = DiagonalQuadratic::new(nd, nw);
+        self.x.drain(range.clone());
+        let (before, after) =
+            self.active.shift_indices_from(range.end as u32, range.len() as u32);
+        if before != after {
+            self.executor.after_reoffset(self.active.instance_id(), before, after);
+        }
     }
 }
 

@@ -36,6 +36,8 @@
 //!   [`core::session`] driver.
 //! - [`graph`] — CSR graphs, Dijkstra/APSP, instance generators.
 //! - [`problems`] — metric nearness, correlation clustering, ITML, SVM.
+//! - [`serve`] — long-running scheduler over [`core::Session`]: job
+//!   queue, mid-solve admission, checkpoint-based preemption.
 //! - [`baselines`] — every comparator in the paper's tables.
 //! - [`ml`] — datasets, kNN, Mahalanobis helpers.
 //! - [`coordinator`] — orchestration, metrics, PJRT batching.
@@ -50,4 +52,5 @@ pub mod ml;
 pub mod problems;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -6,6 +6,10 @@
 //! paf nearness  --n 300 --graph-type 1 [--mode onfind|collect] [--tol 1e-2]
 //!               [--sweep sequential|sharded|sharded:T] [--overlap]
 //! paf batch     --n 120 --k 4      # K nearness instances in ONE session
+//! paf serve     [--trace jobs.jsonl] [--capacity 4] [--inner-sweeps 2]
+//!               # replay a job trace through the long-running scheduler
+//!               # (mid-solve admission, priorities, checkpoint preemption);
+//!               # without --trace a built-in mixed demo trace runs
 //! paf cc        --graph ca-grqc [--sparse] [--gamma 1.0] [--scale 0.1]
 //! paf itml      --dataset banana [--projections 100000]
 //! paf svm       --n 100000 --d 100 --k 10 [--c 1000] [--epochs 5]
@@ -55,6 +59,7 @@ fn main() {
     match args.command.as_deref() {
         Some("nearness") => cmd_nearness(&args, seed),
         Some("batch") => cmd_batch(&args, seed),
+        Some("serve") => cmd_serve(&args, seed),
         Some("cc") => cmd_cc(&args, seed),
         Some("itml") => cmd_itml(&args, seed),
         Some("svm") => cmd_svm(&args, seed),
@@ -65,7 +70,7 @@ fn main() {
                 eprintln!("unknown command {o:?}\n");
             }
             eprintln!(
-                "usage: paf <nearness|batch|cc|itml|svm|oracle|runtime-info> [--flags]\n\
+                "usage: paf <nearness|batch|serve|cc|itml|svm|oracle|runtime-info> [--flags]\n\
                  see `rust/src/main.rs` docs for per-command flags"
             );
             std::process::exit(2);
@@ -162,7 +167,7 @@ fn cmd_batch(args: &Args, seed: u64) {
     let summary = session.run();
     let mut t = Table::new("nearness batch (one session)", &["instance", "iters", "objective"]);
     for (i, h) in handles.into_iter().enumerate() {
-        let res = session.take(h);
+        let res = session.take_unwrap(h);
         t.rowd(&[
             i.to_string(),
             res.result.iterations.to_string(),
@@ -176,6 +181,89 @@ fn cmd_batch(args: &Args, seed: u64) {
         report::fmt_time(clock.elapsed_s())
     );
     report::emit_table(&t, &format!("batch_nearness_n{n}_k{k}"));
+}
+
+/// `paf serve`: replay a job trace to completion through the
+/// long-running scheduler — one session fleet, jobs admitted mid-solve
+/// as they arrive, higher-priority arrivals preempting running jobs via
+/// checkpoints. Emits the per-job serving stats as schema-versioned
+/// JSON next to the CSV tables. `batch` users migrating to the serving
+/// story: a batch is just a trace whose jobs all arrive at round 0.
+fn cmd_serve(args: &Args, seed: u64) {
+    let mut opts = solve_options(args);
+    // All blocks of one session agree on inner_sweeps; mixed traces
+    // need it pinned (2 = the dense-CC default, fine for nearness too).
+    opts.inner_sweeps = Some(args.get_parsed_or("inner-sweeps", 2usize));
+    let jobs = match args.get("trace") {
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(text) => text,
+                Err(e) => {
+                    eprintln!("--trace {path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            match paf::serve::parse_job_trace(&text) {
+                Ok(jobs) => jobs,
+                Err(e) => {
+                    eprintln!("--trace {path}: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        None => {
+            println!("no --trace given: running the built-in mixed demo trace");
+            paf::serve::demo_trace(seed)
+        }
+    };
+    let capacity = args.get_parsed_or("capacity", 4usize);
+    println!("serve: {} jobs, capacity {capacity}", jobs.len());
+    let bank = paf::serve::JobBank::materialize(&jobs);
+    let cfg = paf::serve::ServeConfig { capacity, opts, ..Default::default() };
+    let clock = Stopwatch::new();
+    let mut scheduler = paf::serve::Scheduler::new(jobs, &bank, cfg);
+    scheduler.on_event(|event| match event {
+        paf::serve::ServeEvent::Admitted { round, job, resumed } => {
+            println!("  round {round:>4}: admit job {job}{}", if *resumed { " (resumed)" } else { "" })
+        }
+        paf::serve::ServeEvent::Preempted { round, job, rounds_done } => {
+            println!("  round {round:>4}: preempt job {job} after {rounds_done} rounds")
+        }
+        paf::serve::ServeEvent::Completed { round, job, converged } => {
+            println!("  round {round:>4}: job {job} completed (converged={converged})")
+        }
+        paf::serve::ServeEvent::Expired { round, job, rounds_done } => {
+            println!("  round {round:>4}: job {job} expired after {rounds_done} rounds")
+        }
+        paf::serve::ServeEvent::Idle { .. } => {}
+    });
+    let stats = scheduler.run();
+    println!(
+        "serve finished: {} rounds, {}/{} completed, {} preemptions, {}s wall",
+        stats.rounds,
+        stats.completed,
+        stats.jobs.len(),
+        stats.preemptions,
+        report::fmt_time(clock.elapsed_s())
+    );
+    let mut t = Table::new(
+        "serve",
+        &["job", "kind", "prio", "arrived", "done", "rounds", "preempt", "converged"],
+    );
+    for j in &stats.jobs {
+        t.rowd(&[
+            j.name.clone(),
+            j.kind.to_string(),
+            j.priority.to_string(),
+            j.arrival_round.to_string(),
+            j.completed_round.map(|r| r.to_string()).unwrap_or_else(|| "-".to_string()),
+            j.rounds_run.to_string(),
+            j.preemptions.to_string(),
+            j.converged.to_string(),
+        ]);
+    }
+    report::emit_table(&t, "serve");
+    let _ = paf::serve::emit_serve_json(&stats, "SERVE_trace");
 }
 
 fn cmd_cc(args: &Args, seed: u64) {

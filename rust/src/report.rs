@@ -22,9 +22,12 @@ pub fn emit_series(s: &Series, basename: &str) {
     s.emit(&report_dir(), basename);
 }
 
-/// Version of the solver-result JSON schema below. Bump on any
-/// field-shape change so downstream consumers can dispatch.
-pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 1;
+/// Version of the solver JSON schemas (the [`SolverResult`] shape below
+/// and the serve-stats shape in [`crate::serve::serve_stats_json`]).
+/// Bump on any field-shape change so downstream consumers can dispatch.
+/// v2: added the `"kind": "serve"` document (per-job serving stats +
+/// event stream); solver-result documents are unchanged in shape.
+pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 2;
 
 /// Serialise a [`SolverResult`] (with its per-phase timing breakdown
 /// and, when recorded, the full per-iteration trace) as JSON. `label`
@@ -67,18 +70,25 @@ pub fn solver_result_json(label: &str, r: &SolverResult) -> String {
     out
 }
 
+/// Persist a JSON document as `<basename>.json` under the report
+/// directory; returns the written path. Shared by the solver-result and
+/// serve-stats emitters.
+pub fn emit_json(basename: &str, text: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = std::path::Path::new(&dir).join(format!("{basename}.json"));
+    std::fs::write(&path, text)?;
+    println!("  wrote {}", path.display());
+    Ok(path)
+}
+
 /// Persist a solver result as `<basename>.json` under the report
 /// directory; returns the written path.
 pub fn emit_solver_json(
     r: &SolverResult,
     basename: &str,
 ) -> std::io::Result<std::path::PathBuf> {
-    let dir = report_dir();
-    std::fs::create_dir_all(&dir)?;
-    let path = std::path::Path::new(&dir).join(format!("{basename}.json"));
-    std::fs::write(&path, solver_result_json(basename, r))?;
-    println!("  wrote {}", path.display());
-    Ok(path)
+    emit_json(basename, &solver_result_json(basename, r))
 }
 
 /// Format a seconds value like the paper's tables (3 significant-ish).

@@ -1,0 +1,173 @@
+//! Lowering jobs into a live [`Session`]: the owned instance arena and
+//! the typed-handle adapters the scheduler drives.
+//!
+//! `Session<'a>` borrows problem inputs for `'a`, so a long-running
+//! scheduler needs every job's instance to outlive the session. The
+//! [`JobBank`] materializes all instances of a trace up front (they are
+//! generated from the job specs, so this is cheap and deterministic);
+//! the scheduler then borrows the bank for the session's lifetime.
+//!
+//! Admission itself is [`Session::admit`] — mid-solve, between rounds —
+//! and resumption is [`Session::admit_resumed`] from the
+//! [`BlockCheckpoint`] captured at preemption. Both paths are
+//! bit-identical to an uninterrupted solo solve (see
+//! `tests/determinism.rs`).
+
+use super::queue::{Job, JobSpec};
+use crate::core::problem::{Handle, SolveOptions};
+use crate::core::session::{BlockCheckpoint, Session};
+use crate::core::solver::SolverResult;
+use crate::graph::generators::{
+    planted_signed, type1_complete, type2_complete, type3_complete, WeightedInstance,
+};
+use crate::graph::Graph;
+use crate::problems::correlation::{CcInstance, CcResult, Correlation};
+use crate::problems::metric_oracle::OracleMode;
+use crate::problems::nearness::{Nearness, NearnessResult};
+use crate::util::Rng;
+
+/// A materialized problem input.
+pub enum JobInput {
+    Nearness(WeightedInstance),
+    Cc(CcInstance),
+}
+
+impl JobSpec {
+    /// Generate this spec's problem instance (deterministic in the
+    /// spec: same spec, same instance, bit for bit).
+    pub fn materialize(&self) -> JobInput {
+        match self {
+            JobSpec::Nearness { n, graph_type, seed } => {
+                let mut rng = Rng::new(*seed);
+                let inst = match graph_type {
+                    2 => type2_complete(*n, &mut rng),
+                    3 => type3_complete(*n, &mut rng),
+                    _ => type1_complete(*n, &mut rng),
+                };
+                JobInput::Nearness(inst)
+            }
+            JobSpec::Correlation { n, clusters, flip, seed } => {
+                let mut rng = Rng::new(*seed);
+                let (sg, _) = planted_signed(Graph::complete(*n), *clusters, *flip, &mut rng);
+                JobInput::Cc(CcInstance::from_signed(&sg))
+            }
+        }
+    }
+}
+
+/// The owned arena of job inputs, index-aligned with the trace's jobs.
+pub struct JobBank {
+    inputs: Vec<JobInput>,
+}
+
+impl JobBank {
+    /// Materialize every job's instance.
+    pub fn materialize(jobs: &[Job]) -> JobBank {
+        JobBank { inputs: jobs.iter().map(|j| j.spec.materialize()).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    pub fn input(&self, job: usize) -> &JobInput {
+        &self.inputs[job]
+    }
+}
+
+/// A typed session handle for either job kind.
+#[derive(Debug, Clone, Copy)]
+pub enum JobHandle {
+    Nearness(Handle<NearnessResult>),
+    Cc(Handle<CcResult>),
+}
+
+impl JobHandle {
+    /// The underlying block index ([`Handle::index`]).
+    pub fn index(&self) -> usize {
+        match self {
+            JobHandle::Nearness(h) => h.index(),
+            JobHandle::Cc(h) => h.index(),
+        }
+    }
+}
+
+/// What a completed job hands back to the scheduler: the full
+/// [`SolverResult`] (bit-comparable against a solo solve) plus the
+/// problem-level objective (nearness: ½‖x−d‖²_W; CC: the LP objective).
+pub struct JobOutcome {
+    pub result: SolverResult,
+    pub objective: f64,
+}
+
+/// Build the job's problem and admit it into the running session (the
+/// oracle runs in Collect mode: deterministic delivery, overlappable,
+/// shard-bucketed exactly when the sharded engine is selected).
+pub fn admit_job<'a>(session: &mut Session<'a>, job: &Job, input: &'a JobInput) -> JobHandle {
+    match (&job.spec, input) {
+        (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => {
+            JobHandle::Nearness(session.admit(Nearness::new(inst).mode(OracleMode::Collect)))
+        }
+        (JobSpec::Correlation { seed, .. }, JobInput::Cc(inst)) => JobHandle::Cc(
+            session.admit(Correlation::dense(inst).mode(OracleMode::Collect).seed(*seed)),
+        ),
+        _ => panic!("job {} spec does not match its bank input", job.id),
+    }
+}
+
+/// Re-admit a preempted job from its checkpoint (same problem, same
+/// options as the original admission).
+pub fn resume_job<'a>(
+    session: &mut Session<'a>,
+    job: &Job,
+    input: &'a JobInput,
+    ck: &BlockCheckpoint,
+) -> JobHandle {
+    match (&job.spec, input) {
+        (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => JobHandle::Nearness(
+            session.admit_resumed(Nearness::new(inst).mode(OracleMode::Collect), ck),
+        ),
+        (JobSpec::Correlation { seed, .. }, JobInput::Cc(inst)) => {
+            JobHandle::Cc(session.admit_resumed(
+                Correlation::dense(inst).mode(OracleMode::Collect).seed(*seed),
+                ck,
+            ))
+        }
+        _ => panic!("job {} spec does not match its bank input", job.id),
+    }
+}
+
+/// Redeem a finished job's typed output (None while it still runs).
+pub fn take_job(session: &mut Session<'_>, handle: JobHandle) -> Option<JobOutcome> {
+    match handle {
+        JobHandle::Nearness(h) => session
+            .take(h)
+            .map(|r| JobOutcome { objective: r.objective, result: r.result }),
+        JobHandle::Cc(h) => session
+            .take(h)
+            .map(|r| JobOutcome { objective: r.lp_objective, result: r.result }),
+    }
+}
+
+/// Solve one job alone — the reference trajectory the serve paths are
+/// pinned against, and the sequential baseline in `perf_hotpath` P8.
+pub fn solve_job_solo(job: &Job, input: &JobInput, opts: &SolveOptions) -> JobOutcome {
+    match (&job.spec, input) {
+        (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => {
+            let r = Session::solve_one(opts.clone(), Nearness::new(inst).mode(OracleMode::Collect));
+            JobOutcome { objective: r.objective, result: r.result }
+        }
+        (JobSpec::Correlation { seed, .. }, JobInput::Cc(inst)) => {
+            let r = Session::solve_one(
+                opts.clone(),
+                Correlation::dense(inst).mode(OracleMode::Collect).seed(*seed),
+            );
+            JobOutcome { objective: r.lp_objective, result: r.result }
+        }
+        _ => panic!("job {} spec does not match its bank input", job.id),
+    }
+}

@@ -1,0 +1,184 @@
+//! The serving subsystem: a long-running scheduler over
+//! [`Session`](crate::core::session::Session) with mid-solve admission
+//! and checkpoint-based preemption.
+//!
+//! The batch CLI solves jobs one at a time; this layer turns the same
+//! engine into a *service*. A [`Scheduler`] owns one session fleet and
+//! drives it round-by-round while a [`JobQueue`] feeds it: new jobs are
+//! admitted into the **running** fleet between rounds (the concatenated
+//! variable vector re-offsets dynamically), higher-priority arrivals
+//! preempt lower-priority running jobs by checkpointing and requeueing
+//! them, and every job's trajectory stays bit-identical to a solo solve.
+//! Per-job stats and the event stream are exported through the
+//! schema-versioned solver JSON
+//! ([`serve_stats_json`], schema v[`crate::report::SOLVER_JSON_SCHEMA_VERSION`]).
+//!
+//! Quick tour: [`queue`] — job specs, trace parsing, the priority
+//! queue; [`admission`] — the owned instance arena ([`JobBank`]) and
+//! typed-handle adapters; [`scheduler`] — the service loop.
+
+pub mod admission;
+pub mod queue;
+pub mod scheduler;
+
+pub use admission::{admit_job, resume_job, solve_job_solo, take_job, JobBank, JobHandle, JobInput, JobOutcome};
+pub use queue::{parse_job_trace, Job, JobQueue, JobSpec};
+pub use scheduler::{demo_trace, JobStats, Scheduler, ServeConfig, ServeEvent, ServeStats};
+
+use crate::report;
+
+/// Serialise a [`ServeStats`] as the schema-versioned serve JSON
+/// (`"kind": "serve"`; schema version shared with the solver-result
+/// JSON). `label` must not contain `"` or `\` (labels are
+/// code-controlled, as in [`report::solver_result_json`]).
+pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!(
+        "  \"schema_version\": {},\n",
+        report::SOLVER_JSON_SCHEMA_VERSION
+    ));
+    out.push_str("  \"kind\": \"serve\",\n");
+    out.push_str(&format!("  \"label\": \"{label}\",\n"));
+    out.push_str(&format!("  \"rounds\": {},\n", stats.rounds));
+    out.push_str(&format!("  \"completed\": {},\n", stats.completed));
+    out.push_str(&format!("  \"preemptions\": {},\n", stats.preemptions));
+    out.push_str(&format!("  \"expired\": {},\n", stats.expired));
+    out.push_str("  \"jobs\": [\n");
+    for (k, j) in stats.jobs.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"id\": {k}, \"name\": \"{}\", \"kind\": \"{}\", \"priority\": {}, \
+             \"arrival_round\": {}, ",
+            queue::json_escape(&j.name),
+            j.kind,
+            j.priority,
+            j.arrival_round
+        ));
+        out.push_str(&format!(
+            "\"admitted_round\": {}, \"completed_round\": {}, ",
+            opt_num(j.admitted_round),
+            opt_num(j.completed_round)
+        ));
+        out.push_str(&format!(
+            "\"preemptions\": {}, \"rounds_run\": {}, \"projections\": {}, \
+             \"converged\": {}, \"expired\": {}, ",
+            j.preemptions, j.rounds_run, j.projections, j.converged, j.expired
+        ));
+        out.push_str(&format!(
+            "\"deadline_met\": {}, \"objective\": {}, ",
+            match j.deadline_met {
+                Some(b) => b.to_string(),
+                None => "null".to_string(),
+            },
+            match j.objective {
+                Some(v) => format!("{v:.9}"),
+                None => "null".to_string(),
+            }
+        ));
+        out.push_str(&format!(
+            "\"phases\": {{\"oracle_s\": {:.9}, \"sweep_s\": {:.9}, \"forget_s\": {:.9}}}}}{}\n",
+            j.phases.oracle_s,
+            j.phases.sweep_s,
+            j.phases.forget_s,
+            if k + 1 == stats.jobs.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"events\": [\n");
+    for (k, e) in stats.events.iter().enumerate() {
+        let body = match e {
+            ServeEvent::Admitted { round, job, resumed } => format!(
+                "\"event\": \"admitted\", \"round\": {round}, \"job\": {job}, \
+                 \"resumed\": {resumed}"
+            ),
+            ServeEvent::Preempted { round, job, rounds_done } => format!(
+                "\"event\": \"preempted\", \"round\": {round}, \"job\": {job}, \
+                 \"rounds_done\": {rounds_done}"
+            ),
+            ServeEvent::Completed { round, job, converged } => format!(
+                "\"event\": \"completed\", \"round\": {round}, \"job\": {job}, \
+                 \"converged\": {converged}"
+            ),
+            ServeEvent::Expired { round, job, rounds_done } => format!(
+                "\"event\": \"expired\", \"round\": {round}, \"job\": {job}, \
+                 \"rounds_done\": {rounds_done}"
+            ),
+            ServeEvent::Idle { round } => format!("\"event\": \"idle\", \"round\": {round}"),
+        };
+        out.push_str(&format!(
+            "    {{{body}}}{}\n",
+            if k + 1 == stats.events.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn opt_num(v: Option<usize>) -> String {
+    match v {
+        Some(v) => v.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+/// Persist serve stats as `<basename>.json` under the report directory.
+pub fn emit_serve_json(
+    stats: &ServeStats,
+    basename: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    report::emit_json(basename, &serve_stats_json(basename, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::solver::PhaseTimes;
+    use crate::runtime::json::Json;
+
+    #[test]
+    fn serve_json_is_parseable_and_versioned() {
+        let stats = ServeStats {
+            rounds: 7,
+            completed: 1,
+            preemptions: 1,
+            expired: 0,
+            jobs: vec![JobStats {
+                name: "near-a".to_string(),
+                kind: "nearness",
+                priority: 2,
+                arrival_round: 0,
+                admitted_round: Some(0),
+                completed_round: Some(7),
+                preemptions: 1,
+                rounds_run: 5,
+                projections: 123,
+                converged: true,
+                expired: false,
+                deadline_met: Some(true),
+                objective: Some(1.5),
+                phases: PhaseTimes { oracle_s: 0.1, sweep_s: 0.2, forget_s: 0.01 },
+                result: None,
+            }],
+            events: vec![
+                ServeEvent::Admitted { round: 0, job: 0, resumed: false },
+                ServeEvent::Preempted { round: 2, job: 0, rounds_done: 2 },
+                ServeEvent::Admitted { round: 3, job: 0, resumed: true },
+                ServeEvent::Completed { round: 7, job: 0, converged: true },
+            ],
+        };
+        let text = serve_stats_json("unit", &stats);
+        let json = Json::parse(&text).expect("invalid serve JSON");
+        assert_eq!(
+            json.get("schema_version").and_then(|v| v.as_usize()),
+            Some(report::SOLVER_JSON_SCHEMA_VERSION as usize)
+        );
+        assert_eq!(json.get("kind").and_then(|v| v.as_str()), Some("serve"));
+        let jobs = json.get("jobs").and_then(|j| j.as_arr()).expect("jobs array");
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].get("preemptions").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(jobs[0].get("deadline_met"), Some(&Json::Bool(true)));
+        let events = json.get("events").and_then(|e| e.as_arr()).expect("events array");
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[1].get("event").and_then(|v| v.as_str()), Some("preempted"));
+    }
+}

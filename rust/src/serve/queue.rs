@@ -1,0 +1,368 @@
+//! Job specifications and the priority queue feeding the scheduler.
+//!
+//! A [`Job`] names a problem instance (self-contained: synthetic
+//! generator + seed, so a trace file fully determines the workload), a
+//! priority, an arrival round, and optional per-job budgets. Traces are
+//! line-delimited JSON — one job object per line, `#` comments and
+//! blank lines ignored — parsed with the crate's offline JSON reader:
+//!
+//! ```text
+//! # mixed nearness + correlation-clustering trace
+//! {"problem": "nearness", "name": "near-a", "n": 40, "graph_type": 1,
+//!  "seed": 1, "priority": 0, "arrival_round": 0}
+//! {"problem": "cc", "name": "cc-b", "n": 24, "clusters": 3, "flip": 0.1,
+//!  "seed": 2, "priority": 5, "arrival_round": 3, "max_rounds": 400,
+//!  "deadline_rounds": 200}
+//! ```
+//!
+//! The [`JobQueue`] orders ready jobs by priority (higher first) with
+//! FIFO tie-breaking on enqueue order — fully deterministic, so a serve
+//! run is reproducible from its trace.
+
+use crate::runtime::json::Json;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What problem a job solves. Instances are generated, not stored, so
+/// job traces stay tiny and self-describing.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobSpec {
+    /// Metric nearness on a complete weighted graph (`graph_type` 1–3,
+    /// the paper's instance families).
+    Nearness { n: usize, graph_type: u8, seed: u64 },
+    /// Dense correlation clustering on a planted `K_n` with `clusters`
+    /// groups and sign-flip noise `flip`.
+    Correlation { n: usize, clusters: usize, flip: f64, seed: u64 },
+}
+
+impl JobSpec {
+    /// Short kind tag (`"nearness"` / `"cc"`, the trace vocabulary).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobSpec::Nearness { .. } => "nearness",
+            JobSpec::Correlation { .. } => "cc",
+        }
+    }
+}
+
+/// One unit of work for the scheduler.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// Position in the trace (and in the [`super::JobBank`]).
+    pub id: usize,
+    pub name: String,
+    pub spec: JobSpec,
+    /// Higher runs first; a strictly higher-priority arrival may preempt
+    /// a running lower-priority job when capacity is full.
+    pub priority: i64,
+    /// Scheduler round at which the job becomes available.
+    pub arrival_round: usize,
+    /// Per-job cap on solve rounds actually run (preemption time does
+    /// not count); the scheduler expires the job when exceeded.
+    pub max_rounds: Option<usize>,
+    /// Completion target, in scheduler rounds after arrival; purely
+    /// reported (`deadline_met` in the stats), never enforced.
+    pub deadline_rounds: Option<usize>,
+}
+
+/// Escape a string for embedding in a JSON string literal (quotes,
+/// backslashes, control characters) — job names are user-controlled.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Job {
+    /// The job as one trace line (the inverse of [`parse_job_trace`]).
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\"problem\": \"{}\", \"name\": \"{}\"",
+            self.spec.kind(),
+            json_escape(&self.name)
+        ));
+        match &self.spec {
+            JobSpec::Nearness { n, graph_type, seed } => {
+                s.push_str(&format!(
+                    ", \"n\": {n}, \"graph_type\": {graph_type}, \"seed\": {seed}"
+                ));
+            }
+            JobSpec::Correlation { n, clusters, flip, seed } => {
+                s.push_str(&format!(
+                    ", \"n\": {n}, \"clusters\": {clusters}, \"flip\": {flip}, \"seed\": {seed}"
+                ));
+            }
+        }
+        s.push_str(&format!(
+            ", \"priority\": {}, \"arrival_round\": {}",
+            self.priority, self.arrival_round
+        ));
+        if let Some(m) = self.max_rounds {
+            s.push_str(&format!(", \"max_rounds\": {m}"));
+        }
+        if let Some(d) = self.deadline_rounds {
+            s.push_str(&format!(", \"deadline_rounds\": {d}"));
+        }
+        s.push('}');
+        s
+    }
+}
+
+fn get_usize(obj: &Json, key: &str) -> Option<usize> {
+    obj.get(key).and_then(Json::as_usize)
+}
+
+fn get_f64(obj: &Json, key: &str) -> Option<f64> {
+    match obj.get(key) {
+        Some(Json::Num(v)) => Some(*v),
+        _ => None,
+    }
+}
+
+fn get_i64(obj: &Json, key: &str) -> Option<i64> {
+    match obj.get(key) {
+        Some(Json::Num(v)) if v.fract() == 0.0 => Some(*v as i64),
+        _ => None,
+    }
+}
+
+/// Parse a line-delimited JSON job trace (see the module docs for the
+/// format). Job ids are assigned by position.
+pub fn parse_job_trace(text: &str) -> Result<Vec<Job>, String> {
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let obj = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let id = jobs.len();
+        let kind = obj
+            .get("problem")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("line {}: missing \"problem\"", lineno + 1))?;
+        let n = get_usize(&obj, "n")
+            .ok_or_else(|| format!("line {}: missing \"n\"", lineno + 1))?;
+        // JSON numbers travel as f64: integers at or above 2^53 are not
+        // exactly representable, so a mangled seed would silently break
+        // the trace-determines-workload guarantee. Reject them.
+        let seed = match get_usize(&obj, "seed") {
+            Some(s) if s >= (1usize << 53) => {
+                return Err(format!(
+                    "line {}: \"seed\" {s} is not exactly representable as a JSON number \
+                     (seeds must be below 2^53)",
+                    lineno + 1
+                ))
+            }
+            Some(s) => s as u64,
+            None => id as u64,
+        };
+        let spec = match kind {
+            "nearness" => JobSpec::Nearness {
+                n,
+                graph_type: get_usize(&obj, "graph_type").unwrap_or(1) as u8,
+                seed,
+            },
+            "cc" => JobSpec::Correlation {
+                n,
+                clusters: get_usize(&obj, "clusters").unwrap_or(2),
+                flip: get_f64(&obj, "flip").unwrap_or(0.1),
+                seed,
+            },
+            other => {
+                return Err(format!(
+                    "line {}: unknown problem {other:?} (expected \"nearness\" or \"cc\")",
+                    lineno + 1
+                ))
+            }
+        };
+        let name = obj
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("{kind}-{id}"));
+        jobs.push(Job {
+            id,
+            name,
+            spec,
+            priority: get_i64(&obj, "priority").unwrap_or(0),
+            arrival_round: get_usize(&obj, "arrival_round").unwrap_or(0),
+            max_rounds: get_usize(&obj, "max_rounds"),
+            deadline_rounds: get_usize(&obj, "deadline_rounds"),
+        });
+    }
+    if jobs.is_empty() {
+        return Err("trace contains no jobs".to_string());
+    }
+    Ok(jobs)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Entry {
+    priority: i64,
+    /// Enqueue sequence number; earlier wins on equal priority.
+    seq: u64,
+    job: usize,
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap: higher priority first, then FIFO (lower seq first).
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The ready queue: jobs that have arrived (or were preempted) and wait
+/// for capacity. Deterministic priority order with FIFO tie-breaking.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    pub fn push(&mut self, job: usize, priority: i64) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { priority, seq, job });
+    }
+
+    /// Highest-priority ready job, if any.
+    pub fn pop(&mut self) -> Option<usize> {
+        self.heap.pop().map(|e| e.job)
+    }
+
+    /// Priority of the job [`JobQueue::pop`] would return.
+    pub fn peek_priority(&self) -> Option<i64> {
+        self.heap.peek().map(|e| e.priority)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_orders_by_priority_then_fifo() {
+        let mut q = JobQueue::new();
+        q.push(0, 1);
+        q.push(1, 5);
+        q.push(2, 1);
+        q.push(3, 5);
+        assert_eq!(q.peek_priority(), Some(5));
+        assert_eq!(q.pop(), Some(1), "higher priority first");
+        assert_eq!(q.pop(), Some(3), "FIFO within a priority");
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let jobs = vec![
+            Job {
+                id: 0,
+                name: "near-a".to_string(),
+                spec: JobSpec::Nearness { n: 40, graph_type: 1, seed: 1 },
+                priority: 0,
+                arrival_round: 0,
+                max_rounds: None,
+                deadline_rounds: Some(200),
+            },
+            Job {
+                id: 1,
+                name: "cc-b".to_string(),
+                spec: JobSpec::Correlation { n: 24, clusters: 3, flip: 0.1, seed: 2 },
+                priority: 5,
+                arrival_round: 3,
+                max_rounds: Some(400),
+                deadline_rounds: None,
+            },
+        ];
+        let text: String = format!(
+            "# comment line\n\n{}\n{}\n",
+            jobs[0].to_json_line(),
+            jobs[1].to_json_line()
+        );
+        let parsed = parse_job_trace(&text).expect("roundtrip parse");
+        assert_eq!(parsed.len(), 2);
+        for (a, b) in jobs.iter().zip(&parsed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.spec, b.spec);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.arrival_round, b.arrival_round);
+            assert_eq!(a.max_rounds, b.max_rounds);
+            assert_eq!(a.deadline_rounds, b.deadline_rounds);
+        }
+    }
+
+    #[test]
+    fn hostile_job_names_roundtrip_escaped() {
+        let job = Job {
+            id: 0,
+            name: "we\"ird\\name\twith\ncontrol".to_string(),
+            spec: JobSpec::Nearness { n: 5, graph_type: 1, seed: 0 },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: None,
+        };
+        let line = job.to_json_line();
+        crate::runtime::json::Json::parse(&line).expect("escaped line must be valid JSON");
+        let parsed = parse_job_trace(&(line + "\n")).expect("escaped trace must parse");
+        assert_eq!(parsed[0].name, job.name);
+    }
+
+    #[test]
+    fn seeds_at_or_above_2_pow_53_are_rejected() {
+        let line = "{\"problem\": \"nearness\", \"n\": 4, \"seed\": 9007199254740992}";
+        assert!(parse_job_trace(line).is_err(), "inexactly-representable seed must error");
+        let ok = parse_job_trace("{\"problem\": \"nearness\", \"n\": 4, \"seed\": 4503599627370496}")
+            .expect("2^52 is exact");
+        assert_eq!(ok[0].spec, JobSpec::Nearness { n: 4, graph_type: 1, seed: 1 << 52 });
+    }
+
+    #[test]
+    fn trace_defaults_and_errors() {
+        let jobs =
+            parse_job_trace("{\"problem\": \"nearness\", \"n\": 12}\n").expect("minimal job");
+        assert_eq!(jobs[0].name, "nearness-0");
+        assert_eq!(jobs[0].priority, 0);
+        assert_eq!(jobs[0].spec, JobSpec::Nearness { n: 12, graph_type: 1, seed: 0 });
+        assert!(parse_job_trace("").is_err(), "empty trace");
+        assert!(parse_job_trace("{\"problem\": \"qp\", \"n\": 3}").is_err(), "unknown kind");
+        assert!(parse_job_trace("{\"problem\": \"cc\"}").is_err(), "missing n");
+    }
+}

@@ -1,0 +1,471 @@
+//! The long-running service loop: one [`Session`] fleet, driven
+//! round-by-round while a job queue feeds it.
+//!
+//! Each scheduler round is: (1) **arrivals** — jobs whose
+//! `arrival_round` has come move into the ready queue; (2)
+//! **preemption** — while capacity is full and a strictly
+//! higher-priority job waits, the lowest-priority running job is
+//! checkpointed ([`Session::evict`]) and requeued; (3) **admission** —
+//! ready jobs fill free capacity in priority order, fresh jobs through
+//! [`Session::admit`], preempted ones through
+//! [`Session::admit_resumed`]; (4) one [`Session::step`] advances every
+//! running job by one PROJECT AND FORGET round — the fleet shares a
+//! single (optionally sharded) sweep, which is the point: sweep
+//! throughput is the scarce resource (Ruggles et al., 1901.10084), so
+//! the server amortizes one sweep across a *changing* fleet instead of
+//! solving jobs one at a time; (5) **completions** — finished blocks
+//! are redeemed, their stats recorded, and their coordinate ranges
+//! compacted out of the concatenated vector.
+//!
+//! Every admission, preemption and resumption happens between rounds,
+//! where the solve state is a post-FORGET snapshot, so each job's
+//! trajectory is bit-identical to its solo `Session::solve_one` run
+//! (pinned in `tests/determinism.rs`).
+
+use super::admission::{admit_job, resume_job, take_job, JobBank, JobHandle};
+use super::queue::{Job, JobQueue, JobSpec};
+use crate::core::problem::SolveOptions;
+use crate::core::session::{BlockCheckpoint, Session};
+use crate::core::solver::{PhaseTimes, SolverResult};
+
+/// Scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Maximum concurrently running jobs (fleet size).
+    pub capacity: usize,
+    /// Shared solve options. Mixed-kind traces must pin
+    /// `inner_sweeps` explicitly (all blocks of one session agree on it).
+    pub opts: SolveOptions,
+    /// Global safety valve on scheduler rounds.
+    pub max_service_rounds: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            capacity: 4,
+            opts: SolveOptions::new(),
+            max_service_rounds: 100_000,
+        }
+    }
+}
+
+/// The scheduler's event stream (also recorded in [`ServeStats`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServeEvent {
+    /// A job entered the running fleet (`resumed` = from a preemption
+    /// checkpoint).
+    Admitted { round: usize, job: usize, resumed: bool },
+    /// A running job was checkpointed and requeued to make room for a
+    /// higher-priority arrival.
+    Preempted { round: usize, job: usize, rounds_done: usize },
+    /// A job reached its stop rule; its output is redeemed.
+    Completed { round: usize, job: usize, converged: bool },
+    /// A job exceeded its own `max_rounds` budget and was dropped.
+    Expired { round: usize, job: usize, rounds_done: usize },
+    /// No job was runnable this round (waiting on future arrivals).
+    Idle { round: usize },
+}
+
+/// Per-job service record.
+#[derive(Debug, Clone)]
+pub struct JobStats {
+    pub name: String,
+    pub kind: &'static str,
+    pub priority: i64,
+    pub arrival_round: usize,
+    /// First admission round.
+    pub admitted_round: Option<usize>,
+    pub completed_round: Option<usize>,
+    pub preemptions: usize,
+    /// Solve rounds actually run (preempted waiting time excluded).
+    pub rounds_run: usize,
+    pub projections: usize,
+    pub converged: bool,
+    /// Dropped after exceeding its `max_rounds` budget.
+    pub expired: bool,
+    /// `completed_round − arrival_round ≤ deadline_rounds`, when a
+    /// deadline was set and the job completed.
+    pub deadline_met: Option<bool>,
+    pub objective: Option<f64>,
+    /// Accumulated per-phase timings of the job's own rounds.
+    pub phases: PhaseTimes,
+    /// The full per-job result (bit-comparable to a solo solve).
+    pub result: Option<SolverResult>,
+}
+
+/// What a serve run did, per job and overall.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Scheduler rounds driven (includes idle rounds).
+    pub rounds: usize,
+    pub completed: usize,
+    pub preemptions: usize,
+    pub expired: usize,
+    pub jobs: Vec<JobStats>,
+    pub events: Vec<ServeEvent>,
+}
+
+impl ServeStats {
+    /// Every job completed (none expired or left unfinished).
+    pub fn all_completed(&self) -> bool {
+        self.completed == self.jobs.len()
+    }
+}
+
+struct Running {
+    job: usize,
+    handle: JobHandle,
+    /// Scheduler round of this (re-)admission.
+    admitted_at: usize,
+    /// Solve rounds the job had already run when (re-)admitted.
+    base_rounds: usize,
+}
+
+/// The long-running scheduler over one [`Session`] fleet.
+pub struct Scheduler<'a> {
+    cfg: ServeConfig,
+    session: Session<'a>,
+    bank: &'a JobBank,
+    jobs: Vec<Job>,
+    /// Job ids sorted by `arrival_round` (stable), consumed in order.
+    arrivals: Vec<usize>,
+    next_arrival: usize,
+    ready: JobQueue,
+    running: Vec<Running>,
+    checkpoints: Vec<Option<BlockCheckpoint>>,
+    stats: ServeStats,
+    round: usize,
+    observers: Vec<Box<dyn FnMut(&ServeEvent) + 'a>>,
+}
+
+impl<'a> Scheduler<'a> {
+    /// Build a scheduler over a trace. `bank` must be the materialized
+    /// inputs of exactly these jobs ([`JobBank::materialize`]).
+    pub fn new(jobs: Vec<Job>, bank: &'a JobBank, cfg: ServeConfig) -> Scheduler<'a> {
+        assert!(cfg.capacity >= 1, "serve capacity must be at least 1");
+        assert_eq!(jobs.len(), bank.len(), "job trace and bank are misaligned");
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.id, i, "job ids must be positional (job {} has id {})", i, j.id);
+        }
+        let mixed = jobs
+            .windows(2)
+            .any(|w| std::mem::discriminant(&w[0].spec) != std::mem::discriminant(&w[1].spec));
+        assert!(
+            !mixed || cfg.opts.inner_sweeps.is_some(),
+            "mixed-kind job traces must pin SolveOptions::inner_sweeps (all blocks of one \
+             session agree on it; nearness defaults to 1, dense CC to 2)"
+        );
+        assert!(
+            !cfg.opts.overlap,
+            "the serve scheduler requires a non-overlapped session (admission and \
+             preemption are multi-block operations)"
+        );
+        let mut arrivals: Vec<usize> = (0..jobs.len()).collect();
+        arrivals.sort_by_key(|&j| jobs[j].arrival_round);
+        let stats = ServeStats {
+            rounds: 0,
+            completed: 0,
+            preemptions: 0,
+            expired: 0,
+            jobs: jobs
+                .iter()
+                .map(|j| JobStats {
+                    name: j.name.clone(),
+                    kind: j.spec.kind(),
+                    priority: j.priority,
+                    arrival_round: j.arrival_round,
+                    admitted_round: None,
+                    completed_round: None,
+                    preemptions: 0,
+                    rounds_run: 0,
+                    projections: 0,
+                    converged: false,
+                    expired: false,
+                    deadline_met: None,
+                    objective: None,
+                    phases: PhaseTimes::default(),
+                    result: None,
+                })
+                .collect(),
+            events: Vec::new(),
+        };
+        let checkpoints = (0..jobs.len()).map(|_| None).collect();
+        Scheduler {
+            session: Session::new(cfg.opts.clone()),
+            cfg,
+            bank,
+            jobs,
+            arrivals,
+            next_arrival: 0,
+            ready: JobQueue::new(),
+            running: Vec::new(),
+            checkpoints,
+            stats,
+            round: 0,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Observe scheduler events as they happen.
+    pub fn on_event(&mut self, observer: impl FnMut(&ServeEvent) + 'a) {
+        self.observers.push(Box::new(observer));
+    }
+
+    fn emit(&mut self, event: ServeEvent) {
+        for obs in &mut self.observers {
+            obs(&event);
+        }
+        self.stats.events.push(event);
+    }
+
+    /// The running job to preempt: lowest priority; ties prefer the most
+    /// recently admitted (its warm state is smallest), then the highest
+    /// block index — fully deterministic.
+    fn pick_victim(&self) -> Option<usize> {
+        (0..self.running.len()).min_by_key(|&i| {
+            let r = &self.running[i];
+            (
+                self.jobs[r.job].priority,
+                std::cmp::Reverse(r.admitted_at),
+                std::cmp::Reverse(r.handle.index()),
+            )
+        })
+    }
+
+    fn preempt(&mut self, vi: usize) {
+        let victim = self.running.remove(vi);
+        let ck = self.session.evict(victim.handle.index());
+        let rounds_done = ck.iterations();
+        let job = victim.job;
+        self.stats.jobs[job].preemptions += 1;
+        self.stats.jobs[job].rounds_run = rounds_done;
+        self.stats.jobs[job].projections = ck.projections();
+        self.stats.preemptions += 1;
+        self.checkpoints[job] = Some(ck);
+        self.ready.push(job, self.jobs[job].priority);
+        self.emit(ServeEvent::Preempted { round: self.round, job, rounds_done });
+    }
+
+    fn admit(&mut self, job: usize) {
+        let ck = self.checkpoints[job].take();
+        let resumed = ck.is_some();
+        let handle = match ck {
+            Some(ck) => resume_job(&mut self.session, &self.jobs[job], self.bank.input(job), &ck),
+            None => admit_job(&mut self.session, &self.jobs[job], self.bank.input(job)),
+        };
+        let base_rounds = self.stats.jobs[job].rounds_run;
+        if self.stats.jobs[job].admitted_round.is_none() {
+            self.stats.jobs[job].admitted_round = Some(self.round);
+        }
+        self.running.push(Running { job, handle, admitted_at: self.round, base_rounds });
+        self.emit(ServeEvent::Admitted { round: self.round, job, resumed });
+    }
+
+    /// Drive the trace to completion (all jobs completed or expired, all
+    /// arrivals consumed) and return the service record.
+    pub fn run(mut self) -> ServeStats {
+        loop {
+            // 1. Arrivals.
+            while self.next_arrival < self.arrivals.len()
+                && self.jobs[self.arrivals[self.next_arrival]].arrival_round <= self.round
+            {
+                let job = self.arrivals[self.next_arrival];
+                self.next_arrival += 1;
+                self.ready.push(job, self.jobs[job].priority);
+            }
+
+            // 2+3. Preemption and admission, interleaved until stable:
+            // admit into free capacity; when full, preempt only if the
+            // best waiting job has strictly higher priority than the
+            // victim. Each preempt+admit pair strictly raises the
+            // running fleet's priority multiset, so this terminates.
+            loop {
+                if self.running.len() < self.cfg.capacity {
+                    match self.ready.pop() {
+                        Some(job) => {
+                            self.admit(job);
+                            continue;
+                        }
+                        None => break,
+                    }
+                }
+                let Some(best) = self.ready.peek_priority() else { break };
+                match self.pick_victim() {
+                    Some(vi) if best > self.jobs[self.running[vi].job].priority => {
+                        self.preempt(vi)
+                    }
+                    _ => break,
+                }
+            }
+
+            // 4. One fleet round (or an idle round while waiting).
+            if self.running.is_empty() {
+                if self.ready.is_empty() && self.next_arrival == self.arrivals.len() {
+                    break;
+                }
+                self.emit(ServeEvent::Idle { round: self.round });
+                self.round += 1;
+                if self.round >= self.cfg.max_service_rounds {
+                    break;
+                }
+                continue;
+            }
+            self.session.step();
+            self.round += 1;
+
+            // 5. Completions, then per-job round budgets.
+            let mut i = 0;
+            while i < self.running.len() {
+                let (job, handle, base_rounds, admitted_at) = {
+                    let r = &self.running[i];
+                    (r.job, r.handle, r.base_rounds, r.admitted_at)
+                };
+                if self.session.block_done(handle.index()) {
+                    let outcome = take_job(&mut self.session, handle)
+                        .expect("finished block lost its output");
+                    let deadline_met = self.jobs[job]
+                        .deadline_rounds
+                        .map(|d| self.round - self.jobs[job].arrival_round <= d);
+                    let converged = outcome.result.converged;
+                    let s = &mut self.stats.jobs[job];
+                    s.completed_round = Some(self.round);
+                    s.rounds_run = outcome.result.iterations;
+                    s.projections = outcome.result.total_projections;
+                    s.converged = converged;
+                    s.objective = Some(outcome.objective);
+                    s.phases = outcome.result.phases;
+                    s.deadline_met = deadline_met;
+                    s.result = Some(outcome.result);
+                    self.stats.completed += 1;
+                    self.running.remove(i);
+                    self.emit(ServeEvent::Completed { round: self.round, job, converged });
+                    continue;
+                }
+                let rounds_done = base_rounds + (self.round - admitted_at);
+                if self.jobs[job].max_rounds.is_some_and(|m| rounds_done >= m) {
+                    self.running.remove(i);
+                    let ck = self.session.evict(handle.index());
+                    let s = &mut self.stats.jobs[job];
+                    s.rounds_run = ck.iterations();
+                    s.projections = ck.projections();
+                    s.expired = true;
+                    self.stats.expired += 1;
+                    self.emit(ServeEvent::Expired {
+                        round: self.round,
+                        job,
+                        rounds_done: ck.iterations(),
+                    });
+                    continue;
+                }
+                i += 1;
+            }
+            // Reclaim finished blocks' coordinate ranges so the
+            // concatenated vector stays bounded by the *running* fleet.
+            self.session.compact_finished();
+
+            if self.round >= self.cfg.max_service_rounds {
+                break;
+            }
+        }
+        self.stats.rounds = self.round;
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::JobBank;
+
+    #[test]
+    fn job_round_budget_expires() {
+        // An unreachable tolerance with a 3-round budget: the scheduler
+        // must evict + expire the job instead of spinning forever.
+        let jobs = vec![Job {
+            id: 0,
+            name: "hopeless".to_string(),
+            spec: JobSpec::Nearness { n: 14, graph_type: 1, seed: 5 },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: Some(3),
+            deadline_rounds: Some(1),
+        }];
+        let bank = JobBank::materialize(&jobs);
+        let opts = SolveOptions::new().violation_tol(1e-14).dual_tol(1e-14).max_iters(10_000);
+        let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.completed, 0);
+        assert!(!stats.jobs[0].converged);
+        assert!(stats.jobs[0].expired);
+        assert_eq!(stats.jobs[0].rounds_run, 3);
+        assert!(stats.jobs[0].projections > 0, "expiry stats come from the checkpoint");
+        assert!(stats.events.iter().any(|e| matches!(e, ServeEvent::Expired { .. })));
+    }
+
+    #[test]
+    fn idle_rounds_bridge_arrival_gaps() {
+        // A single job arriving at round 5: the scheduler idles up to it,
+        // then completes it.
+        let jobs = vec![Job {
+            id: 0,
+            name: "late".to_string(),
+            spec: JobSpec::Nearness { n: 10, graph_type: 1, seed: 3 },
+            priority: 0,
+            arrival_round: 5,
+            max_rounds: None,
+            deadline_rounds: None,
+        }];
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 2,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            ..Default::default()
+        };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        assert!(stats.all_completed());
+        assert_eq!(
+            stats.events.iter().filter(|e| matches!(e, ServeEvent::Idle { .. })).count(),
+            5,
+            "rounds 0..5 must idle"
+        );
+        assert_eq!(stats.jobs[0].admitted_round, Some(5));
+    }
+}
+
+/// Generate the demo/example trace: a mixed nearness + CC workload with
+/// staggered arrivals, a priority spread, and one forced preemption (a
+/// high-priority CC job arrives while capacity is saturated by
+/// low-priority nearness jobs). Deterministic in `seed`.
+pub fn demo_trace(seed: u64) -> Vec<Job> {
+    vec![
+        Job {
+            id: 0,
+            name: "near-low".to_string(),
+            spec: JobSpec::Nearness { n: 26, graph_type: 1, seed },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: Some(400),
+        },
+        Job {
+            id: 1,
+            name: "near-mid".to_string(),
+            spec: JobSpec::Nearness { n: 22, graph_type: 2, seed: seed + 1 },
+            priority: 1,
+            arrival_round: 1,
+            max_rounds: None,
+            deadline_rounds: None,
+        },
+        Job {
+            id: 2,
+            name: "cc-urgent".to_string(),
+            spec: JobSpec::Correlation { n: 16, clusters: 3, flip: 0.1, seed: seed + 2 },
+            priority: 9,
+            arrival_round: 3,
+            max_rounds: Some(600),
+            deadline_rounds: Some(300),
+        },
+    ]
+}

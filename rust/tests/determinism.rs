@@ -20,7 +20,7 @@ use paf::core::solver::{Solver, SolverConfig, SolverResult};
 use paf::graph::generators::type1_complete;
 use paf::graph::Graph;
 use paf::problems::correlation::{solve_cc, CcConfig, CcInstance, CcResult, Correlation};
-use paf::problems::itml::{PfItml, PfItmlConfig};
+use paf::problems::itml::{solve_pf_itml, PfItml, PfItmlConfig};
 use paf::problems::metric_oracle::{MetricOracle, OracleMode};
 use paf::problems::nearness::{solve_nearness, Nearness, NearnessConfig};
 use paf::util::Rng;
@@ -233,7 +233,7 @@ fn session_stepwise_matches_one_shot_run() {
     let mut one_shot = Session::new(opts.clone());
     let h1 = one_shot.add(Nearness::new(&inst).mode(OracleMode::Collect));
     one_shot.run();
-    let res_run = one_shot.take(h1);
+    let res_run = one_shot.take_unwrap(h1);
     // Manual step() loop, counting events.
     let mut stepped = Session::new(opts);
     let h2 = stepped.add(Nearness::new(&inst).mode(OracleMode::Collect));
@@ -251,7 +251,7 @@ fn session_stepwise_matches_one_shot_run() {
             other => panic!("unexpected event: {other:?}"),
         }
     }
-    let res_step = stepped.take(h2);
+    let res_step = stepped.take_unwrap(h2);
     // The final round is reported through the Finished event, so N
     // iterations surface as N−1 Round returns + 1 Finished.
     assert_eq!(rounds + 1, res_step.result.iterations, "one Round event per iteration");
@@ -270,7 +270,7 @@ fn session_checkpoint_resume_is_bit_identical() {
         .map(|i| full.add(Nearness::new(i).mode(OracleMode::Collect)))
         .collect();
     full.run();
-    let reference: Vec<_> = hf.into_iter().map(|h| full.take(h)).collect();
+    let reference: Vec<_> = hf.into_iter().map(|h| full.take_unwrap(h)).collect();
     // Interrupted: three rounds, checkpoint, resume in a FRESH session.
     let mut first = Session::new(opts.clone());
     let _h: Vec<_> = insts
@@ -290,7 +290,7 @@ fn session_checkpoint_resume_is_bit_identical() {
     resumed.restore(&ck);
     resumed.run();
     for (h, want) in hr.into_iter().zip(&reference) {
-        let got = resumed.take(h);
+        let got = resumed.take_unwrap(h);
         assert_bit_identical(&want.result, &got.result, "checkpoint/resume");
         assert_eq!(want.objective, got.objective, "objective differs after resume");
     }
@@ -304,7 +304,7 @@ fn session_checkpoint_resume_overlapped_pipeline() {
     let mut full = Session::new(opts.clone());
     let h = full.add(Nearness::new(&inst).mode(OracleMode::Collect));
     full.run();
-    let reference = full.take(h);
+    let reference = full.take_unwrap(h);
     assert!(reference.result.converged);
     let mut first = Session::new(opts.clone());
     let _h = first.add(Nearness::new(&inst).mode(OracleMode::Collect));
@@ -316,7 +316,7 @@ fn session_checkpoint_resume_overlapped_pipeline() {
     let hr = resumed.add(Nearness::new(&inst).mode(OracleMode::Collect));
     resumed.restore(&ck);
     resumed.run();
-    let got = resumed.take(hr);
+    let got = resumed.take_unwrap(hr);
     assert_bit_identical(&reference.result, &got.result, "overlap checkpoint/resume");
 }
 
@@ -342,7 +342,7 @@ fn batch_of_k_instances_matches_individual_solves() {
         let summary = batch.run();
         assert!(summary.all_converged, "{sweep:?}: batch did not converge");
         for (k, (h, want)) in handles.into_iter().zip(&solo).enumerate() {
-            let got = batch.take(h);
+            let got = batch.take_unwrap(h);
             assert!(want.result.converged, "{sweep:?}: solo {k} did not converge");
             assert_bit_identical(
                 &want.result,
@@ -374,7 +374,7 @@ fn batch_of_cc_instances_matches_individual_solves() {
     let summary = batch.run();
     assert!(summary.all_converged);
     for (k, (h, want)) in handles.into_iter().zip(&solo).enumerate() {
-        let got: CcResult = batch.take(h);
+        let got: CcResult = batch.take_unwrap(h);
         assert_bit_identical(&want.result, &got.result, &format!("cc batch block {k}"));
         assert_eq!(want.labels, got.labels, "block {k}: rounding differs");
         assert_eq!(want.lp_objective, got.lp_objective, "block {k}: LP objective differs");
@@ -413,7 +413,7 @@ fn itml_is_deterministic_and_batches_bit_identically() {
         .collect();
     batch.run();
     for (k, (h, want)) in handles.into_iter().zip(&solo).enumerate() {
-        let got = batch.take(h);
+        let got = batch.take_unwrap(h);
         assert_eq!(want.m.a, got.m.a, "fold {k}: matrix differs");
         assert_eq!(want.projections, got.projections, "fold {k}: projections differ");
         assert_eq!(want.active_pairs, got.active_pairs, "fold {k}: active pairs differ");
@@ -436,7 +436,7 @@ fn itml_checkpoint_resume_is_bit_identical() {
     let h = resumed.add(PfItml::new(&data, cfg));
     resumed.restore(&ck);
     resumed.run();
-    let got = resumed.take(h);
+    let got = resumed.take_unwrap(h);
     assert_eq!(reference.m.a, got.m.a, "ITML resume diverged");
     assert_eq!(reference.projections, got.projections);
 }
@@ -456,8 +456,8 @@ fn mixed_vector_and_round_blocks_match_individual_solves() {
     let hn = session.add(Nearness::new(&inst).mode(OracleMode::Collect));
     let hi = session.add(PfItml::new(&data, icfg));
     session.run();
-    let got_near = session.take(hn);
-    let got_itml = session.take(hi);
+    let got_near = session.take_unwrap(hn);
+    let got_itml = session.take_unwrap(hi);
     assert_bit_identical(&solo_near.result, &got_near.result, "mixed session nearness");
     assert_eq!(solo_itml.m.a, got_itml.m.a, "mixed session ITML");
 }
@@ -480,10 +480,252 @@ fn cancellation_stops_at_round_boundary_with_partial_results() {
     assert!(summary.cancelled, "cancel token must stop the session");
     assert!(!summary.all_converged);
     assert!(session.is_finished());
-    let partial = session.take(h);
+    let partial = session.take_unwrap(h);
     assert!(!partial.result.converged);
     assert_eq!(partial.result.iterations, 2, "cancelled after round index 1");
     assert_eq!(partial.result.x.len(), inst.graph.num_edges());
+}
+
+// ---------------------------------------------------------------------
+// Serving-layer determinism (PR-4 tentpole): dynamic admission into a
+// RUNNING fleet, checkpoint-based preemption + resume, and the full
+// scheduler replaying a mixed trace — every job bit-identical to its
+// solo `Session::solve_one` run, under any PAF_THREADS (the CI matrix
+// runs this suite at 1 and 4).
+// ---------------------------------------------------------------------
+
+#[test]
+fn mid_solve_admission_is_bit_identical_to_solo() {
+    // Block A runs 3 rounds alone, then B is admitted into the RUNNING
+    // session; both must match their solo solves bit for bit — for the
+    // sequential executor and the sharded fleet sweep.
+    let mut rng = Rng::new(80);
+    let inst_a = type1_complete(13, &mut rng);
+    let inst_b = type1_complete(11, &mut rng);
+    for sweep in [SweepStrategy::Sequential, SweepStrategy::ShardedParallel { threads: 4 }] {
+        let opts = session_opts(sweep, false, 1e-6);
+        let solo_a = Nearness::new(&inst_a).mode(OracleMode::Collect).solve(&opts);
+        let solo_b = Nearness::new(&inst_b).mode(OracleMode::Collect).solve(&opts);
+        let mut session = Session::new(opts);
+        let ha = session.add(Nearness::new(&inst_a).mode(OracleMode::Collect));
+        for _ in 0..3 {
+            session.step();
+        }
+        let hb = session.admit(Nearness::new(&inst_b).mode(OracleMode::Collect));
+        session.run();
+        let got_a = session.take_unwrap(ha);
+        let got_b = session.take_unwrap(hb);
+        assert_bit_identical(
+            &solo_a.result,
+            &got_a.result,
+            &format!("in-flight block perturbed by admission ({sweep:?})"),
+        );
+        assert_bit_identical(
+            &solo_b.result,
+            &got_b.result,
+            &format!("block admitted at round 3 ({sweep:?})"),
+        );
+        assert_eq!(solo_b.objective, got_b.objective);
+    }
+}
+
+#[test]
+fn preempt_checkpoint_resume_is_bit_identical_to_uninterrupted() {
+    // A and B run together; after 2 rounds B is evicted (checkpoint),
+    // A keeps running (and finishes); B is later re-admitted from its
+    // checkpoint. Both must equal their solo solves bit for bit, so the
+    // eviction's re-offsetting (B's range compacted out while A is
+    // in flight, then B re-admitted at a NEW offset) is exact.
+    let mut rng = Rng::new(81);
+    let inst_a = type1_complete(12, &mut rng);
+    let inst_b = type1_complete(14, &mut rng);
+    for sweep in [SweepStrategy::Sequential, SweepStrategy::ShardedParallel { threads: 2 }] {
+        let opts = session_opts(sweep, false, 1e-6);
+        let solo_a = Nearness::new(&inst_a).mode(OracleMode::Collect).solve(&opts);
+        let solo_b = Nearness::new(&inst_b).mode(OracleMode::Collect).solve(&opts);
+        let mut session = Session::new(opts);
+        let ha = session.add(Nearness::new(&inst_a).mode(OracleMode::Collect));
+        let hb = session.add(Nearness::new(&inst_b).mode(OracleMode::Collect));
+        for _ in 0..2 {
+            session.step();
+        }
+        // Preempt A — the FIRST block, so the surviving in-flight B is
+        // re-offset down by A's range while holding live rows and duals.
+        let ck = session.evict(ha.index());
+        assert_eq!(ck.iterations(), 2);
+        assert!(ck.remembered() > 0, "a mid-solve nearness block should hold rows");
+        assert!(session.take(ha).is_none(), "evicted block must not have an output");
+        // B continues alone for a few rounds (it may even finish).
+        for _ in 0..3 {
+            session.step();
+        }
+        // Resume A from the checkpoint (at a NEW offset — B now sits at
+        // the front of the concatenated vector); run to completion.
+        let ha2 = session.admit_resumed(Nearness::new(&inst_a).mode(OracleMode::Collect), &ck);
+        session.run();
+        let got_a = session.take_unwrap(ha2);
+        let got_b = session.take_unwrap(hb);
+        assert_bit_identical(
+            &solo_b.result,
+            &got_b.result,
+            &format!("survivor block perturbed by eviction + re-offset ({sweep:?})"),
+        );
+        assert_bit_identical(
+            &solo_a.result,
+            &got_a.result,
+            &format!("preempted+resumed block ({sweep:?})"),
+        );
+    }
+}
+
+#[test]
+fn resume_into_a_fresh_session_is_bit_identical() {
+    // The checkpoint also restores across sessions (serve restarts).
+    let mut rng = Rng::new(82);
+    let inst = type1_complete(13, &mut rng);
+    let opts = session_opts(SweepStrategy::ShardedParallel { threads: 2 }, false, 1e-6);
+    let solo = Nearness::new(&inst).mode(OracleMode::Collect).solve(&opts);
+    let mut first = Session::new(opts.clone());
+    let h = first.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    for _ in 0..3 {
+        first.step();
+    }
+    let ck = first.evict(h.index());
+    let mut second = Session::new(opts);
+    let h2 = second.admit_resumed(Nearness::new(&inst).mode(OracleMode::Collect), &ck);
+    second.run();
+    let got = second.take_unwrap(h2);
+    assert_bit_identical(&solo.result, &got.result, "cross-session resume");
+}
+
+#[test]
+fn round_block_evict_resume_matches_uninterrupted() {
+    // Round-driven blocks (ITML) preempt through their own snapshots.
+    let mut rng = Rng::new(84);
+    let data = paf::ml::dataset::gaussian_mixture(80, 4, 2, 2.0, &mut rng);
+    let cfg = PfItmlConfig { max_projections: 3000, batch: 60, seed: 9, ..Default::default() };
+    let reference = PfItml::new(&data, cfg.clone()).solve(&SolveOptions::default());
+    let mut session = Session::new(SolveOptions::default());
+    let h = session.add(PfItml::new(&data, cfg.clone()));
+    for _ in 0..2 {
+        session.step();
+    }
+    let ck = session.evict(h.index());
+    assert_eq!(ck.iterations(), 2);
+    assert_eq!(ck.remembered(), 0, "round-driven checkpoints carry no vector rows");
+    let mut second = Session::new(SolveOptions::default());
+    let h2 = second.admit_resumed(PfItml::new(&data, cfg), &ck);
+    second.run();
+    let got = second.take_unwrap(h2);
+    assert_eq!(reference.m.a, got.m.a, "ITML evict/resume diverged");
+    assert_eq!(reference.projections, got.projections);
+}
+
+#[test]
+fn scheduler_replays_a_mixed_trace_with_preemption() {
+    use paf::serve::{JobBank, Scheduler, ServeConfig, ServeEvent};
+    // 3 jobs, capacity 2: two nearness jobs start, then a strictly
+    // higher-priority CC job arrives and must preempt the lower-priority
+    // running job. All three complete, every job's SolverResult is
+    // bit-identical to its solo solve, and the stats/events record the
+    // preemption and the resume.
+    let jobs = paf::serve::demo_trace(90);
+    assert_eq!(jobs[2].priority, 9, "trace job 2 must be the high-priority arrival");
+    let bank = JobBank::materialize(&jobs);
+    let opts = SolveOptions::new()
+        .violation_tol(1e-5)
+        .inner_sweeps(2)
+        .sweep(SweepStrategy::ShardedParallel { threads: 2 });
+    let solo: Vec<_> = jobs
+        .iter()
+        .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts))
+        .collect();
+    let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
+    let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+    assert!(stats.all_completed(), "all jobs must complete: {stats:?}");
+    assert!(stats.preemptions >= 1, "the high-priority arrival must preempt");
+    assert!(
+        stats.events.iter().any(|e| matches!(e, ServeEvent::Preempted { .. })),
+        "preemption must be in the event stream"
+    );
+    assert!(
+        stats
+            .events
+            .iter()
+            .any(|e| matches!(e, ServeEvent::Admitted { resumed: true, .. })),
+        "the preempted job must resume"
+    );
+    for (k, (s, want)) in stats.jobs.iter().zip(&solo).enumerate() {
+        assert!(s.converged, "job {k} did not converge under serving");
+        let got = s.result.as_ref().expect("completed job without result");
+        assert_bit_identical(&want.result, got, &format!("served job {k} vs solo"));
+        assert_eq!(s.objective, Some(want.objective), "job {k}: objective differs");
+        assert_eq!(s.rounds_run, want.result.iterations, "job {k}: rounds differ");
+        assert!(s.phases.total() > 0.0, "job {k}: phase timings missing");
+        assert!(s.admitted_round.is_some() && s.completed_round.is_some());
+    }
+    // The preempted job's stats must show the preemption.
+    assert!(
+        stats.jobs.iter().any(|s| s.preemptions > 0),
+        "some job must record a preemption"
+    );
+    // The serve JSON for this run parses and carries the per-job stats.
+    let text = paf::serve::serve_stats_json("trace", &stats);
+    let json = paf::runtime::json::Json::parse(&text).expect("serve JSON invalid");
+    assert_eq!(
+        json.get("completed").and_then(|v| v.as_usize()),
+        Some(3),
+        "serve JSON must report 3 completed jobs"
+    );
+    assert_eq!(
+        json.get("jobs").and_then(|j| j.as_arr()).map(|j| j.len()),
+        Some(3)
+    );
+}
+
+#[test]
+fn scheduler_is_deterministic_across_thread_counts() {
+    use paf::serve::{JobBank, Scheduler, ServeConfig};
+    let jobs = paf::serve::demo_trace(91);
+    let bank = JobBank::materialize(&jobs);
+    let mut reference: Option<Vec<SolverResult>> = None;
+    for threads in [1usize, 2, 8] {
+        let opts = SolveOptions::new()
+            .violation_tol(1e-5)
+            .inner_sweeps(2)
+            .sweep(SweepStrategy::ShardedParallel { threads });
+        let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        assert!(stats.all_completed());
+        let results: Vec<SolverResult> =
+            stats.jobs.iter().map(|s| s.result.clone().expect("missing result")).collect();
+        match &reference {
+            None => reference = Some(results),
+            Some(r) => {
+                for (k, (want, got)) in r.iter().zip(&results).enumerate() {
+                    assert_bit_identical(want, got, &format!("serve job {k} t={threads}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn take_is_none_before_done_and_after_double_take() {
+    let mut rng = Rng::new(83);
+    let inst = type1_complete(10, &mut rng);
+    let opts = session_opts(SweepStrategy::Sequential, false, 1e-8);
+    let mut session = Session::new(opts);
+    let h = session.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    assert!(session.take(h).is_none(), "take before any step must be None");
+    session.step();
+    if !session.block_done(h.index()) {
+        assert!(session.take(h).is_none(), "take before the block finished must be None");
+    }
+    session.run();
+    assert!(session.block_done(h.index()));
+    assert!(session.take(h).is_some());
+    assert!(session.take(h).is_none(), "double take must be None, not a panic");
 }
 
 #[test]
