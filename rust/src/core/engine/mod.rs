@@ -23,11 +23,19 @@
 //! a generation counter whenever membership changes, and FORGET hands the
 //! executor a stable-slot compaction map so a pure forget remaps the
 //! existing plan in O(rows) instead of replanning from scratch.
+//!
+//! The engine also feeds the separation oracle back: every sweep path
+//! can mark the coordinates it moved into a [`MovementTracker`]
+//! ([`SweepExecutor::sweep_tracked`]), which incremental oracles drain
+//! through the `ProjectionSink` movement seam to skip sources whose
+//! dependency ball saw no movement (see `problems::metric_oracle`).
 
+pub mod movement;
 pub mod sequential;
 pub mod sharded;
 pub mod shards;
 
+pub use movement::{MovementTracker, DEFAULT_MOVEMENT_LOG_CAPACITY};
 pub use sequential::SequentialSweep;
 pub use sharded::{parallel_min_rows_default, ShardedSweep, PARALLEL_MIN_ROWS};
 pub use shards::{ShardLimits, ShardPlan};
@@ -92,6 +100,32 @@ pub trait SweepExecutor<F: BregmanFunction> {
         record: &mut dyn FnMut(u32, f64),
     ) -> Option<SweepStats> {
         let _ = (f, x, active, record);
+        None
+    }
+
+    /// Movement-tracked sweep: like [`SweepExecutor::sweep`] (or, with
+    /// `record`, [`SweepExecutor::sweep_recorded`]), additionally
+    /// marking into `tracker` the support of every row whose projection
+    /// moved — at the executor's serial bookkeeping point, so the mark
+    /// order is the deterministic slot order and per-worker movement is
+    /// effectively merged at the shard barrier. Marks are a superset of
+    /// the coordinates whose value changed bit-wise (a nonzero dual step
+    /// may still round to a no-op write), which is the safe direction
+    /// for the incremental oracle's cache invalidation. Tracking is pure
+    /// observation: the sweep arithmetic is untouched.
+    ///
+    /// Returns `None` when the executor has no tracked path (the PJRT
+    /// batch adapter); the solver then permanently disables the tracker
+    /// so stale movement windows can never under-report.
+    fn sweep_tracked(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        tracker: &mut MovementTracker,
+        record: Option<&mut dyn FnMut(u32, f64)>,
+    ) -> Option<SweepStats> {
+        let _ = (f, x, active, tracker, record);
         None
     }
 
@@ -299,6 +333,56 @@ mod tests {
         // under a wrong id would re-key the plan off the real set.
         SweepExecutor::<DiagonalQuadratic>::after_reoffset(&mut exec, 0xdead, after, after + 1);
         assert!(exec.plan().is_current(&active), "foreign adoption must be ignored");
+    }
+
+    #[test]
+    fn tracked_sweep_marks_exactly_the_moved_supports() {
+        let dim = 64;
+        let mut rng = Rng::new(12);
+        let d: Vec<f64> = (0..dim).map(|_| rng.uniform(-1.0, 3.0)).collect();
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        let mut active = ActiveSet::new();
+        for c in 0..16u32 {
+            let base = c * 4;
+            let slot =
+                active.insert(&Constraint::cycle(base, &[base + 1, base + 2, base + 3]));
+            active.set_z(slot, rng.uniform(0.0, 0.5));
+        }
+        for strategy in
+            [SweepStrategy::Sequential, SweepStrategy::ShardedParallel { threads: 3 }]
+        {
+            let mut exec = executor_for::<DiagonalQuadratic>(strategy);
+            let mut x = d.clone();
+            let mut set = active.clone();
+            let mut tracker = MovementTracker::new(dim, true);
+            let cursor = tracker.cursor().unwrap();
+            let mut moved_rows: Vec<u32> = Vec::new();
+            let stats = exec
+                .sweep_tracked(
+                    &f,
+                    &mut x,
+                    &mut set,
+                    &mut tracker,
+                    Some(&mut |slot, _| moved_rows.push(slot)),
+                )
+                .expect("built-in executors must support tracked sweeps");
+            assert_eq!(stats.projections, moved_rows.len(), "{strategy:?}");
+            assert!(stats.projections > 0, "{strategy:?}: nothing moved");
+            // The tracker must hold exactly the union of the moved rows'
+            // supports — no more (untouched coords) and no less (every
+            // moved coordinate is in some moved row's support).
+            let mut expected: Vec<u32> = moved_rows
+                .iter()
+                .flat_map(|&r| set.view(r as usize).indices.to_vec())
+                .collect();
+            expected.sort_unstable();
+            expected.dedup();
+            let mut got = Vec::new();
+            assert!(tracker.moved_since(cursor, &mut got), "window must be covered");
+            got.sort_unstable();
+            got.dedup();
+            assert_eq!(expected, got, "{strategy:?}: marked set diverges");
+        }
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Per-round coordinate movement tracking — the sweep→oracle feedback
+//! channel of the incremental separation pipeline.
+//!
+//! Every projection that moves the iterate touches only its row's
+//! support, and the engine already knows exactly which rows moved (the
+//! serial dual bookkeeping of both executors). The [`MovementTracker`]
+//! turns that knowledge into a *coordinate dirty log*: an epoch-stamped
+//! bitmap (dedup within a sweep) feeding an append-only log of touched
+//! coordinates. Incremental oracles take a **cursor** into the log when
+//! they snapshot the iterate and later ask for every coordinate touched
+//! since — a superset of the coordinates whose value actually changed,
+//! which is the safe direction for cache invalidation.
+//!
+//! Correctness never *depends* on this tracker: consumers must hold a
+//! snapshot of the iterate they cached against and fall back to an exact
+//! element-wise diff whenever [`MovementTracker::moved_since`] declines
+//! (log window evicted, tracking disabled, coordinates relabeled). The
+//! tracker is the fast path that makes the common late-solve round — a
+//! handful of moved coordinates — O(moved) instead of O(m).
+//!
+//! Lifecycle hooks keep the log honest across the engine's structural
+//! operations: FORGET compaction renames *slots*, not coordinates, so it
+//! needs no hook; fleet growth ([`MovementTracker::resize`]) keeps old
+//! coordinates stable; an eviction's uniform relabeling
+//! ([`MovementTracker::remove_range`]) invalidates every outstanding
+//! cursor, because logged coordinates refer to the old labels.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+
+/// Default bound on logged coordinates (u32 each). When a round moves
+/// more than this, the oldest window is evicted and consumers with
+/// cursors before it fall back to their snapshot diff — which is the
+/// right trade: a round that moved millions of coordinates is a round
+/// where the incremental scan rescans nearly everything anyway.
+pub const DEFAULT_MOVEMENT_LOG_CAPACITY: usize = 1 << 20;
+
+/// Epoch-stamped coordinate dirty set with an append-only cursor log.
+/// Owned by the `Solver`, filled by all sweep paths (sequential, the
+/// sharded executor's serial bookkeeping barrier, and the engine sink's
+/// on-find / box projections), drained by incremental oracles through
+/// the `ProjectionSink` movement seam.
+#[derive(Debug)]
+pub struct MovementTracker {
+    enabled: bool,
+    /// `stamp[coord]` = epoch of the last mark (dedup within an epoch).
+    stamp: Vec<u64>,
+    epoch: u64,
+    /// Touched coordinates, oldest first; `log[0]` is absolute index
+    /// `log_start` in cursor space.
+    log: VecDeque<u32>,
+    log_start: u64,
+    /// Total marks ever appended — the cursor space.
+    appended: u64,
+    capacity: usize,
+}
+
+impl MovementTracker {
+    pub fn new(dim: usize, enabled: bool) -> MovementTracker {
+        MovementTracker {
+            enabled,
+            stamp: vec![0; dim],
+            epoch: 1,
+            log: VecDeque::new(),
+            log_start: 0,
+            appended: 0,
+            capacity: DEFAULT_MOVEMENT_LOG_CAPACITY,
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Permanently stop tracking (e.g. the configured sweep executor has
+    /// no tracked path, so the log would silently under-report).
+    /// Outstanding and future cursors all resolve to "not covered".
+    pub fn disable(&mut self) {
+        self.enabled = false;
+        self.log.clear();
+    }
+
+    /// Record that `coord`'s value may have changed. O(1); deduplicated
+    /// per epoch.
+    #[inline]
+    pub fn mark(&mut self, coord: u32) {
+        if !self.enabled {
+            return;
+        }
+        let c = coord as usize;
+        if c >= self.stamp.len() || self.stamp[c] == self.epoch {
+            return;
+        }
+        self.stamp[c] = self.epoch;
+        self.log.push_back(coord);
+        self.appended += 1;
+        if self.log.len() > self.capacity {
+            let drop = self.log.len() - self.capacity;
+            self.log.drain(..drop);
+            self.log_start += drop as u64;
+        }
+    }
+
+    /// Mark a whole support (the moved row's indices).
+    #[inline]
+    pub fn mark_slice(&mut self, coords: &[u32]) {
+        if !self.enabled {
+            return;
+        }
+        for &c in coords {
+            self.mark(c);
+        }
+    }
+
+    /// Start a new dedup epoch (the solver calls this once per sweep —
+    /// granularity only affects log size, never correctness: a
+    /// coordinate marked in two epochs appears twice, and consumers
+    /// treat the drained list as a set).
+    pub fn advance_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Cursor for "everything from now on" (`None` when disabled).
+    /// Take it at the moment the iterate is snapshotted.
+    pub fn cursor(&self) -> Option<u64> {
+        self.enabled.then_some(self.appended)
+    }
+
+    /// Take a cursor AND start a new dedup epoch. This is the form
+    /// consumers must use: epochs then never span a cursor, so a mark
+    /// after the cursor can only be suppressed by an earlier mark of
+    /// the same epoch — which is itself after the cursor — and the
+    /// drained window stays a true superset of the coordinates moved
+    /// since. (A plain [`MovementTracker::cursor`] taken mid-epoch
+    /// could silently lose a post-cursor re-movement of a coordinate
+    /// already stamped before it.)
+    pub fn take_cursor(&mut self) -> Option<u64> {
+        self.advance_epoch();
+        self.cursor()
+    }
+
+    /// Append every coordinate marked since `cursor` to `out` (possibly
+    /// with duplicates across epochs). Returns `false` — and appends
+    /// nothing — when the window is not covered: tracking disabled, the
+    /// log evicted past the cursor, or the cursor invalidated by a
+    /// relabeling. Callers must then fall back to an exact diff.
+    pub fn moved_since(&self, cursor: u64, out: &mut Vec<u32>) -> bool {
+        if !self.enabled || cursor < self.log_start || cursor > self.appended {
+            return false;
+        }
+        out.extend(self.log.iter().skip((cursor - self.log_start) as usize));
+        true
+    }
+
+    /// Coordinates marked in the current log window (diagnostics).
+    pub fn log_len(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Override the log budget (tests; the default is
+    /// [`DEFAULT_MOVEMENT_LOG_CAPACITY`]).
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity.max(1);
+    }
+
+    /// Fleet growth: new coordinates were appended to the variable
+    /// vector. Existing labels are untouched, so outstanding cursors
+    /// stay valid.
+    pub fn resize(&mut self, dim: usize) {
+        self.stamp.resize(dim, 0);
+    }
+
+    /// Fleet eviction: `range` was removed and every higher coordinate
+    /// slid down. Logged entries refer to the *old* labels, so every
+    /// outstanding cursor is invalidated (consumers diff instead).
+    pub fn remove_range(&mut self, range: Range<usize>) {
+        let range = range.start.min(self.stamp.len())..range.end.min(self.stamp.len());
+        self.stamp.drain(range);
+        self.epoch += 1;
+        self.invalidate();
+    }
+
+    /// Drop the log window so every *outstanding* cursor resolves to
+    /// "not covered" (restore/relabeling paths); cursors taken after
+    /// this call work normally.
+    pub fn invalidate(&mut self) {
+        self.log.clear();
+        self.appended += 1;
+        self.log_start = self.appended;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_flow_to_cursor_windows() {
+        let mut t = MovementTracker::new(10, true);
+        let c0 = t.cursor().unwrap();
+        t.mark(3);
+        t.mark(7);
+        t.mark(3); // same epoch: deduped
+        let mut out = Vec::new();
+        assert!(t.moved_since(c0, &mut out));
+        assert_eq!(out, vec![3, 7]);
+        // A later cursor sees only later marks.
+        let c1 = t.cursor().unwrap();
+        t.advance_epoch();
+        t.mark(3); // new epoch: logged again
+        out.clear();
+        assert!(t.moved_since(c1, &mut out));
+        assert_eq!(out, vec![3]);
+    }
+
+    #[test]
+    fn disabled_tracker_declines() {
+        let mut t = MovementTracker::new(4, false);
+        assert!(t.cursor().is_none());
+        t.mark(1);
+        let mut out = Vec::new();
+        assert!(!t.moved_since(0, &mut out));
+        // disable() mid-flight kills outstanding cursors too.
+        let mut t = MovementTracker::new(4, true);
+        let c = t.cursor().unwrap();
+        t.mark(1);
+        t.disable();
+        assert!(!t.moved_since(c, &mut out));
+        assert!(t.cursor().is_none());
+    }
+
+    #[test]
+    fn capacity_eviction_invalidates_old_cursors_only() {
+        let mut t = MovementTracker::new(100, true);
+        t.set_capacity(4);
+        let old = t.cursor().unwrap();
+        for i in 0..3 {
+            t.mark(i);
+        }
+        let recent = t.cursor().unwrap();
+        for i in 3..8 {
+            t.mark(i); // overflows the window; the oldest entries evict
+        }
+        let mut out = Vec::new();
+        assert!(!t.moved_since(old, &mut out), "evicted window must decline");
+        out.clear();
+        assert!(t.moved_since(recent, &mut out), "recent window still covered");
+        assert_eq!(out, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn invalidate_and_remove_range_kill_outstanding_cursors() {
+        let mut t = MovementTracker::new(10, true);
+        let c = t.cursor().unwrap();
+        t.mark(2);
+        t.invalidate();
+        let mut out = Vec::new();
+        assert!(!t.moved_since(c, &mut out), "invalidated window must decline");
+        let c2 = t.cursor().unwrap();
+        t.advance_epoch();
+        t.mark(5);
+        assert!(t.moved_since(c2, &mut out), "fresh cursors work after invalidate");
+        assert_eq!(out, vec![5]);
+        // remove_range: labels changed, so even fresh-looking windows die.
+        let c3 = t.cursor().unwrap();
+        t.remove_range(0..4);
+        out.clear();
+        assert!(!t.moved_since(c3, &mut out));
+        // The stamp vector shrank with the coordinate space.
+        t.advance_epoch();
+        t.mark(9); // now out of range (dim is 6): ignored, no panic
+        assert_eq!(t.log_len(), 0);
+        t.mark(5);
+        assert_eq!(t.log_len(), 1);
+    }
+
+    #[test]
+    fn take_cursor_starts_a_fresh_epoch() {
+        // Regression: a coordinate marked before the cursor and moved
+        // AGAIN after it must appear in the window. A plain cursor taken
+        // mid-epoch would let the dedup stamp suppress the re-mark.
+        let mut t = MovementTracker::new(8, true);
+        t.mark(3); // e.g. the round's first box pass
+        let c = t.take_cursor().unwrap();
+        t.mark(3); // the second box pass's rounding residue
+        let mut out = Vec::new();
+        assert!(t.moved_since(c, &mut out));
+        assert_eq!(out, vec![3], "post-cursor re-movement must be logged");
+    }
+
+    #[test]
+    fn resize_preserves_outstanding_cursors() {
+        let mut t = MovementTracker::new(4, true);
+        let c = t.cursor().unwrap();
+        t.mark(1);
+        t.resize(8);
+        t.advance_epoch();
+        t.mark(6);
+        let mut out = Vec::new();
+        assert!(t.moved_since(c, &mut out), "growth keeps old labels valid");
+        assert_eq!(out, vec![1, 6]);
+    }
+}

@@ -1,5 +1,6 @@
 //! The exact sequential Gauss–Seidel sweep (the historical solver loop).
 
+use super::movement::MovementTracker;
 use super::{project_row_in_place, SweepExecutor, SweepStats};
 use crate::core::active_set::ActiveSet;
 use crate::core::bregman::BregmanFunction;
@@ -20,11 +21,13 @@ impl SequentialSweep {
 impl SequentialSweep {
     /// The one sweep loop, monomorphized over the recorder so the plain
     /// path keeps its exact historical shape (the no-op recorder
-    /// compiles away).
+    /// compiles away). Movement marks happen right where the row's dual
+    /// bookkeeping does — tracking observes, never reorders.
     fn sweep_impl<F: BregmanFunction>(
         f: &F,
         x: &mut [f64],
         active: &mut ActiveSet,
+        mut tracker: Option<&mut MovementTracker>,
         mut record: impl FnMut(u32, f64),
     ) -> SweepStats {
         let mut stats = SweepStats { shards: 1, ..SweepStats::default() };
@@ -34,6 +37,9 @@ impl SequentialSweep {
                 stats.projections += 1;
                 stats.dual_movement += moved;
                 record(r as u32, moved);
+                if let Some(t) = tracker.as_deref_mut() {
+                    t.mark_slice(active.view(r).indices);
+                }
             }
         }
         stats
@@ -42,7 +48,7 @@ impl SequentialSweep {
 
 impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
     fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
-        SequentialSweep::sweep_impl(f, x, active, |_, _| {})
+        SequentialSweep::sweep_impl(f, x, active, None, |_, _| {})
     }
 
     fn sweep_recorded(
@@ -52,7 +58,22 @@ impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
         active: &mut ActiveSet,
         record: &mut dyn FnMut(u32, f64),
     ) -> Option<SweepStats> {
-        Some(SequentialSweep::sweep_impl(f, x, active, record))
+        Some(SequentialSweep::sweep_impl(f, x, active, None, record))
+    }
+
+    fn sweep_tracked(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        tracker: &mut MovementTracker,
+        mut record: Option<&mut dyn FnMut(u32, f64)>,
+    ) -> Option<SweepStats> {
+        Some(SequentialSweep::sweep_impl(f, x, active, Some(tracker), |slot, moved| {
+            if let Some(r) = record.as_mut() {
+                r(slot, moved);
+            }
+        }))
     }
 
     fn name(&self) -> &'static str {

@@ -12,6 +12,7 @@
 //! reduction stay serial, in slot order — which keeps the whole sweep
 //! deterministic and independent of the thread count.
 
+use super::movement::MovementTracker;
 use super::shards::{ShardLimits, ShardPlan};
 use super::{project_row_in_place, SweepExecutor, SweepStats};
 use crate::core::active_set::ActiveSet;
@@ -80,12 +81,16 @@ impl ShardedSweep {
     /// path keeps its exact historical shape (the no-op recorder
     /// compiles away). `record(slot, |step|)` runs inside the serial
     /// bookkeeping, in the same deterministic slot order as the
-    /// `dual_movement` reduction.
+    /// `dual_movement` reduction — and so do the movement marks, which
+    /// is what "merge per-worker dirty sets at the barrier" means here:
+    /// workers compute the parallel θ+apply steps, the barrier's serial
+    /// loop folds each moved row's support into the tracker.
     fn sweep_impl<F: BregmanFunction>(
         &mut self,
         f: &F,
         x: &mut [f64],
         active: &mut ActiveSet,
+        mut tracker: Option<&mut MovementTracker>,
         mut record: impl FnMut(u32, f64),
     ) -> SweepStats {
         if !self.plan.is_current(active) {
@@ -112,7 +117,7 @@ impl ShardedSweep {
                     unsafe { f.project_disjoint(&cell, act.view(r), act.z(r)) }
                 });
                 // Serial dual bookkeeping + deterministic reduction in
-                // slot order.
+                // slot order (the barrier merge for movement marks too).
                 for (k, &step) in steps.iter().enumerate() {
                     if step == 0.0 {
                         continue;
@@ -123,6 +128,9 @@ impl ShardedSweep {
                     stats.projections += 1;
                     stats.dual_movement += step.abs();
                     record(r as u32, step.abs());
+                    if let Some(t) = tracker.as_deref_mut() {
+                        t.mark_slice(active.view(r).indices);
+                    }
                 }
             } else {
                 for &r in shard {
@@ -131,6 +139,9 @@ impl ShardedSweep {
                         stats.projections += 1;
                         stats.dual_movement += moved;
                         record(r, moved);
+                        if let Some(t) = tracker.as_deref_mut() {
+                            t.mark_slice(active.view(r as usize).indices);
+                        }
                     }
                 }
             }
@@ -145,6 +156,9 @@ impl ShardedSweep {
                     stats.projections += 1;
                     stats.dual_movement += moved;
                     record(r, moved);
+                    if let Some(t) = tracker.as_deref_mut() {
+                        t.mark_slice(active.view(r as usize).indices);
+                    }
                 }
             }
         }
@@ -154,7 +168,7 @@ impl ShardedSweep {
 
 impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
     fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
-        self.sweep_impl(f, x, active, |_, _| {})
+        self.sweep_impl(f, x, active, None, |_, _| {})
     }
 
     fn sweep_recorded(
@@ -164,7 +178,22 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         active: &mut ActiveSet,
         record: &mut dyn FnMut(u32, f64),
     ) -> Option<SweepStats> {
-        Some(self.sweep_impl(f, x, active, record))
+        Some(self.sweep_impl(f, x, active, None, record))
+    }
+
+    fn sweep_tracked(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        tracker: &mut MovementTracker,
+        mut record: Option<&mut dyn FnMut(u32, f64)>,
+    ) -> Option<SweepStats> {
+        Some(self.sweep_impl(f, x, active, Some(tracker), |slot, moved| {
+            if let Some(r) = record.as_mut() {
+                r(slot, moved);
+            }
+        }))
     }
 
     fn after_forget(

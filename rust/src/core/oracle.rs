@@ -37,6 +37,26 @@ pub struct OracleOutcome {
     pub max_violation: f64,
 }
 
+/// Which box face of the feasible set a bulk
+/// [`ProjectionSink::project_box`] pass delivers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoxKind {
+    /// Non-negativity rows `−x_e ≤ 0` (always part of MET(G)).
+    NonNeg,
+    /// Upper-bound rows `x_e ≤ bound` (correlation clustering's box).
+    Upper,
+}
+
+/// What one bulk box pass witnessed: rows violated by more than the
+/// pass's tolerance and their worst violation, both measured against the
+/// iterate each row saw *before* its own projection — exactly what the
+/// per-row delivery loop historically reported.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BoxOutcome {
+    pub found: usize,
+    pub max_violation: f64,
+}
+
 /// The engine-side interface the oracle drives.
 pub trait ProjectionSink {
     /// Current iterate (read-only).
@@ -48,6 +68,71 @@ pub trait ProjectionSink {
     /// Project onto the constraint immediately and remember it iff its
     /// dual is nonzero afterwards (Algorithm 8, lines 9–12).
     fn project_and_remember(&mut self, c: &Constraint);
+
+    /// Bulk-deliver one box face per coordinate `start..start + len` of
+    /// this sink's iterate: `−x_e ≤ 0` ([`BoxKind::NonNeg`]; `bound` is
+    /// ignored) or `x_e ≤ bound` ([`BoxKind::Upper`]). Semantically
+    /// identical to calling [`ProjectionSink::project_and_remember`]
+    /// with the corresponding single-index row for each coordinate in
+    /// ascending order — which is exactly what this default does. The
+    /// engine sink overrides it with a fused pass that resolves the
+    /// per-row duals through a flat slot mirror instead of per-row
+    /// content hashing, and materializes a row only when it must enter
+    /// the store (see `Solver`'s sink). Violations at or below `tol`
+    /// are not counted (the oracle's reporting-tolerance convention).
+    fn project_box(
+        &mut self,
+        kind: BoxKind,
+        start: u32,
+        len: usize,
+        bound: f64,
+        tol: f64,
+    ) -> BoxOutcome {
+        let mut out = BoxOutcome::default();
+        let mut c = match kind {
+            BoxKind::NonNeg => Constraint::nonneg(0),
+            BoxKind::Upper => Constraint::upper(0, bound),
+        };
+        for k in 0..len {
+            let e = start as usize + k;
+            let v = match kind {
+                BoxKind::NonNeg => -self.x()[e],
+                BoxKind::Upper => self.x()[e] - bound,
+            };
+            if v > tol {
+                out.found += 1;
+                out.max_violation = out.max_violation.max(v);
+            }
+            // Delivered regardless of violation: satisfied rows with
+            // z > 0 still need relaxation projections.
+            c.indices[0] = e as u32;
+            self.project_and_remember(&c);
+        }
+        out
+    }
+
+    /// Movement-feedback seam for incremental oracles: a cursor into the
+    /// engine's coordinate-movement log, to be taken at the moment the
+    /// oracle snapshots the iterate. Taking a cursor also starts a new
+    /// mark-dedup epoch on tracking sinks (so a coordinate moved both
+    /// before and after the cursor is re-logged after it — the window
+    /// must stay a superset of the movement since the snapshot), which
+    /// is why this takes `&mut self`. `None` when the sink has no
+    /// tracking (non-engine sinks, tracking disabled) — the oracle then
+    /// falls back to diffing its own snapshot.
+    fn movement_cursor(&mut self) -> Option<u64> {
+        None
+    }
+
+    /// Append the coordinates (in *this sink's* coordinate space)
+    /// touched by projections since `cursor` to `out`; the list is a
+    /// superset of the coordinates whose value changed, possibly with
+    /// duplicates. Returns `false` — appending nothing — when the log
+    /// no longer covers the window; callers must then diff instead.
+    fn moved_since(&self, cursor: u64, out: &mut Vec<u32>) -> bool {
+        let _ = (cursor, out);
+        false
+    }
 }
 
 /// A deterministic separation oracle (Property 1): on input `x` it either

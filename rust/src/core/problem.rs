@@ -74,6 +74,11 @@ pub struct SolveOptions {
     /// certificate is then one round stale, so convergence detection is
     /// one round more conservative).
     pub overlap: bool,
+    /// Feed per-round coordinate movement back to incremental oracles
+    /// (the engine's movement log). Observation only — results are
+    /// bit-identical either way; `false` forces incremental oracles
+    /// onto their snapshot-diff fallback.
+    pub track_movement: bool,
 }
 
 impl Default for SolveOptions {
@@ -89,6 +94,7 @@ impl Default for SolveOptions {
             sweep: SweepStrategy::Sequential,
             parallel_min_rows: None,
             overlap: false,
+            track_movement: true,
         }
     }
 }
@@ -167,6 +173,11 @@ impl SolveOptions {
         self
     }
 
+    pub fn track_movement(mut self, on: bool) -> Self {
+        self.track_movement = on;
+        self
+    }
+
     /// The per-block [`SolverConfig`] these options induce;
     /// `inner_sweeps_default` is the problem's structural default, used
     /// when the options leave `inner_sweeps` unset.
@@ -181,6 +192,7 @@ impl SolveOptions {
             z_tol: self.z_tol,
             sweep: self.sweep,
             parallel_min_rows: self.parallel_min_rows,
+            track_movement: self.track_movement,
         }
     }
 }

@@ -51,7 +51,7 @@
 use super::active_set::ActiveSet;
 use super::bregman::DiagonalQuadratic;
 use super::constraint::Constraint;
-use super::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
+use super::oracle::{BoxKind, BoxOutcome, Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
 use super::problem::{
     BlockDone, BlockSummary, CancelToken, Handle, Lowered, Problem, RoundEvent, RoundProblem,
     RoundReport, RoundSnapshot, SessionSummary, SolveEvent, SolveOptions, VectorOracle,
@@ -201,6 +201,36 @@ impl ProjectionSink for OffsetSink<'_> {
     fn project_and_remember(&mut self, c: &Constraint) {
         self.shift(c);
         self.inner.project_and_remember(&self.scratch);
+    }
+
+    fn project_box(
+        &mut self,
+        kind: BoxKind,
+        start: u32,
+        len: usize,
+        bound: f64,
+        tol: f64,
+    ) -> BoxOutcome {
+        // Same index shift as `shift`, but in bulk: the block's fused
+        // box pass runs directly on the engine sink's coordinate range.
+        self.inner.project_box(kind, start + self.range.start as u32, len, bound, tol)
+    }
+
+    fn movement_cursor(&mut self) -> Option<u64> {
+        self.inner.movement_cursor()
+    }
+
+    fn moved_since(&self, cursor: u64, out: &mut Vec<u32>) -> bool {
+        // Translate engine (fleet) coordinates into this block's local
+        // space; foreign blocks' movement is filtered out — their
+        // coordinates can never appear in this block's rows.
+        let mut fleet = Vec::new();
+        if !self.inner.moved_since(cursor, &mut fleet) {
+            return false;
+        }
+        let (s, e) = (self.range.start as u32, self.range.end as u32);
+        out.extend(fleet.into_iter().filter(|&c| c >= s && c < e).map(|c| c - s));
+        true
     }
 }
 
@@ -1071,6 +1101,10 @@ impl<'a> Session<'a> {
             }
             solver.projections = ck.projections;
             solver.last_dual_movement = ck.last_dual_movement;
+            // The iterate was rewritten outside the tracked paths: any
+            // outstanding movement window under-reports, so incremental
+            // oracles must re-derive their dirty sets from snapshots.
+            solver.invalidate_movement();
         }
         for (b, bc) in self.blocks.iter_mut().zip(&ck.blocks) {
             b.iterations = bc.iterations;

@@ -10,9 +10,9 @@
 
 use super::active_set::ActiveSet;
 use super::bregman::{BregmanFunction, DiagonalQuadratic};
-use super::constraint::Constraint;
-use super::engine::{self, SweepExecutor, SweepStrategy};
-use super::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
+use super::constraint::{Constraint, ConstraintView};
+use super::engine::{self, MovementTracker, SweepExecutor, SweepStrategy};
+use super::oracle::{BoxKind, BoxOutcome, Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
 use crate::util::pool;
 use crate::util::Stopwatch;
 
@@ -50,6 +50,13 @@ pub struct SolverConfig {
     /// parallel in-shard paths are arithmetic-identical, so this never
     /// changes results.
     pub parallel_min_rows: Option<usize>,
+    /// Feed per-round coordinate movement back to incremental oracles
+    /// (the [`MovementTracker`] dirty log, drained through the sink's
+    /// movement seam). Pure observation — results are bit-identical
+    /// either way; `false` only forces incremental oracles onto their
+    /// snapshot-diff fallback. Auto-disabled when the configured
+    /// executor has no tracked sweep path (the PJRT batch adapter).
+    pub track_movement: bool,
 }
 
 impl Default for SolverConfig {
@@ -64,6 +71,7 @@ impl Default for SolverConfig {
             z_tol: 0.0,
             sweep: SweepStrategy::Sequential,
             parallel_min_rows: None,
+            track_movement: true,
         }
     }
 }
@@ -212,6 +220,68 @@ pub struct Solver<F: BregmanFunction> {
     executor: Box<dyn SweepExecutor<F>>,
     /// Reused FORGET compaction-map buffer.
     slot_map: Vec<u32>,
+    /// Per-round coordinate movement (the sweep→oracle feedback log;
+    /// see [`MovementTracker`]). Filled by every sweep path and by the
+    /// engine sink's on-find/box projections.
+    movement: MovementTracker,
+    /// Flat coordinate→slot mirror for the fused box pass (rebuilt per
+    /// membership generation; see [`BoxSlotCache`]).
+    box_cache: BoxSlotCache,
+}
+
+/// Flat coordinate→slot mirror of the box rows in the active set, so
+/// the per-round box pass resolves duals without per-row content
+/// hashing. Keyed to the set's `(instance_id, generation)`: any
+/// membership change (merge, FORGET, relabeling, restore into a fresh
+/// set) invalidates it, and a rebuild is one linear scan over the rows.
+#[derive(Debug, Default)]
+struct BoxSlotCache {
+    /// `nonneg[e]` / `upper[e]` = slot of the `−x_e ≤ 0` / `x_e ≤ b`
+    /// row, or `u32::MAX`.
+    nonneg: Vec<u32>,
+    upper: Vec<u32>,
+    instance: u64,
+    generation: u64,
+}
+
+impl BoxSlotCache {
+    /// Make the mirror current for `active` over `dim` coordinates.
+    fn ensure(&mut self, active: &ActiveSet, dim: usize) {
+        if self.instance == active.instance_id()
+            && self.generation == active.generation()
+            && self.nonneg.len() == dim
+        {
+            return;
+        }
+        self.nonneg.clear();
+        self.nonneg.resize(dim, u32::MAX);
+        self.upper.clear();
+        self.upper.resize(dim, u32::MAX);
+        for r in 0..active.len() {
+            let v = active.view(r);
+            if v.indices.len() != 1 {
+                continue;
+            }
+            let e = v.indices[0] as usize;
+            if e >= dim {
+                continue;
+            }
+            if v.coeffs[0] == -1.0 && v.rhs == 0.0 {
+                self.nonneg[e] = r as u32;
+            } else if v.coeffs[0] == 1.0 {
+                self.upper[e] = r as u32;
+            }
+        }
+        self.instance = active.instance_id();
+        self.generation = active.generation();
+    }
+
+    /// Adopt the set's current generation after in-pass inserts kept
+    /// the mirror up to date incrementally.
+    fn sync(&mut self, active: &ActiveSet) {
+        self.instance = active.instance_id();
+        self.generation = active.generation();
+    }
 }
 
 /// The sink implementation the solver exposes to oracles.
@@ -221,6 +291,8 @@ struct EngineSink<'a, F: BregmanFunction> {
     active: &'a mut ActiveSet,
     projections: &'a mut usize,
     z_tol: f64,
+    movement: &'a mut MovementTracker,
+    box_cache: &'a mut BoxSlotCache,
 }
 
 impl<F: BregmanFunction> ProjectionSink for EngineSink<'_, F> {
@@ -237,11 +309,7 @@ impl<F: BregmanFunction> ProjectionSink for EngineSink<'_, F> {
         // needs neither a projection nor a slot — computing θ first saves
         // the insert/hash/forget churn for the (vast majority of)
         // satisfied rows the oracle re-delivers each round.
-        let view = crate::core::constraint::ConstraintView {
-            indices: &c.indices,
-            coeffs: &c.coeffs,
-            rhs: c.rhs,
-        };
+        let view = ConstraintView { indices: &c.indices, coeffs: &c.coeffs, rhs: c.rhs };
         let theta = self.f.theta(self.x, view);
         let key = c.key();
         let slot = match self.active.slot_of_key(key) {
@@ -258,6 +326,7 @@ impl<F: BregmanFunction> ProjectionSink for EngineSink<'_, F> {
         if step != 0.0 {
             self.f.apply(self.x, self.active.view(slot), step);
             *self.projections += 1;
+            self.movement.mark_slice(&c.indices);
         }
         let nz = z - step;
         self.active.set_z(slot, nz);
@@ -268,6 +337,98 @@ impl<F: BregmanFunction> ProjectionSink for EngineSink<'_, F> {
             self.active.set_z(slot, 0.0);
         }
     }
+
+    /// The fused box pass: one linear sweep over the coordinate range,
+    /// per-row arithmetic identical (same operations, same order) to
+    /// `project_and_remember` on the corresponding single-index row —
+    /// but duals resolve through the flat [`BoxSlotCache`] mirror
+    /// instead of an FNV key + hash probe per row, and a `Constraint`
+    /// is materialized only on the rare violated-without-history path
+    /// that must insert into the store.
+    fn project_box(
+        &mut self,
+        kind: BoxKind,
+        start: u32,
+        len: usize,
+        bound: f64,
+        tol: f64,
+    ) -> BoxOutcome {
+        self.box_cache.ensure(self.active, self.x.len());
+        let mut out = BoxOutcome::default();
+        let (coeff, rhs) = match kind {
+            BoxKind::NonNeg => (-1.0f64, 0.0),
+            BoxKind::Upper => (1.0f64, bound),
+        };
+        for k in 0..len {
+            let e = start as usize + k;
+            let xe = self.x[e];
+            let v = match kind {
+                BoxKind::NonNeg => -xe,
+                BoxKind::Upper => xe - bound,
+            };
+            if v > tol {
+                out.found += 1;
+                out.max_violation = out.max_violation.max(v);
+            }
+            let idx = [e as u32];
+            let co = [coeff];
+            let view = ConstraintView { indices: &idx, coeffs: &co, rhs };
+            let theta = self.f.theta(self.x, view);
+            let slots = match kind {
+                BoxKind::NonNeg => &mut self.box_cache.nonneg,
+                BoxKind::Upper => &mut self.box_cache.upper,
+            };
+            let mut slot = slots[e];
+            // A mirrored single-index +1 row with a foreign rhs is some
+            // other constraint, not this box face: take the keyed path.
+            if slot != u32::MAX && self.active.view(slot as usize).rhs != rhs {
+                slot = u32::MAX;
+            }
+            let slot = if slot != u32::MAX {
+                slot as usize
+            } else {
+                let c = match kind {
+                    BoxKind::NonNeg => Constraint::nonneg(e as u32),
+                    BoxKind::Upper => Constraint::upper(e as u32, bound),
+                };
+                let key = c.key();
+                match self.active.slot_of_key(key) {
+                    Some(s) => s,
+                    None => {
+                        if theta >= 0.0 {
+                            continue; // satisfied, no history: no-op
+                        }
+                        let s = self.active.insert_with_key(&c, key);
+                        slots[e] = s as u32;
+                        s
+                    }
+                }
+            };
+            let z = self.active.z(slot);
+            let step = z.min(theta);
+            if step != 0.0 {
+                self.f.apply(self.x, self.active.view(slot), step);
+                *self.projections += 1;
+                self.movement.mark(e as u32);
+            }
+            let nz = z - step;
+            self.active.set_z(slot, nz);
+            if nz.abs() <= self.z_tol {
+                self.active.set_z(slot, 0.0);
+            }
+        }
+        // In-pass inserts kept the mirror coherent; adopt the new key.
+        self.box_cache.sync(self.active);
+        out
+    }
+
+    fn movement_cursor(&mut self) -> Option<u64> {
+        self.movement.take_cursor()
+    }
+
+    fn moved_since(&self, cursor: u64, out: &mut Vec<u32>) -> bool {
+        self.movement.moved_since(cursor, out)
+    }
 }
 
 impl<F: BregmanFunction> Solver<F> {
@@ -275,6 +436,7 @@ impl<F: BregmanFunction> Solver<F> {
     pub fn new(f: F, config: SolverConfig) -> Solver<F> {
         let x = f.argmin();
         let executor = engine::executor_with::<F>(config.sweep, config.parallel_min_rows);
+        let movement = MovementTracker::new(x.len(), config.track_movement);
         Solver {
             f,
             x,
@@ -284,7 +446,25 @@ impl<F: BregmanFunction> Solver<F> {
             last_dual_movement: 0.0,
             executor,
             slot_map: Vec::new(),
+            movement,
+            box_cache: BoxSlotCache::default(),
         }
+    }
+
+    /// The per-round coordinate-movement state (the sweep→oracle
+    /// feedback channel; incremental oracles read it through the sink's
+    /// movement seam).
+    pub fn movement(&self) -> &MovementTracker {
+        &self.movement
+    }
+
+    /// Drop every outstanding movement window so incremental consumers
+    /// fall back to their exact snapshot diff. Called whenever the
+    /// iterate is rewritten outside the tracked paths (checkpoint
+    /// restore); also the right hammer after any external surgery on
+    /// `x` that the engine did not see.
+    pub fn invalidate_movement(&mut self) {
+        self.movement.invalidate();
     }
 
     /// Swap the sweep executor (e.g. to compare strategies on one
@@ -307,15 +487,48 @@ impl<F: BregmanFunction> Solver<F> {
         if moved == 0.0 {
             return false;
         }
+        self.movement.mark_slice(self.active.view(r).indices);
         self.projections += 1;
         self.last_dual_movement += moved;
         true
     }
 
+    /// The one dispatch point for executor sweeps: movement-tracked when
+    /// the tracker is live, with permanent disable (and a correct plain
+    /// fallback) for executors without a tracked path.
+    fn run_sweep(&mut self, mut record: Option<&mut dyn FnMut(u32, f64)>) -> engine::SweepStats {
+        if self.movement.is_enabled() {
+            self.movement.advance_epoch();
+            let reborrow = match record {
+                Some(ref mut r) => Some(&mut **r),
+                None => None,
+            };
+            if let Some(stats) = self.executor.sweep_tracked(
+                &self.f,
+                &mut self.x,
+                &mut self.active,
+                &mut self.movement,
+                reborrow,
+            ) {
+                return stats;
+            }
+            // No tracked path (PJRT adapter): a silently untracked sweep
+            // would under-report movement, so stop tracking for good.
+            self.movement.disable();
+        }
+        match record {
+            Some(r) => self
+                .executor
+                .sweep_recorded(&self.f, &mut self.x, &mut self.active, r)
+                .expect("the configured sweep executor does not support recorded sweeps"),
+            None => self.executor.sweep(&self.f, &mut self.x, &mut self.active),
+        }
+    }
+
     /// One full sweep over the remembered list, delegated to the
     /// configured [`SweepExecutor`]. Returns projections done.
     pub fn project_sweep(&mut self) -> usize {
-        let stats = self.executor.sweep(&self.f, &mut self.x, &mut self.active);
+        let stats = self.run_sweep(None);
         self.projections += stats.projections;
         self.last_dual_movement = stats.dual_movement;
         stats.projections
@@ -328,10 +541,7 @@ impl<F: BregmanFunction> Solver<F> {
     /// executors without recording support; both built-in strategies
     /// support it.
     pub fn project_sweep_recorded(&mut self, record: &mut dyn FnMut(u32, f64)) -> usize {
-        let stats = self
-            .executor
-            .sweep_recorded(&self.f, &mut self.x, &mut self.active, record)
-            .expect("the configured sweep executor does not support recorded sweeps");
+        let stats = self.run_sweep(Some(record));
         self.projections += stats.projections;
         self.last_dual_movement = stats.dual_movement;
         stats.projections
@@ -373,6 +583,8 @@ impl<F: BregmanFunction> Solver<F> {
             active: &mut self.active,
             projections: &mut self.projections,
             z_tol: self.config.z_tol,
+            movement: &mut self.movement,
+            box_cache: &mut self.box_cache,
         };
         body(&mut sink)
     }
@@ -702,6 +914,9 @@ impl Solver<DiagonalQuadratic> {
         nw.extend_from_slice(w);
         self.f = DiagonalQuadratic::new(nd, nw);
         self.x.extend_from_slice(d); // block-local argmin
+        // Growth keeps existing coordinate labels, so outstanding
+        // movement windows stay valid; the dirty set just widens.
+        self.movement.resize(self.x.len());
         start..self.x.len()
     }
 
@@ -723,6 +938,10 @@ impl Solver<DiagonalQuadratic> {
         nw.drain(range.clone());
         self.f = DiagonalQuadratic::new(nd, nw);
         self.x.drain(range.clone());
+        // The uniform relabeling orphans every logged coordinate: shrink
+        // the dirty set and invalidate outstanding movement windows
+        // (consumers fall back to their exact snapshot diff once).
+        self.movement.remove_range(range.clone());
         let (before, after) =
             self.active.shift_indices_from(range.end as u32, range.len() as u32);
         if before != after {

@@ -106,12 +106,43 @@ impl DijkstraScratch {
             v = self.parent[v] as usize;
         }
     }
+
+    /// Nodes assigned a tentative label by the last (heap-variant) run —
+    /// a superset of the settled nodes. The incremental oracle filters
+    /// this by `dist ≤ radius` to extract a source's dependency ball.
+    pub fn touched(&self) -> &[u32] {
+        &self.touched
+    }
 }
 
 /// Run Dijkstra from `source` using per-edge weights `w` (indexed by edge
 /// id; must be non-negative). Results land in `scratch.dist` /
 /// `scratch.parent_edge` / `scratch.parent`.
 pub fn dijkstra(g: &Graph, w: &[f64], source: usize, scratch: &mut DijkstraScratch) {
+    dijkstra_bounded(g, w, source, f64::INFINITY, scratch);
+}
+
+/// Radius-bounded Dijkstra: identical to [`dijkstra`] until the minimum
+/// popped distance exceeds `radius`, then stops. Pops come in
+/// non-decreasing distance order, so at the early exit **every node with
+/// true distance ≤ `radius` is settled exactly** (dist, parent and
+/// parent_edge final); nodes beyond keep a tentative label > `radius`
+/// or `INFINITY`.
+///
+/// This is the separation oracle's early exit (§Perf): a cycle violation
+/// at `(src, nb)` needs `d(src, nb) < x_e`, and `x_e` is at most the
+/// maximum clamped weight incident to `src` — so scanning past that
+/// radius can never change the reported violation set, while late-solve
+/// sources with small incident weights settle only a tiny ball. An
+/// infinite `radius` reproduces the unbounded run bit for bit (the
+/// guard compares against a value no distance reaches).
+pub fn dijkstra_bounded(
+    g: &Graph,
+    w: &[f64],
+    source: usize,
+    radius: f64,
+    scratch: &mut DijkstraScratch,
+) {
     debug_assert_eq!(w.len(), g.num_edges());
     debug_assert_eq!(scratch.dist.len(), g.num_nodes());
     scratch.reset();
@@ -119,6 +150,9 @@ pub fn dijkstra(g: &Graph, w: &[f64], source: usize, scratch: &mut DijkstraScrat
     scratch.touched.push(source as u32);
     scratch.heap_push(0.0, source as u32);
     while let Some((d, v)) = scratch.heap_pop() {
+        if d > radius {
+            break; // every remaining label exceeds the radius
+        }
         let vu = v as usize;
         if d > scratch.dist[vu] {
             continue; // stale heap entry
@@ -190,13 +224,27 @@ pub fn dijkstra_dense(g: &Graph, w: &[f64], source: usize, scratch: &mut Dijkstr
     }
 }
 
-/// Pick a Dijkstra variant. Measurement says the heap variant wins on
-/// every oracle workload we have (see the note on [`dijkstra_dense`]),
-/// so this simply forwards — kept as the seam where a density heuristic
-/// would go if a future workload flips the trade-off.
+/// THE dispatch point for the oracle's per-source runs: a finite
+/// `radius` selects [`dijkstra_bounded`] (the separation early exit —
+/// pass the source's maximum incident clamped weight), an infinite one
+/// the plain heap variant. Measurement says the heap beats the dense
+/// O(n²) scan on every oracle workload we have (see the note on
+/// [`dijkstra_dense`]), so density does not dispatch here — this seam
+/// is where such a heuristic would go if a future workload flips the
+/// trade-off.
 #[inline]
-pub fn dijkstra_auto(g: &Graph, w: &[f64], source: usize, scratch: &mut DijkstraScratch) {
-    dijkstra(g, w, source, scratch);
+pub fn dijkstra_auto(
+    g: &Graph,
+    w: &[f64],
+    source: usize,
+    radius: f64,
+    scratch: &mut DijkstraScratch,
+) {
+    if radius.is_finite() {
+        dijkstra_bounded(g, w, source, radius, scratch);
+    } else {
+        dijkstra(g, w, source, scratch);
+    }
 }
 
 /// Convenience: distances from one source (allocating).
@@ -329,6 +377,76 @@ mod tests {
         dijkstra_dense(&g, &[1.0, 1.0], 0, &mut s);
         assert_eq!(s.dist[1], 1.0);
         assert!(s.dist[2].is_infinite());
+    }
+
+    #[test]
+    fn bounded_settles_exactly_within_radius() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(31);
+        for n in [10usize, 25] {
+            let g = Graph::complete(n);
+            let w: Vec<f64> = (0..g.num_edges()).map(|_| rng.uniform(0.1, 2.0)).collect();
+            let mut full = DijkstraScratch::new(n);
+            let mut bounded = DijkstraScratch::new(n);
+            for src in 0..n {
+                dijkstra(&g, &w, src, &mut full);
+                for radius in [0.0, 0.4, 1.1, 3.0] {
+                    dijkstra_bounded(&g, &w, src, radius, &mut bounded);
+                    for v in 0..n {
+                        if full.dist[v] <= radius {
+                            // Settled exactly: dist AND the path agree.
+                            assert_eq!(
+                                full.dist[v], bounded.dist[v],
+                                "n={n} src={src} v={v} r={radius}"
+                            );
+                            let lf: f64 =
+                                full.path_edges(v).iter().map(|&e| w[e as usize]).sum();
+                            let lb: f64 =
+                                bounded.path_edges(v).iter().map(|&e| w[e as usize]).sum();
+                            assert_eq!(lf.to_bits(), lb.to_bits(), "paths drift within radius");
+                        } else {
+                            // Beyond the radius only a tentative label —
+                            // never one at or below the radius.
+                            assert!(
+                                bounded.dist[v] > radius,
+                                "v={v}: unsettled label leaked under the radius"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_with_infinite_radius_is_the_plain_run() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(32);
+        let g = Graph::complete(15);
+        let w: Vec<f64> = (0..g.num_edges()).map(|_| rng.uniform(0.05, 3.0)).collect();
+        let mut a = DijkstraScratch::new(15);
+        let mut b = DijkstraScratch::new(15);
+        for src in 0..15 {
+            dijkstra(&g, &w, src, &mut a);
+            dijkstra_auto(&g, &w, src, f64::INFINITY, &mut b);
+            assert_eq!(a.dist, b.dist);
+            assert_eq!(a.parent_edge, b.parent_edge);
+        }
+    }
+
+    #[test]
+    fn touched_covers_all_labeled_nodes() {
+        let (g, w) = path_graph(8);
+        let mut s = DijkstraScratch::new(8);
+        dijkstra_bounded(&g, &w, 0, 2.5, &mut s);
+        // Nodes 0..=2 settle (dist ≤ 2.5); node 3 gets a tentative label.
+        let touched: Vec<u32> = s.touched().to_vec();
+        for v in 0..=3u32 {
+            assert!(touched.contains(&v), "node {v} missing from touched");
+        }
+        let ball: Vec<u32> =
+            touched.iter().cloned().filter(|&v| s.dist[v as usize] <= 2.5).collect();
+        assert_eq!(ball, vec![0, 1, 2]);
     }
 
     #[test]

@@ -167,6 +167,9 @@ pub struct Correlation<'a> {
     threads: usize,
     /// Pivot-rounding seed.
     seed: u64,
+    /// Dirty-source incremental separation (Collect mode; identical
+    /// findings, rescans only moved sources).
+    incremental: bool,
 }
 
 impl<'a> Correlation<'a> {
@@ -179,6 +182,7 @@ impl<'a> Correlation<'a> {
             mode: OracleMode::ProjectOnFind,
             threads: crate::util::pool::default_threads(),
             seed: 0,
+            incremental: true,
         }
     }
 
@@ -191,7 +195,15 @@ impl<'a> Correlation<'a> {
             mode: OracleMode::Collect,
             threads: crate::util::pool::default_threads(),
             seed: 0,
+            incremental: true,
         }
+    }
+
+    /// Toggle the oracle's dirty-source incremental scan (default on;
+    /// `false` forces a full rescan every round — the ablation axis).
+    pub fn incremental(mut self, on: bool) -> Self {
+        self.incremental = on;
+        self
     }
 
     pub fn gamma(mut self, gamma: f64) -> Self {
@@ -234,6 +246,7 @@ impl<'a> Problem<'a> for Correlation<'a> {
         oracle.upper_bound = Some(1.0);
         oracle.threads = self.threads;
         oracle.report_tol = (opts.violation_tol * 1e-3).max(1e-12);
+        oracle.incremental = self.incremental;
         // Shard-bucketed delivery helps exactly when the sharded engine
         // consumes it; sequential solves keep the historical slot order.
         oracle.shard_bucket = matches!(opts.sweep, SweepStrategy::ShardedParallel { .. });

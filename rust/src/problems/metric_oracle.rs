@@ -4,7 +4,44 @@
 //! edge `(i, j)` with `x(i,j) > d(i,j)` witnesses a violated cycle
 //! inequality `x(e) ≤ Σ_{ẽ ∈ P} x(ẽ)` where `P` is the shortest path.
 //! This oracle satisfies Property 1 with `φ(t) = t/n` (Proposition 1) and
-//! runs in `Θ(n² log n + n·|E|)`.
+//! runs in `Θ(n² log n + n·|E|)` — *per full scan*. Two mechanisms make
+//! the amortized cost scale with how much the iterate moved instead:
+//!
+//! - **Radius-bounded Dijkstra** (stateless, always on): a violation at
+//!   `(src, nb)` needs `d(src, nb) < x_e`, and `x_e` is at most the
+//!   maximum clamped weight incident to `src` — so every per-source run
+//!   stops once the popped distance exceeds that radius
+//!   ([`crate::graph::dijkstra::dijkstra_bounded`]), and a source whose
+//!   radius is below the reporting tolerance is skipped outright.
+//! - **Dirty-source incremental rescans** (Collect mode,
+//!   [`MetricOracle::incremental`]): each scanned source persists its
+//!   violated rows plus a *radius certificate* — the nodes settled
+//!   within its radius, with their exact distances. A source is
+//!   rescanned only when (a) one of its incident edges changed (they
+//!   set both its radius and the compared weights), or (b) some changed
+//!   edge could lie on a path entering its radius:
+//!   `dist(src, endpoint) + min(w_old, w_new) ≤ radius` for an endpoint
+//!   of the changed edge. The test is sound even for many simultaneous
+//!   changes: on any new path of length ≤ radius, the *first* changed
+//!   edge along it has a change-free prefix, so that prefix's length is
+//!   the stored (old, settled, exact) distance of its endpoint — which
+//!   is precisely what (b) bounds. Endpoints beyond the radius have old
+//!   distance > radius, so treating them as ∞ is also sound. A clean
+//!   source therefore sees unchanged distances, violation values and
+//!   witness paths, and re-delivers its cached rows — identical to what
+//!   a rescan would produce. (Degenerate caveat: if two distinct paths
+//!   have *exactly* equal f64 length, the reported witness path — never
+//!   the violated set or the certificate values — can depend on heap
+//!   tie-breaking; exact collisions of distinct float path sums do not
+//!   arise in the randomized pins and would only swap equivalent
+//!   witnesses.) Changed coordinates come from the engine's movement
+//!   log (the `ProjectionSink` movement seam) when it covers the
+//!   window, else from an exact element-wise diff against the cached
+//!   snapshot; the hint is intersected with the exact comparison, so
+//!   both paths make identical rescan decisions. Certificates live
+//!   under a memory budget ([`MetricOracle::incremental_budget_nodes`],
+//!   counting stored `(node, dist)` entries); a source whose ball
+//!   exceeds its share simply rescans every round.
 //!
 //! Two delivery modes, matching the paper's implementations (§8):
 //! - [`OracleMode::ProjectOnFind`] — project onto each violated cycle the
@@ -22,12 +59,22 @@
 //! The oracle also polices the non-metric faces of MET(G): `x ≥ 0` always,
 //! plus optional `x ≤ ub` box rows (correlation clustering's `Ax ≤ b`);
 //! these are the paper's never-forgotten "additional constraints" `L_a`,
-//! re-delivered every round.
+//! re-delivered every round through the sink's fused
+//! [`ProjectionSink::project_box`] pass (flat dual lookup, no per-row
+//! content hashing). The box faces are delivered twice per Collect round
+//! — before the cycle scan (Dijkstra needs the iterate inside the box)
+//! and after it (so remembered box duals relax every round) — but only
+//! the **first** pass counts into the round's certificate: the second
+//! pass re-measures rows the first one already projected, and counting
+//! them again double-reported `found` and could leak post-projection
+//! residue into `max_violation`.
 
 use crate::core::bregman::BregmanFunction;
 use crate::core::constraint::Constraint;
-use crate::core::oracle::{Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
-use crate::graph::dijkstra::{dijkstra, DijkstraScratch};
+use crate::core::oracle::{
+    BoxKind, Oracle, OracleOutcome, OverlappableOracle, ProjectionSink,
+};
+use crate::graph::dijkstra::{dijkstra, dijkstra_auto, DijkstraScratch};
 use crate::graph::Graph;
 use crate::util::pool::parallel_map_chunks;
 use std::sync::Arc;
@@ -41,6 +88,16 @@ pub enum OracleMode {
     /// let the engine's sweeps handle projection.
     Collect,
 }
+
+/// Default memory budget for the incremental scan's radius
+/// certificates, in stored `(node, dist)` entries across all sources
+/// (16 bytes each after alignment; 16 Mi ≈ 256 MB worst case, far less
+/// in practice — balls only reach the cap on huge dense instances, and
+/// shrink as the iterate approaches the metric cone). Each source gets
+/// an equal share `budget / n`; a ball larger than its share is simply
+/// not certified and that source rescans every round — graceful
+/// degradation, never wrong answers.
+pub const DEFAULT_INCREMENTAL_BUDGET_NODES: usize = 16 << 20;
 
 /// The METRIC VIOLATIONS oracle over a fixed graph.
 pub struct MetricOracle {
@@ -62,7 +119,152 @@ pub struct MetricOracle {
     /// is selected, keeping sequential solves bit-identical to the
     /// historical delivery order.
     pub shard_bucket: bool,
+    /// Collect mode only: persist per-source scan state across rounds
+    /// and rescan only dirty sources (see the module docs). Findings are
+    /// identical to a full rescan; `false` forces the full scan (the
+    /// bench/ablation axis).
+    pub incremental: bool,
+    /// Memory budget for the radius certificates (see
+    /// [`DEFAULT_INCREMENTAL_BUDGET_NODES`]).
+    pub incremental_budget_nodes: usize,
+    cache: Option<ScanCache>,
     scratch: DijkstraScratch,
+}
+
+/// One source's persisted scan state.
+#[derive(Debug, Default, Clone)]
+struct SourceState {
+    /// Violated cycle rows found by this source's last rescan, in
+    /// discovery order.
+    found: Vec<(f64, Constraint)>,
+    /// The radius certificate: every node settled within the source's
+    /// radius at the last rescan (includes the source itself), with its
+    /// exact distance. The distances make the staleness test
+    /// *quantitative*: a moved edge `(u, v)` can affect this source only
+    /// if `dist(src, u) + min(w_old, w_new) ≤ radius` for one of its
+    /// endpoints — i.e. a path through the moved edge could enter the
+    /// radius. (A boolean "endpoint in ball" test would degenerate on
+    /// complete graphs, where every ball is all of `V`.)
+    ball: Vec<(u32, f64)>,
+    /// The radius the ball was computed for (max incident clamped
+    /// weight at the last rescan; unchanged while no incident edge
+    /// moves, which the staleness test checks first).
+    radius: f64,
+    /// `ball` is a valid certificate (it fit the per-source budget).
+    /// Uncertified sources rescan every round.
+    certified: bool,
+}
+
+/// The oracle's committed incremental state: per-source rows +
+/// certificates, the iterate snapshot they were computed against, and
+/// the movement-log cursor taken at that snapshot.
+#[derive(Debug)]
+struct ScanCache {
+    x_prev: Vec<f64>,
+    sources: Vec<SourceState>,
+    cursor: Option<u64>,
+}
+
+/// Per-source outcome of one Collect scan.
+enum SourceScan {
+    /// Certified clean — the cache's rows for this source still hold.
+    Cached,
+    /// Rescanned (or never scanned): fresh rows + certificate.
+    Fresh(SourceState),
+}
+
+/// Findings of one Collect-mode separation scan, in deterministic source
+/// order. Produced by [`MetricOracle::scan_cycles`] — possibly on the
+/// worker pool, against the back buffer of an overlapped solve — and
+/// consumed at the sweep barrier by [`OverlappableOracle::deliver`],
+/// which also commits the carried per-source state into the oracle's
+/// cache ([`MetricOracle::commit_scan`]).
+pub struct MetricScan {
+    sources: Vec<SourceScan>,
+    found: usize,
+    rescanned: usize,
+    /// Becomes the cache's `x_prev` at commit (`None` when incremental
+    /// mode is off — committing then clears the cache).
+    x_snapshot: Option<Vec<f64>>,
+    cursor: Option<u64>,
+}
+
+impl MetricScan {
+    /// Number of violated cycle rows found (cached + rescanned).
+    pub fn len(&self) -> usize {
+        self.found
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.found == 0
+    }
+
+    /// Sources actually rescanned (the rest reused their certificates).
+    pub fn rescanned(&self) -> usize {
+        self.rescanned
+    }
+}
+
+/// Rescan one source: radius-bounded Dijkstra + witness extraction +
+/// (optionally) the radius certificate. Pure in `(g, w, src, tol)` —
+/// runs on the worker pool.
+fn rescan_source(
+    g: &Graph,
+    w: &[f64],
+    src: usize,
+    tol: f64,
+    ball_cap: Option<usize>,
+    scratch: &mut DijkstraScratch,
+) -> SourceState {
+    let mut radius = 0.0f64;
+    for &(_, eid) in g.neighbors(src) {
+        radius = radius.max(w[eid as usize]);
+    }
+    let mut st = SourceState { radius, ..SourceState::default() };
+    if radius <= tol {
+        // No incident edge can witness a violation above tol
+        // (viol = w_e − dist ≤ radius ≤ tol): skip the run outright.
+        // The outcome depends only on the incident weights, and every
+        // incident edge touches `src` — a one-node ball certifies it.
+        if let Some(cap) = ball_cap {
+            if cap >= 1 {
+                st.ball.push((src as u32, 0.0));
+                st.certified = true;
+            }
+        }
+        return st;
+    }
+    dijkstra_auto(g, w, src, radius, scratch);
+    for &(nb, eid) in g.neighbors(src) {
+        if (nb as usize) < src {
+            // Each undirected edge is scanned from its smaller endpoint.
+            continue;
+        }
+        let viol = w[eid as usize] - scratch.dist[nb as usize];
+        if viol > tol {
+            let path = scratch.path_edges(nb as usize);
+            // Degenerate case: the "path" is the edge itself.
+            if path.len() == 1 && path[0] == eid {
+                continue;
+            }
+            st.found.push((viol, Constraint::cycle(eid, &path)));
+        }
+    }
+    if let Some(cap) = ball_cap {
+        let ball: Vec<(u32, f64)> = scratch
+            .touched()
+            .iter()
+            .filter_map(|&v| {
+                let d = scratch.dist[v as usize];
+                (d <= radius).then_some((v, d))
+            })
+            .collect();
+        if ball.len() <= cap {
+            st.ball = ball;
+            st.certified = true;
+        }
+    }
+    st
 }
 
 impl MetricOracle {
@@ -76,40 +278,32 @@ impl MetricOracle {
             nonneg: true,
             upper_bound: None,
             shard_bucket: false,
+            incremental: true,
+            incremental_budget_nodes: DEFAULT_INCREMENTAL_BUDGET_NODES,
+            cache: None,
             scratch: DijkstraScratch::new(n),
         }
     }
 
-    /// Deliver the box rows (`L_a`): projected every round, so their duals
-    /// persist while needed and the rows are re-added if forgotten.
-    fn deliver_box(&self, sink: &mut dyn ProjectionSink, out: &mut OracleOutcome) {
+    /// Deliver the box rows (`L_a`) through the sink's fused pass:
+    /// projected every round, so their duals persist while needed and
+    /// the rows are re-added if forgotten. Only a `count`ing pass merges
+    /// its witnesses into the round certificate — the second per-round
+    /// pass still projects but must not double-count (see module docs).
+    fn deliver_box(&self, sink: &mut dyn ProjectionSink, out: &mut OracleOutcome, count: bool) {
         let m = self.graph.num_edges();
-        // One reused row mutated per edge (2m fresh Vecs per round is
-        // measurable at CC scale — §Perf).
         if self.nonneg {
-            let mut c = Constraint::nonneg(0);
-            for e in 0..m {
-                let v = -sink.x()[e];
-                if v > self.report_tol {
-                    out.max_violation = out.max_violation.max(v);
-                    out.found += 1; // `found` counts violated rows only
-                }
-                // Delivered regardless of violation: satisfied rows with
-                // z > 0 still need relaxation projections.
-                c.indices[0] = e as u32;
-                sink.project_and_remember(&c);
+            let b = sink.project_box(BoxKind::NonNeg, 0, m, 0.0, self.report_tol);
+            if count {
+                out.found += b.found;
+                out.max_violation = out.max_violation.max(b.max_violation);
             }
         }
         if let Some(ub) = self.upper_bound {
-            let mut c = Constraint::upper(0, ub);
-            for e in 0..m {
-                let v = sink.x()[e] - ub;
-                if v > self.report_tol {
-                    out.max_violation = out.max_violation.max(v);
-                    out.found += 1;
-                }
-                c.indices[0] = e as u32;
-                sink.project_and_remember(&c);
+            let b = sink.project_box(BoxKind::Upper, 0, m, ub, self.report_tol);
+            if count {
+                out.found += b.found;
+                out.max_violation = out.max_violation.max(b.max_violation);
             }
         }
     }
@@ -118,7 +312,7 @@ impl MetricOracle {
         let mut out = OracleOutcome::default();
         // Box rows first: Dijkstra needs non-negative weights, so pull the
         // iterate inside MET(G)'s box faces before the cycle scan.
-        self.deliver_box(sink, &mut out);
+        self.deliver_box(sink, &mut out, true);
         let g = self.graph.clone();
         let n = g.num_nodes();
         // Clamped weight mirror of x, maintained *incrementally*: a
@@ -131,9 +325,20 @@ impl MetricOracle {
         let mut path: Vec<u32> = Vec::new();
         let mut cons = Constraint::new(vec![], vec![], 0.0);
         for src in 0..n {
+            // Radius bound: x_e ≤ w_e ≤ radius for every incident edge,
+            // so no violation can live past it — and a source whose
+            // radius is within the reporting tolerance has nothing to
+            // report at all.
+            let mut radius = 0.0f64;
+            for &(_, eid) in g.neighbors(src) {
+                radius = radius.max(w[eid as usize]);
+            }
+            if radius <= self.report_tol {
+                continue;
+            }
             // Shortest paths under the *current* x (which earlier
             // projections this round may already have improved).
-            dijkstra(&g, &w, src, &mut self.scratch);
+            dijkstra_auto(&g, &w, src, radius, &mut self.scratch);
             for &(nb, eid) in g.neighbors(src) {
                 // Each undirected edge is scanned from its smaller endpoint.
                 if (nb as usize) < src {
@@ -169,62 +374,200 @@ impl MetricOracle {
         out
     }
 
-    /// Read-only Collect scan: Dijkstra from every source against a
-    /// clamped snapshot of `x`, returning the violated cycle rows in
+    /// Read-only Collect scan: radius-bounded Dijkstra from every dirty
+    /// source against a clamped snapshot of `x`, cached rows for every
+    /// certified-clean source, returning the violated cycle rows in
     /// deterministic source order (per-source lists concatenated in
     /// source order — independent of chunking and of the pool's worker
-    /// count). Safe to run concurrently with projection sweeps mutating
-    /// a *different* buffer of the iterate; that is exactly what
+    /// count, and independent of *which* dirty derivation skipped which
+    /// source, since a clean rescan reproduces its cached rows bit for
+    /// bit). Safe to run concurrently with projection sweeps mutating a
+    /// *different* buffer of the iterate; that is exactly what
     /// `Solver::solve_overlapped` does with it.
     pub fn scan_cycles(&self, x: &[f64]) -> MetricScan {
-        let g = self.graph.clone();
+        self.scan_with(x, None, None)
+    }
+
+    /// The scan core. `moved_hint` is a superset of the coordinates that
+    /// changed since the cache snapshot (from the engine's movement
+    /// log); `None` falls back to the exact element-wise diff. `cursor`
+    /// is carried into the new cache for the *next* round's hint.
+    fn scan_with(
+        &self,
+        x: &[f64],
+        moved_hint: Option<&[u32]>,
+        cursor: Option<u64>,
+    ) -> MetricScan {
+        let g = &*self.graph;
         let n = g.num_nodes();
+        let m = g.num_edges();
+        debug_assert_eq!(x.len(), m);
         // Clamp for Dijkstra; any cycle violated under the clamp is
         // violated under x itself.
         let w: Vec<f64> = x.iter().map(|&v| v.max(0.0)).collect();
         let tol = self.report_tol;
-        let found = parallel_map_chunks(n, self.threads, |range| {
-            let mut scratch = DijkstraScratch::new(n);
-            let mut list: Vec<(f64, Constraint)> = Vec::new();
-            for src in range {
-                dijkstra(&g, &w, src, &mut scratch);
-                for &(nb, eid) in g.neighbors(src) {
-                    if (nb as usize) < src {
-                        continue;
-                    }
-                    let viol = w[eid as usize] - scratch.dist[nb as usize];
-                    if viol > tol {
-                        let path = scratch.path_edges(nb as usize);
-                        if path.len() == 1 && path[0] == eid {
-                            continue;
+        let incremental = self.incremental;
+        // A usable cache must match this graph's shape.
+        let cache = if incremental {
+            self.cache.as_ref().filter(|c| c.x_prev.len() == m && c.sources.len() == n)
+        } else {
+            None
+        };
+        // Per-node "reach" of the movement since the cache snapshot:
+        // `reach[t]` = the smallest min(old, new) clamped weight over
+        // the *changed* edges incident to `t` (∞ when none changed).
+        // The movement hint is a superset of the changed set, so it is
+        // intersected with the exact element-wise comparison — hint and
+        // diff paths therefore compute the identical array (the hint
+        // only bounds how many coordinates are examined).
+        let reach: Option<Vec<f64>> = cache.map(|c| {
+            let mut reach = vec![f64::INFINITY; n];
+            let mut mark = |reach: &mut [f64], e: usize| {
+                let wmin = x[e].max(0.0).min(c.x_prev[e].max(0.0));
+                let (a, b) = g.edges()[e];
+                if wmin < reach[a as usize] {
+                    reach[a as usize] = wmin;
+                }
+                if wmin < reach[b as usize] {
+                    reach[b as usize] = wmin;
+                }
+            };
+            match moved_hint {
+                Some(coords) => {
+                    for &e in coords {
+                        if (e as usize) < m && x[e as usize] != c.x_prev[e as usize] {
+                            mark(&mut reach, e as usize);
                         }
-                        list.push((viol, Constraint::cycle(eid, &path)));
+                    }
+                }
+                None => {
+                    for (e, (&xe, &pe)) in x.iter().zip(&c.x_prev).enumerate() {
+                        if xe != pe {
+                            mark(&mut reach, e);
+                        }
                     }
                 }
             }
-            list
+            reach
         });
-        MetricScan { found: found.into_iter().flatten().collect() }
+        let per_source_cap =
+            if incremental && n > 0 { self.incremental_budget_nodes / n } else { 0 };
+        let reach_ref = reach.as_ref();
+        let per_chunk: Vec<Vec<SourceScan>> = parallel_map_chunks(n, self.threads, |range| {
+            let mut scratch = DijkstraScratch::new(n);
+            let mut out: Vec<SourceScan> = Vec::with_capacity(range.len());
+            for src in range {
+                if let (Some(c), Some(reach)) = (cache, reach_ref) {
+                    // The staleness test (see the module docs): rescan
+                    // iff an incident edge changed (the radius and the
+                    // compared weights depend on them), or a changed
+                    // edge could lie on a path entering this source's
+                    // radius — its endpoint's settled distance plus the
+                    // smaller of its old/new weight reaches the radius.
+                    // `≤` (not `<`) also catches exact-tie paths.
+                    let st = &c.sources[src];
+                    if st.certified
+                        && reach[src].is_infinite()
+                        && !st
+                            .ball
+                            .iter()
+                            .any(|&(t, d)| d + reach[t as usize] <= st.radius)
+                    {
+                        out.push(SourceScan::Cached);
+                        continue;
+                    }
+                }
+                out.push(SourceScan::Fresh(rescan_source(
+                    g,
+                    &w,
+                    src,
+                    tol,
+                    incremental.then_some(per_source_cap),
+                    &mut scratch,
+                )));
+            }
+            out
+        });
+        let sources: Vec<SourceScan> = per_chunk.into_iter().flatten().collect();
+        let mut found = 0;
+        let mut rescanned = 0;
+        for (src, s) in sources.iter().enumerate() {
+            match s {
+                SourceScan::Cached => {
+                    found += cache.expect("cached source without a cache").sources[src]
+                        .found
+                        .len()
+                }
+                SourceScan::Fresh(st) => {
+                    found += st.found.len();
+                    rescanned += 1;
+                }
+            }
+        }
+        MetricScan {
+            sources,
+            found,
+            rescanned,
+            x_snapshot: incremental.then(|| x.to_vec()),
+            cursor,
+        }
     }
 
-    /// Count a scan into the certificate and hand its rows to the sink —
-    /// in historical source order, or pre-bucketed by support-disjoint
-    /// shard when `shard_bucket` is set.
+    /// Movement hint for the next scan: the engine's dirty log since the
+    /// cache's cursor, when the sink tracks movement and the window is
+    /// still covered.
+    fn movement_hint(&self, sink: &dyn ProjectionSink) -> Option<Vec<u32>> {
+        let cursor = self.cache.as_ref()?.cursor?;
+        let mut buf = Vec::new();
+        sink.moved_since(cursor, &mut buf).then_some(buf)
+    }
+
+    /// Commit a scan's per-source state into the incremental cache. The
+    /// deliver path does this automatically; benches and tests that
+    /// drive [`MetricOracle::scan_cycles`] directly call it by hand. A
+    /// scan taken with incremental mode off clears the cache.
+    pub fn commit_scan(&mut self, scan: MetricScan) {
+        let Some(x_prev) = scan.x_snapshot else {
+            self.cache = None;
+            return;
+        };
+        let n = self.graph.num_nodes();
+        let mut cache = match self.cache.take() {
+            Some(c) if c.sources.len() == n => c,
+            _ => ScanCache {
+                x_prev: Vec::new(),
+                sources: (0..n).map(|_| SourceState::default()).collect(),
+                cursor: None,
+            },
+        };
+        cache.x_prev = x_prev;
+        cache.cursor = scan.cursor;
+        for (src, s) in scan.sources.into_iter().enumerate() {
+            if let SourceScan::Fresh(st) = s {
+                cache.sources[src] = st;
+            }
+        }
+        self.cache = Some(cache);
+    }
+
+    /// Count a scan's rows into the certificate and hand them to the
+    /// sink — in historical source order, or pre-bucketed by
+    /// support-disjoint shard when `shard_bucket` is set.
     fn deliver_found(
         &self,
-        mut all: Vec<(f64, Constraint)>,
+        all: Vec<&(f64, Constraint)>,
         sink: &mut dyn ProjectionSink,
         out: &mut OracleOutcome,
     ) {
-        for &(viol, _) in &all {
-            out.max_violation = out.max_violation.max(viol);
+        for e in &all {
+            out.max_violation = out.max_violation.max(e.0);
             out.found += 1;
         }
         if !self.shard_bucket {
             // Historical delivery order (deterministic: per-source lists
             // concatenated in source order).
-            for (_, c) in &all {
-                sink.remember(c);
+            for e in all {
+                sink.remember(&e.1);
             }
         } else {
             // Deliver pre-bucketed by support-disjoint shard: consecutive
@@ -236,25 +579,27 @@ impl MetricOracle {
             // order, so the set of delivered constraints is unchanged.
             let mut owner = vec![0u32; self.graph.num_edges()];
             let mut epoch = 0u32;
-            let mut leftover: Vec<(f64, Constraint)> = Vec::new();
+            let mut all = all;
+            let mut leftover: Vec<&(f64, Constraint)> = Vec::new();
             const MAX_BUCKET_PASSES: u32 = 32;
             while !all.is_empty() {
                 epoch += 1;
                 if epoch > MAX_BUCKET_PASSES {
                     // Adversarial conflict chains: deliver the rest as-is.
-                    for (_, c) in &all {
-                        sink.remember(c);
+                    for e in &all {
+                        sink.remember(&e.1);
                     }
                     break;
                 }
-                for (viol, c) in all.drain(..) {
+                for e in all.drain(..) {
+                    let c = &e.1;
                     if c.indices.iter().any(|&i| owner[i as usize] == epoch) {
-                        leftover.push((viol, c));
+                        leftover.push(e);
                     } else {
                         for &i in &c.indices {
                             owner[i as usize] = epoch;
                         }
-                        sink.remember(&c);
+                        sink.remember(c);
                     }
                 }
                 std::mem::swap(&mut all, &mut leftover);
@@ -262,35 +607,46 @@ impl MetricOracle {
         }
     }
 
+    /// Shared tail of a Collect round: deliver the scan's rows (cached +
+    /// fresh, in source order), commit the carried per-source state, run
+    /// the second (non-counting) box pass.
+    fn deliver_tail(
+        &mut self,
+        scan: MetricScan,
+        sink: &mut dyn ProjectionSink,
+        out: &mut OracleOutcome,
+    ) {
+        {
+            let cache = self.cache.as_ref();
+            let mut rows: Vec<&(f64, Constraint)> = Vec::with_capacity(scan.found);
+            for (src, s) in scan.sources.iter().enumerate() {
+                match s {
+                    SourceScan::Cached => rows.extend(
+                        cache.expect("cached source without a cache").sources[src].found.iter(),
+                    ),
+                    SourceScan::Fresh(st) => rows.extend(st.found.iter()),
+                }
+            }
+            self.deliver_found(rows, sink, out);
+        }
+        self.commit_scan(scan);
+        self.deliver_box(sink, out, false);
+    }
+
     fn separate_collect(&mut self, sink: &mut dyn ProjectionSink) -> OracleOutcome {
         let mut out = OracleOutcome::default();
         // Box rows first: Dijkstra needs the iterate inside the box
         // faces before the cycle scan.
-        self.deliver_box(sink, &mut out);
-        let scan = self.scan_cycles(sink.x());
-        self.deliver_found(scan.found, sink, &mut out);
-        self.deliver_box(sink, &mut out);
+        self.deliver_box(sink, &mut out, true);
+        let scan = {
+            // The cursor is read *after* the box pass so its window
+            // starts exactly at the snapshot the scan sees.
+            let cursor = sink.movement_cursor();
+            let hint = self.movement_hint(&*sink);
+            self.scan_with(sink.x(), hint.as_deref(), cursor)
+        };
+        self.deliver_tail(scan, sink, &mut out);
         out
-    }
-}
-
-/// Findings of one Collect-mode separation scan: the violated cycle rows
-/// with their violations, in deterministic source order. Produced by
-/// [`MetricOracle::scan_cycles`] — possibly on the worker pool, against
-/// the back buffer of an overlapped solve — and consumed at the sweep
-/// barrier by [`OverlappableOracle::deliver`].
-pub struct MetricScan {
-    found: Vec<(f64, Constraint)>,
-}
-
-impl MetricScan {
-    /// Number of violated cycle rows found.
-    pub fn len(&self) -> usize {
-        self.found.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.found.is_empty()
     }
 }
 
@@ -298,17 +654,19 @@ impl<F: BregmanFunction> OverlappableOracle<F> for MetricOracle {
     type Scan = MetricScan;
 
     fn scan(&self, x: &[f64]) -> MetricScan {
-        self.scan_cycles(x)
+        // The overlapped scan runs detached from any sink, so the dirty
+        // set always comes from the exact snapshot diff (no cursor).
+        self.scan_with(x, None, None)
     }
 
     /// Same shape as `separate_collect` with the scan factored out: box
     /// rows (measured against the *current* iterate), the scanned cycle
-    /// rows (violations refer to the scanned snapshot), box rows again.
+    /// rows (violations refer to the scanned snapshot), box rows again
+    /// (projection only — the round was already counted).
     fn deliver(&mut self, scan: MetricScan, sink: &mut dyn ProjectionSink) -> OracleOutcome {
         let mut out = OracleOutcome::default();
-        self.deliver_box(sink, &mut out);
-        self.deliver_found(scan.found, sink, &mut out);
-        self.deliver_box(sink, &mut out);
+        self.deliver_box(sink, &mut out, true);
+        self.deliver_tail(scan, sink, &mut out);
         out
     }
 }
@@ -491,5 +849,111 @@ mod tests {
         let res = solver.solve(oracle);
         assert!(res.converged);
         assert_eq!(res.iterations, 1);
+    }
+
+    #[test]
+    fn incremental_scan_equals_full_scan_rows() {
+        // Warm the cache, perturb a few coordinates, and pin that the
+        // incremental scan's delivered rows (and certificate) match a
+        // from-scratch full scan of the same iterate exactly.
+        let mut rng = Rng::new(17);
+        let inst = crate::graph::generators::type1_complete(16, &mut rng);
+        let g = Arc::new(inst.graph.clone());
+        let m = g.num_edges();
+        let mut warm = MetricOracle::new(g.clone(), OracleMode::Collect);
+        let mut cold = MetricOracle::new(g.clone(), OracleMode::Collect);
+        cold.incremental = false;
+        let mut x = inst.weights.clone();
+        for round in 0..12 {
+            let inc = warm.scan_cycles(&x);
+            let full = cold.scan_cycles(&x);
+            assert_eq!(inc.len(), full.len(), "round {round}: found count diverged");
+            let collect = |scan: &MetricScan, oracle: &MetricOracle| -> Vec<(u64, Constraint)> {
+                let mut rows = Vec::new();
+                for (src, s) in scan.sources.iter().enumerate() {
+                    let list = match s {
+                        SourceScan::Cached => {
+                            &oracle.cache.as_ref().unwrap().sources[src].found
+                        }
+                        SourceScan::Fresh(st) => &st.found,
+                    };
+                    for (v, c) in list {
+                        rows.push((v.to_bits(), c.clone()));
+                    }
+                }
+                rows
+            };
+            assert_eq!(
+                collect(&inc, &warm),
+                collect(&full, &cold),
+                "round {round}: rows diverged"
+            );
+            warm.commit_scan(inc);
+            cold.commit_scan(full);
+            // Randomized sweep-like perturbation: a few coordinates move.
+            for _ in 0..3 {
+                let e = rng.below(m);
+                x[e] = (x[e] + rng.uniform(-0.3, 0.3)).max(-0.2);
+            }
+        }
+    }
+
+    #[test]
+    fn unperturbed_rescan_skips_and_movement_stays_local() {
+        // Unit-weight path graph: source v's radius is 1, so its ball is
+        // {v−1, v, v+1} with distances {1, 0, 1} — movement on a far
+        // edge must not rescan it.
+        let n = 12usize;
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        let g = Arc::new(Graph::from_edges(n, &edges));
+        let m = g.num_edges();
+        let mut oracle = MetricOracle::new(g, OracleMode::Collect);
+        let x = vec![1.0; m];
+        let first = oracle.scan_cycles(&x);
+        assert_eq!(first.rescanned(), n, "cold cache must scan everything");
+        oracle.commit_scan(first);
+        let second = oracle.scan_cycles(&x);
+        assert_eq!(second.rescanned(), 0, "clean iterate must skip every source");
+        oracle.commit_scan(second);
+        // Increase the last edge (nodes 10–11): only its incident
+        // sources (10, 11) rescan. Source 9 stays clean even though
+        // node 10 is in its ball — the quantitative test knows a path
+        // through the moved edge (dist 1 + weight 1) overshoots its
+        // radius 1.
+        let mut moved = x.clone();
+        moved[m - 1] += 0.25;
+        let third = oracle.scan_cycles(&moved);
+        assert_eq!(
+            third.rescanned(),
+            2,
+            "an incident-only change must rescan exactly the edge's endpoints"
+        );
+        oracle.commit_scan(third);
+        // Shrink a middle edge (5, 6) to 0.1: its endpoints rescan
+        // (incident), while source 4 stays clean — the cheapest path
+        // through the shrunk edge still needs dist(4, 5) + 0.1 = 1.1,
+        // which overshoots its radius 1.
+        let mut shrunk = moved.clone();
+        shrunk[5] = 0.1; // edge (5, 6)
+        let fourth = oracle.scan_cycles(&shrunk);
+        assert_eq!(fourth.rescanned(), 2, "a local shrink must rescan only its endpoints");
+    }
+
+    #[test]
+    fn budget_overflow_degrades_to_full_rescans() {
+        let mut rng = Rng::new(19);
+        let inst = crate::graph::generators::type1_complete(10, &mut rng);
+        let g = Arc::new(inst.graph.clone());
+        let mut oracle = MetricOracle::new(g, OracleMode::Collect);
+        oracle.incremental_budget_nodes = 0; // nothing fits: no certificates
+        let x = inst.weights.clone();
+        let first = oracle.scan_cycles(&x);
+        oracle.commit_scan(first);
+        let second = oracle.scan_cycles(&x);
+        assert_eq!(
+            second.rescanned(),
+            10,
+            "uncertified sources must rescan even on a clean iterate"
+        );
     }
 }

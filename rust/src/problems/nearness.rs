@@ -35,17 +35,32 @@ pub struct Nearness<'a> {
     norm_weights: Option<Vec<f64>>,
     /// Constraint delivery mode (the paper uses project-on-find).
     mode: OracleMode,
+    /// Dirty-source incremental separation (Collect mode; identical
+    /// findings, rescans only moved sources).
+    incremental: bool,
 }
 
 impl<'a> Nearness<'a> {
     pub fn new(inst: &'a WeightedInstance) -> Nearness<'a> {
-        Nearness { inst, norm_weights: None, mode: OracleMode::ProjectOnFind }
+        Nearness {
+            inst,
+            norm_weights: None,
+            mode: OracleMode::ProjectOnFind,
+            incremental: true,
+        }
     }
 
     /// Constraint delivery mode; [`OracleMode::Collect`] additionally
     /// unlocks the oracle/sweep overlap (`SolveOptions::overlap`).
     pub fn mode(mut self, mode: OracleMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    /// Toggle the oracle's dirty-source incremental scan (default on;
+    /// `false` forces a full rescan every round — the ablation axis).
+    pub fn incremental(mut self, on: bool) -> Self {
+        self.incremental = on;
         self
     }
 
@@ -70,6 +85,7 @@ impl<'a> Problem<'a> for Nearness<'a> {
         let f = DiagonalQuadratic::new(self.inst.weights.clone(), w);
         let mut oracle = MetricOracle::new(Arc::new(self.inst.graph.clone()), self.mode);
         oracle.report_tol = (opts.violation_tol * 1e-3).max(1e-12);
+        oracle.incremental = self.incremental;
         // Shard-bucketed delivery helps exactly when the sharded engine
         // consumes it; sequential solves keep the historical slot order.
         oracle.shard_bucket = matches!(opts.sweep, SweepStrategy::ShardedParallel { .. });

@@ -184,6 +184,7 @@ fn raw_nearness(
         z_tol: 0.0,
         sweep,
         parallel_min_rows: None,
+        track_movement: true,
     };
     let mut solver = Solver::new(f, cfg);
     if overlap {
@@ -704,6 +705,151 @@ fn scheduler_is_deterministic_across_thread_counts() {
             Some(r) => {
                 for (k, (want, got)) in r.iter().zip(&results).enumerate() {
                     assert_bit_identical(want, got, &format!("serve job {k} t={threads}"));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Incremental separation (PR-5 tentpole): the dirty-source oracle and
+// the engine's movement feedback are pure optimizations — a solve with
+// incremental scans (whether the dirty set comes from the movement log
+// or from the snapshot diff) must be bit-identical to a full-rescan
+// solve, at every thread count, for the plain and overlapped pipelines.
+// ---------------------------------------------------------------------
+
+/// `raw_nearness` with the incremental-scan and movement-tracking knobs
+/// exposed.
+fn raw_nearness_inc(
+    inst: &paf::graph::generators::WeightedInstance,
+    sweep: SweepStrategy,
+    overlap: bool,
+    tol: f64,
+    incremental: bool,
+    track_movement: bool,
+) -> SolverResult {
+    let f = DiagonalQuadratic::unweighted(inst.weights.clone());
+    let mut oracle = MetricOracle::new(Arc::new(inst.graph.clone()), OracleMode::Collect);
+    oracle.report_tol = (tol * 1e-3).max(1e-12);
+    oracle.shard_bucket = matches!(sweep, SweepStrategy::ShardedParallel { .. });
+    oracle.incremental = incremental;
+    let cfg = SolverConfig {
+        max_iters: 500,
+        inner_sweeps: 1,
+        violation_tol: tol,
+        dual_tol: tol,
+        sweep,
+        track_movement,
+        ..Default::default()
+    };
+    let mut solver = Solver::new(f, cfg);
+    if overlap {
+        solver.solve_overlapped(oracle)
+    } else {
+        solver.solve(oracle)
+    }
+}
+
+#[test]
+fn incremental_oracle_is_bit_identical_to_full_rescan() {
+    let mut rng = Rng::new(46);
+    let inst = type1_complete(14, &mut rng);
+    for overlap in [false, true] {
+        let mut reference: Option<SolverResult> = None;
+        for threads in [1usize, 2, 8] {
+            let sweep = SweepStrategy::ShardedParallel { threads };
+            let full = raw_nearness_inc(&inst, sweep, overlap, 1e-6, false, true);
+            assert!(full.converged, "full rescan (t={threads}) did not converge");
+            // Incremental with the movement-log fast path...
+            let inc = raw_nearness_inc(&inst, sweep, overlap, 1e-6, true, true);
+            // ...and with tracking off (snapshot-diff dirty sets only).
+            let diffed = raw_nearness_inc(&inst, sweep, overlap, 1e-6, true, false);
+            assert_bit_identical(
+                &full,
+                &inc,
+                &format!("incremental vs full (t={threads}, overlap={overlap})"),
+            );
+            assert_bit_identical(
+                &full,
+                &diffed,
+                &format!("diff-only incremental vs full (t={threads}, overlap={overlap})"),
+            );
+            // And the movement-tracked incremental solve is itself
+            // thread-count invariant.
+            match &reference {
+                None => reference = Some(inc),
+                Some(r) => assert_bit_identical(
+                    r,
+                    &inc,
+                    &format!("incremental t={threads}, overlap={overlap}"),
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_cc_with_box_rows_matches_full_rescan() {
+    // Correlation clustering exercises the upper-bound box face and the
+    // fused box pass; incremental-vs-full must stay bit-identical
+    // through the public Problem API too.
+    let inst = cc_instance(47);
+    let opts = SolveOptions::new()
+        .max_iters(800)
+        .violation_tol(1e-4)
+        .inner_sweeps(4)
+        .sweep(SweepStrategy::ShardedParallel { threads: 2 });
+    let full = Correlation::dense(&inst)
+        .mode(OracleMode::Collect)
+        .seed(7)
+        .incremental(false)
+        .solve(&opts);
+    let inc = Correlation::dense(&inst).mode(OracleMode::Collect).seed(7).solve(&opts);
+    assert!(full.result.converged && inc.result.converged);
+    assert_bit_identical(&full.result, &inc.result, "cc incremental vs full");
+    assert_eq!(full.labels, inc.labels, "cc rounding differs");
+    // Movement tracking disabled at the options layer: still identical.
+    let untracked = Correlation::dense(&inst)
+        .mode(OracleMode::Collect)
+        .seed(7)
+        .solve(&opts.clone().track_movement(false));
+    assert_bit_identical(&full.result, &untracked.result, "cc untracked incremental");
+}
+
+#[test]
+fn serve_preemption_with_incremental_oracles_stays_deterministic() {
+    // Eviction re-offsets coordinates mid-flight; the movement log must
+    // invalidate (and oracles re-derive dirty sets) rather than carry
+    // stale labels. The scheduler suite pins solo-equivalence already;
+    // this pins it with the default incremental oracles under both
+    // thread extremes again for the mixed preemption trace.
+    use paf::serve::{JobBank, Scheduler, ServeConfig};
+    let jobs = paf::serve::demo_trace(92);
+    let bank = JobBank::materialize(&jobs);
+    let mut reference: Option<Vec<SolverResult>> = None;
+    for threads in [1usize, 8] {
+        let opts = SolveOptions::new()
+            .violation_tol(1e-5)
+            .inner_sweeps(2)
+            .sweep(SweepStrategy::ShardedParallel { threads });
+        let solo: Vec<_> = jobs
+            .iter()
+            .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts))
+            .collect();
+        let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        assert!(stats.all_completed());
+        let results: Vec<SolverResult> =
+            stats.jobs.iter().map(|s| s.result.clone().expect("missing result")).collect();
+        for (k, (got, want)) in results.iter().zip(&solo).enumerate() {
+            assert_bit_identical(&want.result, got, &format!("served job {k} t={threads}"));
+        }
+        match &reference {
+            None => reference = Some(results),
+            Some(r) => {
+                for (k, (want, got)) in r.iter().zip(&results).enumerate() {
+                    assert_bit_identical(want, got, &format!("serve inc job {k} t={threads}"));
                 }
             }
         }

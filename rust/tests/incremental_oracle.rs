@@ -1,0 +1,208 @@
+//! Oracle-level pins for the incremental separation pipeline: the
+//! dirty-source Collect scan must deliver the *identical* constraint
+//! sequence and certificate as a full rescan — across randomized
+//! sweep-like perturbations, through both dirty-set derivations (exact
+//! snapshot diff and the engine's movement log) — and the per-round
+//! double box pass must count its witnesses exactly once.
+//!
+//! These tests drive the oracle against recording sinks (no engine in
+//! the loop) so the delivered sequence is pinned directly; end-to-end
+//! bit-identity of full solves lives in `tests/determinism.rs`.
+
+use paf::core::bregman::DiagonalQuadratic;
+use paf::core::constraint::Constraint;
+use paf::core::oracle::{Oracle, OracleOutcome, ProjectionSink};
+use paf::graph::Graph;
+use paf::problems::metric_oracle::{MetricOracle, OracleMode};
+use paf::util::Rng;
+use std::sync::Arc;
+
+/// Records deliveries without projecting: `x` never moves inside a
+/// round, so the second box pass re-sees every violation — which is
+/// exactly what exposes double counting.
+struct CaptureSink {
+    x: Vec<f64>,
+    delivered: Vec<Constraint>,
+}
+
+impl CaptureSink {
+    fn new(x: &[f64]) -> CaptureSink {
+        CaptureSink { x: x.to_vec(), delivered: Vec::new() }
+    }
+}
+
+impl ProjectionSink for CaptureSink {
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn remember(&mut self, c: &Constraint) {
+        self.delivered.push(c.clone());
+    }
+
+    fn project_and_remember(&mut self, c: &Constraint) {
+        self.delivered.push(c.clone());
+    }
+}
+
+/// CaptureSink plus a hand-maintained movement log, so the oracle's
+/// movement-hint fast path (instead of the snapshot diff) is exercised:
+/// the test appends every coordinate it perturbs, exactly like the
+/// engine marks every coordinate it moves.
+struct TrackedCaptureSink {
+    inner: CaptureSink,
+    log: Vec<u32>,
+}
+
+impl ProjectionSink for TrackedCaptureSink {
+    fn x(&self) -> &[f64] {
+        &self.inner.x
+    }
+
+    fn remember(&mut self, c: &Constraint) {
+        self.inner.remember(c);
+    }
+
+    fn project_and_remember(&mut self, c: &Constraint) {
+        self.inner.project_and_remember(c);
+    }
+
+    fn movement_cursor(&mut self) -> Option<u64> {
+        Some(self.log.len() as u64)
+    }
+
+    fn moved_since(&self, cursor: u64, out: &mut Vec<u32>) -> bool {
+        if cursor > self.log.len() as u64 {
+            return false;
+        }
+        out.extend(&self.log[cursor as usize..]);
+        true
+    }
+}
+
+fn separate_capture(oracle: &mut MetricOracle, x: &[f64]) -> (OracleOutcome, Vec<Constraint>) {
+    let mut sink = CaptureSink::new(x);
+    let out = Oracle::<DiagonalQuadratic>::separate(oracle, &mut sink);
+    (out, sink.delivered)
+}
+
+fn assert_same_round(
+    label: &str,
+    full: &(OracleOutcome, Vec<Constraint>),
+    inc: &(OracleOutcome, Vec<Constraint>),
+) {
+    assert_eq!(full.0.found, inc.0.found, "{label}: found diverged");
+    assert_eq!(
+        full.0.max_violation.to_bits(),
+        inc.0.max_violation.to_bits(),
+        "{label}: certificate diverged"
+    );
+    assert_eq!(full.1, inc.1, "{label}: delivered sequence diverged");
+}
+
+#[test]
+fn incremental_equals_full_across_randomized_perturbations() {
+    let mut rng = Rng::new(301);
+    for (gi, graph) in [
+        Graph::complete(14),
+        paf::graph::generators::erdos_renyi(24, 0.3, &mut Rng::new(77)),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let g = Arc::new(graph);
+        let m = g.num_edges();
+        let mut full = MetricOracle::new(g.clone(), OracleMode::Collect);
+        full.incremental = false;
+        let mut inc = MetricOracle::new(g.clone(), OracleMode::Collect);
+        let mut x: Vec<f64> = (0..m).map(|_| rng.uniform(-0.2, 2.0)).collect();
+        for round in 0..25 {
+            let a = separate_capture(&mut full, &x);
+            let b = separate_capture(&mut inc, &x);
+            assert_same_round(&format!("graph {gi} round {round} (diff path)"), &a, &b);
+            // Sweep-like perturbation: between 0 and ~10% of coordinates.
+            let moves = rng.below(1 + m / 10);
+            for _ in 0..moves {
+                let e = rng.below(m);
+                x[e] += rng.uniform(-0.15, 0.15);
+            }
+        }
+    }
+}
+
+#[test]
+fn movement_hint_path_equals_full_scan() {
+    let mut rng = Rng::new(302);
+    let g = Arc::new(Graph::complete(16));
+    let m = g.num_edges();
+    let mut full = MetricOracle::new(g.clone(), OracleMode::Collect);
+    full.incremental = false;
+    let mut inc = MetricOracle::new(g.clone(), OracleMode::Collect);
+    let mut tracked =
+        TrackedCaptureSink { inner: CaptureSink::new(&[]), log: Vec::new() };
+    let mut x: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 2.0)).collect();
+    for round in 0..20 {
+        let a = separate_capture(&mut full, &x);
+        tracked.inner = CaptureSink::new(&x);
+        let out = Oracle::<DiagonalQuadratic>::separate(&mut inc, &mut tracked);
+        assert_same_round(
+            &format!("round {round} (movement-hint path)"),
+            &a,
+            &(out, std::mem::take(&mut tracked.inner.delivered)),
+        );
+        // Perturb AND log — the engine's contract: every moved
+        // coordinate is marked (a superset never hurts, a miss would).
+        for _ in 0..rng.below(1 + m / 20) {
+            let e = rng.below(m);
+            x[e] += rng.uniform(-0.1, 0.1);
+            tracked.log.push(e as u32);
+        }
+    }
+}
+
+#[test]
+fn box_violations_count_once_but_deliver_twice() {
+    // K3 with one negative edge: exactly one nonneg violation, no cycle
+    // violations under the clamp (the cycle faces of the clamped iterate
+    // are metric). The old double-counting bug reported found == 2 here.
+    let g = Arc::new(Graph::complete(3));
+    let mut oracle = MetricOracle::new(g.clone(), OracleMode::Collect);
+    let x = vec![-1.0, 1.0, 1.0];
+    let (out, delivered) = separate_capture(&mut oracle, &x);
+    assert_eq!(out.found, 1, "box violations must count on the first pass only");
+    assert_eq!(out.max_violation, 1.0);
+    // Both passes still *deliver* every box row (relaxation projections
+    // need them): 3 nonneg rows twice, no cycle rows.
+    assert_eq!(delivered.len(), 6, "both box passes must keep delivering");
+    assert!(delivered.iter().all(|c| c.indices.len() == 1));
+}
+
+#[test]
+fn upper_bound_violations_also_count_once() {
+    let g = Arc::new(Graph::complete(3));
+    let mut oracle = MetricOracle::new(g.clone(), OracleMode::Collect);
+    oracle.upper_bound = Some(1.5);
+    // Two edges above the bound, none negative, cycle faces metric.
+    let x = vec![0.5, 1.9, 1.9];
+    let (out, delivered) = separate_capture(&mut oracle, &x);
+    assert_eq!(out.found, 2, "upper-bound violations must count once");
+    assert!((out.max_violation - 0.4).abs() < 1e-12);
+    // 3 nonneg + 3 upper rows per pass, two passes, no cycles.
+    assert_eq!(delivered.len(), 12);
+}
+
+#[test]
+fn overlap_scan_deliver_split_matches_separate() {
+    use paf::core::oracle::OverlappableOracle;
+    let mut rng = Rng::new(303);
+    let g = Arc::new(Graph::complete(12));
+    let m = g.num_edges();
+    let x: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 2.0)).collect();
+    let mut a = MetricOracle::new(g.clone(), OracleMode::Collect);
+    let mut b = MetricOracle::new(g.clone(), OracleMode::Collect);
+    let full = separate_capture(&mut a, &x);
+    let scan = OverlappableOracle::<DiagonalQuadratic>::scan(&b, &x);
+    let mut sink = CaptureSink::new(&x);
+    let out = OverlappableOracle::<DiagonalQuadratic>::deliver(&mut b, scan, &mut sink);
+    assert_same_round("scan+deliver vs separate", &full, &(out, sink.delivered));
+}
