@@ -25,6 +25,11 @@
 //!       serve scheduler with staggered arrivals — the fleet changes
 //!       mid-solve (admissions + compaction), but the sweeps stay
 //!       amortised across whatever is running
+//!   P9  lazy sweep scheduling on a genuine late solver round: an eager
+//!       full sweep vs the movement-driven scheduler (`sweep/lazy`,
+//!       which skips armed rows whose support did not move) vs the
+//!       settled floor (`sweep/lazy-clean`), all from the same snapshot
+//!       — the iterates stay bit-identical, only the visit count drops
 //!
 //! All timings are also written to `reports/BENCH_perf_hotpath.json`
 //! (machine-readable; see `BenchCtx::write_json`) so the perf trajectory
@@ -124,7 +129,12 @@ fn main() {
         let m = 40_000;
         let d: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 2.0)).collect();
         let f = DiagonalQuadratic::unweighted(d.clone());
-        let mut s = Solver::new(f, SolverConfig { record_trace: false, ..Default::default() });
+        // Lazy scheduling must stay off here: the per-run reset below
+        // re-seeds x and the duals behind the movement tracker's back,
+        // which would invalidate the scheduler's zero-step proofs.
+        let cfg =
+            SolverConfig { record_trace: false, lazy_sweep: false, ..Default::default() };
+        let mut s = Solver::new(f, cfg);
         for _ in 0..20_000 {
             let e = rng.below(m) as u32;
             let a = rng.below(m) as u32;
@@ -317,6 +327,75 @@ fn main() {
         println!("    -> {rounds} scheduler rounds (staggered arrivals at 0/2/4)");
     }
 
+    // P9: lazy sweep scheduling on a genuine late solver round. Drive a
+    // real Collect nearness solve until one round moves <5% of the
+    // coordinates, snapshot the iterate + duals, then measure one sweep
+    // from that state under three regimes. Every run restores the
+    // snapshot and rebuilds the executor (a fresh scheduler holds no
+    // movement cursor, so its first sweep projects everything and
+    // re-syncs — restoring x/z behind the tracker's back stays exact),
+    // then runs `settle` unmeasured sweeps so the scheduler can arm
+    // settled rows before the timed sweep:
+    //   sweep/eager       — scheduler off: the timed sweep visits every row
+    //   sweep/lazy        — scheduler on, same settle depth: armed rows
+    //                       whose support did not move are skipped
+    //   sweep/lazy-clean  — deeper settle: the no-new-movement floor,
+    //                       the lazy analogue of P1/incremental-clean
+    // The eager and lazy end states must stay bit-identical; only the
+    // visit count may differ.
+    {
+        let mut rng = Rng::new(58);
+        let inst = type1_complete(ctx.scaled(200), &mut rng);
+        let mut s = late_round_solver(&inst);
+        let rows = s.active.len();
+        assert!(rows > 0, "late round left no remembered rows to sweep");
+        let x_snap = s.x.clone();
+        let z_snap: Vec<f64> = (0..rows).map(|r| s.active.z(r)).collect();
+        let axes = [("eager", false, 2usize), ("lazy", true, 2), ("lazy-clean", true, 6)];
+        let mut projected = [0usize; 3];
+        let mut skipped = [0usize; 3];
+        let mut x_after: Vec<Vec<f64>> = Vec::new();
+        for (i, &(label, lazy, settle)) in axes.iter().enumerate() {
+            all.push(ctx.bench_marked(&format!("P9/late-sweep/{label}"), |_, region| {
+                // Rebuild the executor (fresh, unsynced scheduler) and
+                // restore the snapshot, all outside the timed region.
+                s.config.lazy_sweep = lazy;
+                s.set_sweep_strategy(SweepStrategy::Sequential);
+                s.x.copy_from_slice(&x_snap);
+                for (r, &z) in z_snap.iter().enumerate() {
+                    s.active.set_z(r, z);
+                }
+                for _ in 0..settle {
+                    s.project_sweep();
+                }
+                let (rp, rs) = (s.sweep_rows_projected, s.sweep_rows_skipped);
+                region.start();
+                let moved = s.project_sweep();
+                projected[i] = s.sweep_rows_projected - rp;
+                skipped[i] = s.sweep_rows_skipped - rs;
+                moved
+            }));
+            x_after.push(s.x.clone());
+            println!(
+                "    -> timed sweep visited {}/{rows} rows, skipped {} ({label})",
+                projected[i], skipped[i]
+            );
+        }
+        // The skip rule is exact: same settle depth => bit-identical x.
+        assert_eq!(x_after[0], x_after[1], "lazy sweep diverged from eager (bitwise)");
+        assert_eq!(projected[0], rows, "an eager sweep visits every remembered row");
+        assert_eq!(skipped[0], 0, "eager sweeps never skip");
+        assert_eq!(projected[1] + skipped[1], rows, "lazy visit/skip must partition the rows");
+        assert!(
+            projected[1] < projected[0],
+            "the lazy sweep must project strictly fewer rows on a late round \
+             ({} vs {})",
+            projected[1],
+            projected[0],
+        );
+        assert_eq!(projected[2] + skipped[2], rows, "lazy-clean counters must partition too");
+    }
+
     // P5: active-set churn (insert + forget).
     {
         let mut rng = Rng::new(55);
@@ -407,4 +486,33 @@ fn late_round_pair(
     let last = s.x.clone();
     let moved = last.iter().zip(&prev).filter(|(a, b)| a != b).count();
     (prev, last, moved)
+}
+
+/// Like [`late_round_pair`], but for the P9 sweep axes: drive the solve
+/// to the same <5%-movement regime and hand back the live solver — the
+/// remembered active set, iterate and duals of a genuine late round.
+fn late_round_solver(
+    inst: &paf::graph::generators::WeightedInstance,
+) -> Solver<DiagonalQuadratic> {
+    let m = inst.graph.num_edges();
+    let cfg = SolverConfig {
+        inner_sweeps: 1,
+        violation_tol: 1e-7,
+        dual_tol: 1e-7,
+        record_trace: false,
+        ..Default::default()
+    };
+    let mut s = Solver::new(DiagonalQuadratic::unweighted(inst.weights.clone()), cfg);
+    let mut oracle = MetricOracle::new(Arc::new(inst.graph.clone()), OracleMode::Collect);
+    let mut prev = s.x.clone();
+    for _ in 0..60 {
+        let out = s.separate_with(&mut oracle);
+        s.sweep_phase();
+        let moved = s.x.iter().zip(&prev).filter(|(a, b)| a != b).count();
+        if (moved > 0 && moved * 20 < m) || out.max_violation == 0.0 {
+            break;
+        }
+        prev.copy_from_slice(&s.x);
+    }
+    s
 }

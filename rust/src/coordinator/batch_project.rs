@@ -128,6 +128,7 @@ impl<'rt> PjrtSweep<'rt> {
             active.set_z(r as usize, znew[slot] as f64);
             stats.dual_movement += c[slot].abs() as f64;
             stats.projections += 1;
+            stats.rows_projected += 1;
         }
         Ok(())
     }
@@ -166,6 +167,7 @@ impl SweepExecutor<DiagonalQuadratic> for PjrtSweep<'_> {
                 stats.dual_movement +=
                     crate::core::engine::project_row_in_place(f, x, active, r as usize);
                 stats.projections += 1;
+                stats.rows_projected += 1;
             }
         }
         stats

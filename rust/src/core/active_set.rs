@@ -34,6 +34,12 @@ pub struct ActiveSet {
     /// aliasing would be a data race, not just wrong numbers. Clones get
     /// a fresh id: they start identical but diverge independently.
     instance_id: u64,
+    /// Monotonic count of *new-slot* insertions (never decremented by
+    /// FORGET). Together with the generation and length deltas this lets
+    /// slot-keyed caches recognize a pure oracle append — `Δgeneration
+    /// == Δinserts == Δlen` — without diffing membership (the lazy sweep
+    /// scheduler's fast path).
+    inserts: u64,
 }
 
 impl Default for ActiveSet {
@@ -49,6 +55,7 @@ impl Clone for ActiveSet {
             index: self.index.clone(),
             generation: self.generation,
             instance_id: next_instance_id(),
+            inserts: self.inserts,
         }
     }
 }
@@ -60,6 +67,7 @@ impl ActiveSet {
             index: HashMap::new(),
             generation: 0,
             instance_id: next_instance_id(),
+            inserts: 0,
         }
     }
 
@@ -74,6 +82,12 @@ impl ActiveSet {
     #[inline]
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// Monotonic new-slot insertion count (see the field docs).
+    #[inline]
+    pub fn inserts(&self) -> u64 {
+        self.inserts
     }
 
     pub fn len(&self) -> usize {
@@ -115,6 +129,7 @@ impl ActiveSet {
         let slot = self.store.push_with_key(c, 0.0, key);
         self.index.insert(key, slot as u32);
         self.generation += 1;
+        self.inserts += 1;
         slot
     }
 
@@ -337,6 +352,28 @@ mod tests {
         let g2 = s.generation();
         s.forget_all(); // already empty: no membership change
         assert_eq!(s.generation(), g2);
+    }
+
+    #[test]
+    fn inserts_counter_is_monotonic_and_counts_new_slots_only() {
+        let mut s = ActiveSet::new();
+        assert_eq!(s.inserts(), 0);
+        let slot = s.insert(&Constraint::nonneg(0));
+        s.insert(&Constraint::nonneg(1));
+        assert_eq!(s.inserts(), 2);
+        // Duplicate merges and dual updates are not insertions.
+        s.insert(&Constraint::nonneg(0));
+        s.set_z(slot, 1.0);
+        assert_eq!(s.inserts(), 2);
+        // FORGET never rewinds the counter (it is the append-detection
+        // half of the lazy scheduler's structural key).
+        assert_eq!(s.forget_inactive(), 1);
+        assert_eq!(s.inserts(), 2);
+        s.forget_all();
+        assert_eq!(s.inserts(), 2);
+        s.insert(&Constraint::nonneg(2));
+        assert_eq!(s.inserts(), 3);
+        assert_eq!(s.clone().inserts(), 3, "clones keep the count");
     }
 
     #[test]

@@ -1,0 +1,626 @@
+//! Movement-driven lazy sweep scheduling (greedy Gauss–Southwell) — the
+//! symmetric twin of the incremental separation oracle: PR 5 made the
+//! *oracle* cost scale with iterate movement, this module does the same
+//! for the *sweep*.
+//!
+//! # The skip rule (exact, not heuristic)
+//!
+//! The projection kernel's step for row `r` is a pure function of the
+//! iterate restricted to `r`'s support and of `r`'s dual:
+//! `c = min(z_r, θ_r(x|support))`. Therefore, if
+//!
+//! 1. `r`'s last projection had a **zero step** (so it changed neither
+//!    `x` nor `z_r`), and
+//! 2. no coordinate in `r`'s support moved since that visit, and
+//! 3. `z_r` was not raised in between (no engine path ever raises a
+//!    dual: sweeps and the sink only run `z ← z − c` with `c = min(z, θ)`,
+//!    and FORGET/`z_tol` only lower duals toward zero — which keeps a
+//!    zero-step row's step at zero, since step 0 implies `θ ≥ 0`),
+//!
+//! then re-running the kernel would compute bit-identical inputs and
+//! return a zero step again. Skipping the row is a *no-op elision*, so a
+//! lazy sweep is **bit-identical** to the eager sweep in `x`, every
+//! dual, `SweepStats::projections`/`dual_movement`, and the per-row
+//! recording channel — only [`SweepStats::rows_projected`] shrinks.
+//!
+//! # How movement reaches the scheduler
+//!
+//! Two channels, both conservative supersets of real movement:
+//!
+//! - **Within a sweep**, the executor calls
+//!   [`LazyScheduler::note_moved`] at its serial bookkeeping point for
+//!   every moved row; the [`RowIndex`] (coordinate → incident rows)
+//!   fans the moved support out to dirty flags, so a later row in the
+//!   same Gauss–Seidel pass is never skipped against a stale predicate.
+//! - **Between sweeps**, the solver's [`MovementTracker`] log covers
+//!   every other mutation path (the engine sink's on-find projections
+//!   and fused box pass). [`LazyScheduler::begin_sweep`] drains the log
+//!   window since the previous sweep; if the window is not covered
+//!   (log evicted, tracker invalidated by a checkpoint restore or a
+//!   coordinate relabeling), the whole sweep falls back to project-all
+//!   — the fallback is the eager sweep, so correctness never depends
+//!   on the log.
+//!
+//! # FORGET staleness rule
+//!
+//! The scheduler caches *scheduling* metadata only (dirty/armed flags
+//! and priorities) — never dual values. Duals live solely in the
+//! [`ActiveSet`], so the FORGET zero-dual test always reads live state:
+//! a skippable row's dual is, by the skip rule, exactly the value its
+//! last projection left (and the last refresh saw), which is precisely
+//! what an eager sweep would have handed FORGET. Skipped rows therefore
+//! participate in dual relaxation and FORGET *unchanged*; no refresh
+//! pass is needed before eviction.
+//!
+//! # Priority order
+//!
+//! Within each support-disjoint shard the remaining (non-skipped) rows
+//! are visited in descending order of their last |dual step| (fresh
+//! rows first) — greedy Gauss–Southwell. Projections inside a shard
+//! commute (disjoint supports), so the ordering is free of arithmetic
+//! consequences; the stats/bookkeeping reduction stays in slot order,
+//! which keeps lazy ≡ eager bitwise. The sequential executor and the
+//! sharded tail are Gauss–Seidel chains whose rows do *not* commute, so
+//! they skip but never reorder.
+
+use super::movement::MovementTracker;
+use crate::core::active_set::ActiveSet;
+use crate::core::constraint::SLOT_DROPPED;
+
+/// Coordinate → incident remembered rows, keyed to the active set's
+/// `(instance_id, generation)`. Kept current across oracle admission
+/// (append), FORGET compaction (stable-slot remap) and serve-time
+/// re-offsetting (invalidate + lazy rebuild: the labels changed).
+#[derive(Debug, Clone, Default)]
+pub struct RowIndex {
+    /// `rows_of[coord]` = slots of the rows whose support contains it.
+    rows_of: Vec<Vec<u32>>,
+    instance: u64,
+    generation: u64,
+}
+
+impl RowIndex {
+    pub fn new() -> RowIndex {
+        RowIndex::default()
+    }
+
+    /// Does the index describe `active`'s current membership?
+    pub fn is_current(&self, active: &ActiveSet) -> bool {
+        self.instance == active.instance_id() && self.generation == active.generation()
+    }
+
+    /// Make the index current: full rebuild on a key mismatch, plain
+    /// resize when only the coordinate space changed (fleet growth adds
+    /// coordinates no remembered row touches yet; a tail-range removal
+    /// leaves the dropped entries empty).
+    pub fn ensure(&mut self, active: &ActiveSet, dim: usize) {
+        if !self.is_current(active) {
+            self.rebuild(active, dim);
+            return;
+        }
+        if self.rows_of.len() != dim {
+            self.rows_of.resize_with(dim, Vec::new);
+        }
+    }
+
+    /// Rebuild from scratch: one linear scan, O(nnz + dim).
+    pub fn rebuild(&mut self, active: &ActiveSet, dim: usize) {
+        for v in &mut self.rows_of {
+            v.clear();
+        }
+        self.rows_of.resize_with(dim, Vec::new);
+        for r in 0..active.len() {
+            for &c in active.view(r).indices {
+                if let Some(v) = self.rows_of.get_mut(c as usize) {
+                    v.push(r as u32);
+                }
+            }
+        }
+        self.instance = active.instance_id();
+        self.generation = active.generation();
+    }
+
+    /// Append-only growth: rows `from..active.len()` are new (the
+    /// oracle's merge); existing slots and labels are untouched.
+    pub fn append_rows(&mut self, active: &ActiveSet, from: usize, dim: usize) {
+        if self.rows_of.len() < dim {
+            self.rows_of.resize_with(dim, Vec::new);
+        }
+        for r in from..active.len() {
+            for &c in active.view(r).indices {
+                if let Some(v) = self.rows_of.get_mut(c as usize) {
+                    v.push(r as u32);
+                }
+            }
+        }
+        self.instance = active.instance_id();
+        self.generation = active.generation();
+    }
+
+    /// FORGET: apply the stable-slot compaction map in place, O(nnz).
+    pub fn remap_after_forget(&mut self, map: &[u32], generation_after: u64) {
+        for v in &mut self.rows_of {
+            v.retain_mut(|r| {
+                let nr = map.get(*r as usize).copied().unwrap_or(SLOT_DROPPED);
+                if nr == SLOT_DROPPED {
+                    false
+                } else {
+                    *r = nr;
+                    true
+                }
+            });
+        }
+        self.generation = generation_after;
+    }
+
+    /// Force the next [`RowIndex::ensure`] to rebuild (coordinate
+    /// labels changed: the stored incidences are orphaned).
+    pub fn invalidate(&mut self) {
+        // Instance ids start at 1, so 0 never matches a real set.
+        self.instance = 0;
+    }
+
+    /// Rows whose support contains `coord` (empty for out-of-range).
+    #[inline]
+    pub fn rows_of(&self, coord: u32) -> &[u32] {
+        self.rows_of.get(coord as usize).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+/// Per-executor lazy sweep state: one dirty/armed flag pair and a
+/// Gauss–Southwell priority per slot, plus the [`RowIndex`] and the
+/// movement-log cursor that keep them exact. See the module docs for
+/// the skip rule and its proof obligations.
+#[derive(Debug, Clone)]
+pub struct LazyScheduler {
+    enabled: bool,
+    /// `armed[r]`: `r`'s last projection had a zero step — skippable
+    /// unless its support moved since.
+    armed: Vec<bool>,
+    /// `dirty[r]`: some support coordinate of `r` moved since `r`'s
+    /// last visit (conservative superset).
+    dirty: Vec<bool>,
+    /// Last |dual step| per slot (`∞` for never-visited rows) — the
+    /// greedy priority.
+    last_step: Vec<f64>,
+    index: RowIndex,
+    /// Per-coordinate dedup stamp so one coordinate's incidence list is
+    /// walked at most once per sweep.
+    coord_epoch: Vec<u64>,
+    epoch: u64,
+    /// Movement-log cursor of the last completed tracked sweep (`None`
+    /// = no covered window: the next sweep projects everything).
+    synced_to: Option<u64>,
+    /// Structural key mirroring the active set (with the monotonic
+    /// insert counter, so pure oracle appends are recognized without
+    /// diffing membership).
+    instance: u64,
+    generation: u64,
+    inserts: u64,
+    /// Reused drain buffer for `moved_since`.
+    drain: Vec<u32>,
+}
+
+impl LazyScheduler {
+    pub fn new(enabled: bool) -> LazyScheduler {
+        LazyScheduler {
+            enabled,
+            armed: Vec::new(),
+            dirty: Vec::new(),
+            last_step: Vec::new(),
+            index: RowIndex::new(),
+            coord_epoch: Vec::new(),
+            epoch: 0,
+            synced_to: None,
+            instance: 0,
+            generation: 0,
+            inserts: 0,
+            drain: Vec::new(),
+        }
+    }
+
+    /// Is lazy scheduling on for this executor?
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+        if !on {
+            self.synced_to = None;
+        }
+    }
+
+    /// Full reset: nothing armed, everything dirty, priorities fresh.
+    fn reset(&mut self, active: &ActiveSet, dim: usize) {
+        let n = active.len();
+        self.armed.clear();
+        self.armed.resize(n, false);
+        self.dirty.clear();
+        self.dirty.resize(n, true);
+        self.last_step.clear();
+        self.last_step.resize(n, f64::INFINITY);
+        self.instance = active.instance_id();
+        self.generation = active.generation();
+        self.inserts = active.inserts();
+        self.synced_to = None;
+        self.index.rebuild(active, dim);
+    }
+
+    /// Start one tracked sweep: sync structure (membership growth /
+    /// identity changes), then drain the movement-log window since the
+    /// last sweep into dirty flags. Returns `true` when skipping is
+    /// allowed this sweep; `false` means project-all (the state still
+    /// warms: every visit arms or re-dirties rows for the next sweep).
+    pub fn begin_sweep(
+        &mut self,
+        active: &ActiveSet,
+        dim: usize,
+        tracker: &MovementTracker,
+    ) -> bool {
+        // Structural sync. A pure oracle append is recognized by the
+        // generation/insert/len deltas agreeing; anything else (foreign
+        // instance, compaction we were not told about, forget_all,
+        // restore) resets — which is always correct, just not lazy.
+        if active.instance_id() != self.instance {
+            self.reset(active, dim);
+        } else if active.generation() != self.generation {
+            let dg = active.generation().wrapping_sub(self.generation);
+            let di = active.inserts().wrapping_sub(self.inserts);
+            let old_len = self.armed.len();
+            let grown = active.len().saturating_sub(old_len) as u64;
+            if old_len <= active.len() && dg == di && di == grown {
+                self.armed.resize(active.len(), false);
+                self.dirty.resize(active.len(), true);
+                self.last_step.resize(active.len(), f64::INFINITY);
+                self.index.append_rows(active, old_len, dim);
+                self.generation = active.generation();
+                self.inserts = active.inserts();
+            } else {
+                self.reset(active, dim);
+            }
+        } else if self.armed.len() != active.len() {
+            // Equal generations imply equal membership; defensive.
+            self.reset(active, dim);
+        }
+        self.index.ensure(active, dim);
+        if self.coord_epoch.len() != dim {
+            self.coord_epoch.clear();
+            self.coord_epoch.resize(dim, 0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+
+        // Movement sync: dirty every row whose support was touched
+        // since the last completed sweep (sink on-find projections, the
+        // fused box pass). An uncovered window means unknown movement:
+        // fall back to project-all for this sweep.
+        let mut covered = false;
+        if let Some(prev) = self.synced_to {
+            let mut buf = std::mem::take(&mut self.drain);
+            buf.clear();
+            if tracker.moved_since(prev, &mut buf) {
+                covered = true;
+                for i in 0..buf.len() {
+                    self.touch_coord(buf[i]);
+                }
+            }
+            self.drain = buf;
+        }
+        if !covered {
+            self.synced_to = None;
+        }
+        covered
+    }
+
+    /// End the tracked sweep: the next window starts *after* this
+    /// sweep's own marks (they were already folded into dirty flags by
+    /// [`LazyScheduler::note_moved`] at the bookkeeping point). Takes
+    /// the cursor with [`MovementTracker::take_cursor`] so the dedup
+    /// epoch rolls over: a coordinate stamped during this sweep that
+    /// moves *again* afterwards (a sink on-find projection or box pass
+    /// before the next sweep) is re-logged after the cursor instead of
+    /// being suppressed by its intra-sweep stamp.
+    pub fn end_sweep(&mut self, tracker: &mut MovementTracker) {
+        self.synced_to = tracker.take_cursor();
+    }
+
+    /// Discard the movement window (an untracked sweep or external
+    /// surgery mutated state behind the scheduler's back): the next
+    /// tracked sweep projects everything.
+    pub fn poison(&mut self) {
+        self.synced_to = None;
+    }
+
+    /// Is row `r` provably a zero-step no-op this sweep?
+    #[inline]
+    pub fn can_skip(&self, r: usize) -> bool {
+        self.armed[r] && !self.dirty[r]
+    }
+
+    /// Record a visit's outcome (`moved` = |dual step|, 0.0 for a
+    /// no-op). Zero-step rows arm; moved rows stay hot and their new
+    /// |step| becomes the next sweep's priority.
+    #[inline]
+    pub fn visited(&mut self, r: usize, moved: f64) {
+        self.armed[r] = moved == 0.0;
+        self.dirty[r] = false;
+        self.last_step[r] = moved;
+    }
+
+    /// Fan a moved row's support out to the incident rows' dirty flags
+    /// (the intra-sweep channel). Never deduped: a coordinate may move
+    /// *again* after an incident row was already visited this sweep, and
+    /// that row must be re-dirtied or its next-sweep skip would be
+    /// tested against a stale predicate. (The begin-of-sweep drain *is*
+    /// deduped — see [`LazyScheduler::touch_coord`] — because no row has
+    /// been visited yet when it runs, so dirtying there is idempotent.)
+    pub fn note_moved(&mut self, support: &[u32]) {
+        for &c in support {
+            self.dirty_rows_of(c);
+        }
+    }
+
+    /// Drain-phase touch: dirty `c`'s incident rows at most once per
+    /// sweep. Only sound before any row of the sweep has been visited.
+    fn touch_coord(&mut self, c: u32) {
+        let ci = c as usize;
+        if ci >= self.coord_epoch.len() || self.coord_epoch[ci] == self.epoch {
+            return;
+        }
+        self.coord_epoch[ci] = self.epoch;
+        self.dirty_rows_of(c);
+    }
+
+    fn dirty_rows_of(&mut self, c: u32) {
+        for &r in self.index.rows_of(c) {
+            if let Some(d) = self.dirty.get_mut(r as usize) {
+                *d = true;
+            }
+        }
+    }
+
+    /// Sort `visit` (slots of one support-disjoint shard) into greedy
+    /// Gauss–Southwell order: largest last |dual step| first, fresh
+    /// (never-visited, `∞`) rows before everything, slot ascending as
+    /// the deterministic tie-break.
+    pub fn order_by_priority(&self, visit: &mut [u32]) {
+        visit.sort_by(|&a, &b| {
+            let (pa, pb) = (self.last_step[a as usize], self.last_step[b as usize]);
+            pb.partial_cmp(&pa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+    }
+
+    /// FORGET notification (same contract as
+    /// [`super::SweepExecutor::after_forget`]): remap the per-slot state
+    /// through the stable-slot compaction map.
+    pub fn after_forget(
+        &mut self,
+        map: &[u32],
+        instance: u64,
+        generation_before: u64,
+        generation_after: u64,
+    ) {
+        if instance != self.instance || generation_before != self.generation {
+            return;
+        }
+        debug_assert_eq!(map.len(), self.armed.len());
+        let mut new_len = 0usize;
+        for (old, &new) in map.iter().enumerate() {
+            if new == SLOT_DROPPED {
+                continue;
+            }
+            let n = new as usize;
+            // Compaction preserves order (new <= old), so the forward
+            // in-place copy never clobbers unread entries.
+            self.armed[n] = self.armed[old];
+            self.dirty[n] = self.dirty[old];
+            self.last_step[n] = self.last_step[old];
+            new_len = n + 1;
+        }
+        self.armed.truncate(new_len);
+        self.dirty.truncate(new_len);
+        self.last_step.truncate(new_len);
+        self.generation = generation_after;
+        self.index.remap_after_forget(map, generation_after);
+    }
+
+    /// Re-offset notification: slots and flags survive (an injective
+    /// coordinate relabeling changes neither any row's dual nor the
+    /// values at its support), but the incidence index is label-keyed
+    /// and must rebuild, and the movement log was invalidated — the
+    /// next sweep projects everything once.
+    pub fn after_reoffset(&mut self, instance: u64, generation_before: u64, generation_after: u64) {
+        if instance != self.instance || generation_before != self.generation {
+            return;
+        }
+        self.generation = generation_after;
+        self.index.invalidate();
+        self.synced_to = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::constraint::Constraint;
+
+    fn set_of(rows: &[(&[u32], f64)]) -> ActiveSet {
+        let mut s = ActiveSet::new();
+        for (idx, z) in rows {
+            let coeffs = vec![1.0; idx.len()];
+            let slot = s.insert(&Constraint::new(idx.to_vec(), coeffs, 0.0));
+            s.set_z(slot, *z);
+        }
+        s
+    }
+
+    #[test]
+    fn row_index_tracks_incidence_through_forget_and_append() {
+        let mut s = set_of(&[(&[0, 1], 1.0), (&[1, 2], 0.0), (&[3], 2.0)]);
+        let mut idx = RowIndex::new();
+        idx.ensure(&s, 5);
+        assert_eq!(idx.rows_of(1), &[0, 1]);
+        assert_eq!(idx.rows_of(3), &[2]);
+        assert_eq!(idx.rows_of(4), &[] as &[u32]);
+        assert!(idx.is_current(&s));
+        // FORGET drops row 1 (z == 0); the remap keeps the index exact.
+        let mut map = Vec::new();
+        let g_after = {
+            s.forget_inactive_with_map(&mut map);
+            s.generation()
+        };
+        idx.remap_after_forget(&map, g_after);
+        assert!(idx.is_current(&s));
+        assert_eq!(idx.rows_of(1), &[0]);
+        assert_eq!(idx.rows_of(2), &[] as &[u32]);
+        assert_eq!(idx.rows_of(3), &[1], "row 2 compacted to slot 1");
+        // Append-only growth: a new row lands without a full rebuild.
+        let slot = s.insert(&Constraint::new(vec![2, 4], vec![1.0, 1.0], 0.0));
+        idx.append_rows(&s, slot, 5);
+        assert!(idx.is_current(&s));
+        assert_eq!(idx.rows_of(4), &[slot as u32]);
+        // Invalidation forces the next ensure to rebuild.
+        idx.invalidate();
+        assert!(!idx.is_current(&s));
+        idx.ensure(&s, 5);
+        assert!(idx.is_current(&s));
+        assert_eq!(idx.rows_of(2), &[slot as u32]);
+    }
+
+    #[test]
+    fn scheduler_recognizes_pure_appends_and_resets_otherwise() {
+        let mut s = set_of(&[(&[0], 1.0), (&[1], 1.0)]);
+        let mut tracker = MovementTracker::new(4, true);
+        let mut sched = LazyScheduler::new(true);
+        // First sweep: nothing synced yet, so no skipping.
+        assert!(!sched.begin_sweep(&s, 4, &tracker));
+        sched.visited(0, 0.0);
+        sched.visited(1, 0.5);
+        sched.end_sweep(&mut tracker);
+        // Second sweep with no movement: row 0 armed+clean, row 1 hot.
+        assert!(sched.begin_sweep(&s, 4, &tracker));
+        assert!(sched.can_skip(0));
+        assert!(!sched.can_skip(1));
+        sched.visited(1, 0.0);
+        sched.end_sweep(&mut tracker);
+        // A pure oracle append keeps the armed state of old rows.
+        s.insert(&Constraint::new(vec![2], vec![1.0], 0.0));
+        assert!(sched.begin_sweep(&s, 4, &tracker));
+        assert!(sched.can_skip(0), "append must not disturb armed rows");
+        assert!(!sched.can_skip(2), "fresh rows are dirty");
+        sched.visited(2, 0.0);
+        sched.end_sweep(&mut tracker);
+        // forget_all is NOT an append: full reset, nothing skippable.
+        s.forget_all();
+        s.insert(&Constraint::new(vec![0], vec![1.0], 0.0));
+        assert!(!sched.begin_sweep(&s, 4, &tracker), "reset voids the window");
+        assert!(!sched.can_skip(0));
+    }
+
+    #[test]
+    fn movement_window_gaps_force_project_all() {
+        let s = set_of(&[(&[0, 1], 1.0)]);
+        let mut tracker = MovementTracker::new(4, true);
+        let mut sched = LazyScheduler::new(true);
+        sched.begin_sweep(&s, 4, &tracker);
+        sched.visited(0, 0.0);
+        sched.end_sweep(&mut tracker);
+        assert!(sched.begin_sweep(&s, 4, &tracker));
+        assert!(sched.can_skip(0));
+        sched.visited(0, 0.0);
+        sched.end_sweep(&mut tracker);
+        // A restore-style invalidation orphans the cursor: next sweep
+        // must project everything, then recover its window.
+        tracker.invalidate();
+        assert!(!sched.begin_sweep(&s, 4, &tracker));
+        sched.visited(0, 0.0);
+        sched.end_sweep(&mut tracker);
+        assert!(sched.begin_sweep(&s, 4, &tracker), "window re-established");
+        assert!(sched.can_skip(0));
+    }
+
+    #[test]
+    fn sink_movement_between_sweeps_undirties_armed_rows() {
+        let s = set_of(&[(&[0, 1], 1.0), (&[2, 3], 1.0)]);
+        let mut tracker = MovementTracker::new(4, true);
+        let mut sched = LazyScheduler::new(true);
+        sched.begin_sweep(&s, 4, &tracker);
+        sched.visited(0, 0.0);
+        sched.visited(1, 0.0);
+        sched.end_sweep(&mut tracker);
+        // The engine sink moves coordinate 2 between sweeps (an on-find
+        // projection): only the incident row may lose its skip.
+        tracker.mark(2);
+        assert!(sched.begin_sweep(&s, 4, &tracker));
+        assert!(sched.can_skip(0), "row over {{0,1}} is untouched");
+        assert!(!sched.can_skip(1), "row over {{2,3}} saw movement");
+    }
+
+    #[test]
+    fn priority_order_is_biggest_step_first_with_slot_tiebreak() {
+        let s = set_of(&[(&[0], 1.0), (&[1], 1.0), (&[2], 1.0), (&[3], 1.0)]);
+        let tracker = MovementTracker::new(4, true);
+        let mut sched = LazyScheduler::new(true);
+        sched.begin_sweep(&s, 4, &tracker);
+        sched.visited(0, 0.25);
+        sched.visited(1, 0.75);
+        sched.visited(2, 0.25);
+        // Row 3 never visited: ∞ priority, goes first.
+        let mut visit = vec![0u32, 1, 2, 3];
+        sched.order_by_priority(&mut visit);
+        assert_eq!(visit, vec![3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn remove_after_a_visit_redirties_despite_drain_dedup() {
+        // Rows A = {0,1}, B = {1,2} share coordinate 1.
+        let s = set_of(&[(&[0, 1], 1.0), (&[1, 2], 1.0)]);
+        let mut tracker = MovementTracker::new(4, true);
+        let mut sched = LazyScheduler::new(true);
+        sched.begin_sweep(&s, 4, &tracker);
+        sched.visited(0, 0.0);
+        sched.visited(1, 0.0);
+        sched.end_sweep(&mut tracker);
+        // The sink moves coordinate 1 between sweeps; the next sweep's
+        // drain walks it (and stamps its per-sweep dedup epoch).
+        tracker.mark(1);
+        assert!(sched.begin_sweep(&s, 4, &tracker));
+        assert!(!sched.can_skip(0));
+        assert!(!sched.can_skip(1));
+        // Row A settles first, then row B moves coordinate 1 AGAIN in
+        // the same sweep: the intra-sweep walk must not be suppressed
+        // by the drain's stamp, or A would be skipped next sweep
+        // against a stale θ.
+        sched.visited(0, 0.0);
+        sched.visited(1, 0.25);
+        tracker.mark_slice(&[1, 2]);
+        sched.note_moved(&[1, 2]);
+        sched.end_sweep(&mut tracker);
+        assert!(sched.begin_sweep(&s, 4, &tracker));
+        assert!(!sched.can_skip(0), "coordinate 1 moved after row A's visit");
+        assert!(!sched.can_skip(1), "row B itself moved");
+    }
+
+    #[test]
+    fn sink_remove_of_a_swept_coord_reaches_the_next_drain() {
+        let s = set_of(&[(&[0, 1], 1.0), (&[1, 2], 1.0)]);
+        let mut tracker = MovementTracker::new(4, true);
+        let mut sched = LazyScheduler::new(true);
+        // Mimic the solver: one dedup epoch per sweep.
+        tracker.advance_epoch();
+        sched.begin_sweep(&s, 4, &tracker);
+        sched.visited(1, 0.5); // row B moves first...
+        tracker.mark_slice(&[1, 2]);
+        sched.note_moved(&[1, 2]);
+        sched.visited(0, 0.0); // ...then row A settles (dirty cleared)
+        sched.end_sweep(&mut tracker);
+        // The sink re-moves coordinate 1 after the sweep. Had end_sweep
+        // not rolled the dedup epoch, this mark would be suppressed by
+        // the sweep's own stamp and never reach the drain window.
+        tracker.mark(1);
+        assert!(sched.begin_sweep(&s, 4, &tracker));
+        assert!(!sched.can_skip(0), "post-sweep sink movement must re-dirty row A");
+    }
+}

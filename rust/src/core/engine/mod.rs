@@ -30,11 +30,13 @@
 //! through the `ProjectionSink` movement seam to skip sources whose
 //! dependency ball saw no movement (see `problems::metric_oracle`).
 
+pub mod lazy;
 pub mod movement;
 pub mod sequential;
 pub mod sharded;
 pub mod shards;
 
+pub use lazy::{LazyScheduler, RowIndex};
 pub use movement::{MovementTracker, DEFAULT_MOVEMENT_LOG_CAPACITY};
 pub use sequential::SequentialSweep;
 pub use sharded::{parallel_min_rows_default, ShardedSweep, PARALLEL_MIN_ROWS};
@@ -64,11 +66,27 @@ pub struct SweepStats {
     /// Individual projections that moved `x` (sequential/sharded), or
     /// rows handed to the batched artifact (PJRT adapter).
     pub projections: usize,
-    /// Total dual movement `Σ|c|` — reduced deterministically in slot
-    /// order within each shard, shard by shard.
+    /// Total dual movement `Σ|c|` over the rows **this sweep** projected
+    /// — reduced deterministically in slot order within each shard,
+    /// shard by shard, so the sequential and sharded executors agree bit
+    /// for bit. Covers exactly the executor's sweep, including any
+    /// remembered box rows it visits; projections the engine sink
+    /// performs *outside* the sweep (the on-find projection and the
+    /// fused box pass during separation) are **not** included here —
+    /// they count into `Solver::projections` and the movement tracker
+    /// only.
     pub dual_movement: f64,
     /// Shards executed (1 for the sequential executor).
     pub shards: usize,
+    /// Rows whose projection kernel actually ran this sweep (including
+    /// zero-step visits). An eager sweep visits everything, so this
+    /// equals `active.len()`; a lazy sweep visits fewer.
+    pub rows_projected: usize,
+    /// Rows the lazy scheduler skipped as provably zero-step (support
+    /// unmoved since the row's last visit *and* last dual step zero).
+    /// `rows_projected + rows_skipped == active.len()` for the native
+    /// executors; always 0 in eager mode.
+    pub rows_skipped: usize,
 }
 
 /// A projection-sweep executor over the remembered list.
@@ -166,27 +184,31 @@ pub trait SweepExecutor<F: BregmanFunction> {
 }
 
 /// Build the executor for a strategy with the default parallel-apply
-/// threshold (`PAF_PARALLEL_MIN_ROWS` or the tuned constant).
+/// threshold (`PAF_PARALLEL_MIN_ROWS` or the tuned constant) and lazy
+/// sweep scheduling on.
 pub fn executor_for<F: BregmanFunction>(strategy: SweepStrategy) -> Box<dyn SweepExecutor<F>> {
-    executor_with::<F>(strategy, None)
+    executor_with::<F>(strategy, None, true)
 }
 
 /// Build the executor for a strategy; `parallel_min_rows` overrides the
 /// sharded executor's serial/parallel threshold (`None` = env override or
-/// [`PARALLEL_MIN_ROWS`]). Used by `Solver::new` to thread the
-/// `SolverConfig::parallel_min_rows` knob through. Purely a scheduling
-/// choice — it never changes results.
+/// [`PARALLEL_MIN_ROWS`]), and `lazy_sweep` toggles the movement-driven
+/// scheduler on the tracked path (see [`lazy`]). Used by `Solver::new`
+/// to thread the `SolverConfig` knobs through. Both are purely
+/// scheduling choices — they never change results.
 pub fn executor_with<F: BregmanFunction>(
     strategy: SweepStrategy,
     parallel_min_rows: Option<usize>,
+    lazy_sweep: bool,
 ) -> Box<dyn SweepExecutor<F>> {
     match strategy {
-        SweepStrategy::Sequential => Box::new(SequentialSweep::new()),
+        SweepStrategy::Sequential => Box::new(SequentialSweep::with_lazy(lazy_sweep)),
         SweepStrategy::ShardedParallel { threads } => {
             let mut exec = ShardedSweep::new(threads);
             if let Some(rows) = parallel_min_rows {
                 exec.parallel_min_rows = rows.max(2);
             }
+            exec.set_lazy(lazy_sweep);
             Box::new(exec)
         }
     }
@@ -382,6 +404,122 @@ mod tests {
             got.sort_unstable();
             got.dedup();
             assert_eq!(expected, got, "{strategy:?}: marked set diverges");
+        }
+    }
+
+    #[test]
+    fn lazy_sweeps_match_eager_and_skip_settled_rows() {
+        // Disjoint clamped rows settle in two sweeps: sweep 0 spends the
+        // whole dual (z < θ), sweep 1 re-visits them (their own support
+        // moved) and arms on the exact zero step, and from sweep 2 on
+        // the lazy scheduler skips every row while the eager executor
+        // keeps visiting all of them.
+        let dim = 16usize;
+        let f = DiagonalQuadratic::unweighted(vec![0.0; dim]);
+        let mut base = ActiveSet::new();
+        for i in 0..(dim as u32) / 2 {
+            let slot =
+                base.insert(&Constraint::new(vec![2 * i, 2 * i + 1], vec![1.0, 1.0], 1.0));
+            base.set_z(slot, 0.1);
+        }
+        let n = base.len();
+        for strategy in
+            [SweepStrategy::Sequential, SweepStrategy::ShardedParallel { threads: 3 }]
+        {
+            let mut eager = executor_with::<DiagonalQuadratic>(strategy, Some(2), false);
+            let mut lazy = executor_with::<DiagonalQuadratic>(strategy, Some(2), true);
+            let (mut ex, mut lx) = (vec![0.0; dim], vec![0.0; dim]);
+            let (mut eset, mut lset) = (base.clone(), base.clone());
+            let mut et = MovementTracker::new(dim, true);
+            let mut lt = MovementTracker::new(dim, true);
+            for (sweep, &skips) in [0usize, 0, n, n].iter().enumerate() {
+                let es = eager.sweep_tracked(&f, &mut ex, &mut eset, &mut et, None).unwrap();
+                let ls = lazy.sweep_tracked(&f, &mut lx, &mut lset, &mut lt, None).unwrap();
+                assert_eq!(ex, lx, "{strategy:?} sweep {sweep}: x diverged");
+                for r in 0..n {
+                    assert_eq!(eset.z(r), lset.z(r), "{strategy:?} sweep {sweep}: z[{r}]");
+                }
+                assert_eq!(es.projections, ls.projections, "{strategy:?} sweep {sweep}");
+                assert_eq!(es.dual_movement, ls.dual_movement, "{strategy:?} sweep {sweep}");
+                assert_eq!(es.rows_projected, n, "{strategy:?}: eager visits everything");
+                assert_eq!(es.rows_skipped, 0, "{strategy:?}: eager never skips");
+                assert_eq!(ls.rows_skipped, skips, "{strategy:?} sweep {sweep}: skips");
+                assert_eq!(
+                    ls.rows_projected + ls.rows_skipped,
+                    n,
+                    "{strategy:?} sweep {sweep}: visit/skip partition"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_sweeps_are_bit_identical_on_overlapping_soup() {
+        // Overlapping supports exercise the intra-sweep dirty channel
+        // (an earlier row's move must unskip later rows sharing support).
+        // Lazy and eager must agree bitwise in x, every dual, the stats
+        // and the recording channel, sweep after sweep.
+        let dim = 40;
+        let mut rng = Rng::new(7);
+        let d: Vec<f64> = (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        // Random soup on coords 0..36 plus two isolated clamped rows on
+        // 36..40 that provably settle (z < θ) — so at least those two
+        // must be skipped in the later sweeps.
+        let mut base = random_active_set(8, dim - 4, 60);
+        for lo in [36u32, 38] {
+            let slot = base.insert(&Constraint::new(vec![lo, lo + 1], vec![1.0, 1.0], 10.0));
+            base.set_z(slot, 0.05);
+        }
+        for strategy in
+            [SweepStrategy::Sequential, SweepStrategy::ShardedParallel { threads: 4 }]
+        {
+            let mut eager = executor_with::<DiagonalQuadratic>(strategy, Some(2), false);
+            let mut lazy = executor_with::<DiagonalQuadratic>(strategy, Some(2), true);
+            let (mut ex, mut lx) = (d.clone(), d.clone());
+            let (mut eset, mut lset) = (base.clone(), base.clone());
+            let mut et = MovementTracker::new(dim, true);
+            let mut lt = MovementTracker::new(dim, true);
+            let mut skipped_total = 0usize;
+            for sweep in 0..8 {
+                let mut erec: Vec<(u32, f64)> = Vec::new();
+                let mut lrec: Vec<(u32, f64)> = Vec::new();
+                let es = eager
+                    .sweep_tracked(
+                        &f,
+                        &mut ex,
+                        &mut eset,
+                        &mut et,
+                        Some(&mut |slot, m| erec.push((slot, m))),
+                    )
+                    .unwrap();
+                let ls = lazy
+                    .sweep_tracked(
+                        &f,
+                        &mut lx,
+                        &mut lset,
+                        &mut lt,
+                        Some(&mut |slot, m| lrec.push((slot, m))),
+                    )
+                    .unwrap();
+                assert_eq!(ex, lx, "{strategy:?} sweep {sweep}: x diverged");
+                for r in 0..eset.len() {
+                    assert_eq!(eset.z(r), lset.z(r), "{strategy:?} sweep {sweep}: z[{r}]");
+                }
+                assert_eq!(erec, lrec, "{strategy:?} sweep {sweep}: recording channel");
+                assert_eq!(es.projections, ls.projections, "{strategy:?} sweep {sweep}");
+                assert_eq!(es.dual_movement, ls.dual_movement, "{strategy:?} sweep {sweep}");
+                assert_eq!(
+                    ls.rows_projected + ls.rows_skipped,
+                    eset.len(),
+                    "{strategy:?} sweep {sweep}: visit/skip partition"
+                );
+                skipped_total += ls.rows_skipped;
+            }
+            assert!(
+                skipped_total > 0,
+                "{strategy:?}: eight sweeps settled no row — the lazy path never engaged"
+            );
         }
     }
 

@@ -1,5 +1,6 @@
 //! The exact sequential Gauss–Seidel sweep (the historical solver loop).
 
+use super::lazy::LazyScheduler;
 use super::movement::MovementTracker;
 use super::{project_row_in_place, SweepExecutor, SweepStats};
 use crate::core::active_set::ActiveSet;
@@ -9,12 +10,36 @@ use crate::core::bregman::BregmanFunction;
 /// updated by its predecessors. Arithmetic-identical to the pre-engine
 /// `Solver::project_sweep`, so `SweepStrategy::Sequential` reproduces the
 /// historical results bit for bit.
-#[derive(Debug, Default, Clone)]
-pub struct SequentialSweep;
+///
+/// On the tracked path the embedded [`LazyScheduler`] may elide rows
+/// that are provably zero-step no-ops (see [`super::lazy`]); elision is
+/// exact, so the lazy sequential sweep is still bit-identical to the
+/// eager one. Skipping never reorders: a Gauss–Seidel chain's rows do
+/// not commute, so the visited rows keep strict slot order.
+#[derive(Debug, Clone)]
+pub struct SequentialSweep {
+    lazy: LazyScheduler,
+}
+
+impl Default for SequentialSweep {
+    fn default() -> Self {
+        SequentialSweep::new()
+    }
+}
 
 impl SequentialSweep {
+    /// Lazy scheduling on (exact, so on is the safe default).
     pub fn new() -> SequentialSweep {
-        SequentialSweep
+        SequentialSweep::with_lazy(true)
+    }
+
+    pub fn with_lazy(lazy: bool) -> SequentialSweep {
+        SequentialSweep { lazy: LazyScheduler::new(lazy) }
+    }
+
+    /// Toggle the lazy scheduler (the `SolverConfig::lazy_sweep` knob).
+    pub fn set_lazy(&mut self, on: bool) {
+        self.lazy.set_enabled(on);
     }
 }
 
@@ -31,6 +56,7 @@ impl SequentialSweep {
         mut record: impl FnMut(u32, f64),
     ) -> SweepStats {
         let mut stats = SweepStats { shards: 1, ..SweepStats::default() };
+        stats.rows_projected = active.len();
         for r in 0..active.len() {
             let moved = project_row_in_place(f, x, active, r);
             if moved != 0.0 {
@@ -44,10 +70,49 @@ impl SequentialSweep {
         }
         stats
     }
+
+    /// The lazy tracked sweep: same slot order, but rows the scheduler
+    /// proves zero-step are elided. Identical `x`/duals/stats to
+    /// [`SequentialSweep::sweep_impl`] by the skip-rule exactness — a
+    /// skipped row would have contributed nothing to any of them.
+    fn lazy_sweep_impl<F: BregmanFunction>(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        tracker: &mut MovementTracker,
+        mut record: impl FnMut(u32, f64),
+    ) -> SweepStats {
+        let lazy = &mut self.lazy;
+        let allow_skip = lazy.begin_sweep(active, x.len(), tracker);
+        let mut stats = SweepStats { shards: 1, ..SweepStats::default() };
+        for r in 0..active.len() {
+            if allow_skip && lazy.can_skip(r) {
+                stats.rows_skipped += 1;
+                continue;
+            }
+            stats.rows_projected += 1;
+            let moved = project_row_in_place(f, x, active, r);
+            lazy.visited(r, moved);
+            if moved != 0.0 {
+                stats.projections += 1;
+                stats.dual_movement += moved;
+                record(r as u32, moved);
+                tracker.mark_slice(active.view(r).indices);
+                // Intra-sweep channel: later rows sharing support must
+                // not be skipped against this row's pre-move state.
+                lazy.note_moved(active.view(r).indices);
+            }
+        }
+        lazy.end_sweep(tracker);
+        stats
+    }
 }
 
 impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
     fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+        // Untracked sweeps mutate state the scheduler cannot see.
+        self.lazy.poison();
         SequentialSweep::sweep_impl(f, x, active, None, |_, _| {})
     }
 
@@ -58,6 +123,7 @@ impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
         active: &mut ActiveSet,
         record: &mut dyn FnMut(u32, f64),
     ) -> Option<SweepStats> {
+        self.lazy.poison();
         Some(SequentialSweep::sweep_impl(f, x, active, None, record))
     }
 
@@ -69,11 +135,33 @@ impl<F: BregmanFunction> SweepExecutor<F> for SequentialSweep {
         tracker: &mut MovementTracker,
         mut record: Option<&mut dyn FnMut(u32, f64)>,
     ) -> Option<SweepStats> {
-        Some(SequentialSweep::sweep_impl(f, x, active, Some(tracker), |slot, moved| {
-            if let Some(r) = record.as_mut() {
-                r(slot, moved);
-            }
-        }))
+        Some(if self.lazy.is_on() {
+            self.lazy_sweep_impl(f, x, active, tracker, |slot, moved| {
+                if let Some(r) = record.as_mut() {
+                    r(slot, moved);
+                }
+            })
+        } else {
+            SequentialSweep::sweep_impl(f, x, active, Some(tracker), |slot, moved| {
+                if let Some(r) = record.as_mut() {
+                    r(slot, moved);
+                }
+            })
+        })
+    }
+
+    fn after_forget(
+        &mut self,
+        map: &[u32],
+        instance: u64,
+        generation_before: u64,
+        generation_after: u64,
+    ) {
+        self.lazy.after_forget(map, instance, generation_before, generation_after);
+    }
+
+    fn after_reoffset(&mut self, instance: u64, generation_before: u64, generation_after: u64) {
+        self.lazy.after_reoffset(instance, generation_before, generation_after);
     }
 
     fn name(&self) -> &'static str {

@@ -12,6 +12,7 @@
 //! reduction stay serial, in slot order — which keeps the whole sweep
 //! deterministic and independent of the thread count.
 
+use super::lazy::LazyScheduler;
 use super::movement::MovementTracker;
 use super::shards::{ShardLimits, ShardPlan};
 use super::{project_row_in_place, SweepExecutor, SweepStats};
@@ -53,6 +54,7 @@ pub struct ShardedSweep {
     /// [`parallel_min_rows_default`]).
     pub parallel_min_rows: usize,
     plan: ShardPlan,
+    lazy: LazyScheduler,
 }
 
 impl Default for ShardedSweep {
@@ -67,12 +69,18 @@ impl ShardedSweep {
             threads,
             parallel_min_rows: parallel_min_rows_default(),
             plan: ShardPlan::new(),
+            lazy: LazyScheduler::new(true),
         }
     }
 
     /// The current plan (benches/tests observability).
     pub fn plan(&self) -> &ShardPlan {
         &self.plan
+    }
+
+    /// Toggle the lazy scheduler (the `SolverConfig::lazy_sweep` knob).
+    pub fn set_lazy(&mut self, on: bool) {
+        self.lazy.set_enabled(on);
     }
 }
 
@@ -102,6 +110,7 @@ impl ShardedSweep {
         let plan = &self.plan;
         for shard in &plan.shards {
             stats.shards += 1;
+            stats.rows_projected += shard.len();
             if threads > 1 && shard.len() >= parallel_min {
                 // Parallel θ+apply: every row reads and writes only its
                 // own support (the ShardPlan invariant), so the fused
@@ -150,6 +159,7 @@ impl ShardedSweep {
         // Gauss–Seidel, exact by construction.
         if !plan.tail.is_empty() {
             stats.shards += 1;
+            stats.rows_projected += plan.tail.len();
             for &r in &plan.tail {
                 let moved = project_row_in_place(f, x, active, r as usize);
                 if moved != 0.0 {
@@ -164,10 +174,130 @@ impl ShardedSweep {
         }
         stats
     }
+
+    /// The lazy, priority-ordered tracked sweep. Per shard: drop the
+    /// rows the scheduler proves zero-step, visit the remainder in
+    /// greedy Gauss–Southwell order (largest last |dual step| first) —
+    /// reordering is free of arithmetic consequences *only* because a
+    /// shard's rows have pairwise disjoint supports, so their
+    /// projections commute — then run the dual bookkeeping, stats
+    /// reduction, movement marks and recorder strictly in **slot**
+    /// order, exactly like the eager sweep. Since skipped rows would
+    /// have contributed nothing to any of those channels (zero step),
+    /// the lazy sweep is bit-identical to the eager one in `x`, every
+    /// dual, `projections`, `dual_movement` and the recording order.
+    /// The tail is a Gauss–Seidel chain (rows conflict): it skips but
+    /// never reorders.
+    fn lazy_sweep_impl<F: BregmanFunction>(
+        &mut self,
+        f: &F,
+        x: &mut [f64],
+        active: &mut ActiveSet,
+        tracker: &mut MovementTracker,
+        mut record: impl FnMut(u32, f64),
+    ) -> SweepStats {
+        if !self.plan.is_current(active) {
+            self.plan.rebuild(active, x.len(), &ShardLimits::none());
+        }
+        let threads = if self.threads == 0 { default_threads() } else { self.threads };
+        let parallel_min = self.parallel_min_rows.max(2);
+        let ShardedSweep { plan, lazy, .. } = self;
+        let allow_skip = lazy.begin_sweep(active, x.len(), tracker);
+        let mut stats = SweepStats::default();
+        let mut visit: Vec<u32> = Vec::new();
+        let mut pairs: Vec<(u32, f64)> = Vec::new();
+        for shard in &plan.shards {
+            stats.shards += 1;
+            visit.clear();
+            if allow_skip {
+                visit.extend(shard.iter().copied().filter(|&r| !lazy.can_skip(r as usize)));
+                stats.rows_skipped += shard.len() - visit.len();
+            } else {
+                visit.extend_from_slice(shard);
+            }
+            stats.rows_projected += visit.len();
+            lazy.order_by_priority(&mut visit);
+            pairs.clear();
+            if threads > 1 && visit.len() >= parallel_min {
+                // Parallel θ+apply over the visit list (same safety
+                // argument as the eager path: disjoint supports).
+                let cell = DisjointCell::new(&mut *x);
+                let act: &ActiveSet = active;
+                let vis: &[u32] = &visit;
+                let steps: Vec<f64> = parallel_map(vis.len(), threads, |k| {
+                    let r = vis[k] as usize;
+                    // SAFETY: supports within a shard are pairwise
+                    // disjoint, so no index of row `r` is touched by any
+                    // other worker during the map.
+                    unsafe { f.project_disjoint(&cell, act.view(r), act.z(r)) }
+                });
+                pairs.extend(visit.iter().copied().zip(steps));
+                pairs.sort_unstable_by_key(|&(r, _)| r);
+                for &(r32, step) in &pairs {
+                    let r = r32 as usize;
+                    lazy.visited(r, step.abs());
+                    if step == 0.0 {
+                        continue;
+                    }
+                    let z = active.z(r);
+                    active.set_z(r, z - step);
+                    stats.projections += 1;
+                    stats.dual_movement += step.abs();
+                    record(r32, step.abs());
+                    tracker.mark_slice(active.view(r).indices);
+                    lazy.note_moved(active.view(r).indices);
+                }
+            } else {
+                // Serial compute in priority order (commutes), then the
+                // same slot-order bookkeeping as above.
+                for &r in &visit {
+                    let moved = project_row_in_place(f, x, active, r as usize);
+                    pairs.push((r, moved));
+                }
+                pairs.sort_unstable_by_key(|&(r, _)| r);
+                for &(r32, moved) in &pairs {
+                    let r = r32 as usize;
+                    lazy.visited(r, moved);
+                    if moved == 0.0 {
+                        continue;
+                    }
+                    stats.projections += 1;
+                    stats.dual_movement += moved;
+                    record(r32, moved);
+                    tracker.mark_slice(active.view(r).indices);
+                    lazy.note_moved(active.view(r).indices);
+                }
+            }
+        }
+        if !plan.tail.is_empty() {
+            stats.shards += 1;
+            for &r32 in &plan.tail {
+                let r = r32 as usize;
+                if allow_skip && lazy.can_skip(r) {
+                    stats.rows_skipped += 1;
+                    continue;
+                }
+                stats.rows_projected += 1;
+                let moved = project_row_in_place(f, x, active, r);
+                lazy.visited(r, moved);
+                if moved != 0.0 {
+                    stats.projections += 1;
+                    stats.dual_movement += moved;
+                    record(r32, moved);
+                    tracker.mark_slice(active.view(r).indices);
+                    lazy.note_moved(active.view(r).indices);
+                }
+            }
+        }
+        lazy.end_sweep(tracker);
+        stats
+    }
 }
 
 impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
     fn sweep(&mut self, f: &F, x: &mut [f64], active: &mut ActiveSet) -> SweepStats {
+        // Untracked sweeps mutate state the scheduler cannot see.
+        self.lazy.poison();
         self.sweep_impl(f, x, active, None, |_, _| {})
     }
 
@@ -178,6 +308,7 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         active: &mut ActiveSet,
         record: &mut dyn FnMut(u32, f64),
     ) -> Option<SweepStats> {
+        self.lazy.poison();
         Some(self.sweep_impl(f, x, active, None, record))
     }
 
@@ -189,11 +320,19 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         tracker: &mut MovementTracker,
         mut record: Option<&mut dyn FnMut(u32, f64)>,
     ) -> Option<SweepStats> {
-        Some(self.sweep_impl(f, x, active, Some(tracker), |slot, moved| {
-            if let Some(r) = record.as_mut() {
-                r(slot, moved);
-            }
-        }))
+        Some(if self.lazy.is_on() {
+            self.lazy_sweep_impl(f, x, active, tracker, |slot, moved| {
+                if let Some(r) = record.as_mut() {
+                    r(slot, moved);
+                }
+            })
+        } else {
+            self.sweep_impl(f, x, active, Some(tracker), |slot, moved| {
+                if let Some(r) = record.as_mut() {
+                    r(slot, moved);
+                }
+            })
+        })
     }
 
     fn after_forget(
@@ -209,6 +348,7 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         if self.plan.instance() == instance && self.plan.generation() == generation_before {
             self.plan.remap_after_forget(map, generation_after);
         }
+        self.lazy.after_forget(map, instance, generation_before, generation_after);
     }
 
     fn after_reoffset(&mut self, instance: u64, generation_before: u64, generation_after: u64) {
@@ -218,6 +358,7 @@ impl<F: BregmanFunction> SweepExecutor<F> for ShardedSweep {
         if self.plan.instance() == instance && self.plan.generation() == generation_before {
             self.plan.adopt_generation(generation_after);
         }
+        self.lazy.after_reoffset(instance, generation_before, generation_after);
     }
 
     fn name(&self) -> &'static str {

@@ -43,7 +43,8 @@ use std::sync::Arc;
 /// Environment overrides are preserved: `PAF_THREADS` sizes the worker
 /// pool, `PAF_PARALLEL_MIN_ROWS` tunes the sharded executor's
 /// serial/parallel threshold, and [`SolveOptions::from_env`] additionally
-/// honours `PAF_SWEEP` / `PAF_OVERLAP` for engine selection.
+/// honours `PAF_SWEEP` / `PAF_OVERLAP` / `PAF_LAZY_SWEEP` for engine
+/// selection.
 #[derive(Debug, Clone)]
 pub struct SolveOptions {
     /// Hard iteration cap per block.
@@ -79,6 +80,13 @@ pub struct SolveOptions {
     /// bit-identical either way; `false` forces incremental oracles
     /// onto their snapshot-diff fallback.
     pub track_movement: bool,
+    /// Movement-driven lazy sweep scheduling: skip active rows whose
+    /// support did not move since their last (zero-step) projection and
+    /// visit the rest violated-first. Exact — results are bit-identical
+    /// to the eager sweep either way. Requires `track_movement`; the
+    /// engine auto-falls back to eager sweeps when movement tracking is
+    /// unavailable (e.g. the PJRT batch executor).
+    pub lazy_sweep: bool,
 }
 
 impl Default for SolveOptions {
@@ -95,6 +103,7 @@ impl Default for SolveOptions {
             parallel_min_rows: None,
             overlap: false,
             track_movement: true,
+            lazy_sweep: default_lazy_sweep(),
         }
     }
 }
@@ -105,7 +114,8 @@ impl SolveOptions {
     }
 
     /// Defaults plus the `PAF_SWEEP` (`sequential`, `sharded`,
-    /// `sharded:<threads>`) and `PAF_OVERLAP` (`1`/`true`) env overrides.
+    /// `sharded:<threads>`), `PAF_OVERLAP` (`1`/`true`) and
+    /// `PAF_LAZY_SWEEP` (`0`/`false` disables) env overrides.
     pub fn from_env() -> SolveOptions {
         let mut opts = SolveOptions::default();
         if let Ok(v) = std::env::var("PAF_SWEEP") {
@@ -113,6 +123,9 @@ impl SolveOptions {
         }
         if let Ok(v) = std::env::var("PAF_OVERLAP") {
             opts.overlap = v == "1" || v.eq_ignore_ascii_case("true");
+        }
+        if let Ok(v) = std::env::var("PAF_LAZY_SWEEP") {
+            opts.lazy_sweep = parse_lazy_sweep(&v);
         }
         opts
     }
@@ -178,6 +191,11 @@ impl SolveOptions {
         self
     }
 
+    pub fn lazy_sweep(mut self, on: bool) -> Self {
+        self.lazy_sweep = on;
+        self
+    }
+
     /// The per-block [`SolverConfig`] these options induce;
     /// `inner_sweeps_default` is the problem's structural default, used
     /// when the options leave `inner_sweeps` unset.
@@ -193,8 +211,24 @@ impl SolveOptions {
             sweep: self.sweep,
             parallel_min_rows: self.parallel_min_rows,
             track_movement: self.track_movement,
+            lazy_sweep: self.lazy_sweep,
         }
     }
+}
+
+/// Parse a `PAF_LAZY_SWEEP`-style toggle: `0`/`false` disables the lazy
+/// sweep scheduler, everything else keeps it on (the default).
+pub fn parse_lazy_sweep(s: &str) -> bool {
+    let s = s.trim();
+    !(s == "0" || s.eq_ignore_ascii_case("false"))
+}
+
+/// Process-wide default for the lazy sweep scheduler: on, unless
+/// `PAF_LAZY_SWEEP=0` is set (the CI eager legs run the whole suite
+/// this way). Explicit `SolverConfig::lazy_sweep` /
+/// [`SolveOptions::lazy_sweep`] settings always win over the env.
+pub fn default_lazy_sweep() -> bool {
+    std::env::var("PAF_LAZY_SWEEP").map(|v| parse_lazy_sweep(&v)).unwrap_or(true)
 }
 
 /// Parse a `PAF_SWEEP`-style strategy string.
@@ -550,6 +584,16 @@ mod tests {
     }
 
     #[test]
+    fn lazy_sweep_strings_parse() {
+        assert!(!parse_lazy_sweep("0"));
+        assert!(!parse_lazy_sweep("false"));
+        assert!(!parse_lazy_sweep(" FALSE "));
+        assert!(parse_lazy_sweep("1"));
+        assert!(parse_lazy_sweep("true"));
+        assert!(parse_lazy_sweep("anything-else"));
+    }
+
+    #[test]
     fn options_induce_solver_config() {
         let opts = SolveOptions::new()
             .max_iters(7)
@@ -567,6 +611,8 @@ mod tests {
         assert_eq!(cfg.z_tol, 1e-14);
         assert!(!cfg.record_trace);
         assert_eq!(cfg.sweep, SweepStrategy::ShardedParallel { threads: 3 });
+        assert!(cfg.lazy_sweep, "lazy sweeps default on");
+        assert!(!opts.clone().lazy_sweep(false).solver_config(2).lazy_sweep);
     }
 
     #[test]

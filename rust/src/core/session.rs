@@ -740,6 +740,7 @@ impl<'a> Session<'a> {
         }
         let merged_per = rows_per_block(solver, &self.offsets);
         let proj_after_oracle = solver.projections;
+        let rows_before = (solver.sweep_rows_projected, solver.sweep_rows_skipped);
 
         // Phases 2+3: shared sweeps over the union. For batches, the
         // executor's recording channel reports every row's exact
@@ -785,6 +786,11 @@ impl<'a> Session<'a> {
             sweep_proj[0] = solver.projections - proj_after_oracle;
             last_move[0] = solver.last_dual_movement;
         }
+        // Sweep scheduling counters: the sweeps run over the block
+        // union, so in multi-block sessions each block's trace reports
+        // the fleet-wide visit/skip totals for the round.
+        let rows_projected = solver.sweep_rows_projected - rows_before.0;
+        let rows_skipped = solver.sweep_rows_skipped - rows_before.1;
         let remembered_per = rows_per_block(solver, &self.offsets);
 
         // Per-block bookkeeping + the shared stop rule.
@@ -814,6 +820,8 @@ impl<'a> Session<'a> {
                     oracle_s: phases.oracle_s,
                     sweep_s,
                     forget_s,
+                    rows_projected,
+                    rows_skipped,
                 });
             }
             b.iterations += 1;
@@ -888,6 +896,7 @@ impl<'a> Session<'a> {
         }
         let scan = self.pending.take().unwrap();
         let proj_before = solver.projections;
+        let rows_before = (solver.sweep_rows_projected, solver.sweep_rows_skipped);
         let prev = self.prev_dual_movement;
         let (round, next_scan) =
             solver.overlapped_round(oracle, scan, self.shadow.as_mut().unwrap(), prev);
@@ -908,6 +917,8 @@ impl<'a> Session<'a> {
                 oracle_s: round.phases.oracle_s,
                 sweep_s: round.phases.sweep_s,
                 forget_s: round.phases.forget_s,
+                rows_projected: solver.sweep_rows_projected - rows_before.0,
+                rows_skipped: solver.sweep_rows_skipped - rows_before.1,
             });
         }
         b.iterations += 1;

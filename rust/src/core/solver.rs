@@ -57,6 +57,20 @@ pub struct SolverConfig {
     /// snapshot-diff fallback. Auto-disabled when the configured
     /// executor has no tracked sweep path (the PJRT batch adapter).
     pub track_movement: bool,
+    /// Movement-driven lazy sweep scheduling (see `engine::lazy`): skip
+    /// rows that are provably zero-step no-ops (support unmoved since
+    /// the row's last projection *and* last dual step zero) and visit
+    /// the rest of each support-disjoint shard in greedy Gauss–Southwell
+    /// order. The skip rule is exact, so results — `x`, every dual, the
+    /// projection counts, the recording channel — are bit-identical to
+    /// eager sweeps; only `IterStats::rows_projected` shrinks. Engages
+    /// only on movement-tracked sweeps, so it auto-disables alongside
+    /// `track_movement` (and for executors without a tracked path, e.g.
+    /// PJRT). External surgery on `x` or the duals outside the engine's
+    /// own paths requires `Solver::invalidate_movement` first (the
+    /// checkpoint-restore path already does this) — the next sweep then
+    /// projects everything once and re-arms from fresh state.
+    pub lazy_sweep: bool,
 }
 
 impl Default for SolverConfig {
@@ -72,6 +86,7 @@ impl Default for SolverConfig {
             sweep: SweepStrategy::Sequential,
             parallel_min_rows: None,
             track_movement: true,
+            lazy_sweep: crate::core::problem::default_lazy_sweep(),
         }
     }
 }
@@ -124,6 +139,14 @@ pub struct IterStats {
     pub sweep_s: f64,
     /// FORGET time this round.
     pub forget_s: f64,
+    /// Rows whose projection kernel ran across this round's sweeps
+    /// (including zero-step visits). With eager sweeps this is
+    /// `inner_sweeps × |active set|`; lazy sweeps visit fewer.
+    pub rows_projected: usize,
+    /// Rows the lazy scheduler elided this round as provably zero-step
+    /// (`rows_projected + rows_skipped` = rows an eager round would
+    /// have visited). Always 0 in eager mode.
+    pub rows_skipped: usize,
 }
 
 impl IterStats {
@@ -216,6 +239,14 @@ pub struct Solver<F: BregmanFunction> {
     pub projections: usize,
     /// Total dual movement `Σ|c|` of the most recent sweep.
     pub last_dual_movement: f64,
+    /// Rows visited by executor sweeps across the solver's lifetime
+    /// (kernel executed, including zero-step visits; the sink's on-find
+    /// and box-pass projections are not rows-visited counts and are
+    /// excluded). Round deltas feed `IterStats::rows_projected`.
+    pub sweep_rows_projected: usize,
+    /// Rows elided by the lazy scheduler across the solver's lifetime
+    /// (see `SweepStats::rows_skipped`).
+    pub sweep_rows_skipped: usize,
     /// The projection engine executing sweeps (chosen by `config.sweep`).
     executor: Box<dyn SweepExecutor<F>>,
     /// Reused FORGET compaction-map buffer.
@@ -435,7 +466,8 @@ impl<F: BregmanFunction> Solver<F> {
     /// Start at the unconstrained minimiser (`∇f(x⁰) = 0`, line 1).
     pub fn new(f: F, config: SolverConfig) -> Solver<F> {
         let x = f.argmin();
-        let executor = engine::executor_with::<F>(config.sweep, config.parallel_min_rows);
+        let executor =
+            engine::executor_with::<F>(config.sweep, config.parallel_min_rows, config.lazy_sweep);
         let movement = MovementTracker::new(x.len(), config.track_movement);
         Solver {
             f,
@@ -444,6 +476,8 @@ impl<F: BregmanFunction> Solver<F> {
             config,
             projections: 0,
             last_dual_movement: 0.0,
+            sweep_rows_projected: 0,
+            sweep_rows_skipped: 0,
             executor,
             slot_map: Vec::new(),
             movement,
@@ -471,7 +505,11 @@ impl<F: BregmanFunction> Solver<F> {
     /// solver). Also updates `config.sweep` to match.
     pub fn set_sweep_strategy(&mut self, strategy: SweepStrategy) {
         self.config.sweep = strategy;
-        self.executor = engine::executor_with::<F>(strategy, self.config.parallel_min_rows);
+        self.executor = engine::executor_with::<F>(
+            strategy,
+            self.config.parallel_min_rows,
+            self.config.lazy_sweep,
+        );
     }
 
     /// Name of the active sweep executor (traces/benches).
@@ -531,6 +569,8 @@ impl<F: BregmanFunction> Solver<F> {
         let stats = self.run_sweep(None);
         self.projections += stats.projections;
         self.last_dual_movement = stats.dual_movement;
+        self.sweep_rows_projected += stats.rows_projected;
+        self.sweep_rows_skipped += stats.rows_skipped;
         stats.projections
     }
 
@@ -544,6 +584,8 @@ impl<F: BregmanFunction> Solver<F> {
         let stats = self.run_sweep(Some(record));
         self.projections += stats.projections;
         self.last_dual_movement = stats.dual_movement;
+        self.sweep_rows_projected += stats.rows_projected;
+        self.sweep_rows_skipped += stats.rows_skipped;
         stats.projections
     }
 
@@ -619,6 +661,7 @@ impl<F: BregmanFunction> Solver<F> {
         merged: usize,
         remembered: usize,
         proj_before: usize,
+        rows_before: (usize, usize),
         seconds: f64,
         phases: &PhaseTimes,
     ) -> IterStats {
@@ -633,6 +676,8 @@ impl<F: BregmanFunction> Solver<F> {
             oracle_s: phases.oracle_s,
             sweep_s: phases.sweep_s,
             forget_s: phases.forget_s,
+            rows_projected: self.sweep_rows_projected - rows_before.0,
+            rows_skipped: self.sweep_rows_skipped - rows_before.1,
         }
     }
 
@@ -668,6 +713,7 @@ impl<F: BregmanFunction> Solver<F> {
             iterations = nu + 1;
             let mut round = Stopwatch::new();
             let proj_before = self.projections;
+            let rows_before = (self.sweep_rows_projected, self.sweep_rows_skipped);
 
             // Phase 1+merge: oracle delivers violated constraints (and may
             // project-on-find).
@@ -688,6 +734,7 @@ impl<F: BregmanFunction> Solver<F> {
                     merged,
                     remembered,
                     proj_before,
+                    rows_before,
                     round.lap_s(),
                     &round_phases,
                 ));
@@ -758,6 +805,7 @@ impl<F: BregmanFunction> Solver<F> {
             iterations = nu + 1;
             let mut round_clock = Stopwatch::new();
             let proj_before = self.projections;
+            let rows_before = (self.sweep_rows_projected, self.sweep_rows_skipped);
 
             let scan = pending.take().expect("overlap pipeline lost a scan");
             let (round, next_scan) =
@@ -771,6 +819,7 @@ impl<F: BregmanFunction> Solver<F> {
                     round.merged,
                     round.remembered,
                     proj_before,
+                    rows_before,
                     round_clock.lap_s(),
                     &round.phases,
                 ));

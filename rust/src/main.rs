@@ -5,6 +5,7 @@
 //! ```text
 //! paf nearness  --n 300 --graph-type 1 [--mode onfind|collect] [--tol 1e-2]
 //!               [--sweep sequential|sharded|sharded:T] [--overlap]
+//!               [--lazy-sweep | --no-lazy-sweep]
 //! paf batch     --n 120 --k 4      # K nearness instances in ONE session
 //! paf serve     [--trace jobs.jsonl] [--capacity 4] [--inner-sweeps 2]
 //!               # replay a job trace through the long-running scheduler
@@ -79,8 +80,8 @@ fn main() {
 }
 
 /// Shared engine/stop flags -> [`SolveOptions`] (`--sweep`, `--overlap`,
-/// `--tol`, `--max-iters`), layered on the `PAF_SWEEP`/`PAF_OVERLAP` env
-/// defaults.
+/// `--lazy-sweep`/`--no-lazy-sweep`, `--tol`, `--max-iters`), layered on
+/// the `PAF_SWEEP`/`PAF_OVERLAP`/`PAF_LAZY_SWEEP` env defaults.
 fn solve_options(args: &Args) -> SolveOptions {
     let mut opts = SolveOptions::from_env();
     if let Some(s) = args.get("sweep") {
@@ -94,6 +95,12 @@ fn solve_options(args: &Args) -> SolveOptions {
     }
     if args.flag("overlap") {
         opts.overlap = true;
+    }
+    if args.flag("lazy-sweep") {
+        opts.lazy_sweep = true;
+    }
+    if args.flag("no-lazy-sweep") {
+        opts.lazy_sweep = false;
     }
     opts.violation_tol = args.get_parsed_or("tol", opts.violation_tol);
     opts.max_iters = args.get_parsed_or("max-iters", opts.max_iters);

@@ -27,7 +27,9 @@ pub fn emit_series(s: &Series, basename: &str) {
 /// Bump on any field-shape change so downstream consumers can dispatch.
 /// v2: added the `"kind": "serve"` document (per-job serving stats +
 /// event stream); solver-result documents are unchanged in shape.
-pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 2;
+/// v3: trace entries and serve job objects gained the sweep-scheduling
+/// counters `rows_projected` / `rows_skipped` (additive).
+pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 3;
 
 /// Serialise a [`SolverResult`] (with its per-phase timing breakdown
 /// and, when recorded, the full per-iteration trace) as JSON. `label`
@@ -52,7 +54,8 @@ pub fn solver_result_json(label: &str, r: &SolverResult) -> String {
         out.push_str(&format!(
             "    {{\"iteration\": {}, \"found\": {}, \"merged\": {}, \"remembered\": {}, \
              \"max_violation\": {:e}, \"projections\": {}, \"seconds\": {:.9}, \
-             \"oracle_s\": {:.9}, \"sweep_s\": {:.9}, \"forget_s\": {:.9}}}{}\n",
+             \"oracle_s\": {:.9}, \"sweep_s\": {:.9}, \"forget_s\": {:.9}, \
+             \"rows_projected\": {}, \"rows_skipped\": {}}}{}\n",
             it.iteration,
             it.found,
             it.merged,
@@ -63,6 +66,8 @@ pub fn solver_result_json(label: &str, r: &SolverResult) -> String {
             it.oracle_s,
             it.sweep_s,
             it.forget_s,
+            it.rows_projected,
+            it.rows_skipped,
             if k + 1 == r.trace.len() { "" } else { "," }
         ));
     }
@@ -140,6 +145,8 @@ mod tests {
                     oracle_s: 0.004,
                     sweep_s: 0.005,
                     forget_s: 0.001,
+                    rows_projected: 6,
+                    rows_skipped: 2,
                 },
                 IterStats { iteration: 1, ..Default::default() },
             ],
@@ -162,6 +169,8 @@ mod tests {
         let trace = json.get("trace").and_then(|t| t.as_arr()).expect("trace array");
         assert_eq!(trace.len(), 2);
         assert_eq!(trace[0].get("found").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(trace[0].get("rows_projected").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(trace[0].get("rows_skipped").and_then(|v| v.as_usize()), Some(2));
         match trace[0].get("max_violation") {
             Some(crate::runtime::json::Json::Num(v)) => assert!((v - 0.5).abs() < 1e-12),
             other => panic!("missing max_violation: {other:?}"),

@@ -64,6 +64,20 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
              \"converged\": {}, \"expired\": {}, ",
             j.preemptions, j.rounds_run, j.projections, j.converged, j.expired
         ));
+        // Sweep-scheduling counters, summed over the job's recorded
+        // trace (0 for jobs that never produced a result).
+        let (rows_projected, rows_skipped) = j
+            .result
+            .as_ref()
+            .map(|r| {
+                r.trace.iter().fold((0usize, 0usize), |(p, s), it| {
+                    (p + it.rows_projected, s + it.rows_skipped)
+                })
+            })
+            .unwrap_or((0, 0));
+        out.push_str(&format!(
+            "\"rows_projected\": {rows_projected}, \"rows_skipped\": {rows_skipped}, "
+        ));
         out.push_str(&format!(
             "\"deadline_met\": {}, \"objective\": {}, ",
             match j.deadline_met {
@@ -177,6 +191,8 @@ mod tests {
         assert_eq!(jobs.len(), 1);
         assert_eq!(jobs[0].get("preemptions").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(jobs[0].get("deadline_met"), Some(&Json::Bool(true)));
+        assert_eq!(jobs[0].get("rows_projected").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(jobs[0].get("rows_skipped").and_then(|v| v.as_usize()), Some(0));
         let events = json.get("events").and_then(|e| e.as_arr()).expect("events array");
         assert_eq!(events.len(), 4);
         assert_eq!(events[1].get("event").and_then(|v| v.as_str()), Some("preempted"));

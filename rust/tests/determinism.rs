@@ -185,6 +185,7 @@ fn raw_nearness(
         sweep,
         parallel_min_rows: None,
         track_movement: true,
+        lazy_sweep: true,
     };
     let mut solver = Solver::new(f, cfg);
     if overlap {
@@ -850,6 +851,104 @@ fn serve_preemption_with_incremental_oracles_stays_deterministic() {
             Some(r) => {
                 for (k, (want, got)) in r.iter().zip(&results).enumerate() {
                     assert_bit_identical(want, got, &format!("serve inc job {k} t={threads}"));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lazy sweep scheduling (PR-6 tentpole): skipping provably zero-step
+// rows is exact, so lazy solves must be bit-identical to eager solves,
+// thread-count invariant, and stable under serve preemption/re-offset.
+// ---------------------------------------------------------------------
+
+#[test]
+fn lazy_sweep_is_bit_identical_and_thread_count_invariant() {
+    let mut rng = Rng::new(48);
+    let inst = type1_complete(14, &mut rng);
+    for overlap in [false, true] {
+        let mut reference: Option<SolverResult> = None;
+        for threads in [1usize, 2, 8] {
+            let sweep = SweepStrategy::ShardedParallel { threads };
+            let opts = session_opts(sweep, overlap, 1e-6);
+            let eager = Nearness::new(&inst)
+                .mode(OracleMode::Collect)
+                .solve(&opts.clone().lazy_sweep(false));
+            let lazy = Nearness::new(&inst)
+                .mode(OracleMode::Collect)
+                .solve(&opts.clone().lazy_sweep(true));
+            assert!(eager.result.converged, "eager (t={threads}) did not converge");
+            assert_bit_identical(
+                &eager.result,
+                &lazy.result,
+                &format!("lazy vs eager (t={threads}, overlap={overlap})"),
+            );
+            assert_eq!(eager.objective, lazy.objective);
+            match &reference {
+                None => reference = Some(lazy.result),
+                Some(r) => assert_bit_identical(
+                    r,
+                    &lazy.result,
+                    &format!("lazy t={threads}, overlap={overlap}"),
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn lazy_sweep_sequential_matches_eager_on_cc_box_rows() {
+    // Correlation clustering carries remembered box rows through the
+    // sweeps — the lazy scheduler must treat them like any other row.
+    let inst = cc_instance(49);
+    let opts = SolveOptions::new()
+        .max_iters(800)
+        .violation_tol(1e-4)
+        .inner_sweeps(4)
+        .sweep(SweepStrategy::Sequential);
+    let eager = Correlation::dense(&inst)
+        .mode(OracleMode::Collect)
+        .seed(7)
+        .solve(&opts.clone().lazy_sweep(false));
+    let lazy = Correlation::dense(&inst)
+        .mode(OracleMode::Collect)
+        .seed(7)
+        .solve(&opts.clone().lazy_sweep(true));
+    assert!(eager.result.converged && lazy.result.converged);
+    assert_bit_identical(&eager.result, &lazy.result, "cc lazy vs eager (sequential)");
+    assert_eq!(eager.labels, lazy.labels, "cc rounding differs under lazy sweeps");
+}
+
+#[test]
+fn serve_preemption_with_lazy_sweeps_is_bit_identical_to_eager() {
+    // Preemption re-offsets the fleet vector mid-flight: the scheduler's
+    // incidence index must invalidate (label-keyed) and fall back to a
+    // project-all sweep rather than skip against stale labels.
+    use paf::serve::{JobBank, Scheduler, ServeConfig};
+    let jobs = paf::serve::demo_trace(93);
+    let bank = JobBank::materialize(&jobs);
+    let mut reference: Option<Vec<SolverResult>> = None;
+    for lazy in [false, true] {
+        let opts = SolveOptions::new()
+            .violation_tol(1e-5)
+            .inner_sweeps(2)
+            .sweep(SweepStrategy::ShardedParallel { threads: 2 })
+            .lazy_sweep(lazy);
+        let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        assert!(stats.all_completed(), "lazy={lazy}: jobs incomplete");
+        assert!(
+            stats.preemptions >= 1,
+            "lazy={lazy}: the demo trace must exercise preemption"
+        );
+        let results: Vec<SolverResult> =
+            stats.jobs.iter().map(|s| s.result.clone().expect("missing result")).collect();
+        match &reference {
+            None => reference = Some(results),
+            Some(r) => {
+                for (k, (want, got)) in r.iter().zip(&results).enumerate() {
+                    assert_bit_identical(want, got, &format!("serve job {k} lazy vs eager"));
                 }
             }
         }
