@@ -13,10 +13,21 @@
 //! checkpointed ([`Session::evict`] under the hood), requeued, and
 //! later resumed bit-identically to an uninterrupted run (pinned in
 //! `rust/tests/determinism.rs`).
+//!
+//! Two environment variables drive the CI crash-recovery leg:
+//!
+//! - `PAF_SERVE_STATE_DIR=DIR` — serve with durable checkpoints in
+//!   `DIR`, recovering any incomplete jobs found there on startup.
+//! - `PAF_SERVE_FAULT=SPEC` — apply a deterministic
+//!   [`FaultPlan`](paf::serve::FaultPlan) (e.g. `crash=6`); an injected
+//!   crash persists running state and exits with code 42
+//!   ([`CRASH_EXIT_CODE`]), so a restart against the same state dir
+//!   must recover and finish with every result bit-identical to solo.
 
 use paf::core::problem::SolveOptions;
 use paf::serve::{
-    demo_trace, emit_serve_json, parse_job_trace, JobBank, Scheduler, ServeConfig, ServeEvent,
+    demo_trace, emit_serve_json, parse_job_trace, solve_job_solo, FaultPlan, JobBank, Scheduler,
+    ServeConfig, ServeEvent, CRASH_EXIT_CODE,
 };
 
 fn main() {
@@ -30,6 +41,12 @@ fn main() {
     print!("{trace_text}");
     let jobs = parse_job_trace(&trace_text).expect("generated trace must parse");
 
+    let state_dir = std::env::var_os("PAF_SERVE_STATE_DIR").map(std::path::PathBuf::from);
+    let fault_plan = match std::env::var("PAF_SERVE_FAULT") {
+        Ok(spec) => FaultPlan::parse(&spec).expect("PAF_SERVE_FAULT must parse"),
+        Err(_) => FaultPlan::default(),
+    };
+
     // Materialize the instance arena, then serve with capacity 1: every
     // higher-priority arrival must preempt the running job.
     let bank = JobBank::materialize(&jobs);
@@ -37,8 +54,14 @@ fn main() {
         .violation_tol(1e-4)
         .inner_sweeps(2) // mixed-kind traces pin the shared sweep count
         .sharded(0);
-    let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
-    let mut scheduler = Scheduler::new(jobs, &bank, cfg);
+    let cfg = ServeConfig {
+        capacity: 1,
+        opts: opts.clone(),
+        state_dir: state_dir.clone(),
+        fault_plan,
+        ..Default::default()
+    };
+    let mut scheduler = Scheduler::new(jobs.clone(), &bank, cfg);
     scheduler.on_event(|event| match event {
         ServeEvent::Admitted { round, job, resumed } => {
             println!("round {round:>3}: admitted job {job}{}", if *resumed { " (resumed from checkpoint)" } else { "" })
@@ -52,20 +75,42 @@ fn main() {
         ServeEvent::Expired { round, job, rounds_done } => {
             println!("round {round:>3}: job {job} expired after {rounds_done} rounds")
         }
+        ServeEvent::Recovered { round, job, rounds_done } => {
+            println!("round {round:>3}: RECOVERED job {job} from durable checkpoint ({rounds_done} rounds done)")
+        }
+        ServeEvent::Shed { round, job, queue_depth } => {
+            println!("round {round:>3}: shed job {job} (overload, {queue_depth} still queued)")
+        }
+        ServeEvent::Retried { round, job, attempt } => {
+            println!("round {round:>3}: retry job {job} (attempt {attempt})")
+        }
+        ServeEvent::Quarantined { round, job, attempt } => {
+            println!("round {round:>3}: quarantined job {job} (attempt {attempt})")
+        }
         ServeEvent::Idle { .. } => {}
     });
     let stats = scheduler.run();
 
+    if stats.crashed {
+        println!(
+            "\nINJECTED CRASH after round {}: running state persisted to {:?}; exiting 42",
+            stats.rounds,
+            state_dir.as_deref().unwrap_or(std::path::Path::new("<none>"))
+        );
+        std::process::exit(CRASH_EXIT_CODE);
+    }
+
     println!(
-        "\nserved {} jobs in {} scheduler rounds ({} preemptions)",
+        "\nserved {} jobs in {} scheduler rounds ({} preemptions, {} recovered)",
         stats.jobs.len(),
         stats.rounds,
-        stats.preemptions
+        stats.preemptions,
+        stats.recovered
     );
     for (k, j) in stats.jobs.iter().enumerate() {
         println!(
             "  job {k} ({}, prio {}): arrived r{}, done r{}, {} rounds run, {} projections, \
-             preempted {}x, converged={}",
+             preempted {}x, converged={}{}",
             j.name,
             j.priority,
             j.arrival_round,
@@ -73,13 +118,32 @@ fn main() {
             j.rounds_run,
             j.projections,
             j.preemptions,
-            j.converged
+            j.converged,
+            if j.recovered { " (recovered)" } else { "" }
         );
     }
     assert!(stats.all_completed(), "demo trace must complete every job");
     assert!(
-        stats.preemptions >= 1,
-        "capacity 1 with a priority spread must force at least one preemption"
+        stats.preemptions + stats.recovered >= 1,
+        "capacity 1 with a priority spread must force a preemption (or this is a \
+         recovery run resuming from checkpoints)"
     );
+
+    // The serve/recovery invariant, checked end to end: every job's
+    // result is bit-identical to its uninterrupted solo solve — even
+    // when this process recovered the job from another process's
+    // durable checkpoint.
+    for (k, j) in jobs.iter().enumerate() {
+        let solo = solve_job_solo(j, bank.input(j.id), &opts).expect("solo solve");
+        let got = stats.jobs[k].result.as_ref().expect("completed job without result");
+        assert_eq!(solo.result.x, got.x, "job {k}: served x differs from solo (bitwise)");
+        assert_eq!(solo.result.iterations, got.iterations, "job {k}: iterations differ");
+        assert_eq!(
+            solo.result.total_projections, got.total_projections,
+            "job {k}: projections differ"
+        );
+        assert_eq!(stats.jobs[k].objective, Some(solo.objective), "job {k}: objective differs");
+    }
+    println!("all jobs bit-identical to their solo solves");
     let _ = emit_serve_json(&stats, "SERVE_demo_trace");
 }

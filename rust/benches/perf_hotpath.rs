@@ -30,6 +30,10 @@
 //!       which skips armed rows whose support did not move) vs the
 //!       settled floor (`sweep/lazy-clean`), all from the same snapshot
 //!       — the iterates stay bit-identical, only the visit count drops
+//!   P10 serve persistence: the non-destructive mid-solve checkpoint
+//!       capture (what `--checkpoint-every` pays per running job), the
+//!       wire encoding, the atomic durable write, and recovery
+//!       load+decode
 //!
 //! All timings are also written to `reports/BENCH_perf_hotpath.json`
 //! (machine-readable; see `BenchCtx::write_json`) so the perf trajectory
@@ -300,6 +304,7 @@ fn main() {
                 arrival_round: 2 * k, // staggered: the fleet changes mid-solve
                 max_rounds: None,
                 deadline_rounds: None,
+                deadline_ms: None,
             })
             .collect();
         let bank = JobBank::materialize(&jobs);
@@ -310,7 +315,7 @@ fn main() {
         all.push(ctx.bench("P8/serve-3jobs/seq-loop", |_| {
             let mut objectives = Vec::new();
             for job in &jobs {
-                let out = solve_job_solo(job, bank.input(job.id), &opts);
+                let out = solve_job_solo(job, bank.input(job.id), &opts).expect("solo solve");
                 assert!(out.result.converged);
                 objectives.push(out.objective);
             }
@@ -431,6 +436,53 @@ fn main() {
                 m
             }));
         }
+    }
+
+    // P10: serve persistence. The durable-checkpoint hot path, axis by
+    // axis: capture (non-destructive, the per-job cost of a periodic
+    // checkpoint round), encode (wire bytes), write (atomic temp-file +
+    // rename), and load+decode (recovery). The roundtrip must stay
+    // byte-stable.
+    {
+        use paf::serve::persist;
+        let mut rng = Rng::new(59);
+        let inst = type1_complete(ctx.scaled(120), &mut rng);
+        let opts = SolveOptions::new().violation_tol(1e-7).record_trace(false);
+        let mut session = Session::new(opts);
+        let h = session.add(Nearness::new(&inst).mode(OracleMode::Collect));
+        for _ in 0..5 {
+            session.step();
+        }
+        let index = h.index();
+        all.push(ctx.bench("P10/serve-persist/checkpoint-mem", |_| {
+            session.checkpoint_block(index)
+        }));
+        let ck = session.checkpoint_block(index);
+        all.push(ctx.bench("P10/serve-persist/encode", |_| {
+            persist::encode_checkpoint(&ck).expect("encode")
+        }));
+        let bytes = persist::encode_checkpoint(&ck).expect("encode");
+        println!(
+            "    -> checkpoint wire size: {} bytes ({} remembered rows)",
+            bytes.len(),
+            ck.remembered()
+        );
+        let dir = std::env::temp_dir().join(format!("paf-bench-persist-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        all.push(ctx.bench("P10/serve-persist/write-atomic", |_| {
+            persist::write_checkpoint_atomic(&dir, 0, &ck).expect("write")
+        }));
+        let path = persist::checkpoint_path(&dir, 0);
+        all.push(ctx.bench("P10/serve-persist/load-decode", |_| {
+            persist::load_checkpoint(&path).expect("load")
+        }));
+        let loaded = persist::load_checkpoint(&path).expect("load");
+        assert_eq!(
+            persist::encode_checkpoint(&loaded).expect("re-encode"),
+            bytes,
+            "persist roundtrip must be byte-stable"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     if let Err(e) = ctx.write_json("perf_hotpath", &all) {

@@ -368,6 +368,89 @@ impl BlockCheckpoint {
             BlockCkptInner::Round { .. } => 0,
         }
     }
+
+    /// Borrowed view of a vector-block checkpoint's contents, or `None`
+    /// for a round-driven checkpoint. The durable-persistence layer
+    /// (`serve::persist`) serializes through this without cloning.
+    pub(crate) fn vector_view(&self) -> Option<VectorCkptView<'_>> {
+        match &self.inner {
+            BlockCkptInner::Vector {
+                x,
+                rows,
+                iterations,
+                projections,
+                last_dual_movement,
+                trace,
+                phases,
+            } => Some(VectorCkptView {
+                x,
+                rows,
+                iterations: *iterations,
+                projections: *projections,
+                last_dual_movement: *last_dual_movement,
+                trace,
+                phases: *phases,
+            }),
+            BlockCkptInner::Round { .. } => None,
+        }
+    }
+
+    /// The opaque problem snapshot plus `(iterations, projections)` of a
+    /// round-driven checkpoint, or `None` for a vector checkpoint.
+    pub(crate) fn round_view(&self) -> Option<(&RoundSnapshot, usize, usize)> {
+        match &self.inner {
+            BlockCkptInner::Vector { .. } => None,
+            BlockCkptInner::Round { state, iterations, projections } => {
+                Some((state, *iterations, *projections))
+            }
+        }
+    }
+
+    /// Rebuild a vector-block checkpoint from deserialized parts — the
+    /// inverse of [`BlockCheckpoint::vector_view`].
+    pub(crate) fn from_vector_parts(
+        x: Vec<f64>,
+        rows: Vec<(Constraint, f64)>,
+        iterations: usize,
+        projections: usize,
+        last_dual_movement: f64,
+        trace: Vec<IterStats>,
+        phases: PhaseTimes,
+    ) -> BlockCheckpoint {
+        BlockCheckpoint {
+            inner: BlockCkptInner::Vector {
+                x,
+                rows,
+                iterations,
+                projections,
+                last_dual_movement,
+                trace,
+                phases,
+            },
+        }
+    }
+
+    /// Rebuild a round-driven checkpoint from deserialized parts — the
+    /// inverse of [`BlockCheckpoint::round_view`].
+    pub(crate) fn from_round_parts(
+        state: RoundSnapshot,
+        iterations: usize,
+        projections: usize,
+    ) -> BlockCheckpoint {
+        BlockCheckpoint { inner: BlockCkptInner::Round { state, iterations, projections } }
+    }
+}
+
+/// Borrowed contents of a vector-block [`BlockCheckpoint`]; the field
+/// order mirrors the durable wire layout in `serve::persist`.
+pub(crate) struct VectorCkptView<'a> {
+    pub x: &'a [f64],
+    pub rows: &'a [(Constraint, f64)],
+    pub iterations: usize,
+    pub projections: usize,
+    pub last_dual_movement: f64,
+    pub trace: &'a [IterStats],
+    pub phases: PhaseTimes,
 }
 
 impl<'a> Session<'a> {
@@ -1271,6 +1354,75 @@ impl<'a> Session<'a> {
     /// the [`SweepExecutor::after_reoffset`](crate::core::engine::SweepExecutor::after_reoffset)
     /// adoption — no replan, and no block's own trajectory is perturbed.
     ///
+    /// Capture a live block's resumable state WITHOUT detaching it —
+    /// the durable-checkpoint path (`paf serve --state-dir`). Call at a
+    /// round boundary (the same post-FORGET state [`Session::evict`]
+    /// assumes) and the capture is exactly what `evict` would produce,
+    /// so feeding it through [`Session::admit_resumed`] in a fresh
+    /// process continues the block bit-identically to never having been
+    /// interrupted. Unlike `evict`, the session is untouched and the
+    /// block keeps stepping.
+    ///
+    /// `index` is [`Handle::index`]. Panics under the same conditions
+    /// as [`Session::evict`].
+    pub fn checkpoint_block(&self, index: usize) -> BlockCheckpoint {
+        assert!(self.built, "Session::checkpoint_block before the first step()");
+        if let Some(b) = self.blocks.iter().find(|b| b.handle == index) {
+            assert!(
+                !b.done,
+                "Session::checkpoint_block: block {index} already finished — take() its output instead"
+            );
+            assert!(
+                !self.opts.overlap,
+                "checkpointing vector blocks from an overlapped session is not supported"
+            );
+            let range = b.range.clone();
+            let solver = self.solver.as_ref().expect("vector fleet not built");
+            let mut rows = Vec::new();
+            for r in 0..solver.active.len() {
+                let first = solver.active.view(r).indices[0] as usize;
+                if range.contains(&first) {
+                    let mut c = solver.active.to_constraint(r);
+                    for i in &mut c.indices {
+                        *i -= range.start as u32;
+                    }
+                    rows.push((c, solver.active.z(r)));
+                }
+            }
+            return BlockCheckpoint {
+                inner: BlockCkptInner::Vector {
+                    x: solver.x[range].to_vec(),
+                    rows,
+                    iterations: b.iterations,
+                    projections: b.projections,
+                    last_dual_movement: b.last_dual_movement,
+                    trace: b.trace.clone(),
+                    phases: b.phases,
+                },
+            };
+        }
+        if let Some(rb) = self.rounds.iter().find(|r| r.handle == index) {
+            assert!(
+                !rb.done,
+                "Session::checkpoint_block: block {index} already finished — take() its output instead"
+            );
+            let state = rb
+                .prob
+                .as_ref()
+                .expect("live round block lost its problem")
+                .snapshot_erased()
+                .expect("this round-driven problem does not support checkpointing");
+            return BlockCheckpoint {
+                inner: BlockCkptInner::Round {
+                    state,
+                    iterations: rb.iterations,
+                    projections: rb.projections,
+                },
+            };
+        }
+        panic!("Session::checkpoint_block: no live block with handle index {index}");
+    }
+
     /// `index` is [`Handle::index`]. Panics if no live (not-done) block
     /// has that handle, if the session is overlapped, or (round-driven
     /// blocks) if the problem does not support checkpointing.

@@ -8,9 +8,14 @@
 //!               [--lazy-sweep | --no-lazy-sweep]
 //! paf batch     --n 120 --k 4      # K nearness instances in ONE session
 //! paf serve     [--trace jobs.jsonl] [--capacity 4] [--inner-sweeps 2]
+//!               [--state-dir DIR] [--checkpoint-every N] [--retry-limit 2]
+//!               [--high-water N] [--age-rounds N]
 //!               # replay a job trace through the long-running scheduler
 //!               # (mid-solve admission, priorities, checkpoint preemption);
-//!               # without --trace a built-in mixed demo trace runs
+//!               # without --trace a built-in mixed demo trace runs.
+//!               # --state-dir makes checkpoints durable: the server
+//!               # recovers incomplete jobs from DIR on startup and
+//!               # resumes them bit-identically across the crash
 //! paf cc        --graph ca-grqc [--sparse] [--gamma 1.0] [--scale 0.1]
 //! paf itml      --dataset banana [--projections 100000]
 //! paf svm       --n 100000 --d 100 --k 10 [--c 1000] [--epochs 5]
@@ -201,6 +206,17 @@ fn cmd_serve(args: &Args, seed: u64) {
     // All blocks of one session agree on inner_sweeps; mixed traces
     // need it pinned (2 = the dense-CC default, fine for nearness too).
     opts.inner_sweeps = Some(args.get_parsed_or("inner-sweeps", 2usize));
+    // Hidden fault-injection seam (tests and the CI crash-recovery leg).
+    let fault_plan = match args.get("fault-plan") {
+        Some(spec) => match paf::serve::FaultPlan::parse(spec) {
+            Ok(plan) => plan,
+            Err(e) => {
+                eprintln!("--fault-plan {spec:?}: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => paf::serve::FaultPlan::default(),
+    };
     let jobs = match args.get("trace") {
         Some(path) => {
             let text = match std::fs::read_to_string(path) {
@@ -210,13 +226,18 @@ fn cmd_serve(args: &Args, seed: u64) {
                     std::process::exit(2);
                 }
             };
-            match paf::serve::parse_job_trace(&text) {
-                Ok(jobs) => jobs,
-                Err(e) => {
-                    eprintln!("--trace {path}: {e}");
-                    std::process::exit(2);
-                }
+            let text = fault_plan.apply_to_trace(&text);
+            // Lenient by design: a service must not die because one
+            // line of its queue file is bad — skip and report.
+            let (jobs, errors) = paf::serve::parse_job_trace_lenient(&text);
+            for e in &errors {
+                eprintln!("--trace {path}: {e} (line skipped)");
             }
+            if jobs.is_empty() {
+                eprintln!("--trace {path}: no valid jobs");
+                std::process::exit(2);
+            }
+            jobs
         }
         None => {
             println!("no --trace given: running the built-in mixed demo trace");
@@ -226,7 +247,19 @@ fn cmd_serve(args: &Args, seed: u64) {
     let capacity = args.get_parsed_or("capacity", 4usize);
     println!("serve: {} jobs, capacity {capacity}", jobs.len());
     let bank = paf::serve::JobBank::materialize(&jobs);
-    let cfg = paf::serve::ServeConfig { capacity, opts, ..Default::default() };
+    let checkpoint_every = args.get_parsed_or("checkpoint-every", 0usize);
+    let high_water = args.get_parsed_or("high-water", 0usize);
+    let cfg = paf::serve::ServeConfig {
+        capacity,
+        opts,
+        state_dir: args.get("state-dir").map(std::path::PathBuf::from),
+        checkpoint_every: (checkpoint_every > 0).then_some(checkpoint_every),
+        retry_limit: args.get_parsed_or("retry-limit", 2usize),
+        queue_high_water: (high_water > 0).then_some(high_water),
+        age_rounds: args.get_parsed_or("age-rounds", 0usize),
+        fault_plan,
+        ..Default::default()
+    };
     let clock = Stopwatch::new();
     let mut scheduler = paf::serve::Scheduler::new(jobs, &bank, cfg);
     scheduler.on_event(|event| match event {
@@ -242,15 +275,31 @@ fn cmd_serve(args: &Args, seed: u64) {
         paf::serve::ServeEvent::Expired { round, job, rounds_done } => {
             println!("  round {round:>4}: job {job} expired after {rounds_done} rounds")
         }
+        paf::serve::ServeEvent::Recovered { round, job, rounds_done } => {
+            println!("  round {round:>4}: recovered job {job} from checkpoint ({rounds_done} rounds done)")
+        }
+        paf::serve::ServeEvent::Shed { round, job, queue_depth } => {
+            println!("  round {round:>4}: shed job {job} (overload, {queue_depth} still queued)")
+        }
+        paf::serve::ServeEvent::Retried { round, job, attempt } => {
+            println!("  round {round:>4}: retry job {job} (attempt {attempt})")
+        }
+        paf::serve::ServeEvent::Quarantined { round, job, attempt } => {
+            println!("  round {round:>4}: quarantined job {job} (attempt {attempt})")
+        }
         paf::serve::ServeEvent::Idle { .. } => {}
     });
     let stats = scheduler.run();
     println!(
-        "serve finished: {} rounds, {}/{} completed, {} preemptions, {}s wall",
+        "serve finished: {} rounds, {}/{} completed, {} preemptions, {} recovered, \
+         {} shed, {} failed, {}s wall",
         stats.rounds,
         stats.completed,
         stats.jobs.len(),
         stats.preemptions,
+        stats.recovered,
+        stats.shed,
+        stats.failed,
         report::fmt_time(clock.elapsed_s())
     );
     let mut t = Table::new(
@@ -271,6 +320,13 @@ fn cmd_serve(args: &Args, seed: u64) {
     }
     report::emit_table(&t, "serve");
     let _ = paf::serve::emit_serve_json(&stats, "SERVE_trace");
+    if stats.crashed {
+        eprintln!(
+            "serve: injected crash — running state persisted; restart with the same \
+             --state-dir to recover"
+        );
+        std::process::exit(paf::serve::CRASH_EXIT_CODE);
+    }
 }
 
 fn cmd_cc(args: &Args, seed: u64) {

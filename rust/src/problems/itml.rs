@@ -17,6 +17,7 @@ use crate::core::problem::{Lowered, Problem, RoundProblem, RoundReport, RoundSna
 use crate::core::session::Session;
 use crate::ml::dataset::Dataset;
 use crate::ml::mahalanobis::Mat;
+use crate::util::wire::{Reader, WireError, Writer};
 use crate::util::Rng;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -183,6 +184,14 @@ impl PairList {
         for (slot, (pair, _)) in self.pairs.iter().enumerate() {
             self.index.insert(*pair, slot);
         }
+    }
+
+    /// Rebuild from a deserialized slot-ordered pair list; the hash index
+    /// is derived state and is reconstructed here.
+    pub(crate) fn from_pairs(pairs: Vec<(Pair, PairState)>) -> PairList {
+        let index =
+            pairs.iter().enumerate().map(|(slot, (pair, _))| (*pair, slot)).collect();
+        PairList { pairs, index }
     }
 }
 
@@ -360,6 +369,92 @@ impl RoundProblem for PfItmlRun<'_> {
     }
 }
 
+/// Serialize a PF-ITML [`RoundSnapshot`] into `w` for durable
+/// checkpoints (`serve::persist`): the Mahalanobis matrix as IEEE bits,
+/// the full RNG state (xoshiro words + Box–Muller spare), the projection
+/// count, and the remembered pairs in slot order with their (λ, ξ).
+/// Returns `false` if the snapshot belongs to some other round-driven
+/// problem — the caller reports that checkpoint as unsupported.
+///
+/// Byte-stable: encoding a decoded snapshot reproduces the bytes
+/// exactly (the pair-list hash index is derived state and not written).
+pub(crate) fn encode_round_snapshot(snap: &RoundSnapshot, w: &mut Writer) -> bool {
+    let Some(s) = snap.downcast_ref::<ItmlSnapshot>() else {
+        return false;
+    };
+    w.put_u64(s.m.d as u64);
+    w.put_u64(s.m.a.len() as u64);
+    for &v in &s.m.a {
+        w.put_f64(v);
+    }
+    let (words, spare) = s.rng.state();
+    for word in words {
+        w.put_u64(word);
+    }
+    match spare {
+        Some(z) => {
+            w.put_u8(1);
+            w.put_f64(z);
+        }
+        None => w.put_u8(0),
+    }
+    w.put_u64(s.projections as u64);
+    w.put_u64(s.remembered.pairs.len() as u64);
+    for (pair, st) in &s.remembered.pairs {
+        w.put_u32(pair.i);
+        w.put_u32(pair.j);
+        w.put_u8(pair.similar as u8);
+        w.put_f64(st.lambda);
+        w.put_f64(st.xi);
+    }
+    true
+}
+
+/// Decode the [`encode_round_snapshot`] layout back into a restorable
+/// [`RoundSnapshot`]. Every length and tag is validated, so a truncated
+/// or bit-flipped buffer yields a typed error, never a panic.
+pub(crate) fn decode_round_snapshot(r: &mut Reader<'_>) -> Result<RoundSnapshot, WireError> {
+    let d = r.get_u64("itml.d")? as usize;
+    let na = r.get_count(8, "itml.mat")?;
+    let mut a = Vec::with_capacity(na);
+    for _ in 0..na {
+        a.push(r.get_f64("itml.mat")?);
+    }
+    if d.checked_mul(d) != Some(na) {
+        return Err(WireError { what: "itml.mat", at: r.pos() });
+    }
+    let mut words = [0u64; 4];
+    for word in &mut words {
+        *word = r.get_u64("itml.rng")?;
+    }
+    let spare = match r.get_u8("itml.rng.spare")? {
+        0 => None,
+        1 => Some(r.get_f64("itml.rng.spare")?),
+        _ => return Err(WireError { what: "itml.rng.spare", at: r.pos() }),
+    };
+    let projections = r.get_u64("itml.projections")? as usize;
+    let np = r.get_count(4 + 4 + 1 + 8 + 8, "itml.pairs")?;
+    let mut pairs = Vec::with_capacity(np);
+    for _ in 0..np {
+        let i = r.get_u32("itml.pair.i")?;
+        let j = r.get_u32("itml.pair.j")?;
+        let similar = match r.get_u8("itml.pair.similar")? {
+            0 => false,
+            1 => true,
+            _ => return Err(WireError { what: "itml.pair.similar", at: r.pos() }),
+        };
+        let lambda = r.get_f64("itml.pair.lambda")?;
+        let xi = r.get_f64("itml.pair.xi")?;
+        pairs.push((Pair { i, j, similar }, PairState { lambda, xi }));
+    }
+    Ok(Arc::new(ItmlSnapshot {
+        m: Mat { d, a },
+        rng: Rng::from_state(words, spare),
+        remembered: PairList::from_pairs(pairs),
+        projections,
+    }))
+}
+
 /// PROJECT AND FORGET for ITML over the full implicit pair set.
 ///
 /// Thin wrapper over the [`Session`] API (bit-identical to it; pinned
@@ -489,5 +584,46 @@ mod tests {
         let res = solve_pf_itml(&data, &cfg);
         // Remembered pairs must be far fewer than all sampled pairs.
         assert!(res.active_pairs < 5000, "active {}", res.active_pairs);
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrips_byte_stably_and_restores_exactly() {
+        let mut rng = Rng::new(21);
+        let data = gaussian_mixture(80, 4, 2, 2.0, &mut rng);
+        let cfg = PfItmlConfig { max_projections: 4000, batch: 50, seed: 21, ..Default::default() };
+        let mut run = PfItmlRun::new(&data, cfg.clone());
+        for _ in 0..5 {
+            run.one_round();
+        }
+        let snap = run.snapshot().expect("PF-ITML supports checkpointing");
+
+        // Encode → decode → re-encode reproduces the bytes exactly.
+        let mut w = Writer::new();
+        assert!(encode_round_snapshot(&snap, &mut w));
+        let bytes = w.into_bytes();
+        let decoded = decode_round_snapshot(&mut Reader::new(&bytes)).expect("decode");
+        let mut w2 = Writer::new();
+        assert!(encode_round_snapshot(&decoded, &mut w2));
+        assert_eq!(bytes, w2.into_bytes(), "re-serialization is not byte-stable");
+
+        // Restoring the decoded snapshot continues bit-identically.
+        let mut resumed = PfItmlRun::new(&data, cfg);
+        resumed.restore(&decoded);
+        for _ in 0..5 {
+            run.one_round();
+            resumed.one_round();
+        }
+        let (a, b) = (Box::new(run).finish(), Box::new(resumed).finish());
+        assert_eq!(a.projections, b.projections);
+        assert_eq!(a.active_pairs, b.active_pairs);
+        let bits = |m: &Mat| m.a.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.m), bits(&b.m), "resumed matrix diverged");
+
+        // A foreign snapshot is refused, not mis-decoded.
+        let foreign: RoundSnapshot = Arc::new(42usize);
+        assert!(!encode_round_snapshot(&foreign, &mut Writer::new()));
+
+        // Truncation is a typed error.
+        assert!(decode_round_snapshot(&mut Reader::new(&bytes[..bytes.len() - 3])).is_err());
     }
 }

@@ -29,7 +29,11 @@ pub fn emit_series(s: &Series, basename: &str) {
 /// event stream); solver-result documents are unchanged in shape.
 /// v3: trace entries and serve job objects gained the sweep-scheduling
 /// counters `rows_projected` / `rows_skipped` (additive).
-pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 3;
+/// v4: serve documents gained fault-tolerance fields — per job `shed`,
+/// `failed`, `retries`, `recovered`, `error`; top-level `recovered`,
+/// `shed`, `retried`, `failed`, `crashed`; and the `recovered` / `shed`
+/// / `retried` / `quarantined` event kinds (additive).
+pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 4;
 
 /// Serialise a [`SolverResult`] (with its per-phase timing breakdown
 /// and, when recorded, the full per-iteration trace) as JSON. `label`

@@ -14,6 +14,7 @@
 //! `tests/determinism.rs`).
 
 use super::queue::{Job, JobSpec};
+use super::ServeError;
 use crate::core::problem::{Handle, SolveOptions};
 use crate::core::session::{BlockCheckpoint, Session};
 use crate::core::solver::SolverResult;
@@ -104,18 +105,32 @@ pub struct JobOutcome {
     pub objective: f64,
 }
 
+/// The typed error every admission path returns on a job whose spec and
+/// bank input disagree — isolation, not a panic: the scheduler
+/// quarantines the one bad job and the rest of the fleet keeps going.
+fn spec_mismatch(job: &Job) -> ServeError {
+    ServeError::SpecMismatch {
+        job: job.id,
+        msg: format!("spec kind {:?} does not match its bank input", job.spec.kind()),
+    }
+}
+
 /// Build the job's problem and admit it into the running session (the
 /// oracle runs in Collect mode: deterministic delivery, overlappable,
 /// shard-bucketed exactly when the sharded engine is selected).
-pub fn admit_job<'a>(session: &mut Session<'a>, job: &Job, input: &'a JobInput) -> JobHandle {
+pub fn admit_job<'a>(
+    session: &mut Session<'a>,
+    job: &Job,
+    input: &'a JobInput,
+) -> Result<JobHandle, ServeError> {
     match (&job.spec, input) {
-        (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => {
-            JobHandle::Nearness(session.admit(Nearness::new(inst).mode(OracleMode::Collect)))
-        }
-        (JobSpec::Correlation { seed, .. }, JobInput::Cc(inst)) => JobHandle::Cc(
+        (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => Ok(JobHandle::Nearness(
+            session.admit(Nearness::new(inst).mode(OracleMode::Collect)),
+        )),
+        (JobSpec::Correlation { seed, .. }, JobInput::Cc(inst)) => Ok(JobHandle::Cc(
             session.admit(Correlation::dense(inst).mode(OracleMode::Collect).seed(*seed)),
-        ),
-        _ => panic!("job {} spec does not match its bank input", job.id),
+        )),
+        _ => Err(spec_mismatch(job)),
     }
 }
 
@@ -126,18 +141,18 @@ pub fn resume_job<'a>(
     job: &Job,
     input: &'a JobInput,
     ck: &BlockCheckpoint,
-) -> JobHandle {
+) -> Result<JobHandle, ServeError> {
     match (&job.spec, input) {
-        (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => JobHandle::Nearness(
+        (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => Ok(JobHandle::Nearness(
             session.admit_resumed(Nearness::new(inst).mode(OracleMode::Collect), ck),
-        ),
+        )),
         (JobSpec::Correlation { seed, .. }, JobInput::Cc(inst)) => {
-            JobHandle::Cc(session.admit_resumed(
+            Ok(JobHandle::Cc(session.admit_resumed(
                 Correlation::dense(inst).mode(OracleMode::Collect).seed(*seed),
                 ck,
-            ))
+            )))
         }
-        _ => panic!("job {} spec does not match its bank input", job.id),
+        _ => Err(spec_mismatch(job)),
     }
 }
 
@@ -155,19 +170,23 @@ pub fn take_job(session: &mut Session<'_>, handle: JobHandle) -> Option<JobOutco
 
 /// Solve one job alone — the reference trajectory the serve paths are
 /// pinned against, and the sequential baseline in `perf_hotpath` P8.
-pub fn solve_job_solo(job: &Job, input: &JobInput, opts: &SolveOptions) -> JobOutcome {
+pub fn solve_job_solo(
+    job: &Job,
+    input: &JobInput,
+    opts: &SolveOptions,
+) -> Result<JobOutcome, ServeError> {
     match (&job.spec, input) {
         (JobSpec::Nearness { .. }, JobInput::Nearness(inst)) => {
             let r = Session::solve_one(opts.clone(), Nearness::new(inst).mode(OracleMode::Collect));
-            JobOutcome { objective: r.objective, result: r.result }
+            Ok(JobOutcome { objective: r.objective, result: r.result })
         }
         (JobSpec::Correlation { seed, .. }, JobInput::Cc(inst)) => {
             let r = Session::solve_one(
                 opts.clone(),
                 Correlation::dense(inst).mode(OracleMode::Collect).seed(*seed),
             );
-            JobOutcome { objective: r.lp_objective, result: r.result }
+            Ok(JobOutcome { objective: r.lp_objective, result: r.result })
         }
-        _ => panic!("job {} spec does not match its bank input", job.id),
+        _ => Err(spec_mismatch(job)),
     }
 }

@@ -18,14 +18,57 @@
 //! typed-handle adapters; [`scheduler`] — the service loop.
 
 pub mod admission;
+pub mod persist;
 pub mod queue;
 pub mod scheduler;
 
 pub use admission::{admit_job, resume_job, solve_job_solo, take_job, JobBank, JobHandle, JobInput, JobOutcome};
-pub use queue::{parse_job_trace, Job, JobQueue, JobSpec};
+pub use persist::{
+    load_checkpoint, remove_checkpoint, scan_state_dir, write_checkpoint_atomic, FaultPlan,
+    CRASH_EXIT_CODE,
+};
+pub use queue::{parse_job_trace, parse_job_trace_lenient, Job, JobQueue, JobSpec};
 pub use scheduler::{demo_trace, JobStats, Scheduler, ServeConfig, ServeEvent, ServeStats};
 
 use crate::report;
+
+/// Typed serve-layer failure. The scheduler never panics on bad input:
+/// a malformed trace line is skipped-and-reported, a job whose spec or
+/// checkpoint is unusable is quarantined and retried, and the rest of
+/// the fleet keeps stepping.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// A malformed job-trace line (1-based line number; 0 for
+    /// whole-trace problems such as an empty trace).
+    Trace { line: usize, msg: String },
+    /// A job whose spec does not match its bank input or cannot be
+    /// admitted.
+    SpecMismatch { job: usize, msg: String },
+    /// Filesystem failure in the durable-checkpoint path.
+    Io { path: String, msg: String },
+    /// A checkpoint file that failed checksum or decode validation.
+    Corrupt { path: String, msg: String },
+    /// A checkpoint kind this build cannot serialize.
+    Unsupported { msg: String },
+    /// A malformed `--fault-plan` spec.
+    FaultPlan { msg: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Trace { line, msg } if *line == 0 => write!(f, "trace: {msg}"),
+            ServeError::Trace { line, msg } => write!(f, "trace line {line}: {msg}"),
+            ServeError::SpecMismatch { job, msg } => write!(f, "job {job}: {msg}"),
+            ServeError::Io { path, msg } => write!(f, "{path}: {msg}"),
+            ServeError::Corrupt { path, msg } => write!(f, "corrupt checkpoint {path}: {msg}"),
+            ServeError::Unsupported { msg } => write!(f, "unsupported: {msg}"),
+            ServeError::FaultPlan { msg } => write!(f, "fault plan: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Serialise a [`ServeStats`] as the schema-versioned serve JSON
 /// (`"kind": "serve"`; schema version shared with the solver-result
@@ -44,6 +87,11 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
     out.push_str(&format!("  \"completed\": {},\n", stats.completed));
     out.push_str(&format!("  \"preemptions\": {},\n", stats.preemptions));
     out.push_str(&format!("  \"expired\": {},\n", stats.expired));
+    out.push_str(&format!("  \"recovered\": {},\n", stats.recovered));
+    out.push_str(&format!("  \"shed\": {},\n", stats.shed));
+    out.push_str(&format!("  \"retried\": {},\n", stats.retried));
+    out.push_str(&format!("  \"failed\": {},\n", stats.failed));
+    out.push_str(&format!("  \"crashed\": {},\n", stats.crashed));
     out.push_str("  \"jobs\": [\n");
     for (k, j) in stats.jobs.iter().enumerate() {
         out.push_str(&format!(
@@ -63,6 +111,17 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
             "\"preemptions\": {}, \"rounds_run\": {}, \"projections\": {}, \
              \"converged\": {}, \"expired\": {}, ",
             j.preemptions, j.rounds_run, j.projections, j.converged, j.expired
+        ));
+        out.push_str(&format!(
+            "\"shed\": {}, \"failed\": {}, \"retries\": {}, \"recovered\": {}, \"error\": {}, ",
+            j.shed,
+            j.failed,
+            j.retries,
+            j.recovered,
+            match &j.error {
+                Some(e) => format!("\"{}\"", queue::json_escape(e)),
+                None => "null".to_string(),
+            }
         ));
         // Sweep-scheduling counters, summed over the job's recorded
         // trace (0 for jobs that never produced a result).
@@ -118,6 +177,22 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
                  \"rounds_done\": {rounds_done}"
             ),
             ServeEvent::Idle { round } => format!("\"event\": \"idle\", \"round\": {round}"),
+            ServeEvent::Recovered { round, job, rounds_done } => format!(
+                "\"event\": \"recovered\", \"round\": {round}, \"job\": {job}, \
+                 \"rounds_done\": {rounds_done}"
+            ),
+            ServeEvent::Shed { round, job, queue_depth } => format!(
+                "\"event\": \"shed\", \"round\": {round}, \"job\": {job}, \
+                 \"queue_depth\": {queue_depth}"
+            ),
+            ServeEvent::Retried { round, job, attempt } => format!(
+                "\"event\": \"retried\", \"round\": {round}, \"job\": {job}, \
+                 \"attempt\": {attempt}"
+            ),
+            ServeEvent::Quarantined { round, job, attempt } => format!(
+                "\"event\": \"quarantined\", \"round\": {round}, \"job\": {job}, \
+                 \"attempt\": {attempt}"
+            ),
         };
         out.push_str(&format!(
             "    {{{body}}}{}\n",
@@ -156,6 +231,11 @@ mod tests {
             completed: 1,
             preemptions: 1,
             expired: 0,
+            recovered: 1,
+            shed: 0,
+            retried: 1,
+            failed: 0,
+            crashed: false,
             jobs: vec![JobStats {
                 name: "near-a".to_string(),
                 kind: "nearness",
@@ -172,11 +252,19 @@ mod tests {
                 objective: Some(1.5),
                 phases: PhaseTimes { oracle_s: 0.1, sweep_s: 0.2, forget_s: 0.01 },
                 result: None,
+                shed: false,
+                failed: false,
+                retries: 1,
+                recovered: true,
+                error: Some("corrupt checkpoint \"x\"".to_string()),
             }],
             events: vec![
-                ServeEvent::Admitted { round: 0, job: 0, resumed: false },
+                ServeEvent::Recovered { round: 0, job: 0, rounds_done: 3 },
+                ServeEvent::Admitted { round: 0, job: 0, resumed: true },
                 ServeEvent::Preempted { round: 2, job: 0, rounds_done: 2 },
-                ServeEvent::Admitted { round: 3, job: 0, resumed: true },
+                ServeEvent::Quarantined { round: 3, job: 0, attempt: 1 },
+                ServeEvent::Retried { round: 5, job: 0, attempt: 1 },
+                ServeEvent::Admitted { round: 5, job: 0, resumed: true },
                 ServeEvent::Completed { round: 7, job: 0, converged: true },
             ],
         };
@@ -193,8 +281,23 @@ mod tests {
         assert_eq!(jobs[0].get("deadline_met"), Some(&Json::Bool(true)));
         assert_eq!(jobs[0].get("rows_projected").and_then(|v| v.as_usize()), Some(0));
         assert_eq!(jobs[0].get("rows_skipped").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(jobs[0].get("shed"), Some(&Json::Bool(false)));
+        assert_eq!(jobs[0].get("failed"), Some(&Json::Bool(false)));
+        assert_eq!(jobs[0].get("recovered"), Some(&Json::Bool(true)));
+        assert_eq!(jobs[0].get("retries").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(
+            jobs[0].get("error").and_then(|v| v.as_str()),
+            Some("corrupt checkpoint \"x\""),
+            "error strings are JSON-escaped"
+        );
+        assert_eq!(json.get("recovered").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(json.get("retried").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(json.get("crashed"), Some(&Json::Bool(false)));
         let events = json.get("events").and_then(|e| e.as_arr()).expect("events array");
-        assert_eq!(events.len(), 4);
-        assert_eq!(events[1].get("event").and_then(|v| v.as_str()), Some("preempted"));
+        assert_eq!(events.len(), 7);
+        assert_eq!(events[0].get("event").and_then(|v| v.as_str()), Some("recovered"));
+        assert_eq!(events[2].get("event").and_then(|v| v.as_str()), Some("preempted"));
+        assert_eq!(events[3].get("event").and_then(|v| v.as_str()), Some("quarantined"));
+        assert_eq!(events[4].get("event").and_then(|v| v.as_str()), Some("retried"));
     }
 }

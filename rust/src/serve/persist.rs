@@ -1,0 +1,467 @@
+//! Durable checkpoints: the on-disk [`BlockCheckpoint`] wire format,
+//! atomic writes, quarantine, state-dir recovery scans, and the
+//! deterministic [`FaultPlan`] seam the fault tests drive.
+//!
+//! ## File format (version 1)
+//!
+//! Everything is little-endian; `f64` travels as its IEEE bit pattern,
+//! so a decoded checkpoint re-encodes to the identical bytes and a
+//! recovered job's trajectory is bit-identical to the uninterrupted
+//! solve.
+//!
+//! ```text
+//! magic   u64   "PAFCKPT1"
+//! version u32   1
+//! kind    u32   1 = vector block, 2 = round-driven block
+//! body    kind-specific sections, each length-prefixed
+//! digest  u64   FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! The digest is verified over the whole file *before* any section is
+//! parsed, so a bit-flipped length field is caught by the checksum and
+//! can never drive a bogus allocation; section parsing is additionally
+//! bounds-checked (`wire::Reader`) as defense in depth. Writes go to a
+//! `*.tmp` sibling and `rename` into place, so a crash mid-write leaves
+//! either the old checkpoint or a temp file the recovery scan ignores —
+//! never a torn `*.ckpt`. Files that fail validation are moved to
+//! `DIR/corrupt/` and the job restarts from scratch.
+
+use super::ServeError;
+use crate::core::constraint::Constraint;
+use crate::core::session::BlockCheckpoint;
+use crate::core::solver::{IterStats, PhaseTimes};
+use crate::problems::itml;
+use crate::util::wire::{fnv1a64, Reader, WireError, Writer};
+use std::path::{Path, PathBuf};
+
+const MAGIC: u64 = u64::from_le_bytes(*b"PAFCKPT1");
+const VERSION: u32 = 1;
+const KIND_VECTOR: u32 = 1;
+const KIND_ROUND: u32 = 2;
+/// Round-snapshot codec tags (which problem serialized the snapshot).
+const SNAP_ITML: u32 = 1;
+
+/// Exit code a `serve` process uses for an injected crash
+/// ([`FaultPlan::crash_after_round`]), so the CI harness can tell a
+/// planned crash from a real failure.
+pub const CRASH_EXIT_CODE: i32 = 42;
+
+fn corrupt(path: &Path, msg: impl Into<String>) -> ServeError {
+    ServeError::Corrupt { path: path.display().to_string(), msg: msg.into() }
+}
+
+fn io_err(path: &Path, e: &std::io::Error) -> ServeError {
+    ServeError::Io { path: path.display().to_string(), msg: e.to_string() }
+}
+
+fn wire_err(path: &Path, e: WireError) -> ServeError {
+    corrupt(path, e.to_string())
+}
+
+/// Serialize a [`BlockCheckpoint`] to its on-disk bytes (header + body
+/// + trailing digest). Fails only for a round-driven checkpoint whose
+/// problem has no snapshot codec.
+pub fn encode_checkpoint(ck: &BlockCheckpoint) -> Result<Vec<u8>, ServeError> {
+    let mut w = Writer::new();
+    w.put_u64(MAGIC);
+    w.put_u32(VERSION);
+    if let Some(v) = ck.vector_view() {
+        w.put_u32(KIND_VECTOR);
+        w.put_u64(v.iterations as u64);
+        w.put_u64(v.projections as u64);
+        w.put_f64(v.last_dual_movement);
+        w.put_u64(v.x.len() as u64);
+        for &xi in v.x {
+            w.put_f64(xi);
+        }
+        w.put_u64(v.rows.len() as u64);
+        for (c, z) in v.rows {
+            w.put_u64(c.indices.len() as u64);
+            for &i in &c.indices {
+                w.put_u32(i);
+            }
+            for &a in &c.coeffs {
+                w.put_f64(a);
+            }
+            w.put_f64(c.rhs);
+            w.put_f64(*z);
+        }
+        w.put_u64(v.trace.len() as u64);
+        for it in v.trace {
+            put_iter_stats(&mut w, it);
+        }
+        w.put_f64(v.phases.oracle_s);
+        w.put_f64(v.phases.sweep_s);
+        w.put_f64(v.phases.forget_s);
+    } else {
+        let (state, iterations, projections) =
+            ck.round_view().expect("checkpoint is neither vector nor round");
+        w.put_u32(KIND_ROUND);
+        w.put_u64(iterations as u64);
+        w.put_u64(projections as u64);
+        w.put_u32(SNAP_ITML);
+        if !itml::encode_round_snapshot(state, &mut w) {
+            return Err(ServeError::Unsupported {
+                msg: "this round-driven problem has no snapshot codec".to_string(),
+            });
+        }
+    }
+    let digest = fnv1a64(w.as_slice());
+    w.put_u64(digest);
+    Ok(w.into_bytes())
+}
+
+/// Decode checkpoint bytes, verifying the trailing digest over the
+/// whole buffer before parsing anything. `path` labels errors only.
+pub fn decode_checkpoint(bytes: &[u8], path: &Path) -> Result<BlockCheckpoint, ServeError> {
+    if bytes.len() < 8 + 4 + 4 + 8 {
+        return Err(corrupt(path, format!("truncated: {} bytes", bytes.len())));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let digest = u64::from_le_bytes(tail.try_into().unwrap());
+    let want = fnv1a64(body);
+    if digest != want {
+        return Err(corrupt(
+            path,
+            format!("checksum mismatch: file {digest:#018x}, computed {want:#018x}"),
+        ));
+    }
+    let mut r = Reader::new(body);
+    let we = |e: WireError| wire_err(path, e);
+    if r.get_u64("magic").map_err(we)? != MAGIC {
+        return Err(corrupt(path, "bad magic (not a checkpoint file)"));
+    }
+    let version = r.get_u32("version").map_err(we)?;
+    if version != VERSION {
+        return Err(corrupt(path, format!("unsupported version {version}")));
+    }
+    let kind = r.get_u32("kind").map_err(we)?;
+    let ck = match kind {
+        KIND_VECTOR => {
+            let iterations = r.get_u64("iterations").map_err(we)? as usize;
+            let projections = r.get_u64("projections").map_err(we)? as usize;
+            let last_dual_movement = r.get_f64("last_dual_movement").map_err(we)?;
+            let nx = r.get_count(8, "x").map_err(we)?;
+            let mut x = Vec::with_capacity(nx);
+            for _ in 0..nx {
+                x.push(r.get_f64("x").map_err(we)?);
+            }
+            // A row is at least k(u32+f64) + rhs + z; 12 bytes/index is
+            // the per-element floor the count check can rely on.
+            let nrows = r.get_count(8 + 8 + 8, "rows").map_err(we)?;
+            let mut rows = Vec::with_capacity(nrows);
+            for _ in 0..nrows {
+                let k = r.get_count(4 + 8, "row.indices").map_err(we)?;
+                let mut indices = Vec::with_capacity(k);
+                for _ in 0..k {
+                    indices.push(r.get_u32("row.index").map_err(we)?);
+                }
+                let mut coeffs = Vec::with_capacity(k);
+                for _ in 0..k {
+                    coeffs.push(r.get_f64("row.coeff").map_err(we)?);
+                }
+                let rhs = r.get_f64("row.rhs").map_err(we)?;
+                let z = r.get_f64("row.z").map_err(we)?;
+                rows.push((Constraint::new(indices, coeffs, rhs), z));
+            }
+            let ntrace = r.get_count(12 * 8, "trace").map_err(we)?;
+            let mut trace = Vec::with_capacity(ntrace);
+            for _ in 0..ntrace {
+                trace.push(get_iter_stats(&mut r).map_err(we)?);
+            }
+            let phases = PhaseTimes {
+                oracle_s: r.get_f64("phases.oracle_s").map_err(we)?,
+                sweep_s: r.get_f64("phases.sweep_s").map_err(we)?,
+                forget_s: r.get_f64("phases.forget_s").map_err(we)?,
+            };
+            BlockCheckpoint::from_vector_parts(
+                x,
+                rows,
+                iterations,
+                projections,
+                last_dual_movement,
+                trace,
+                phases,
+            )
+        }
+        KIND_ROUND => {
+            let iterations = r.get_u64("iterations").map_err(we)? as usize;
+            let projections = r.get_u64("projections").map_err(we)? as usize;
+            let codec = r.get_u32("snapshot.codec").map_err(we)?;
+            if codec != SNAP_ITML {
+                return Err(corrupt(path, format!("unknown snapshot codec {codec}")));
+            }
+            let state = itml::decode_round_snapshot(&mut r).map_err(we)?;
+            BlockCheckpoint::from_round_parts(state, iterations, projections)
+        }
+        other => return Err(corrupt(path, format!("unknown checkpoint kind {other}"))),
+    };
+    if r.remaining() != 0 {
+        return Err(corrupt(path, format!("{} trailing bytes after body", r.remaining())));
+    }
+    Ok(ck)
+}
+
+fn put_iter_stats(w: &mut Writer, it: &IterStats) {
+    w.put_u64(it.iteration as u64);
+    w.put_u64(it.found as u64);
+    w.put_u64(it.merged as u64);
+    w.put_u64(it.remembered as u64);
+    w.put_f64(it.max_violation);
+    w.put_u64(it.projections as u64);
+    w.put_f64(it.seconds);
+    w.put_f64(it.oracle_s);
+    w.put_f64(it.sweep_s);
+    w.put_f64(it.forget_s);
+    w.put_u64(it.rows_projected as u64);
+    w.put_u64(it.rows_skipped as u64);
+}
+
+fn get_iter_stats(r: &mut Reader<'_>) -> Result<IterStats, WireError> {
+    Ok(IterStats {
+        iteration: r.get_u64("trace.iteration")? as usize,
+        found: r.get_u64("trace.found")? as usize,
+        merged: r.get_u64("trace.merged")? as usize,
+        remembered: r.get_u64("trace.remembered")? as usize,
+        max_violation: r.get_f64("trace.max_violation")?,
+        projections: r.get_u64("trace.projections")? as usize,
+        seconds: r.get_f64("trace.seconds")?,
+        oracle_s: r.get_f64("trace.oracle_s")?,
+        sweep_s: r.get_f64("trace.sweep_s")?,
+        forget_s: r.get_f64("trace.forget_s")?,
+        rows_projected: r.get_u64("trace.rows_projected")? as usize,
+        rows_skipped: r.get_u64("trace.rows_skipped")? as usize,
+    })
+}
+
+/// `DIR/job-<id>.ckpt` — one durable checkpoint per incomplete job.
+pub fn checkpoint_path(dir: &Path, job: usize) -> PathBuf {
+    dir.join(format!("job-{job}.ckpt"))
+}
+
+/// Write a checkpoint atomically: encode, write to `*.tmp`, fsync-free
+/// `rename` into place (rename is atomic on POSIX within a directory).
+/// Returns the final path.
+pub fn write_checkpoint_atomic(
+    dir: &Path,
+    job: usize,
+    ck: &BlockCheckpoint,
+) -> Result<PathBuf, ServeError> {
+    std::fs::create_dir_all(dir).map_err(|e| io_err(dir, &e))?;
+    let bytes = encode_checkpoint(ck)?;
+    let path = checkpoint_path(dir, job);
+    let tmp = dir.join(format!("job-{job}.ckpt.tmp"));
+    std::fs::write(&tmp, &bytes).map_err(|e| io_err(&tmp, &e))?;
+    std::fs::rename(&tmp, &path).map_err(|e| io_err(&path, &e))?;
+    Ok(path)
+}
+
+/// Read and validate a checkpoint file.
+pub fn load_checkpoint(path: &Path) -> Result<BlockCheckpoint, ServeError> {
+    let bytes = std::fs::read(path).map_err(|e| io_err(path, &e))?;
+    decode_checkpoint(&bytes, path)
+}
+
+/// Drop a job's checkpoint once the job completes (or is shed, expires
+/// without a retry, or permanently fails). Best-effort: a missing file
+/// is fine.
+pub fn remove_checkpoint(dir: &Path, job: usize) {
+    let _ = std::fs::remove_file(checkpoint_path(dir, job));
+}
+
+/// Move a failed-validation checkpoint to `DIR/corrupt/` so it never
+/// poisons another recovery scan but stays available for post-mortems.
+/// Returns the quarantine path.
+pub fn quarantine(dir: &Path, path: &Path) -> Result<PathBuf, ServeError> {
+    let qdir = dir.join("corrupt");
+    std::fs::create_dir_all(&qdir).map_err(|e| io_err(&qdir, &e))?;
+    let name = path.file_name().unwrap_or_else(|| std::ffi::OsStr::new("unnamed.ckpt"));
+    let dest = qdir.join(name);
+    std::fs::rename(path, &dest).map_err(|e| io_err(path, &e))?;
+    Ok(dest)
+}
+
+/// Recovery scan: every `job-<id>.ckpt` in the state dir, sorted by job
+/// id so recovery order is deterministic. Temp files, the `corrupt/`
+/// subdir, and unrelated names are ignored. A missing dir is an empty
+/// scan (first run against a fresh `--state-dir`).
+pub fn scan_state_dir(dir: &Path) -> Result<Vec<(usize, PathBuf)>, ServeError> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(io_err(dir, &e)),
+    };
+    let mut found = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| io_err(dir, &e))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(id) = name
+            .strip_prefix("job-")
+            .and_then(|rest| rest.strip_suffix(".ckpt"))
+            .and_then(|id| id.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        found.push((id, entry.path()));
+    }
+    found.sort_by_key(|&(id, _)| id);
+    Ok(found)
+}
+
+/// A deterministic fault-injection plan, compiled into the scheduler's
+/// seams so every recovery invariant is testable without real crashes
+/// or real bit rot. Parsed from the hidden `--fault-plan` CLI flag:
+///
+/// ```text
+/// crash=K          persist all running jobs and exit after round K
+/// corrupt=JOB:BYTE XOR one bit of byte (BYTE mod len) after writing
+///                  JOB's checkpoint
+/// poison=ID        mismatch job ID's spec against its bank input
+/// garble=LINE      truncate trace line LINE (1-based) before parsing
+/// ```
+///
+/// Directives combine comma-separated, e.g. `crash=12,corrupt=1:40`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// After this scheduler round completes, persist every running
+    /// job's checkpoint and stop with `ServeStats::crashed` set; the
+    /// process then exits with [`CRASH_EXIT_CODE`].
+    pub crash_after_round: Option<usize>,
+    /// `(job, byte)`: after writing this job's checkpoint, XOR bit 0 of
+    /// `byte % file_len` in place — deterministic bit rot.
+    pub corrupt_checkpoint: Option<(usize, usize)>,
+    /// Jobs whose spec is deliberately mismatched against the bank
+    /// (exercises the quarantine-and-retry path).
+    pub poison_spec: Vec<usize>,
+    /// 1-based trace line to garble before parsing (exercises the
+    /// skip-and-report path).
+    pub garble_trace_line: Option<usize>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// Parse the `--fault-plan` directive string.
+    pub fn parse(s: &str) -> Result<FaultPlan, ServeError> {
+        let bad = |msg: String| ServeError::FaultPlan { msg };
+        let mut plan = FaultPlan::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| bad(format!("directive {part:?} is not key=value")))?;
+            let parse_usize = |v: &str, what: &str| {
+                v.parse::<usize>().map_err(|_| bad(format!("{what} {v:?} is not a number")))
+            };
+            match key {
+                "crash" => plan.crash_after_round = Some(parse_usize(val, "crash round")?),
+                "corrupt" => {
+                    let (job, byte) = val
+                        .split_once(':')
+                        .ok_or_else(|| bad(format!("corrupt value {val:?} is not JOB:BYTE")))?;
+                    plan.corrupt_checkpoint =
+                        Some((parse_usize(job, "corrupt job")?, parse_usize(byte, "corrupt byte")?));
+                }
+                "poison" => plan.poison_spec.push(parse_usize(val, "poison job")?),
+                "garble" => plan.garble_trace_line = Some(parse_usize(val, "garble line")?),
+                other => return Err(bad(format!("unknown directive {other:?}"))),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Apply [`FaultPlan::garble_trace_line`] to a trace's text:
+    /// truncate the named line mid-token so it no longer parses.
+    pub fn apply_to_trace(&self, text: &str) -> String {
+        let Some(target) = self.garble_trace_line else {
+            return text.to_string();
+        };
+        let mut out = String::with_capacity(text.len());
+        for (lineno, line) in text.lines().enumerate() {
+            if lineno + 1 == target {
+                out.push_str(&line[..line.len().min(7)]);
+            } else {
+                out.push_str(line);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Apply [`FaultPlan::corrupt_checkpoint`] to a just-written file:
+    /// flip one bit of the configured byte. No-op for other jobs.
+    pub fn corrupt_file(&self, job: usize, path: &Path) -> Result<(), ServeError> {
+        let Some((target, byte)) = self.corrupt_checkpoint else { return Ok(()) };
+        if target != job {
+            return Ok(());
+        }
+        let mut bytes = std::fs::read(path).map_err(|e| io_err(path, &e))?;
+        if bytes.is_empty() {
+            return Ok(());
+        }
+        let at = byte % bytes.len();
+        bytes[at] ^= 1;
+        std::fs::write(path, &bytes).map_err(|e| io_err(path, &e))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_and_roundtrips_semantics() {
+        let plan = FaultPlan::parse("crash=12, corrupt=1:40, poison=2, poison=0, garble=3")
+            .expect("valid plan");
+        assert_eq!(plan.crash_after_round, Some(12));
+        assert_eq!(plan.corrupt_checkpoint, Some((1, 40)));
+        assert_eq!(plan.poison_spec, vec![2, 0]);
+        assert_eq!(plan.garble_trace_line, Some(3));
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::parse("").expect("empty plan").is_empty());
+        assert!(FaultPlan::parse("crash").is_err(), "missing value");
+        assert!(FaultPlan::parse("corrupt=5").is_err(), "missing byte");
+        assert!(FaultPlan::parse("explode=1").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn garbled_trace_line_no_longer_parses_but_others_do() {
+        let text = "{\"problem\": \"nearness\", \"n\": 8}\n{\"problem\": \"cc\", \"n\": 9}\n";
+        let plan = FaultPlan { garble_trace_line: Some(2), ..Default::default() };
+        let garbled = plan.apply_to_trace(text);
+        let (jobs, errors) = crate::serve::parse_job_trace_lenient(&garbled);
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(errors.len(), 1);
+    }
+
+    #[test]
+    fn state_dir_scan_orders_by_job_id_and_ignores_noise() {
+        let dir = std::env::temp_dir().join(format!(
+            "paf-persist-scan-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(dir.join("corrupt")).unwrap();
+        for name in ["job-10.ckpt", "job-2.ckpt", "job-3.ckpt.tmp", "notes.txt"] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        let found = scan_state_dir(&dir).expect("scan");
+        let ids: Vec<usize> = found.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![2, 10]);
+        assert!(scan_state_dir(&dir.join("missing")).expect("fresh dir").is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_header_is_corrupt_not_panic() {
+        let p = Path::new("unit.ckpt");
+        assert!(matches!(decode_checkpoint(b"PAFCK", p), Err(ServeError::Corrupt { .. })));
+        // Valid length, garbage digest.
+        let mut bytes = vec![0u8; 64];
+        bytes[63] = 0xff;
+        assert!(matches!(decode_checkpoint(&bytes, p), Err(ServeError::Corrupt { .. })));
+    }
+}

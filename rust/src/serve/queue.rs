@@ -19,9 +19,8 @@
 //! FIFO tie-breaking on enqueue order — fully deterministic, so a serve
 //! run is reproducible from its trace.
 
+use super::ServeError;
 use crate::runtime::json::Json;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// What problem a job solves. Instances are generated, not stored, so
 /// job traces stay tiny and self-describing.
@@ -60,9 +59,14 @@ pub struct Job {
     /// Per-job cap on solve rounds actually run (preemption time does
     /// not count); the scheduler expires the job when exceeded.
     pub max_rounds: Option<usize>,
-    /// Completion target, in scheduler rounds after arrival; purely
-    /// reported (`deadline_met` in the stats), never enforced.
+    /// Completion deadline, in scheduler rounds after arrival —
+    /// **enforced**: a job still unfinished past it is evicted and
+    /// marked `Expired` (`deadline_met: false` in the stats).
     pub deadline_rounds: Option<usize>,
+    /// Wall-clock completion deadline in milliseconds, measured from the
+    /// moment the job becomes ready (queueing time counts). Enforced the
+    /// same way as [`Job::deadline_rounds`].
+    pub deadline_ms: Option<u64>,
 }
 
 /// Escape a string for embedding in a JSON string literal (quotes,
@@ -114,6 +118,9 @@ impl Job {
         if let Some(d) = self.deadline_rounds {
             s.push_str(&format!(", \"deadline_rounds\": {d}"));
         }
+        if let Some(d) = self.deadline_ms {
+            s.push_str(&format!(", \"deadline_ms\": {d}"));
+        }
         s.push('}');
         s
     }
@@ -137,75 +144,101 @@ fn get_i64(obj: &Json, key: &str) -> Option<i64> {
     }
 }
 
+/// Parse one trace line (already trimmed, known non-comment) into the
+/// job with positional id `id`. `lineno` is 1-based, for error reports.
+fn parse_job_line(line: &str, lineno: usize, id: usize) -> Result<Job, ServeError> {
+    let err = |msg: String| ServeError::Trace { line: lineno, msg };
+    let obj = Json::parse(line).map_err(|e| err(e.to_string()))?;
+    let kind = obj
+        .get("problem")
+        .and_then(Json::as_str)
+        .ok_or_else(|| err("missing \"problem\"".to_string()))?;
+    let n = get_usize(&obj, "n").ok_or_else(|| err("missing \"n\"".to_string()))?;
+    // JSON numbers travel as f64: integers at or above 2^53 are not
+    // exactly representable, so a mangled seed would silently break
+    // the trace-determines-workload guarantee. Reject them.
+    let seed = match get_usize(&obj, "seed") {
+        Some(s) if s >= (1usize << 53) => {
+            return Err(err(format!(
+                "\"seed\" {s} is not exactly representable as a JSON number \
+                 (seeds must be below 2^53)"
+            )))
+        }
+        Some(s) => s as u64,
+        None => id as u64,
+    };
+    let spec = match kind {
+        "nearness" => JobSpec::Nearness {
+            n,
+            graph_type: get_usize(&obj, "graph_type").unwrap_or(1) as u8,
+            seed,
+        },
+        "cc" => JobSpec::Correlation {
+            n,
+            clusters: get_usize(&obj, "clusters").unwrap_or(2),
+            flip: get_f64(&obj, "flip").unwrap_or(0.1),
+            seed,
+        },
+        other => {
+            return Err(err(format!(
+                "unknown problem {other:?} (expected \"nearness\" or \"cc\")"
+            )))
+        }
+    };
+    let name = obj
+        .get("name")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{kind}-{id}"));
+    Ok(Job {
+        id,
+        name,
+        spec,
+        priority: get_i64(&obj, "priority").unwrap_or(0),
+        arrival_round: get_usize(&obj, "arrival_round").unwrap_or(0),
+        max_rounds: get_usize(&obj, "max_rounds"),
+        deadline_rounds: get_usize(&obj, "deadline_rounds"),
+        deadline_ms: get_usize(&obj, "deadline_ms").map(|v| v as u64),
+    })
+}
+
 /// Parse a line-delimited JSON job trace (see the module docs for the
-/// format). Job ids are assigned by position.
-pub fn parse_job_trace(text: &str) -> Result<Vec<Job>, String> {
+/// format). Job ids are assigned by position. Strict: the first
+/// malformed line aborts the parse with its line number.
+pub fn parse_job_trace(text: &str) -> Result<Vec<Job>, ServeError> {
     let mut jobs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let obj = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
-        let id = jobs.len();
-        let kind = obj
-            .get("problem")
-            .and_then(Json::as_str)
-            .ok_or_else(|| format!("line {}: missing \"problem\"", lineno + 1))?;
-        let n = get_usize(&obj, "n")
-            .ok_or_else(|| format!("line {}: missing \"n\"", lineno + 1))?;
-        // JSON numbers travel as f64: integers at or above 2^53 are not
-        // exactly representable, so a mangled seed would silently break
-        // the trace-determines-workload guarantee. Reject them.
-        let seed = match get_usize(&obj, "seed") {
-            Some(s) if s >= (1usize << 53) => {
-                return Err(format!(
-                    "line {}: \"seed\" {s} is not exactly representable as a JSON number \
-                     (seeds must be below 2^53)",
-                    lineno + 1
-                ))
-            }
-            Some(s) => s as u64,
-            None => id as u64,
-        };
-        let spec = match kind {
-            "nearness" => JobSpec::Nearness {
-                n,
-                graph_type: get_usize(&obj, "graph_type").unwrap_or(1) as u8,
-                seed,
-            },
-            "cc" => JobSpec::Correlation {
-                n,
-                clusters: get_usize(&obj, "clusters").unwrap_or(2),
-                flip: get_f64(&obj, "flip").unwrap_or(0.1),
-                seed,
-            },
-            other => {
-                return Err(format!(
-                    "line {}: unknown problem {other:?} (expected \"nearness\" or \"cc\")",
-                    lineno + 1
-                ))
-            }
-        };
-        let name = obj
-            .get("name")
-            .and_then(Json::as_str)
-            .map(str::to_string)
-            .unwrap_or_else(|| format!("{kind}-{id}"));
-        jobs.push(Job {
-            id,
-            name,
-            spec,
-            priority: get_i64(&obj, "priority").unwrap_or(0),
-            arrival_round: get_usize(&obj, "arrival_round").unwrap_or(0),
-            max_rounds: get_usize(&obj, "max_rounds"),
-            deadline_rounds: get_usize(&obj, "deadline_rounds"),
-        });
+        jobs.push(parse_job_line(line, lineno + 1, jobs.len())?);
     }
     if jobs.is_empty() {
-        return Err("trace contains no jobs".to_string());
+        return Err(ServeError::Trace { line: 0, msg: "trace contains no jobs".to_string() });
     }
     Ok(jobs)
+}
+
+/// Lenient trace parse: malformed lines are skipped and reported (with
+/// their 1-based line numbers) instead of aborting the run; ids are
+/// assigned by position among the lines that *did* parse, so the
+/// surviving jobs load into a [`super::JobBank`] unchanged. An empty
+/// result with no errors means the trace had no job lines at all.
+pub fn parse_job_trace_lenient(text: &str) -> (Vec<Job>, Vec<ServeError>) {
+    let mut jobs = Vec::new();
+    let mut errors = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_job_line(line, lineno + 1, jobs.len()) {
+            Ok(job) => jobs.push(job),
+            Err(e) => errors.push(e),
+        }
+    }
+    (jobs, errors)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -214,28 +247,32 @@ struct Entry {
     /// Enqueue sequence number; earlier wins on equal priority.
     seq: u64,
     job: usize,
+    /// Scheduler round at which the job entered the queue (aging base).
+    enqueued: usize,
 }
 
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Max-heap: higher priority first, then FIFO (lower seq first).
-        self.priority
-            .cmp(&other.priority)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
+impl Entry {
+    /// Effective priority after aging: the base priority plus one level
+    /// per `age_rounds` rounds spent waiting (0 disables aging). This is
+    /// what guarantees a low-priority job cannot starve forever under a
+    /// stream of high-priority arrivals.
+    fn effective(&self, now: usize, age_rounds: usize) -> i64 {
+        if age_rounds == 0 {
+            self.priority
+        } else {
+            self.priority + (now.saturating_sub(self.enqueued) / age_rounds) as i64
+        }
     }
 }
 
 /// The ready queue: jobs that have arrived (or were preempted) and wait
-/// for capacity. Deterministic priority order with FIFO tie-breaking.
+/// for capacity. Deterministic priority order with FIFO tie-breaking,
+/// plus optional priority aging and overload shedding. Backed by a
+/// plain vector — queues are small and effective priorities drift with
+/// `now`, so a heap's cached order would go stale anyway.
 #[derive(Debug, Default)]
 pub struct JobQueue {
-    heap: BinaryHeap<Entry>,
+    entries: Vec<Entry>,
     seq: u64,
 }
 
@@ -245,27 +282,79 @@ impl JobQueue {
     }
 
     pub fn push(&mut self, job: usize, priority: i64) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Entry { priority, seq, job });
+        self.push_at(job, priority, 0);
     }
 
-    /// Highest-priority ready job, if any.
+    /// Enqueue recording the current round, so aging can credit the wait.
+    pub fn push_at(&mut self, job: usize, priority: i64, now: usize) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.entries.push(Entry { priority, seq, job, enqueued: now });
+    }
+
+    /// Index of the entry [`JobQueue::pop_aged`] would take: highest
+    /// effective priority, FIFO (lowest seq) within a level.
+    fn best(&self, now: usize, age_rounds: usize) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                a.effective(now, age_rounds)
+                    .cmp(&b.effective(now, age_rounds))
+                    .then_with(|| b.seq.cmp(&a.seq))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Highest-priority ready job, if any (no aging).
     pub fn pop(&mut self) -> Option<usize> {
-        self.heap.pop().map(|e| e.job)
+        self.pop_aged(0, 0).map(|(job, _)| job)
+    }
+
+    /// Highest *effective*-priority ready job and that effective
+    /// priority. The caller records the effective priority as the
+    /// admitted job's runtime priority (priority inheritance), so an
+    /// aged job cannot be preempted right back by the next arrival of
+    /// its original level.
+    pub fn pop_aged(&mut self, now: usize, age_rounds: usize) -> Option<(usize, i64)> {
+        let i = self.best(now, age_rounds)?;
+        let e = self.entries.remove(i);
+        Some((e.job, e.effective(now, age_rounds)))
     }
 
     /// Priority of the job [`JobQueue::pop`] would return.
     pub fn peek_priority(&self) -> Option<i64> {
-        self.heap.peek().map(|e| e.priority)
+        self.peek_priority_aged(0, 0)
+    }
+
+    /// Effective priority of the job [`JobQueue::pop_aged`] would return.
+    pub fn peek_priority_aged(&self, now: usize, age_rounds: usize) -> Option<i64> {
+        self.best(now, age_rounds).map(|i| self.entries[i].effective(now, age_rounds))
+    }
+
+    /// Overload shedding: remove and return the job with the *lowest*
+    /// effective priority, latest-enqueued first within a level (the
+    /// jobs that have waited least lose first).
+    pub fn shed_lowest(&mut self, now: usize, age_rounds: usize) -> Option<usize> {
+        let i = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.effective(now, age_rounds)
+                    .cmp(&b.effective(now, age_rounds))
+                    .then_with(|| b.seq.cmp(&a.seq))
+            })
+            .map(|(i, _)| i)?;
+        Some(self.entries.remove(i).job)
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.entries.is_empty()
     }
 }
 
@@ -299,6 +388,7 @@ mod tests {
                 arrival_round: 0,
                 max_rounds: None,
                 deadline_rounds: Some(200),
+                deadline_ms: None,
             },
             Job {
                 id: 1,
@@ -308,6 +398,7 @@ mod tests {
                 arrival_round: 3,
                 max_rounds: Some(400),
                 deadline_rounds: None,
+                deadline_ms: Some(2500),
             },
         ];
         let text: String = format!(
@@ -325,6 +416,7 @@ mod tests {
             assert_eq!(a.arrival_round, b.arrival_round);
             assert_eq!(a.max_rounds, b.max_rounds);
             assert_eq!(a.deadline_rounds, b.deadline_rounds);
+            assert_eq!(a.deadline_ms, b.deadline_ms);
         }
     }
 
@@ -338,6 +430,7 @@ mod tests {
             arrival_round: 0,
             max_rounds: None,
             deadline_rounds: None,
+            deadline_ms: None,
         };
         let line = job.to_json_line();
         crate::runtime::json::Json::parse(&line).expect("escaped line must be valid JSON");
@@ -364,5 +457,64 @@ mod tests {
         assert!(parse_job_trace("").is_err(), "empty trace");
         assert!(parse_job_trace("{\"problem\": \"qp\", \"n\": 3}").is_err(), "unknown kind");
         assert!(parse_job_trace("{\"problem\": \"cc\"}").is_err(), "missing n");
+    }
+
+    #[test]
+    fn strict_parse_reports_the_offending_line_number() {
+        let text = "# header\n{\"problem\": \"nearness\", \"n\": 8}\n{garbage\n";
+        match parse_job_trace(text) {
+            Err(ServeError::Trace { line, .. }) => assert_eq!(line, 3),
+            other => panic!("expected a Trace error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lenient_parse_skips_bad_lines_with_line_numbers() {
+        let text = "{\"problem\": \"nearness\", \"n\": 8}\n\
+                    {garbage\n\
+                    {\"problem\": \"qp\", \"n\": 3}\n\
+                    {\"problem\": \"cc\", \"n\": 9}\n";
+        let (jobs, errors) = parse_job_trace_lenient(text);
+        assert_eq!(jobs.len(), 2);
+        // Ids stay positional among the jobs that parsed, so the bank
+        // loads them unchanged.
+        assert_eq!(jobs[0].id, 0);
+        assert_eq!(jobs[1].id, 1);
+        assert_eq!(jobs[1].spec, JobSpec::Correlation { n: 9, clusters: 2, flip: 0.1, seed: 1 });
+        let lines: Vec<usize> = errors
+            .iter()
+            .map(|e| match e {
+                ServeError::Trace { line, .. } => *line,
+                other => panic!("unexpected error kind {other:?}"),
+            })
+            .collect();
+        assert_eq!(lines, vec![2, 3]);
+    }
+
+    #[test]
+    fn aging_promotes_starved_jobs_and_reports_effective_priority() {
+        let mut q = JobQueue::new();
+        q.push_at(0, 0, 0); // low priority, waiting since round 0
+        q.push_at(1, 5, 100); // high priority, just arrived
+        // Without aging the high-priority job wins.
+        assert_eq!(q.peek_priority_aged(100, 0), Some(5));
+        // With one level per 10 waited rounds, the starved job has aged
+        // to effective priority 10 and jumps the queue.
+        assert_eq!(q.peek_priority_aged(100, 10), Some(10));
+        assert_eq!(q.pop_aged(100, 10), Some((0, 10)));
+        assert_eq!(q.pop_aged(100, 10), Some((1, 5)));
+        assert_eq!(q.pop_aged(100, 10), None);
+    }
+
+    #[test]
+    fn shed_drops_lowest_priority_latest_enqueued_first() {
+        let mut q = JobQueue::new();
+        q.push_at(0, 1, 0);
+        q.push_at(1, 0, 0);
+        q.push_at(2, 0, 0);
+        assert_eq!(q.shed_lowest(0, 0), Some(2), "latest of the lowest level sheds first");
+        assert_eq!(q.shed_lowest(0, 0), Some(1));
+        assert_eq!(q.shed_lowest(0, 0), Some(0));
+        assert_eq!(q.shed_lowest(0, 0), None);
     }
 }

@@ -2,31 +2,55 @@
 //! round-by-round while a job queue feeds it.
 //!
 //! Each scheduler round is: (1) **arrivals** — jobs whose
-//! `arrival_round` has come move into the ready queue; (2)
-//! **preemption** — while capacity is full and a strictly
-//! higher-priority job waits, the lowest-priority running job is
-//! checkpointed ([`Session::evict`]) and requeued; (3) **admission** —
-//! ready jobs fill free capacity in priority order, fresh jobs through
-//! [`Session::admit`], preempted ones through
-//! [`Session::admit_resumed`]; (4) one [`Session::step`] advances every
-//! running job by one PROJECT AND FORGET round — the fleet shares a
-//! single (optionally sharded) sweep, which is the point: sweep
-//! throughput is the scarce resource (Ruggles et al., 1901.10084), so
-//! the server amortizes one sweep across a *changing* fleet instead of
-//! solving jobs one at a time; (5) **completions** — finished blocks
-//! are redeemed, their stats recorded, and their coordinate ranges
-//! compacted out of the concatenated vector.
+//! `arrival_round` has come move into the ready queue, and parked
+//! retries whose backoff elapsed rejoin it; (2) **shedding** — under
+//! overload (queue depth over `queue_high_water`) the lowest-priority
+//! pending jobs are dropped with an explicit [`ServeEvent::Shed`]
+//! rather than degrading everyone; (3) **preemption/admission** — while
+//! capacity is full and a strictly higher-*effective*-priority job
+//! waits, the lowest-priority running job is checkpointed
+//! ([`Session::evict`]) and requeued; ready jobs then fill free
+//! capacity in effective-priority order (priority plus aging credit, so
+//! no job starves), fresh jobs through [`Session::admit`], preempted or
+//! recovered ones through [`Session::admit_resumed`]; (4) one
+//! [`Session::step`] advances every running job by one PROJECT AND
+//! FORGET round — the fleet shares a single (optionally sharded) sweep,
+//! which is the point: sweep throughput is the scarce resource (Ruggles
+//! et al., 1901.10084), so the server amortizes one sweep across a
+//! *changing* fleet instead of solving jobs one at a time; (5)
+//! **completions and deadlines** — finished blocks are redeemed, jobs
+//! past their `max_rounds` budget, `deadline_rounds`, or wall-clock
+//! `deadline_ms` are evicted and marked `Expired`, and finished
+//! coordinate ranges are compacted out of the concatenated vector.
 //!
 //! Every admission, preemption and resumption happens between rounds,
 //! where the solve state is a post-FORGET snapshot, so each job's
 //! trajectory is bit-identical to its solo `Session::solve_one` run
 //! (pinned in `tests/determinism.rs`).
+//!
+//! ## Fault tolerance
+//!
+//! With a `state_dir`, every preemption (and every `checkpoint_every`
+//! rounds) also writes the job's [`BlockCheckpoint`] durably
+//! ([`super::persist`], atomic temp-file + rename); on startup the
+//! scheduler recovers incomplete jobs from the state dir and resumes
+//! them bit-identically across the process boundary. Corrupt files are
+//! quarantined to `state_dir/corrupt/` and the job restarts from
+//! scratch. A job that fails admission (e.g. a poisoned spec) is
+//! quarantined and retried with exponential round-backoff up to
+//! `retry_limit` while the fleet keeps stepping; the injected-fault
+//! seams ([`FaultPlan`]) make every one of these paths deterministic
+//! under test.
 
 use super::admission::{admit_job, resume_job, take_job, JobBank, JobHandle};
+use super::persist::{self, FaultPlan};
 use super::queue::{Job, JobQueue, JobSpec};
+use super::ServeError;
 use crate::core::problem::SolveOptions;
 use crate::core::session::{BlockCheckpoint, Session};
 use crate::core::solver::{PhaseTimes, SolverResult};
+use std::path::PathBuf;
+use std::time::Instant;
 
 /// Scheduler knobs.
 #[derive(Debug, Clone)]
@@ -38,6 +62,25 @@ pub struct ServeConfig {
     pub opts: SolveOptions,
     /// Global safety valve on scheduler rounds.
     pub max_service_rounds: usize,
+    /// Durable-checkpoint directory. `None` keeps checkpoints in memory
+    /// only (a crash loses all progress).
+    pub state_dir: Option<PathBuf>,
+    /// Also persist every running job's checkpoint every N rounds (not
+    /// just at preemptions), bounding crash-loss to N rounds of work.
+    pub checkpoint_every: Option<usize>,
+    /// Admission-failure retries before a job is permanently failed.
+    pub retry_limit: usize,
+    /// Shed the lowest-priority pending jobs while the ready queue is
+    /// deeper than this. `None` never sheds.
+    pub queue_high_water: Option<usize>,
+    /// Priority aging: a waiting job gains one effective priority level
+    /// per this many queued rounds (0 disables aging). The admitted job
+    /// *keeps* its aged priority (priority inheritance), so it cannot be
+    /// preempted right back by the next arrival of its original level.
+    pub age_rounds: usize,
+    /// Deterministic fault injection (tests and the hidden
+    /// `--fault-plan` flag); empty in production.
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for ServeConfig {
@@ -46,6 +89,12 @@ impl Default for ServeConfig {
             capacity: 4,
             opts: SolveOptions::new(),
             max_service_rounds: 100_000,
+            state_dir: None,
+            checkpoint_every: None,
+            retry_limit: 2,
+            queue_high_water: None,
+            age_rounds: 0,
+            fault_plan: FaultPlan::default(),
         }
     }
 }
@@ -54,17 +103,30 @@ impl Default for ServeConfig {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ServeEvent {
     /// A job entered the running fleet (`resumed` = from a preemption
-    /// checkpoint).
+    /// or recovery checkpoint).
     Admitted { round: usize, job: usize, resumed: bool },
     /// A running job was checkpointed and requeued to make room for a
     /// higher-priority arrival.
     Preempted { round: usize, job: usize, rounds_done: usize },
     /// A job reached its stop rule; its output is redeemed.
     Completed { round: usize, job: usize, converged: bool },
-    /// A job exceeded its own `max_rounds` budget and was dropped.
+    /// A job exceeded its `max_rounds` budget, `deadline_rounds`, or
+    /// wall-clock `deadline_ms` and was dropped.
     Expired { round: usize, job: usize, rounds_done: usize },
     /// No job was runnable this round (waiting on future arrivals).
     Idle { round: usize },
+    /// A durable checkpoint from a previous process was loaded at
+    /// startup; the job resumes from `rounds_done`.
+    Recovered { round: usize, job: usize, rounds_done: usize },
+    /// Overload: a pending job was dropped to protect the rest
+    /// (`queue_depth` = ready jobs left after the drop).
+    Shed { round: usize, job: usize, queue_depth: usize },
+    /// A quarantined job's backoff elapsed; attempt `attempt` rejoins
+    /// the ready queue.
+    Retried { round: usize, job: usize, attempt: usize },
+    /// A job failed admission (attempt `attempt`); it is parked with
+    /// exponential backoff, or permanently failed past `retry_limit`.
+    Quarantined { round: usize, job: usize, attempt: usize },
 }
 
 /// Per-job service record.
@@ -82,16 +144,29 @@ pub struct JobStats {
     pub rounds_run: usize,
     pub projections: usize,
     pub converged: bool,
-    /// Dropped after exceeding its `max_rounds` budget.
+    /// Dropped after exceeding its `max_rounds` budget or a deadline.
     pub expired: bool,
-    /// `completed_round − arrival_round ≤ deadline_rounds`, when a
-    /// deadline was set and the job completed.
+    /// Deadline outcome: `Some(true)` iff the job completed within every
+    /// deadline it declared; `Some(false)` for any job that expired, was
+    /// shed, or permanently failed (never `null` for those); `None` only
+    /// for a job with no deadlines that wasn't dropped.
     pub deadline_met: Option<bool>,
     pub objective: Option<f64>,
     /// Accumulated per-phase timings of the job's own rounds.
     pub phases: PhaseTimes,
     /// The full per-job result (bit-comparable to a solo solve).
     pub result: Option<SolverResult>,
+    /// Dropped by overload shedding before ever being admitted.
+    pub shed: bool,
+    /// Permanently failed admission (`retry_limit` exceeded).
+    pub failed: bool,
+    /// Times the job rejoined the queue after a quarantine backoff.
+    pub retries: usize,
+    /// Resumed from a durable checkpoint written by a previous process.
+    pub recovered: bool,
+    /// Last serve-layer error the job hit (admission failure, corrupt
+    /// checkpoint, persist failure), if any.
+    pub error: Option<String>,
 }
 
 /// What a serve run did, per job and overall.
@@ -102,12 +177,23 @@ pub struct ServeStats {
     pub completed: usize,
     pub preemptions: usize,
     pub expired: usize,
+    /// Jobs resumed from durable checkpoints at startup.
+    pub recovered: usize,
+    /// Jobs dropped by overload shedding.
+    pub shed: usize,
+    /// Retry re-admissions after quarantine backoffs.
+    pub retried: usize,
+    /// Jobs permanently failed (admission errors past `retry_limit`).
+    pub failed: usize,
+    /// The run stopped on an injected crash after persisting state
+    /// (the process should exit with [`persist::CRASH_EXIT_CODE`]).
+    pub crashed: bool,
     pub jobs: Vec<JobStats>,
     pub events: Vec<ServeEvent>,
 }
 
 impl ServeStats {
-    /// Every job completed (none expired or left unfinished).
+    /// Every job completed (none expired, shed, failed, or unfinished).
     pub fn all_completed(&self) -> bool {
         self.completed == self.jobs.len()
     }
@@ -120,6 +206,10 @@ struct Running {
     admitted_at: usize,
     /// Solve rounds the job had already run when (re-)admitted.
     base_rounds: usize,
+    /// Effective priority at admission (base + aging credit). Victim
+    /// selection compares against this, not the base priority, so an
+    /// aged job keeps the level it earned by waiting.
+    prio: i64,
 }
 
 /// The long-running scheduler over one [`Session`] fleet.
@@ -131,9 +221,19 @@ pub struct Scheduler<'a> {
     /// Job ids sorted by `arrival_round` (stable), consumed in order.
     arrivals: Vec<usize>,
     next_arrival: usize,
+    /// Jobs already moved past the arrival gate (recovered jobs arrive
+    /// early, at round 0, regardless of their trace `arrival_round`).
+    arrived: Vec<bool>,
     ready: JobQueue,
     running: Vec<Running>,
     checkpoints: Vec<Option<BlockCheckpoint>>,
+    /// Admission failures per job (drives backoff and `retry_limit`).
+    attempts: Vec<usize>,
+    /// Quarantined jobs waiting out their backoff: `(release_round, job)`.
+    parked: Vec<(usize, usize)>,
+    /// Wall-clock instant each job first became ready (queueing time
+    /// counts against `deadline_ms`).
+    ready_at: Vec<Option<Instant>>,
     stats: ServeStats,
     round: usize,
     observers: Vec<Box<dyn FnMut(&ServeEvent) + 'a>>,
@@ -168,6 +268,11 @@ impl<'a> Scheduler<'a> {
             completed: 0,
             preemptions: 0,
             expired: 0,
+            recovered: 0,
+            shed: 0,
+            retried: 0,
+            failed: 0,
+            crashed: false,
             jobs: jobs
                 .iter()
                 .map(|j| JobStats {
@@ -186,11 +291,16 @@ impl<'a> Scheduler<'a> {
                     objective: None,
                     phases: PhaseTimes::default(),
                     result: None,
+                    shed: false,
+                    failed: false,
+                    retries: 0,
+                    recovered: false,
+                    error: None,
                 })
                 .collect(),
             events: Vec::new(),
         };
-        let checkpoints = (0..jobs.len()).map(|_| None).collect();
+        let n = jobs.len();
         Scheduler {
             session: Session::new(cfg.opts.clone()),
             cfg,
@@ -198,9 +308,13 @@ impl<'a> Scheduler<'a> {
             jobs,
             arrivals,
             next_arrival: 0,
+            arrived: vec![false; n],
             ready: JobQueue::new(),
             running: Vec::new(),
-            checkpoints,
+            checkpoints: (0..n).map(|_| None).collect(),
+            attempts: vec![0; n],
+            parked: Vec::new(),
+            ready_at: vec![None; n],
             stats,
             round: 0,
             observers: Vec::new(),
@@ -219,17 +333,93 @@ impl<'a> Scheduler<'a> {
         self.stats.events.push(event);
     }
 
-    /// The running job to preempt: lowest priority; ties prefer the most
-    /// recently admitted (its warm state is smallest), then the highest
-    /// block index — fully deterministic.
+    /// Milliseconds since the job first became ready (0 if it never has).
+    fn elapsed_ms(&self, job: usize) -> u64 {
+        self.ready_at[job].map(|t| t.elapsed().as_millis() as u64).unwrap_or(0)
+    }
+
+    /// Enter the ready queue; the first time also starts the job's
+    /// wall-clock deadline. Requeues (preemption, retry) keep the
+    /// original clock — queueing time counts.
+    fn mark_ready(&mut self, job: usize) {
+        if self.ready_at[job].is_none() {
+            self.ready_at[job] = Some(Instant::now());
+        }
+        self.ready.push_at(job, self.jobs[job].priority, self.round);
+    }
+
+    fn remove_state_file(&self, job: usize) {
+        if let Some(dir) = &self.cfg.state_dir {
+            persist::remove_checkpoint(dir, job);
+        }
+    }
+
+    /// Persist one job's checkpoint durably (best-effort: a failed
+    /// write is recorded on the job and serving continues — the
+    /// in-memory state is still intact). Applies the corrupt-byte
+    /// fault after the write so tests get deterministic bit rot.
+    fn persist_checkpoint(&mut self, job: usize, ck: &BlockCheckpoint) {
+        let Some(dir) = self.cfg.state_dir.clone() else { return };
+        let fault = self.cfg.fault_plan.clone();
+        match persist::write_checkpoint_atomic(&dir, job, ck) {
+            Ok(path) => {
+                if let Err(e) = fault.corrupt_file(job, &path) {
+                    self.stats.jobs[job].error = Some(e.to_string());
+                }
+            }
+            Err(e) => self.stats.jobs[job].error = Some(e.to_string()),
+        }
+    }
+
+    /// Startup recovery: load every `job-<id>.ckpt` from the state dir.
+    /// Valid checkpoints re-enter service immediately (arrival round 0,
+    /// resumed bit-identically); corrupt ones are quarantined to
+    /// `state_dir/corrupt/` and the job restarts from scratch at its
+    /// normal arrival — determinism makes the restart exact, just
+    /// without the saved progress.
+    fn recover(&mut self) {
+        let Some(dir) = self.cfg.state_dir.clone() else { return };
+        let found = match persist::scan_state_dir(&dir) {
+            Ok(found) => found,
+            Err(_) => return, // unreadable dir: serve from scratch
+        };
+        for (job, path) in found {
+            if job >= self.jobs.len() {
+                continue; // a different trace's leftovers; not ours to touch
+            }
+            match persist::load_checkpoint(&path) {
+                Ok(ck) => {
+                    let rounds_done = ck.iterations();
+                    let s = &mut self.stats.jobs[job];
+                    s.recovered = true;
+                    s.rounds_run = rounds_done;
+                    s.projections = ck.projections();
+                    self.stats.recovered += 1;
+                    self.checkpoints[job] = Some(ck);
+                    self.arrived[job] = true;
+                    self.mark_ready(job);
+                    self.emit(ServeEvent::Recovered { round: 0, job, rounds_done });
+                }
+                Err(e) => {
+                    self.stats.jobs[job].error = Some(e.to_string());
+                    if let Err(qe) = persist::quarantine(&dir, &path) {
+                        self.stats.jobs[job].error = Some(qe.to_string());
+                    }
+                    let attempt = self.attempts[job];
+                    self.emit(ServeEvent::Quarantined { round: 0, job, attempt });
+                }
+            }
+        }
+    }
+
+    /// The running job to preempt: lowest *effective* priority (as
+    /// admitted); ties prefer the most recently admitted (its warm
+    /// state is smallest), then the highest block index — fully
+    /// deterministic.
     fn pick_victim(&self) -> Option<usize> {
         (0..self.running.len()).min_by_key(|&i| {
             let r = &self.running[i];
-            (
-                self.jobs[r.job].priority,
-                std::cmp::Reverse(r.admitted_at),
-                std::cmp::Reverse(r.handle.index()),
-            )
+            (r.prio, std::cmp::Reverse(r.admitted_at), std::cmp::Reverse(r.handle.index()))
         })
     }
 
@@ -242,70 +432,230 @@ impl<'a> Scheduler<'a> {
         self.stats.jobs[job].rounds_run = rounds_done;
         self.stats.jobs[job].projections = ck.projections();
         self.stats.preemptions += 1;
+        self.persist_checkpoint(job, &ck);
         self.checkpoints[job] = Some(ck);
-        self.ready.push(job, self.jobs[job].priority);
+        self.mark_ready(job);
         self.emit(ServeEvent::Preempted { round: self.round, job, rounds_done });
     }
 
-    fn admit(&mut self, job: usize) {
-        let ck = self.checkpoints[job].take();
-        let resumed = ck.is_some();
-        let handle = match ck {
-            Some(ck) => resume_job(&mut self.session, &self.jobs[job], self.bank.input(job), &ck),
-            None => admit_job(&mut self.session, &self.jobs[job], self.bank.input(job)),
+    /// Admit `job` at effective priority `prio`, or quarantine it on a
+    /// typed admission failure. The in-memory checkpoint is only
+    /// consumed on success, so a failed resume can retry later.
+    fn try_admit(&mut self, job: usize, prio: i64) {
+        let outcome = if self.cfg.fault_plan.poison_spec.contains(&job) {
+            Err(ServeError::SpecMismatch {
+                job,
+                msg: "injected poisoned spec (fault plan)".to_string(),
+            })
+        } else if let Some(ck) = &self.checkpoints[job] {
+            resume_job(&mut self.session, &self.jobs[job], self.bank.input(job), ck)
+                .map(|h| (h, true))
+        } else {
+            admit_job(&mut self.session, &self.jobs[job], self.bank.input(job))
+                .map(|h| (h, false))
         };
-        let base_rounds = self.stats.jobs[job].rounds_run;
-        if self.stats.jobs[job].admitted_round.is_none() {
-            self.stats.jobs[job].admitted_round = Some(self.round);
+        match outcome {
+            Ok((handle, resumed)) => {
+                self.checkpoints[job] = None;
+                let base_rounds = self.stats.jobs[job].rounds_run;
+                if self.stats.jobs[job].admitted_round.is_none() {
+                    self.stats.jobs[job].admitted_round = Some(self.round);
+                }
+                self.running.push(Running {
+                    job,
+                    handle,
+                    admitted_at: self.round,
+                    base_rounds,
+                    prio,
+                });
+                self.emit(ServeEvent::Admitted { round: self.round, job, resumed });
+            }
+            Err(e) => self.quarantine_failed(job, e),
         }
-        self.running.push(Running { job, handle, admitted_at: self.round, base_rounds });
-        self.emit(ServeEvent::Admitted { round: self.round, job, resumed });
     }
 
-    /// Drive the trace to completion (all jobs completed or expired, all
-    /// arrivals consumed) and return the service record.
+    /// Record an admission failure: park the job with exponential
+    /// round-backoff (2, 4, 8, … rounds), or permanently fail it past
+    /// `retry_limit`. The fleet keeps stepping either way.
+    fn quarantine_failed(&mut self, job: usize, e: ServeError) {
+        self.attempts[job] += 1;
+        let attempt = self.attempts[job];
+        self.stats.jobs[job].error = Some(e.to_string());
+        self.emit(ServeEvent::Quarantined { round: self.round, job, attempt });
+        if attempt > self.cfg.retry_limit {
+            let s = &mut self.stats.jobs[job];
+            s.failed = true;
+            s.deadline_met = Some(false);
+            self.stats.failed += 1;
+            self.checkpoints[job] = None;
+            self.remove_state_file(job);
+        } else {
+            self.parked.push((self.round + (1usize << attempt), job));
+        }
+    }
+
+    /// Move parked jobs whose backoff elapsed back into the ready
+    /// queue, in deterministic (release round, job id) order.
+    fn release_parked(&mut self) {
+        self.parked.sort_unstable();
+        let mut i = 0;
+        while i < self.parked.len() {
+            if self.parked[i].0 > self.round {
+                i += 1;
+                continue;
+            }
+            let (_, job) = self.parked.remove(i);
+            self.stats.jobs[job].retries += 1;
+            self.stats.retried += 1;
+            let attempt = self.attempts[job];
+            self.emit(ServeEvent::Retried { round: self.round, job, attempt });
+            self.mark_ready(job);
+        }
+    }
+
+    /// Overload control: drop the lowest-effective-priority pending
+    /// jobs while the queue is over the high-water mark.
+    fn shed_overflow(&mut self) {
+        let Some(hw) = self.cfg.queue_high_water else { return };
+        while self.ready.len() > hw {
+            let Some(job) = self.ready.shed_lowest(self.round, self.cfg.age_rounds) else {
+                break;
+            };
+            let s = &mut self.stats.jobs[job];
+            s.shed = true;
+            s.deadline_met = Some(false);
+            self.stats.shed += 1;
+            self.checkpoints[job] = None;
+            self.remove_state_file(job);
+            let queue_depth = self.ready.len();
+            self.emit(ServeEvent::Shed { round: self.round, job, queue_depth });
+        }
+    }
+
+    /// True (recording the expiry) if a just-popped queued job already
+    /// missed a deadline — dropped without wasting an admission.
+    fn expired_in_queue(&mut self, job: usize) -> bool {
+        let j = &self.jobs[job];
+        let past_rounds =
+            j.deadline_rounds.is_some_and(|d| self.round.saturating_sub(j.arrival_round) > d);
+        let past_ms = j.deadline_ms.is_some_and(|d| self.elapsed_ms(job) > d);
+        if !(past_rounds || past_ms) {
+            return false;
+        }
+        let rounds_done = self.stats.jobs[job].rounds_run;
+        let s = &mut self.stats.jobs[job];
+        s.expired = true;
+        s.deadline_met = Some(false);
+        self.stats.expired += 1;
+        self.checkpoints[job] = None;
+        self.remove_state_file(job);
+        self.emit(ServeEvent::Expired { round: self.round, job, rounds_done });
+        true
+    }
+
+    /// Periodic durability: every `checkpoint_every` rounds, persist
+    /// each running job's state non-destructively
+    /// ([`Session::checkpoint_block`] — same capture as a preemption,
+    /// without perturbing the fleet).
+    fn persist_periodic(&mut self) {
+        let Some(every) = self.cfg.checkpoint_every else { return };
+        if every == 0 || self.round % every != 0 || self.cfg.state_dir.is_none() {
+            return;
+        }
+        let targets: Vec<(usize, usize)> =
+            self.running.iter().map(|r| (r.job, r.handle.index())).collect();
+        for (job, index) in targets {
+            let ck = self.session.checkpoint_block(index);
+            self.persist_checkpoint(job, &ck);
+        }
+    }
+
+    fn crash_due(&self) -> bool {
+        self.cfg.fault_plan.crash_after_round.is_some_and(|k| self.round >= k)
+    }
+
+    /// Injected crash: persist every running job (preempted jobs were
+    /// persisted when preempted), flag the stats, and let `run` return
+    /// — the caller exits with [`persist::CRASH_EXIT_CODE`].
+    fn crash_now(&mut self) {
+        let mut targets: Vec<(usize, usize)> =
+            self.running.iter().map(|r| (r.job, r.handle.index())).collect();
+        targets.sort_unstable();
+        for (job, index) in targets {
+            let ck = self.session.checkpoint_block(index);
+            self.persist_checkpoint(job, &ck);
+        }
+        self.stats.crashed = true;
+    }
+
+    /// Drive the trace to completion (all jobs completed, expired,
+    /// shed, or failed; all arrivals consumed) and return the service
+    /// record. With a fault-plan crash, stops early with
+    /// `stats.crashed` set after persisting running state.
     pub fn run(mut self) -> ServeStats {
+        self.recover();
         loop {
-            // 1. Arrivals.
+            // 1. Arrivals, then retries whose backoff elapsed.
             while self.next_arrival < self.arrivals.len()
                 && self.jobs[self.arrivals[self.next_arrival]].arrival_round <= self.round
             {
                 let job = self.arrivals[self.next_arrival];
                 self.next_arrival += 1;
-                self.ready.push(job, self.jobs[job].priority);
+                if !self.arrived[job] {
+                    self.arrived[job] = true;
+                    self.mark_ready(job);
+                }
             }
+            self.release_parked();
 
-            // 2+3. Preemption and admission, interleaved until stable:
+            // 2. Preemption and admission, interleaved until stable:
             // admit into free capacity; when full, preempt only if the
-            // best waiting job has strictly higher priority than the
-            // victim. Each preempt+admit pair strictly raises the
-            // running fleet's priority multiset, so this terminates.
+            // best waiting job has strictly higher effective priority
+            // than the victim's admitted level. Each preempt+admit pair
+            // strictly raises the running fleet's priority multiset
+            // (effective priorities are fixed within a round), so this
+            // terminates.
             loop {
                 if self.running.len() < self.cfg.capacity {
-                    match self.ready.pop() {
-                        Some(job) => {
-                            self.admit(job);
+                    match self.ready.pop_aged(self.round, self.cfg.age_rounds) {
+                        Some((job, eff)) => {
+                            if !self.expired_in_queue(job) {
+                                self.try_admit(job, eff);
+                            }
                             continue;
                         }
                         None => break,
                     }
                 }
-                let Some(best) = self.ready.peek_priority() else { break };
+                let Some(best) = self.ready.peek_priority_aged(self.round, self.cfg.age_rounds)
+                else {
+                    break;
+                };
                 match self.pick_victim() {
-                    Some(vi) if best > self.jobs[self.running[vi].job].priority => {
-                        self.preempt(vi)
-                    }
+                    Some(vi) if best > self.running[vi].prio => self.preempt(vi),
                     _ => break,
                 }
             }
 
+            // 3. Overload shedding: with capacity filled, drop the
+            // lowest-priority *pending* jobs while the queue is still
+            // over the high-water mark.
+            self.shed_overflow();
+
             // 4. One fleet round (or an idle round while waiting).
             if self.running.is_empty() {
-                if self.ready.is_empty() && self.next_arrival == self.arrivals.len() {
+                if self.ready.is_empty()
+                    && self.parked.is_empty()
+                    && self.next_arrival == self.arrivals.len()
+                {
                     break;
                 }
                 self.emit(ServeEvent::Idle { round: self.round });
                 self.round += 1;
+                if self.crash_due() {
+                    self.crash_now();
+                    break;
+                }
                 if self.round >= self.cfg.max_service_rounds {
                     break;
                 }
@@ -314,7 +664,7 @@ impl<'a> Scheduler<'a> {
             self.session.step();
             self.round += 1;
 
-            // 5. Completions, then per-job round budgets.
+            // 5. Completions, then budgets and deadlines.
             let mut i = 0;
             while i < self.running.len() {
                 let (job, handle, base_rounds, admitted_at) = {
@@ -324,9 +674,16 @@ impl<'a> Scheduler<'a> {
                 if self.session.block_done(handle.index()) {
                     let outcome = take_job(&mut self.session, handle)
                         .expect("finished block lost its output");
-                    let deadline_met = self.jobs[job]
+                    // saturating: a recovered job re-enters at round 0
+                    // and can finish before its trace arrival_round.
+                    let rounds_ok = self.jobs[job]
                         .deadline_rounds
-                        .map(|d| self.round - self.jobs[job].arrival_round <= d);
+                        .map(|d| self.round.saturating_sub(self.jobs[job].arrival_round) <= d);
+                    let ms_ok = self.jobs[job].deadline_ms.map(|d| self.elapsed_ms(job) <= d);
+                    let deadline_met = match (rounds_ok, ms_ok) {
+                        (None, None) => None,
+                        (a, b) => Some(a.unwrap_or(true) && b.unwrap_or(true)),
+                    };
                     let converged = outcome.result.converged;
                     let s = &mut self.stats.jobs[job];
                     s.completed_round = Some(self.round);
@@ -339,18 +696,26 @@ impl<'a> Scheduler<'a> {
                     s.result = Some(outcome.result);
                     self.stats.completed += 1;
                     self.running.remove(i);
+                    self.remove_state_file(job);
                     self.emit(ServeEvent::Completed { round: self.round, job, converged });
                     continue;
                 }
                 let rounds_done = base_rounds + (self.round - admitted_at);
-                if self.jobs[job].max_rounds.is_some_and(|m| rounds_done >= m) {
+                let over_budget = self.jobs[job].max_rounds.is_some_and(|m| rounds_done >= m);
+                let past_deadline = self.jobs[job]
+                    .deadline_rounds
+                    .is_some_and(|d| self.round.saturating_sub(self.jobs[job].arrival_round) > d)
+                    || self.jobs[job].deadline_ms.is_some_and(|d| self.elapsed_ms(job) > d);
+                if over_budget || past_deadline {
                     self.running.remove(i);
                     let ck = self.session.evict(handle.index());
                     let s = &mut self.stats.jobs[job];
                     s.rounds_run = ck.iterations();
                     s.projections = ck.projections();
                     s.expired = true;
+                    s.deadline_met = Some(false);
                     self.stats.expired += 1;
+                    self.remove_state_file(job);
                     self.emit(ServeEvent::Expired {
                         round: self.round,
                         job,
@@ -363,6 +728,13 @@ impl<'a> Scheduler<'a> {
             // Reclaim finished blocks' coordinate ranges so the
             // concatenated vector stays bounded by the *running* fleet.
             self.session.compact_finished();
+
+            // 6. Durability and injected crashes.
+            self.persist_periodic();
+            if self.crash_due() {
+                self.crash_now();
+                break;
+            }
 
             if self.round >= self.cfg.max_service_rounds {
                 break;
@@ -378,19 +750,26 @@ mod tests {
     use super::*;
     use crate::serve::JobBank;
 
+    fn one_job(spec: JobSpec) -> Vec<Job> {
+        vec![Job {
+            id: 0,
+            name: "solo".to_string(),
+            spec,
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: None,
+            deadline_ms: None,
+        }]
+    }
+
     #[test]
     fn job_round_budget_expires() {
         // An unreachable tolerance with a 3-round budget: the scheduler
         // must evict + expire the job instead of spinning forever.
-        let jobs = vec![Job {
-            id: 0,
-            name: "hopeless".to_string(),
-            spec: JobSpec::Nearness { n: 14, graph_type: 1, seed: 5 },
-            priority: 0,
-            arrival_round: 0,
-            max_rounds: Some(3),
-            deadline_rounds: Some(1),
-        }];
+        let mut jobs = one_job(JobSpec::Nearness { n: 14, graph_type: 1, seed: 5 });
+        jobs[0].name = "hopeless".to_string();
+        jobs[0].max_rounds = Some(3);
         let bank = JobBank::materialize(&jobs);
         let opts = SolveOptions::new().violation_tol(1e-14).dual_tol(1e-14).max_iters(10_000);
         let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
@@ -401,22 +780,73 @@ mod tests {
         assert!(stats.jobs[0].expired);
         assert_eq!(stats.jobs[0].rounds_run, 3);
         assert!(stats.jobs[0].projections > 0, "expiry stats come from the checkpoint");
+        assert_eq!(stats.jobs[0].deadline_met, Some(false), "expired is never a null deadline");
         assert!(stats.events.iter().any(|e| matches!(e, ServeEvent::Expired { .. })));
+    }
+
+    #[test]
+    fn round_deadline_is_enforced() {
+        // deadline_rounds 2 with an unreachable tolerance: enforcement
+        // must evict at round 3 (round − arrival > 2), not run forever.
+        let mut jobs = one_job(JobSpec::Nearness { n: 14, graph_type: 1, seed: 5 });
+        jobs[0].deadline_rounds = Some(2);
+        let bank = JobBank::materialize(&jobs);
+        let opts = SolveOptions::new().violation_tol(1e-14).dual_tol(1e-14).max_iters(10_000);
+        let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.completed, 0);
+        assert!(stats.jobs[0].expired);
+        assert_eq!(stats.jobs[0].rounds_run, 3);
+        assert_eq!(stats.jobs[0].deadline_met, Some(false));
+    }
+
+    #[test]
+    fn wall_clock_deadline_expires_slow_jobs() {
+        // A 1 ms deadline plus an observer that sleeps 5 ms on
+        // admission: the first post-round deadline check must expire
+        // the job, deterministically (the sleep guarantees the clock
+        // has advanced past the deadline).
+        let mut jobs = one_job(JobSpec::Nearness { n: 14, graph_type: 1, seed: 5 });
+        jobs[0].deadline_ms = Some(1);
+        let bank = JobBank::materialize(&jobs);
+        let opts = SolveOptions::new().violation_tol(1e-14).dual_tol(1e-14).max_iters(10_000);
+        let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
+        let mut sched = Scheduler::new(jobs, &bank, cfg);
+        sched.on_event(|e| {
+            if matches!(e, ServeEvent::Admitted { .. }) {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        });
+        let stats = sched.run();
+        assert_eq!(stats.expired, 1);
+        assert!(stats.jobs[0].expired);
+        assert_eq!(stats.jobs[0].deadline_met, Some(false));
+    }
+
+    #[test]
+    fn generous_deadlines_report_met() {
+        let mut jobs = one_job(JobSpec::Nearness { n: 10, graph_type: 1, seed: 3 });
+        jobs[0].deadline_rounds = Some(10_000);
+        jobs[0].deadline_ms = Some(3_600_000);
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            ..Default::default()
+        };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        assert!(stats.all_completed());
+        assert_eq!(stats.jobs[0].deadline_met, Some(true));
     }
 
     #[test]
     fn idle_rounds_bridge_arrival_gaps() {
         // A single job arriving at round 5: the scheduler idles up to it,
         // then completes it.
-        let jobs = vec![Job {
-            id: 0,
-            name: "late".to_string(),
-            spec: JobSpec::Nearness { n: 10, graph_type: 1, seed: 3 },
-            priority: 0,
-            arrival_round: 5,
-            max_rounds: None,
-            deadline_rounds: None,
-        }];
+        let mut jobs = one_job(JobSpec::Nearness { n: 10, graph_type: 1, seed: 3 });
+        jobs[0].name = "late".to_string();
+        jobs[0].arrival_round = 5;
         let bank = JobBank::materialize(&jobs);
         let cfg = ServeConfig {
             capacity: 2,
@@ -432,12 +862,85 @@ mod tests {
         );
         assert_eq!(stats.jobs[0].admitted_round, Some(5));
     }
+
+    #[test]
+    fn poisoned_spec_is_retried_then_permanently_failed() {
+        let mut jobs = one_job(JobSpec::Nearness { n: 10, graph_type: 1, seed: 3 });
+        jobs.push(Job {
+            id: 1,
+            name: "healthy".to_string(),
+            spec: JobSpec::Nearness { n: 12, graph_type: 1, seed: 4 },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: None,
+            deadline_ms: None,
+        });
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 2,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            retry_limit: 2,
+            fault_plan: FaultPlan { poison_spec: vec![0], ..Default::default() },
+            ..Default::default()
+        };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        // The poisoned job fails, retries twice with backoff, then
+        // permanently fails; the healthy job is untouched.
+        assert!(stats.jobs[0].failed);
+        assert_eq!(stats.jobs[0].retries, 2);
+        assert_eq!(stats.jobs[0].deadline_met, Some(false));
+        assert!(stats.jobs[0].error.is_some());
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.retried, 2);
+        assert_eq!(stats.completed, 1);
+        assert!(stats.jobs[1].converged, "the fleet keeps serving around the poisoned job");
+        assert_eq!(
+            stats.events.iter().filter(|e| matches!(e, ServeEvent::Quarantined { .. })).count(),
+            3,
+            "initial failure plus two retries"
+        );
+    }
+
+    #[test]
+    fn overload_sheds_lowest_priority_pending_jobs() {
+        // Capacity 1 and three simultaneous arrivals with a high-water
+        // mark of 1: the two lowest-priority pending jobs are shed.
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| Job {
+                id: i,
+                name: format!("j{i}"),
+                spec: JobSpec::Nearness { n: 10, graph_type: 1, seed: i as u64 },
+                priority: i as i64, // job 0 is the lowest priority
+                arrival_round: 0,
+                max_rounds: None,
+                deadline_rounds: None,
+                deadline_ms: None,
+            })
+            .collect();
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            queue_high_water: Some(1),
+            ..Default::default()
+        };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        assert_eq!(stats.shed, 2);
+        assert!(stats.jobs[0].shed && stats.jobs[1].shed, "lowest priorities shed first");
+        assert_eq!(stats.jobs[0].deadline_met, Some(false));
+        assert_eq!(stats.completed, 2);
+        assert!(stats.jobs[2].converged && stats.jobs[3].converged);
+        assert!(stats.events.iter().any(|e| matches!(e, ServeEvent::Shed { .. })));
+    }
 }
 
 /// Generate the demo/example trace: a mixed nearness + CC workload with
 /// staggered arrivals, a priority spread, and one forced preemption (a
 /// high-priority CC job arrives while capacity is saturated by
-/// low-priority nearness jobs). Deterministic in `seed`.
+/// low-priority nearness jobs). Deterministic in `seed`. Deadlines are
+/// generous — they are *enforced* now, and the demo jobs are meant to
+/// complete with `deadline_met: true`.
 pub fn demo_trace(seed: u64) -> Vec<Job> {
     vec![
         Job {
@@ -447,7 +950,8 @@ pub fn demo_trace(seed: u64) -> Vec<Job> {
             priority: 0,
             arrival_round: 0,
             max_rounds: None,
-            deadline_rounds: Some(400),
+            deadline_rounds: Some(4000),
+            deadline_ms: None,
         },
         Job {
             id: 1,
@@ -457,6 +961,7 @@ pub fn demo_trace(seed: u64) -> Vec<Job> {
             arrival_round: 1,
             max_rounds: None,
             deadline_rounds: None,
+            deadline_ms: None,
         },
         Job {
             id: 2,
@@ -465,7 +970,8 @@ pub fn demo_trace(seed: u64) -> Vec<Job> {
             priority: 9,
             arrival_round: 3,
             max_rounds: Some(600),
-            deadline_rounds: Some(300),
+            deadline_rounds: Some(3000),
+            deadline_ms: None,
         },
     ]
 }

@@ -14,6 +14,7 @@ pub mod pool;
 pub mod rng;
 pub mod table;
 pub mod timer;
+pub mod wire;
 
 pub use rng::Rng;
 pub use timer::Stopwatch;

@@ -42,6 +42,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// The full generator state — the four xoshiro words plus the cached
+    /// Box–Muller spare — for checkpoint persistence. Feeding it back
+    /// through [`Rng::from_state`] reproduces the stream bit for bit.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] capture.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Rng {
+        Rng { s, spare_normal }
+    }
+
     /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -1,0 +1,211 @@
+//! A tiny little-endian byte codec for the durable-checkpoint wire
+//! format (`serve::persist`) and the per-problem snapshot codecs.
+//!
+//! Design constraints, in order: **byte-stable** (the same value always
+//! encodes to the same bytes, so re-serialising a decoded checkpoint
+//! reproduces the file bit for bit), **bounds-checked** (a truncated or
+//! bit-flipped buffer yields a typed error, never a panic or an
+//! oversized allocation), and **float-exact** (`f64` travels as its IEEE
+//! bit pattern via [`Writer::put_f64`], so solve state round-trips
+//! without any formatting loss).
+
+/// Decode failure: what was being read and where the buffer ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// What the reader was trying to decode.
+    pub what: &'static str,
+    /// Byte offset at which the read failed.
+    pub at: usize,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "truncated or malformed buffer reading {} at byte {}", self.what, self.at)
+    }
+}
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// IEEE-754 bit pattern — exact, including signed zeros and NaNs
+    /// (checkpointed dual movements can legitimately be `INFINITY`).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Current read offset.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError { what, at: self.pos });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn get_u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self, what: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.get_u64(what)?))
+    }
+
+    /// Read a count that prefixes `elem_bytes`-sized elements, verifying
+    /// the buffer can actually hold that many — so a corrupted length
+    /// fails here instead of driving a multi-gigabyte allocation.
+    pub fn get_count(
+        &mut self,
+        elem_bytes: usize,
+        what: &'static str,
+    ) -> Result<usize, WireError> {
+        let n = self.get_u64(what)?;
+        let need = (n as usize).checked_mul(elem_bytes.max(1));
+        match need {
+            Some(need) if need <= self.remaining() => Ok(n as usize),
+            _ => Err(WireError { what, at: self.pos }),
+        }
+    }
+}
+
+/// FNV-1a 64-bit over a byte slice — the checkpoint trailer checksum.
+/// Not cryptographic; it exists to catch truncation, bit rot and partial
+/// writes deterministically (single-bit flips always change the digest).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let mut w = Writer::new();
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX);
+        w.put_f64(-0.0);
+        w.put_f64(f64::INFINITY);
+        w.put_f64(f64::from_bits(0x3ff0_0000_0000_0001)); // 1.0 + 1 ulp
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.get_u8("a").unwrap(), 7);
+        assert_eq!(r.get_u32("b").unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64("c").unwrap(), u64::MAX);
+        assert_eq!(r.get_f64("d").unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_f64("e").unwrap(), f64::INFINITY);
+        assert_eq!(r.get_f64("f").unwrap().to_bits(), 0x3ff0_0000_0000_0001);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.put_u64(3);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..5]);
+        let e = r.get_u64("field").unwrap_err();
+        assert_eq!(e.what, "field");
+        assert_eq!(e.at, 0);
+    }
+
+    #[test]
+    fn oversized_count_is_rejected_before_allocating() {
+        let mut w = Writer::new();
+        w.put_u64(u64::MAX); // claims ~2^64 elements in an 8-byte buffer
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.get_count(8, "rows").is_err());
+    }
+
+    #[test]
+    fn fnv_differs_on_any_single_bit_flip() {
+        let base = b"project and forget".to_vec();
+        let want = fnv1a64(&base);
+        for byte in 0..base.len() {
+            for bit in 0..8 {
+                let mut mutated = base.clone();
+                mutated[byte] ^= 1 << bit;
+                assert_ne!(fnv1a64(&mutated), want, "flip at {byte}:{bit} went undetected");
+            }
+        }
+    }
+}

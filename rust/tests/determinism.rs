@@ -640,7 +640,7 @@ fn scheduler_replays_a_mixed_trace_with_preemption() {
         .sweep(SweepStrategy::ShardedParallel { threads: 2 });
     let solo: Vec<_> = jobs
         .iter()
-        .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts))
+        .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts).expect("solo solve"))
         .collect();
     let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
     let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
@@ -836,7 +836,7 @@ fn serve_preemption_with_incremental_oracles_stays_deterministic() {
             .sweep(SweepStrategy::ShardedParallel { threads });
         let solo: Vec<_> = jobs
             .iter()
-            .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts))
+            .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts).expect("solo solve"))
             .collect();
         let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
         let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();

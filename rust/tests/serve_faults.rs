@@ -1,0 +1,384 @@
+//! Fault-tolerance integration tests for the serving subsystem: durable
+//! checkpoints, crash recovery, corruption quarantine, and the
+//! deterministic fault-injection harness ([`FaultPlan`]).
+//!
+//! The load-bearing invariant throughout: a job that is preempted,
+//! crashed, persisted, and recovered — even across a simulated process
+//! boundary (two `Scheduler` instances over one state dir) — produces a
+//! `SolverResult` bit-identical to its uninterrupted solo solve.
+
+use paf::core::engine::SweepStrategy;
+use paf::core::problem::SolveOptions;
+use paf::core::session::Session;
+use paf::core::solver::SolverResult;
+use paf::graph::generators::{planted_signed, type1_complete};
+use paf::graph::Graph;
+use paf::problems::correlation::{CcInstance, Correlation};
+use paf::problems::itml::{PfItml, PfItmlConfig};
+use paf::problems::metric_oracle::OracleMode;
+use paf::problems::nearness::Nearness;
+use paf::serve::{
+    demo_trace, persist, scan_state_dir, solve_job_solo, FaultPlan, Job, JobBank, JobSpec,
+    Scheduler, ServeConfig, ServeError, ServeEvent,
+};
+use paf::util::Rng;
+use std::path::PathBuf;
+
+/// A per-test scratch directory (tests run in parallel in one process,
+/// so the test name disambiguates; the pid isolates concurrent runs).
+fn temp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("paf-serve-faults-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create temp state dir");
+    dir
+}
+
+fn assert_bit_identical(reference: &SolverResult, got: &SolverResult, label: &str) {
+    assert_eq!(reference.x, got.x, "{label}: x differs (bitwise)");
+    assert_eq!(reference.iterations, got.iterations, "{label}: iteration count differs");
+    assert_eq!(reference.converged, got.converged, "{label}: convergence differs");
+    assert_eq!(
+        reference.total_projections, got.total_projections,
+        "{label}: projection count differs"
+    );
+    assert_eq!(
+        reference.active_constraints, got.active_constraints,
+        "{label}: active-set size differs"
+    );
+}
+
+fn serve_opts(threads: usize) -> SolveOptions {
+    SolveOptions::new()
+        .violation_tol(1e-4)
+        .inner_sweeps(2)
+        .sweep(SweepStrategy::ShardedParallel { threads })
+}
+
+/// Crash mid-service, then recover in a fresh scheduler over the same
+/// state dir: every job completes and every result is bit-identical to
+/// its solo solve — the evict/resume invariant extended across the
+/// (simulated) process boundary. Run at two thread counts to pin that
+/// persistence is engine-independent.
+#[test]
+fn crash_recovery_resumes_bit_identically() {
+    for threads in [1usize, 4] {
+        let dir = temp_dir(&format!("crash-{threads}"));
+        let jobs = demo_trace(130);
+        let bank = JobBank::materialize(&jobs);
+        let opts = serve_opts(threads);
+        let solo: Vec<_> = jobs
+            .iter()
+            .map(|j| solve_job_solo(j, bank.input(j.id), &opts).expect("solo solve"))
+            .collect();
+
+        // Process 1: serve with capacity 1 (forces preemptions, which
+        // persist checkpoints) and an injected crash after round 6.
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: opts.clone(),
+            state_dir: Some(dir.clone()),
+            fault_plan: FaultPlan { crash_after_round: Some(6), ..Default::default() },
+            ..Default::default()
+        };
+        let crashed = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        assert!(crashed.crashed, "the fault plan must stop the run");
+        assert!(!crashed.all_completed(), "3 mixed jobs cannot finish in 6 rounds at cap 1");
+        let files = scan_state_dir(&dir).expect("scan state dir");
+        assert!(!files.is_empty(), "the crash must leave durable checkpoints");
+
+        // Process 2: a fresh scheduler over the same state dir.
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: opts.clone(),
+            state_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        assert!(stats.all_completed(), "recovery must complete every job: {stats:?}");
+        assert_eq!(stats.recovered, files.len(), "every durable checkpoint must recover");
+        assert!(
+            stats.events.iter().any(|e| matches!(e, ServeEvent::Recovered { .. })),
+            "recovery must be in the event stream"
+        );
+        for (k, (s, want)) in stats.jobs.iter().zip(&solo).enumerate() {
+            let got = s.result.as_ref().expect("completed job without result");
+            assert_bit_identical(
+                &want.result,
+                got,
+                &format!("threads {threads}, job {k}: recovered vs solo"),
+            );
+            assert_eq!(s.objective, Some(want.objective), "job {k}: objective differs");
+        }
+        assert!(
+            scan_state_dir(&dir).expect("rescan").is_empty(),
+            "completed jobs must drain their state files"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A corrupted checkpoint must fail its checksum on recovery, be moved
+/// to `state_dir/corrupt/`, and the job must restart from scratch —
+/// still finishing bit-identical to solo, without touching other jobs'
+/// recoveries.
+#[test]
+fn corrupt_checkpoint_is_quarantined_and_job_restarts() {
+    let dir = temp_dir("corrupt");
+    let jobs = demo_trace(131);
+    let bank = JobBank::materialize(&jobs);
+    let opts = serve_opts(2);
+    let solo: Vec<_> = jobs
+        .iter()
+        .map(|j| solve_job_solo(j, bank.input(j.id), &opts).expect("solo solve"))
+        .collect();
+
+    // Crash after round 6 AND flip a bit in job 0's file on every write.
+    let cfg = ServeConfig {
+        capacity: 1,
+        opts: opts.clone(),
+        state_dir: Some(dir.clone()),
+        fault_plan: FaultPlan {
+            crash_after_round: Some(6),
+            corrupt_checkpoint: Some((0, 13)),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let crashed = Scheduler::new(jobs.clone(), &bank, cfg).run();
+    assert!(crashed.crashed);
+    let files = scan_state_dir(&dir).expect("scan state dir");
+    assert!(
+        files.iter().any(|(job, _)| *job == 0),
+        "job 0 must have a (corrupted) state file"
+    );
+
+    let cfg = ServeConfig {
+        capacity: 1,
+        opts: opts.clone(),
+        state_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+    assert!(stats.all_completed(), "quarantine must not block completion: {stats:?}");
+    assert_eq!(
+        stats.recovered,
+        files.len() - 1,
+        "all files but the corrupted one must recover"
+    );
+    assert!(!stats.jobs[0].recovered, "the corrupted job restarts from scratch");
+    assert!(stats.jobs[0].error.is_some(), "the corruption is recorded on the job");
+    assert!(
+        stats
+            .events
+            .iter()
+            .any(|e| matches!(e, ServeEvent::Quarantined { round: 0, job: 0, .. })),
+        "quarantine must be in the event stream"
+    );
+    assert!(
+        dir.join("corrupt").join("job-0.ckpt").exists(),
+        "the corrupt file is preserved for post-mortem, not deleted"
+    );
+    for (k, (s, want)) in stats.jobs.iter().zip(&solo).enumerate() {
+        let got = s.result.as_ref().expect("completed job without result");
+        assert_bit_identical(&want.result, got, &format!("job {k}: post-quarantine vs solo"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property-style roundtrip over a mixed fleet — nearness + CC (vector
+/// blocks) and ITML (round block): for every evicted checkpoint the
+/// wire encoding re-serializes byte-stably, survives a disk roundtrip,
+/// resumes bit-identically, and any single-bit flip is caught by the
+/// trailing checksum (never a panic, never a silently wrong resume).
+#[test]
+fn checkpoint_persist_roundtrip_property() {
+    let dir = temp_dir("roundtrip");
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(seed);
+        let near_inst = type1_complete(14 + 2 * (seed as usize % 3), &mut rng);
+        let (sg, _) = planted_signed(Graph::complete(12), 3, 0.1, &mut rng);
+        let cc_inst = CcInstance::from_signed(&sg);
+        let data = paf::ml::dataset::gaussian_mixture(60, 3, 2, 2.0, &mut rng);
+        let icfg =
+            PfItmlConfig { max_projections: 1500, batch: 40, seed, ..Default::default() };
+        let opts = SolveOptions::new().violation_tol(1e-6).inner_sweeps(2);
+
+        // Uninterrupted references (block trajectories are independent
+        // of fleet composition, pinned in tests/determinism.rs).
+        let solo_near = Nearness::new(&near_inst).mode(OracleMode::Collect).solve(&opts);
+        let solo_cc =
+            Correlation::dense(&cc_inst).mode(OracleMode::Collect).seed(seed).solve(&opts);
+        let solo_itml = PfItml::new(&data, icfg.clone()).solve(&opts);
+
+        // Interrupt a mixed fleet after 3 rounds and evict every block.
+        let mut first = Session::new(opts.clone());
+        let hn = first.add(Nearness::new(&near_inst).mode(OracleMode::Collect));
+        let hc = first.add(Correlation::dense(&cc_inst).mode(OracleMode::Collect).seed(seed));
+        let hi = first.add(PfItml::new(&data, icfg.clone()));
+        for _ in 0..3 {
+            first.step();
+        }
+        let ck_itml = first.evict(hi.index());
+        let ck_cc = first.evict(hc.index());
+        let ck_near = first.evict(hn.index());
+
+        for (label, ck, job) in
+            [("near", &ck_near, 0usize), ("cc", &ck_cc, 1), ("itml", &ck_itml, 2)]
+        {
+            // Byte-stable re-serialization: encode → decode → encode is
+            // the identity on bytes.
+            let bytes = persist::encode_checkpoint(ck).expect("encode");
+            let back = persist::decode_checkpoint(&bytes, std::path::Path::new("mem"))
+                .expect("decode own encoding");
+            let bytes2 = persist::encode_checkpoint(&back).expect("re-encode");
+            assert_eq!(bytes, bytes2, "seed {seed} {label}: re-serialization not byte-stable");
+
+            // Disk roundtrip through the atomic-write path.
+            let path = persist::write_checkpoint_atomic(&dir, job, ck).expect("write");
+            let loaded = persist::load_checkpoint(&path).expect("load");
+            assert_eq!(
+                persist::encode_checkpoint(&loaded).expect("encode loaded"),
+                bytes,
+                "seed {seed} {label}: disk roundtrip changed the checkpoint"
+            );
+
+            // Checksum: a single flipped bit anywhere (header, body,
+            // digest) is a typed Corrupt error.
+            for pos in
+                [0usize, 9, bytes.len() / 3, bytes.len() / 2, bytes.len() - 12, bytes.len() - 1]
+            {
+                let mut bad = bytes.clone();
+                bad[pos] ^= 1 << 3;
+                let err = persist::decode_checkpoint(&bad, std::path::Path::new("mem"))
+                    .expect_err("flipped bit must not decode");
+                assert!(
+                    matches!(err, ServeError::Corrupt { .. }),
+                    "seed {seed} {label} pos {pos}: expected Corrupt, got {err}"
+                );
+            }
+        }
+
+        // Resuming from the *decoded* checkpoints completes each block
+        // bit-identically to its uninterrupted solo solve.
+        let redecode = |ck: &paf::core::session::BlockCheckpoint| {
+            let bytes = persist::encode_checkpoint(ck).expect("encode");
+            persist::decode_checkpoint(&bytes, std::path::Path::new("mem")).expect("decode")
+        };
+        let mut near_s = Session::new(opts.clone());
+        let h = near_s
+            .admit_resumed(Nearness::new(&near_inst).mode(OracleMode::Collect), &redecode(&ck_near));
+        near_s.run();
+        let got = near_s.take_unwrap(h);
+        assert_bit_identical(&solo_near.result, &got.result, "resumed nearness");
+        assert_eq!(solo_near.objective.to_bits(), got.objective.to_bits());
+
+        let mut cc_s = Session::new(opts.clone());
+        let h = cc_s.admit_resumed(
+            Correlation::dense(&cc_inst).mode(OracleMode::Collect).seed(seed),
+            &redecode(&ck_cc),
+        );
+        cc_s.run();
+        let got = cc_s.take_unwrap(h);
+        assert_bit_identical(&solo_cc.result, &got.result, "resumed CC");
+        assert_eq!(solo_cc.lp_objective.to_bits(), got.lp_objective.to_bits());
+
+        let mut itml_s = Session::new(opts.clone());
+        let h = itml_s.admit_resumed(PfItml::new(&data, icfg), &redecode(&ck_itml));
+        itml_s.run();
+        let got = itml_s.take_unwrap(h);
+        assert_eq!(solo_itml.m.a, got.m.a, "resumed ITML matrix diverged");
+        assert_eq!(solo_itml.projections, got.projections);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Priority aging flips admission order for a starved low-priority job:
+/// with aging on, a job that has waited long enough out-ranks a younger
+/// mid-priority job; with aging off, base priority wins.
+#[test]
+fn priority_aging_prevents_starvation() {
+    let mk_jobs = || {
+        vec![
+            Job {
+                id: 0,
+                name: "hog".to_string(),
+                spec: JobSpec::Nearness { n: 30, graph_type: 1, seed: 40 },
+                priority: 99,
+                arrival_round: 0,
+                max_rounds: None,
+                deadline_rounds: None,
+                deadline_ms: None,
+            },
+            Job {
+                id: 1,
+                name: "starved".to_string(),
+                spec: JobSpec::Nearness { n: 10, graph_type: 1, seed: 41 },
+                priority: 0,
+                arrival_round: 0,
+                max_rounds: None,
+                deadline_rounds: None,
+                deadline_ms: None,
+            },
+            Job {
+                id: 2,
+                name: "young-mid".to_string(),
+                spec: JobSpec::Nearness { n: 10, graph_type: 1, seed: 42 },
+                priority: 4,
+                arrival_round: 7,
+                max_rounds: None,
+                deadline_rounds: None,
+                deadline_ms: None,
+            },
+        ]
+    };
+    let run = |age_rounds: usize| {
+        let jobs = mk_jobs();
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            age_rounds,
+            ..Default::default()
+        };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        assert!(stats.all_completed(), "aging run (age={age_rounds}) must complete");
+        (stats.jobs[1].admitted_round.unwrap(), stats.jobs[2].admitted_round.unwrap())
+    };
+    // Aging off: base priority wins — the younger mid-priority job cuts
+    // ahead of the starved one.
+    let (starved, young) = run(0);
+    assert!(young < starved, "without aging, priority 4 beats priority 0 ({young} vs {starved})");
+    // Aging on (1 level per waited round): by the time capacity frees,
+    // the starved job has out-aged the 4-level gap (it arrived 7 rounds
+    // earlier), so it is admitted first.
+    let (starved, young) = run(1);
+    assert!(starved < young, "with aging, the starved job goes first ({starved} vs {young})");
+}
+
+/// The garble fault + lenient parser end to end: one trace line is
+/// deterministically truncated, the lenient parse skips exactly that
+/// line with its 1-based number, and the surviving jobs serve normally.
+#[test]
+fn garbled_trace_line_is_skipped_and_reported() {
+    let trace_text: String = demo_trace(132).iter().map(|j| j.to_json_line() + "\n").collect();
+    let plan = FaultPlan::parse("garble=2").expect("plan");
+    let garbled = plan.apply_to_trace(&trace_text);
+    let (jobs, errors) = paf::serve::parse_job_trace_lenient(&garbled);
+    assert_eq!(jobs.len(), 2, "two of three lines must survive");
+    assert_eq!(errors.len(), 1);
+    assert!(
+        matches!(&errors[0], ServeError::Trace { line: 2, .. }),
+        "the error must carry the 1-based line number: {}",
+        errors[0]
+    );
+    // Ids are re-assigned positionally so the trace still serves.
+    let bank = JobBank::materialize(&jobs);
+    let cfg = ServeConfig {
+        capacity: 2,
+        opts: serve_opts(2),
+        ..Default::default()
+    };
+    let stats = Scheduler::new(jobs, &bank, cfg).run();
+    assert!(stats.all_completed(), "the surviving jobs must serve normally");
+}
