@@ -1,0 +1,85 @@
+//! Streaming-ingest scale demo: generate a sparse geometric instance on
+//! disk (default n ≈ 10⁵; `PAF_INGEST_N` overrides), stream it through
+//! the two-pass CSR builder under byte accounting, solve metric nearness
+//! on it, and emit the solver JSON with the schema-v5 `ingest` object.
+//!
+//! Exercises the whole `graph::ingest` path end to end with no network
+//! access — the CI ingestion leg runs this at n = 10⁵.
+//!
+//! ```bash
+//! PAF_INGEST_N=100000 cargo run --release --example ingest_large
+//! ```
+
+use paf::core::problem::SolveOptions;
+use paf::graph::ingest::{ingest_weighted, write_geometric_instance, IngestOptions};
+use paf::problems::metric_oracle::OracleMode;
+use paf::problems::nearness::Nearness;
+use paf::report;
+use paf::util::timer::fmt_bytes;
+use paf::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::var("PAF_INGEST_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let dir = std::env::temp_dir().join(format!("paf-ingest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let edges = dir.join("geo.tsv");
+    let coords = dir.join("geo.co");
+
+    let clock = Stopwatch::new();
+    let info = write_geometric_instance(&edges, Some(&coords), n, 42)?;
+    let file_bytes = std::fs::metadata(&edges)?.len();
+    println!(
+        "generated: {} nodes, {} edge records ({} violated shortcuts), {} on disk, {:.1}s",
+        info.nodes,
+        info.edges,
+        info.violated_shortcuts,
+        fmt_bytes(file_bytes),
+        clock.elapsed_s()
+    );
+
+    let clock = Stopwatch::new();
+    let out = ingest_weighted(&edges, IngestOptions::default())?;
+    let stats = out.stats;
+    println!(
+        "ingested: n={} m={} in {:.2}s (parse {:.2}s + build {:.2}s)",
+        stats.nodes,
+        stats.edges,
+        clock.elapsed_s(),
+        stats.parse_s,
+        stats.build_s
+    );
+    println!(
+        "  working set peak {} / CSR resident {} ({} read, {} dups, {} self-loops)",
+        fmt_bytes(stats.peak_bytes),
+        fmt_bytes(stats.csr_bytes),
+        fmt_bytes(stats.bytes_read),
+        stats.duplicates,
+        stats.self_loops
+    );
+    anyhow::ensure!(stats.peak_bytes > 0, "ledger recorded no allocations");
+    anyhow::ensure!(stats.nodes == info.nodes, "node count mismatch");
+
+    // Loose tolerance: the point is exercising the streamed instance at
+    // scale, not polishing the last digits.
+    let opts = SolveOptions { violation_tol: 1e-2, ..SolveOptions::default() };
+    let clock = Stopwatch::new();
+    let res = Nearness::new(&out.inst).mode(OracleMode::Collect).solve(&opts);
+    println!(
+        "solved: converged={} in {} rounds / {} projections, {:.1}s",
+        res.result.converged,
+        res.result.iterations,
+        res.result.total_projections,
+        clock.elapsed_s()
+    );
+    anyhow::ensure!(res.result.converged, "nearness solve did not converge");
+
+    let label = format!("SOLVE_nearness_ingest_n{}", stats.nodes);
+    let text = report::solver_result_json_with_ingest(&label, &res.result, Some(&stats));
+    report::emit_json(&label, &text)?;
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -34,6 +34,13 @@
 //!       capture (what `--checkpoint-every` pays per running job), the
 //!       wire encoding, the atomic durable write, and recovery
 //!       load+decode
+//!   P11 streaming ingestion: a sparse geometric instance written to
+//!       disk once, then each ingest stage in isolation — edge-list
+//!       parse throughput, the two-pass bounded-memory CSR build (with
+//!       the ledger's working-set peak printed alongside), the spatial
+//!       neighborhood-scoped oracle scan vs the full scan on the same
+//!       iterate, and time-to-first-certificate (cold file → first
+//!       completed violation scan)
 //!
 //! All timings are also written to `reports/BENCH_perf_hotpath.json`
 //! (machine-readable; see `BenchCtx::write_json`) so the perf trajectory
@@ -482,6 +489,99 @@ fn main() {
             bytes,
             "persist roundtrip must be byte-stable"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // P11: streaming ingestion. Write one sparse geometric instance to
+    // disk, then time each ingest stage separately so a regression in
+    // (say) the per-bucket dup resolution doesn't hide inside an
+    // end-to-end number. The working-set peak from the byte ledger is
+    // printed next to the CSR-build axis — the bounded-memory claim is
+    // a number here, not a comment.
+    {
+        use paf::graph::ingest::{
+            ingest_weighted, neighborhood_scope, node_coords, open_source,
+            write_geometric_instance, IngestFormat, IngestOptions,
+        };
+        use paf::util::timer::fmt_bytes;
+        let n = ctx.scaled(20_000);
+        let dir =
+            std::env::temp_dir().join(format!("paf-bench-ingest-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let edges = dir.join("geo.tsv");
+        let coords_path = dir.join("geo.co");
+        let info =
+            write_geometric_instance(&edges, Some(&coords_path), n, 42).expect("generate");
+        let file_bytes = std::fs::metadata(&edges).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "    -> on-disk instance: {} nodes, {} edge records, {}",
+            info.nodes,
+            info.edges,
+            fmt_bytes(file_bytes)
+        );
+
+        // Parse throughput alone: stream every record, build nothing.
+        all.push(ctx.bench("P11/ingest/parse", |_| {
+            let mut src = open_source(&edges, IngestFormat::Snap).expect("open edge list");
+            let mut records = 0u64;
+            while src.next_edge().expect("parse").is_some() {
+                records += 1;
+            }
+            assert_eq!(records, info.edges as u64);
+            records
+        }));
+
+        // The two-pass CSR build (parse included: this is the user-facing
+        // cost of `--input`), with the ledger peak reported.
+        let mut peak = 0u64;
+        let mut csr = 0u64;
+        all.push(ctx.bench("P11/ingest/csr-build", |_| {
+            let out = ingest_weighted(&edges, IngestOptions::default()).expect("ingest");
+            peak = out.stats.peak_bytes;
+            csr = out.stats.csr_bytes;
+            out.stats.edges
+        }));
+        println!(
+            "    -> working-set peak {} for a {} resident CSR",
+            fmt_bytes(peak),
+            fmt_bytes(csr)
+        );
+
+        // Spatial restriction: the scoped oracle scan vs the full scan on
+        // the same streamed iterate. The scope is a disc around the grid
+        // centre covering ~10% of the area, so the axis measures what
+        // geometric locality buys the separation oracle.
+        let out = ingest_weighted(&edges, IngestOptions::default()).expect("ingest");
+        let xy = node_coords(&coords_path, &out.ids).expect("coords");
+        let g = Arc::new(out.inst.graph.clone());
+        let x = out.inst.weights.clone();
+        let side = (info.nodes as f64).sqrt();
+        let scope =
+            neighborhood_scope(&g, &xy, &[(side / 2.0, side / 2.0)], side * 0.18);
+        println!(
+            "    -> scope: {}/{} edges in the neighborhood",
+            scope.edges_in_scope(),
+            g.num_edges()
+        );
+        let full = MetricOracle::new(g.clone(), OracleMode::Collect);
+        all.push(ctx.bench("P11/ingest/full-oracle", |_| full.scan_cycles(&x).len()));
+        let mut scoped = MetricOracle::new(g.clone(), OracleMode::Collect);
+        scoped.scope = Some(scope);
+        all.push(
+            ctx.bench("P11/ingest/neighborhood-oracle", |_| scoped.scan_cycles(&x).len()),
+        );
+
+        // Time-to-first-certificate: cold file on disk → the first
+        // completed violation scan of the streamed instance. This is the
+        // latency a caller pays before the solver can make its first
+        // project/forget decision.
+        all.push(ctx.bench("P11/ingest/time-to-first-certificate", |_| {
+            let out = ingest_weighted(&edges, IngestOptions::default()).expect("ingest");
+            let oracle =
+                MetricOracle::new(Arc::new(out.inst.graph.clone()), OracleMode::Collect);
+            oracle.scan_cycles(&out.inst.weights).len()
+        }));
+
         let _ = std::fs::remove_dir_all(&dir);
     }
 

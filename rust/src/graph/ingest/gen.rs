@@ -1,0 +1,163 @@
+//! Deterministic disk-writing instance generator for the streaming
+//! ingest path. Tests and benches need sparse instances at n ≥ 10⁵
+//! without network access; this writes one straight to disk so the
+//! parser and two-pass builder are exercised end to end, file included.
+//!
+//! The instance is a jittered √n × √n grid with Euclidean edge weights.
+//! Euclidean weights are automatically metric-feasible (a straight line
+//! lower-bounds every path), so violations are *injected*: every
+//! `SHORTCUT_EVERY`-th cell adds a diagonal at 4× its Euclidean length,
+//! which exceeds the two-hop rim path and gives the oracle real work.
+//! Raw node ids are scrambled through an injective 64-bit multiply so
+//! the file exercises full-u64 id compaction, not just 0..n.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::Rng;
+
+/// One injected 4×-length diagonal per this many grid cells.
+const SHORTCUT_EVERY: usize = 97;
+
+/// What [`write_geometric_instance`] produced, for assertions.
+#[derive(Debug, Clone, Copy)]
+pub struct GeoInstanceInfo {
+    pub nodes: usize,
+    /// Edge *records written* (the builder's dedup may differ if a
+    /// diagonal collides, which the construction prevents).
+    pub edges: usize,
+    /// Injected diagonals that actually violate the triangle inequality
+    /// against their cell's rim path.
+    pub violated_shortcuts: usize,
+}
+
+/// Scramble a dense index into a "wild" raw id: odd-constant multiply is
+/// a bijection on u64, so ids stay distinct while looking nothing like
+/// 0..n (most exceed `u32::MAX`).
+#[inline]
+fn raw_id(i: usize) -> u64 {
+    (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Write a jittered-grid geometric instance with `n_target`-ish nodes
+/// (rounded up to a full `side²` grid) as a SNAP-style `u v w` edge list
+/// at `edges_path`, plus an optional `raw_id x y` coordinate TSV.
+/// Deterministic in `seed`.
+pub fn write_geometric_instance(
+    edges_path: &Path,
+    coords_path: Option<&Path>,
+    n_target: usize,
+    seed: u64,
+) -> anyhow::Result<GeoInstanceInfo> {
+    let side = (n_target as f64).sqrt().ceil().max(2.0) as usize;
+    let n = side * side;
+    let mut rng = Rng::new(seed);
+
+    // Jittered unit-grid coordinates; jitter < 0.5 keeps nodes ordered
+    // within their row/column so the grid stays planar-ish.
+    let mut coords: Vec<(f64, f64)> = Vec::with_capacity(n);
+    for r in 0..side {
+        for c in 0..side {
+            coords.push((
+                c as f64 + rng.uniform(-0.3, 0.3),
+                r as f64 + rng.uniform(-0.3, 0.3),
+            ));
+        }
+    }
+
+    let dist = |a: usize, b: usize| -> f64 {
+        let (ax, ay) = coords[a];
+        let (bx, by) = coords[b];
+        ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+    };
+
+    let f = File::create(edges_path)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", edges_path.display()))?;
+    let mut out = BufWriter::new(f);
+    writeln!(out, "# paf geometric instance: side {side} seed {seed}")?;
+    let mut edges = 0usize;
+    let mut violated = 0usize;
+    let mut cell = 0usize;
+    for r in 0..side {
+        for c in 0..side {
+            let i = r * side + c;
+            if c + 1 < side {
+                writeln!(out, "{} {} {:.6}", raw_id(i), raw_id(i + 1), dist(i, i + 1))?;
+                edges += 1;
+            }
+            if r + 1 < side {
+                writeln!(out, "{} {} {:.6}", raw_id(i), raw_id(i + side), dist(i, i + side))?;
+                edges += 1;
+            }
+            if c + 1 < side && r + 1 < side {
+                cell += 1;
+                if cell % SHORTCUT_EVERY == 0 {
+                    // Diagonal at 4× Euclidean length: longer than the
+                    // right-then-down rim path, i.e. a genuine metric
+                    // violation for the oracle to find.
+                    let j = i + side + 1;
+                    let w = 4.0 * dist(i, j);
+                    writeln!(out, "{} {} {:.6}", raw_id(i), raw_id(j), w)?;
+                    edges += 1;
+                    if w > dist(i, i + 1) + dist(i + 1, j) {
+                        violated += 1;
+                    }
+                }
+            }
+        }
+    }
+    out.flush()?;
+
+    if let Some(cp) = coords_path {
+        let f = File::create(cp).map_err(|e| anyhow::anyhow!("{}: {e}", cp.display()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "# paf coordinates: side {side} seed {seed}")?;
+        for (i, &(x, y)) in coords.iter().enumerate() {
+            writeln!(out, "{} {x:.6} {y:.6}", raw_id(i))?;
+        }
+        out.flush()?;
+    }
+
+    Ok(GeoInstanceInfo { nodes: n, edges, violated_shortcuts: violated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_and_violating() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let e1 = dir.join(format!("paf_gen_a_{pid}.tsv"));
+        let e2 = dir.join(format!("paf_gen_b_{pid}.tsv"));
+        let c1 = dir.join(format!("paf_gen_a_{pid}.co"));
+        let info = write_geometric_instance(&e1, Some(&c1), 400, 7).unwrap();
+        let info2 = write_geometric_instance(&e2, None, 400, 7).unwrap();
+        assert_eq!(info.nodes, 400);
+        assert!(info.violated_shortcuts > 0, "no injected violations at n=400");
+        assert_eq!(info.edges, info2.edges);
+        let a = std::fs::read(&e1).unwrap();
+        let b = std::fs::read(&e2).unwrap();
+        assert_eq!(a, b, "same seed must write identical bytes");
+        assert!(std::fs::metadata(&c1).unwrap().len() > 0);
+        for p in [e1, e2, c1] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn raw_ids_are_wild_but_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        let mut above_u32 = 0;
+        for i in 0..1000 {
+            let id = raw_id(i);
+            assert!(seen.insert(id), "raw_id collision at {i}");
+            if id > u32::MAX as u64 {
+                above_u32 += 1;
+            }
+        }
+        assert!(above_u32 > 900, "ids should exercise full u64 compaction");
+    }
+}

@@ -1,0 +1,365 @@
+//! Streaming graph ingestion: disk-backed edge lists → solver-ready
+//! instances under a bounded memory footprint.
+//!
+//! The legacy [`crate::graph::io::read_edge_list`] reader materializes a
+//! full `Vec<(u64, u64, f64)>`, compacts ids by repeated binary search,
+//! and dedups through a `HashMap` — fine for fixtures, hopeless for the
+//! SNAP/DIMACS road-network sizes the paper targets. This module
+//! replaces that pipeline for disk inputs:
+//!
+//! - [`parse`] — chunked, line-number-reporting [`EdgeSource`] parsers
+//!   for SNAP-style `u v [w]` text and DIMACS `p sp`/`a u v w` files.
+//! - [`build`] — a two-pass streaming CSR builder: pass 1 counts degrees
+//!   and interns raw `u64` ids through an open-addressed table; pass 2
+//!   scatters records straight into preallocated arrays. No intermediate
+//!   edge `Vec`, no clone-and-sort duplicate check, and an explicit
+//!   [`DupPolicy`] instead of silent first-wins. Byte accounting runs
+//!   through a [`MemLedger`] and lands in the solver JSON (schema v5).
+//! - [`spatial`] — a quad tree over node coordinates producing an
+//!   [`EdgeScope`] that restricts which violations the
+//!   [`crate::problems::MetricOracle`] reports (geometric-neighborhood
+//!   separation for geo/routing metric repair).
+//! - [`gen`] — a deterministic generator that writes sparse geometric
+//!   instances (n ≥ 10⁵) to disk so the streaming path is testable and
+//!   benchable without network access.
+//!
+//! The streaming path is **bit-identical** to the legacy reader on any
+//! input both accept (same compaction order, same canonical edge order,
+//! and [`DupPolicy::KeepFirst`] reproduces its first-weight-wins dedup).
+
+pub mod build;
+pub mod gen;
+pub mod parse;
+pub mod spatial;
+
+pub use build::{build_weighted, IdCompactor};
+pub use gen::{write_geometric_instance, GeoInstanceInfo};
+pub use parse::{DimacsEdgeSource, EdgeSource, RawEdge, SnapEdgeSource};
+pub use spatial::{neighborhood_scope, EdgeScope, QuadTree};
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use crate::graph::generators::{SignedGraph, WeightedInstance};
+
+/// What to do when an undirected edge appears more than once (in either
+/// orientation) with the builder free to see conflicting weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DupPolicy {
+    /// Any duplicate is an error naming the raw endpoint ids.
+    Error,
+    /// First record in file order wins — the legacy reader's behavior.
+    KeepFirst,
+    /// Last record in file order wins.
+    KeepLast,
+}
+
+impl DupPolicy {
+    /// Parse a CLI token (`error` / `keep-first` / `keep-last`).
+    pub fn parse(s: &str) -> Option<DupPolicy> {
+        match s {
+            "error" => Some(DupPolicy::Error),
+            "keep-first" => Some(DupPolicy::KeepFirst),
+            "keep-last" => Some(DupPolicy::KeepLast),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DupPolicy::Error => "error",
+            DupPolicy::KeepFirst => "keep-first",
+            DupPolicy::KeepLast => "keep-last",
+        }
+    }
+}
+
+impl std::fmt::Display for DupPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// On-disk edge-list dialect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestFormat {
+    /// SNAP-style `u v [w]` text (`#` comments).
+    Snap,
+    /// DIMACS shortest-path (`c`/`p`/`a`/`e` lines).
+    Dimacs,
+}
+
+impl IngestFormat {
+    /// Parse a CLI token (`snap` / `dimacs`).
+    pub fn parse(s: &str) -> Option<IngestFormat> {
+        match s {
+            "snap" => Some(IngestFormat::Snap),
+            "dimacs" => Some(IngestFormat::Dimacs),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IngestFormat::Snap => "snap",
+            IngestFormat::Dimacs => "dimacs",
+        }
+    }
+}
+
+impl std::fmt::Display for IngestFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Knobs for a streaming ingest.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestOptions {
+    pub format: IngestFormat,
+    pub dup_policy: DupPolicy,
+    /// Cap on the builder's logical working set; exceeding it is an
+    /// error, not a silent spill.
+    pub byte_budget: Option<u64>,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            format: IngestFormat::Snap,
+            dup_policy: DupPolicy::KeepFirst,
+            byte_budget: None,
+        }
+    }
+}
+
+/// Byte/record accounting for one ingest, surfaced in solver JSON
+/// (schema v5 `ingest` object) and the P11 bench axes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    pub format: &'static str,
+    pub dup_policy: &'static str,
+    /// Lines in the file (one streaming pass), comments included.
+    pub lines: u64,
+    /// Bytes consumed across both streaming passes.
+    pub bytes_read: u64,
+    /// Edge records parsed (self-loops excluded).
+    pub parsed_edges: u64,
+    pub self_loops: u64,
+    /// Extra records beyond the first per undirected edge.
+    pub duplicates: u64,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Peak logical working set of the build (ledger high-water mark).
+    pub peak_bytes: u64,
+    /// Resident size of the finished CSR instance (graph + weights).
+    pub csr_bytes: u64,
+    /// Pass-1 wall time (parse + degree count + id interning).
+    pub parse_s: f64,
+    /// Remaining build wall time (re-rank, scatter, dedup, CSR).
+    pub build_s: f64,
+}
+
+/// Logical allocation ledger: tracks the builder's working set so peak
+/// bytes are reported and an optional budget is enforced *before* each
+/// large reservation.
+pub struct MemLedger {
+    cur: u64,
+    peak: u64,
+    budget: Option<u64>,
+}
+
+impl MemLedger {
+    pub fn with_budget(budget: Option<u64>) -> MemLedger {
+        MemLedger { cur: 0, peak: 0, budget }
+    }
+
+    /// Record an upcoming reservation; errors without allocating if it
+    /// would push the working set past the budget.
+    pub fn alloc(&mut self, bytes: u64, what: &str) -> anyhow::Result<()> {
+        let next = self.cur + bytes;
+        if let Some(b) = self.budget {
+            anyhow::ensure!(
+                next <= b,
+                "ingest byte budget exceeded: {what} brings the working set to {next} bytes (budget {b})"
+            );
+        }
+        self.cur = next;
+        self.peak = self.peak.max(next);
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        self.cur = self.cur.saturating_sub(bytes);
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn current(&self) -> u64 {
+        self.cur
+    }
+}
+
+/// A streamed-in weighted instance plus its id compaction map and stats.
+pub struct IngestOutput {
+    pub inst: WeightedInstance,
+    /// `ids[rank] = raw id` — sorted ascending, so `raw → rank` is a
+    /// binary search. Needed to resolve coordinate files and to report
+    /// results in the input's id space.
+    pub ids: Vec<u64>,
+    pub stats: IngestStats,
+}
+
+/// Open an edge source of the given format.
+pub fn open_source(path: &Path, format: IngestFormat) -> anyhow::Result<Box<dyn EdgeSource>> {
+    Ok(match format {
+        IngestFormat::Snap => Box::new(SnapEdgeSource::open(path)?),
+        IngestFormat::Dimacs => Box::new(DimacsEdgeSource::open(path)?),
+    })
+}
+
+/// Stream a weighted instance from disk.
+pub fn ingest_weighted<P: AsRef<Path>>(path: P, opts: IngestOptions) -> anyhow::Result<IngestOutput> {
+    let path = path.as_ref();
+    let mut src = open_source(path, opts.format)?;
+    let (inst, ids, mut stats) = build_weighted(src.as_mut(), opts.dup_policy, opts.byte_budget)?;
+    stats.format = opts.format.as_str();
+    Ok(IngestOutput { inst, ids, stats })
+}
+
+/// Stream a signed instance (correlation clustering) from disk: the
+/// third column's **sign** labels the edge (`w ≥ 0` → `+`, matching
+/// [`crate::graph::io::read_signed`]); magnitudes are dropped.
+pub fn ingest_signed<P: AsRef<Path>>(
+    path: P,
+    opts: IngestOptions,
+) -> anyhow::Result<(SignedGraph, Vec<u64>, IngestStats)> {
+    let out = ingest_weighted(path, opts)?;
+    let signs: Vec<i8> = out.inst.weights.iter().map(|&w| if w >= 0.0 { 1 } else { -1 }).collect();
+    Ok((SignedGraph { graph: out.inst.graph, signs }, out.ids, out.stats))
+}
+
+/// Read a coordinate file: DIMACS `.co` (`v id x y`, `c` comments, `p`
+/// header) or a bare `id x y` TSV (`#` comments). Returns raw-id records
+/// in file order.
+pub fn read_coords<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<(u64, f64, f64)>> {
+    let path = path.as_ref();
+    let f = File::open(path).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut out = Vec::new();
+    for (idx, line) in reader.lines().enumerate() {
+        let ln = idx + 1;
+        let line = line?;
+        let mut it = line.split_whitespace();
+        let Some(first) = it.next() else {
+            continue;
+        };
+        if first.starts_with('#') || first == "c" || first == "p" {
+            continue;
+        }
+        // `v <id> <x> <y>` (DIMACS) or `<id> <x> <y>` (bare TSV).
+        let id_tok = if first == "v" {
+            it.next().ok_or_else(|| {
+                anyhow::anyhow!("{}:{ln}: missing node id after 'v'", path.display())
+            })?
+        } else {
+            first
+        };
+        let id: u64 = id_tok.parse().map_err(|e| {
+            anyhow::anyhow!("{}:{ln}: bad node id {id_tok:?}: {e}", path.display())
+        })?;
+        let x_tok = it.next().ok_or_else(|| {
+            anyhow::anyhow!("{}:{ln}: missing x coordinate", path.display())
+        })?;
+        let x: f64 = x_tok.parse().map_err(|e| {
+            anyhow::anyhow!("{}:{ln}: bad x coordinate {x_tok:?}: {e}", path.display())
+        })?;
+        let y_tok = it.next().ok_or_else(|| {
+            anyhow::anyhow!("{}:{ln}: missing y coordinate", path.display())
+        })?;
+        let y: f64 = y_tok.parse().map_err(|e| {
+            anyhow::anyhow!("{}:{ln}: bad y coordinate {y_tok:?}: {e}", path.display())
+        })?;
+        out.push((id, x, y));
+    }
+    Ok(out)
+}
+
+/// Resolve a coordinate file against an ingest's id table: returns
+/// `coords[rank]` for every graph node. Records for ids not in the graph
+/// are ignored; a graph node with no coordinate is an error.
+pub fn node_coords<P: AsRef<Path>>(path: P, ids: &[u64]) -> anyhow::Result<Vec<(f64, f64)>> {
+    let path = path.as_ref();
+    let records = read_coords(path)?;
+    let mut coords = vec![(f64::NAN, f64::NAN); ids.len()];
+    let mut have = vec![false; ids.len()];
+    for (id, x, y) in records {
+        if let Ok(rank) = ids.binary_search(&id) {
+            coords[rank] = (x, y);
+            have[rank] = true;
+        }
+    }
+    for (rank, &h) in have.iter().enumerate() {
+        anyhow::ensure!(
+            h,
+            "node id {} has no coordinates in {}",
+            ids[rank],
+            path.display()
+        );
+    }
+    Ok(coords)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_and_format_tokens_round_trip() {
+        for p in [DupPolicy::Error, DupPolicy::KeepFirst, DupPolicy::KeepLast] {
+            assert_eq!(DupPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(DupPolicy::parse("bogus"), None);
+        for f in [IngestFormat::Snap, IngestFormat::Dimacs] {
+            assert_eq!(IngestFormat::parse(f.as_str()), Some(f));
+        }
+        assert_eq!(IngestFormat::parse("csv"), None);
+    }
+
+    #[test]
+    fn ledger_tracks_peak_and_enforces_budget() {
+        let mut l = MemLedger::with_budget(Some(100));
+        l.alloc(60, "a").unwrap();
+        l.alloc(30, "b").unwrap();
+        assert_eq!(l.current(), 90);
+        let err = l.alloc(20, "c").unwrap_err().to_string();
+        assert!(err.contains("budget"), "unhelpful error: {err}");
+        // Failed alloc must not be recorded.
+        assert_eq!(l.current(), 90);
+        l.free(50);
+        l.alloc(20, "d").unwrap();
+        assert_eq!(l.peak(), 90);
+
+        let mut free = MemLedger::with_budget(None);
+        free.alloc(u64::MAX / 2, "huge").unwrap();
+        assert_eq!(free.peak(), u64::MAX / 2);
+    }
+
+    #[test]
+    fn coords_parse_both_dialects() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let p = dir.join(format!("paf_coords_{pid}.co"));
+        std::fs::write(&p, "c comment\np aux sp co 3\nv 10 1.0 2.0\nv 20 3.5 -1.0\n# bare\n30 0.0 0.0\n").unwrap();
+        let recs = read_coords(&p).unwrap();
+        assert_eq!(recs, vec![(10, 1.0, 2.0), (20, 3.5, -1.0), (30, 0.0, 0.0)]);
+        let coords = node_coords(&p, &[10, 30]).unwrap();
+        assert_eq!(coords, vec![(1.0, 2.0), (0.0, 0.0)]);
+        let err = node_coords(&p, &[10, 40]).unwrap_err().to_string();
+        assert!(err.contains("40"), "should name the uncovered node: {err}");
+        let _ = std::fs::remove_file(p);
+    }
+}

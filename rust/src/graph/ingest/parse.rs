@@ -1,0 +1,311 @@
+//! Chunked, line-number-reporting edge-list parsers behind a common
+//! [`EdgeSource`] trait.
+//!
+//! Two formats:
+//! - **SNAP-style text** (`u v [w]`): `#` comments, blank lines,
+//!   whitespace-separated fields, optional weight (default `1.0`), extra
+//!   trailing columns ignored (SNAP exports often carry timestamps) —
+//!   the same dialect the legacy [`crate::graph::io::read_edge_list`]
+//!   reader accepts, so the streaming path stays bit-compatible with it.
+//! - **DIMACS shortest-path** (`c` comments, one `p sp <n> <m>` header,
+//!   `a u v w` arc lines / `e u v [w]` edge lines). Road-network files
+//!   list both directions of every undirected edge; the reverse arcs
+//!   collapse in the CSR builder's duplicate pass.
+//!
+//! Sources stream line by line off a fixed-size [`std::io::BufReader`]
+//! chunk with one reused line buffer, so parsing is O(chunk) resident no
+//! matter the file size. Every parse error carries `path:line` (1-based),
+//! mirroring the diagnostics style of `serve::parse_job_trace_lenient`.
+//! Node ids are full `u64` — values above `u32::MAX` are preserved
+//! verbatim (compaction happens in the builder, never by truncation).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+/// Fixed read-chunk size for the streaming line reader.
+const CHUNK_BYTES: usize = 64 << 10;
+
+/// One parsed edge record: raw (uncompacted) endpoint ids plus weight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RawEdge {
+    pub u: u64,
+    pub v: u64,
+    pub w: f64,
+}
+
+/// A restartable stream of edge records. The two-pass CSR builder
+/// consumes a source twice (degree pass, then scatter pass), so sources
+/// must support [`EdgeSource::rewind`].
+pub trait EdgeSource {
+    /// Restart the stream from the beginning (re-opens the file).
+    fn rewind(&mut self) -> anyhow::Result<()>;
+    /// Next edge record, or `None` at end of stream. Malformed lines are
+    /// errors carrying `path:line`.
+    fn next_edge(&mut self) -> anyhow::Result<Option<RawEdge>>;
+    /// Bytes consumed since the last rewind.
+    fn bytes_read(&self) -> u64;
+    /// Lines consumed since the last rewind (comments and blanks too).
+    fn lines_read(&self) -> u64;
+}
+
+/// Buffered line source: one reused `String`, byte/line accounting,
+/// CRLF-tolerant (a trailing `\r` is stripped along with the `\n`).
+struct LineReader {
+    reader: BufReader<File>,
+    buf: String,
+    line_no: u64,
+    bytes: u64,
+}
+
+impl LineReader {
+    fn open(path: &Path) -> anyhow::Result<LineReader> {
+        let file = File::open(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(LineReader {
+            reader: BufReader::with_capacity(CHUNK_BYTES, file),
+            buf: String::new(),
+            line_no: 0,
+            bytes: 0,
+        })
+    }
+
+    /// Next line with its 1-based number, or `None` at EOF. The trailing
+    /// `\n` (and `\r` before it) is stripped; interior whitespace is the
+    /// tokenizer's business.
+    fn next_line(&mut self) -> anyhow::Result<Option<(&str, u64)>> {
+        self.buf.clear();
+        let n = self.reader.read_line(&mut self.buf)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        self.bytes += n as u64;
+        self.line_no += 1;
+        let mut s = self.buf.as_str();
+        if let Some(t) = s.strip_suffix('\n') {
+            s = t;
+        }
+        if let Some(t) = s.strip_suffix('\r') {
+            s = t;
+        }
+        Ok(Some((s, self.line_no)))
+    }
+}
+
+fn parse_id(path: &Path, line: u64, field: &str, tok: &str) -> anyhow::Result<u64> {
+    tok.parse().map_err(|e| {
+        anyhow::anyhow!("{}:{line}: bad {field} {tok:?}: {e}", path.display())
+    })
+}
+
+fn parse_weight(path: &Path, line: u64, tok: &str) -> anyhow::Result<f64> {
+    tok.parse().map_err(|e| {
+        anyhow::anyhow!("{}:{line}: bad weight {tok:?}: {e}", path.display())
+    })
+}
+
+/// SNAP-style `u v [w]` text source.
+pub struct SnapEdgeSource {
+    path: PathBuf,
+    lines: LineReader,
+}
+
+impl SnapEdgeSource {
+    pub fn open<P: AsRef<Path>>(path: P) -> anyhow::Result<SnapEdgeSource> {
+        let path = path.as_ref().to_path_buf();
+        let lines = LineReader::open(&path)?;
+        Ok(SnapEdgeSource { path, lines })
+    }
+}
+
+impl EdgeSource for SnapEdgeSource {
+    fn rewind(&mut self) -> anyhow::Result<()> {
+        self.lines = LineReader::open(&self.path)?;
+        Ok(())
+    }
+
+    fn next_edge(&mut self) -> anyhow::Result<Option<RawEdge>> {
+        loop {
+            let Some((line, ln)) = self.lines.next_line()? else {
+                return Ok(None);
+            };
+            let mut it = line.split_whitespace();
+            let Some(first) = it.next() else {
+                continue; // blank (or whitespace-only) line
+            };
+            if first.starts_with('#') {
+                continue; // comment
+            }
+            let u = parse_id(&self.path, ln, "source id", first)?;
+            let v_tok = it.next().ok_or_else(|| {
+                anyhow::anyhow!("{}:{ln}: missing destination id", self.path.display())
+            })?;
+            let v = parse_id(&self.path, ln, "destination id", v_tok)?;
+            let w = match it.next() {
+                Some(t) => parse_weight(&self.path, ln, t)?,
+                None => 1.0,
+            };
+            return Ok(Some(RawEdge { u, v, w }));
+        }
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.lines.bytes
+    }
+
+    fn lines_read(&self) -> u64 {
+        self.lines.line_no
+    }
+}
+
+/// DIMACS shortest-path source (`c` / `p sp n m` / `a u v w` / `e u v [w]`).
+pub struct DimacsEdgeSource {
+    path: PathBuf,
+    lines: LineReader,
+    declared: Option<(u64, u64)>,
+}
+
+impl DimacsEdgeSource {
+    pub fn open<P: AsRef<Path>>(path: P) -> anyhow::Result<DimacsEdgeSource> {
+        let path = path.as_ref().to_path_buf();
+        let lines = LineReader::open(&path)?;
+        Ok(DimacsEdgeSource { path, lines, declared: None })
+    }
+
+    /// The `p sp <n> <m>` header's declared sizes, once seen. Advisory
+    /// only — the builder counts for itself.
+    pub fn declared(&self) -> Option<(u64, u64)> {
+        self.declared
+    }
+}
+
+impl EdgeSource for DimacsEdgeSource {
+    fn rewind(&mut self) -> anyhow::Result<()> {
+        self.lines = LineReader::open(&self.path)?;
+        self.declared = None;
+        Ok(())
+    }
+
+    fn next_edge(&mut self) -> anyhow::Result<Option<RawEdge>> {
+        loop {
+            let Some((line, ln)) = self.lines.next_line()? else {
+                return Ok(None);
+            };
+            let mut it = line.split_whitespace();
+            let Some(tag) = it.next() else {
+                continue; // blank line
+            };
+            match tag {
+                "c" => continue,
+                "p" => {
+                    // `p <kind> <n> <m>` — the kind token is not policed
+                    // (files in the wild say `sp`, `asn`, ...).
+                    let _kind = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("{}:{ln}: malformed p-line (missing kind)", self.path.display())
+                    })?;
+                    let n_tok = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("{}:{ln}: malformed p-line (missing node count)", self.path.display())
+                    })?;
+                    let m_tok = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("{}:{ln}: malformed p-line (missing edge count)", self.path.display())
+                    })?;
+                    let n = parse_id(&self.path, ln, "declared node count", n_tok)?;
+                    let m = parse_id(&self.path, ln, "declared edge count", m_tok)?;
+                    self.declared = Some((n, m));
+                    continue;
+                }
+                "a" | "e" => {
+                    let u_tok = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("{}:{ln}: missing source id", self.path.display())
+                    })?;
+                    let u = parse_id(&self.path, ln, "source id", u_tok)?;
+                    let v_tok = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("{}:{ln}: missing destination id", self.path.display())
+                    })?;
+                    let v = parse_id(&self.path, ln, "destination id", v_tok)?;
+                    let w = match it.next() {
+                        Some(t) => parse_weight(&self.path, ln, t)?,
+                        None => 1.0,
+                    };
+                    return Ok(Some(RawEdge { u, v, w }));
+                }
+                other => {
+                    return Err(anyhow::anyhow!(
+                        "{}:{ln}: unrecognised DIMACS line type {other:?} (expected c/p/a/e)",
+                        self.path.display()
+                    ));
+                }
+            }
+        }
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.lines.bytes
+    }
+
+    fn lines_read(&self) -> u64 {
+        self.lines.line_no
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, contents: &str) -> PathBuf {
+        let path = std::env::temp_dir().join(format!("paf_parse_{name}_{}", std::process::id()));
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn snap_basics_and_rewind() {
+        let path = tmp("snap", "# hdr\n1 2 1.5\n\n2 3\n");
+        let mut src = SnapEdgeSource::open(&path).unwrap();
+        let a = src.next_edge().unwrap().unwrap();
+        assert_eq!((a.u, a.v, a.w), (1, 2, 1.5));
+        let b = src.next_edge().unwrap().unwrap();
+        assert_eq!((b.u, b.v, b.w), (2, 3, 1.0)); // default weight
+        assert!(src.next_edge().unwrap().is_none());
+        assert_eq!(src.lines_read(), 4);
+        assert!(src.bytes_read() > 0);
+        src.rewind().unwrap();
+        assert_eq!(src.bytes_read(), 0);
+        assert_eq!(src.next_edge().unwrap().unwrap().u, 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn snap_errors_carry_line_numbers() {
+        let path = tmp("snap_err", "1 2 1.0\n1 x 2.0\n");
+        let mut src = SnapEdgeSource::open(&path).unwrap();
+        src.next_edge().unwrap();
+        let err = src.next_edge().unwrap_err().to_string();
+        assert!(err.contains(":2:"), "missing line number: {err}");
+        assert!(err.contains("destination id"), "unhelpful error: {err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn dimacs_basics() {
+        let path = tmp("dimacs", "c hdr\np sp 3 2\na 1 2 1.5\ne 2 3\n");
+        let mut src = DimacsEdgeSource::open(&path).unwrap();
+        let a = src.next_edge().unwrap().unwrap();
+        assert_eq!((a.u, a.v, a.w), (1, 2, 1.5));
+        assert_eq!(src.declared(), Some((3, 2)));
+        let b = src.next_edge().unwrap().unwrap();
+        assert_eq!((b.u, b.v, b.w), (2, 3, 1.0));
+        assert!(src.next_edge().unwrap().is_none());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn dimacs_rejects_unknown_line_types() {
+        let path = tmp("dimacs_err", "p sp 2 1\nz 1 2\n");
+        let mut src = DimacsEdgeSource::open(&path).unwrap();
+        let err = src.next_edge().unwrap_err().to_string();
+        assert!(err.contains(":2:"), "missing line number: {err}");
+        assert!(err.contains("unrecognised"), "unhelpful error: {err}");
+        let _ = std::fs::remove_file(path);
+    }
+}

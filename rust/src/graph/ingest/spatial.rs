@@ -1,0 +1,299 @@
+//! Quad-tree spatial index over node coordinates, and the [`EdgeScope`]
+//! it produces for geometrically restricted separation.
+//!
+//! Road networks and other geometric instances come with coordinates
+//! (DIMACS `.co` companions, or a plain `id x y` TSV). When a metric
+//! repair only concerns a region — a corridor, a city, a damaged patch —
+//! scanning every source node for violated triangle/cycle inequalities
+//! wastes nearly all the oracle's work. The quad tree answers "which
+//! nodes lie within radius `r` of these centers" in O(log n + hits), and
+//! [`neighborhood_scope`] turns the hit set into an edge mask the
+//! [`crate::problems::MetricOracle`] uses to restrict which violations it
+//! *reports*. Shortest-path witnesses still run over the whole graph, so
+//! every emitted constraint remains a genuine `MET(G)` row — the scope
+//! narrows the separation frontier, never the feasible region.
+
+use std::sync::Arc;
+
+use crate::graph::Graph;
+
+/// Max points per leaf before it splits.
+const BUCKET: usize = 16;
+/// Split-depth cap: coincident points can never separate, so a leaf at
+/// this depth keeps its overflow instead of recursing forever.
+const MAX_DEPTH: u32 = 32;
+
+struct QtNode {
+    x0: f64,
+    y0: f64,
+    x1: f64,
+    y1: f64,
+    /// Child node indices (quadrant order: SW, SE, NW, NE), once split.
+    children: Option<[u32; 4]>,
+    /// Point indices stored at this node (leaves only, barring the
+    /// depth-cap overflow case).
+    items: Vec<u32>,
+}
+
+impl QtNode {
+    fn leaf(x0: f64, y0: f64, x1: f64, y1: f64) -> QtNode {
+        QtNode { x0, y0, x1, y1, children: None, items: Vec::new() }
+    }
+
+    /// Squared distance from `(x, y)` to this node's rectangle (zero if
+    /// inside) — the circle/rect pruning test.
+    fn dist2(&self, x: f64, y: f64) -> f64 {
+        let dx = (self.x0 - x).max(0.0).max(x - self.x1);
+        let dy = (self.y0 - y).max(0.0).max(y - self.y1);
+        dx * dx + dy * dy
+    }
+}
+
+/// Bucket PR quad tree over a fixed point set. Indices returned by
+/// queries refer to the `pts` slice given to [`QuadTree::build`].
+pub struct QuadTree {
+    nodes: Vec<QtNode>,
+    pts: Vec<(f64, f64)>,
+}
+
+impl QuadTree {
+    /// Build over a point set (compact-rank node order: point `i` is
+    /// graph node `i`). Handles the empty set and fully coincident sets.
+    pub fn build(pts: &[(f64, f64)]) -> QuadTree {
+        let (mut x0, mut y0, mut x1, mut y1) = (0.0f64, 0.0f64, 1.0f64, 1.0f64);
+        if let Some(&(fx, fy)) = pts.first() {
+            (x0, y0, x1, y1) = (fx, fy, fx, fy);
+            for &(x, y) in pts {
+                x0 = x0.min(x);
+                y0 = y0.min(y);
+                x1 = x1.max(x);
+                y1 = y1.max(y);
+            }
+            // Degenerate (single point / collinear) boxes still need area
+            // for the quadrant split to make progress.
+            if x1 - x0 <= 0.0 {
+                x1 = x0 + 1.0;
+            }
+            if y1 - y0 <= 0.0 {
+                y1 = y0 + 1.0;
+            }
+        }
+        let mut tree = QuadTree { nodes: vec![QtNode::leaf(x0, y0, x1, y1)], pts: pts.to_vec() };
+        for i in 0..pts.len() {
+            tree.insert(i as u32);
+        }
+        tree
+    }
+
+    fn quadrant(node: &QtNode, x: f64, y: f64) -> usize {
+        let mx = 0.5 * (node.x0 + node.x1);
+        let my = 0.5 * (node.y0 + node.y1);
+        (x >= mx) as usize | (((y >= my) as usize) << 1)
+    }
+
+    fn insert(&mut self, item: u32) {
+        let (x, y) = self.pts[item as usize];
+        let mut idx = 0usize;
+        let mut depth = 0u32;
+        loop {
+            if let Some(children) = self.nodes[idx].children {
+                idx = children[Self::quadrant(&self.nodes[idx], x, y)] as usize;
+                depth += 1;
+                continue;
+            }
+            self.nodes[idx].items.push(item);
+            if self.nodes[idx].items.len() > BUCKET && depth < MAX_DEPTH {
+                self.split(idx);
+            }
+            return;
+        }
+    }
+
+    fn split(&mut self, idx: usize) {
+        let (x0, y0, x1, y1) = {
+            let n = &self.nodes[idx];
+            (n.x0, n.y0, n.x1, n.y1)
+        };
+        let mx = 0.5 * (x0 + x1);
+        let my = 0.5 * (y0 + y1);
+        let base = self.nodes.len() as u32;
+        // Quadrant order matches `quadrant()`: bit0 = east, bit1 = north.
+        self.nodes.push(QtNode::leaf(x0, y0, mx, my));
+        self.nodes.push(QtNode::leaf(mx, y0, x1, my));
+        self.nodes.push(QtNode::leaf(x0, my, mx, y1));
+        self.nodes.push(QtNode::leaf(mx, my, x1, y1));
+        let items = std::mem::take(&mut self.nodes[idx].items);
+        self.nodes[idx].children = Some([base, base + 1, base + 2, base + 3]);
+        for item in items {
+            let (x, y) = self.pts[item as usize];
+            let q = Self::quadrant(&self.nodes[idx], x, y);
+            let child = self.nodes[idx].children.unwrap()[q] as usize;
+            // Direct push — an overflowing child (all items in one
+            // quadrant) splits lazily on the next depth-checked insert;
+            // queries scan leaf items either way.
+            self.nodes[child].items.push(item);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Append the indices of all points within `radius` (inclusive) of
+    /// `(x, y)` to `out`.
+    pub fn within_radius(&self, x: f64, y: f64, radius: f64, out: &mut Vec<u32>) {
+        if self.pts.is_empty() || radius < 0.0 {
+            return;
+        }
+        let r2 = radius * radius;
+        let mut stack = vec![0u32];
+        while let Some(idx) = stack.pop() {
+            let node = &self.nodes[idx as usize];
+            if node.dist2(x, y) > r2 {
+                continue;
+            }
+            if let Some(children) = node.children {
+                stack.extend_from_slice(&children);
+            }
+            for &item in &node.items {
+                let (px, py) = self.pts[item as usize];
+                let (dx, dy) = (px - x, py - y);
+                if dx * dx + dy * dy <= r2 {
+                    out.push(item);
+                }
+            }
+        }
+    }
+}
+
+/// A per-edge mask restricting which violations the oracle reports.
+/// Shared as `Arc` so a scope built once serves every scan of a solve.
+pub struct EdgeScope {
+    in_scope: Vec<bool>,
+    count: usize,
+}
+
+impl EdgeScope {
+    /// Scope admitting every edge (useful as an explicit "no restriction").
+    pub fn all(num_edges: usize) -> EdgeScope {
+        EdgeScope { in_scope: vec![true; num_edges], count: num_edges }
+    }
+
+    pub fn from_edge_mask(mask: Vec<bool>) -> EdgeScope {
+        let count = mask.iter().filter(|&&b| b).count();
+        EdgeScope { in_scope: mask, count }
+    }
+
+    /// Is edge `e` inside the scope?
+    #[inline]
+    pub fn edge(&self, e: usize) -> bool {
+        self.in_scope[e]
+    }
+
+    /// How many edges the scope admits.
+    pub fn edges_in_scope(&self) -> usize {
+        self.count
+    }
+
+    /// Total edges masked (in or out).
+    pub fn num_edges(&self) -> usize {
+        self.in_scope.len()
+    }
+}
+
+/// Build the scope of edges whose **both endpoints** lie within `radius`
+/// of at least one center. `coords[i]` is the coordinate of graph node
+/// `i` (compact rank order, as produced by the ingest id table).
+pub fn neighborhood_scope(
+    g: &Graph,
+    coords: &[(f64, f64)],
+    centers: &[(f64, f64)],
+    radius: f64,
+) -> Arc<EdgeScope> {
+    assert_eq!(coords.len(), g.num_nodes(), "one coordinate per graph node");
+    let tree = QuadTree::build(coords);
+    let mut node_in = vec![false; g.num_nodes()];
+    let mut hits = Vec::new();
+    for &(cx, cy) in centers {
+        hits.clear();
+        tree.within_radius(cx, cy, radius, &mut hits);
+        for &i in &hits {
+            node_in[i as usize] = true;
+        }
+    }
+    let mask: Vec<bool> = g
+        .edges()
+        .iter()
+        .map(|&(u, v)| node_in[u as usize] && node_in[v as usize])
+        .collect();
+    Arc::new(EdgeScope::from_edge_mask(mask))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn quadtree_matches_brute_force() {
+        let mut rng = Rng::new(11);
+        let pts: Vec<(f64, f64)> =
+            (0..400).map(|_| (rng.uniform(-5.0, 5.0), rng.uniform(-5.0, 5.0))).collect();
+        let tree = QuadTree::build(&pts);
+        assert_eq!(tree.len(), pts.len());
+        for trial in 0..20 {
+            let (cx, cy) = (rng.uniform(-6.0, 6.0), rng.uniform(-6.0, 6.0));
+            let r = rng.uniform(0.1, 4.0);
+            let mut got = Vec::new();
+            tree.within_radius(cx, cy, r, &mut got);
+            got.sort_unstable();
+            let want: Vec<u32> = pts
+                .iter()
+                .enumerate()
+                .filter(|(_, &(x, y))| {
+                    let (dx, dy) = (x - cx, y - cy);
+                    dx * dx + dy * dy <= r * r
+                })
+                .map(|(i, _)| i as u32)
+                .collect();
+            assert_eq!(got, want, "trial {trial} center ({cx},{cy}) r {r}");
+        }
+    }
+
+    #[test]
+    fn quadtree_handles_coincident_points() {
+        // 100 copies of the same point would recurse forever without the
+        // depth cap.
+        let pts = vec![(1.0, 1.0); 100];
+        let tree = QuadTree::build(&pts);
+        let mut got = Vec::new();
+        tree.within_radius(1.0, 1.0, 0.5, &mut got);
+        assert_eq!(got.len(), 100);
+        got.clear();
+        tree.within_radius(3.0, 3.0, 0.5, &mut got);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn quadtree_empty_set() {
+        let tree = QuadTree::build(&[]);
+        assert!(tree.is_empty());
+        let mut got = Vec::new();
+        tree.within_radius(0.0, 0.0, 10.0, &mut got);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn edge_scope_counts() {
+        let scope = EdgeScope::from_edge_mask(vec![true, false, true]);
+        assert_eq!(scope.edges_in_scope(), 2);
+        assert_eq!(scope.num_edges(), 3);
+        assert!(scope.edge(0) && !scope.edge(1) && scope.edge(2));
+        let all = EdgeScope::all(4);
+        assert_eq!(all.edges_in_scope(), 4);
+    }
+}

@@ -3,12 +3,27 @@
 
 use super::csr::Graph;
 use super::generators::{SignedGraph, WeightedInstance};
+use super::ingest::DupPolicy;
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
 /// Read a (possibly weighted) edge list. Lines starting with `#` are
 /// comments; node ids are compacted to `0..n`.
+///
+/// Duplicate undirected edges resolve with [`DupPolicy::KeepFirst`] (the
+/// first weight in file order wins) — the historical behavior, now an
+/// explicit documented default. Use [`read_edge_list_with`] for another
+/// policy, or the streaming [`crate::graph::ingest`] path for large
+/// files.
 pub fn read_edge_list<P: AsRef<Path>>(path: P) -> anyhow::Result<WeightedInstance> {
+    read_edge_list_with(path, DupPolicy::KeepFirst)
+}
+
+/// [`read_edge_list`] with an explicit duplicate-edge policy.
+pub fn read_edge_list_with<P: AsRef<Path>>(
+    path: P,
+    policy: DupPolicy,
+) -> anyhow::Result<WeightedInstance> {
     let file = std::fs::File::open(path)?;
     let reader = std::io::BufReader::new(file);
     let mut raw: Vec<(u64, u64, f64)> = Vec::new();
@@ -31,12 +46,25 @@ pub fn read_edge_list<P: AsRef<Path>>(path: P) -> anyhow::Result<WeightedInstanc
     ids.sort_unstable();
     ids.dedup();
     let index = |x: u64| ids.binary_search(&x).unwrap() as u32;
-    // Dedup undirected edges, keeping the first weight seen.
+    // Dedup undirected edges per the policy.
     let mut seen = std::collections::HashMap::new();
     for &(a, b, w) in &raw {
         let (u, v) = (index(a), index(b));
         let key = if u < v { (u, v) } else { (v, u) };
-        seen.entry(key).or_insert(w);
+        match policy {
+            DupPolicy::KeepFirst => {
+                seen.entry(key).or_insert(w);
+            }
+            DupPolicy::KeepLast => {
+                seen.insert(key, w);
+            }
+            DupPolicy::Error => {
+                anyhow::ensure!(
+                    seen.insert(key, w).is_none(),
+                    "duplicate edge {a} {b} (use keep-first or keep-last to resolve)"
+                );
+            }
+        }
     }
     let mut pairs: Vec<((u32, u32), f64)> = seen.into_iter().collect();
     pairs.sort_unstable_by_key(|&(k, _)| k);
@@ -97,6 +125,21 @@ mod tests {
         assert_eq!(inst.graph.num_edges(), 2); // dup + self-loop dropped
         let sg = read_signed(&path).unwrap();
         assert_eq!(sg.signs.iter().filter(|&&s| s < 0).count(), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn dup_policies_apply() {
+        let path = std::env::temp_dir().join("paf_io_test3.txt");
+        std::fs::write(&path, "1 2 1.0\n2 1 5.0\n2 3 4.0\n").unwrap();
+        let first = read_edge_list_with(&path, DupPolicy::KeepFirst).unwrap();
+        assert_eq!(first.weights[0], 1.0);
+        let last = read_edge_list_with(&path, DupPolicy::KeepLast).unwrap();
+        assert_eq!(last.weights[0], 5.0);
+        let err = read_edge_list_with(&path, DupPolicy::Error).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "unhelpful error: {err}");
+        // Default is KeepFirst — the historical behavior.
+        assert_eq!(read_edge_list(&path).unwrap().weights[0], 1.0);
         let _ = std::fs::remove_file(path);
     }
 }

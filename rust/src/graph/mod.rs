@@ -1,5 +1,6 @@
 //! Graph substrate: CSR graphs over indexed edge variables, shortest
-//! paths, all-pairs computations, random-instance generators and IO.
+//! paths, all-pairs computations, random-instance generators, IO, and
+//! streaming disk ingestion ([`ingest`]).
 //!
 //! The optimisation variable of every metric constrained problem lives on
 //! the *edges* of a graph `G`; the structure (`Graph`) is immutable while
@@ -10,6 +11,7 @@ pub mod apsp;
 pub mod csr;
 pub mod dijkstra;
 pub mod generators;
+pub mod ingest;
 pub mod io;
 
 pub use csr::Graph;

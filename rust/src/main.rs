@@ -6,6 +6,13 @@
 //! paf nearness  --n 300 --graph-type 1 [--mode onfind|collect] [--tol 1e-2]
 //!               [--sweep sequential|sharded|sharded:T] [--overlap]
 //!               [--lazy-sweep | --no-lazy-sweep]
+//! paf nearness  --input edges.tsv [--format snap|dimacs]
+//!               [--dup-policy error|keep-first|keep-last]
+//!               [--byte-budget BYTES] [--coords nodes.co]
+//!               [--geo-radius R [--geo-center X,Y]]
+//!               # disk-streamed instance (graph::ingest); --coords +
+//!               # --geo-radius restrict separation to a geometric
+//!               # neighborhood via the quad-tree edge scope
 //! paf batch     --n 120 --k 4      # K nearness instances in ONE session
 //! paf serve     [--trace jobs.jsonl] [--capacity 4] [--inner-sweeps 2]
 //!               [--state-dir DIR] [--checkpoint-every N] [--retry-limit 2]
@@ -17,6 +24,8 @@
 //!               # recovers incomplete jobs from DIR on startup and
 //!               # resumes them bit-identically across the crash
 //! paf cc        --graph ca-grqc [--sparse] [--gamma 1.0] [--scale 0.1]
+//! paf cc        --input signed.tsv [--format snap|dimacs] [--dup-policy P]
+//!               # disk-streamed signed instance (third column's sign)
 //! paf itml      --dataset banana [--projections 100000]
 //! paf svm       --n 100000 --d 100 --k 10 [--c 1000] [--epochs 5]
 //! paf oracle    --n 200            # one separation-oracle round, timed
@@ -112,7 +121,174 @@ fn solve_options(args: &Args) -> SolveOptions {
     opts
 }
 
+/// `--format` / `--dup-policy` / `--byte-budget` -> [`IngestOptions`].
+fn ingest_options(args: &Args) -> paf::graph::ingest::IngestOptions {
+    use paf::graph::ingest::{DupPolicy, IngestFormat, IngestOptions};
+    let mut opts = IngestOptions::default();
+    if let Some(s) = args.get("format") {
+        match IngestFormat::parse(s) {
+            Some(f) => opts.format = f,
+            None => {
+                eprintln!("--format {s:?}: expected snap | dimacs");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(s) = args.get("dup-policy") {
+        match DupPolicy::parse(s) {
+            Some(p) => opts.dup_policy = p,
+            None => {
+                eprintln!("--dup-policy {s:?}: expected error | keep-first | keep-last");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(s) = args.get("byte-budget") {
+        match s.parse::<u64>() {
+            Ok(b) => opts.byte_budget = Some(b),
+            Err(e) => {
+                eprintln!("--byte-budget {s:?}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    opts
+}
+
+/// Report-label-safe stem of an input path (alphanumerics, `-`, `_`).
+fn input_stem(path: &str) -> String {
+    let stem = std::path::Path::new(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "input".to_string());
+    let safe: String = stem
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect();
+    if safe.is_empty() { "input".to_string() } else { safe }
+}
+
+/// The ingest rows shared by the `--input` tables.
+fn ingest_table_rows(t: &mut Table, stats: &paf::graph::ingest::IngestStats) {
+    t.rowd(&["ingest format".to_string(), stats.format.to_string()]);
+    t.rowd(&["ingest dup policy".to_string(), stats.dup_policy.to_string()]);
+    t.rowd(&["ingest bytes read".to_string(), stats.bytes_read.to_string()]);
+    t.rowd(&["ingest peak bytes".to_string(), stats.peak_bytes.to_string()]);
+    t.rowd(&["ingest csr bytes".to_string(), stats.csr_bytes.to_string()]);
+    t.rowd(&["ingest duplicates".to_string(), stats.duplicates.to_string()]);
+    t.rowd(&["ingest self loops".to_string(), stats.self_loops.to_string()]);
+    t.rowd(&[
+        "ingest parse/build s".to_string(),
+        format!("{:.3}/{:.3}", stats.parse_s, stats.build_s),
+    ]);
+}
+
+/// `paf nearness --input`: stream the instance from disk, optionally
+/// restrict separation to a geometric neighborhood, solve, and emit the
+/// solver JSON with the schema-v5 `ingest` accounting object.
+fn cmd_nearness_input(args: &Args, path: &str) {
+    use paf::graph::ingest;
+    let mode = match args.get_or("mode", "onfind").as_str() {
+        "collect" => OracleMode::Collect,
+        _ => OracleMode::ProjectOnFind,
+    };
+    let clock = Stopwatch::new();
+    let out = match ingest::ingest_weighted(path, ingest_options(args)) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("--input {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let stats = out.stats;
+    println!(
+        "metric nearness (streamed): {path}: n={} m={} ({} lines, {} bytes, \
+         peak working set {} bytes, {:.1}s)",
+        stats.nodes, stats.edges, stats.lines, stats.bytes_read, stats.peak_bytes,
+        clock.elapsed_s()
+    );
+    // Geometric restriction: --coords + --geo-radius build a quad-tree
+    // edge scope around --geo-center (default: the coordinate centroid).
+    let mut scope = None;
+    if let Some(cpath) = args.get("coords") {
+        let coords = match ingest::node_coords(cpath, &out.ids) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--coords {cpath}: {e}");
+                std::process::exit(2);
+            }
+        };
+        if let Some(radius) = args.get("geo-radius") {
+            let radius: f64 = match radius.parse() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("--geo-radius {radius:?}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let center = match args.get("geo-center") {
+                Some(spec) => {
+                    let parts: Vec<&str> = spec.split(',').collect();
+                    let parsed: Option<(f64, f64)> = (parts.len() == 2)
+                        .then(|| Some((parts[0].trim().parse().ok()?, parts[1].trim().parse().ok()?)))
+                        .flatten();
+                    match parsed {
+                        Some(c) => c,
+                        None => {
+                            eprintln!("--geo-center {spec:?}: expected X,Y");
+                            std::process::exit(2);
+                        }
+                    }
+                }
+                None => {
+                    let n = coords.len().max(1) as f64;
+                    let (sx, sy) = coords
+                        .iter()
+                        .fold((0.0f64, 0.0f64), |(sx, sy), &(x, y)| (sx + x, sy + y));
+                    (sx / n, sy / n)
+                }
+            };
+            let s = ingest::neighborhood_scope(&out.inst.graph, &coords, &[center], radius);
+            println!(
+                "geo scope: center ({:.3}, {:.3}) radius {radius}: {}/{} edges in scope",
+                center.0,
+                center.1,
+                s.edges_in_scope(),
+                s.num_edges()
+            );
+            scope = Some(s);
+        } else {
+            println!("coords: {} nodes located (no --geo-radius: full separation)", coords.len());
+        }
+    } else if args.get("geo-radius").is_some() {
+        eprintln!("--geo-radius requires --coords");
+        std::process::exit(2);
+    }
+    let opts = solve_options(args);
+    let res = Nearness::new(&out.inst).mode(mode).scope(scope).solve(&opts);
+    let label = format!("SOLVE_nearness_{}", input_stem(path));
+    let _ = report::emit_json(
+        &label,
+        &report::solver_result_json_with_ingest(&label, &res.result, Some(&stats)),
+    );
+    let mut t = Table::new("metric nearness (streamed)", &["metric", "value"]);
+    t.rowd(&["input".to_string(), path.to_string()]);
+    t.rowd(&["nodes".to_string(), stats.nodes.to_string()]);
+    t.rowd(&["edges".to_string(), stats.edges.to_string()]);
+    ingest_table_rows(&mut t, &stats);
+    t.rowd(&["converged".to_string(), res.result.converged.to_string()]);
+    t.rowd(&["iterations".to_string(), res.result.iterations.to_string()]);
+    t.rowd(&["seconds".to_string(), report::fmt_time(res.result.seconds)]);
+    t.rowd(&["projections".to_string(), res.result.total_projections.to_string()]);
+    t.rowd(&["active constraints".to_string(), res.result.active_constraints.to_string()]);
+    t.rowd(&["objective".to_string(), format!("{:.6}", res.objective)]);
+    report::emit_table(&t, &format!("nearness_{}", input_stem(path)));
+}
+
 fn cmd_nearness(args: &Args, seed: u64) {
+    if let Some(path) = args.get("input").map(str::to_string) {
+        return cmd_nearness_input(args, &path);
+    }
     let n = args.get_parsed_or("n", 200usize);
     let gtype = args.get_parsed_or("graph-type", 1usize);
     let mode = match args.get_or("mode", "onfind").as_str() {
@@ -329,7 +505,56 @@ fn cmd_serve(args: &Args, seed: u64) {
     }
 }
 
+/// `paf cc --input`: stream a signed edge list from disk (the third
+/// column's sign labels each edge) and solve sparse correlation
+/// clustering over it, with ingest accounting in the solver JSON.
+fn cmd_cc_input(args: &Args, path: &str, seed: u64) {
+    use paf::graph::ingest;
+    let clock = Stopwatch::new();
+    let (sg, _ids, stats) = match ingest::ingest_signed(path, ingest_options(args)) {
+        Ok(out) => out,
+        Err(e) => {
+            eprintln!("--input {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let inst = CcInstance::from_signed(&sg);
+    println!(
+        "correlation clustering (streamed): {path}: n={} m={} ({} bytes, \
+         peak working set {} bytes, {:.1}s)",
+        stats.nodes, stats.edges, stats.bytes_read, stats.peak_bytes, clock.elapsed_s()
+    );
+    let mut opts = solve_options(args);
+    if args.get("max-iters").is_none() {
+        opts.max_iters = 300;
+    }
+    let res = Correlation::sparse(&inst)
+        .gamma(args.get_parsed_or("gamma", 1.0))
+        .seed(seed)
+        .solve(&opts);
+    let stem = input_stem(path);
+    let label = format!("SOLVE_cc_{stem}");
+    let _ = report::emit_json(
+        &label,
+        &report::solver_result_json_with_ingest(&label, &res.result, Some(&stats)),
+    );
+    let mut t = Table::new("correlation clustering (streamed)", &["metric", "value"]);
+    t.rowd(&["input".to_string(), path.to_string()]);
+    t.rowd(&["nodes".to_string(), stats.nodes.to_string()]);
+    t.rowd(&["edges".to_string(), stats.edges.to_string()]);
+    ingest_table_rows(&mut t, &stats);
+    t.rowd(&["converged".to_string(), res.result.converged.to_string()]);
+    t.rowd(&["iterations".to_string(), res.result.iterations.to_string()]);
+    t.rowd(&["seconds".to_string(), report::fmt_time(res.result.seconds)]);
+    t.rowd(&["approx ratio".to_string(), format!("{:.3}", res.approx_ratio)]);
+    t.rowd(&["active constraints".to_string(), res.result.active_constraints.to_string()]);
+    report::emit_table(&t, &format!("cc_{stem}"));
+}
+
 fn cmd_cc(args: &Args, seed: u64) {
+    if let Some(path) = args.get("input").map(str::to_string) {
+        return cmd_cc_input(args, &path, seed);
+    }
     let name = args.get_or("graph", "ca-grqc");
     let scale = args.get_parsed_or("scale", 0.05f64);
     let sparse = args.flag("sparse");

@@ -56,6 +56,19 @@
 //!   the worker pool against a snapshot of `x` while the engine drains
 //!   the current round's projection sweeps.
 //!
+//! An optional **edge scope** ([`MetricOracle::scope`], built by
+//! [`crate::graph::ingest::neighborhood_scope`] from a spatial index over
+//! node coordinates) restricts which edges may be *reported* as violated:
+//! out-of-scope edges are skipped in the radius computation and the
+//! violation check, so the separation frontier narrows to a geometric
+//! neighborhood. Shortest-path witnesses still run over the whole graph,
+//! so every emitted row remains a genuine MET(G) inequality — the scope
+//! never weakens a constraint, it only leaves out-of-scope violations
+//! unrepaired (by design: the solve is a *local* metric repair). The
+//! scope is fixed at construction, so the incremental cache stays sound:
+//! a rescan of a clean source reproduces its cached (scoped) rows
+//! exactly.
+//!
 //! The oracle also polices the non-metric faces of MET(G): `x ≥ 0` always,
 //! plus optional `x ≤ ub` box rows (correlation clustering's `Ax ≤ b`);
 //! these are the paper's never-forgotten "additional constraints" `L_a`,
@@ -75,6 +88,7 @@ use crate::core::oracle::{
     BoxKind, Oracle, OracleOutcome, OverlappableOracle, ProjectionSink,
 };
 use crate::graph::dijkstra::{dijkstra, dijkstra_auto, DijkstraScratch};
+use crate::graph::ingest::EdgeScope;
 use crate::graph::Graph;
 use crate::util::pool::parallel_map_chunks;
 use std::sync::Arc;
@@ -127,6 +141,12 @@ pub struct MetricOracle {
     /// Memory budget for the radius certificates (see
     /// [`DEFAULT_INCREMENTAL_BUDGET_NODES`]).
     pub incremental_budget_nodes: usize,
+    /// Optional geometric restriction: only in-scope edges are checked
+    /// for (and reported as) violations. Witness paths still use the
+    /// whole graph, so emitted rows stay valid MET(G) inequalities. Must
+    /// be set before the first separation round and not changed after —
+    /// the incremental cache assumes a fixed scope.
+    pub scope: Option<Arc<EdgeScope>>,
     cache: Option<ScanCache>,
     scratch: DijkstraScratch,
 }
@@ -214,11 +234,17 @@ fn rescan_source(
     src: usize,
     tol: f64,
     ball_cap: Option<usize>,
+    scope: Option<&EdgeScope>,
     scratch: &mut DijkstraScratch,
 ) -> SourceState {
+    let in_scope = |eid: u32| scope.map_or(true, |s| s.edge(eid as usize));
+    // Radius over *in-scope* incident edges only: out-of-scope edges are
+    // never checked for violations, so they must not inflate the bound.
     let mut radius = 0.0f64;
     for &(_, eid) in g.neighbors(src) {
-        radius = radius.max(w[eid as usize]);
+        if in_scope(eid) {
+            radius = radius.max(w[eid as usize]);
+        }
     }
     let mut st = SourceState { radius, ..SourceState::default() };
     if radius <= tol {
@@ -236,8 +262,9 @@ fn rescan_source(
     }
     dijkstra_auto(g, w, src, radius, scratch);
     for &(nb, eid) in g.neighbors(src) {
-        if (nb as usize) < src {
-            // Each undirected edge is scanned from its smaller endpoint.
+        if (nb as usize) < src || !in_scope(eid) {
+            // Each undirected edge is scanned from its smaller endpoint;
+            // out-of-scope edges are not candidates.
             continue;
         }
         let viol = w[eid as usize] - scratch.dist[nb as usize];
@@ -280,6 +307,7 @@ impl MetricOracle {
             shard_bucket: false,
             incremental: true,
             incremental_budget_nodes: DEFAULT_INCREMENTAL_BUDGET_NODES,
+            scope: None,
             cache: None,
             scratch: DijkstraScratch::new(n),
         }
@@ -324,14 +352,18 @@ impl MetricOracle {
         // Reused buffers: the shortest path and the constraint row.
         let mut path: Vec<u32> = Vec::new();
         let mut cons = Constraint::new(vec![], vec![], 0.0);
+        let scope = self.scope.clone();
+        let in_scope = |eid: u32| scope.as_deref().map_or(true, |s| s.edge(eid as usize));
         for src in 0..n {
-            // Radius bound: x_e ≤ w_e ≤ radius for every incident edge,
-            // so no violation can live past it — and a source whose
-            // radius is within the reporting tolerance has nothing to
-            // report at all.
+            // Radius bound: x_e ≤ w_e ≤ radius for every in-scope
+            // incident edge, so no reportable violation can live past it
+            // — and a source whose radius is within the reporting
+            // tolerance has nothing to report at all.
             let mut radius = 0.0f64;
             for &(_, eid) in g.neighbors(src) {
-                radius = radius.max(w[eid as usize]);
+                if in_scope(eid) {
+                    radius = radius.max(w[eid as usize]);
+                }
             }
             if radius <= self.report_tol {
                 continue;
@@ -340,8 +372,9 @@ impl MetricOracle {
             // projections this round may already have improved).
             dijkstra_auto(&g, &w, src, radius, &mut self.scratch);
             for &(nb, eid) in g.neighbors(src) {
-                // Each undirected edge is scanned from its smaller endpoint.
-                if (nb as usize) < src {
+                // Each undirected edge is scanned from its smaller
+                // endpoint; out-of-scope edges are not candidates.
+                if (nb as usize) < src || !in_scope(eid) {
                     continue;
                 }
                 let viol = sink.x()[eid as usize] - self.scratch.dist[nb as usize];
@@ -453,6 +486,7 @@ impl MetricOracle {
         let per_source_cap =
             if incremental && n > 0 { self.incremental_budget_nodes / n } else { 0 };
         let reach_ref = reach.as_ref();
+        let scope = self.scope.as_deref();
         let per_chunk: Vec<Vec<SourceScan>> = parallel_map_chunks(n, self.threads, |range| {
             let mut scratch = DijkstraScratch::new(n);
             let mut out: Vec<SourceScan> = Vec::with_capacity(range.len());
@@ -483,6 +517,7 @@ impl MetricOracle {
                     src,
                     tol,
                     incremental.then_some(per_source_cap),
+                    scope,
                     &mut scratch,
                 )));
             }
@@ -937,6 +972,50 @@ mod tests {
         shrunk[5] = 0.1; // edge (5, 6)
         let fourth = oracle.scan_cycles(&shrunk);
         assert_eq!(fourth.rescanned(), 2, "a local shrink must rescan only its endpoints");
+    }
+
+    #[test]
+    fn scoped_oracle_reports_only_in_scope_violations() {
+        // Triangle with one violated edge: (0,2) at 3.0 vs the two-hop
+        // path 0-1-2 of length 2.0.
+        let g = Arc::new(Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]));
+        let x = vec![1.0, 1.0, 3.0];
+        let full = MetricOracle::new(g.clone(), OracleMode::Collect);
+        assert_eq!(full.scan_cycles(&x).len(), 1);
+        // Masking the violated edge out of scope hides it...
+        let mut masked = MetricOracle::new(g.clone(), OracleMode::Collect);
+        masked.scope = Some(Arc::new(EdgeScope::from_edge_mask(vec![true, true, false])));
+        assert_eq!(masked.scan_cycles(&x).len(), 0);
+        // ...while an all-edges scope matches the unscoped oracle.
+        let mut all = MetricOracle::new(g, OracleMode::Collect);
+        all.scope = Some(Arc::new(EdgeScope::all(3)));
+        assert_eq!(all.scan_cycles(&x).len(), 1);
+    }
+
+    #[test]
+    fn scoped_solve_repairs_in_scope_only() {
+        // ProjectOnFind path: the scoped solve must fix the in-scope
+        // violation while leaving the out-of-scope edge untouched.
+        let g = Arc::new(Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3), (1, 3)]));
+        // Edge (0,2) violated (3 > 1+1); edge (1,3) violated (3 > 1+1).
+        let d = vec![1.0, 1.0, 3.0, 1.0, 3.0];
+        let f = DiagonalQuadratic::unweighted(d.clone());
+        let mut oracle = MetricOracle::new(g.clone(), OracleMode::ProjectOnFind);
+        // Scope admits everything except edge 4 = (1,3).
+        oracle.scope =
+            Some(Arc::new(EdgeScope::from_edge_mask(vec![true, true, true, true, false])));
+        let mut solver = Solver::new(
+            f,
+            SolverConfig { violation_tol: 1e-9, dual_tol: 1e-9, ..Default::default() },
+        );
+        let res = solver.solve(oracle);
+        assert!(res.converged);
+        // In-scope triangle 0-1-2 is repaired...
+        assert!(res.x[2] <= res.x[0] + res.x[1] + 1e-6, "{:?}", res.x);
+        assert!(res.x[2] < 3.0 - 1e-3, "in-scope violation untouched: {:?}", res.x);
+        // ...the out-of-scope edge keeps its input value (nonneg box
+        // aside, nothing projects it).
+        assert!((res.x[4] - 3.0).abs() < 1e-9, "out-of-scope edge moved: {:?}", res.x);
     }
 
     #[test]

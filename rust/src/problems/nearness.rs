@@ -16,6 +16,7 @@ use crate::core::problem::{
 use crate::core::session::Session;
 use crate::core::solver::SolverResult;
 use crate::graph::generators::WeightedInstance;
+use crate::graph::ingest::EdgeScope;
 use crate::graph::Graph;
 use std::sync::Arc;
 
@@ -38,6 +39,9 @@ pub struct Nearness<'a> {
     /// Dirty-source incremental separation (Collect mode; identical
     /// findings, rescans only moved sources).
     incremental: bool,
+    /// Optional geometric edge scope for the oracle (local metric
+    /// repair; see [`MetricOracle::scope`]).
+    scope: Option<Arc<EdgeScope>>,
 }
 
 impl<'a> Nearness<'a> {
@@ -47,6 +51,7 @@ impl<'a> Nearness<'a> {
             norm_weights: None,
             mode: OracleMode::ProjectOnFind,
             incremental: true,
+            scope: None,
         }
     }
 
@@ -70,6 +75,15 @@ impl<'a> Nearness<'a> {
         self
     }
 
+    /// Restrict the oracle's separation to an edge scope (geometric
+    /// neighborhood repair; built by
+    /// [`crate::graph::ingest::neighborhood_scope`]). Out-of-scope edges
+    /// keep their input values apart from the `x ≥ 0` box.
+    pub fn scope(mut self, scope: Option<Arc<EdgeScope>>) -> Self {
+        self.scope = scope;
+        self
+    }
+
     /// One-shot convenience: solve this instance alone.
     pub fn solve(self, opts: &SolveOptions) -> NearnessResult {
         Session::solve_one(opts.clone(), self)
@@ -86,6 +100,7 @@ impl<'a> Problem<'a> for Nearness<'a> {
         let mut oracle = MetricOracle::new(Arc::new(self.inst.graph.clone()), self.mode);
         oracle.report_tol = (opts.violation_tol * 1e-3).max(1e-12);
         oracle.incremental = self.incremental;
+        oracle.scope = self.scope.clone();
         // Shard-bucketed delivery helps exactly when the sharded engine
         // consumes it; sequential solves keep the historical slot order.
         oracle.shard_bucket = matches!(opts.sweep, SweepStrategy::ShardedParallel { .. });

@@ -5,6 +5,7 @@
 //! oracle/sweep/forget timing breakdown).
 
 use crate::core::solver::SolverResult;
+use crate::graph::ingest::IngestStats;
 use crate::util::table::{Series, Table};
 
 /// Where reports land (`$PAF_REPORT_DIR`, default `reports/`).
@@ -33,13 +34,26 @@ pub fn emit_series(s: &Series, basename: &str) {
 /// `failed`, `retries`, `recovered`, `error`; top-level `recovered`,
 /// `shed`, `retried`, `failed`, `crashed`; and the `recovered` / `shed`
 /// / `retried` / `quarantined` event kinds (additive).
-pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 4;
+/// v5: solver-result documents may carry an additive `ingest` object
+/// (disk-streamed inputs only: format, dup policy, line/byte/record
+/// counts, peak working-set and CSR byte accounting, parse/build times).
+pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 5;
 
 /// Serialise a [`SolverResult`] (with its per-phase timing breakdown
 /// and, when recorded, the full per-iteration trace) as JSON. `label`
 /// identifies the run; it must not contain `"` or `\` (the emitter does
 /// no escaping — labels are code-controlled).
 pub fn solver_result_json(label: &str, r: &SolverResult) -> String {
+    solver_result_json_with_ingest(label, r, None)
+}
+
+/// [`solver_result_json`] with the optional schema-v5 `ingest` object
+/// for disk-streamed inputs ([`crate::graph::ingest`] byte accounting).
+pub fn solver_result_json_with_ingest(
+    label: &str,
+    r: &SolverResult,
+    ingest: Option<&IngestStats>,
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str(&format!("  \"schema_version\": {SOLVER_JSON_SCHEMA_VERSION},\n"));
@@ -53,6 +67,27 @@ pub fn solver_result_json(label: &str, r: &SolverResult) -> String {
         "  \"phases\": {{\"oracle_s\": {:.9}, \"sweep_s\": {:.9}, \"forget_s\": {:.9}}},\n",
         r.phases.oracle_s, r.phases.sweep_s, r.phases.forget_s
     ));
+    if let Some(s) = ingest {
+        out.push_str(&format!(
+            "  \"ingest\": {{\"format\": \"{}\", \"dup_policy\": \"{}\", \"lines\": {}, \
+             \"bytes_read\": {}, \"parsed_edges\": {}, \"self_loops\": {}, \
+             \"duplicates\": {}, \"nodes\": {}, \"edges\": {}, \"peak_bytes\": {}, \
+             \"csr_bytes\": {}, \"parse_s\": {:.9}, \"build_s\": {:.9}}},\n",
+            s.format,
+            s.dup_policy,
+            s.lines,
+            s.bytes_read,
+            s.parsed_edges,
+            s.self_loops,
+            s.duplicates,
+            s.nodes,
+            s.edges,
+            s.peak_bytes,
+            s.csr_bytes,
+            s.parse_s,
+            s.build_s
+        ));
+    }
     out.push_str("  \"trace\": [\n");
     for (k, it) in r.trace.iter().enumerate() {
         out.push_str(&format!(
@@ -179,5 +214,30 @@ mod tests {
             Some(crate::runtime::json::Json::Num(v)) => assert!((v - 0.5).abs() < 1e-12),
             other => panic!("missing max_violation: {other:?}"),
         }
+        // No ingest object unless one is supplied.
+        assert!(json.get("ingest").is_none());
+        let stats = IngestStats {
+            format: "snap",
+            dup_policy: "keep-first",
+            lines: 10,
+            bytes_read: 200,
+            parsed_edges: 8,
+            self_loops: 1,
+            duplicates: 1,
+            nodes: 5,
+            edges: 7,
+            peak_bytes: 4096,
+            csr_bytes: 1024,
+            parse_s: 0.001,
+            build_s: 0.002,
+        };
+        let text = solver_result_json_with_ingest("unit-ingest", &r, Some(&stats));
+        let json = crate::runtime::json::Json::parse(&text).expect("invalid ingest JSON");
+        let ing = json.get("ingest").expect("ingest object");
+        assert_eq!(ing.get("format").and_then(|v| v.as_str()), Some("snap"));
+        assert_eq!(ing.get("dup_policy").and_then(|v| v.as_str()), Some("keep-first"));
+        assert_eq!(ing.get("peak_bytes").and_then(|v| v.as_usize()), Some(4096));
+        assert_eq!(ing.get("nodes").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(ing.get("edges").and_then(|v| v.as_usize()), Some(7));
     }
 }

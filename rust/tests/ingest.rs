@@ -1,0 +1,263 @@
+//! Streaming-ingest integration suite (PR-8 tentpole).
+//!
+//! Pins the subsystem's load-bearing contract: the two-pass streaming
+//! CSR builder is **bit-identical** to the legacy in-memory reader on
+//! every input both accept — same compacted graph, same weights, and
+//! therefore the same `SolverResult` on a nearness solve — while also
+//! handling what the legacy reader cannot: DIMACS files, u64 ids above
+//! `u32::MAX`, explicit duplicate policies, byte budgets, line-numbered
+//! parse errors, and disk-generated instances at n ≥ 10⁵.
+//!
+//! Runs with cwd = the `rust/` package root, so fixture paths are
+//! `tests/fixtures/...`.
+
+use paf::core::problem::SolveOptions;
+use paf::graph::generators::WeightedInstance;
+use paf::graph::ingest::{
+    self, neighborhood_scope, DupPolicy, EdgeScope, IngestFormat, IngestOptions,
+};
+use paf::graph::io::{read_edge_list, read_edge_list_with};
+use paf::problems::metric_oracle::{MetricOracle, OracleMode};
+use paf::problems::nearness::Nearness;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const SMALL: &str = "tests/fixtures/ingest_small.tsv";
+const DUP: &str = "tests/fixtures/ingest_dup.tsv";
+const SIGNED: &str = "tests/fixtures/ingest_signed.tsv";
+const GRID_GR: &str = "tests/fixtures/grid.gr";
+const GRID_CO: &str = "tests/fixtures/grid.co";
+
+fn tmp(name: &str, contents: &str) -> PathBuf {
+    let path = std::env::temp_dir().join(format!("paf_ingest_{name}_{}", std::process::id()));
+    std::fs::write(&path, contents).unwrap();
+    path
+}
+
+fn assert_same_instance(a: &WeightedInstance, b: &WeightedInstance, label: &str) {
+    assert_eq!(a.graph.num_nodes(), b.graph.num_nodes(), "{label}: node count");
+    assert_eq!(a.graph.edges(), b.graph.edges(), "{label}: edge list");
+    assert_eq!(a.weights, b.weights, "{label}: weights (bitwise)");
+}
+
+#[test]
+fn streaming_matches_legacy_reader_bitwise() {
+    for path in [SMALL, DUP, SIGNED] {
+        let legacy = read_edge_list(path).unwrap();
+        let streamed = ingest::ingest_weighted(path, IngestOptions::default()).unwrap();
+        assert_same_instance(&legacy, &streamed.inst, path);
+        // The id table is the legacy compaction: sorted raw ids.
+        let mut sorted = streamed.ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(streamed.ids, sorted, "{path}: id table not sorted");
+    }
+}
+
+#[test]
+fn streaming_and_legacy_solve_identically() {
+    let legacy = read_edge_list(SMALL).unwrap();
+    let streamed = ingest::ingest_weighted(SMALL, IngestOptions::default()).unwrap();
+    let opts = SolveOptions { violation_tol: 1e-8, dual_tol: 1e-8, ..SolveOptions::default() };
+    let a = Nearness::new(&legacy).solve(&opts);
+    let b = Nearness::new(&streamed.inst).solve(&opts);
+    assert!(a.result.converged && b.result.converged);
+    assert_eq!(a.result.x, b.result.x, "solver outputs diverged (bitwise)");
+    assert_eq!(a.result.iterations, b.result.iterations);
+    assert_eq!(a.result.total_projections, b.result.total_projections);
+}
+
+#[test]
+fn dup_policies_match_legacy_and_each_other() {
+    // KeepFirst is the legacy default: first file-order weight wins.
+    let legacy = read_edge_list(DUP).unwrap();
+    let first = ingest::ingest_weighted(DUP, IngestOptions::default()).unwrap();
+    assert_same_instance(&legacy, &first.inst, "keep-first vs legacy");
+    assert_eq!(first.stats.duplicates, 2);
+
+    let last = ingest::ingest_weighted(
+        DUP,
+        IngestOptions { dup_policy: DupPolicy::KeepLast, ..IngestOptions::default() },
+    )
+    .unwrap();
+    // Same structure, different surviving weights on the dup edges.
+    assert_eq!(first.inst.graph.edges(), last.inst.graph.edges());
+    assert_ne!(first.inst.weights, last.inst.weights);
+    // And KeepLast agrees with the legacy reader under the same policy.
+    let legacy_last = read_edge_list_with(DUP, DupPolicy::KeepLast).unwrap();
+    assert_same_instance(&legacy_last, &last.inst, "keep-last vs legacy");
+
+    let err = ingest::ingest_weighted(
+        DUP,
+        IngestOptions { dup_policy: DupPolicy::Error, ..IngestOptions::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("duplicate"), "unhelpful error: {err}");
+    assert!(err.contains('1') && err.contains('2'), "should name raw ids: {err}");
+}
+
+#[test]
+fn crlf_and_whitespace_are_tolerated() {
+    // Written via std::fs at test time (committing CRLF fixtures risks
+    // git newline normalization).
+    let path = tmp("crlf", "# header\r\n1 2 1.5\r\n\r\n  2   3\t2.5  \r\n3 1 2.0\r\n");
+    let streamed = ingest::ingest_weighted(&path, IngestOptions::default()).unwrap();
+    assert_eq!(streamed.inst.graph.num_nodes(), 3);
+    assert_eq!(streamed.inst.graph.num_edges(), 3);
+    assert_eq!(streamed.inst.weights, vec![1.5, 2.0, 2.5]);
+    // The legacy reader agrees on the same bytes.
+    let legacy = read_edge_list(&path).unwrap();
+    assert_same_instance(&legacy, &streamed.inst, "crlf");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn u64_ids_above_u32_max_are_not_truncated() {
+    // 4294967297 = 2^32 + 1 truncates to 1 in u32 — which would turn
+    // this edge into a self-loop and silently drop it.
+    let path = tmp("bigid", "4294967297 1 2.0\n");
+    let streamed = ingest::ingest_weighted(&path, IngestOptions::default()).unwrap();
+    assert_eq!(streamed.inst.graph.num_nodes(), 2, "id was truncated");
+    assert_eq!(streamed.inst.graph.num_edges(), 1);
+    assert_eq!(streamed.ids, vec![1, 4294967297]);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn malformed_lines_report_line_numbers() {
+    let path = tmp("badline", "1 2 1.0\n2 3 2.0\n3 x 1.0\n");
+    let err = ingest::ingest_weighted(&path, IngestOptions::default()).unwrap_err().to_string();
+    assert!(err.contains(":3:"), "missing line number: {err}");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn empty_and_comment_only_files_ingest_cleanly() {
+    for (name, contents) in [("empty", ""), ("comments", "# nothing\n# here\n\n")] {
+        let path = tmp(name, contents);
+        let streamed = ingest::ingest_weighted(&path, IngestOptions::default()).unwrap();
+        assert_eq!(streamed.inst.graph.num_nodes(), 0, "{name}");
+        assert_eq!(streamed.inst.graph.num_edges(), 0, "{name}");
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+#[test]
+fn dimacs_grid_parses_and_collapses_reverse_arcs() {
+    let opts = IngestOptions { format: IngestFormat::Dimacs, ..IngestOptions::default() };
+    let out = ingest::ingest_weighted(GRID_GR, opts).unwrap();
+    assert_eq!(out.inst.graph.num_nodes(), 9);
+    // 13 undirected edges (12 grid + diagonal); each had a reverse arc.
+    assert_eq!(out.inst.graph.num_edges(), 13);
+    assert_eq!(out.stats.duplicates, 13);
+    assert_eq!(out.stats.parsed_edges, 26);
+    // Oracle sees exactly one violation: the diagonal (nodes 1, 5 =
+    // ranks 0, 4) at 9 vs the unit rim path of length 2.
+    let oracle =
+        MetricOracle::new(Arc::new(out.inst.graph.clone()), OracleMode::Collect);
+    assert_eq!(oracle.scan_cycles(&out.inst.weights).len(), 1);
+}
+
+#[test]
+fn geo_scope_gates_the_dimacs_violation() {
+    let opts = IngestOptions { format: IngestFormat::Dimacs, ..IngestOptions::default() };
+    let out = ingest::ingest_weighted(GRID_GR, opts).unwrap();
+    let coords = ingest::node_coords(GRID_CO, &out.ids).unwrap();
+    let g = Arc::new(out.inst.graph.clone());
+
+    // Radius 1.5 around the origin covers nodes {1, 2, 4, 5} (node 5 at
+    // distance √2): the violated diagonal (1, 5) is in scope.
+    let wide = neighborhood_scope(&g, &coords, &[(0.0, 0.0)], 1.5);
+    let mut oracle = MetricOracle::new(g.clone(), OracleMode::Collect);
+    oracle.scope = Some(wide.clone());
+    assert_eq!(oracle.scan_cycles(&out.inst.weights).len(), 1, "diagonal should be in scope");
+
+    // Radius 1.2 covers only {1, 2, 4}: the diagonal's far endpoint is
+    // outside, so the scoped oracle reports nothing.
+    let narrow = neighborhood_scope(&g, &coords, &[(0.0, 0.0)], 1.2);
+    assert!(narrow.edges_in_scope() < wide.edges_in_scope());
+    let mut oracle = MetricOracle::new(g.clone(), OracleMode::Collect);
+    oracle.scope = Some(narrow);
+    assert_eq!(oracle.scan_cycles(&out.inst.weights).len(), 0, "diagonal leaked into scope");
+
+    // A scoped nearness solve converges while leaving the out-of-scope
+    // diagonal untouched.
+    let mask: Vec<bool> = g
+        .edges()
+        .iter()
+        .map(|&(u, v)| u as usize != 0 || v as usize != 4)
+        .collect();
+    let scope = Arc::new(EdgeScope::from_edge_mask(mask));
+    let opts = SolveOptions { violation_tol: 1e-8, dual_tol: 1e-8, ..SolveOptions::default() };
+    let res = Nearness::new(&out.inst).scope(Some(scope)).solve(&opts);
+    assert!(res.result.converged);
+    let diag = g.edge_between(0, 4).unwrap() as usize;
+    assert_eq!(res.result.x[diag], out.inst.weights[diag], "out-of-scope edge moved");
+}
+
+#[test]
+fn byte_budget_is_enforced() {
+    let err = ingest::ingest_weighted(
+        SMALL,
+        IngestOptions { byte_budget: Some(64), ..IngestOptions::default() },
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("budget"), "unhelpful error: {err}");
+    // A generous budget succeeds and reports a peak within it.
+    let out = ingest::ingest_weighted(
+        SMALL,
+        IngestOptions { byte_budget: Some(1 << 20), ..IngestOptions::default() },
+    )
+    .unwrap();
+    assert!(out.stats.peak_bytes > 0 && out.stats.peak_bytes <= 1 << 20);
+}
+
+#[test]
+fn generated_instance_at_1e5_streams_under_accounting() {
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let edges = dir.join(format!("paf_ingest_gen_{pid}.tsv"));
+    let coords = dir.join(format!("paf_ingest_gen_{pid}.co"));
+    let info = ingest::write_geometric_instance(&edges, Some(&coords), 100_000, 42).unwrap();
+    assert!(info.nodes >= 100_000);
+    assert!(info.violated_shortcuts > 0);
+    let out = ingest::ingest_weighted(&edges, IngestOptions::default()).unwrap();
+    assert_eq!(out.inst.graph.num_nodes(), info.nodes);
+    assert_eq!(out.inst.graph.num_edges(), info.edges, "generator writes no duplicates");
+    assert_eq!(out.stats.duplicates, 0);
+    assert!(out.stats.peak_bytes > 0);
+    assert!(out.stats.csr_bytes > 0);
+    // Coordinates resolve for every node (raw ids are scrambled u64s).
+    let c = ingest::node_coords(&coords, &out.ids).unwrap();
+    assert_eq!(c.len(), info.nodes);
+    let _ = std::fs::remove_file(edges);
+    let _ = std::fs::remove_file(coords);
+}
+
+#[test]
+fn generated_instance_solves_scoped() {
+    // Small enough to solve in-test: a 50×50 grid with injected
+    // violations, repaired inside a geometric neighborhood.
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let edges = dir.join(format!("paf_ingest_solve_{pid}.tsv"));
+    let coords_p = dir.join(format!("paf_ingest_solve_{pid}.co"));
+    let info = ingest::write_geometric_instance(&edges, Some(&coords_p), 2_500, 7).unwrap();
+    assert!(info.violated_shortcuts > 0);
+    let out = ingest::ingest_weighted(&edges, IngestOptions::default()).unwrap();
+    let coords = ingest::node_coords(&coords_p, &out.ids).unwrap();
+    let g = Arc::new(out.inst.graph.clone());
+    // A neighborhood around the grid center.
+    let scope = neighborhood_scope(&g, &coords, &[(25.0, 25.0)], 12.0);
+    assert!(scope.edges_in_scope() > 0);
+    assert!(scope.edges_in_scope() < scope.num_edges());
+    let opts = SolveOptions { violation_tol: 1e-6, dual_tol: 1e-6, ..SolveOptions::default() };
+    let res = Nearness::new(&out.inst)
+        .mode(OracleMode::Collect)
+        .scope(Some(scope))
+        .solve(&opts);
+    assert!(res.result.converged, "scoped solve did not converge");
+    let _ = std::fs::remove_file(edges);
+    let _ = std::fs::remove_file(coords_p);
+}
