@@ -34,6 +34,11 @@
 //!       capture (what `--checkpoint-every` pays per running job), the
 //!       wire encoding, the atomic durable write, and recovery
 //!       load+decode
+//!   P12 observability overhead: the same Collect nearness solve with
+//!       instrumentation off, with span tracing on (`obs/spans`), and
+//!       with per-round convergence telemetry on (`obs/telemetry`) —
+//!       the iterates must stay bit-identical across all three; only
+//!       the recording cost may differ
 //!   P11 streaming ingestion: a sparse geometric instance written to
 //!       disk once, then each ingest stage in isolation — edge-list
 //!       parse throughput, the two-pass bounded-memory CSR build (with
@@ -583,6 +588,51 @@ fn main() {
         }));
 
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // P12: observability overhead. One Collect nearness solve (a real
+    // multi-round trajectory with late low-movement rounds, so the span
+    // volume matches production) under three regimes: instrumentation
+    // fully off, span tracing on, and per-round telemetry on. Tracing
+    // and telemetry are pure observation — the solves must stay
+    // bit-identical — so this axis IS the overhead story the README
+    // quotes.
+    {
+        let mut rng = Rng::new(61);
+        let inst = type1_complete(ctx.scaled(160), &mut rng);
+        let opts = SolveOptions::new().violation_tol(1e-4).record_trace(false);
+        let mut x_ref: Option<Vec<f64>> = None;
+        for (label, spans, telemetry) in
+            [("off", false, 0usize), ("spans", true, 0), ("telemetry", false, 1)]
+        {
+            paf::obs::set_spans_enabled(spans);
+            let mut frames = 0usize;
+            all.push(ctx.bench(&format!("P12/obs/{label}"), |_| {
+                let res = Nearness::new(&inst)
+                    .mode(OracleMode::Collect)
+                    .solve(&opts.clone().telemetry_every(telemetry));
+                assert!(res.result.converged, "obs/{label} did not converge");
+                frames = res.result.telemetry.len();
+                match &x_ref {
+                    None => x_ref = Some(res.result.x.clone()),
+                    Some(want) => assert_eq!(
+                        want, &res.result.x,
+                        "obs/{label}: instrumentation perturbed the iterates"
+                    ),
+                }
+                res
+            }));
+            if telemetry > 0 {
+                println!("    -> {frames} telemetry frames sampled ({label})");
+            }
+        }
+        let spans: usize =
+            paf::obs::snapshot_threads().iter().map(|t| t.spans.len()).sum();
+        println!("    -> {spans} spans recorded during the obs/spans runs");
+        // Back to the env-driven default for anything after this bench.
+        paf::obs::set_spans_enabled(
+            std::env::var("PAF_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false),
+        );
     }
 
     if let Err(e) = ctx.write_json("perf_hotpath", &all) {

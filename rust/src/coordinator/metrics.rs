@@ -1,37 +1,12 @@
 //! Run-level metrics: per-iteration RSS sampling and run summaries used
 //! by the Table 2/3 memory columns and EXPERIMENTS.md.
+//!
+//! The memory probes moved to [`crate::obs::clock`] with the rest of
+//! the timing plumbing; they are re-exported here for existing callers.
 
 use crate::core::solver::SolverResult;
-use crate::util::timer::{current_rss_bytes, peak_rss_bytes};
 
-/// Memory probe taken around a solve.
-#[derive(Debug, Clone, Copy)]
-pub struct MemoryProbe {
-    pub before_rss: u64,
-    pub after_rss: u64,
-    pub peak_rss: u64,
-}
-
-impl MemoryProbe {
-    pub fn start() -> MemoryProbeGuard {
-        MemoryProbeGuard { before: current_rss_bytes() }
-    }
-}
-
-/// RAII-ish guard: call `finish()` after the solve.
-pub struct MemoryProbeGuard {
-    before: u64,
-}
-
-impl MemoryProbeGuard {
-    pub fn finish(self) -> MemoryProbe {
-        MemoryProbe {
-            before_rss: self.before,
-            after_rss: current_rss_bytes(),
-            peak_rss: peak_rss_bytes(),
-        }
-    }
-}
+pub use crate::obs::clock::{MemoryProbe, MemoryProbeGuard};
 
 /// Compact run summary (one table row).
 #[derive(Debug, Clone)]
@@ -56,20 +31,5 @@ impl RunSummary {
             active_constraints: r.active_constraints,
             peak_rss: mem.peak_rss,
         }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn probe_reads_positive_rss() {
-        let guard = MemoryProbe::start();
-        let _ballast: Vec<u8> = vec![1; 8 << 20];
-        let probe = guard.finish();
-        assert!(probe.before_rss > 0);
-        assert!(probe.after_rss > 0);
-        assert!(probe.peak_rss >= probe.after_rss / 2);
     }
 }

@@ -88,6 +88,7 @@ mod tests {
                 .collect(),
             seconds: 0.0,
             phases: Default::default(),
+            telemetry: Vec::new(),
         }
     }
 

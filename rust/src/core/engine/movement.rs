@@ -158,6 +158,13 @@ impl MovementTracker {
         self.log.len()
     }
 
+    /// Total marks ever appended (the cursor space). Telemetry diffs
+    /// this across a round for the moved-coordinate fraction; dedup is
+    /// per epoch, so it slightly over-counts across epochs.
+    pub fn marks(&self) -> u64 {
+        self.appended
+    }
+
     /// Override the log budget (tests; the default is
     /// [`DEFAULT_MOVEMENT_LOG_CAPACITY`]).
     pub fn set_capacity(&mut self, capacity: usize) {

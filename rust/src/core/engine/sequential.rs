@@ -55,6 +55,7 @@ impl SequentialSweep {
         mut tracker: Option<&mut MovementTracker>,
         mut record: impl FnMut(u32, f64),
     ) -> SweepStats {
+        let mut shard_span = crate::obs::span(crate::obs::SpanKind::Shard);
         let mut stats = SweepStats { shards: 1, ..SweepStats::default() };
         stats.rows_projected = active.len();
         for r in 0..active.len() {
@@ -67,6 +68,9 @@ impl SequentialSweep {
                     t.mark_slice(active.view(r).indices);
                 }
             }
+        }
+        if let Some(g) = shard_span.as_mut() {
+            g.counts(stats.rows_projected as u64, stats.projections as u64);
         }
         stats
     }
@@ -83,6 +87,7 @@ impl SequentialSweep {
         tracker: &mut MovementTracker,
         mut record: impl FnMut(u32, f64),
     ) -> SweepStats {
+        let mut shard_span = crate::obs::span(crate::obs::SpanKind::Shard);
         let lazy = &mut self.lazy;
         let allow_skip = lazy.begin_sweep(active, x.len(), tracker);
         let mut stats = SweepStats { shards: 1, ..SweepStats::default() };
@@ -105,6 +110,9 @@ impl SequentialSweep {
             }
         }
         lazy.end_sweep(tracker);
+        if let Some(g) = shard_span.as_mut() {
+            g.counts(stats.rows_projected as u64, stats.projections as u64);
+        }
         stats
     }
 }

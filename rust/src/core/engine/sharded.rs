@@ -109,6 +109,8 @@ impl ShardedSweep {
         let mut stats = SweepStats::default();
         let plan = &self.plan;
         for shard in &plan.shards {
+            let mut shard_span = crate::obs::span(crate::obs::SpanKind::Shard);
+            let proj_before = stats.projections;
             stats.shards += 1;
             stats.rows_projected += shard.len();
             if threads > 1 && shard.len() >= parallel_min {
@@ -154,10 +156,15 @@ impl ShardedSweep {
                     }
                 }
             }
+            if let Some(g) = shard_span.as_mut() {
+                g.counts(shard.len() as u64, (stats.projections - proj_before) as u64);
+            }
         }
         // Tail rows (conflict chains past the shard cap): plain
         // Gauss–Seidel, exact by construction.
         if !plan.tail.is_empty() {
+            let mut shard_span = crate::obs::span(crate::obs::SpanKind::Shard);
+            let proj_before = stats.projections;
             stats.shards += 1;
             stats.rows_projected += plan.tail.len();
             for &r in &plan.tail {
@@ -170,6 +177,9 @@ impl ShardedSweep {
                         t.mark_slice(active.view(r as usize).indices);
                     }
                 }
+            }
+            if let Some(g) = shard_span.as_mut() {
+                g.counts(plan.tail.len() as u64, (stats.projections - proj_before) as u64);
             }
         }
         stats
@@ -207,6 +217,8 @@ impl ShardedSweep {
         let mut visit: Vec<u32> = Vec::new();
         let mut pairs: Vec<(u32, f64)> = Vec::new();
         for shard in &plan.shards {
+            let mut shard_span = crate::obs::span(crate::obs::SpanKind::Shard);
+            let proj_before = stats.projections;
             stats.shards += 1;
             visit.clear();
             if allow_skip {
@@ -268,8 +280,13 @@ impl ShardedSweep {
                     lazy.note_moved(active.view(r).indices);
                 }
             }
+            if let Some(g) = shard_span.as_mut() {
+                g.counts(visit.len() as u64, (stats.projections - proj_before) as u64);
+            }
         }
         if !plan.tail.is_empty() {
+            let mut shard_span = crate::obs::span(crate::obs::SpanKind::Shard);
+            let proj_before = stats.projections;
             stats.shards += 1;
             for &r32 in &plan.tail {
                 let r = r32 as usize;
@@ -287,6 +304,9 @@ impl ShardedSweep {
                     tracker.mark_slice(active.view(r).indices);
                     lazy.note_moved(active.view(r).indices);
                 }
+            }
+            if let Some(g) = shard_span.as_mut() {
+                g.counts(plan.tail.len() as u64, (stats.projections - proj_before) as u64);
             }
         }
         lazy.end_sweep(tracker);

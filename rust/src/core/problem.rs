@@ -87,6 +87,10 @@ pub struct SolveOptions {
     /// engine auto-falls back to eager sweeps when movement tracking is
     /// unavailable (e.g. the PJRT batch executor).
     pub lazy_sweep: bool,
+    /// Sample a convergence-telemetry frame every N rounds (0 = off).
+    /// Observation only — frames are computed from state the round
+    /// already produced, so results are bit-identical either way.
+    pub telemetry_every: usize,
 }
 
 impl Default for SolveOptions {
@@ -104,6 +108,7 @@ impl Default for SolveOptions {
             overlap: false,
             track_movement: true,
             lazy_sweep: default_lazy_sweep(),
+            telemetry_every: 0,
         }
     }
 }
@@ -196,6 +201,12 @@ impl SolveOptions {
         self
     }
 
+    /// Sample convergence telemetry every `n` rounds (0 disables).
+    pub fn telemetry_every(mut self, n: usize) -> Self {
+        self.telemetry_every = n;
+        self
+    }
+
     /// The per-block [`SolverConfig`] these options induce;
     /// `inner_sweeps_default` is the problem's structural default, used
     /// when the options leave `inner_sweeps` unset.
@@ -212,6 +223,7 @@ impl SolveOptions {
             parallel_min_rows: self.parallel_min_rows,
             track_movement: self.track_movement,
             lazy_sweep: self.lazy_sweep,
+            telemetry_every: self.telemetry_every,
         }
     }
 }
@@ -613,6 +625,8 @@ mod tests {
         assert_eq!(cfg.sweep, SweepStrategy::ShardedParallel { threads: 3 });
         assert!(cfg.lazy_sweep, "lazy sweeps default on");
         assert!(!opts.clone().lazy_sweep(false).solver_config(2).lazy_sweep);
+        assert_eq!(cfg.telemetry_every, 0, "telemetry defaults off");
+        assert_eq!(opts.clone().telemetry_every(3).solver_config(2).telemetry_every, 3);
     }
 
     #[test]

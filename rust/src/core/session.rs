@@ -59,6 +59,7 @@ use super::problem::{
 use super::solver::{
     round_verdict, IterStats, PhaseTimes, RoundVerdict, Solver, SolverConfig, SolverResult,
 };
+use crate::obs::{self, TelemetryFrame};
 use crate::util::Stopwatch;
 use std::any::Any;
 use std::ops::Range;
@@ -109,6 +110,9 @@ struct VectorBlock<'a> {
     projections: usize,
     last_dual_movement: f64,
     trace: Vec<IterStats>,
+    /// Sampled convergence frames (fleet-wide quantities in multi-block
+    /// sessions — see [`Solver::telemetry_frame`]).
+    telemetry: Vec<TelemetryFrame>,
     phases: PhaseTimes,
     /// Captured at finalize (checkpoint/resume re-interprets from it).
     result: Option<SolverResult>,
@@ -507,6 +511,7 @@ impl<'a> Session<'a> {
                     projections: 0,
                     last_dual_movement: f64::INFINITY,
                     trace: Vec::new(),
+                    telemetry: Vec::new(),
                     phases: PhaseTimes::default(),
                     result: None,
                 });
@@ -781,6 +786,9 @@ impl<'a> Session<'a> {
         let solver = self.solver.as_mut().expect("vector fleet not built");
         let record_trace = self.opts.record_trace;
         let round_clock = Stopwatch::new();
+        let marks_before = solver.movement().marks();
+        let evictions_before = solver.forget_evictions;
+        let mut round_span = obs::span(obs::SpanKind::Round);
 
         // Phase 1: separation oracles, block by block. Each block's
         // deliveries touch only its own coordinates, so block order is
@@ -875,6 +883,13 @@ impl<'a> Session<'a> {
         let rows_projected = solver.sweep_rows_projected - rows_before.0;
         let rows_skipped = solver.sweep_rows_skipped - rows_before.1;
         let remembered_per = rows_per_block(solver, &self.offsets);
+        if let Some(g) = round_span.as_mut() {
+            g.counts(
+                outcomes.iter().flatten().map(|o| o.found as u64).sum::<u64>(),
+                remembered_per.iter().sum::<usize>() as u64,
+            );
+        }
+        drop(round_span);
 
         // Per-block bookkeeping + the shared stop rule.
         let seconds = round_clock.elapsed_s();
@@ -906,6 +921,15 @@ impl<'a> Session<'a> {
                     rows_projected,
                     rows_skipped,
                 });
+            }
+            if solver.telemetry_due(b.iterations) {
+                b.telemetry.push(solver.telemetry_frame(
+                    b.iterations,
+                    &outcome,
+                    rows_before,
+                    marks_before,
+                    evictions_before,
+                ));
             }
             b.iterations += 1;
             agg.found += outcome.found;
@@ -980,6 +1004,9 @@ impl<'a> Session<'a> {
         let scan = self.pending.take().unwrap();
         let proj_before = solver.projections;
         let rows_before = (solver.sweep_rows_projected, solver.sweep_rows_skipped);
+        let marks_before = solver.movement().marks();
+        let evictions_before = solver.forget_evictions;
+        let mut round_span = obs::span(obs::SpanKind::Round);
         let prev = self.prev_dual_movement;
         let (round, next_scan) =
             solver.overlapped_round(oracle, scan, self.shadow.as_mut().unwrap(), prev);
@@ -987,6 +1014,10 @@ impl<'a> Session<'a> {
         b.projections += proj_round;
         b.last_dual_movement = solver.last_dual_movement;
         b.phases.accumulate(&round.phases);
+        if let Some(g) = round_span.as_mut() {
+            g.counts(round.outcome.found as u64, round.remembered as u64);
+        }
+        drop(round_span);
         let seconds = round_clock.elapsed_s();
         if record_trace {
             b.trace.push(IterStats {
@@ -1003,6 +1034,15 @@ impl<'a> Session<'a> {
                 rows_projected: solver.sweep_rows_projected - rows_before.0,
                 rows_skipped: solver.sweep_rows_skipped - rows_before.1,
             });
+        }
+        if solver.telemetry_due(b.iterations) {
+            b.telemetry.push(solver.telemetry_frame(
+                b.iterations,
+                &round.outcome,
+                rows_before,
+                marks_before,
+                evictions_before,
+            ));
         }
         b.iterations += 1;
         agg.found += round.outcome.found;
@@ -1321,6 +1361,7 @@ impl<'a> Session<'a> {
                     projections: 0,
                     last_dual_movement: f64::INFINITY,
                     trace: Vec::new(),
+                    telemetry: Vec::new(),
                     phases: PhaseTimes::default(),
                     result: None,
                 });
@@ -1633,6 +1674,7 @@ fn finalize_block(
         trace: std::mem::take(&mut b.trace),
         seconds,
         phases: b.phases,
+        telemetry: std::mem::take(&mut b.telemetry),
     };
     b.result = Some(result.clone());
     let interpret = b.interpret.take().expect("block finalized twice");

@@ -13,6 +13,8 @@ use super::bregman::{BregmanFunction, DiagonalQuadratic};
 use super::constraint::{Constraint, ConstraintView};
 use super::engine::{self, MovementTracker, SweepExecutor, SweepStrategy};
 use super::oracle::{BoxKind, BoxOutcome, Oracle, OracleOutcome, OverlappableOracle, ProjectionSink};
+use crate::obs;
+use crate::obs::TelemetryFrame;
 use crate::util::pool;
 use crate::util::Stopwatch;
 
@@ -71,6 +73,10 @@ pub struct SolverConfig {
     /// checkpoint-restore path already does this) — the next sweep then
     /// projects everything once and re-arms from fresh state.
     pub lazy_sweep: bool,
+    /// Sample a convergence-telemetry frame every N rounds (0 = off).
+    /// Frames land in [`SolverResult::telemetry`]; sampling is pure
+    /// observation and never changes the trajectory.
+    pub telemetry_every: usize,
 }
 
 impl Default for SolverConfig {
@@ -87,6 +93,7 @@ impl Default for SolverConfig {
             parallel_min_rows: None,
             track_movement: true,
             lazy_sweep: crate::core::problem::default_lazy_sweep(),
+            telemetry_every: 0,
         }
     }
 }
@@ -170,6 +177,9 @@ pub struct SolverResult {
     /// Accumulated per-phase timing breakdown (recorded even when
     /// `record_trace` is off).
     pub phases: PhaseTimes,
+    /// Sampled convergence-telemetry frames (empty unless
+    /// [`SolverConfig::telemetry_every`] > 0).
+    pub telemetry: Vec<TelemetryFrame>,
 }
 
 /// The stop decision taken at the end of every round. One shared rule
@@ -247,6 +257,9 @@ pub struct Solver<F: BregmanFunction> {
     /// Rows elided by the lazy scheduler across the solver's lifetime
     /// (see `SweepStats::rows_skipped`).
     pub sweep_rows_skipped: usize,
+    /// Rows dropped by FORGET across the solver's lifetime. Round
+    /// deltas feed [`TelemetryFrame::forget_evictions`].
+    pub forget_evictions: u64,
     /// The projection engine executing sweeps (chosen by `config.sweep`).
     executor: Box<dyn SweepExecutor<F>>,
     /// Reused FORGET compaction-map buffer.
@@ -478,6 +491,7 @@ impl<F: BregmanFunction> Solver<F> {
             last_dual_movement: 0.0,
             sweep_rows_projected: 0,
             sweep_rows_skipped: 0,
+            forget_evictions: 0,
             executor,
             slot_map: Vec::new(),
             movement,
@@ -603,6 +617,7 @@ impl<F: BregmanFunction> Solver<F> {
         }
         let generation_before = self.active.generation();
         let dropped = self.active.forget_inactive_with_map(&mut self.slot_map);
+        self.forget_evictions += dropped as u64;
         if dropped > 0 {
             self.executor.after_forget(
                 &self.slot_map,
@@ -644,9 +659,23 @@ impl<F: BregmanFunction> Solver<F> {
         let mut t = PhaseTimes::default();
         let mut lap = Stopwatch::new();
         for _ in 0..self.config.inner_sweeps {
+            let rows_before = (self.sweep_rows_projected, self.sweep_rows_skipped);
+            let mut sweep_span = obs::span(obs::SpanKind::Sweep);
             self.project_sweep();
+            if let Some(g) = sweep_span.as_mut() {
+                g.counts(
+                    (self.sweep_rows_projected - rows_before.0) as u64,
+                    (self.sweep_rows_skipped - rows_before.1) as u64,
+                );
+            }
+            drop(sweep_span);
             t.sweep_s += lap.lap_s();
-            self.forget();
+            let mut forget_span = obs::span(obs::SpanKind::Forget);
+            let dropped = self.forget();
+            if let Some(g) = forget_span.as_mut() {
+                g.counts(dropped as u64, 0);
+            }
+            drop(forget_span);
             t.forget_s += lap.lap_s();
         }
         t
@@ -681,6 +710,45 @@ impl<F: BregmanFunction> Solver<F> {
         }
     }
 
+    /// Whether the convergence-telemetry stream samples round `nu`.
+    #[inline]
+    pub(crate) fn telemetry_due(&self, nu: usize) -> bool {
+        let every = self.config.telemetry_every;
+        every > 0 && nu % every == 0
+    }
+
+    /// Assemble one convergence-telemetry frame from the round's deltas.
+    /// `dual_l1` sums |z| over the active set *after* the round's
+    /// FORGETs; `moved_fraction` is the round's movement-log marks over
+    /// the coordinate count, clamped to 1 (marks dedup per epoch, so a
+    /// coordinate can be counted once per sweep). For multi-block
+    /// sessions the set-wide quantities are fleet-wide.
+    pub(crate) fn telemetry_frame(
+        &self,
+        round: usize,
+        outcome: &OracleOutcome,
+        rows_before: (usize, usize),
+        marks_before: u64,
+        evictions_before: u64,
+    ) -> TelemetryFrame {
+        let mut dual_l1 = 0.0;
+        for r in 0..self.active.len() {
+            dual_l1 += self.active.z(r).abs();
+        }
+        let dim = self.x.len().max(1) as f64;
+        let moved = (self.movement.marks().saturating_sub(marks_before)) as f64 / dim;
+        TelemetryFrame {
+            round,
+            max_violation: outcome.max_violation,
+            active_rows: self.active.len(),
+            dual_l1,
+            moved_fraction: moved.min(1.0),
+            rows_projected: self.sweep_rows_projected - rows_before.0,
+            rows_skipped: self.sweep_rows_skipped - rows_before.1,
+            forget_evictions: (self.forget_evictions - evictions_before) as usize,
+        }
+    }
+
     /// Shared result assembly.
     pub(crate) fn finish_result(
         &self,
@@ -689,6 +757,7 @@ impl<F: BregmanFunction> Solver<F> {
         trace: Vec<IterStats>,
         phases: PhaseTimes,
         seconds: f64,
+        telemetry: Vec<TelemetryFrame>,
     ) -> SolverResult {
         SolverResult {
             x: self.x.clone(),
@@ -699,6 +768,7 @@ impl<F: BregmanFunction> Solver<F> {
             trace,
             seconds,
             phases,
+            telemetry,
         }
     }
 
@@ -706,6 +776,7 @@ impl<F: BregmanFunction> Solver<F> {
     pub fn solve<O: Oracle<F>>(&mut self, mut oracle: O) -> SolverResult {
         let clock = Stopwatch::new();
         let mut trace = Vec::new();
+        let mut telemetry = Vec::new();
         let mut phases = PhaseTimes::default();
         let mut converged = false;
         let mut iterations = 0;
@@ -714,6 +785,9 @@ impl<F: BregmanFunction> Solver<F> {
             let mut round = Stopwatch::new();
             let proj_before = self.projections;
             let rows_before = (self.sweep_rows_projected, self.sweep_rows_skipped);
+            let marks_before = self.movement.marks();
+            let evictions_before = self.forget_evictions;
+            let mut round_span = obs::span(obs::SpanKind::Round);
 
             // Phase 1+merge: oracle delivers violated constraints (and may
             // project-on-find).
@@ -726,6 +800,10 @@ impl<F: BregmanFunction> Solver<F> {
             let round_phases = PhaseTimes { oracle_s, ..self.sweep_phase() };
             let remembered = self.active.len();
             phases.accumulate(&round_phases);
+            if let Some(g) = round_span.as_mut() {
+                g.counts(outcome.found as u64, remembered as u64);
+            }
+            drop(round_span);
 
             if self.config.record_trace {
                 trace.push(self.round_stats(
@@ -737,6 +815,15 @@ impl<F: BregmanFunction> Solver<F> {
                     rows_before,
                     round.lap_s(),
                     &round_phases,
+                ));
+            }
+            if self.telemetry_due(nu) {
+                telemetry.push(self.telemetry_frame(
+                    nu,
+                    &outcome,
+                    rows_before,
+                    marks_before,
+                    evictions_before,
                 ));
             }
 
@@ -755,7 +842,7 @@ impl<F: BregmanFunction> Solver<F> {
                 RoundVerdict::Continue => {}
             }
         }
-        self.finish_result(iterations, converged, trace, phases, clock.elapsed_s())
+        self.finish_result(iterations, converged, trace, phases, clock.elapsed_s(), telemetry)
     }
 
     /// Run PROJECT AND FORGET with the oracle's scan phase overlapped
@@ -791,6 +878,7 @@ impl<F: BregmanFunction> Solver<F> {
     {
         let clock = Stopwatch::new();
         let mut trace = Vec::new();
+        let mut telemetry = Vec::new();
         let mut phases = PhaseTimes::default();
         let mut converged = false;
         let mut iterations = 0;
@@ -806,11 +894,18 @@ impl<F: BregmanFunction> Solver<F> {
             let mut round_clock = Stopwatch::new();
             let proj_before = self.projections;
             let rows_before = (self.sweep_rows_projected, self.sweep_rows_skipped);
+            let marks_before = self.movement.marks();
+            let evictions_before = self.forget_evictions;
+            let mut round_span = obs::span(obs::SpanKind::Round);
 
             let scan = pending.take().expect("overlap pipeline lost a scan");
             let (round, next_scan) =
                 self.overlapped_round(&mut oracle, scan, &mut shadow, prev_dual_movement);
             phases.accumulate(&round.phases);
+            if let Some(g) = round_span.as_mut() {
+                g.counts(round.outcome.found as u64, round.remembered as u64);
+            }
+            drop(round_span);
 
             if self.config.record_trace {
                 trace.push(self.round_stats(
@@ -822,6 +917,15 @@ impl<F: BregmanFunction> Solver<F> {
                     rows_before,
                     round_clock.lap_s(),
                     &round.phases,
+                ));
+            }
+            if self.telemetry_due(nu) {
+                telemetry.push(self.telemetry_frame(
+                    nu,
+                    &round.outcome,
+                    rows_before,
+                    marks_before,
+                    evictions_before,
                 ));
             }
 
@@ -858,7 +962,7 @@ impl<F: BregmanFunction> Solver<F> {
                 }
             });
         }
-        self.finish_result(iterations, converged, trace, phases, clock.elapsed_s())
+        self.finish_result(iterations, converged, trace, phases, clock.elapsed_s(), telemetry)
     }
 
     /// One round of the overlapped pipeline, shared verbatim by

@@ -157,6 +157,7 @@ pub fn build_weighted(
     byte_budget: Option<u64>,
 ) -> anyhow::Result<(WeightedInstance, Vec<u64>, IngestStats)> {
     let parse_clock = Stopwatch::new();
+    let mut pass_span = crate::obs::span(crate::obs::SpanKind::IngestPass);
     let mut ledger = MemLedger::with_budget(byte_budget);
     let mut stats = IngestStats { dup_policy: policy.as_str(), ..IngestStats::default() };
 
@@ -185,12 +186,17 @@ pub fn build_weighted(
     let pass1_bytes = src.bytes_read();
     let pass1_lines = src.lines_read();
     stats.parse_s = parse_clock.elapsed_s();
+    if let Some(sp) = pass_span.as_mut() {
+        sp.counts(pass1_lines, parsed);
+    }
+    drop(pass_span);
     // The ledger carries logical (length-based) bytes; growth headroom
     // inside Vec capacities is deliberately not modelled.
     ledger.alloc(ids.heap_bytes() + 8 * bucket_cnt.len() as u64, "pass-1 interner + bucket counts")?;
 
     // ---- re-rank slots by sorted raw id (the legacy compaction) ----
     let build_clock = Stopwatch::new();
+    let mut build_span = crate::obs::span(crate::obs::SpanKind::IngestPass);
     ledger.alloc(16 * n as u64, "rank remap")?;
     let mut order: Vec<u32> = (0..n as u32).collect();
     order.sort_unstable_by_key(|&s| ids.key(s));
@@ -325,6 +331,10 @@ pub fn build_weighted(
     stats.peak_bytes = ledger.peak();
     stats.csr_bytes = 32 * m as u64 + 4 * (n as u64 + 1);
     stats.build_s = build_clock.elapsed_s();
+    if let Some(sp) = build_span.as_mut() {
+        sp.counts(n as u64, m as u64);
+    }
+    drop(build_span);
     Ok((WeightedInstance { graph, weights }, sorted_ids, stats))
 }
 

@@ -41,6 +41,8 @@
 //! - [`baselines`] — every comparator in the paper's tables.
 //! - [`ml`] — datasets, kNN, Mahalanobis helpers.
 //! - [`coordinator`] — orchestration, metrics, PJRT batching.
+//! - [`obs`] — observability: span tracing (Chrome trace export),
+//!   convergence telemetry, live serve metrics substrate.
 //! - [`runtime`] — PJRT artifact loading/execution.
 //! - [`util`] — offline substrate (PRNG, CLI, config, pool, bench kit).
 
@@ -49,6 +51,7 @@ pub mod coordinator;
 pub mod core;
 pub mod graph;
 pub mod ml;
+pub mod obs;
 pub mod problems;
 pub mod report;
 pub mod runtime;

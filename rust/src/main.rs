@@ -33,7 +33,12 @@
 //! ```
 //!
 //! Global flags: `--seed <u64>`, `--config <file>` (key = value overrides),
-//! `--report-dir <dir>`. All solve subcommands run through the unified
+//! `--report-dir <dir>`, `--trace-out <file>` (span tracing → Chrome
+//! trace-event JSON; `PAF_TRACE=1` or `PAF_TRACE=<path>` is the env
+//! equivalent), `--telemetry-every <N>` (sampled convergence frames in
+//! the solver JSON plus a CSV). `paf serve` additionally takes
+//! `--metrics-every <N>` / `--metrics-out <file>` for live NDJSON
+//! snapshots. All solve subcommands run through the unified
 //! `core::Session` API and emit a schema-versioned solver JSON next to
 //! the CSV tables.
 
@@ -71,6 +76,13 @@ fn main() {
         std::env::set_var("PAF_REPORT_DIR", dir);
     }
     let seed = args.get_parsed_or("seed", 0u64);
+    // Observability: `--trace-out` (or `PAF_TRACE`) turns on span
+    // collection for the whole run; the Chrome trace is written after
+    // the subcommand returns.
+    let trace_out = trace_out_path(&args);
+    if trace_out.is_some() {
+        paf::obs::set_spans_enabled(true);
+    }
     match args.command.as_deref() {
         Some("nearness") => cmd_nearness(&args, seed),
         Some("batch") => cmd_batch(&args, seed),
@@ -90,6 +102,27 @@ fn main() {
             );
             std::process::exit(2);
         }
+    }
+    if let Some(path) = trace_out {
+        match paf::obs::write_chrome_trace(&path) {
+            Ok(()) => eprintln!("trace: wrote {path} (load in Perfetto / chrome://tracing)"),
+            Err(e) => eprintln!("--trace-out {path}: {e}"),
+        }
+    }
+}
+
+/// Resolve the Chrome-trace output path: `--trace-out PATH` wins, then
+/// the `PAF_TRACE` env (`1` means collect and write `trace.json`; any
+/// other non-empty, non-`0` value is itself the path).
+fn trace_out_path(args: &Args) -> Option<String> {
+    if let Some(p) = args.get("trace-out") {
+        return Some(p.to_string());
+    }
+    match std::env::var("PAF_TRACE") {
+        Ok(v) if v.is_empty() || v == "0" => None,
+        Ok(v) if v == "1" => Some("trace.json".to_string()),
+        Ok(v) => Some(v),
+        Err(_) => None,
     }
 }
 
@@ -118,6 +151,7 @@ fn solve_options(args: &Args) -> SolveOptions {
     }
     opts.violation_tol = args.get_parsed_or("tol", opts.violation_tol);
     opts.max_iters = args.get_parsed_or("max-iters", opts.max_iters);
+    opts.telemetry_every = args.get_parsed_or("telemetry-every", opts.telemetry_every);
     opts
 }
 
@@ -271,6 +305,7 @@ fn cmd_nearness_input(args: &Args, path: &str) {
         &label,
         &report::solver_result_json_with_ingest(&label, &res.result, Some(&stats)),
     );
+    let _ = report::emit_telemetry_csv(&res.result, &format!("TELEMETRY_nearness_{}", input_stem(path)));
     let mut t = Table::new("metric nearness (streamed)", &["metric", "value"]);
     t.rowd(&["input".to_string(), path.to_string()]);
     t.rowd(&["nodes".to_string(), stats.nodes.to_string()]);
@@ -306,6 +341,7 @@ fn cmd_nearness(args: &Args, seed: u64) {
     println!("metric nearness: n={n} type={gtype} m={} seed={seed}", inst.graph.num_edges());
     let res = Nearness::new(&inst).mode(mode).solve(&opts);
     let _ = report::emit_solver_json(&res.result, &format!("SOLVE_nearness_n{n}_t{gtype}"));
+    let _ = report::emit_telemetry_csv(&res.result, &format!("TELEMETRY_nearness_n{n}_t{gtype}"));
     let mut t = Table::new("metric nearness", &["metric", "value"]);
     t.rowd(&["n".to_string(), n.to_string()]);
     t.rowd(&["converged".to_string(), res.result.converged.to_string()]);
@@ -434,10 +470,20 @@ fn cmd_serve(args: &Args, seed: u64) {
         queue_high_water: (high_water > 0).then_some(high_water),
         age_rounds: args.get_parsed_or("age-rounds", 0usize),
         fault_plan,
-        ..Default::default()
+        metrics_every: args.get_parsed_or("metrics-every", 0usize),
     };
     let clock = Stopwatch::new();
     let mut scheduler = paf::serve::Scheduler::new(jobs, &bank, cfg);
+    // Live NDJSON metrics go to --metrics-out, or stderr by default.
+    if let Some(path) = args.get("metrics-out") {
+        match std::fs::File::create(path) {
+            Ok(f) => scheduler.metrics_to(f),
+            Err(e) => {
+                eprintln!("--metrics-out {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     scheduler.on_event(|event| match event {
         paf::serve::ServeEvent::Admitted { round, job, resumed } => {
             println!("  round {round:>4}: admit job {job}{}", if *resumed { " (resumed)" } else { "" })
@@ -581,6 +627,7 @@ fn cmd_cc(args: &Args, seed: u64) {
     let problem = if sparse { Correlation::sparse(&inst) } else { Correlation::dense(&inst) };
     let res = problem.gamma(args.get_parsed_or("gamma", 1.0)).seed(seed).solve(&opts);
     let _ = report::emit_solver_json(&res.result, &format!("SOLVE_cc_{name}"));
+    let _ = report::emit_telemetry_csv(&res.result, &format!("TELEMETRY_cc_{name}"));
     let mut t = Table::new("correlation clustering", &["metric", "value"]);
     t.rowd(&["graph".to_string(), label.clone()]);
     t.rowd(&["converged".to_string(), res.result.converged.to_string()]);

@@ -1,0 +1,43 @@
+//! Unified observability: span tracing, convergence telemetry, and the
+//! shared clock/RSS substrate.
+//!
+//! Three layers, all zero-cost when disabled:
+//!
+//! - [`span`] — lock-free per-thread ring buffers of typed RAII spans
+//!   (round / oracle-scan / sweep / shard / forget / checkpoint-persist
+//!   / ingest-pass), recorded by instrumentation points in
+//!   `core/solver`, `core/engine/`, `problems/metric_oracle`, `serve/`,
+//!   and `graph/ingest/`. Enabled via [`set_spans_enabled`] or
+//!   `PAF_TRACE=1`; a disabled site costs one relaxed atomic load.
+//! - [`trace`] — exports the recorded spans as Chrome trace-event JSON
+//!   (`--trace-out trace.json`, loadable in Perfetto) with one track
+//!   row per pool worker, and validates such documents.
+//! - [`telemetry`] — the per-round convergence stream (max violation,
+//!   active rows, duals ℓ1, moved fraction, projected/skipped rows,
+//!   FORGET evictions) carried on `SolverResult` into the schema-v6
+//!   JSON and an optional CSV.
+//!
+//! [`clock`] is the consolidated timing home: `util::timer` and
+//! `coordinator::metrics` re-export it, and spans share its epoch.
+//!
+//! Observation never touches iterates: the determinism suite pins that
+//! tracing+telemetry-on solves are bit-identical to instrumentation-off
+//! runs.
+
+pub mod clock;
+pub mod span;
+pub mod telemetry;
+pub mod trace;
+
+pub use clock::{
+    current_rss_bytes, fmt_bytes, fmt_secs, now_us, peak_rss_bytes, MemoryProbe,
+    MemoryProbeGuard, Stopwatch,
+};
+pub use span::{
+    set_spans_enabled, span, spans_enabled, SpanBuf, SpanEvent, SpanGuard, SpanKind,
+};
+pub use telemetry::{telemetry_csv, telemetry_json_array, TelemetryFrame};
+pub use trace::{
+    chrome_trace_from, chrome_trace_json, snapshot_threads, validate_chrome_trace,
+    write_chrome_trace, ThreadSpans,
+};

@@ -1,0 +1,332 @@
+//! Lock-free per-thread span recording.
+//!
+//! Every instrumented site calls [`span`], which returns `None` when
+//! tracing is disabled — the entire cost of a disabled site is one
+//! relaxed atomic load. When enabled, the returned RAII [`SpanGuard`]
+//! records a typed [`SpanEvent`] (begin/end microseconds since the
+//! global epoch plus two free-form counters) into the calling thread's
+//! [`SpanBuf`] on drop.
+//!
+//! A `SpanBuf` is a single-writer append-only buffer: the owning thread
+//! writes slot `len` and then publishes `len + 1` with a release store;
+//! readers (the trace exporter, from any thread) acquire-load `len` and
+//! read only the published prefix. Published slots are never rewritten,
+//! so no locks are needed on the hot path and a mid-run export sees a
+//! consistent prefix. On overflow the newest span is dropped and
+//! counted — observation must never block or reallocate under the
+//! solver.
+//!
+//! Guards are created and dropped in scope order on one thread, so the
+//! recorded spans nest properly per thread — exactly what the Chrome
+//! trace `B`/`E` emitter in [`super::trace`] relies on.
+
+use super::clock::now_us;
+use std::cell::{OnceCell, UnsafeCell};
+use std::sync::atomic::{AtomicI8, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Spans recorded per thread before overflow (drops are counted).
+pub const SPAN_BUF_CAP: usize = 1 << 16;
+
+/// The span taxonomy: one variant per instrumented phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One PROJECT AND FORGET round (oracle + sweeps + forget).
+    Round,
+    /// One separation-oracle scan (whole scan on the caller's thread,
+    /// plus one per Dijkstra chunk on each pool worker).
+    OracleScan,
+    /// One inner projection sweep over the active set.
+    Sweep,
+    /// One support-disjoint shard within a sweep.
+    Shard,
+    /// One FORGET pass (zero-dual row eviction).
+    Forget,
+    /// One durable checkpoint write or load (`serve/persist`).
+    CheckpointPersist,
+    /// One streaming-ingest pass (parse/count or scatter/build).
+    IngestPass,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Round => "round",
+            SpanKind::OracleScan => "oracle-scan",
+            SpanKind::Sweep => "sweep",
+            SpanKind::Shard => "shard",
+            SpanKind::Forget => "forget",
+            SpanKind::CheckpointPersist => "checkpoint-persist",
+            SpanKind::IngestPass => "ingest-pass",
+        }
+    }
+}
+
+/// One completed span. `count_a`/`count_b` are kind-specific (e.g. rows
+/// projected / rows skipped for a sweep, violations found / sources
+/// rescanned for an oracle scan); unused counters stay 0.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub begin_us: u64,
+    pub end_us: u64,
+    pub count_a: u64,
+    pub count_b: u64,
+}
+
+const EMPTY_EVENT: SpanEvent =
+    SpanEvent { kind: SpanKind::Round, begin_us: 0, end_us: 0, count_a: 0, count_b: 0 };
+
+/// Single-writer span buffer; see the module docs for the protocol.
+pub struct SpanBuf {
+    /// Owning thread's name at registration (pool workers are
+    /// `paf-pool-<k>`, the entry thread is `main`).
+    pub name: String,
+    /// Stable small track id, assigned in registration order.
+    pub tid: u64,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    slots: Box<[UnsafeCell<SpanEvent>]>,
+}
+
+// Safety: slot `i` is written exactly once (by the single owning
+// thread, before the release store publishing `len = i + 1`) and only
+// read after an acquire load observes `len > i`.
+unsafe impl Sync for SpanBuf {}
+unsafe impl Send for SpanBuf {}
+
+impl SpanBuf {
+    pub fn new(name: String, tid: u64, cap: usize) -> SpanBuf {
+        let slots: Vec<UnsafeCell<SpanEvent>> =
+            (0..cap.max(1)).map(|_| UnsafeCell::new(EMPTY_EVENT)).collect();
+        SpanBuf {
+            name,
+            tid,
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            slots: slots.into_boxed_slice(),
+        }
+    }
+
+    /// Append one span. Must only be called from the owning thread.
+    pub fn push(&self, ev: SpanEvent) {
+        let n = self.len.load(Ordering::Relaxed);
+        if n >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe { *self.slots[n].get() = ev };
+        self.len.store(n + 1, Ordering::Release);
+    }
+
+    /// Copy out the published prefix (safe from any thread, mid-run).
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let n = self.len.load(Ordering::Acquire).min(self.slots.len());
+        (0..n).map(|i| unsafe { *self.slots[i].get() }).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans lost to overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// All registered per-thread buffers, in registration (tid) order.
+static REGISTRY: Mutex<Vec<Arc<SpanBuf>>> = Mutex::new(Vec::new());
+
+// -1 = unset (fall back to the PAF_TRACE env default), 0 = off, 1 = on.
+static ENABLED: AtomicI8 = AtomicI8::new(-1);
+
+fn env_default() -> bool {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    *DEFAULT
+        .get_or_init(|| std::env::var("PAF_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false))
+}
+
+/// The zero-cost guard every instrumented site checks first.
+#[inline]
+pub fn spans_enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        0 => false,
+        1 => true,
+        _ => env_default(),
+    }
+}
+
+/// Turn span recording on or off process-wide (also settable via
+/// `PAF_TRACE=1` in the environment before the first span).
+pub fn set_spans_enabled(on: bool) {
+    ENABLED.store(on as i8, Ordering::Relaxed);
+}
+
+thread_local! {
+    static THREAD_BUF: OnceCell<Arc<SpanBuf>> = const { OnceCell::new() };
+}
+
+/// The calling thread's buffer, registering it on first use.
+pub fn thread_buf() -> Arc<SpanBuf> {
+    THREAD_BUF.with(|cell| {
+        cell.get_or_init(|| {
+            let mut reg = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
+            let tid = reg.len() as u64;
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            let buf = Arc::new(SpanBuf::new(name, tid, SPAN_BUF_CAP));
+            reg.push(Arc::clone(&buf));
+            buf
+        })
+        .clone()
+    })
+}
+
+/// Every thread's buffer, in tid order (for the trace exporter).
+pub fn all_bufs() -> Vec<Arc<SpanBuf>> {
+    REGISTRY.lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// RAII span: records on drop. Obtain via [`span`]; set kind-specific
+/// counters with [`SpanGuard::counts`] before it goes out of scope.
+pub struct SpanGuard {
+    kind: SpanKind,
+    begin_us: u64,
+    count_a: u64,
+    count_b: u64,
+}
+
+impl SpanGuard {
+    pub fn counts(&mut self, a: u64, b: u64) {
+        self.count_a = a;
+        self.count_b = b;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end_us = now_us().max(self.begin_us);
+        thread_buf().push(SpanEvent {
+            kind: self.kind,
+            begin_us: self.begin_us,
+            end_us,
+            count_a: self.count_a,
+            count_b: self.count_b,
+        });
+    }
+}
+
+/// Open a span of the given kind, or `None` when tracing is disabled.
+/// The idiom at every instrumentation site:
+///
+/// ```ignore
+/// let mut g = obs::span(obs::SpanKind::Sweep);
+/// // ... the instrumented work ...
+/// if let Some(g) = g.as_mut() { g.counts(projected as u64, skipped as u64); }
+/// // guard drop records the span
+/// ```
+#[inline]
+pub fn span(kind: SpanKind) -> Option<SpanGuard> {
+    if !spans_enabled() {
+        return None;
+    }
+    Some(SpanGuard { kind, begin_us: now_us(), count_a: 0, count_b: 0 })
+}
+
+#[cfg(test)]
+pub(crate) fn test_gate() -> std::sync::MutexGuard<'static, ()> {
+    // Unit tests that toggle the global enable flag serialize on this.
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_publishes_prefix_and_counts_drops() {
+        let buf = SpanBuf::new("unit".into(), 0, 4);
+        for k in 0..6u64 {
+            buf.push(SpanEvent {
+                kind: SpanKind::Sweep,
+                begin_us: k,
+                end_us: k + 1,
+                count_a: k,
+                count_b: 0,
+            });
+        }
+        let snap = buf.snapshot();
+        assert_eq!(snap.len(), 4, "capacity 4 keeps the oldest 4");
+        assert_eq!(buf.dropped(), 2);
+        for (k, ev) in snap.iter().enumerate() {
+            assert_eq!(ev.begin_us, k as u64);
+            assert_eq!(ev.count_a, k as u64);
+        }
+    }
+
+    #[test]
+    fn disabled_span_is_none_enabled_records_on_this_thread() {
+        let _gate = test_gate();
+        set_spans_enabled(false);
+        assert!(span(SpanKind::Round).is_none(), "disabled tracing must cost nothing");
+
+        set_spans_enabled(true);
+        let before = thread_buf().len();
+        {
+            let mut g = span(SpanKind::Forget).expect("enabled tracing returns a guard");
+            g.counts(7, 0);
+        }
+        let snap = thread_buf().snapshot();
+        assert!(snap.len() > before);
+        let ev = snap.last().unwrap();
+        assert_eq!(ev.kind, SpanKind::Forget);
+        assert_eq!(ev.count_a, 7);
+        assert!(ev.end_us >= ev.begin_us);
+        set_spans_enabled(false);
+    }
+
+    #[test]
+    fn nested_guards_record_inner_first_with_contained_intervals() {
+        let _gate = test_gate();
+        set_spans_enabled(true);
+        let before = thread_buf().len();
+        {
+            let _outer = span(SpanKind::Round);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            {
+                let _inner = span(SpanKind::Sweep);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        set_spans_enabled(false);
+        let snap = thread_buf().snapshot();
+        let new = &snap[before..];
+        assert_eq!(new.len(), 2);
+        let (inner, outer) = (&new[0], &new[1]);
+        assert_eq!(inner.kind, SpanKind::Sweep);
+        assert_eq!(outer.kind, SpanKind::Round);
+        assert!(outer.begin_us <= inner.begin_us && inner.end_us <= outer.end_us);
+    }
+
+    #[test]
+    fn registry_lists_this_thread_with_a_name() {
+        let _gate = test_gate();
+        let mine = thread_buf();
+        assert!(!mine.name.is_empty());
+        let all = all_bufs();
+        assert!(all.iter().any(|b| Arc::ptr_eq(b, &mine)));
+        // tids are the registration index — unique and dense.
+        let mut tids: Vec<u64> = all.iter().map(|b| b.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), all.len());
+    }
+}

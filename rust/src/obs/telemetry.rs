@@ -1,0 +1,138 @@
+//! Convergence telemetry: the per-round sampled stream of the
+//! quantities the paper's theory (Thm 3.3) reasons about.
+//!
+//! Frames are recorded by the solver/session at the end of a round when
+//! `telemetry_every > 0` and the round index is a multiple of it; they
+//! travel on [`crate::core::solver::SolverResult::telemetry`] and land
+//! in the schema-v6 solver JSON as a `telemetry` array plus an optional
+//! CSV for plotting decay curves. Telemetry is pure observation — every
+//! field is computed from state the round already produced, so enabling
+//! it never perturbs iterates (pinned by the determinism suite).
+
+/// One sampled round. In a multi-block session the violation/active-row
+/// counters are per block while `dual_l1` / `moved_fraction` /
+/// `forget_evictions` are fleet-wide (one solver sweeps the whole
+/// fleet); for the common single-instance solve the two views coincide.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TelemetryFrame {
+    /// Round index (0-based, matching `IterStats::iteration`).
+    pub round: usize,
+    /// Max constraint violation the oracle saw entering this round.
+    pub max_violation: f64,
+    /// Active-set rows remembered after FORGET.
+    pub active_rows: usize,
+    /// ℓ1 norm of the active dual variables after the round.
+    pub dual_l1: f64,
+    /// Fraction of coordinates marked moved this round (dedup is per
+    /// sweep epoch, so this is a slight over-count; clamped to 1).
+    pub moved_fraction: f64,
+    /// Rows the inner sweeps actually projected this round.
+    pub rows_projected: usize,
+    /// Rows the lazy scheduler proved skippable this round.
+    pub rows_skipped: usize,
+    /// Rows evicted by FORGET this round.
+    pub forget_evictions: usize,
+}
+
+/// CSV header matching [`telemetry_csv`] rows.
+pub const TELEMETRY_CSV_HEADER: &str =
+    "round,max_violation,active_rows,dual_l1,moved_fraction,rows_projected,rows_skipped,forget_evictions";
+
+/// Render frames as a plottable CSV document (header + one row each).
+pub fn telemetry_csv(frames: &[TelemetryFrame]) -> String {
+    let mut out = String::with_capacity(64 * (frames.len() + 1));
+    out.push_str(TELEMETRY_CSV_HEADER);
+    out.push('\n');
+    for f in frames {
+        out.push_str(&format!(
+            "{},{:.9e},{},{:.9e},{:.6},{},{},{}\n",
+            f.round,
+            f.max_violation,
+            f.active_rows,
+            f.dual_l1,
+            f.moved_fraction,
+            f.rows_projected,
+            f.rows_skipped,
+            f.forget_evictions
+        ));
+    }
+    out
+}
+
+/// Render frames as the schema-v6 `telemetry` JSON array (the caller
+/// splices this into the solver JSON document).
+pub fn telemetry_json_array(frames: &[TelemetryFrame]) -> String {
+    let rows: Vec<String> = frames
+        .iter()
+        .map(|f| {
+            format!(
+                "    {{\"round\": {}, \"max_violation\": {:.9e}, \"active_rows\": {}, \
+                 \"dual_l1\": {:.9e}, \"moved_fraction\": {:.6}, \"rows_projected\": {}, \
+                 \"rows_skipped\": {}, \"forget_evictions\": {}}}",
+                f.round,
+                f.max_violation,
+                f.active_rows,
+                f.dual_l1,
+                f.moved_fraction,
+                f.rows_projected,
+                f.rows_skipped,
+                f.forget_evictions
+            )
+        })
+        .collect();
+    format!("[\n{}\n  ]", rows.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames() -> Vec<TelemetryFrame> {
+        vec![
+            TelemetryFrame {
+                round: 1,
+                max_violation: 0.5,
+                active_rows: 120,
+                dual_l1: 3.25,
+                moved_fraction: 1.0,
+                rows_projected: 240,
+                rows_skipped: 0,
+                forget_evictions: 10,
+            },
+            TelemetryFrame {
+                round: 2,
+                max_violation: 0.05,
+                active_rows: 80,
+                dual_l1: 1.5,
+                moved_fraction: 0.25,
+                rows_projected: 60,
+                rows_skipped: 100,
+                forget_evictions: 40,
+            },
+        ]
+    }
+
+    #[test]
+    fn csv_has_header_and_one_row_per_frame() {
+        let csv = telemetry_csv(&frames());
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], TELEMETRY_CSV_HEADER);
+        assert!(lines[1].starts_with("1,"));
+        assert!(lines[2].starts_with("2,"));
+        assert_eq!(lines[1].split(',').count(), TELEMETRY_CSV_HEADER.split(',').count());
+    }
+
+    #[test]
+    fn json_array_parses_with_all_fields() {
+        let text = telemetry_json_array(&frames());
+        let doc = crate::runtime::json::Json::parse(&text).expect("valid JSON");
+        let arr = doc.as_arr().expect("array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("round").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(arr[1].get("rows_skipped").and_then(|v| v.as_usize()), Some(100));
+        for key in TELEMETRY_CSV_HEADER.split(',') {
+            assert!(arr[0].get(key).is_some(), "missing field {key}");
+        }
+    }
+}

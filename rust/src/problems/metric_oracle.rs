@@ -431,6 +431,7 @@ impl MetricOracle {
         moved_hint: Option<&[u32]>,
         cursor: Option<u64>,
     ) -> MetricScan {
+        let mut scan_span = crate::obs::span(crate::obs::SpanKind::OracleScan);
         let g = &*self.graph;
         let n = g.num_nodes();
         let m = g.num_edges();
@@ -488,8 +489,12 @@ impl MetricOracle {
         let reach_ref = reach.as_ref();
         let scope = self.scope.as_deref();
         let per_chunk: Vec<Vec<SourceScan>> = parallel_map_chunks(n, self.threads, |range| {
+            // Chunk-level span: lands in the executing pool worker's
+            // thread buffer, so the trace shows per-worker scan rows.
+            let mut chunk_span = crate::obs::span(crate::obs::SpanKind::OracleScan);
+            let chunk_len = range.len();
             let mut scratch = DijkstraScratch::new(n);
-            let mut out: Vec<SourceScan> = Vec::with_capacity(range.len());
+            let mut out: Vec<SourceScan> = Vec::with_capacity(chunk_len);
             for src in range {
                 if let (Some(c), Some(reach)) = (cache, reach_ref) {
                     // The staleness test (see the module docs): rescan
@@ -521,6 +526,11 @@ impl MetricOracle {
                     &mut scratch,
                 )));
             }
+            if let Some(sp) = chunk_span.as_mut() {
+                let fresh =
+                    out.iter().filter(|s| matches!(s, SourceScan::Fresh(_))).count();
+                sp.counts(chunk_len as u64, fresh as u64);
+            }
             out
         });
         let sources: Vec<SourceScan> = per_chunk.into_iter().flatten().collect();
@@ -538,6 +548,9 @@ impl MetricOracle {
                     rescanned += 1;
                 }
             }
+        }
+        if let Some(sp) = scan_span.as_mut() {
+            sp.counts(found as u64, rescanned as u64);
         }
         MetricScan {
             sources,

@@ -37,7 +37,11 @@ pub fn emit_series(s: &Series, basename: &str) {
 /// v5: solver-result documents may carry an additive `ingest` object
 /// (disk-streamed inputs only: format, dup policy, line/byte/record
 /// counts, peak working-set and CSR byte accounting, parse/build times).
-pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 5;
+/// v6: solver-result documents may carry an additive `telemetry` array
+/// (sampled convergence frames, present when `telemetry_every` > 0);
+/// serve-document events gained a monotonic `seq` plus the scheduler
+/// `round` they were emitted in (additive).
+pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 6;
 
 /// Serialise a [`SolverResult`] (with its per-phase timing breakdown
 /// and, when recorded, the full per-iteration trace) as JSON. `label`
@@ -110,8 +114,35 @@ pub fn solver_result_json_with_ingest(
             if k + 1 == r.trace.len() { "" } else { "," }
         ));
     }
-    out.push_str("  ]\n}\n");
+    if r.telemetry.is_empty() {
+        out.push_str("  ]\n}\n");
+    } else {
+        out.push_str("  ],\n");
+        out.push_str(&format!(
+            "  \"telemetry\": {}\n}}\n",
+            crate::obs::telemetry_json_array(&r.telemetry)
+        ));
+    }
     out
+}
+
+/// Persist a solver result's sampled telemetry frames as
+/// `<basename>.csv` under the report directory (plotting-friendly
+/// companion to the schema-v6 `telemetry` array). No-op returning
+/// `None` when no frames were sampled.
+pub fn emit_telemetry_csv(
+    r: &SolverResult,
+    basename: &str,
+) -> std::io::Result<Option<std::path::PathBuf>> {
+    if r.telemetry.is_empty() {
+        return Ok(None);
+    }
+    let dir = report_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = std::path::Path::new(&dir).join(format!("{basename}.csv"));
+    std::fs::write(&path, crate::obs::telemetry_csv(&r.telemetry))?;
+    println!("  wrote {}", path.display());
+    Ok(Some(path))
 }
 
 /// Persist a JSON document as `<basename>.json` under the report
@@ -191,6 +222,7 @@ mod tests {
             ],
             seconds: 0.02,
             phases: PhaseTimes { oracle_s: 0.004, sweep_s: 0.005, forget_s: 0.001 },
+            telemetry: Vec::new(),
         };
         let text = solver_result_json("unit", &r);
         let json = crate::runtime::json::Json::parse(&text).expect("invalid JSON");
@@ -214,8 +246,10 @@ mod tests {
             Some(crate::runtime::json::Json::Num(v)) => assert!((v - 0.5).abs() < 1e-12),
             other => panic!("missing max_violation: {other:?}"),
         }
-        // No ingest object unless one is supplied.
+        // No ingest object unless one is supplied, and no telemetry
+        // array unless frames were sampled.
         assert!(json.get("ingest").is_none());
+        assert!(json.get("telemetry").is_none());
         let stats = IngestStats {
             format: "snap",
             dup_policy: "keep-first",
@@ -239,5 +273,48 @@ mod tests {
         assert_eq!(ing.get("peak_bytes").and_then(|v| v.as_usize()), Some(4096));
         assert_eq!(ing.get("nodes").and_then(|v| v.as_usize()), Some(5));
         assert_eq!(ing.get("edges").and_then(|v| v.as_usize()), Some(7));
+    }
+
+    #[test]
+    fn solver_json_carries_sampled_telemetry() {
+        use crate::obs::TelemetryFrame;
+        let r = SolverResult {
+            x: vec![0.0; 2],
+            iterations: 4,
+            converged: true,
+            total_projections: 9,
+            active_constraints: 2,
+            trace: vec![IterStats::default()],
+            seconds: 0.01,
+            phases: PhaseTimes::default(),
+            telemetry: vec![
+                TelemetryFrame {
+                    round: 0,
+                    max_violation: 0.75,
+                    active_rows: 12,
+                    dual_l1: 2.5,
+                    moved_fraction: 0.5,
+                    rows_projected: 24,
+                    rows_skipped: 3,
+                    forget_evictions: 4,
+                },
+                TelemetryFrame { round: 2, max_violation: 0.01, ..Default::default() },
+            ],
+        };
+        let text = solver_result_json("telemetry-unit", &r);
+        let json = crate::runtime::json::Json::parse(&text).expect("invalid JSON");
+        assert_eq!(
+            json.get("schema_version").and_then(|v| v.as_usize()),
+            Some(SOLVER_JSON_SCHEMA_VERSION as usize)
+        );
+        let tel = json.get("telemetry").and_then(|t| t.as_arr()).expect("telemetry array");
+        assert_eq!(tel.len(), 2);
+        assert_eq!(tel[0].get("active_rows").and_then(|v| v.as_usize()), Some(12));
+        assert_eq!(tel[0].get("forget_evictions").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(tel[1].get("round").and_then(|v| v.as_usize()), Some(2));
+        match tel[0].get("dual_l1") {
+            Some(crate::runtime::json::Json::Num(v)) => assert!((v - 2.5).abs() < 1e-12),
+            other => panic!("missing dual_l1: {other:?}"),
+        }
     }
 }

@@ -28,7 +28,9 @@ pub use persist::{
     CRASH_EXIT_CODE,
 };
 pub use queue::{parse_job_trace, parse_job_trace_lenient, Job, JobQueue, JobSpec};
-pub use scheduler::{demo_trace, JobStats, Scheduler, ServeConfig, ServeEvent, ServeStats};
+pub use scheduler::{
+    demo_trace, JobStats, Scheduler, ServeConfig, ServeEvent, ServeLogEntry, ServeStats,
+};
 
 use crate::report;
 
@@ -159,7 +161,7 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
     out.push_str("  ],\n");
     out.push_str("  \"events\": [\n");
     for (k, e) in stats.events.iter().enumerate() {
-        let body = match e {
+        let body = match &e.event {
             ServeEvent::Admitted { round, job, resumed } => format!(
                 "\"event\": \"admitted\", \"round\": {round}, \"job\": {job}, \
                  \"resumed\": {resumed}"
@@ -195,7 +197,8 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
             ),
         };
         out.push_str(&format!(
-            "    {{{body}}}{}\n",
+            "    {{\"seq\": {}, {body}}}{}\n",
+            e.seq,
             if k + 1 == stats.events.len() { "" } else { "," }
         ));
     }
@@ -258,7 +261,7 @@ mod tests {
                 recovered: true,
                 error: Some("corrupt checkpoint \"x\"".to_string()),
             }],
-            events: vec![
+            events: [
                 ServeEvent::Recovered { round: 0, job: 0, rounds_done: 3 },
                 ServeEvent::Admitted { round: 0, job: 0, resumed: true },
                 ServeEvent::Preempted { round: 2, job: 0, rounds_done: 2 },
@@ -266,7 +269,23 @@ mod tests {
                 ServeEvent::Retried { round: 5, job: 0, attempt: 1 },
                 ServeEvent::Admitted { round: 5, job: 0, resumed: true },
                 ServeEvent::Completed { round: 7, job: 0, converged: true },
-            ],
+            ]
+            .into_iter()
+            .enumerate()
+            .map(|(i, event)| ServeLogEntry {
+                seq: i as u64,
+                round: match event {
+                    ServeEvent::Recovered { round, .. }
+                    | ServeEvent::Admitted { round, .. }
+                    | ServeEvent::Preempted { round, .. }
+                    | ServeEvent::Quarantined { round, .. }
+                    | ServeEvent::Retried { round, .. }
+                    | ServeEvent::Completed { round, .. } => round,
+                    _ => 0,
+                },
+                event,
+            })
+            .collect(),
         };
         let text = serve_stats_json("unit", &stats);
         let json = Json::parse(&text).expect("invalid serve JSON");
@@ -299,5 +318,12 @@ mod tests {
         assert_eq!(events[2].get("event").and_then(|v| v.as_str()), Some("preempted"));
         assert_eq!(events[3].get("event").and_then(|v| v.as_str()), Some("quarantined"));
         assert_eq!(events[4].get("event").and_then(|v| v.as_str()), Some("retried"));
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(
+                e.get("seq").and_then(|v| v.as_usize()),
+                Some(i),
+                "v6 serve events carry dense sequence numbers"
+            );
+        }
     }
 }

@@ -247,18 +247,26 @@ pub fn write_checkpoint_atomic(
     job: usize,
     ck: &BlockCheckpoint,
 ) -> Result<PathBuf, ServeError> {
+    let mut span = crate::obs::span(crate::obs::SpanKind::CheckpointPersist);
     std::fs::create_dir_all(dir).map_err(|e| io_err(dir, &e))?;
     let bytes = encode_checkpoint(ck)?;
     let path = checkpoint_path(dir, job);
     let tmp = dir.join(format!("job-{job}.ckpt.tmp"));
     std::fs::write(&tmp, &bytes).map_err(|e| io_err(&tmp, &e))?;
     std::fs::rename(&tmp, &path).map_err(|e| io_err(&path, &e))?;
+    if let Some(sp) = span.as_mut() {
+        sp.counts(job as u64, bytes.len() as u64);
+    }
     Ok(path)
 }
 
 /// Read and validate a checkpoint file.
 pub fn load_checkpoint(path: &Path) -> Result<BlockCheckpoint, ServeError> {
+    let mut span = crate::obs::span(crate::obs::SpanKind::CheckpointPersist);
     let bytes = std::fs::read(path).map_err(|e| io_err(path, &e))?;
+    if let Some(sp) = span.as_mut() {
+        sp.counts(0, bytes.len() as u64);
+    }
     decode_checkpoint(&bytes, path)
 }
 

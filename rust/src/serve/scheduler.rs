@@ -81,6 +81,11 @@ pub struct ServeConfig {
     /// Deterministic fault injection (tests and the hidden
     /// `--fault-plan` flag); empty in production.
     pub fault_plan: FaultPlan,
+    /// Live metrics: every N scheduler rounds, write one NDJSON
+    /// snapshot (queue depth, running/completed/shed/failed/recovered
+    /// counters, rounds/sec, per-job progress) to the sink installed
+    /// with [`Scheduler::metrics_to`], or stderr by default. 0 = off.
+    pub metrics_every: usize,
 }
 
 impl Default for ServeConfig {
@@ -95,6 +100,7 @@ impl Default for ServeConfig {
             queue_high_water: None,
             age_rounds: 0,
             fault_plan: FaultPlan::default(),
+            metrics_every: 0,
         }
     }
 }
@@ -127,6 +133,21 @@ pub enum ServeEvent {
     /// A job failed admission (attempt `attempt`); it is parked with
     /// exponential backoff, or permanently failed past `retry_limit`.
     Quarantined { round: usize, job: usize, attempt: usize },
+}
+
+/// A [`ServeEvent`] as recorded in [`ServeStats::events`]: stamped with
+/// the scheduler round it was emitted in and a run-wide monotonic
+/// sequence number, so filtered or merged event streams can always be
+/// restored to exact emission order. Observers still receive the bare
+/// [`ServeEvent`] as it happens.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeLogEntry {
+    /// Strictly increasing across the whole run, starting at 0.
+    pub seq: u64,
+    /// Scheduler round at emission (equals the `round` the payload
+    /// carries).
+    pub round: usize,
+    pub event: ServeEvent,
 }
 
 /// Per-job service record.
@@ -189,7 +210,9 @@ pub struct ServeStats {
     /// (the process should exit with [`persist::CRASH_EXIT_CODE`]).
     pub crashed: bool,
     pub jobs: Vec<JobStats>,
-    pub events: Vec<ServeEvent>,
+    /// The full event stream, each entry stamped with its emission
+    /// round and a monotonic sequence number.
+    pub events: Vec<ServeLogEntry>,
 }
 
 impl ServeStats {
@@ -236,6 +259,14 @@ pub struct Scheduler<'a> {
     ready_at: Vec<Option<Instant>>,
     stats: ServeStats,
     round: usize,
+    /// Next event sequence number (stamped in [`Scheduler::emit`]).
+    next_seq: u64,
+    /// Wall-clock start of [`Scheduler::run`] (drives `rounds_per_sec`
+    /// in metrics snapshots).
+    started: Instant,
+    /// Destination for `metrics_every` NDJSON snapshots; stderr when
+    /// unset.
+    metrics: Option<Box<dyn std::io::Write + 'a>>,
     observers: Vec<Box<dyn FnMut(&ServeEvent) + 'a>>,
 }
 
@@ -317,6 +348,9 @@ impl<'a> Scheduler<'a> {
             ready_at: vec![None; n],
             stats,
             round: 0,
+            next_seq: 0,
+            started: Instant::now(),
+            metrics: None,
             observers: Vec::new(),
         }
     }
@@ -326,11 +360,69 @@ impl<'a> Scheduler<'a> {
         self.observers.push(Box::new(observer));
     }
 
+    /// Redirect `metrics_every` NDJSON snapshots to `sink` (a file, a
+    /// `Vec<u8>` in tests, …) instead of stderr.
+    pub fn metrics_to(&mut self, sink: impl std::io::Write + 'a) {
+        self.metrics = Some(Box::new(sink));
+    }
+
     fn emit(&mut self, event: ServeEvent) {
         for obs in &mut self.observers {
             obs(&event);
         }
-        self.stats.events.push(event);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.stats.events.push(ServeLogEntry { seq, round: self.round, event });
+    }
+
+    /// One NDJSON live-metrics snapshot (queue/fleet counters plus
+    /// per-running-job progress), written every `metrics_every` rounds.
+    fn metrics_snapshot(&self) -> String {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let rps = if elapsed > 0.0 { self.round as f64 / elapsed } else { 0.0 };
+        let jobs: Vec<String> = self
+            .running
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"job\": {}, \"rounds\": {}}}",
+                    r.job,
+                    r.base_rounds + (self.round - r.admitted_at)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"round\": {}, \"queue_depth\": {}, \"running\": {}, \"completed\": {}, \
+             \"shed\": {}, \"failed\": {}, \"recovered\": {}, \"retried\": {}, \
+             \"preemptions\": {}, \"expired\": {}, \"rounds_per_sec\": {:.3}, \"jobs\": [{}]}}\n",
+            self.round,
+            self.ready.len(),
+            self.running.len(),
+            self.stats.completed,
+            self.stats.shed,
+            self.stats.failed,
+            self.stats.recovered,
+            self.stats.retried,
+            self.stats.preemptions,
+            self.stats.expired,
+            rps,
+            jobs.join(", ")
+        )
+    }
+
+    fn metrics_tick(&mut self) {
+        let every = self.cfg.metrics_every;
+        if every == 0 || self.round % every != 0 {
+            return;
+        }
+        let line = self.metrics_snapshot();
+        match &mut self.metrics {
+            Some(w) => {
+                let _ = w.write_all(line.as_bytes());
+                let _ = w.flush();
+            }
+            None => eprint!("{line}"),
+        }
     }
 
     /// Milliseconds since the job first became ready (0 if it never has).
@@ -593,6 +685,7 @@ impl<'a> Scheduler<'a> {
     /// record. With a fault-plan crash, stops early with
     /// `stats.crashed` set after persisting running state.
     pub fn run(mut self) -> ServeStats {
+        self.started = Instant::now();
         self.recover();
         loop {
             // 1. Arrivals, then retries whose backoff elapsed.
@@ -652,6 +745,7 @@ impl<'a> Scheduler<'a> {
                 }
                 self.emit(ServeEvent::Idle { round: self.round });
                 self.round += 1;
+                self.metrics_tick();
                 if self.crash_due() {
                     self.crash_now();
                     break;
@@ -729,7 +823,8 @@ impl<'a> Scheduler<'a> {
             // concatenated vector stays bounded by the *running* fleet.
             self.session.compact_finished();
 
-            // 6. Durability and injected crashes.
+            // 6. Live metrics, durability, and injected crashes.
+            self.metrics_tick();
             self.persist_periodic();
             if self.crash_due() {
                 self.crash_now();
@@ -781,7 +876,7 @@ mod tests {
         assert_eq!(stats.jobs[0].rounds_run, 3);
         assert!(stats.jobs[0].projections > 0, "expiry stats come from the checkpoint");
         assert_eq!(stats.jobs[0].deadline_met, Some(false), "expired is never a null deadline");
-        assert!(stats.events.iter().any(|e| matches!(e, ServeEvent::Expired { .. })));
+        assert!(stats.events.iter().any(|e| matches!(e.event, ServeEvent::Expired { .. })));
     }
 
     #[test]
@@ -856,7 +951,7 @@ mod tests {
         let stats = Scheduler::new(jobs, &bank, cfg).run();
         assert!(stats.all_completed());
         assert_eq!(
-            stats.events.iter().filter(|e| matches!(e, ServeEvent::Idle { .. })).count(),
+            stats.events.iter().filter(|e| matches!(e.event, ServeEvent::Idle { .. })).count(),
             5,
             "rounds 0..5 must idle"
         );
@@ -896,7 +991,7 @@ mod tests {
         assert_eq!(stats.completed, 1);
         assert!(stats.jobs[1].converged, "the fleet keeps serving around the poisoned job");
         assert_eq!(
-            stats.events.iter().filter(|e| matches!(e, ServeEvent::Quarantined { .. })).count(),
+            stats.events.iter().filter(|e| matches!(e.event, ServeEvent::Quarantined { .. })).count(),
             3,
             "initial failure plus two retries"
         );
@@ -931,7 +1026,102 @@ mod tests {
         assert_eq!(stats.jobs[0].deadline_met, Some(false));
         assert_eq!(stats.completed, 2);
         assert!(stats.jobs[2].converged && stats.jobs[3].converged);
-        assert!(stats.events.iter().any(|e| matches!(e, ServeEvent::Shed { .. })));
+        assert!(stats.events.iter().any(|e| matches!(e.event, ServeEvent::Shed { .. })));
+    }
+
+    /// The event payload's own `round` field, for cross-checking the
+    /// log-entry stamp.
+    fn payload_round(e: &ServeEvent) -> usize {
+        match *e {
+            ServeEvent::Admitted { round, .. }
+            | ServeEvent::Preempted { round, .. }
+            | ServeEvent::Completed { round, .. }
+            | ServeEvent::Expired { round, .. }
+            | ServeEvent::Idle { round }
+            | ServeEvent::Recovered { round, .. }
+            | ServeEvent::Shed { round, .. }
+            | ServeEvent::Retried { round, .. }
+            | ServeEvent::Quarantined { round, .. } => round,
+        }
+    }
+
+    #[test]
+    fn events_carry_monotonic_seq_and_round_stamps() {
+        // A workload that exercises many event kinds (idle rounds, a
+        // late arrival, completions): every logged entry must carry a
+        // dense 0-based sequence number and a round stamp that matches
+        // its payload.
+        let mut jobs = one_job(JobSpec::Nearness { n: 10, graph_type: 1, seed: 3 });
+        jobs[0].arrival_round = 3;
+        jobs.push(Job {
+            id: 1,
+            name: "early".to_string(),
+            spec: JobSpec::Nearness { n: 12, graph_type: 1, seed: 4 },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: None,
+            deadline_ms: None,
+        });
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            ..Default::default()
+        };
+        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        assert!(stats.all_completed());
+        assert!(stats.events.len() >= 4, "admissions + completions at minimum");
+        for (i, e) in stats.events.iter().enumerate() {
+            assert_eq!(e.seq, i as u64, "seq numbers are dense and start at 0");
+            assert_eq!(e.round, payload_round(&e.event), "stamp matches the payload round");
+            assert!(e.round <= stats.rounds);
+        }
+    }
+
+    #[test]
+    fn metrics_snapshots_stream_ndjson() {
+        // metrics_every=2 over a real run: the sink receives one JSON
+        // object per line, with round stamps on the sampling grid and
+        // the final completion count visible in the last snapshot.
+        let jobs = one_job(JobSpec::Nearness { n: 12, graph_type: 1, seed: 7 });
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            metrics_every: 2,
+            ..Default::default()
+        };
+        let sink: std::rc::Rc<std::cell::RefCell<Vec<u8>>> = Default::default();
+        let writer = SharedSink(sink.clone());
+        let mut sched = Scheduler::new(jobs, &bank, cfg);
+        sched.metrics_to(writer);
+        let stats = sched.run();
+        assert!(stats.all_completed());
+        let text = String::from_utf8(sink.borrow().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert!(!lines.is_empty(), "a multi-round solve must produce snapshots");
+        for line in &lines {
+            let json = crate::runtime::json::Json::parse(line).expect("snapshot parses");
+            let round = json.get("round").and_then(|v| v.as_usize()).unwrap();
+            assert_eq!(round % 2, 0, "snapshots land on the metrics_every grid");
+            assert!(json.get("queue_depth").is_some());
+            assert!(json.get("rounds_per_sec").is_some());
+            assert!(json.get("jobs").and_then(|v| v.as_arr()).is_some());
+        }
+    }
+
+    /// Test-only shared byte sink (the scheduler owns the writer, the
+    /// test keeps a handle to the bytes).
+    struct SharedSink(std::rc::Rc<std::cell::RefCell<Vec<u8>>>);
+    impl std::io::Write for SharedSink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.borrow_mut().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
     }
 }
 

@@ -1,131 +1,10 @@
-//! Wall-clock and RSS instrumentation for solver iterations and benches.
+//! Wall-clock and RSS instrumentation — now a thin façade.
+//!
+//! The implementations moved to [`crate::obs::clock`] when the
+//! observability layer consolidated every clock in the crate onto one
+//! epoch (span timestamps and stopwatch laps share a time base).
+//! Historical call sites keep importing from here.
 
-use std::time::{Duration, Instant};
-
-/// A simple stopwatch with lap support.
-#[derive(Debug, Clone)]
-pub struct Stopwatch {
-    start: Instant,
-    last_lap: Instant,
-}
-
-impl Default for Stopwatch {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Stopwatch {
-    pub fn new() -> Self {
-        let now = Instant::now();
-        Stopwatch { start: now, last_lap: now }
-    }
-
-    /// Seconds since construction.
-    pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    /// Seconds since the previous lap (or construction), and reset the lap.
-    pub fn lap_s(&mut self) -> f64 {
-        let now = Instant::now();
-        let dt = now.duration_since(self.last_lap).as_secs_f64();
-        self.last_lap = now;
-        dt
-    }
-
-    pub fn elapsed(&self) -> Duration {
-        self.start.elapsed()
-    }
-}
-
-/// Current resident set size in bytes (Linux, via /proc/self/statm).
-/// Returns 0 on platforms/filesystems where it is unavailable.
-pub fn current_rss_bytes() -> u64 {
-    let page = 4096u64;
-    match std::fs::read_to_string("/proc/self/statm") {
-        Ok(s) => s
-            .split_whitespace()
-            .nth(1)
-            .and_then(|v| v.parse::<u64>().ok())
-            .map(|pages| pages * page)
-            .unwrap_or(0),
-        Err(_) => 0,
-    }
-}
-
-/// Peak RSS (VmHWM) in bytes, from /proc/self/status.
-pub fn peak_rss_bytes() -> u64 {
-    match std::fs::read_to_string("/proc/self/status") {
-        Ok(s) => s
-            .lines()
-            .find(|l| l.starts_with("VmHWM:"))
-            .and_then(|l| l.split_whitespace().nth(1))
-            .and_then(|kb| kb.parse::<u64>().ok())
-            .map(|kb| kb * 1024)
-            .unwrap_or(0),
-        Err(_) => 0,
-    }
-}
-
-/// Human-readable byte count.
-pub fn fmt_bytes(b: u64) -> String {
-    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
-    let mut v = b as f64;
-    let mut u = 0;
-    while v >= 1024.0 && u < UNITS.len() - 1 {
-        v /= 1024.0;
-        u += 1;
-    }
-    if u == 0 {
-        format!("{b} B")
-    } else {
-        format!("{v:.2} {}", UNITS[u])
-    }
-}
-
-/// Human-readable seconds (µs/ms/s/min as appropriate).
-pub fn fmt_secs(s: f64) -> String {
-    if s < 1e-3 {
-        format!("{:.1} µs", s * 1e6)
-    } else if s < 1.0 {
-        format!("{:.2} ms", s * 1e3)
-    } else if s < 120.0 {
-        format!("{s:.2} s")
-    } else {
-        format!("{:.1} min", s / 60.0)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn stopwatch_monotone() {
-        let mut sw = Stopwatch::new();
-        std::thread::sleep(Duration::from_millis(5));
-        let lap1 = sw.lap_s();
-        assert!(lap1 >= 0.004);
-        let total = sw.elapsed_s();
-        assert!(total >= lap1 * 0.9);
-    }
-
-    #[test]
-    fn rss_reads_nonzero_on_linux() {
-        let rss = current_rss_bytes();
-        // On the Linux CI box this should be positive.
-        assert!(rss > 0);
-        assert!(peak_rss_bytes() >= rss / 2);
-    }
-
-    #[test]
-    fn human_formats() {
-        assert_eq!(fmt_bytes(512), "512 B");
-        assert_eq!(fmt_bytes(2048), "2.00 KiB");
-        assert!(fmt_secs(0.0000005).contains("µs"));
-        assert!(fmt_secs(0.005).contains("ms"));
-        assert!(fmt_secs(5.0).contains("s"));
-        assert!(fmt_secs(300.0).contains("min"));
-    }
-}
+pub use crate::obs::clock::{
+    current_rss_bytes, fmt_bytes, fmt_secs, peak_rss_bytes, Stopwatch,
+};

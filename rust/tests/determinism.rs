@@ -99,6 +99,39 @@ fn nearness_overlap_reaches_the_nonoverlapped_optimum() {
     }
 }
 
+#[test]
+fn instrumentation_is_pure_observation() {
+    // Span tracing + telemetry sampling must not perturb one bit of the
+    // iterate stream: solve with everything off, then with tracing on
+    // and per-round telemetry, and compare bitwise. (Enabling spans
+    // process-wide only adds recording to concurrently running tests —
+    // observation never feeds back into any solve.)
+    let mut rng = Rng::new(44);
+    let inst = type1_complete(14, &mut rng);
+    let mut opts = SolveOptions::new().violation_tol(1e-6).dual_tol(1e-6);
+    opts.sweep = SweepStrategy::ShardedParallel { threads: 2 };
+    paf::obs::set_spans_enabled(false);
+    let off = Nearness::new(&inst).mode(OracleMode::Collect).solve(&opts).result;
+    paf::obs::set_spans_enabled(true);
+    let on = Nearness::new(&inst)
+        .mode(OracleMode::Collect)
+        .solve(&opts.clone().telemetry_every(1))
+        .result;
+    // Restore the env-driven default (the CI matrix also runs this
+    // suite with PAF_TRACE=1).
+    paf::obs::set_spans_enabled(
+        std::env::var("PAF_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false),
+    );
+    assert!(off.converged && on.converged);
+    assert_bit_identical(&off, &on, "tracing+telemetry on vs off");
+    assert!(off.telemetry.is_empty(), "telemetry defaults off");
+    assert_eq!(on.telemetry.len(), on.iterations, "telemetry_every=1 samples every round");
+    assert!(on.telemetry.iter().any(|f| f.rows_projected > 0));
+    let exported = paf::obs::chrome_trace_json();
+    paf::obs::validate_chrome_trace(&exported).expect("live trace export must validate");
+    assert!(exported.contains("\"name\": \"round\""), "round spans were recorded");
+}
+
 fn cc_instance(seed: u64) -> CcInstance {
     let mut rng = Rng::new(seed);
     let g = Graph::complete(12);
@@ -647,16 +680,19 @@ fn scheduler_replays_a_mixed_trace_with_preemption() {
     assert!(stats.all_completed(), "all jobs must complete: {stats:?}");
     assert!(stats.preemptions >= 1, "the high-priority arrival must preempt");
     assert!(
-        stats.events.iter().any(|e| matches!(e, ServeEvent::Preempted { .. })),
+        stats.events.iter().any(|e| matches!(e.event, ServeEvent::Preempted { .. })),
         "preemption must be in the event stream"
     );
     assert!(
         stats
             .events
             .iter()
-            .any(|e| matches!(e, ServeEvent::Admitted { resumed: true, .. })),
+            .any(|e| matches!(e.event, ServeEvent::Admitted { resumed: true, .. })),
         "the preempted job must resume"
     );
+    for (i, e) in stats.events.iter().enumerate() {
+        assert_eq!(e.seq, i as u64, "serve events carry dense monotonic sequence numbers");
+    }
     for (k, (s, want)) in stats.jobs.iter().zip(&solo).enumerate() {
         assert!(s.converged, "job {k} did not converge under serving");
         let got = s.result.as_ref().expect("completed job without result");

@@ -1,0 +1,127 @@
+//! Observability contracts pinned end to end: the committed example
+//! Chrome trace stays loadable, live exports round-trip through the
+//! same validator CI re-implements in python3, serve events carry
+//! dense sequence numbers, and telemetry frames survive the
+//! schema-versioned JSON. (Bit-identity of instrumented vs
+//! uninstrumented solves is pinned in `tests/determinism.rs`.)
+
+use paf::obs::{validate_chrome_trace, TelemetryFrame};
+use paf::runtime::json::Json;
+
+/// The committed example trace (the shape `paf serve --trace-out`
+/// produces: per-worker track rows, nested round/oracle-scan/sweep/
+/// forget/checkpoint-persist spans) must load as valid Chrome
+/// trace-event JSON — strict B/E pairing, monotone per-thread
+/// timestamps.
+#[test]
+fn committed_example_trace_is_valid_chrome_trace_json() {
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/example_trace.json"
+    ))
+    .expect("example trace fixture");
+    let pairs = validate_chrome_trace(&text).expect("fixture must validate");
+    assert_eq!(pairs, 13, "every recorded span closes exactly once");
+    // The span taxonomy the README documents is represented.
+    for kind in ["round", "oracle-scan", "sweep", "shard", "forget", "checkpoint-persist"] {
+        assert!(text.contains(&format!("\"name\": \"{kind}\"")), "missing {kind} span");
+    }
+    // Pool workers get their own named track rows.
+    assert!(text.contains("paf-pool-0") && text.contains("paf-pool-1"));
+    // And the document parses with the repo's own JSON reader too.
+    let doc = Json::parse(&text).expect("fixture parses");
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+    assert_eq!(events.len(), 30, "13 B/E pairs plus 4 metadata rows");
+}
+
+/// A serve run with tracing enabled exports a trace whose serve-side
+/// span kinds are present, and the serve JSON carries schema-v6 dense
+/// event sequence numbers.
+#[test]
+fn serve_run_exports_valid_trace_and_sequenced_events() {
+    use paf::core::problem::SolveOptions;
+    use paf::serve::{serve_stats_json, Job, JobBank, JobSpec, Scheduler, ServeConfig};
+    let jobs = vec![Job {
+        id: 0,
+        name: "solo".to_string(),
+        spec: JobSpec::Nearness { n: 12, graph_type: 1, seed: 9 },
+        priority: 0,
+        arrival_round: 0,
+        max_rounds: None,
+        deadline_rounds: None,
+        deadline_ms: None,
+    }];
+    let bank = JobBank::materialize(&jobs);
+    let cfg = ServeConfig {
+        capacity: 1,
+        opts: SolveOptions::new().violation_tol(1e-4),
+        ..Default::default()
+    };
+    paf::obs::set_spans_enabled(true);
+    let stats = Scheduler::new(jobs, &bank, cfg).run();
+    paf::obs::set_spans_enabled(
+        std::env::var("PAF_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false),
+    );
+    assert!(stats.all_completed());
+    let trace = paf::obs::chrome_trace_json();
+    let pairs = validate_chrome_trace(&trace).expect("live serve trace must validate");
+    assert!(pairs > 0, "the serve run must record spans");
+    assert!(trace.contains("\"name\": \"round\""), "session rounds are spanned");
+
+    let text = serve_stats_json("obs-test", &stats);
+    let doc = Json::parse(&text).expect("serve JSON parses");
+    assert!(
+        doc.get("schema_version").and_then(|v| v.as_usize())
+            >= Some(6),
+        "serve JSON must be schema v6+"
+    );
+    let events = doc.get("events").and_then(|e| e.as_arr()).expect("events");
+    assert!(!events.is_empty());
+    for (i, e) in events.iter().enumerate() {
+        assert_eq!(e.get("seq").and_then(|v| v.as_usize()), Some(i));
+    }
+}
+
+/// Telemetry frames survive the solver JSON round-trip with their
+/// sampled quantities intact (the schema-v6 additive `telemetry`
+/// array), and the CSV rendering matches the documented header.
+#[test]
+fn telemetry_round_trips_through_solver_json_and_csv() {
+    use paf::core::problem::SolveOptions;
+    use paf::graph::generators::type1_complete;
+    use paf::problems::metric_oracle::OracleMode;
+    use paf::problems::nearness::Nearness;
+    use paf::util::Rng;
+    let mut rng = Rng::new(77);
+    let inst = type1_complete(12, &mut rng);
+    let opts = SolveOptions::new().violation_tol(1e-4).telemetry_every(2);
+    let res = Nearness::new(&inst).mode(OracleMode::Collect).solve(&opts).result;
+    assert!(res.converged);
+    assert!(!res.telemetry.is_empty(), "telemetry_every=2 must sample frames");
+    for f in &res.telemetry {
+        assert!(f.round % 2 == 0, "frames land on the sampling grid");
+        assert!(f.max_violation.is_finite() && f.dual_l1 >= 0.0);
+    }
+
+    let text = paf::report::solver_result_json("obs-telemetry", &res);
+    let doc = Json::parse(&text).expect("solver JSON parses");
+    let tel = doc.get("telemetry").and_then(|t| t.as_arr()).expect("telemetry array");
+    assert_eq!(tel.len(), res.telemetry.len());
+    let first: &TelemetryFrame = &res.telemetry[0];
+    assert_eq!(
+        tel[0].get("active_rows").and_then(|v| v.as_usize()),
+        Some(first.active_rows)
+    );
+    assert_eq!(
+        tel[0].get("rows_projected").and_then(|v| v.as_usize()),
+        Some(first.rows_projected)
+    );
+
+    let csv = paf::obs::telemetry_csv(&res.telemetry);
+    let mut lines = csv.lines();
+    assert_eq!(
+        lines.next(),
+        Some("round,max_violation,active_rows,dual_l1,moved_fraction,rows_projected,rows_skipped,forget_evictions")
+    );
+    assert_eq!(lines.count(), res.telemetry.len());
+}

@@ -98,7 +98,7 @@ fn crash_recovery_resumes_bit_identically() {
         assert!(stats.all_completed(), "recovery must complete every job: {stats:?}");
         assert_eq!(stats.recovered, files.len(), "every durable checkpoint must recover");
         assert!(
-            stats.events.iter().any(|e| matches!(e, ServeEvent::Recovered { .. })),
+            stats.events.iter().any(|e| matches!(e.event, ServeEvent::Recovered { .. })),
             "recovery must be in the event stream"
         );
         for (k, (s, want)) in stats.jobs.iter().zip(&solo).enumerate() {
@@ -172,7 +172,7 @@ fn corrupt_checkpoint_is_quarantined_and_job_restarts() {
         stats
             .events
             .iter()
-            .any(|e| matches!(e, ServeEvent::Quarantined { round: 0, job: 0, .. })),
+            .any(|e| matches!(e.event, ServeEvent::Quarantined { round: 0, job: 0, .. })),
         "quarantine must be in the event stream"
     );
     assert!(
