@@ -61,7 +61,8 @@ fn main() {
         fault_plan,
         ..Default::default()
     };
-    let mut scheduler = Scheduler::new(jobs.clone(), &bank, cfg);
+    let mut scheduler =
+        Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config");
     scheduler.on_event(|event| match event {
         ServeEvent::Admitted { round, job, resumed } => {
             println!("round {round:>3}: admitted job {job}{}", if *resumed { " (resumed from checkpoint)" } else { "" })

@@ -336,7 +336,8 @@ fn main() {
         let mut rounds = 0;
         all.push(ctx.bench("P8/serve-3jobs/scheduler-cap3", |_| {
             let cfg = ServeConfig { capacity: 3, opts: opts.clone(), ..Default::default() };
-            let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+            let stats =
+                Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
             assert!(stats.all_completed(), "serve fleet did not complete");
             rounds = stats.rounds;
             stats.jobs.iter().map(|j| j.objective.unwrap()).collect::<Vec<_>>()
@@ -633,6 +634,66 @@ fn main() {
         paf::obs::set_spans_enabled(
             std::env::var("PAF_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false),
         );
+    }
+
+    // P13: fleet serving. The same 4-job trace through one supervised
+    // shard, through three (placement + cross-thread coordination), and
+    // through three with shard 0 killed mid-service (checkpoint
+    // migration hand-off). Results are bit-identical on every route
+    // (tests/serve_fleet.rs), so the axes isolate supervision overhead
+    // and the cost of a migration.
+    {
+        use paf::serve::{run_fleet, FleetConfig, Job, JobSpec, ServeConfig};
+        let n = ctx.scaled(70);
+        let jobs: Vec<Job> = (0..4)
+            .map(|k| Job {
+                id: k,
+                name: format!("fleet-{k}"),
+                spec: JobSpec::Nearness { n, graph_type: 1, seed: 70 + k as u64 },
+                priority: 0,
+                arrival_round: 0,
+                max_rounds: None,
+                deadline_rounds: None,
+                deadline_ms: None,
+            })
+            .collect();
+        let opts = SolveOptions::new()
+            .violation_tol(1e-4)
+            .record_trace(false)
+            .inner_sweeps(2)
+            .sweep(SweepStrategy::ShardedParallel { threads: 4 });
+        let shard = ServeConfig {
+            capacity: 2,
+            opts,
+            checkpoint_every: Some(1),
+            ..ServeConfig::default()
+        };
+        let mut migrations = 0usize;
+        for (label, shards, kill) in
+            [("1shard", 1usize, None), ("3shard", 3, None), ("migration-handoff", 3, Some((0, 2)))]
+        {
+            let dir = std::env::temp_dir()
+                .join(format!("paf-bench-fleet-{}-{label}", std::process::id()));
+            all.push(ctx.bench(&format!("P13/serve-fleet/{label}"), |_| {
+                let _ = std::fs::remove_dir_all(&dir);
+                let cfg = FleetConfig {
+                    shards,
+                    shard: shard.clone(),
+                    state_dir: Some(dir.clone()),
+                    fault_plan: paf::serve::FaultPlan { kill_shard: kill, ..Default::default() },
+                    ..FleetConfig::default()
+                };
+                let stats = run_fleet(jobs.clone(), None, cfg, |_| {}).expect("fleet bench run");
+                assert!(stats.drained, "fleet/{label} did not drain");
+                assert!(stats.all_completed(), "fleet/{label} left jobs unfinished");
+                if kill.is_some() {
+                    migrations = stats.migrations;
+                }
+                stats.jobs.iter().map(|j| j.migrations).sum::<usize>()
+            }));
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        println!("    -> {migrations} jobs migrated off the killed shard (migration-handoff)");
     }
 
     if let Err(e) = ctx.write_json("perf_hotpath", &all) {

@@ -23,6 +23,13 @@
 //!               # --state-dir makes checkpoints durable: the server
 //!               # recovers incomplete jobs from DIR on startup and
 //!               # resumes them bit-identically across the crash
+//! paf serve     --shards 3 [--listen tcp:127.0.0.1:0|unix:/p.sock|stdin]
+//!               [--stall-timeout-ms 2000] [--state-dir DIR] ...
+//!               # scale-out mode: a supervisor over N scheduler shards
+//!               # with live line-delimited-JSON intake, heartbeat
+//!               # health checks, and checkpoint-based migration of a
+//!               # dead shard's jobs to the survivors ("drain" / "halt"
+//!               # control lines stop the fleet)
 //! paf cc        --graph ca-grqc [--sparse] [--gamma 1.0] [--scale 0.1]
 //! paf cc        --input signed.tsv [--format snap|dimacs] [--dup-policy P]
 //!               # disk-streamed signed instance (third column's sign)
@@ -429,6 +436,16 @@ fn cmd_serve(args: &Args, seed: u64) {
         },
         None => paf::serve::FaultPlan::default(),
     };
+    // Scale-out mode: more than one shard, or a live intake listener.
+    let shards = args.get_parsed_or("shards", 1usize);
+    if shards > 1 || args.get("listen").is_some() {
+        cmd_serve_fleet(args, seed, shards, opts, fault_plan);
+        return;
+    }
+    if fault_plan.kill_shard.is_some() || fault_plan.stall_shard.is_some() {
+        eprintln!("serve: kill-shard=/stall-shard= are fleet faults; run with --shards N");
+        std::process::exit(2);
+    }
     let jobs = match args.get("trace") {
         Some(path) => {
             let text = match std::fs::read_to_string(path) {
@@ -471,9 +488,16 @@ fn cmd_serve(args: &Args, seed: u64) {
         age_rounds: args.get_parsed_or("age-rounds", 0usize),
         fault_plan,
         metrics_every: args.get_parsed_or("metrics-every", 0usize),
+        ..paf::serve::ServeConfig::default()
     };
     let clock = Stopwatch::new();
-    let mut scheduler = paf::serve::Scheduler::new(jobs, &bank, cfg);
+    let mut scheduler = match paf::serve::Scheduler::new(jobs, &bank, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(2);
+        }
+    };
     // Live NDJSON metrics go to --metrics-out, or stderr by default.
     if let Some(path) = args.get("metrics-out") {
         match std::fs::File::create(path) {
@@ -548,6 +572,180 @@ fn cmd_serve(args: &Args, seed: u64) {
              --state-dir to recover"
         );
         std::process::exit(paf::serve::CRASH_EXIT_CODE);
+    }
+}
+
+/// `paf serve --shards N [--listen ADDR]`: the scale-out path — a
+/// supervisor over N scheduler shards with live intake, heartbeat
+/// health checks, and checkpoint-based migration off dead shards.
+/// Exits 0 on a graceful drain or ordered halt, nonzero when work was
+/// stranded with no live shard to run it.
+fn cmd_serve_fleet(
+    args: &Args,
+    seed: u64,
+    shards: usize,
+    opts: SolveOptions,
+    fault_plan: paf::serve::FaultPlan,
+) {
+    use paf::serve::{FleetEvent, ServeEvent};
+    let listen = args.get("listen");
+    let jobs = match args.get("trace") {
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(text) => text,
+                Err(e) => {
+                    eprintln!("--trace {path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let (jobs, errors) = paf::serve::parse_job_trace_lenient(&text);
+            for e in &errors {
+                eprintln!("--trace {path}: {e} (line skipped)");
+            }
+            if jobs.is_empty() && listen.is_none() {
+                eprintln!("--trace {path}: no valid jobs");
+                std::process::exit(2);
+            }
+            jobs
+        }
+        None if listen.is_none() => {
+            println!("no --trace given: running the built-in mixed demo trace");
+            paf::serve::demo_trace(seed)
+        }
+        None => Vec::new(),
+    };
+    let intake = match listen {
+        Some(spec) => {
+            let source = match paf::serve::IntakeSource::parse(spec) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("--listen {spec:?}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            match paf::serve::spawn_intake(source) {
+                Ok(handle) => {
+                    if let Some(addr) = handle.addr {
+                        println!("serve: intake listening on {addr}");
+                    }
+                    Some(handle)
+                }
+                Err(e) => {
+                    eprintln!("--listen {spec:?}: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        None => None,
+    };
+    let checkpoint_every = args.get_parsed_or("checkpoint-every", 0usize);
+    let high_water = args.get_parsed_or("high-water", 0usize);
+    let cfg = paf::serve::FleetConfig {
+        shards,
+        shard: paf::serve::ServeConfig {
+            capacity: args.get_parsed_or("capacity", 4usize),
+            opts,
+            state_dir: None,
+            checkpoint_every: (checkpoint_every > 0).then_some(checkpoint_every),
+            retry_limit: args.get_parsed_or("retry-limit", 2usize),
+            queue_high_water: None,
+            age_rounds: args.get_parsed_or("age-rounds", 0usize),
+            fault_plan: paf::serve::FaultPlan::default(),
+            metrics_every: args.get_parsed_or("metrics-every", 0usize),
+            ..paf::serve::ServeConfig::default()
+        },
+        state_dir: args.get("state-dir").map(std::path::PathBuf::from),
+        fault_plan,
+        queue_high_water: (high_water > 0).then_some(high_water),
+        stall_timeout_ms: args.get_parsed_or("stall-timeout-ms", 2_000u64),
+        metrics_out: args.get("metrics-out").map(std::path::PathBuf::from),
+    };
+    println!("serve fleet: {shards} shards, {} trace jobs", jobs.len());
+    let clock = Stopwatch::new();
+    let outcome = paf::serve::run_fleet(jobs, intake, cfg, |event| match event {
+        FleetEvent::Placed { job, shard, migrated, with_checkpoint } => println!(
+            "  place job {job} -> shard {shard}{}{}",
+            if *migrated { " (migrated)" } else { "" },
+            if *with_checkpoint { " +checkpoint" } else { "" }
+        ),
+        FleetEvent::SkippedLine { line, msg } => {
+            eprintln!("  intake line {line}: {msg} (line skipped)")
+        }
+        FleetEvent::Shed { job } => println!("  shed job {job} (fleet overload)"),
+        FleetEvent::ShardDead { shard, cause } => {
+            println!("  shard {shard} DEAD: {cause}; migrating its jobs")
+        }
+        FleetEvent::JobDone { job, shard, completed } => {
+            println!("  job {job} done on shard {shard} (completed={completed})")
+        }
+        FleetEvent::DrainStarted => println!("  drain: intake closed, finishing the backlog"),
+        FleetEvent::HaltStarted => println!("  halt: persisting all running state and exiting"),
+        FleetEvent::Resumed { jobs, done_prior } => println!(
+            "  resumed from manifest: {jobs} jobs re-enter placement ({done_prior} already done)"
+        ),
+        FleetEvent::Shard { shard, event } => match event {
+            ServeEvent::Completed { round, job, converged } => println!(
+                "  shard {shard} round {round:>4}: job {job} completed (converged={converged})"
+            ),
+            ServeEvent::Recovered { round, job, rounds_done } => println!(
+                "  shard {shard} round {round:>4}: recovered job {job} \
+                 ({rounds_done} rounds done)"
+            ),
+            _ => {}
+        },
+    });
+    let stats = match outcome {
+        Ok(stats) => stats,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "serve fleet finished: {}/{} completed, {} migrations, {} shed, {} intake lines \
+         skipped, drained={}, halted={}, {}s wall",
+        stats.completed,
+        stats.jobs.len(),
+        stats.migrations,
+        stats.shed,
+        stats.skipped_lines,
+        stats.drained,
+        stats.halted,
+        report::fmt_time(clock.elapsed_s())
+    );
+    let mut st = Table::new("serve fleet shards", &["shard", "assigned", "done", "rounds", "dead"]);
+    for (k, s) in stats.shards.iter().enumerate() {
+        st.rowd(&[
+            k.to_string(),
+            s.assigned.to_string(),
+            s.completed.to_string(),
+            s.rounds.to_string(),
+            match &s.cause {
+                Some(c) => c.clone(),
+                None => s.dead.to_string(),
+            },
+        ]);
+    }
+    report::emit_table(&st, "serve_fleet_shards");
+    let mut jt = Table::new(
+        "serve fleet jobs",
+        &["job", "kind", "shard", "migrations", "completed", "rounds"],
+    );
+    for j in &stats.jobs {
+        jt.rowd(&[
+            j.name.clone(),
+            j.kind.to_string(),
+            j.shard.to_string(),
+            j.migrations.to_string(),
+            j.completed().to_string(),
+            j.stats.as_ref().map(|s| s.rounds_run.to_string()).unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    report::emit_table(&jt, "serve_fleet_jobs");
+    let _ = paf::serve::emit_fleet_json(&stats, "SERVE_fleet");
+    if !stats.drained {
+        eprintln!("serve: work stranded with no live shard to run it");
+        std::process::exit(1);
     }
 }
 

@@ -41,7 +41,11 @@ pub fn emit_series(s: &Series, basename: &str) {
 /// (sampled convergence frames, present when `telemetry_every` > 0);
 /// serve-document events gained a monotonic `seq` plus the scheduler
 /// `round` they were emitted in (additive).
-pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 6;
+/// v7: added the `"kind": "serve-fleet"` document (per-shard service
+/// records, per-job migration counts and `x_fnv1a` solution digests,
+/// fleet event stream with `at_us` timestamps); serve documents gained
+/// a top-level `paused` flag (additive).
+pub const SOLVER_JSON_SCHEMA_VERSION: u32 = 7;
 
 /// Serialise a [`SolverResult`] (with its per-phase timing breakdown
 /// and, when recorded, the full per-iteration trace) as JSON. `label`

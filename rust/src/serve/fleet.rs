@@ -1,0 +1,1267 @@
+//! Scale-out serving: a supervisor over N scheduler shards with live
+//! intake, heartbeat health-checks, and checkpoint-based work
+//! migration.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!                    intake thread (unix / tcp / stdin)
+//!                           │ bounded channel (backpressure)
+//!                           ▼
+//!  ┌─────────────────── supervisor ────────────────────┐
+//!  │ global job registry · least-loaded placement ·    │
+//!  │ high-water shedding · heartbeat health checks ·   │
+//!  │ checkpoint migration · fleet-manifest journal     │
+//!  └───┬───────────────────┬───────────────────┬───────┘
+//!      │ assign channel    │                   │   heartbeats (atomics)
+//!      ▼                   ▼                   ▼   + report channel
+//!  shard 0 thread      shard 1 thread      shard 2 thread
+//!  Scheduler over      Scheduler over      Scheduler over
+//!  its own Session     its own Session     its own Session
+//!  state: shard-0/     state: shard-1/     state: shard-2/
+//! ```
+//!
+//! Each **shard** is a worker thread running a sequence of
+//! [`Scheduler`] *generations*: whenever new work is assigned, the
+//! supervisor raises the shard's cooperative pause flag; the running
+//! generation finishes its round, persists every running job durably
+//! ([`ServeStats::paused`](super::ServeStats)), and the worker rebuilds
+//! a scheduler over its *full* assignment history — completed slots
+//! [`exclude`](Scheduler::exclude)d, unfinished slots recovered from
+//! their own `job-<local>.ckpt` files — so every job's positional local
+//! id (and thus its state file) is stable for the shard's whole life,
+//! and every pause/resume continues bit-identically (the PR 7
+//! invariant).
+//!
+//! **Health**: shards heartbeat through a shared atomic
+//! ([`now_us`](crate::obs::clock::now_us)) once per scheduler round.
+//! The supervisor declares a shard dead when its worker thread exits
+//! unexpectedly (panic), when it reports a fault, or when its
+//! heartbeat goes stale past `stall_timeout_ms` while it holds work.
+//! [`FaultPlan`]'s `kill-shard=K@R` / `stall-shard=K@R` make both
+//! paths deterministic under test.
+//!
+//! **Migration**: a dead shard's outstanding jobs are re-placed on the
+//! least-loaded survivors, each carrying the raw bytes of its durable
+//! checkpoint from the dead shard's state dir (when one exists). The
+//! survivor drops the bytes into its own dir under the job's new local
+//! id and resumes through the normal recovery path — validation,
+//! quarantine, and bit-identical continuation all come for free. A job
+//! that was never checkpointed restarts from scratch, which the
+//! determinism invariant makes exact, just without the saved progress.
+//!
+//! **Durability**: every placement is journaled to
+//! `state_dir/fleet-manifest.jsonl` (the job's own trace line embedded,
+//! so live-intake jobs survive too) and every terminal job is marked
+//! done. A restarted fleet replays the manifest: done jobs are not
+//! re-run, unfinished jobs re-enter placement with the freshest
+//! readable checkpoint from any shard dir they ever lived in —
+//! at-least-once semantics across process boundaries.
+//!
+//! **Shutdown**: a `drain` control line stops intake and lets every
+//! shard finish (exit 0, state dirs empty); `halt` stops now — every
+//! shard pauses, persists, and exits, leaving the manifest and
+//! checkpoints for the next process.
+//!
+//! Generation rebuilds reset shard-local clocks: wall-clock
+//! `deadline_ms` and quarantine-retry backoffs restart with each
+//! generation (round budgets — `max_rounds` — stay cumulative, carried
+//! by checkpoint iteration counts). Fault rounds in `kill-shard=K@R` /
+//! `stall-shard=K@R` are generation-local rounds.
+
+use super::admission::JobBank;
+use super::intake::{IntakeHandle, IntakeItem};
+use super::persist::{self, FaultPlan};
+use super::queue::{self, Job};
+use super::scheduler::{JobStats, Scheduler, ServeConfig, ServeEvent};
+use super::ServeError;
+use crate::obs::clock::now_us;
+use crate::runtime::json::Json;
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Fleet knobs. `shard` is the per-shard scheduler template; its
+/// `state_dir`, `pause`, and `fault_plan` fields are overridden per
+/// shard by the supervisor.
+#[derive(Clone)]
+pub struct FleetConfig {
+    /// Scheduler shards (worker threads), each over its own `Session`.
+    pub shards: usize,
+    /// Per-shard scheduler template. `opts.inner_sweeps` must be
+    /// pinned: live intake can mix job kinds at any time.
+    pub shard: ServeConfig,
+    /// Fleet state root (`shard-<K>/` per shard + the manifest).
+    /// `None` uses a fresh per-process temp dir — migration and halt
+    /// still work, cross-process restart won't survive a temp cleaner.
+    pub state_dir: Option<PathBuf>,
+    /// Fleet-level faults: `kill-shard`/`stall-shard`/`poison` (the
+    /// single-scheduler directives are rejected here).
+    pub fault_plan: FaultPlan,
+    /// Shed the lowest-priority *unplaced* arrivals while more than
+    /// this many jobs are in flight fleet-wide. `None` never sheds.
+    pub queue_high_water: Option<usize>,
+    /// Declare a shard dead when it holds work but has not heartbeat
+    /// for this long.
+    pub stall_timeout_ms: u64,
+    /// Per-shard metrics NDJSON: shard K appends to
+    /// `<metrics_out>.shard<K>` (requires `shard.metrics_every > 0`).
+    pub metrics_out: Option<PathBuf>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shards: 1,
+            shard: ServeConfig {
+                opts: crate::core::problem::SolveOptions::new().inner_sweeps(2),
+                ..ServeConfig::default()
+            },
+            state_dir: None,
+            fault_plan: FaultPlan::default(),
+            queue_high_water: None,
+            stall_timeout_ms: 2_000,
+            metrics_out: None,
+        }
+    }
+}
+
+/// Fleet-level events (shard serve events ride along in
+/// [`FleetEvent::Shard`], their job ids translated to fleet-global
+/// ids).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetEvent {
+    /// A job was placed on (or migrated to) a shard.
+    Placed { job: usize, shard: usize, migrated: bool, with_checkpoint: bool },
+    /// A malformed intake line was skipped (connection-relative
+    /// 1-based line number, same reporting as a file trace).
+    SkippedLine { line: usize, msg: String },
+    /// An unplaced arrival was dropped under overload.
+    Shed { job: usize },
+    /// A shard was declared dead; its work migrates.
+    ShardDead { shard: usize, cause: String },
+    /// A job reached a terminal state on its shard.
+    JobDone { job: usize, shard: usize, completed: bool },
+    /// Intake closed (drain control line, stdin EOF, or trace-only
+    /// fleet out of arrivals); the fleet finishes and exits.
+    DrainStarted,
+    /// A halt was ordered: shards pause, persist, and exit.
+    HaltStarted,
+    /// A prior process's manifest was replayed (`jobs` non-done jobs
+    /// re-entered placement; the trace argument was ignored).
+    Resumed { jobs: usize, done_prior: usize },
+    /// A serve event from a live shard, job ids fleet-global.
+    Shard { shard: usize, event: ServeEvent },
+}
+
+/// A [`FleetEvent`] stamped with a fleet-wide sequence number and the
+/// obs-clock microsecond timestamp of emission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetLogEntry {
+    pub seq: u64,
+    pub at_us: u64,
+    pub event: FleetEvent,
+}
+
+/// Per-shard service record.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Jobs ever assigned (including migrated-in).
+    pub assigned: usize,
+    /// Jobs that completed here.
+    pub completed: usize,
+    /// Cumulative scheduler rounds across all generations.
+    pub rounds: usize,
+    pub dead: bool,
+    pub cause: Option<String>,
+}
+
+/// Per-job fleet record.
+#[derive(Debug, Clone)]
+pub struct FleetJobStats {
+    pub name: String,
+    pub kind: &'static str,
+    pub priority: i64,
+    /// The shard the job last lived on.
+    pub shard: usize,
+    /// Times the job was migrated off a dead shard.
+    pub migrations: usize,
+    /// Completed by a *previous* process (manifest replay); the result
+    /// itself lived and died with that process.
+    pub done_prior: bool,
+    /// Terminal shard-level record (None while in flight, or for
+    /// `done_prior` jobs).
+    pub stats: Option<JobStats>,
+}
+
+impl FleetJobStats {
+    /// The job finished successfully (here or in a prior process).
+    pub fn completed(&self) -> bool {
+        self.done_prior || self.stats.as_ref().is_some_and(|s| s.completed_round.is_some())
+    }
+}
+
+/// What a fleet run did.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub shards: Vec<ShardStats>,
+    pub jobs: Vec<FleetJobStats>,
+    /// Jobs re-placed off dead shards.
+    pub migrations: usize,
+    /// Malformed intake lines skipped (details in `skipped`).
+    pub skipped_lines: usize,
+    /// The skip reports themselves, line-numbered exactly like
+    /// [`parse_job_trace_lenient`](super::parse_job_trace_lenient)'s.
+    pub skipped: Vec<ServeError>,
+    pub completed: usize,
+    /// Arrivals dropped by fleet-level high-water shedding.
+    pub shed: usize,
+    /// The run ended cleanly: graceful drain (everything finished) or
+    /// an ordered halt (everything persisted). `false` means work was
+    /// stranded with no live shard to run it.
+    pub drained: bool,
+    /// The run ended on a `halt` order (state persisted for restart).
+    pub halted: bool,
+    pub events: Vec<FleetLogEntry>,
+}
+
+impl FleetStats {
+    /// Every registered job completed (in this process or a prior one).
+    pub fn all_completed(&self) -> bool {
+        self.jobs.iter().all(FleetJobStats::completed)
+    }
+}
+
+/// Supervisor → shard: one work assignment. `ckpt` carries the raw
+/// durable-checkpoint bytes a migrated job resumes from (validated by
+/// the receiving scheduler's normal recovery path).
+enum ShardMsg {
+    Assign { job: Job, global: usize, ckpt: Option<Vec<u8>>, poisoned: bool },
+}
+
+/// Shard → supervisor reports.
+enum ShardReport {
+    /// A serve event, job ids already fleet-global.
+    Event { shard: usize, event: ServeEvent },
+    /// A job reached a terminal state (or ran out of round budget).
+    JobDone { shard: usize, global: usize, stats: Box<JobStats> },
+    /// The worker is dying (panic or unrecoverable config error).
+    Dead { shard: usize, cause: String },
+    /// The worker exited its loop (drain or halt).
+    Drained { shard: usize },
+}
+
+/// Heartbeat / control block shared between one shard and the
+/// supervisor.
+struct ShardShared {
+    /// Cumulative scheduler rounds (updated between generations).
+    rounds: AtomicUsize,
+    /// [`now_us`] at the last heartbeat (per round + generation edges).
+    beat_us: AtomicU64,
+    /// Set by the supervisor when the shard is declared dead; a
+    /// stalled worker wakes on it and unwinds.
+    dead: AtomicBool,
+    /// Set by the supervisor to stop the worker at the next generation
+    /// boundary (state stays persisted).
+    halt: AtomicBool,
+    /// The cooperative pause flag installed into each generation's
+    /// [`ServeConfig::pause`].
+    pause: Arc<AtomicBool>,
+}
+
+/// Payload for injected shard faults (panics carry no message; the
+/// supervisor's cause string names the fault).
+struct InjectedShardFault;
+
+fn translate(e: &ServeEvent, globals: &[usize]) -> ServeEvent {
+    let g = |j: usize| globals.get(j).copied().unwrap_or(j);
+    match *e {
+        ServeEvent::Admitted { round, job, resumed } => {
+            ServeEvent::Admitted { round, job: g(job), resumed }
+        }
+        ServeEvent::Preempted { round, job, rounds_done } => {
+            ServeEvent::Preempted { round, job: g(job), rounds_done }
+        }
+        ServeEvent::Completed { round, job, converged } => {
+            ServeEvent::Completed { round, job: g(job), converged }
+        }
+        ServeEvent::Expired { round, job, rounds_done } => {
+            ServeEvent::Expired { round, job: g(job), rounds_done }
+        }
+        ServeEvent::Idle { round } => ServeEvent::Idle { round },
+        ServeEvent::Recovered { round, job, rounds_done } => {
+            ServeEvent::Recovered { round, job: g(job), rounds_done }
+        }
+        ServeEvent::Shed { round, job, queue_depth } => {
+            ServeEvent::Shed { round, job: g(job), queue_depth }
+        }
+        ServeEvent::Retried { round, job, attempt } => {
+            ServeEvent::Retried { round, job: g(job), attempt }
+        }
+        ServeEvent::Quarantined { round, job, attempt } => {
+            ServeEvent::Quarantined { round, job: g(job), attempt }
+        }
+    }
+}
+
+/// The slots of one shard worker: its full assignment history, local
+/// ids positional.
+#[derive(Default)]
+struct ShardSlots {
+    jobs: Vec<Job>,
+    globals: Vec<usize>,
+    poisoned: Vec<usize>,
+    done: Vec<bool>,
+}
+
+impl ShardSlots {
+    fn accept(&mut self, msg: ShardMsg, state_dir: &Path) {
+        let ShardMsg::Assign { mut job, global, ckpt, poisoned } = msg;
+        let local = self.jobs.len();
+        job.id = local;
+        job.arrival_round = 0;
+        if poisoned {
+            self.poisoned.push(local);
+        }
+        if let Some(bytes) = ckpt {
+            // Drop the migrated checkpoint into our own state dir under
+            // the new local id; the next generation's recovery scan
+            // validates it (and quarantines it if the dead shard left
+            // it corrupt — the job then restarts from scratch).
+            let _ = std::fs::create_dir_all(state_dir);
+            let path = persist::checkpoint_path(state_dir, local);
+            let tmp = state_dir.join(format!("job-{local}.ckpt.tmp"));
+            let _ = std::fs::write(&tmp, &bytes).and_then(|_| std::fs::rename(&tmp, &path));
+        }
+        self.jobs.push(job);
+        self.globals.push(global);
+        self.done.push(false);
+    }
+
+    fn has_work(&self) -> bool {
+        self.done.iter().any(|d| !d)
+    }
+}
+
+/// One shard worker: a loop of scheduler generations over the shard's
+/// full assignment history (stable positional local ids).
+#[allow(clippy::too_many_arguments)]
+fn shard_worker(
+    shard: usize,
+    template: ServeConfig,
+    state_dir: PathBuf,
+    metrics_path: Option<PathBuf>,
+    kill_round: Option<usize>,
+    stall_round: Option<usize>,
+    rx: Receiver<ShardMsg>,
+    report: Sender<ShardReport>,
+    shared: Arc<ShardShared>,
+) {
+    let mut slots = ShardSlots::default();
+    let mut rounds_total = 0usize;
+    loop {
+        if shared.halt.load(Relaxed) {
+            break;
+        }
+        if !slots.has_work() {
+            // Idle: block for work. A closed channel is the drain order.
+            match rx.recv() {
+                Ok(msg) => slots.accept(msg, &state_dir),
+                Err(_) => break,
+            }
+        }
+        // Clear the nudge *before* draining the backlog: a nudge
+        // arriving after this point pauses the next generation, which
+        // then picks its assignment up here.
+        shared.pause.store(false, Relaxed);
+        while let Ok(msg) = rx.try_recv() {
+            slots.accept(msg, &state_dir);
+        }
+        if shared.halt.load(Relaxed) {
+            break;
+        }
+        shared.beat_us.store(now_us(), Relaxed);
+
+        // One generation: a scheduler over the full assignment
+        // history, finished slots excluded, unfinished ones recovered
+        // from this shard's own state dir.
+        let gen_jobs = slots.jobs.clone();
+        let bank = JobBank::materialize(&gen_jobs);
+        let cfg = ServeConfig {
+            state_dir: Some(state_dir.clone()),
+            pause: Some(Arc::clone(&shared.pause)),
+            max_service_rounds: template.max_service_rounds.saturating_sub(rounds_total).max(1),
+            fault_plan: FaultPlan {
+                poison_spec: slots.poisoned.clone(),
+                ..FaultPlan::default()
+            },
+            ..template.clone()
+        };
+        let mut sched = match Scheduler::new(gen_jobs, &bank, cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                shared.dead.store(true, Relaxed);
+                let _ = report.send(ShardReport::Dead { shard, cause: e.to_string() });
+                return;
+            }
+        };
+        for (local, d) in slots.done.iter().enumerate() {
+            if *d {
+                sched.exclude(local);
+            }
+        }
+        if let Some(path) = &metrics_path {
+            if let Ok(f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+                sched.metrics_to(f);
+            }
+        }
+        let globals = slots.globals.clone();
+        let rep = report.clone();
+        sched.on_event(move |e| {
+            let _ = rep.send(ShardReport::Event { shard, event: translate(e, &globals) });
+        });
+        let beat = Arc::clone(&shared);
+        sched.on_round(move |round| {
+            if stall_round.is_some_and(|r| round >= r) {
+                // Injected stall: freeze with the heartbeat stopped;
+                // wake only when the supervisor declares us dead.
+                while !beat.dead.load(Relaxed) {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                std::panic::panic_any(InjectedShardFault);
+            }
+            beat.beat_us.store(now_us(), Relaxed);
+            if kill_round.is_some_and(|r| round >= r) {
+                std::panic::panic_any(InjectedShardFault);
+            }
+        });
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || sched.run())) {
+            Ok(stats) => {
+                rounds_total += stats.rounds;
+                shared.rounds.store(rounds_total, Relaxed);
+                shared.beat_us.store(now_us(), Relaxed);
+                for (local, js) in stats.jobs.iter().enumerate() {
+                    if slots.done[local] {
+                        continue;
+                    }
+                    let terminal = js.completed_round.is_some()
+                        || js.expired
+                        || js.shed
+                        || js.failed;
+                    // Non-terminal slots after a *pause* resume next
+                    // generation; after an exhausted round budget they
+                    // are surrendered as-is (no spinning).
+                    if terminal || !stats.paused {
+                        slots.done[local] = true;
+                        let _ = report.send(ShardReport::JobDone {
+                            shard,
+                            global: slots.globals[local],
+                            stats: Box::new(js.clone()),
+                        });
+                    }
+                }
+            }
+            Err(_) => {
+                // A panicked generation (injected fault or real bug):
+                // whatever checkpoints were last persisted are the
+                // migration medium. Report and die.
+                shared.dead.store(true, Relaxed);
+                let _ =
+                    report.send(ShardReport::Dead { shard, cause: "worker panicked".to_string() });
+                return;
+            }
+        }
+    }
+    let _ = report.send(ShardReport::Drained { shard });
+}
+
+/// A job recovered from a prior process's manifest.
+struct RecoveredJob {
+    job: Job,
+    done: bool,
+    /// Every `(shard, local)` the job was ever assigned, oldest first.
+    assigns: Vec<(usize, usize)>,
+}
+
+/// Replay a fleet manifest (NDJSON). Unparseable lines are skipped —
+/// a torn final append must not block recovery of everything before
+/// it.
+fn replay_manifest(text: &str) -> Vec<RecoveredJob> {
+    let mut slots: Vec<Option<RecoveredJob>> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(obj) = Json::parse(line) else { continue };
+        let op = obj.get("op").and_then(Json::as_str).unwrap_or("");
+        let Some(global) = obj.get("global").and_then(Json::as_usize) else { continue };
+        match op {
+            "accept" | "assign" | "done-prior" => {
+                let Some(jline) = obj.get("line").and_then(Json::as_str) else { continue };
+                let Ok(mut job) = queue::parse_intake_line(jline, 0, global) else { continue };
+                job.id = global;
+                if slots.len() <= global {
+                    slots.resize_with(global + 1, || None);
+                }
+                let slot = slots[global].get_or_insert_with(|| RecoveredJob {
+                    job: job.clone(),
+                    done: false,
+                    assigns: Vec::new(),
+                });
+                slot.job = job;
+                if op == "done-prior" {
+                    slot.done = true;
+                } else if let (Some(shard), Some(local)) = (
+                    obj.get("shard").and_then(Json::as_usize),
+                    obj.get("local").and_then(Json::as_usize),
+                ) {
+                    slot.assigns.push((shard, local));
+                }
+            }
+            "done" => {
+                if let Some(Some(slot)) = slots.get_mut(global) {
+                    slot.done = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    slots.into_iter().flatten().collect()
+}
+
+fn manifest_path(root: &Path) -> PathBuf {
+    root.join("fleet-manifest.jsonl")
+}
+
+fn journal(file: &mut Option<std::fs::File>, line: String) {
+    if let Some(f) = file {
+        use std::io::Write;
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+fn manifest_job_line(job: &Job) -> String {
+    queue::json_escape(&job.to_json_line())
+}
+
+/// Declare a shard dead and queue its outstanding work for migration:
+/// read each job's durable checkpoint bytes from the dead shard's
+/// state dir (the files are atomically renamed into place, and nothing
+/// writes them once `dead` is raised), then requeue the jobs in global
+/// order. Returns the events to emit.
+fn declare_dead(
+    shard: usize,
+    cause: String,
+    root: &Path,
+    stats: &mut FleetStats,
+    shared: &[Arc<ShardShared>],
+    txs: &mut [Option<Sender<ShardMsg>>],
+    assigned_seq: &[Vec<usize>],
+    outstanding: &mut [Vec<usize>],
+    pending: &mut VecDeque<(usize, Option<Vec<u8>>, bool)>,
+) -> Vec<FleetEvent> {
+    if stats.shards[shard].dead {
+        return Vec::new();
+    }
+    stats.shards[shard].dead = true;
+    stats.shards[shard].cause = Some(cause.clone());
+    // Order matters: mark dead (wakes a stalled worker into its
+    // unwind), read the checkpoint bytes while nothing can be writing
+    // them, *then* ask any false-positive zombie to pause-and-exit.
+    shared[shard].dead.store(true, Relaxed);
+    let events = vec![FleetEvent::ShardDead { shard, cause }];
+    let dir = root.join(format!("shard-{shard}"));
+    let mut work: Vec<usize> = std::mem::take(&mut outstanding[shard]);
+    work.sort_unstable();
+    for global in work {
+        let local = assigned_seq[shard].iter().position(|&g| g == global);
+        let bytes = local.and_then(|l| std::fs::read(persist::checkpoint_path(&dir, l)).ok());
+        stats.jobs[global].migrations += 1;
+        stats.migrations += 1;
+        pending.push_back((global, bytes, true));
+    }
+    shared[shard].halt.store(true, Relaxed);
+    shared[shard].pause.store(true, Relaxed);
+    txs[shard] = None;
+    events
+}
+
+impl JobStats {
+    /// A terminal record for a job the *supervisor* dropped before any
+    /// scheduler ever saw it (fleet-level shedding).
+    fn shed_placeholder(job: &Job) -> JobStats {
+        JobStats {
+            name: job.name.clone(),
+            kind: job.spec.kind(),
+            priority: job.priority,
+            arrival_round: 0,
+            admitted_round: None,
+            completed_round: None,
+            preemptions: 0,
+            rounds_run: 0,
+            projections: 0,
+            converged: false,
+            expired: false,
+            deadline_met: Some(false),
+            objective: None,
+            phases: Default::default(),
+            result: None,
+            shed: true,
+            failed: false,
+            retries: 0,
+            recovered: false,
+            error: None,
+        }
+    }
+}
+
+/// Fallback state roots for fleets without an explicit `state_dir`
+/// (distinct per call so parallel tests never collide).
+static TEMP_ROOT_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// Run a supervised fleet to completion. `initial_jobs` seed the
+/// global registry (ignored when a prior process's manifest is
+/// replayed — the manifest is canonical); `intake` optionally feeds
+/// live arrivals until a drain/halt. Returns when every job reached a
+/// terminal state (graceful drain), on an ordered halt (state
+/// persisted), or when work is stranded with no live shard
+/// (`drained = false`; the CLI exits nonzero).
+pub fn run_fleet(
+    initial_jobs: Vec<Job>,
+    intake: Option<IntakeHandle>,
+    cfg: FleetConfig,
+    mut on_event: impl FnMut(&FleetEvent),
+) -> Result<FleetStats, ServeError> {
+    let bad = |msg: String| ServeError::Config { msg };
+    if cfg.shards < 1 {
+        return Err(bad("fleet needs at least one shard".to_string()));
+    }
+    if cfg.shard.opts.inner_sweeps.is_none() {
+        return Err(bad(
+            "fleet serving must pin SolveOptions::inner_sweeps (live intake can mix job \
+             kinds at any time)"
+                .to_string(),
+        ));
+    }
+    let plan = cfg.fault_plan.clone();
+    if plan.crash_after_round.is_some()
+        || plan.corrupt_checkpoint.is_some()
+        || plan.garble_trace_line.is_some()
+    {
+        return Err(bad(
+            "crash=/corrupt=/garble= are single-scheduler faults; the fleet supervisor \
+             supports kill-shard=, stall-shard=, and poison="
+                .to_string(),
+        ));
+    }
+    for (what, f) in [("kill-shard", plan.kill_shard), ("stall-shard", plan.stall_shard)] {
+        if let Some((shard, _)) = f {
+            if shard >= cfg.shards {
+                return Err(bad(format!(
+                    "{what} names shard {shard}, but the fleet has {} shards",
+                    cfg.shards
+                )));
+            }
+        }
+    }
+
+    let root = cfg.state_dir.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!(
+            "paf-fleet-{}-{}",
+            std::process::id(),
+            TEMP_ROOT_SEQ.fetch_add(1, Relaxed)
+        ))
+    });
+    std::fs::create_dir_all(&root)
+        .map_err(|e| ServeError::Io { path: root.display().to_string(), msg: e.to_string() })?;
+
+    // Replay a prior process's manifest (if any), pulling each
+    // unfinished job's freshest readable checkpoint bytes into memory,
+    // then clear the shard dirs: local ids restart from zero, so stale
+    // files must never leak into a new shard's recovery scan.
+    let mpath = manifest_path(&root);
+    let recovered = match std::fs::read_to_string(&mpath) {
+        Ok(text) => replay_manifest(&text),
+        Err(_) => Vec::new(),
+    };
+    let mut seeds: Vec<(Job, Option<Vec<u8>>, bool)> = Vec::new(); // (job, ckpt, done_prior)
+    let mut resumed_event = None;
+    if recovered.is_empty() {
+        for (i, mut job) in initial_jobs.into_iter().enumerate() {
+            job.id = i;
+            seeds.push((job, None, false));
+        }
+    } else {
+        let mut live = 0usize;
+        let mut prior = 0usize;
+        for r in recovered {
+            let bytes = if r.done {
+                None
+            } else {
+                r.assigns.iter().rev().find_map(|&(shard, local)| {
+                    std::fs::read(persist::checkpoint_path(
+                        &root.join(format!("shard-{shard}")),
+                        local,
+                    ))
+                    .ok()
+                })
+            };
+            if r.done {
+                prior += 1;
+            } else {
+                live += 1;
+            }
+            let done = r.done;
+            seeds.push((r.job, bytes, done));
+        }
+        resumed_event = Some(FleetEvent::Resumed { jobs: live, done_prior: prior });
+    }
+    for shard in 0..cfg.shards {
+        let dir = root.join(format!("shard-{shard}"));
+        if let Ok(found) = persist::scan_state_dir(&dir) {
+            for (_, path) in found {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
+    // The journal restarts from scratch with the recovered registry
+    // (done-prior jobs carried forward so a second restart still knows
+    // them).
+    let mut manifest = std::fs::OpenOptions::new()
+        .create(true)
+        .write(true)
+        .truncate(true)
+        .open(&mpath)
+        .ok();
+
+    // Spawn the shards.
+    let (report_tx, report_rx) = std::sync::mpsc::channel::<ShardReport>();
+    let mut txs: Vec<Option<Sender<ShardMsg>>> = Vec::new();
+    let mut handles: Vec<Option<std::thread::JoinHandle<()>>> = Vec::new();
+    let mut shared: Vec<Arc<ShardShared>> = Vec::new();
+    for shard in 0..cfg.shards {
+        let (tx, rx) = std::sync::mpsc::channel::<ShardMsg>();
+        let sh = Arc::new(ShardShared {
+            rounds: AtomicUsize::new(0),
+            beat_us: AtomicU64::new(now_us()),
+            dead: AtomicBool::new(false),
+            halt: AtomicBool::new(false),
+            pause: Arc::new(AtomicBool::new(false)),
+        });
+        let kill = plan.kill_shard.and_then(|(s, r)| (s == shard).then_some(r));
+        let stall = plan.stall_shard.and_then(|(s, r)| (s == shard).then_some(r));
+        let metrics_path = cfg
+            .metrics_out
+            .as_ref()
+            .map(|p| PathBuf::from(format!("{}.shard{shard}", p.display())));
+        let template = cfg.shard.clone();
+        let state_dir = root.join(format!("shard-{shard}"));
+        let rep = report_tx.clone();
+        let sh2 = Arc::clone(&sh);
+        let handle = std::thread::Builder::new()
+            .name(format!("paf-shard-{shard}"))
+            .spawn(move || {
+                shard_worker(shard, template, state_dir, metrics_path, kill, stall, rx, rep, sh2)
+            })
+            .map_err(|e| ServeError::Io {
+                path: format!("<shard {shard} thread>"),
+                msg: e.to_string(),
+            })?;
+        txs.push(Some(tx));
+        handles.push(Some(handle));
+        shared.push(sh);
+    }
+    drop(report_tx);
+
+    // Supervisor state.
+    let mut stats = FleetStats {
+        shards: vec![ShardStats::default(); cfg.shards],
+        jobs: Vec::new(),
+        migrations: 0,
+        skipped_lines: 0,
+        skipped: Vec::new(),
+        completed: 0,
+        shed: 0,
+        drained: false,
+        halted: false,
+        events: Vec::new(),
+    };
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut assigned_seq: Vec<Vec<usize>> = vec![Vec::new(); cfg.shards];
+    let mut outstanding: Vec<Vec<usize>> = vec![Vec::new(); cfg.shards];
+    // (global, checkpoint bytes, migrated?) awaiting placement.
+    let mut pending: VecDeque<(usize, Option<Vec<u8>>, bool)> = VecDeque::new();
+    let mut next_seq = 0u64;
+    let mut intake_open = intake.is_some();
+    let mut halting = false;
+    let mut stranded = false;
+    let mut drain_announced = false;
+
+    macro_rules! emit {
+        ($ev:expr) => {{
+            let event = $ev;
+            on_event(&event);
+            stats.events.push(FleetLogEntry { seq: next_seq, at_us: now_us(), event });
+            next_seq += 1;
+        }};
+    }
+    macro_rules! register {
+        ($job:expr) => {{
+            let mut job: Job = $job;
+            let global = jobs.len();
+            job.id = global;
+            stats.jobs.push(FleetJobStats {
+                name: job.name.clone(),
+                kind: job.spec.kind(),
+                priority: job.priority,
+                shard: 0,
+                migrations: 0,
+                done_prior: false,
+                stats: None,
+            });
+            // Journal acceptance immediately: a job the fleet has
+            // taken must survive a restart even if a halt lands
+            // before it is ever placed on a shard.
+            journal(
+                &mut manifest,
+                format!(
+                    "{{\"op\": \"accept\", \"global\": {global}, \"line\": \"{}\"}}",
+                    manifest_job_line(&job)
+                ),
+            );
+            jobs.push(job);
+            global
+        }};
+    }
+    macro_rules! job_done {
+        ($shard:expr, $global:expr, $js:expr) => {{
+            let (shard, global, js): (usize, usize, Box<JobStats>) = ($shard, $global, $js);
+            if !stats.shards[shard].dead {
+                outstanding[shard].retain(|&g| g != global);
+                let completed = js.completed_round.is_some();
+                if completed {
+                    stats.completed += 1;
+                    stats.shards[shard].completed += 1;
+                }
+                stats.jobs[global].stats = Some(*js);
+                journal(&mut manifest, format!("{{\"op\": \"done\", \"global\": {global}}}"));
+                emit!(FleetEvent::JobDone { job: global, shard, completed });
+            }
+        }};
+    }
+
+    if let Some(ev) = resumed_event {
+        emit!(ev);
+    }
+    for (job, bytes, done_prior) in seeds {
+        let global = register!(job);
+        if done_prior {
+            stats.jobs[global].done_prior = true;
+            stats.completed += 1;
+            journal(
+                &mut manifest,
+                format!(
+                    "{{\"op\": \"done-prior\", \"global\": {global}, \"line\": \"{}\"}}",
+                    manifest_job_line(&jobs[global])
+                ),
+            );
+        } else {
+            pending.push_back((global, bytes, false));
+        }
+    }
+
+    loop {
+        // 1. Live intake (non-blocking): register arrivals, record
+        // skips, honor drain/halt orders.
+        if intake_open {
+            let rx = &intake.as_ref().expect("intake_open implies a handle").rx;
+            loop {
+                match rx.try_recv() {
+                    Ok(IntakeItem::Job(job)) => {
+                        let global = register!(job);
+                        pending.push_back((global, None, false));
+                    }
+                    Ok(IntakeItem::Skip(e)) => {
+                        stats.skipped_lines += 1;
+                        let (line, msg) = match &e {
+                            ServeError::Trace { line, msg } => (*line, msg.clone()),
+                            other => (0, other.to_string()),
+                        };
+                        stats.skipped.push(e);
+                        emit!(FleetEvent::SkippedLine { line, msg });
+                    }
+                    Ok(IntakeItem::Drain) => {
+                        intake_open = false;
+                        drain_announced = true;
+                        emit!(FleetEvent::DrainStarted);
+                        break;
+                    }
+                    Ok(IntakeItem::Halt) => {
+                        intake_open = false;
+                        halting = true;
+                        emit!(FleetEvent::HaltStarted);
+                        break;
+                    }
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        intake_open = false;
+                        drain_announced = true;
+                        emit!(FleetEvent::DrainStarted);
+                        break;
+                    }
+                }
+            }
+        }
+
+        if halting {
+            for sh in &shared {
+                sh.halt.store(true, Relaxed);
+                sh.pause.store(true, Relaxed);
+            }
+            for tx in &mut txs {
+                *tx = None;
+            }
+        }
+
+        // 2. Overload control: shed the lowest-priority unplaced
+        // arrivals while the fleet holds more than high-water jobs.
+        if let Some(hw) = cfg.queue_high_water {
+            let in_flight: usize = outstanding.iter().map(Vec::len).sum();
+            while !pending.is_empty() && in_flight + pending.len() > hw {
+                let worst = pending
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (g, _, _))| (jobs[*g].priority, std::cmp::Reverse(*g)))
+                    .map(|(i, _)| i)
+                    .expect("non-empty pending");
+                let Some((global, _, _)) = pending.remove(worst) else { break };
+                stats.jobs[global].stats = Some(JobStats::shed_placeholder(&jobs[global]));
+                stats.shed += 1;
+                emit!(FleetEvent::Shed { job: global });
+            }
+        }
+
+        // 3. Placement: least-loaded live shard, jobs in arrival
+        // order; each shard that got work is nudged once at the end
+        // (its running generation pauses and picks the work up).
+        if !halting {
+            let mut nudged: Vec<usize> = Vec::new();
+            while let Some((global, ckpt, migrated)) = pending.pop_front() {
+                let target = (0..cfg.shards)
+                    .filter(|&s| !stats.shards[s].dead && txs[s].is_some())
+                    .min_by_key(|&s| (outstanding[s].len(), s));
+                let Some(to) = target else {
+                    pending.push_front((global, ckpt, migrated));
+                    stranded = true;
+                    break;
+                };
+                let local = assigned_seq[to].len();
+                assigned_seq[to].push(global);
+                outstanding[to].push(global);
+                stats.shards[to].assigned += 1;
+                stats.jobs[global].shard = to;
+                let with_checkpoint = ckpt.is_some();
+                let poisoned = plan.poison_spec.contains(&global);
+                journal(
+                    &mut manifest,
+                    format!(
+                        "{{\"op\": \"assign\", \"global\": {global}, \"shard\": {to}, \
+                         \"local\": {local}, \"line\": \"{}\"}}",
+                        manifest_job_line(&jobs[global])
+                    ),
+                );
+                let sent = txs[to]
+                    .as_ref()
+                    .map(|tx| {
+                        tx.send(ShardMsg::Assign {
+                            job: jobs[global].clone(),
+                            global,
+                            ckpt,
+                            poisoned,
+                        })
+                        .is_ok()
+                    })
+                    .unwrap_or(false);
+                if !sent {
+                    // The shard died between the liveness check and the
+                    // send; undo and let the health pass migrate it.
+                    assigned_seq[to].pop();
+                    outstanding[to].retain(|&g| g != global);
+                    stats.shards[to].assigned -= 1;
+                    pending.push_front((global, None, migrated));
+                    break;
+                }
+                emit!(FleetEvent::Placed { job: global, shard: to, migrated, with_checkpoint });
+                if !nudged.contains(&to) {
+                    nudged.push(to);
+                }
+            }
+            for s in nudged {
+                shared[s].pause.store(true, Relaxed);
+            }
+        }
+
+        // 4. Shard reports.
+        loop {
+            match report_rx.try_recv() {
+                Ok(ShardReport::Event { shard, event }) => {
+                    if !stats.shards[shard].dead {
+                        emit!(FleetEvent::Shard { shard, event });
+                    }
+                }
+                Ok(ShardReport::JobDone { shard, global, stats: js }) => {
+                    job_done!(shard, global, js);
+                }
+                Ok(ShardReport::Dead { shard, cause }) => {
+                    let evs = declare_dead(
+                        shard,
+                        cause,
+                        &root,
+                        &mut stats,
+                        &shared,
+                        &mut txs,
+                        &assigned_seq,
+                        &mut outstanding,
+                        &mut pending,
+                    );
+                    for ev in evs {
+                        emit!(ev);
+                    }
+                }
+                Ok(ShardReport::Drained { .. }) => {}
+                Err(_) => break,
+            }
+        }
+
+        // 5. Health: a shard holding work is dead when its thread
+        // exited or its heartbeat went stale.
+        for shard in 0..cfg.shards {
+            if stats.shards[shard].dead || outstanding[shard].is_empty() {
+                continue;
+            }
+            let exited = handles[shard].as_ref().is_some_and(|h| h.is_finished());
+            let stale = now_us().saturating_sub(shared[shard].beat_us.load(Relaxed))
+                > cfg.stall_timeout_ms.saturating_mul(1_000);
+            if exited || stale {
+                let cause = if exited {
+                    "worker thread exited with work outstanding".to_string()
+                } else {
+                    format!("heartbeat stalled past {} ms", cfg.stall_timeout_ms)
+                };
+                let evs = declare_dead(
+                    shard,
+                    cause,
+                    &root,
+                    &mut stats,
+                    &shared,
+                    &mut txs,
+                    &assigned_seq,
+                    &mut outstanding,
+                    &mut pending,
+                );
+                for ev in evs {
+                    emit!(ev);
+                }
+            }
+        }
+
+        // 6. Termination.
+        let in_flight: usize = outstanding.iter().map(Vec::len).sum();
+        if halting {
+            if handles.iter().flatten().all(|h| h.is_finished()) {
+                for h in handles.iter_mut().filter_map(Option::take) {
+                    let _ = h.join();
+                }
+                while let Ok(report) = report_rx.try_recv() {
+                    if let ShardReport::JobDone { shard, global, stats: js } = report {
+                        job_done!(shard, global, js);
+                    }
+                }
+                stats.drained = true;
+                stats.halted = true;
+                break;
+            }
+        } else if stranded && (in_flight > 0 || !pending.is_empty()) {
+            // Work left, nobody alive to run it.
+            for tx in &mut txs {
+                *tx = None;
+            }
+            for h in handles.iter_mut().filter_map(Option::take) {
+                let _ = h.join();
+            }
+            stats.drained = false;
+            break;
+        } else if !intake_open && pending.is_empty() && in_flight == 0 {
+            // Graceful drain: close the assign channels; idle workers
+            // wake on the disconnect and exit.
+            if !drain_announced {
+                drain_announced = true;
+                emit!(FleetEvent::DrainStarted);
+            }
+            for tx in &mut txs {
+                *tx = None;
+            }
+            for h in handles.iter_mut().filter_map(Option::take) {
+                let _ = h.join();
+            }
+            while let Ok(report) = report_rx.try_recv() {
+                match report {
+                    ShardReport::JobDone { shard, global, stats: js } => {
+                        job_done!(shard, global, js);
+                    }
+                    ShardReport::Event { shard, event } => {
+                        if !stats.shards[shard].dead {
+                            emit!(FleetEvent::Shard { shard, event });
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            stats.drained = true;
+            break;
+        }
+
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    for shard in 0..cfg.shards {
+        stats.shards[shard].rounds = shared[shard].rounds.load(Relaxed);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::problem::SolveOptions;
+    use crate::serve::JobSpec;
+
+    fn job(id: usize, n: usize) -> Job {
+        Job {
+            id,
+            name: format!("j{id}"),
+            spec: JobSpec::Nearness { n, graph_type: 1, seed: id as u64 + 1 },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: None,
+            deadline_ms: None,
+        }
+    }
+
+    #[test]
+    fn fleet_config_validation_is_typed() {
+        let err = |cfg: FleetConfig| match run_fleet(vec![job(0, 8)], None, cfg, |_| {}) {
+            Err(ServeError::Config { msg }) => msg,
+            other => panic!("expected Config error, got {other:?}"),
+        };
+        assert!(err(FleetConfig { shards: 0, ..Default::default() }).contains("shard"));
+        let unpinned = FleetConfig {
+            shard: ServeConfig { opts: SolveOptions::new(), ..ServeConfig::default() },
+            ..Default::default()
+        };
+        assert!(err(unpinned).contains("inner_sweeps"));
+        let crashy = FleetConfig {
+            fault_plan: FaultPlan { crash_after_round: Some(3), ..Default::default() },
+            ..Default::default()
+        };
+        assert!(err(crashy).contains("single-scheduler"));
+        let out_of_range = FleetConfig {
+            shards: 2,
+            fault_plan: FaultPlan { kill_shard: Some((5, 1)), ..Default::default() },
+            ..Default::default()
+        };
+        assert!(err(out_of_range).contains("shard 5"));
+    }
+
+    #[test]
+    fn manifest_replay_reconstructs_jobs_assignments_and_doneness() {
+        let j0 = job(0, 8).to_json_line();
+        let j1 = job(1, 9).to_json_line();
+        let j2 = job(2, 10).to_json_line();
+        let text = format!(
+            "{{\"op\": \"assign\", \"global\": 0, \"shard\": 0, \"local\": 0, \"line\": \"{}\"}}\n\
+             {{\"op\": \"assign\", \"global\": 1, \"shard\": 1, \"local\": 0, \"line\": \"{}\"}}\n\
+             {{\"op\": \"assign\", \"global\": 1, \"shard\": 0, \"local\": 1, \"line\": \"{}\"}}\n\
+             {{\"op\": \"done\", \"global\": 0}}\n\
+             {{\"op\": \"accept\", \"global\": 2, \"line\": \"{}\"}}\n\
+             this line is torn garbage\n",
+            queue::json_escape(&j0),
+            queue::json_escape(&j1),
+            queue::json_escape(&j1),
+            queue::json_escape(&j2),
+        );
+        let recovered = replay_manifest(&text);
+        assert_eq!(recovered.len(), 3);
+        assert!(
+            !recovered[2].done && recovered[2].assigns.is_empty(),
+            "an accepted-but-never-placed job survives with no assignments"
+        );
+        assert!(recovered[0].done);
+        assert_eq!(recovered[0].assigns, vec![(0, 0)]);
+        assert!(!recovered[1].done, "job 1 is still in flight");
+        assert_eq!(
+            recovered[1].assigns,
+            vec![(1, 0), (0, 1)],
+            "both assignments survive, oldest first (newest wins the checkpoint lookup)"
+        );
+        assert_eq!(recovered[1].job.spec, job(1, 9).spec);
+        assert_eq!(recovered[1].job.id, 1, "globals are re-pinned on replay");
+    }
+
+    #[test]
+    fn done_prior_jobs_survive_a_second_replay() {
+        let line = queue::json_escape(&job(0, 8).to_json_line());
+        let text = format!("{{\"op\": \"done-prior\", \"global\": 0, \"line\": \"{line}\"}}\n");
+        let recovered = replay_manifest(&text);
+        assert_eq!(recovered.len(), 1);
+        assert!(recovered[0].done);
+        assert!(recovered[0].assigns.is_empty());
+    }
+
+    #[test]
+    fn single_shard_fleet_drains_a_small_trace() {
+        let dir = std::env::temp_dir().join(format!(
+            "paf-fleet-unit-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = FleetConfig {
+            shards: 1,
+            state_dir: Some(dir.clone()),
+            shard: ServeConfig {
+                capacity: 2,
+                opts: SolveOptions::new().violation_tol(1e-4).inner_sweeps(2).sharded(0),
+                ..ServeConfig::default()
+            },
+            ..Default::default()
+        };
+        let jobs = vec![job(0, 12), job(1, 14)];
+        let stats = run_fleet(jobs, None, cfg, |_| {}).expect("valid fleet config");
+        assert!(stats.drained, "a trace-only fleet must drain cleanly");
+        assert!(!stats.halted);
+        assert!(stats.all_completed(), "{stats:?}");
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.shards[0].assigned, 2);
+        assert_eq!(stats.shards[0].completed, 2);
+        assert!(!stats.shards[0].dead);
+        assert_eq!(stats.migrations, 0);
+        assert!(
+            stats.events.iter().any(|e| matches!(e.event, FleetEvent::Placed { .. })),
+            "placement events recorded"
+        );
+        let mut last = 0u64;
+        for e in &stats.events {
+            assert!(e.at_us >= last, "fleet event timestamps are monotone");
+            last = e.at_us;
+        }
+        assert!(
+            persist::scan_state_dir(&dir.join("shard-0")).expect("scan").is_empty(),
+            "a drained shard leaves no state files"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,345 @@
+//! Live job intake: a listener thread that feeds the fleet supervisor
+//! line-delimited JSON jobs from a Unix socket, a TCP socket, or stdin.
+//!
+//! The wire format is exactly the `paf serve --trace` file format, one
+//! job per line (parsed via [`queue::parse_intake_line`], the same
+//! code path as file traces), plus two control lines:
+//!
+//! ```text
+//! drain            stop accepting work; finish everything, exit 0
+//! halt             stop now; persist running state, exit 0
+//! ```
+//!
+//! (also accepted as JSON: `{"op": "drain"}` / `{"op": "halt"}`).
+//!
+//! Robustness contract, pinned by `tests/serve_intake.rs`:
+//!
+//! - A malformed line is skipped and reported with its 1-based line
+//!   number *within that connection* — identical semantics to
+//!   [`parse_job_trace_lenient`](super::parse_job_trace_lenient)'s
+//!   per-file reports. The connection (and the queue) live on.
+//! - A client that disconnects mid-line cannot poison the queue: the
+//!   dangling partial line is parsed if complete-enough or reported as
+//!   malformed, and the listener simply moves to the next connection.
+//! - Backpressure is real: items flow through a bounded
+//!   [`sync_channel`](std::sync::mpsc::sync_channel), so a flood of
+//!   arrivals blocks the socket reader rather than ballooning memory
+//!   (the supervisor's high-water shedding governs the queue proper).
+
+use super::queue::{self, Job};
+use super::ServeError;
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, SyncSender};
+
+/// Where the intake listener accepts jobs from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IntakeSource {
+    /// Read the process's stdin to EOF, then drain.
+    Stdin,
+    /// Bind a TCP listener (`HOST:PORT`; port 0 picks a free port).
+    Tcp(String),
+    /// Bind a Unix-domain socket at this path (a stale socket file from
+    /// a previous run is removed first).
+    Unix(PathBuf),
+}
+
+impl IntakeSource {
+    /// Parse a `--listen` flag value: `stdin` (or `-`), `unix:PATH`,
+    /// `tcp:HOST:PORT`, or a bare `HOST:PORT`.
+    pub fn parse(s: &str) -> Result<IntakeSource, ServeError> {
+        let s = s.trim();
+        match s {
+            "stdin" | "-" => Ok(IntakeSource::Stdin),
+            _ if s.is_empty() => Err(ServeError::Config {
+                msg: "--listen needs stdin, unix:PATH, or HOST:PORT".to_string(),
+            }),
+            _ => {
+                if let Some(path) = s.strip_prefix("unix:") {
+                    return Ok(IntakeSource::Unix(PathBuf::from(path)));
+                }
+                let addr = s.strip_prefix("tcp:").unwrap_or(s);
+                if addr.rsplit_once(':').is_none() {
+                    return Err(ServeError::Config {
+                        msg: format!("--listen {s:?} is not stdin, unix:PATH, or HOST:PORT"),
+                    });
+                }
+                Ok(IntakeSource::Tcp(addr.to_string()))
+            }
+        }
+    }
+}
+
+/// One message from the intake thread to the supervisor.
+#[derive(Debug)]
+pub enum IntakeItem {
+    /// A parsed job (its `id` is provisional; the supervisor assigns
+    /// the fleet-global id on receipt).
+    Job(Job),
+    /// A malformed line, reported with its connection-relative line
+    /// number — the supervisor records it and keeps serving.
+    Skip(ServeError),
+    /// `drain` control line (or stdin EOF): stop intake, finish all
+    /// accepted work, exit cleanly.
+    Drain,
+    /// `halt` control line: stop intake *and* ask every shard to pause
+    /// and persist; the supervisor exits once state is durable.
+    Halt,
+}
+
+/// A running intake listener.
+pub struct IntakeHandle {
+    /// Bounded item stream (the supervisor's end).
+    pub rx: Receiver<IntakeItem>,
+    /// The actual bound TCP address, when the source was TCP — lets
+    /// tests bind port 0 and then connect.
+    pub addr: Option<std::net::SocketAddr>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl IntakeHandle {
+    /// Wait for the listener thread to finish (it exits after a drain
+    /// or halt control line, stdin EOF, or when the supervisor drops
+    /// the receiver).
+    pub fn join(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for IntakeHandle {
+    fn drop(&mut self) {
+        // Best-effort: the thread exits on its own once its sends fail
+        // (receiver dropped) or its source closes; never block drop.
+        let _ = self.join.take();
+    }
+}
+
+/// Channel bound: a flood of arrivals blocks the socket reader once
+/// this many items are in flight, instead of growing without bound.
+const INTAKE_CHANNEL_BOUND: usize = 64;
+
+/// Spawn the intake listener for `source`. Binding happens in the
+/// calling thread so errors surface synchronously (and the bound TCP
+/// address is known before any client connects).
+pub fn spawn_intake(source: IntakeSource) -> Result<IntakeHandle, ServeError> {
+    let (tx, rx) = std::sync::mpsc::sync_channel(INTAKE_CHANNEL_BOUND);
+    match source {
+        IntakeSource::Stdin => {
+            let join = std::thread::Builder::new()
+                .name("paf-intake".to_string())
+                .spawn(move || {
+                    let stdin = std::io::stdin();
+                    pump_stream(stdin.lock(), &tx);
+                    let _ = tx.send(IntakeItem::Drain);
+                })
+                .map_err(|e| spawn_err(&e))?;
+            Ok(IntakeHandle { rx, addr: None, join: Some(join) })
+        }
+        IntakeSource::Tcp(addr) => {
+            let listener = std::net::TcpListener::bind(&addr)
+                .map_err(|e| ServeError::Io { path: addr.clone(), msg: e.to_string() })?;
+            let bound = listener.local_addr().ok();
+            let join = std::thread::Builder::new()
+                .name("paf-intake".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        let Ok(conn) = conn else { continue };
+                        if !pump_stream(std::io::BufReader::new(conn), &tx) {
+                            break;
+                        }
+                    }
+                })
+                .map_err(|e| spawn_err(&e))?;
+            Ok(IntakeHandle { rx, addr: bound, join: Some(join) })
+        }
+        IntakeSource::Unix(path) => {
+            // A stale socket file from a crashed run would fail the
+            // bind; remove it first (a live listener would have it
+            // open, but two fleets on one path is operator error).
+            let _ = std::fs::remove_file(&path);
+            let listener = std::os::unix::net::UnixListener::bind(&path).map_err(|e| {
+                ServeError::Io { path: path.display().to_string(), msg: e.to_string() }
+            })?;
+            let cleanup = path.clone();
+            let join = std::thread::Builder::new()
+                .name("paf-intake".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        let Ok(conn) = conn else { continue };
+                        if !pump_stream(std::io::BufReader::new(conn), &tx) {
+                            break;
+                        }
+                    }
+                    let _ = std::fs::remove_file(&cleanup);
+                })
+                .map_err(|e| spawn_err(&e))?;
+            Ok(IntakeHandle { rx, addr: None, join: Some(join) })
+        }
+    }
+}
+
+fn spawn_err(e: &std::io::Error) -> ServeError {
+    ServeError::Io { path: "<intake thread>".to_string(), msg: e.to_string() }
+}
+
+/// Pump one connection's lines into the channel. Returns `false` when
+/// the listener should stop accepting (drain/halt seen, or the
+/// supervisor dropped its receiver); `true` to accept the next
+/// connection. An I/O error mid-read is a dropped client, not a fleet
+/// problem: whatever complete lines arrived are already queued, and
+/// the final partial line (no trailing newline) is handled like any
+/// other line — parsed or reported, never silently kept.
+fn pump_stream<R: BufRead>(mut reader: R, tx: &SyncSender<IntakeItem>) -> bool {
+    let mut lineno = 0usize;
+    let mut accepted = 0usize;
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        let complete = match reader.read_line(&mut buf) {
+            Ok(0) => return true, // clean EOF: next connection
+            Ok(_) => buf.ends_with('\n'),
+            Err(_) => return true, // dropped client: queue is unaffected
+        };
+        lineno += 1;
+        let line = buf.trim();
+        if !line.is_empty() && !line.starts_with('#') {
+            match classify(line) {
+                Control::Drain => {
+                    let _ = tx.send(IntakeItem::Drain);
+                    return false;
+                }
+                Control::Halt => {
+                    let _ = tx.send(IntakeItem::Halt);
+                    return false;
+                }
+                Control::None => {
+                    // The provisional id doubles as the dedup seed
+                    // default; the supervisor re-ids on arrival.
+                    let item = match queue::parse_intake_line(line, lineno, accepted) {
+                        Ok(job) => {
+                            accepted += 1;
+                            IntakeItem::Job(job)
+                        }
+                        Err(e) => IntakeItem::Skip(e),
+                    };
+                    if tx.send(item).is_err() {
+                        return false; // supervisor gone
+                    }
+                }
+            }
+        }
+        if !complete {
+            // A partial final line means the client vanished mid-write;
+            // treat it as EOF for this connection.
+            return true;
+        }
+    }
+}
+
+enum Control {
+    Drain,
+    Halt,
+    None,
+}
+
+/// Recognize control lines before attempting a job parse, so `drain`
+/// is an order, not a malformed job.
+fn classify(line: &str) -> Control {
+    match line {
+        "drain" => return Control::Drain,
+        "halt" => return Control::Halt,
+        _ => {}
+    }
+    if line.starts_with('{') {
+        if let Ok(obj) = crate::runtime::json::Json::parse(line) {
+            if let Some(op) = obj.get("op").and_then(crate::runtime::json::Json::as_str) {
+                match op {
+                    "drain" => return Control::Drain,
+                    "halt" => return Control::Halt,
+                    _ => {}
+                }
+            }
+        }
+    }
+    Control::None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_flag_parses_every_source_shape() {
+        assert_eq!(IntakeSource::parse("stdin").unwrap(), IntakeSource::Stdin);
+        assert_eq!(IntakeSource::parse("-").unwrap(), IntakeSource::Stdin);
+        assert_eq!(
+            IntakeSource::parse("unix:/tmp/paf.sock").unwrap(),
+            IntakeSource::Unix(PathBuf::from("/tmp/paf.sock"))
+        );
+        assert_eq!(
+            IntakeSource::parse("tcp:127.0.0.1:7000").unwrap(),
+            IntakeSource::Tcp("127.0.0.1:7000".to_string())
+        );
+        assert_eq!(
+            IntakeSource::parse("127.0.0.1:0").unwrap(),
+            IntakeSource::Tcp("127.0.0.1:0".to_string())
+        );
+        assert!(matches!(IntakeSource::parse(""), Err(ServeError::Config { .. })));
+        assert!(matches!(IntakeSource::parse("florp"), Err(ServeError::Config { .. })));
+    }
+
+    #[test]
+    fn pump_reports_malformed_lines_with_connection_line_numbers() {
+        let text = "# comment\n\
+                    {\"problem\": \"nearness\", \"n\": 8}\n\
+                    {\"problem\": \"nearness\"\n\
+                    {\"problem\": \"cc\", \"n\": 9}\n";
+        let (tx, rx) = std::sync::mpsc::sync_channel(16);
+        assert!(pump_stream(std::io::Cursor::new(text), &tx));
+        drop(tx);
+        let items: Vec<IntakeItem> = rx.iter().collect();
+        assert_eq!(items.len(), 3);
+        let IntakeItem::Job(a) = &items[0] else { panic!("want job, got {:?}", items[0]) };
+        assert_eq!((a.id, a.name.as_str()), (0, "nearness-0"));
+        let IntakeItem::Skip(ServeError::Trace { line, .. }) = &items[1] else {
+            panic!("want skip, got {:?}", items[1]);
+        };
+        assert_eq!(*line, 3, "line numbers are 1-based and count blank/comment lines");
+        let IntakeItem::Job(b) = &items[2] else { panic!("want job, got {:?}", items[2]) };
+        assert_eq!(b.id, 1, "provisional ids count only accepted jobs");
+    }
+
+    #[test]
+    fn partial_final_line_ends_the_connection_without_poisoning() {
+        // Mid-line disconnect: no trailing newline on a half-written
+        // job. The partial line is reported malformed, the pump asks
+        // for the next connection, nothing hangs.
+        let text = "{\"problem\": \"nearness\", \"n\": 8}\n{\"problem\": \"nea";
+        let (tx, rx) = std::sync::mpsc::sync_channel(16);
+        assert!(pump_stream(std::io::Cursor::new(text), &tx), "pump must move on");
+        drop(tx);
+        let items: Vec<IntakeItem> = rx.iter().collect();
+        assert_eq!(items.len(), 2);
+        assert!(matches!(items[0], IntakeItem::Job(_)));
+        assert!(matches!(items[1], IntakeItem::Skip(ServeError::Trace { line: 2, .. })));
+    }
+
+    #[test]
+    fn control_lines_win_over_job_parsing() {
+        let text = "{\"problem\": \"nearness\", \"n\": 8}\ndrain\n{\"problem\": \"cc\", \"n\": 9}\n";
+        let (tx, rx) = std::sync::mpsc::sync_channel(16);
+        assert!(!pump_stream(std::io::Cursor::new(text), &tx), "drain stops the listener");
+        drop(tx);
+        let items: Vec<IntakeItem> = rx.iter().collect();
+        assert_eq!(items.len(), 2, "nothing after the drain line is read");
+        assert!(matches!(items[0], IntakeItem::Job(_)));
+        assert!(matches!(items[1], IntakeItem::Drain));
+
+        let (tx, rx) = std::sync::mpsc::sync_channel(16);
+        assert!(!pump_stream(std::io::Cursor::new("{\"op\": \"halt\"}\n"), &tx));
+        drop(tx);
+        assert!(matches!(rx.iter().next(), Some(IntakeItem::Halt)));
+    }
+}

@@ -15,19 +15,28 @@
 //!
 //! Quick tour: [`queue`] — job specs, trace parsing, the priority
 //! queue; [`admission`] — the owned instance arena ([`JobBank`]) and
-//! typed-handle adapters; [`scheduler`] — the service loop.
+//! typed-handle adapters; [`scheduler`] — the service loop; [`intake`]
+//! — live job arrival over a socket or stdin; [`fleet`] — the
+//! multi-shard supervisor (health checks, checkpoint migration,
+//! manifest-journaled restart).
 
 pub mod admission;
+pub mod fleet;
+pub mod intake;
 pub mod persist;
 pub mod queue;
 pub mod scheduler;
 
 pub use admission::{admit_job, resume_job, solve_job_solo, take_job, JobBank, JobHandle, JobInput, JobOutcome};
+pub use fleet::{
+    run_fleet, FleetConfig, FleetEvent, FleetJobStats, FleetLogEntry, FleetStats, ShardStats,
+};
+pub use intake::{spawn_intake, IntakeHandle, IntakeItem, IntakeSource};
 pub use persist::{
     load_checkpoint, remove_checkpoint, scan_state_dir, write_checkpoint_atomic, FaultPlan,
     CRASH_EXIT_CODE,
 };
-pub use queue::{parse_job_trace, parse_job_trace_lenient, Job, JobQueue, JobSpec};
+pub use queue::{parse_intake_line, parse_job_trace, parse_job_trace_lenient, Job, JobQueue, JobSpec};
 pub use scheduler::{
     demo_trace, JobStats, Scheduler, ServeConfig, ServeEvent, ServeLogEntry, ServeStats,
 };
@@ -54,6 +63,9 @@ pub enum ServeError {
     Unsupported { msg: String },
     /// A malformed `--fault-plan` spec.
     FaultPlan { msg: String },
+    /// An invalid scheduler/fleet configuration. Recoverable: in a
+    /// fleet this kills one shard admission, not the process.
+    Config { msg: String },
 }
 
 impl std::fmt::Display for ServeError {
@@ -66,6 +78,7 @@ impl std::fmt::Display for ServeError {
             ServeError::Corrupt { path, msg } => write!(f, "corrupt checkpoint {path}: {msg}"),
             ServeError::Unsupported { msg } => write!(f, "unsupported: {msg}"),
             ServeError::FaultPlan { msg } => write!(f, "fault plan: {msg}"),
+            ServeError::Config { msg } => write!(f, "config: {msg}"),
         }
     }
 }
@@ -94,6 +107,7 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
     out.push_str(&format!("  \"retried\": {},\n", stats.retried));
     out.push_str(&format!("  \"failed\": {},\n", stats.failed));
     out.push_str(&format!("  \"crashed\": {},\n", stats.crashed));
+    out.push_str(&format!("  \"paused\": {},\n", stats.paused));
     out.push_str("  \"jobs\": [\n");
     for (k, j) in stats.jobs.iter().enumerate() {
         out.push_str(&format!(
@@ -161,41 +175,7 @@ pub fn serve_stats_json(label: &str, stats: &ServeStats) -> String {
     out.push_str("  ],\n");
     out.push_str("  \"events\": [\n");
     for (k, e) in stats.events.iter().enumerate() {
-        let body = match &e.event {
-            ServeEvent::Admitted { round, job, resumed } => format!(
-                "\"event\": \"admitted\", \"round\": {round}, \"job\": {job}, \
-                 \"resumed\": {resumed}"
-            ),
-            ServeEvent::Preempted { round, job, rounds_done } => format!(
-                "\"event\": \"preempted\", \"round\": {round}, \"job\": {job}, \
-                 \"rounds_done\": {rounds_done}"
-            ),
-            ServeEvent::Completed { round, job, converged } => format!(
-                "\"event\": \"completed\", \"round\": {round}, \"job\": {job}, \
-                 \"converged\": {converged}"
-            ),
-            ServeEvent::Expired { round, job, rounds_done } => format!(
-                "\"event\": \"expired\", \"round\": {round}, \"job\": {job}, \
-                 \"rounds_done\": {rounds_done}"
-            ),
-            ServeEvent::Idle { round } => format!("\"event\": \"idle\", \"round\": {round}"),
-            ServeEvent::Recovered { round, job, rounds_done } => format!(
-                "\"event\": \"recovered\", \"round\": {round}, \"job\": {job}, \
-                 \"rounds_done\": {rounds_done}"
-            ),
-            ServeEvent::Shed { round, job, queue_depth } => format!(
-                "\"event\": \"shed\", \"round\": {round}, \"job\": {job}, \
-                 \"queue_depth\": {queue_depth}"
-            ),
-            ServeEvent::Retried { round, job, attempt } => format!(
-                "\"event\": \"retried\", \"round\": {round}, \"job\": {job}, \
-                 \"attempt\": {attempt}"
-            ),
-            ServeEvent::Quarantined { round, job, attempt } => format!(
-                "\"event\": \"quarantined\", \"round\": {round}, \"job\": {job}, \
-                 \"attempt\": {attempt}"
-            ),
-        };
+        let body = serve_event_body(&e.event);
         out.push_str(&format!(
             "    {{\"seq\": {}, {body}}}{}\n",
             e.seq,
@@ -211,6 +191,184 @@ fn opt_num(v: Option<usize>) -> String {
         Some(v) => v.to_string(),
         None => "null".to_string(),
     }
+}
+
+/// The `"event": ...` JSON body of one serve event (no braces) —
+/// shared between the single-scheduler serve JSON and the fleet JSON's
+/// shard-event entries.
+fn serve_event_body(event: &ServeEvent) -> String {
+    match event {
+        ServeEvent::Admitted { round, job, resumed } => format!(
+            "\"event\": \"admitted\", \"round\": {round}, \"job\": {job}, \
+             \"resumed\": {resumed}"
+        ),
+        ServeEvent::Preempted { round, job, rounds_done } => format!(
+            "\"event\": \"preempted\", \"round\": {round}, \"job\": {job}, \
+             \"rounds_done\": {rounds_done}"
+        ),
+        ServeEvent::Completed { round, job, converged } => format!(
+            "\"event\": \"completed\", \"round\": {round}, \"job\": {job}, \
+             \"converged\": {converged}"
+        ),
+        ServeEvent::Expired { round, job, rounds_done } => format!(
+            "\"event\": \"expired\", \"round\": {round}, \"job\": {job}, \
+             \"rounds_done\": {rounds_done}"
+        ),
+        ServeEvent::Idle { round } => format!("\"event\": \"idle\", \"round\": {round}"),
+        ServeEvent::Recovered { round, job, rounds_done } => format!(
+            "\"event\": \"recovered\", \"round\": {round}, \"job\": {job}, \
+             \"rounds_done\": {rounds_done}"
+        ),
+        ServeEvent::Shed { round, job, queue_depth } => format!(
+            "\"event\": \"shed\", \"round\": {round}, \"job\": {job}, \
+             \"queue_depth\": {queue_depth}"
+        ),
+        ServeEvent::Retried { round, job, attempt } => format!(
+            "\"event\": \"retried\", \"round\": {round}, \"job\": {job}, \
+             \"attempt\": {attempt}"
+        ),
+        ServeEvent::Quarantined { round, job, attempt } => format!(
+            "\"event\": \"quarantined\", \"round\": {round}, \"job\": {job}, \
+             \"attempt\": {attempt}"
+        ),
+    }
+}
+
+/// Serialise a [`FleetStats`] as the schema-versioned fleet JSON
+/// (`"kind": "serve-fleet"`, schema v7): per-shard service records,
+/// per-job fleet records with an `x_fnv1a` digest of the final
+/// solution vector (FNV-1a 64 over the little-endian `f64` bytes, as a
+/// hex string — bit-identity across runs is `==` on these), and the
+/// fleet event stream (placements, migrations, shard deaths, and every
+/// shard's serve events with fleet-global job ids).
+pub fn fleet_stats_json(label: &str, stats: &FleetStats) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!(
+        "  \"schema_version\": {},\n",
+        report::SOLVER_JSON_SCHEMA_VERSION
+    ));
+    out.push_str("  \"kind\": \"serve-fleet\",\n");
+    out.push_str(&format!("  \"label\": \"{label}\",\n"));
+    out.push_str(&format!("  \"migrations\": {},\n", stats.migrations));
+    out.push_str(&format!("  \"completed\": {},\n", stats.completed));
+    out.push_str(&format!("  \"shed\": {},\n", stats.shed));
+    out.push_str(&format!("  \"skipped_lines\": {},\n", stats.skipped_lines));
+    out.push_str(&format!("  \"drained\": {},\n", stats.drained));
+    out.push_str(&format!("  \"halted\": {},\n", stats.halted));
+    out.push_str("  \"shards\": [\n");
+    for (k, s) in stats.shards.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"id\": {k}, \"assigned\": {}, \"completed\": {}, \"rounds\": {}, \
+             \"dead\": {}, \"cause\": {}}}{}\n",
+            s.assigned,
+            s.completed,
+            s.rounds,
+            s.dead,
+            match &s.cause {
+                Some(c) => format!("\"{}\"", queue::json_escape(c)),
+                None => "null".to_string(),
+            },
+            if k + 1 == stats.shards.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"jobs\": [\n");
+    for (k, j) in stats.jobs.iter().enumerate() {
+        let (completed_round, rounds_run, converged, objective) = match &j.stats {
+            Some(s) => (
+                opt_num(s.completed_round),
+                s.rounds_run.to_string(),
+                s.converged.to_string(),
+                match s.objective {
+                    Some(v) => format!("{v:.9}"),
+                    None => "null".to_string(),
+                },
+            ),
+            None => (
+                "null".to_string(),
+                "0".to_string(),
+                "false".to_string(),
+                "null".to_string(),
+            ),
+        };
+        // The determinism fingerprint: migrated jobs must match their
+        // uninterrupted solo solve bit for bit.
+        let x_fnv1a = j
+            .stats
+            .as_ref()
+            .and_then(|s| s.result.as_ref())
+            .map(|r| {
+                let mut bytes = Vec::with_capacity(r.x.len() * 8);
+                for v in &r.x {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                format!("\"{:016x}\"", crate::util::wire::fnv1a64(&bytes))
+            })
+            .unwrap_or_else(|| "null".to_string());
+        out.push_str(&format!(
+            "    {{\"id\": {k}, \"name\": \"{}\", \"kind\": \"{}\", \"priority\": {}, \
+             \"shard\": {}, \"migrations\": {}, \"done_prior\": {}, \"completed\": {}, \
+             \"completed_round\": {completed_round}, \"rounds_run\": {rounds_run}, \
+             \"converged\": {converged}, \"objective\": {objective}, \
+             \"x_fnv1a\": {x_fnv1a}}}{}\n",
+            queue::json_escape(&j.name),
+            j.kind,
+            j.priority,
+            j.shard,
+            j.migrations,
+            j.done_prior,
+            j.completed(),
+            if k + 1 == stats.jobs.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"events\": [\n");
+    for (k, e) in stats.events.iter().enumerate() {
+        let body = match &e.event {
+            FleetEvent::Placed { job, shard, migrated, with_checkpoint } => format!(
+                "\"event\": \"placed\", \"job\": {job}, \"shard\": {shard}, \
+                 \"migrated\": {migrated}, \"with_checkpoint\": {with_checkpoint}"
+            ),
+            FleetEvent::SkippedLine { line, msg } => format!(
+                "\"event\": \"skipped-line\", \"line\": {line}, \"msg\": \"{}\"",
+                queue::json_escape(msg)
+            ),
+            FleetEvent::Shed { job } => format!("\"event\": \"shed\", \"job\": {job}"),
+            FleetEvent::ShardDead { shard, cause } => format!(
+                "\"event\": \"shard-dead\", \"shard\": {shard}, \"cause\": \"{}\"",
+                queue::json_escape(cause)
+            ),
+            FleetEvent::JobDone { job, shard, completed } => format!(
+                "\"event\": \"job-done\", \"job\": {job}, \"shard\": {shard}, \
+                 \"completed\": {completed}"
+            ),
+            FleetEvent::DrainStarted => "\"event\": \"drain-started\"".to_string(),
+            FleetEvent::HaltStarted => "\"event\": \"halt-started\"".to_string(),
+            FleetEvent::Resumed { jobs, done_prior } => format!(
+                "\"event\": \"resumed\", \"jobs\": {jobs}, \"done_prior\": {done_prior}"
+            ),
+            FleetEvent::Shard { shard, event } => {
+                format!("\"shard\": {shard}, {}", serve_event_body(event))
+            }
+        };
+        out.push_str(&format!(
+            "    {{\"seq\": {}, \"at_us\": {}, {body}}}{}\n",
+            e.seq,
+            e.at_us,
+            if k + 1 == stats.events.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Persist fleet stats as `<basename>.json` under the report directory.
+pub fn emit_fleet_json(
+    stats: &FleetStats,
+    basename: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    report::emit_json(basename, &fleet_stats_json(basename, stats))
 }
 
 /// Persist serve stats as `<basename>.json` under the report directory.
@@ -239,6 +397,7 @@ mod tests {
             retried: 1,
             failed: 0,
             crashed: false,
+            paused: false,
             jobs: vec![JobStats {
                 name: "near-a".to_string(),
                 kind: "nearness",
@@ -325,5 +484,144 @@ mod tests {
                 "v6 serve events carry dense sequence numbers"
             );
         }
+    }
+
+    #[test]
+    fn fleet_json_is_parseable_and_carries_digests() {
+        let stats = FleetStats {
+            shards: vec![
+                ShardStats { assigned: 2, completed: 1, rounds: 9, dead: false, cause: None },
+                ShardStats {
+                    assigned: 1,
+                    completed: 0,
+                    rounds: 4,
+                    dead: true,
+                    cause: Some("worker panicked".to_string()),
+                },
+            ],
+            jobs: vec![
+                FleetJobStats {
+                    name: "near-a".to_string(),
+                    kind: "nearness",
+                    priority: 0,
+                    shard: 0,
+                    migrations: 1,
+                    done_prior: false,
+                    stats: Some(JobStats {
+                        name: "near-a".to_string(),
+                        kind: "nearness",
+                        priority: 0,
+                        arrival_round: 0,
+                        admitted_round: Some(0),
+                        completed_round: Some(5),
+                        preemptions: 0,
+                        rounds_run: 5,
+                        projections: 42,
+                        converged: true,
+                        expired: false,
+                        deadline_met: None,
+                        objective: Some(0.5),
+                        phases: PhaseTimes::default(),
+                        result: Some(crate::core::solver::SolverResult {
+                            x: vec![1.0, 2.5],
+                            iterations: 5,
+                            converged: true,
+                            total_projections: 42,
+                            active_constraints: 3,
+                            trace: Vec::new(),
+                            seconds: 0.1,
+                            phases: PhaseTimes::default(),
+                            telemetry: Vec::new(),
+                        }),
+                        shed: false,
+                        failed: false,
+                        retries: 0,
+                        recovered: true,
+                        error: None,
+                    }),
+                },
+                FleetJobStats {
+                    name: "prior".to_string(),
+                    kind: "cc",
+                    priority: 1,
+                    shard: 1,
+                    migrations: 0,
+                    done_prior: true,
+                    stats: None,
+                },
+            ],
+            migrations: 1,
+            skipped_lines: 1,
+            skipped: vec![ServeError::Trace { line: 3, msg: "bad".to_string() }],
+            completed: 2,
+            shed: 0,
+            drained: true,
+            halted: false,
+            events: vec![
+                FleetLogEntry {
+                    seq: 0,
+                    at_us: 10,
+                    event: FleetEvent::Placed {
+                        job: 0,
+                        shard: 0,
+                        migrated: false,
+                        with_checkpoint: false,
+                    },
+                },
+                FleetLogEntry {
+                    seq: 1,
+                    at_us: 20,
+                    event: FleetEvent::ShardDead {
+                        shard: 1,
+                        cause: "worker panicked".to_string(),
+                    },
+                },
+                FleetLogEntry {
+                    seq: 2,
+                    at_us: 30,
+                    event: FleetEvent::Shard {
+                        shard: 0,
+                        event: ServeEvent::Completed { round: 5, job: 0, converged: true },
+                    },
+                },
+            ],
+        };
+        let text = fleet_stats_json("unit", &stats);
+        let json = Json::parse(&text).expect("invalid fleet JSON");
+        assert_eq!(
+            json.get("schema_version").and_then(|v| v.as_usize()),
+            Some(report::SOLVER_JSON_SCHEMA_VERSION as usize)
+        );
+        assert_eq!(json.get("kind").and_then(|v| v.as_str()), Some("serve-fleet"));
+        assert_eq!(json.get("migrations").and_then(|v| v.as_usize()), Some(1));
+        let shards = json.get("shards").and_then(|s| s.as_arr()).expect("shards array");
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[1].get("dead"), Some(&Json::Bool(true)));
+        assert_eq!(
+            shards[1].get("cause").and_then(|v| v.as_str()),
+            Some("worker panicked")
+        );
+        let jobs = json.get("jobs").and_then(|j| j.as_arr()).expect("jobs array");
+        assert_eq!(jobs.len(), 2);
+        // The digest is FNV-1a 64 over the final x's little-endian f64
+        // bytes, as a fixed-width hex string.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        bytes.extend_from_slice(&2.5f64.to_le_bytes());
+        let expect = format!("{:016x}", crate::util::wire::fnv1a64(&bytes));
+        assert_eq!(jobs[0].get("x_fnv1a").and_then(|v| v.as_str()), Some(expect.as_str()));
+        assert_eq!(jobs[0].get("migrations").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(jobs[1].get("x_fnv1a"), Some(&Json::Null));
+        assert_eq!(jobs[1].get("done_prior"), Some(&Json::Bool(true)));
+        assert_eq!(jobs[1].get("completed"), Some(&Json::Bool(true)));
+        let events = json.get("events").and_then(|e| e.as_arr()).expect("events array");
+        assert_eq!(events[1].get("event").and_then(|v| v.as_str()), Some("shard-dead"));
+        assert_eq!(
+            events[2].get("event").and_then(|v| v.as_str()),
+            Some("completed"),
+            "shard serve events embed with their shard id"
+        );
+        assert_eq!(events[2].get("shard").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(events[2].get("at_us").and_then(|v| v.as_usize()), Some(30));
     }
 }

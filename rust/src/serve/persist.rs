@@ -327,6 +327,11 @@ pub fn scan_state_dir(dir: &Path) -> Result<Vec<(usize, PathBuf)>, ServeError> {
 ///                  JOB's checkpoint
 /// poison=ID        mismatch job ID's spec against its bank input
 /// garble=LINE      truncate trace line LINE (1-based) before parsing
+/// kill-shard=K@R   fleet only: panic shard K after its round R (the
+///                  supervisor must detect the death and migrate)
+/// stall-shard=K@R  fleet only: freeze shard K's worker thread at its
+///                  round R (the supervisor must detect the missing
+///                  heartbeat and migrate)
 /// ```
 ///
 /// Directives combine comma-separated, e.g. `crash=12,corrupt=1:40`.
@@ -345,6 +350,14 @@ pub struct FaultPlan {
     /// 1-based trace line to garble before parsing (exercises the
     /// skip-and-report path).
     pub garble_trace_line: Option<usize>,
+    /// `(shard, round)`: panic shard `shard`'s worker thread once its
+    /// scheduler reaches round `round` (fleet only — single-scheduler
+    /// serve rejects it).
+    pub kill_shard: Option<(usize, usize)>,
+    /// `(shard, round)`: freeze shard `shard`'s worker thread at round
+    /// `round` without persisting anything further (fleet only). The
+    /// supervisor's heartbeat staleness check must catch it.
+    pub stall_shard: Option<(usize, usize)>,
 }
 
 impl FaultPlan {
@@ -374,6 +387,20 @@ impl FaultPlan {
                 }
                 "poison" => plan.poison_spec.push(parse_usize(val, "poison job")?),
                 "garble" => plan.garble_trace_line = Some(parse_usize(val, "garble line")?),
+                "kill-shard" | "stall-shard" => {
+                    let (shard, round) = val
+                        .split_once('@')
+                        .ok_or_else(|| bad(format!("{key} value {val:?} is not SHARD@ROUND")))?;
+                    let pair = (
+                        parse_usize(shard, "shard index")?,
+                        parse_usize(round, "shard round")?,
+                    );
+                    if key == "kill-shard" {
+                        plan.kill_shard = Some(pair);
+                    } else {
+                        plan.stall_shard = Some(pair);
+                    }
+                }
                 other => return Err(bad(format!("unknown directive {other:?}"))),
             }
         }
@@ -422,16 +449,22 @@ mod tests {
 
     #[test]
     fn fault_plan_parses_and_roundtrips_semantics() {
-        let plan = FaultPlan::parse("crash=12, corrupt=1:40, poison=2, poison=0, garble=3")
-            .expect("valid plan");
+        let plan = FaultPlan::parse(
+            "crash=12, corrupt=1:40, poison=2, poison=0, garble=3, kill-shard=1@5, stall-shard=2@9",
+        )
+        .expect("valid plan");
         assert_eq!(plan.crash_after_round, Some(12));
         assert_eq!(plan.corrupt_checkpoint, Some((1, 40)));
         assert_eq!(plan.poison_spec, vec![2, 0]);
         assert_eq!(plan.garble_trace_line, Some(3));
+        assert_eq!(plan.kill_shard, Some((1, 5)));
+        assert_eq!(plan.stall_shard, Some((2, 9)));
         assert!(!plan.is_empty());
         assert!(FaultPlan::parse("").expect("empty plan").is_empty());
         assert!(FaultPlan::parse("crash").is_err(), "missing value");
         assert!(FaultPlan::parse("corrupt=5").is_err(), "missing byte");
+        assert!(FaultPlan::parse("kill-shard=1").is_err(), "missing round");
+        assert!(FaultPlan::parse("stall-shard=a@2").is_err(), "bad shard index");
         assert!(FaultPlan::parse("explode=1").is_err(), "unknown key");
     }
 

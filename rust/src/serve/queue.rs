@@ -241,6 +241,15 @@ pub fn parse_job_trace_lenient(text: &str) -> (Vec<Job>, Vec<ServeError>) {
     (jobs, errors)
 }
 
+/// Parse a single already-trimmed job line with an explicit positional
+/// id — the live-intake entry point ([`super::intake`]), where lines
+/// arrive one connection at a time rather than as a whole file. Errors
+/// carry `lineno` (1-based within the connection) exactly as the
+/// file-trace parsers report them.
+pub fn parse_intake_line(line: &str, lineno: usize, id: usize) -> Result<Job, ServeError> {
+    parse_job_line(line, lineno, id)
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct Entry {
     priority: i64,

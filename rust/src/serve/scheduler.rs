@@ -86,6 +86,13 @@ pub struct ServeConfig {
     /// counters, rounds/sec, per-job progress) to the sink installed
     /// with [`Scheduler::metrics_to`], or stderr by default. 0 = off.
     pub metrics_every: usize,
+    /// Cooperative pause: when the flag is set (by another thread, e.g.
+    /// a fleet supervisor), the scheduler finishes the current round,
+    /// persists every running job's checkpoint (with a `state_dir`),
+    /// and returns with [`ServeStats::paused`] set. Unlike a crash the
+    /// run is resumable: a new scheduler over the same state dir picks
+    /// up bit-identically.
+    pub pause: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl Default for ServeConfig {
@@ -101,6 +108,7 @@ impl Default for ServeConfig {
             age_rounds: 0,
             fault_plan: FaultPlan::default(),
             metrics_every: 0,
+            pause: None,
         }
     }
 }
@@ -209,6 +217,9 @@ pub struct ServeStats {
     /// The run stopped on an injected crash after persisting state
     /// (the process should exit with [`persist::CRASH_EXIT_CODE`]).
     pub crashed: bool,
+    /// The run stopped on a cooperative [`ServeConfig::pause`] request
+    /// after persisting running state; resumable from the state dir.
+    pub paused: bool,
     pub jobs: Vec<JobStats>,
     /// The full event stream, each entry stamped with its emission
     /// round and a monotonic sequence number.
@@ -268,30 +279,55 @@ pub struct Scheduler<'a> {
     /// unset.
     metrics: Option<Box<dyn std::io::Write + 'a>>,
     observers: Vec<Box<dyn FnMut(&ServeEvent) + 'a>>,
+    round_hooks: Vec<Box<dyn FnMut(usize) + 'a>>,
 }
 
 impl<'a> Scheduler<'a> {
     /// Build a scheduler over a trace. `bank` must be the materialized
-    /// inputs of exactly these jobs ([`JobBank::materialize`]).
-    pub fn new(jobs: Vec<Job>, bank: &'a JobBank, cfg: ServeConfig) -> Scheduler<'a> {
-        assert!(cfg.capacity >= 1, "serve capacity must be at least 1");
-        assert_eq!(jobs.len(), bank.len(), "job trace and bank are misaligned");
+    /// inputs of exactly these jobs ([`JobBank::materialize`]). A bad
+    /// configuration is a typed, recoverable [`ServeError::Config`] —
+    /// in a fleet it kills one shard admission, not the process.
+    pub fn new(
+        jobs: Vec<Job>,
+        bank: &'a JobBank,
+        cfg: ServeConfig,
+    ) -> Result<Scheduler<'a>, ServeError> {
+        let bad = |msg: String| ServeError::Config { msg };
+        if cfg.capacity < 1 {
+            return Err(bad("serve capacity must be at least 1".to_string()));
+        }
+        if jobs.len() != bank.len() {
+            return Err(bad(format!(
+                "job trace and bank are misaligned ({} jobs, {} bank inputs)",
+                jobs.len(),
+                bank.len()
+            )));
+        }
         for (i, j) in jobs.iter().enumerate() {
-            assert_eq!(j.id, i, "job ids must be positional (job {} has id {})", i, j.id);
+            if j.id != i {
+                return Err(bad(format!(
+                    "job ids must be positional (job {} has id {})",
+                    i, j.id
+                )));
+            }
         }
         let mixed = jobs
             .windows(2)
             .any(|w| std::mem::discriminant(&w[0].spec) != std::mem::discriminant(&w[1].spec));
-        assert!(
-            !mixed || cfg.opts.inner_sweeps.is_some(),
-            "mixed-kind job traces must pin SolveOptions::inner_sweeps (all blocks of one \
-             session agree on it; nearness defaults to 1, dense CC to 2)"
-        );
-        assert!(
-            !cfg.opts.overlap,
-            "the serve scheduler requires a non-overlapped session (admission and \
-             preemption are multi-block operations)"
-        );
+        if mixed && cfg.opts.inner_sweeps.is_none() {
+            return Err(bad(
+                "mixed-kind job traces must pin SolveOptions::inner_sweeps (all blocks of \
+                 one session agree on it; nearness defaults to 1, dense CC to 2)"
+                    .to_string(),
+            ));
+        }
+        if cfg.opts.overlap {
+            return Err(bad(
+                "the serve scheduler requires a non-overlapped session (admission and \
+                 preemption are multi-block operations)"
+                    .to_string(),
+            ));
+        }
         let mut arrivals: Vec<usize> = (0..jobs.len()).collect();
         arrivals.sort_by_key(|&j| jobs[j].arrival_round);
         let stats = ServeStats {
@@ -304,6 +340,7 @@ impl<'a> Scheduler<'a> {
             retried: 0,
             failed: 0,
             crashed: false,
+            paused: false,
             jobs: jobs
                 .iter()
                 .map(|j| JobStats {
@@ -332,7 +369,7 @@ impl<'a> Scheduler<'a> {
             events: Vec::new(),
         };
         let n = jobs.len();
-        Scheduler {
+        Ok(Scheduler {
             session: Session::new(cfg.opts.clone()),
             cfg,
             bank,
@@ -352,12 +389,30 @@ impl<'a> Scheduler<'a> {
             started: Instant::now(),
             metrics: None,
             observers: Vec::new(),
-        }
+            round_hooks: Vec::new(),
+        })
     }
 
     /// Observe scheduler events as they happen.
     pub fn on_event(&mut self, observer: impl FnMut(&ServeEvent) + 'a) {
         self.observers.push(Box::new(observer));
+    }
+
+    /// Call `hook(round)` once per scheduler round (idle rounds
+    /// included), right after the round is driven. Fleet supervision
+    /// piggybacks heartbeats and shard-fault checks on this.
+    pub fn on_round(&mut self, hook: impl FnMut(usize) + 'a) {
+        self.round_hooks.push(Box::new(hook));
+    }
+
+    /// Pre-complete a job slot: the job is treated as already serviced
+    /// (its arrival is consumed without ever entering the ready queue).
+    /// A fleet shard uses this to rebuild a scheduler over its full
+    /// assignment history while re-running only the unfinished jobs,
+    /// keeping every job's positional id — and thus its `job-<id>.ckpt`
+    /// state file — stable across scheduler generations.
+    pub fn exclude(&mut self, job: usize) {
+        self.arrived[job] = true;
     }
 
     /// Redirect `metrics_every` NDJSON snapshots to `sink` (a file, a
@@ -478,6 +533,9 @@ impl<'a> Scheduler<'a> {
         for (job, path) in found {
             if job >= self.jobs.len() {
                 continue; // a different trace's leftovers; not ours to touch
+            }
+            if self.arrived[job] {
+                continue; // excluded (already-serviced) slot; leave its file alone
             }
             match persist::load_checkpoint(&path) {
                 Ok(ck) => {
@@ -666,6 +724,37 @@ impl<'a> Scheduler<'a> {
         self.cfg.fault_plan.crash_after_round.is_some_and(|k| self.round >= k)
     }
 
+    fn pause_requested(&self) -> bool {
+        self.cfg
+            .pause
+            .as_ref()
+            .is_some_and(|p| p.load(std::sync::atomic::Ordering::Relaxed))
+    }
+
+    /// Cooperative pause: persist every running job's checkpoint (same
+    /// capture as [`Scheduler::crash_now`] — a between-rounds,
+    /// post-FORGET snapshot, so resumption is bit-identical) and flag
+    /// the stats `paused`. Preempted jobs were persisted when
+    /// preempted; never-admitted jobs have no progress to lose.
+    fn pause_now(&mut self) {
+        let mut targets: Vec<(usize, usize)> =
+            self.running.iter().map(|r| (r.job, r.handle.index())).collect();
+        targets.sort_unstable();
+        for (job, index) in targets {
+            let ck = self.session.checkpoint_block(index);
+            self.persist_checkpoint(job, &ck);
+        }
+        self.stats.paused = true;
+    }
+
+    /// Drive the per-round hooks (heartbeats, shard faults).
+    fn round_hooks_tick(&mut self) {
+        let round = self.round;
+        for hook in &mut self.round_hooks {
+            hook(round);
+        }
+    }
+
     /// Injected crash: persist every running job (preempted jobs were
     /// persisted when preempted), flag the stats, and let `run` return
     /// — the caller exits with [`persist::CRASH_EXIT_CODE`].
@@ -683,7 +772,9 @@ impl<'a> Scheduler<'a> {
     /// Drive the trace to completion (all jobs completed, expired,
     /// shed, or failed; all arrivals consumed) and return the service
     /// record. With a fault-plan crash, stops early with
-    /// `stats.crashed` set after persisting running state.
+    /// `stats.crashed` set after persisting running state; with a
+    /// [`ServeConfig::pause`] request, stops early with `stats.paused`
+    /// set, also after persisting — resumable, not terminal.
     pub fn run(mut self) -> ServeStats {
         self.started = Instant::now();
         self.recover();
@@ -746,8 +837,13 @@ impl<'a> Scheduler<'a> {
                 self.emit(ServeEvent::Idle { round: self.round });
                 self.round += 1;
                 self.metrics_tick();
+                self.round_hooks_tick();
                 if self.crash_due() {
                     self.crash_now();
+                    break;
+                }
+                if self.pause_requested() {
+                    self.pause_now();
                     break;
                 }
                 if self.round >= self.cfg.max_service_rounds {
@@ -823,11 +919,17 @@ impl<'a> Scheduler<'a> {
             // concatenated vector stays bounded by the *running* fleet.
             self.session.compact_finished();
 
-            // 6. Live metrics, durability, and injected crashes.
+            // 6. Live metrics, durability, round hooks, and injected
+            // crashes / cooperative pauses.
             self.metrics_tick();
             self.persist_periodic();
+            self.round_hooks_tick();
             if self.crash_due() {
                 self.crash_now();
+                break;
+            }
+            if self.pause_requested() {
+                self.pause_now();
                 break;
             }
 
@@ -868,7 +970,7 @@ mod tests {
         let bank = JobBank::materialize(&jobs);
         let opts = SolveOptions::new().violation_tol(1e-14).dual_tol(1e-14).max_iters(10_000);
         let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         assert_eq!(stats.expired, 1);
         assert_eq!(stats.completed, 0);
         assert!(!stats.jobs[0].converged);
@@ -888,7 +990,7 @@ mod tests {
         let bank = JobBank::materialize(&jobs);
         let opts = SolveOptions::new().violation_tol(1e-14).dual_tol(1e-14).max_iters(10_000);
         let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         assert_eq!(stats.expired, 1);
         assert_eq!(stats.completed, 0);
         assert!(stats.jobs[0].expired);
@@ -907,7 +1009,7 @@ mod tests {
         let bank = JobBank::materialize(&jobs);
         let opts = SolveOptions::new().violation_tol(1e-14).dual_tol(1e-14).max_iters(10_000);
         let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
-        let mut sched = Scheduler::new(jobs, &bank, cfg);
+        let mut sched = Scheduler::new(jobs, &bank, cfg).expect("valid serve config");
         sched.on_event(|e| {
             if matches!(e, ServeEvent::Admitted { .. }) {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -930,7 +1032,7 @@ mod tests {
             opts: SolveOptions::new().violation_tol(1e-4),
             ..Default::default()
         };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed());
         assert_eq!(stats.jobs[0].deadline_met, Some(true));
     }
@@ -948,7 +1050,7 @@ mod tests {
             opts: SolveOptions::new().violation_tol(1e-4),
             ..Default::default()
         };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed());
         assert_eq!(
             stats.events.iter().filter(|e| matches!(e.event, ServeEvent::Idle { .. })).count(),
@@ -979,7 +1081,7 @@ mod tests {
             fault_plan: FaultPlan { poison_spec: vec![0], ..Default::default() },
             ..Default::default()
         };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         // The poisoned job fails, retries twice with backoff, then
         // permanently fails; the healthy job is untouched.
         assert!(stats.jobs[0].failed);
@@ -1020,7 +1122,7 @@ mod tests {
             queue_high_water: Some(1),
             ..Default::default()
         };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         assert_eq!(stats.shed, 2);
         assert!(stats.jobs[0].shed && stats.jobs[1].shed, "lowest priorities shed first");
         assert_eq!(stats.jobs[0].deadline_met, Some(false));
@@ -1069,7 +1171,7 @@ mod tests {
             opts: SolveOptions::new().violation_tol(1e-4),
             ..Default::default()
         };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed());
         assert!(stats.events.len() >= 4, "admissions + completions at minimum");
         for (i, e) in stats.events.iter().enumerate() {
@@ -1094,7 +1196,7 @@ mod tests {
         };
         let sink: std::rc::Rc<std::cell::RefCell<Vec<u8>>> = Default::default();
         let writer = SharedSink(sink.clone());
-        let mut sched = Scheduler::new(jobs, &bank, cfg);
+        let mut sched = Scheduler::new(jobs, &bank, cfg).expect("valid serve config");
         sched.metrics_to(writer);
         let stats = sched.run();
         assert!(stats.all_completed());
@@ -1109,6 +1211,134 @@ mod tests {
             assert!(json.get("rounds_per_sec").is_some());
             assert!(json.get("jobs").and_then(|v| v.as_arr()).is_some());
         }
+    }
+
+    #[test]
+    fn bad_configs_are_typed_errors_not_panics() {
+        let jobs = one_job(JobSpec::Nearness { n: 8, graph_type: 1, seed: 1 });
+        let bank = JobBank::materialize(&jobs);
+        let err = |r: Result<Scheduler<'_>, ServeError>| match r {
+            Err(ServeError::Config { msg }) => msg,
+            Ok(_) => panic!("expected a Config error"),
+            Err(other) => panic!("expected Config, got {other:?}"),
+        };
+        let cfg = ServeConfig { capacity: 0, ..Default::default() };
+        assert!(err(Scheduler::new(jobs.clone(), &bank, cfg)).contains("capacity"));
+        let mut opts = SolveOptions::new();
+        opts.overlap = true;
+        let cfg = ServeConfig { capacity: 1, opts, ..Default::default() };
+        assert!(err(Scheduler::new(jobs.clone(), &bank, cfg)).contains("non-overlapped"));
+        let mut renumbered = jobs.clone();
+        renumbered[0].id = 7;
+        assert!(err(Scheduler::new(renumbered, &bank, Default::default()))
+            .contains("positional"));
+        let two = vec![jobs[0].clone(), {
+            let mut j = jobs[0].clone();
+            j.id = 1;
+            j
+        }];
+        assert!(err(Scheduler::new(two, &bank, Default::default())).contains("misaligned"));
+        // Mixed kinds without pinned inner_sweeps.
+        let mut mixed = one_job(JobSpec::Nearness { n: 8, graph_type: 1, seed: 1 });
+        mixed.push(Job {
+            id: 1,
+            name: "cc".to_string(),
+            spec: JobSpec::Correlation { n: 8, clusters: 2, flip: 0.1, seed: 2 },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: None,
+            deadline_ms: None,
+        });
+        let mixed_bank = JobBank::materialize(&mixed);
+        assert!(err(Scheduler::new(mixed, &mixed_bank, Default::default()))
+            .contains("inner_sweeps"));
+    }
+
+    #[test]
+    fn pause_persists_running_state_and_resumes_bit_identically() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let dir = std::env::temp_dir().join(format!(
+            "paf-sched-pause-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let jobs = one_job(JobSpec::Nearness { n: 26, graph_type: 1, seed: 3 });
+        let bank = JobBank::materialize(&jobs);
+        let opts = SolveOptions::new().violation_tol(1e-4);
+        let pause = Arc::new(AtomicBool::new(true)); // pre-set: pause after round 1
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: opts.clone(),
+            state_dir: Some(dir.clone()),
+            pause: Some(pause.clone()),
+            ..Default::default()
+        };
+        let paused = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid").run();
+        assert!(paused.paused, "the pause flag must stop the run");
+        assert!(!paused.crashed, "a pause is not a crash");
+        assert_eq!(paused.rounds, 1, "pause lands at the first round boundary");
+        assert_eq!(paused.completed, 0);
+        assert!(
+            persist::checkpoint_path(&dir, 0).exists(),
+            "the running job's state must be persisted"
+        );
+        // Resume against the same state dir: recovery completes the job
+        // on the same trajectory as an uninterrupted run.
+        pause.store(false, Ordering::Relaxed);
+        let cfg = ServeConfig {
+            capacity: 1,
+            opts: opts.clone(),
+            state_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let resumed = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid").run();
+        assert!(resumed.all_completed());
+        assert_eq!(resumed.recovered, 1);
+        let solo = super::super::solve_job_solo(&jobs[0], bank.input(0), &opts).expect("solo");
+        let got = resumed.jobs[0].result.as_ref().expect("result");
+        assert_eq!(got.x, solo.result.x, "paused+resumed x must be bit-identical");
+        assert_eq!(got.iterations, solo.result.iterations);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn excluded_jobs_never_run_and_round_hooks_fire_each_round() {
+        use std::cell::Cell;
+        let mut jobs = one_job(JobSpec::Nearness { n: 12, graph_type: 1, seed: 5 });
+        jobs.push(Job {
+            id: 1,
+            name: "skip-me".to_string(),
+            spec: JobSpec::Nearness { n: 12, graph_type: 1, seed: 6 },
+            priority: 0,
+            arrival_round: 0,
+            max_rounds: None,
+            deadline_rounds: None,
+            deadline_ms: None,
+        });
+        let bank = JobBank::materialize(&jobs);
+        let cfg = ServeConfig {
+            capacity: 2,
+            opts: SolveOptions::new().violation_tol(1e-4),
+            ..Default::default()
+        };
+        let hooks = Cell::new(0usize);
+        let last_round = Cell::new(0usize);
+        let mut sched = Scheduler::new(jobs, &bank, cfg).expect("valid serve config");
+        sched.exclude(1);
+        sched.on_round(|r| {
+            hooks.set(hooks.get() + 1);
+            last_round.set(r);
+        });
+        let stats = sched.run();
+        assert_eq!(stats.completed, 1, "only the non-excluded job runs");
+        assert!(stats.jobs[0].converged);
+        assert!(stats.jobs[1].completed_round.is_none());
+        assert!(!stats.jobs[1].shed && !stats.jobs[1].failed && !stats.jobs[1].expired);
+        assert_eq!(hooks.get(), stats.rounds, "one hook call per round");
+        assert_eq!(last_round.get(), stats.rounds);
     }
 
     /// Test-only shared byte sink (the scheduler owns the writer, the

@@ -676,7 +676,7 @@ fn scheduler_replays_a_mixed_trace_with_preemption() {
         .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts).expect("solo solve"))
         .collect();
     let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
-    let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+    let stats = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
     assert!(stats.all_completed(), "all jobs must complete: {stats:?}");
     assert!(stats.preemptions >= 1, "the high-priority arrival must preempt");
     assert!(
@@ -733,7 +733,7 @@ fn scheduler_is_deterministic_across_thread_counts() {
             .inner_sweeps(2)
             .sweep(SweepStrategy::ShardedParallel { threads });
         let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
-        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed());
         let results: Vec<SolverResult> =
             stats.jobs.iter().map(|s| s.result.clone().expect("missing result")).collect();
@@ -875,7 +875,7 @@ fn serve_preemption_with_incremental_oracles_stays_deterministic() {
             .map(|j| paf::serve::solve_job_solo(j, bank.input(j.id), &opts).expect("solo solve"))
             .collect();
         let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
-        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed());
         let results: Vec<SolverResult> =
             stats.jobs.iter().map(|s| s.result.clone().expect("missing result")).collect();
@@ -972,7 +972,7 @@ fn serve_preemption_with_lazy_sweeps_is_bit_identical_to_eager() {
             .sweep(SweepStrategy::ShardedParallel { threads: 2 })
             .lazy_sweep(lazy);
         let cfg = ServeConfig { capacity: 2, opts, ..Default::default() };
-        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed(), "lazy={lazy}: jobs incomplete");
         assert!(
             stats.preemptions >= 1,

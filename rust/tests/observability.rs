@@ -58,7 +58,7 @@ fn serve_run_exports_valid_trace_and_sequenced_events() {
         ..Default::default()
     };
     paf::obs::set_spans_enabled(true);
-    let stats = Scheduler::new(jobs, &bank, cfg).run();
+    let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
     paf::obs::set_spans_enabled(
         std::env::var("PAF_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false),
     );

@@ -1,0 +1,242 @@
+//! Hostile-input hardening for the `PAFCKPT1` checkpoint wire format:
+//! truncation at every byte boundary, absurd length-prefixed counts,
+//! and whole-buffer corruption sweeps. The contract under attack bytes
+//! is absolute — [`persist::decode_checkpoint`] returns
+//! [`ServeError::Corrupt`] (or, for semantically-null damage, a valid
+//! checkpoint); it never panics and never allocates anywhere near the
+//! claimed element counts.
+
+use paf::core::problem::SolveOptions;
+use paf::core::session::Session;
+use paf::problems::itml::{PfItml, PfItmlConfig};
+use paf::problems::metric_oracle::OracleMode;
+use paf::problems::nearness::Nearness;
+use paf::serve::{persist, ServeError};
+use paf::util::wire::fnv1a64;
+use paf::util::Rng;
+use std::path::Path;
+
+/// Re-seal a mutated body with a freshly computed trailing digest, so
+/// decode gets past the checksum and into the parser under test.
+fn reseal(body: &[u8]) -> Vec<u8> {
+    let mut out = body.to_vec();
+    out.extend_from_slice(&fnv1a64(body).to_le_bytes());
+    out
+}
+
+fn le_u64(bytes: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap())
+}
+
+/// A mid-solve *vector* checkpoint (nearness) — the multi-count wire
+/// body: x, rows, per-row indices, trace.
+fn vector_checkpoint_bytes() -> Vec<u8> {
+    let mut rng = Rng::new(7);
+    let inst = paf::graph::generators::type1_complete(16, &mut rng);
+    let opts = SolveOptions::new().violation_tol(1e-6).inner_sweeps(2);
+    let mut s = Session::new(opts);
+    let h = s.add(Nearness::new(&inst).mode(OracleMode::Collect));
+    for _ in 0..3 {
+        s.step();
+    }
+    let ck = s.evict(h.index());
+    persist::encode_checkpoint(&ck).expect("encode vector checkpoint")
+}
+
+/// A mid-solve *round* checkpoint (ITML snapshot codec).
+fn round_checkpoint_bytes() -> Vec<u8> {
+    let mut rng = Rng::new(7);
+    let data = paf::ml::dataset::gaussian_mixture(60, 3, 2, 2.0, &mut rng);
+    let icfg = PfItmlConfig { max_projections: 1500, batch: 40, seed: 7, ..Default::default() };
+    let opts = SolveOptions::new().violation_tol(1e-6).inner_sweeps(2);
+    let mut s = Session::new(opts);
+    let h = s.add(PfItml::new(&data, icfg));
+    for _ in 0..3 {
+        s.step();
+    }
+    let ck = s.evict(h.index());
+    persist::encode_checkpoint(&ck).expect("encode round checkpoint")
+}
+
+/// Walk a valid *vector*-kind body and return the byte offset of every
+/// length-prefixed count in it (x, rows, each row's indices, trace) —
+/// computed from the wire layout itself so the sweep can never drift
+/// out of sync with the format.
+fn vector_count_offsets(bytes: &[u8]) -> Vec<usize> {
+    let mut offs = Vec::new();
+    let mut at = 8 + 4 + 4; // magic + version + kind
+    at += 8 + 8 + 8; // iterations, projections, last_dual_movement
+    offs.push(at); // x count
+    let nx = le_u64(bytes, at) as usize;
+    at += 8 + 8 * nx;
+    offs.push(at); // rows count
+    let nrows = le_u64(bytes, at) as usize;
+    at += 8;
+    for _ in 0..nrows {
+        offs.push(at); // row.indices count
+        let k = le_u64(bytes, at) as usize;
+        at += 8 + 4 * k + 8 * k + 8 + 8; // indices, coeffs, rhs, z
+    }
+    offs.push(at); // trace count
+    let ntrace = le_u64(bytes, at) as usize;
+    at += 8 + 12 * 8 * ntrace;
+    at += 3 * 8; // phases
+    assert_eq!(at, bytes.len() - 8, "walker lost sync with the wire layout");
+    offs
+}
+
+#[test]
+fn zero_length_and_tiny_files_are_corrupt_not_panics() {
+    for len in 0..24usize {
+        let err = persist::decode_checkpoint(&vec![0u8; len], Path::new("mem"))
+            .expect_err("below the minimum frame size nothing can decode");
+        assert!(
+            matches!(err, ServeError::Corrupt { .. }),
+            "len {len}: expected Corrupt, got {err}"
+        );
+    }
+    // The on-disk path agrees: a zero-length file (the classic torn
+    // create-then-crash artifact) is Corrupt, not a panic or an Io.
+    let dir = std::env::temp_dir()
+        .join(format!("paf-persist-hardening-empty-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    let path = persist::checkpoint_path(&dir, 0);
+    std::fs::write(&path, b"").expect("write empty file");
+    let err = persist::load_checkpoint(&path).expect_err("empty file must not load");
+    assert!(matches!(err, ServeError::Corrupt { .. }), "expected Corrupt, got {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cut both checkpoint kinds at *every* byte boundary: every prefix —
+/// mid-magic, mid-header, mid-count, mid-payload, mid-digest — must
+/// decode to `Corrupt`. (A truncated file also loses its trailing
+/// digest, so the checksum catches most cuts; the sweep proves no cut
+/// point panics or slips through.)
+#[test]
+fn truncation_at_every_byte_boundary_is_corrupt() {
+    for (label, bytes) in
+        [("vector", vector_checkpoint_bytes()), ("round", round_checkpoint_bytes())]
+    {
+        for len in 0..bytes.len() {
+            let err = persist::decode_checkpoint(&bytes[..len], Path::new("mem"))
+                .expect_err("a strict prefix must never decode");
+            assert!(
+                matches!(err, ServeError::Corrupt { .. }),
+                "{label} cut at {len}: expected Corrupt, got {err}"
+            );
+        }
+    }
+}
+
+/// Re-sealed truncation: chop the body *and recompute the digest* so
+/// the checksum passes and the parser itself hits the cut. Every cut
+/// must still be a typed error — this is the field-boundary sweep the
+/// checksum cannot help with.
+#[test]
+fn resealed_truncation_exercises_every_parser_field() {
+    for (label, bytes) in
+        [("vector", vector_checkpoint_bytes()), ("round", round_checkpoint_bytes())]
+    {
+        let body = &bytes[..bytes.len() - 8];
+        for len in 0..body.len() {
+            match persist::decode_checkpoint(&reseal(&body[..len]), Path::new("mem")) {
+                // Cuts below the 24-byte floor are rejected pre-parse;
+                // everything else must die inside the parser.
+                Err(ServeError::Corrupt { .. }) => {}
+                Ok(_) => panic!("{label} resealed cut at {len}: decoded a strict prefix"),
+                Err(e) => panic!("{label} resealed cut at {len}: expected Corrupt, got {e}"),
+            }
+        }
+    }
+}
+
+/// Absurd length-prefixed counts — `u64::MAX`, `u64::MAX / 8`, and a
+/// just-too-big-by-one claim at every count field in the vector body,
+/// re-sealed so the checksum passes. Decode must return `Corrupt`
+/// without OOM-allocating: the per-element floors in
+/// `Reader::get_count` bound every claim by the bytes actually
+/// remaining.
+#[test]
+fn absurd_counts_are_rejected_without_allocation() {
+    let bytes = vector_checkpoint_bytes();
+    let offsets = vector_count_offsets(&bytes);
+    assert!(offsets.len() >= 4, "expected x, rows, row.indices…, trace counts");
+    let body_len = bytes.len() - 8;
+    for &off in &offsets {
+        let honest = le_u64(&bytes, off);
+        let remaining = (body_len - off - 8) as u64;
+        for claim in [u64::MAX, u64::MAX / 8, 1 << 61, remaining + 1, honest + remaining] {
+            let mut body = bytes[..body_len].to_vec();
+            body[off..off + 8].copy_from_slice(&claim.to_le_bytes());
+            let err = persist::decode_checkpoint(&reseal(&body), Path::new("mem"))
+                .expect_err("an impossible count must not decode");
+            assert!(
+                matches!(err, ServeError::Corrupt { .. }),
+                "count at {off} claiming {claim}: expected Corrupt, got {err}"
+            );
+        }
+    }
+}
+
+/// Stomp 8 bytes of `0xFF` at every offset of both kinds' bodies,
+/// re-sealed: the parser must never panic. (Damage to f64 payloads
+/// legitimately decodes — NaNs are representable; anything else must
+/// be a typed error.)
+#[test]
+fn byte_stomp_sweep_never_panics() {
+    for (label, bytes) in
+        [("vector", vector_checkpoint_bytes()), ("round", round_checkpoint_bytes())]
+    {
+        let body_len = bytes.len() - 8;
+        for at in 0..body_len {
+            let mut body = bytes[..body_len].to_vec();
+            let end = (at + 8).min(body_len);
+            body[at..end].fill(0xFF);
+            match persist::decode_checkpoint(&reseal(&body), Path::new("mem")) {
+                Ok(_) => {}
+                Err(ServeError::Corrupt { .. }) => {}
+                Err(e) => panic!("{label} stomp at {at}: unexpected error kind {e}"),
+            }
+        }
+    }
+}
+
+/// Trailing garbage after a structurally complete body (with a valid
+/// digest over the whole thing) is still `Corrupt`: a checkpoint file
+/// is exactly its frame, nothing more.
+#[test]
+fn trailing_bytes_after_the_body_are_corrupt() {
+    let bytes = vector_checkpoint_bytes();
+    let mut body = bytes[..bytes.len() - 8].to_vec();
+    body.extend_from_slice(&[0u8; 4]);
+    let err = persist::decode_checkpoint(&reseal(&body), Path::new("mem"))
+        .expect_err("trailing bytes must not decode");
+    assert!(matches!(err, ServeError::Corrupt { .. }), "expected Corrupt, got {err}");
+}
+
+/// The wrong-kind and wrong-version headers stay typed errors when the
+/// digest is honest (regression guard for the explicit header checks).
+#[test]
+fn bad_headers_with_honest_digests_are_corrupt() {
+    let bytes = vector_checkpoint_bytes();
+    let body_len = bytes.len() - 8;
+    // kind is the u32 after magic (8) + version (4).
+    for (off, val, what) in
+        [(8usize, 99u32, "version"), (12, 7, "kind"), (12, u32::MAX, "kind")]
+    {
+        let mut body = bytes[..body_len].to_vec();
+        body[off..off + 4].copy_from_slice(&val.to_le_bytes());
+        let err = persist::decode_checkpoint(&reseal(&body), Path::new("mem"))
+            .expect_err("bad header field must not decode");
+        assert!(
+            matches!(err, ServeError::Corrupt { .. }),
+            "{what}={val}: expected Corrupt, got {err}"
+        );
+    }
+    let mut body = bytes[..body_len].to_vec();
+    body[0] ^= 0xFF; // magic
+    let err = persist::decode_checkpoint(&reseal(&body), Path::new("mem"))
+        .expect_err("bad magic must not decode");
+    assert!(matches!(err, ServeError::Corrupt { .. }), "magic: expected Corrupt, got {err}");
+}

@@ -81,7 +81,7 @@ fn crash_recovery_resumes_bit_identically() {
             fault_plan: FaultPlan { crash_after_round: Some(6), ..Default::default() },
             ..Default::default()
         };
-        let crashed = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        let crashed = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
         assert!(crashed.crashed, "the fault plan must stop the run");
         assert!(!crashed.all_completed(), "3 mixed jobs cannot finish in 6 rounds at cap 1");
         let files = scan_state_dir(&dir).expect("scan state dir");
@@ -94,7 +94,7 @@ fn crash_recovery_resumes_bit_identically() {
             state_dir: Some(dir.clone()),
             ..Default::default()
         };
-        let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+        let stats = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed(), "recovery must complete every job: {stats:?}");
         assert_eq!(stats.recovered, files.len(), "every durable checkpoint must recover");
         assert!(
@@ -145,7 +145,7 @@ fn corrupt_checkpoint_is_quarantined_and_job_restarts() {
         },
         ..Default::default()
     };
-    let crashed = Scheduler::new(jobs.clone(), &bank, cfg).run();
+    let crashed = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
     assert!(crashed.crashed);
     let files = scan_state_dir(&dir).expect("scan state dir");
     assert!(
@@ -159,7 +159,7 @@ fn corrupt_checkpoint_is_quarantined_and_job_restarts() {
         state_dir: Some(dir.clone()),
         ..Default::default()
     };
-    let stats = Scheduler::new(jobs.clone(), &bank, cfg).run();
+    let stats = Scheduler::new(jobs.clone(), &bank, cfg).expect("valid serve config").run();
     assert!(stats.all_completed(), "quarantine must not block completion: {stats:?}");
     assert_eq!(
         stats.recovered,
@@ -341,7 +341,7 @@ fn priority_aging_prevents_starvation() {
             age_rounds,
             ..Default::default()
         };
-        let stats = Scheduler::new(jobs, &bank, cfg).run();
+        let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
         assert!(stats.all_completed(), "aging run (age={age_rounds}) must complete");
         (stats.jobs[1].admitted_round.unwrap(), stats.jobs[2].admitted_round.unwrap())
     };
@@ -379,6 +379,6 @@ fn garbled_trace_line_is_skipped_and_reported() {
         opts: serve_opts(2),
         ..Default::default()
     };
-    let stats = Scheduler::new(jobs, &bank, cfg).run();
+    let stats = Scheduler::new(jobs, &bank, cfg).expect("valid serve config").run();
     assert!(stats.all_completed(), "the surviving jobs must serve normally");
 }

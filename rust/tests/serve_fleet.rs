@@ -1,0 +1,345 @@
+//! Integration tests for the multi-shard fleet supervisor: placement,
+//! shard health-checks, checkpoint-based work migration off dead
+//! shards, fleet-level overload shedding, and halt/restart through the
+//! manifest journal.
+//!
+//! The load-bearing invariant throughout (inherited from the scheduler
+//! and extended across shard death): every job's final `SolverResult`
+//! is bit-identical to its uninterrupted solo solve, no matter how
+//! many times it was checkpointed, migrated, or carried across a
+//! process boundary. That makes every test here timing-robust — the
+//! *moment* a fault lands never changes the answer, only the route.
+
+use paf::core::problem::SolveOptions;
+use paf::core::solver::SolverResult;
+use paf::serve::{
+    run_fleet, solve_job_solo, FaultPlan, FleetConfig, FleetEvent, FleetStats, IntakeSource,
+    Job, JobBank, JobSpec, ServeConfig,
+};
+use std::io::Write;
+use std::path::PathBuf;
+
+/// A per-test scratch directory (tests run in parallel in one process,
+/// so the test name disambiguates; the pid isolates concurrent runs).
+fn temp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("paf-serve-fleet-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create temp state dir");
+    dir
+}
+
+fn assert_bit_identical(reference: &SolverResult, got: &SolverResult, label: &str) {
+    assert_eq!(reference.x, got.x, "{label}: x differs (bitwise)");
+    assert_eq!(reference.iterations, got.iterations, "{label}: iteration count differs");
+    assert_eq!(reference.converged, got.converged, "{label}: convergence differs");
+    assert_eq!(
+        reference.total_projections, got.total_projections,
+        "{label}: projection count differs"
+    );
+    assert_eq!(
+        reference.active_constraints, got.active_constraints,
+        "{label}: active-set size differs"
+    );
+}
+
+/// Shared solve options. `sharded(0)` defers the thread count to
+/// `PAF_THREADS`, so the CI matrix legs exercise both engines without
+/// the tests multiplying — the sharded sweep is thread-count invariant,
+/// so bit-identity holds on every leg.
+fn fleet_opts() -> SolveOptions {
+    SolveOptions::new().violation_tol(1e-4).inner_sweeps(2).sharded(0)
+}
+
+fn nearness_job(id: usize, n: usize) -> Job {
+    Job {
+        id,
+        name: format!("near-{id}"),
+        spec: JobSpec::Nearness { n, graph_type: 1, seed: id as u64 + 1 },
+        priority: 0,
+        arrival_round: 0,
+        max_rounds: None,
+        deadline_rounds: None,
+        deadline_ms: None,
+    }
+}
+
+/// Six mixed-size jobs: big enough to outlive the injected fault
+/// rounds, small enough to keep the tests quick.
+fn six_jobs() -> Vec<Job> {
+    (0..6).map(|id| nearness_job(id, 16 + 2 * id)).collect()
+}
+
+fn solo_results(jobs: &[Job], opts: &SolveOptions) -> Vec<SolverResult> {
+    let bank = JobBank::materialize(jobs);
+    jobs.iter()
+        .map(|j| solve_job_solo(j, bank.input(j.id), opts).expect("solo solve").result)
+        .collect()
+}
+
+/// Every job's fleet result must be bitwise the solo result. Jobs with
+/// no stats (done in a prior process) are the caller's problem.
+fn assert_fleet_matches_solo(stats: &FleetStats, solo: &[SolverResult], label: &str) {
+    assert!(stats.all_completed(), "{label}: unfinished jobs: {stats:?}");
+    for (g, js) in stats.jobs.iter().enumerate() {
+        let s = js.stats.as_ref().unwrap_or_else(|| panic!("{label}: job {g} has no stats"));
+        let got = s.result.as_ref().unwrap_or_else(|| panic!("{label}: job {g} has no result"));
+        assert_bit_identical(&solo[g], got, &format!("{label}, job {g} ({})", js.name));
+    }
+}
+
+/// No faults: a three-shard fleet drains a trace with deterministic
+/// least-loaded placement, and every result is bit-identical to solo.
+#[test]
+fn three_shard_fleet_completes_a_trace_bit_identically_to_solo() {
+    let dir = temp_dir("three-shard");
+    let jobs = six_jobs();
+    let opts = fleet_opts();
+    let solo = solo_results(&jobs, &opts);
+
+    let cfg = FleetConfig {
+        shards: 3,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: opts.clone(),
+            checkpoint_every: Some(1),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        ..FleetConfig::default()
+    };
+    let stats = run_fleet(jobs, None, cfg, |_| {}).expect("valid fleet config");
+
+    assert!(stats.drained, "a trace-only fleet must drain cleanly");
+    assert!(!stats.halted);
+    assert_eq!(stats.migrations, 0, "no faults, no migrations");
+    assert_fleet_matches_solo(&stats, &solo, "three-shard");
+    for (k, sh) in stats.shards.iter().enumerate() {
+        assert!(!sh.dead, "shard {k} must survive");
+        assert_eq!(sh.assigned, 2, "least-loaded placement spreads 6 jobs 2/2/2");
+        assert_eq!(sh.completed, 2, "shard {k} finishes what it was assigned");
+        assert!(sh.rounds > 0, "shard {k} must have run rounds");
+    }
+    // Completed jobs drain their durable state; only the manifest stays.
+    for k in 0..3 {
+        let left = paf::serve::scan_state_dir(&dir.join(format!("shard-{k}")))
+            .map(|v| v.len())
+            .unwrap_or(0);
+        assert_eq!(left, 0, "shard {k} state dir must be empty after a drain");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ISSUE's acceptance test: kill shard 0 at (generation-local)
+/// round 2. The supervisor detects the death, reads the dead shard's
+/// durable checkpoints, and re-places the orphaned jobs on survivors —
+/// and every job, migrated or not, still finishes bit-identical to its
+/// uninterrupted solo solve.
+#[test]
+fn killed_shard_migrates_work_with_bit_identical_continuation() {
+    let dir = temp_dir("kill-shard");
+    let jobs = six_jobs();
+    let opts = fleet_opts();
+    let solo = solo_results(&jobs, &opts);
+
+    let cfg = FleetConfig {
+        shards: 3,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: opts.clone(),
+            checkpoint_every: Some(1),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        fault_plan: FaultPlan { kill_shard: Some((0, 2)), ..Default::default() },
+        ..FleetConfig::default()
+    };
+    let stats = run_fleet(jobs, None, cfg, |_| {}).expect("valid fleet config");
+
+    assert!(stats.shards[0].dead, "the killed shard must be declared dead");
+    assert!(stats.shards[0].cause.is_some(), "a dead shard carries its cause");
+    assert!(stats.migrations >= 1, "the dead shard's work must migrate: {stats:?}");
+    assert!(
+        stats.events.iter().any(|e| matches!(
+            e.event,
+            FleetEvent::ShardDead { shard: 0, .. }
+        )),
+        "shard death must be in the event stream"
+    );
+    assert!(
+        stats.events.iter().any(|e| matches!(
+            e.event,
+            FleetEvent::Placed { migrated: true, .. }
+        )),
+        "migration re-placement must be in the event stream"
+    );
+    let migrated: Vec<usize> = (0..stats.jobs.len())
+        .filter(|&g| stats.jobs[g].migrations > 0)
+        .collect();
+    assert!(!migrated.is_empty(), "at least one job must have migrated");
+    for &g in &migrated {
+        assert_ne!(stats.jobs[g].shard, 0, "migrated jobs land on a survivor");
+    }
+    assert!(stats.drained, "survivors must finish everything");
+    assert_fleet_matches_solo(&stats, &solo, "kill-shard");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A stalled shard (heartbeat frozen, thread alive) is detected by the
+/// heartbeat timeout, declared dead, and its work migrates the same
+/// checkpoint route as a crash.
+#[test]
+fn stalled_shard_is_detected_by_heartbeat_and_work_migrates() {
+    let dir = temp_dir("stall-shard");
+    let jobs: Vec<Job> = (0..4).map(|id| nearness_job(id, 16 + 2 * id)).collect();
+    let opts = fleet_opts();
+    let solo = solo_results(&jobs, &opts);
+
+    let cfg = FleetConfig {
+        shards: 2,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: opts.clone(),
+            checkpoint_every: Some(1),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        fault_plan: FaultPlan { stall_shard: Some((0, 2)), ..Default::default() },
+        stall_timeout_ms: 300,
+        ..FleetConfig::default()
+    };
+    let stats = run_fleet(jobs, None, cfg, |_| {}).expect("valid fleet config");
+
+    assert!(stats.shards[0].dead, "the stalled shard must be declared dead");
+    let cause = stats.shards[0].cause.as_deref().unwrap_or("");
+    assert!(cause.contains("stalled"), "the cause names the stall, got {cause:?}");
+    assert!(stats.migrations >= 1, "the stalled shard's work must migrate");
+    assert!(stats.drained, "the survivor must finish everything");
+    assert_fleet_matches_solo(&stats, &solo, "stall-shard");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fleet-level overload control: with more arrivals than the high-water
+/// mark, the lowest-priority unplaced jobs are shed deterministically
+/// before any shard sees them.
+#[test]
+fn high_water_sheds_the_lowest_priority_arrivals() {
+    let dir = temp_dir("high-water");
+    let mut jobs = six_jobs();
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.priority = 5 - i as i64; // job 5 is the least important
+    }
+    let opts = fleet_opts();
+
+    let cfg = FleetConfig {
+        shards: 2,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: opts.clone(),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        queue_high_water: Some(4),
+        ..FleetConfig::default()
+    };
+    let stats = run_fleet(jobs, None, cfg, |_| {}).expect("valid fleet config");
+
+    assert_eq!(stats.shed, 2, "6 arrivals over a high-water of 4 shed exactly 2");
+    let shed: Vec<usize> = stats
+        .events
+        .iter()
+        .filter_map(|e| match e.event {
+            FleetEvent::Shed { job } => Some(job),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(shed, vec![5, 4], "shedding is lowest-priority-first, deterministic");
+    for &g in &[4usize, 5] {
+        let s = stats.jobs[g].stats.as_ref().expect("shed jobs get a terminal record");
+        assert!(s.shed && s.completed_round.is_none());
+    }
+    assert!(stats.drained);
+    assert!(!stats.all_completed(), "shed jobs never complete");
+    for g in 0..4 {
+        assert!(stats.jobs[g].completed(), "surviving job {g} completes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Halt over live TCP intake, then restart over the same state root:
+/// the manifest journal re-registers every accepted job (placed or
+/// not), the second fleet finishes whatever the first did not, and
+/// each job's result — whichever process produced it — is bit-identical
+/// to solo.
+#[test]
+fn halt_persists_and_a_second_fleet_resumes_to_completion() {
+    let dir = temp_dir("halt-restart");
+    let jobs: Vec<Job> = (0..3).map(|id| nearness_job(id, 18 + 2 * id)).collect();
+    let opts = fleet_opts();
+    let solo = solo_results(&jobs, &opts);
+
+    let cfg = FleetConfig {
+        shards: 2,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: opts.clone(),
+            checkpoint_every: Some(1),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        ..FleetConfig::default()
+    };
+
+    // Process 1: live intake, three jobs, then a halt order mid-service.
+    let intake = paf::serve::spawn_intake(IntakeSource::Tcp("127.0.0.1:0".to_string()))
+        .expect("bind tcp intake");
+    let addr = intake.addr.expect("tcp intake knows its bound address");
+    let cfg1 = cfg.clone();
+    let fleet = std::thread::spawn(move || run_fleet(Vec::new(), Some(intake), cfg1, |_| {}));
+    {
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect intake");
+        for j in &jobs {
+            writeln!(conn, "{}", j.to_json_line()).expect("send job line");
+        }
+    }
+    // Let the fleet accept (and usually start) the work, then halt. The
+    // exact cut point does not matter: determinism makes any interleave
+    // of completed / checkpointed / never-placed jobs equivalent.
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    {
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect for halt");
+        writeln!(conn, "halt").expect("send halt");
+    }
+    let first = fleet.join().expect("fleet thread").expect("fleet run 1");
+    assert!(first.halted, "the halt order must be honored");
+    assert!(first.drained, "a halt is a clean exit — state persisted");
+    assert_eq!(first.jobs.len(), 3, "every accepted job is registered");
+    assert!(
+        first.events.iter().any(|e| matches!(e.event, FleetEvent::HaltStarted)),
+        "the halt must be in the event stream"
+    );
+
+    // Process 2: same state root, no trace, no intake — the manifest is
+    // the workload.
+    let second = run_fleet(Vec::new(), None, cfg, |_| {}).expect("fleet run 2");
+    assert!(
+        second.events.iter().any(|e| matches!(e.event, FleetEvent::Resumed { .. })),
+        "run 2 must resume from the manifest"
+    );
+    assert_eq!(second.jobs.len(), 3, "the manifest re-registers every job");
+    assert!(second.all_completed(), "run 2 finishes everything: {second:?}");
+    assert!(second.drained && !second.halted);
+    for g in 0..3 {
+        let done_in_first = first.jobs[g].completed();
+        if done_in_first {
+            assert!(second.jobs[g].done_prior, "run 2 must know job {g} was done prior");
+        }
+        // The terminal record lives in whichever process finished the
+        // job; compare that one against solo.
+        let record = if done_in_first { &first.jobs[g] } else { &second.jobs[g] };
+        let s = record.stats.as_ref().unwrap_or_else(|| panic!("job {g} has no stats"));
+        let got = s.result.as_ref().unwrap_or_else(|| panic!("job {g} has no result"));
+        assert_bit_identical(&solo[g], got, &format!("halt-restart job {g}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,156 @@
+//! Live-intake integration tests over real sockets: the wire protocol
+//! is exactly the file-trace format, so malformed lines arriving over
+//! TCP or a Unix socket must produce the *same* line-numbered
+//! lenient-skip reports as [`parse_job_trace_lenient`] on the same
+//! text, and a client that vanishes mid-line must not poison the
+//! queue for the connections after it.
+
+use paf::serve::{
+    parse_job_trace_lenient, run_fleet, spawn_intake, FleetConfig, IntakeItem, IntakeSource,
+    ServeConfig, ServeError,
+};
+use std::io::Write;
+use std::path::PathBuf;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("paf-serve-intake-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+/// A trace with two good jobs and two differently-malformed lines,
+/// interleaved with comments and blanks so line numbering is earned.
+const MIXED_TRACE: &str = "\
+# mixed trace: good, torn JSON, good, unknown problem
+{\"problem\": \"nearness\", \"n\": 12, \"seed\": 1}
+
+{\"problem\": \"nearness\", \"n\": 13
+{\"problem\": \"cc\", \"n\": 10, \"clusters\": 2, \"seed\": 2}
+{\"problem\": \"sudoku\", \"n\": 9}
+";
+
+/// The same bytes through a TCP socket and through the file parser
+/// yield identical jobs and identical skip reports — line numbers,
+/// messages, everything.
+#[test]
+fn tcp_intake_skip_reports_match_the_file_trace_parser() {
+    let (file_jobs, file_errors) = parse_job_trace_lenient(MIXED_TRACE);
+    assert_eq!(file_jobs.len(), 2);
+    assert_eq!(file_errors.len(), 2, "the trace has exactly two bad lines");
+
+    let handle = spawn_intake(IntakeSource::Tcp("127.0.0.1:0".to_string())).expect("bind");
+    let addr = handle.addr.expect("bound address");
+    {
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect");
+        conn.write_all(MIXED_TRACE.as_bytes()).expect("send trace");
+        conn.write_all(b"drain\n").expect("send drain");
+    }
+    let items: Vec<IntakeItem> = handle.rx.iter().collect();
+    handle.join();
+
+    let mut jobs = Vec::new();
+    let mut errors = Vec::new();
+    let mut drained = false;
+    for item in items {
+        match item {
+            IntakeItem::Job(j) => jobs.push(j),
+            IntakeItem::Skip(e) => errors.push(e),
+            IntakeItem::Drain => drained = true,
+            IntakeItem::Halt => panic!("nobody sent a halt"),
+        }
+    }
+    assert!(drained, "the drain control line must come through");
+    assert_eq!(errors, file_errors, "socket skips must equal file-trace skips");
+    assert_eq!(jobs.len(), file_jobs.len());
+    for (got, want) in jobs.iter().zip(&file_jobs) {
+        assert_eq!(got.id, want.id, "provisional ids count accepted jobs, like file ids");
+        assert_eq!(got.name, want.name);
+        assert_eq!(got.spec, want.spec);
+    }
+}
+
+/// A client that disconnects mid-line (no trailing newline on a
+/// half-written job) gets its dangling fragment reported as malformed,
+/// and the next connection's jobs flow through untouched.
+#[test]
+fn mid_line_disconnect_does_not_poison_the_queue() {
+    let handle = spawn_intake(IntakeSource::Tcp("127.0.0.1:0".to_string())).expect("bind");
+    let addr = handle.addr.expect("bound address");
+    {
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect 1");
+        conn.write_all(b"{\"problem\": \"nearness\", \"n\": 12, \"seed\": 1}\n")
+            .expect("send whole line");
+        conn.write_all(b"{\"problem\": \"nea").expect("send fragment");
+        // Drop: the write side closes mid-line.
+    }
+    {
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect 2");
+        conn.write_all(b"{\"problem\": \"cc\", \"n\": 10, \"seed\": 2}\ndrain\n")
+            .expect("send second connection");
+    }
+    let items: Vec<IntakeItem> = handle.rx.iter().collect();
+    handle.join();
+
+    assert_eq!(items.len(), 4, "job, fragment report, job, drain — got {items:?}");
+    assert!(matches!(&items[0], IntakeItem::Job(j) if j.spec.kind() == "nearness"));
+    assert!(
+        matches!(&items[1], IntakeItem::Skip(ServeError::Trace { line: 2, .. })),
+        "the fragment is reported at its connection-relative line: {:?}",
+        items[1]
+    );
+    assert!(
+        matches!(&items[2], IntakeItem::Job(j) if j.spec.kind() == "cc" && j.id == 1),
+        "the next connection's job survives (ids keep counting): {:?}",
+        items[2]
+    );
+    assert!(matches!(items[3], IntakeItem::Drain));
+}
+
+/// End-to-end over a Unix socket: jobs and skips flow through
+/// [`run_fleet`], the skip reports land in the fleet stats with
+/// file-trace-identical line numbers, and every accepted job completes.
+#[test]
+fn unix_socket_intake_feeds_a_fleet_end_to_end() {
+    let dir = temp_dir("unix-fleet");
+    let sock = dir.join("intake.sock");
+    let handle = spawn_intake(IntakeSource::Unix(sock.clone())).expect("bind unix socket");
+    {
+        let mut conn = std::os::unix::net::UnixStream::connect(&sock).expect("connect");
+        conn.write_all(MIXED_TRACE.as_bytes()).expect("send trace");
+        conn.write_all(b"drain\n").expect("send drain");
+    }
+
+    let cfg = FleetConfig {
+        shards: 2,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: paf::core::problem::SolveOptions::new()
+                .violation_tol(1e-4)
+                .inner_sweeps(2)
+                .sharded(0),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        ..FleetConfig::default()
+    };
+    let stats = run_fleet(Vec::new(), Some(handle), cfg, |_| {}).expect("fleet run");
+
+    let (_, file_errors) = parse_job_trace_lenient(MIXED_TRACE);
+    assert_eq!(stats.skipped_lines, file_errors.len());
+    assert_eq!(stats.skipped, file_errors, "fleet skip reports equal file-trace skips");
+    assert_eq!(stats.jobs.len(), 2, "both good jobs registered");
+    assert!(stats.all_completed(), "accepted work completes: {stats:?}");
+    assert!(stats.drained && !stats.halted);
+
+    // The listener removes its socket file on the way out.
+    for _ in 0..200 {
+        if !sock.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(!sock.exists(), "the drained listener cleans up its socket file");
+    let _ = std::fs::remove_dir_all(&dir);
+}
