@@ -64,7 +64,24 @@ pub struct JobBank {
 impl JobBank {
     /// Materialize every job's instance.
     pub fn materialize(jobs: &[Job]) -> JobBank {
-        JobBank { inputs: jobs.iter().map(|j| j.spec.materialize()).collect() }
+        JobBank::materialize_with(jobs, || {})
+    }
+
+    /// Materialize every job's instance, calling `tick` after each one.
+    /// Fleet shards stamp their liveness heartbeat here so a large
+    /// trace's instance build never looks like a stall to the
+    /// supervisor.
+    pub fn materialize_with(jobs: &[Job], mut tick: impl FnMut()) -> JobBank {
+        JobBank {
+            inputs: jobs
+                .iter()
+                .map(|j| {
+                    let input = j.spec.materialize();
+                    tick();
+                    input
+                })
+                .collect(),
+        }
     }
 
     pub fn len(&self) -> usize {

@@ -34,12 +34,16 @@
 //! invariant).
 //!
 //! **Health**: shards heartbeat through a shared atomic
-//! ([`now_us`](crate::obs::clock::now_us)) once per scheduler round.
-//! The supervisor declares a shard dead when its worker thread exits
-//! unexpectedly (panic), when it reports a fault, or when its
-//! heartbeat goes stale past `stall_timeout_ms` while it holds work.
-//! [`FaultPlan`]'s `kill-shard=K@R` / `stall-shard=K@R` make both
-//! paths deterministic under test.
+//! ([`now_us`](crate::obs::clock::now_us)) at fine granularity — every
+//! scheduler round *and* every in-round phase (admissions, recovered
+//! checkpoints, session steps, per materialized job), plus a stamp from
+//! the supervisor itself on every assignment, so neither an idle gap in
+//! `rx.recv()` nor one long phase reads as a stall. The supervisor
+//! declares a shard dead when its worker thread exits unexpectedly
+//! (panic), when it reports a fault, or when its heartbeat goes stale
+//! past `stall_timeout_ms` while it holds work. [`FaultPlan`]'s
+//! `kill-shard=K@R` / `stall-shard=K@R` make both paths deterministic
+//! under test.
 //!
 //! **Migration**: a dead shard's outstanding jobs are re-placed on the
 //! least-loaded survivors, each carrying the raw bytes of its durable
@@ -53,10 +57,14 @@
 //! **Durability**: every placement is journaled to
 //! `state_dir/fleet-manifest.jsonl` (the job's own trace line embedded,
 //! so live-intake jobs survive too) and every terminal job is marked
-//! done. A restarted fleet replays the manifest: done jobs are not
-//! re-run, unfinished jobs re-enter placement with the freshest
-//! readable checkpoint from any shard dir they ever lived in —
-//! at-least-once semantics across process boundaries.
+//! done (or shed). A restarted fleet replays the manifest: done and
+//! shed jobs are not re-run, unfinished jobs re-enter placement with
+//! the freshest readable checkpoint from any shard dir they ever lived
+//! in — at-least-once semantics across process boundaries. Recovery is
+//! itself crash-safe: the pulled checkpoint bytes are re-persisted
+//! under `state_dir/recovered/` before the shard dirs are cleared, and
+//! the rebuilt manifest replaces the old journal by an atomic
+//! temp-file rename, never an in-place truncate.
 //!
 //! **Shutdown**: a `drain` control line stops intake and lets every
 //! shard finish (exit 0, state dirs empty); `halt` stops now — every
@@ -258,8 +266,14 @@ enum ShardReport {
 struct ShardShared {
     /// Cumulative scheduler rounds (updated between generations).
     rounds: AtomicUsize,
-    /// [`now_us`] at the last heartbeat (per round + generation edges).
-    beat_us: AtomicU64,
+    /// [`now_us`] at the last heartbeat. Stamped from three sides so
+    /// staleness means a wedged worker, not an idle or busy one: the
+    /// worker (generation edges, per materialized job, and the
+    /// scheduler's in-round [`ServeConfig::heartbeat`] beats), the
+    /// scheduler's per-round hook, and the *supervisor* on every
+    /// assignment — a shard that idled in `rx.recv()` for longer than
+    /// the stall timeout must not look dead the instant work arrives.
+    beat_us: Arc<AtomicU64>,
     /// Set by the supervisor when the shard is declared dead; a
     /// stalled worker wakes on it and unwinds.
     dead: AtomicBool,
@@ -388,10 +402,12 @@ fn shard_worker(
         // history, finished slots excluded, unfinished ones recovered
         // from this shard's own state dir.
         let gen_jobs = slots.jobs.clone();
-        let bank = JobBank::materialize(&gen_jobs);
+        let bank =
+            JobBank::materialize_with(&gen_jobs, || shared.beat_us.store(now_us(), Relaxed));
         let cfg = ServeConfig {
             state_dir: Some(state_dir.clone()),
             pause: Some(Arc::clone(&shared.pause)),
+            heartbeat: Some(Arc::clone(&shared.beat_us)),
             max_service_rounds: template.max_service_rounds.saturating_sub(rounds_total).max(1),
             fault_plan: FaultPlan {
                 poison_spec: slots.poisoned.clone(),
@@ -477,10 +493,25 @@ fn shard_worker(
     let _ = report.send(ShardReport::Drained { shard });
 }
 
+/// How a seed job enters the registry at startup.
+#[derive(Clone, Copy, PartialEq)]
+enum SeedFate {
+    /// Re-enters placement (possibly with recovered checkpoint bytes).
+    Live,
+    /// Completed by a prior process; registered, never re-run.
+    DonePrior,
+    /// Shed by a prior process; registered with its terminal shed
+    /// record, never re-run.
+    ShedPrior,
+}
+
 /// A job recovered from a prior process's manifest.
 struct RecoveredJob {
     job: Job,
     done: bool,
+    /// Terminal by fleet-level shedding (never completed) — replayed so
+    /// a shed job does not resurrect after a restart.
+    shed: bool,
     /// Every `(shard, local)` the job was ever assigned, oldest first.
     assigns: Vec<(usize, usize)>,
 }
@@ -509,6 +540,7 @@ fn replay_manifest(text: &str) -> Vec<RecoveredJob> {
                 let slot = slots[global].get_or_insert_with(|| RecoveredJob {
                     job: job.clone(),
                     done: false,
+                    shed: false,
                     assigns: Vec::new(),
                 });
                 slot.job = job;
@@ -526,6 +558,12 @@ fn replay_manifest(text: &str) -> Vec<RecoveredJob> {
                     slot.done = true;
                 }
             }
+            "shed" => {
+                if let Some(Some(slot)) = slots.get_mut(global) {
+                    slot.done = true;
+                    slot.shed = true;
+                }
+            }
             _ => {}
         }
     }
@@ -534,6 +572,16 @@ fn replay_manifest(text: &str) -> Vec<RecoveredJob> {
 
 fn manifest_path(root: &Path) -> PathBuf {
     root.join("fleet-manifest.jsonl")
+}
+
+/// Where a restarting fleet re-persists the checkpoint bytes it pulled
+/// out of the (about-to-be-cleared) shard dirs, so a crash *during*
+/// recovery still leaves every migrated checkpoint on disk. Files here
+/// are the lookup of last resort — a newer checkpoint under a shard
+/// dir (journaled `assign`) always wins — and are removed when their
+/// job reaches a terminal state.
+fn recovered_ckpt_path(root: &Path, global: usize) -> PathBuf {
+    root.join("recovered").join(format!("job-{global}.ckpt"))
 }
 
 fn journal(file: &mut Option<std::fs::File>, line: String) {
@@ -578,7 +626,12 @@ fn declare_dead(
     work.sort_unstable();
     for global in work {
         let local = assigned_seq[shard].iter().position(|&g| g == global);
-        let bytes = local.and_then(|l| std::fs::read(persist::checkpoint_path(&dir, l)).ok());
+        // The dead shard's own file is the freshest; a shard that died
+        // before ever accepting a replayed job falls back to the copy
+        // recovery persisted under `recovered/`.
+        let bytes = local
+            .and_then(|l| std::fs::read(persist::checkpoint_path(&dir, l)).ok())
+            .or_else(|| std::fs::read(recovered_ckpt_path(root, global)).ok());
         stats.jobs[global].migrations += 1;
         stats.migrations += 1;
         pending.push_back((global, bytes, true));
@@ -679,45 +732,115 @@ pub fn run_fleet(
         .map_err(|e| ServeError::Io { path: root.display().to_string(), msg: e.to_string() })?;
 
     // Replay a prior process's manifest (if any), pulling each
-    // unfinished job's freshest readable checkpoint bytes into memory,
-    // then clear the shard dirs: local ids restart from zero, so stale
-    // files must never leak into a new shard's recovery scan.
+    // unfinished job's freshest readable checkpoint bytes into memory:
+    // newest journaled `assign` first across the shard dirs, falling
+    // back to the `recovered/` copy a prior *recovery* persisted.
     let mpath = manifest_path(&root);
     let recovered = match std::fs::read_to_string(&mpath) {
         Ok(text) => replay_manifest(&text),
         Err(_) => Vec::new(),
     };
-    let mut seeds: Vec<(Job, Option<Vec<u8>>, bool)> = Vec::new(); // (job, ckpt, done_prior)
+    let replayed = !recovered.is_empty();
+    let mut seeds: Vec<(Job, Option<Vec<u8>>, SeedFate)> = Vec::new();
     let mut resumed_event = None;
-    if recovered.is_empty() {
+    if !replayed {
         for (i, mut job) in initial_jobs.into_iter().enumerate() {
             job.id = i;
-            seeds.push((job, None, false));
+            seeds.push((job, None, SeedFate::Live));
         }
     } else {
         let mut live = 0usize;
         let mut prior = 0usize;
         for r in recovered {
-            let bytes = if r.done {
-                None
+            let global = seeds.len();
+            let fate = if r.shed {
+                SeedFate::ShedPrior
+            } else if r.done {
+                SeedFate::DonePrior
             } else {
-                r.assigns.iter().rev().find_map(|&(shard, local)| {
-                    std::fs::read(persist::checkpoint_path(
-                        &root.join(format!("shard-{shard}")),
-                        local,
-                    ))
-                    .ok()
-                })
+                SeedFate::Live
             };
-            if r.done {
-                prior += 1;
+            let bytes = if fate == SeedFate::Live {
+                r.assigns
+                    .iter()
+                    .rev()
+                    .find_map(|&(shard, local)| {
+                        std::fs::read(persist::checkpoint_path(
+                            &root.join(format!("shard-{shard}")),
+                            local,
+                        ))
+                        .ok()
+                    })
+                    .or_else(|| std::fs::read(recovered_ckpt_path(&root, global)).ok())
             } else {
+                None
+            };
+            if fate == SeedFate::Live {
                 live += 1;
+            } else {
+                prior += 1;
             }
-            let done = r.done;
-            seeds.push((r.job, bytes, done));
+            seeds.push((r.job, bytes, fate));
         }
         resumed_event = Some(FleetEvent::Resumed { jobs: live, done_prior: prior });
+    }
+    // Crash-safe recovery order — a crash at any point below must leave
+    // a state the *next* restart fully recovers from:
+    //   1. re-persist every live job's freshest checkpoint bytes under
+    //      `recovered/` (the shard dirs are about to be cleared and
+    //      local ids restart from zero, so those copies become
+    //      unreachable);
+    //   2. atomically swap in the rebuilt manifest (temp file + rename),
+    //      so the journal is always either the complete old registry or
+    //      the complete new one, never a truncated half;
+    //   3. only then clear the shard dirs (stale local ids must not
+    //      leak into a new shard's recovery scan).
+    if replayed {
+        let rdir = root.join("recovered");
+        std::fs::create_dir_all(&rdir).map_err(|e| ServeError::Io {
+            path: rdir.display().to_string(),
+            msg: e.to_string(),
+        })?;
+        for (global, (_, bytes, fate)) in seeds.iter().enumerate() {
+            let path = recovered_ckpt_path(&root, global);
+            match bytes {
+                Some(b) if *fate == SeedFate::Live => {
+                    let tmp = rdir.join(format!("job-{global}.ckpt.tmp"));
+                    let _ = std::fs::write(&tmp, b).and_then(|_| std::fs::rename(&tmp, &path));
+                }
+                _ => {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        use std::fmt::Write as _;
+        let mut rebuilt = String::new();
+        for (global, (job, _, fate)) in seeds.iter().enumerate() {
+            let line = manifest_job_line(job);
+            let _ = writeln!(
+                rebuilt,
+                "{{\"op\": \"accept\", \"global\": {global}, \"line\": \"{line}\"}}"
+            );
+            match fate {
+                SeedFate::DonePrior => {
+                    let _ = writeln!(
+                        rebuilt,
+                        "{{\"op\": \"done-prior\", \"global\": {global}, \"line\": \"{line}\"}}"
+                    );
+                }
+                SeedFate::ShedPrior => {
+                    let _ = writeln!(rebuilt, "{{\"op\": \"shed\", \"global\": {global}}}");
+                }
+                SeedFate::Live => {}
+            }
+        }
+        let tmp = root.join("fleet-manifest.jsonl.tmp");
+        std::fs::write(&tmp, rebuilt)
+            .and_then(|_| std::fs::rename(&tmp, &mpath))
+            .map_err(|e| ServeError::Io {
+                path: mpath.display().to_string(),
+                msg: e.to_string(),
+            })?;
     }
     for shard in 0..cfg.shards {
         let dir = root.join(format!("shard-{shard}"));
@@ -727,15 +850,17 @@ pub fn run_fleet(
             }
         }
     }
-    // The journal restarts from scratch with the recovered registry
-    // (done-prior jobs carried forward so a second restart still knows
-    // them).
-    let mut manifest = std::fs::OpenOptions::new()
-        .create(true)
-        .write(true)
-        .truncate(true)
-        .open(&mpath)
-        .ok();
+    // The rebuilt manifest already journals the recovered registry
+    // (accept + done-prior/shed records), so a replayed run appends to
+    // it; a fresh run starts its journal from scratch.
+    let mut manifest = if replayed {
+        std::fs::OpenOptions::new().append(true).open(&mpath).ok()
+    } else {
+        std::fs::OpenOptions::new().create(true).write(true).truncate(true).open(&mpath).ok()
+    };
+    // Seed registration must not re-journal what the rebuilt manifest
+    // already holds.
+    let mut journal_accepts = !replayed;
 
     // Spawn the shards.
     let (report_tx, report_rx) = std::sync::mpsc::channel::<ShardReport>();
@@ -746,7 +871,7 @@ pub fn run_fleet(
         let (tx, rx) = std::sync::mpsc::channel::<ShardMsg>();
         let sh = Arc::new(ShardShared {
             rounds: AtomicUsize::new(0),
-            beat_us: AtomicU64::new(now_us()),
+            beat_us: Arc::new(AtomicU64::new(now_us())),
             dead: AtomicBool::new(false),
             halt: AtomicBool::new(false),
             pause: Arc::new(AtomicBool::new(false)),
@@ -824,14 +949,17 @@ pub fn run_fleet(
             });
             // Journal acceptance immediately: a job the fleet has
             // taken must survive a restart even if a halt lands
-            // before it is ever placed on a shard.
-            journal(
-                &mut manifest,
-                format!(
-                    "{{\"op\": \"accept\", \"global\": {global}, \"line\": \"{}\"}}",
-                    manifest_job_line(&job)
-                ),
-            );
+            // before it is ever placed on a shard. (Replayed seeds are
+            // already in the rebuilt manifest — not re-journaled.)
+            if journal_accepts {
+                journal(
+                    &mut manifest,
+                    format!(
+                        "{{\"op\": \"accept\", \"global\": {global}, \"line\": \"{}\"}}",
+                        manifest_job_line(&job)
+                    ),
+                );
+            }
             jobs.push(job);
             global
         }};
@@ -848,6 +976,7 @@ pub fn run_fleet(
                 }
                 stats.jobs[global].stats = Some(*js);
                 journal(&mut manifest, format!("{{\"op\": \"done\", \"global\": {global}}}"));
+                let _ = std::fs::remove_file(recovered_ckpt_path(&root, global));
                 emit!(FleetEvent::JobDone { job: global, shard, completed });
             }
         }};
@@ -856,22 +985,23 @@ pub fn run_fleet(
     if let Some(ev) = resumed_event {
         emit!(ev);
     }
-    for (job, bytes, done_prior) in seeds {
+    for (job, bytes, fate) in seeds {
         let global = register!(job);
-        if done_prior {
-            stats.jobs[global].done_prior = true;
-            stats.completed += 1;
-            journal(
-                &mut manifest,
-                format!(
-                    "{{\"op\": \"done-prior\", \"global\": {global}, \"line\": \"{}\"}}",
-                    manifest_job_line(&jobs[global])
-                ),
-            );
-        } else {
-            pending.push_back((global, bytes, false));
+        match fate {
+            SeedFate::DonePrior => {
+                stats.jobs[global].done_prior = true;
+                stats.completed += 1;
+            }
+            SeedFate::ShedPrior => {
+                // Terminal in a prior process: keep its shed record so
+                // it is reported consistently, but never re-run it.
+                stats.jobs[global].stats = Some(JobStats::shed_placeholder(&jobs[global]));
+                stats.shed += 1;
+            }
+            SeedFate::Live => pending.push_back((global, bytes, false)),
         }
     }
+    journal_accepts = true;
 
     loop {
         // 1. Live intake (non-blocking): register arrivals, record
@@ -940,6 +1070,11 @@ pub fn run_fleet(
                 let Some((global, _, _)) = pending.remove(worst) else { break };
                 stats.jobs[global].stats = Some(JobStats::shed_placeholder(&jobs[global]));
                 stats.shed += 1;
+                // Sheds are terminal: journal them so a manifest replay
+                // does not resurrect and run a job already reported
+                // dropped.
+                journal(&mut manifest, format!("{{\"op\": \"shed\", \"global\": {global}}}"));
+                let _ = std::fs::remove_file(recovered_ckpt_path(&root, global));
                 emit!(FleetEvent::Shed { job: global });
             }
         }
@@ -973,27 +1108,25 @@ pub fn run_fleet(
                         manifest_job_line(&jobs[global])
                     ),
                 );
-                let sent = txs[to]
-                    .as_ref()
-                    .map(|tx| {
-                        tx.send(ShardMsg::Assign {
-                            job: jobs[global].clone(),
-                            global,
-                            ckpt,
-                            poisoned,
-                        })
-                        .is_ok()
-                    })
-                    .unwrap_or(false);
-                if !sent {
+                let sent = txs[to].as_ref().expect("placement only targets live senders").send(
+                    ShardMsg::Assign { job: jobs[global].clone(), global, ckpt, poisoned },
+                );
+                if let Err(std::sync::mpsc::SendError(ShardMsg::Assign { ckpt, .. })) = sent {
                     // The shard died between the liveness check and the
-                    // send; undo and let the health pass migrate it.
+                    // send; undo — keeping the checkpoint bytes the
+                    // failed message still carries — and let the health
+                    // pass migrate it.
                     assigned_seq[to].pop();
                     outstanding[to].retain(|&g| g != global);
                     stats.shards[to].assigned -= 1;
-                    pending.push_front((global, None, migrated));
+                    pending.push_front((global, ckpt, migrated));
                     break;
                 }
+                // Count the hand-off itself as a heartbeat: the worker
+                // last beat at its previous generation's end, and an
+                // idle gap longer than the stall timeout must not read
+                // as a stall the moment the shard holds work again.
+                shared[to].beat_us.store(now_us(), Relaxed);
                 emit!(FleetEvent::Placed { job: global, shard: to, migrated, with_checkpoint });
                 if !nudged.contains(&to) {
                     nudged.push(to);
@@ -1219,6 +1352,89 @@ mod tests {
         assert_eq!(recovered.len(), 1);
         assert!(recovered[0].done);
         assert!(recovered[0].assigns.is_empty());
+    }
+
+    #[test]
+    fn replay_marks_shed_jobs_terminal() {
+        let line = queue::json_escape(&job(0, 8).to_json_line());
+        let text = format!(
+            "{{\"op\": \"accept\", \"global\": 0, \"line\": \"{line}\"}}\n\
+             {{\"op\": \"shed\", \"global\": 0}}\n"
+        );
+        let recovered = replay_manifest(&text);
+        assert_eq!(recovered.len(), 1);
+        assert!(
+            recovered[0].done && recovered[0].shed,
+            "a journaled shed is terminal — the job must not resurrect on replay"
+        );
+    }
+
+    /// The crash-window invariant of recovery itself: after the rebuilt
+    /// manifest has been swapped in (accept records only — the old
+    /// `assign` records are gone) and the shard dirs cleared, the
+    /// `recovered/` copy of each live job's checkpoint must be enough
+    /// to resume it bit-identically. This simulates a process dying at
+    /// exactly that point and restarting.
+    #[test]
+    fn recovery_resumes_from_the_recovered_dir_when_shard_dirs_are_gone() {
+        let dir = std::env::temp_dir().join(format!(
+            "paf-fleet-recdir-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = SolveOptions::new().violation_tol(1e-4).inner_sweeps(2).sharded(0);
+        let cfg = FleetConfig {
+            shards: 1,
+            state_dir: Some(dir.clone()),
+            shard: ServeConfig {
+                capacity: 2,
+                checkpoint_every: Some(1),
+                opts: opts.clone(),
+                ..ServeConfig::default()
+            },
+            fault_plan: FaultPlan { kill_shard: Some((0, 2)), ..Default::default() },
+            ..Default::default()
+        };
+        // Run 1: the only shard dies at round 2 — work strands, but the
+        // durable checkpoint and the manifest survive.
+        let first = run_fleet(vec![job(0, 24)], None, cfg.clone(), |_| {}).expect("valid");
+        assert!(!first.drained, "one shard + kill-shard strands the work");
+        let shard_ckpt = persist::checkpoint_path(&dir.join("shard-0"), 0);
+        assert!(shard_ckpt.exists(), "the killed shard left a durable checkpoint");
+
+        // Reproduce the mid-recovery crash state by hand.
+        let bytes = std::fs::read(&shard_ckpt).expect("read checkpoint");
+        std::fs::create_dir_all(dir.join("recovered")).expect("mk recovered");
+        std::fs::write(recovered_ckpt_path(&dir, 0), &bytes).expect("persist recovered copy");
+        std::fs::write(
+            manifest_path(&dir),
+            format!(
+                "{{\"op\": \"accept\", \"global\": 0, \"line\": \"{}\"}}\n",
+                manifest_job_line(&job(0, 24))
+            ),
+        )
+        .expect("rewrite manifest as rebuilt (no assigns)");
+        std::fs::remove_dir_all(dir.join("shard-0")).expect("drop shard dir");
+
+        // Run 2: must find the recovered/ copy, resume (not restart),
+        // and finish bit-identical to solo.
+        let cfg2 = FleetConfig { fault_plan: FaultPlan::default(), ..cfg };
+        let second = run_fleet(Vec::new(), None, cfg2, |_| {}).expect("valid");
+        assert!(second.drained && second.all_completed(), "{second:?}");
+        let s = second.jobs[0].stats.as_ref().expect("terminal record");
+        assert!(s.recovered, "the job must resume from recovered/, not restart from scratch");
+        assert!(
+            !recovered_ckpt_path(&dir, 0).exists(),
+            "a terminal job cleans up its recovered/ copy"
+        );
+        let jobs = vec![job(0, 24)];
+        let bank = JobBank::materialize(&jobs);
+        let solo = crate::serve::solve_job_solo(&jobs[0], bank.input(0), &opts).expect("solo");
+        let got = s.result.as_ref().expect("completed job has a result");
+        assert_eq!(solo.result.x, got.x, "recovered continuation must be bit-identical");
+        assert_eq!(solo.result.iterations, got.iterations);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -93,6 +93,14 @@ pub struct ServeConfig {
     /// run is resumable: a new scheduler over the same state dir picks
     /// up bit-identically.
     pub pause: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
+    /// Liveness heartbeat: when set, the scheduler stamps the obs-clock
+    /// microsecond time ([`now_us`](crate::obs::clock::now_us)) into
+    /// this atomic at fine granularity — every round boundary, every
+    /// admission, every recovered checkpoint, and after every session
+    /// step — not just once per round, so a supervisor's staleness
+    /// check cannot false-positive on a single long phase. `None` (the
+    /// default) in standalone serving.
+    pub heartbeat: Option<std::sync::Arc<std::sync::atomic::AtomicU64>>,
 }
 
 impl Default for ServeConfig {
@@ -109,6 +117,7 @@ impl Default for ServeConfig {
             fault_plan: FaultPlan::default(),
             metrics_every: 0,
             pause: None,
+            heartbeat: None,
         }
     }
 }
@@ -531,6 +540,7 @@ impl<'a> Scheduler<'a> {
             Err(_) => return, // unreadable dir: serve from scratch
         };
         for (job, path) in found {
+            self.beat();
             if job >= self.jobs.len() {
                 continue; // a different trace's leftovers; not ours to touch
             }
@@ -592,6 +602,7 @@ impl<'a> Scheduler<'a> {
     /// typed admission failure. The in-memory checkpoint is only
     /// consumed on success, so a failed resume can retry later.
     fn try_admit(&mut self, job: usize, prio: i64) {
+        self.beat();
         let outcome = if self.cfg.fault_plan.poison_spec.contains(&job) {
             Err(ServeError::SpecMismatch {
                 job,
@@ -731,6 +742,16 @@ impl<'a> Scheduler<'a> {
             .is_some_and(|p| p.load(std::sync::atomic::Ordering::Relaxed))
     }
 
+    /// Stamp the [`ServeConfig::heartbeat`] atomic (no-op without one).
+    /// Called at every phase boundary inside a round, so liveness is
+    /// visible even when one round outlasts a supervisor's stall
+    /// timeout.
+    fn beat(&self) {
+        if let Some(hb) = &self.cfg.heartbeat {
+            hb.store(crate::obs::clock::now_us(), std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
     /// Cooperative pause: persist every running job's checkpoint (same
     /// capture as [`Scheduler::crash_now`] — a between-rounds,
     /// post-FORGET snapshot, so resumption is bit-identical) and flag
@@ -779,6 +800,7 @@ impl<'a> Scheduler<'a> {
         self.started = Instant::now();
         self.recover();
         loop {
+            self.beat();
             // 1. Arrivals, then retries whose backoff elapsed.
             while self.next_arrival < self.arrivals.len()
                 && self.jobs[self.arrivals[self.next_arrival]].arrival_round <= self.round
@@ -852,6 +874,7 @@ impl<'a> Scheduler<'a> {
                 continue;
             }
             self.session.step();
+            self.beat();
             self.round += 1;
 
             // 5. Completions, then budgets and deadlines.

@@ -343,3 +343,123 @@ fn halt_persists_and_a_second_fleet_resumes_to_completion() {
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// A shed is terminal *durably*: the shed is journaled, so a restart
+/// over the same state root reports the job shed again instead of
+/// resurrecting and running it.
+#[test]
+fn shed_jobs_stay_shed_across_a_restart() {
+    let dir = temp_dir("shed-restart");
+    let mut jobs = six_jobs();
+    for (i, j) in jobs.iter_mut().enumerate() {
+        j.priority = 5 - i as i64; // job 5 is the least important
+    }
+    let opts = fleet_opts();
+
+    let cfg = FleetConfig {
+        shards: 2,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: opts.clone(),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        queue_high_water: Some(4),
+        ..FleetConfig::default()
+    };
+    let first = run_fleet(jobs, None, cfg.clone(), |_| {}).expect("fleet run 1");
+    assert_eq!(first.shed, 2, "6 arrivals over a high-water of 4 shed exactly 2");
+    assert!(first.drained);
+
+    // Same state root, no trace: the manifest is the workload, and it
+    // must remember both the completions and the sheds.
+    let second = run_fleet(Vec::new(), None, cfg, |_| {}).expect("fleet run 2");
+    assert_eq!(second.jobs.len(), 6, "the manifest re-registers every job");
+    assert_eq!(second.shed, 2, "shed jobs replay as shed, not as runnable");
+    assert_eq!(second.completed, 4, "completed jobs replay as done-prior");
+    assert!(
+        !second.events.iter().any(|e| matches!(e.event, FleetEvent::Placed { .. })),
+        "nothing runs on a fully-terminal manifest: {:?}",
+        second.events
+    );
+    for sh in &second.shards {
+        assert_eq!(sh.assigned, 0, "no shard may be handed a shed or done job");
+    }
+    for &g in &[4usize, 5] {
+        let s = second.jobs[g].stats.as_ref().expect("shed jobs keep a terminal record");
+        assert!(s.shed && s.completed_round.is_none());
+    }
+    assert!(second.drained);
+    assert!(!second.all_completed(), "shed jobs never complete, even across a restart");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An idle shard is not a stalled shard. A worker blocked on an empty
+/// queue emits no heartbeats, so after an idle gap longer than the
+/// stall timeout the next arrival used to be fatal: the health pass ran
+/// in the same supervisor iteration as placement and killed the shard
+/// before its worker could wake. The supervisor now stamps the
+/// heartbeat on every successful assignment, so staleness only ever
+/// measures a shard that *held* work and stopped beating.
+#[test]
+fn idle_gap_longer_than_stall_timeout_is_not_a_stall() {
+    let dir = temp_dir("idle-gap");
+    let jobs: Vec<Job> = (0..2).map(|id| nearness_job(id, 14)).collect();
+    let opts = fleet_opts();
+    let solo = solo_results(&jobs, &opts);
+
+    let cfg = FleetConfig {
+        shards: 1,
+        shard: ServeConfig {
+            capacity: 2,
+            opts: opts.clone(),
+            ..ServeConfig::default()
+        },
+        state_dir: Some(dir.clone()),
+        stall_timeout_ms: 200,
+        ..FleetConfig::default()
+    };
+    let intake = paf::serve::spawn_intake(IntakeSource::Tcp("127.0.0.1:0".to_string()))
+        .expect("bind tcp intake");
+    let addr = intake.addr.expect("tcp intake knows its bound address");
+    let (ev_tx, ev_rx) = std::sync::mpsc::channel();
+    let fleet = std::thread::spawn(move || {
+        run_fleet(Vec::new(), Some(intake), cfg, move |e| {
+            let _ = ev_tx.send(e.clone());
+        })
+    });
+
+    {
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect intake");
+        writeln!(conn, "{}", jobs[0].to_json_line()).expect("send job 0");
+    }
+    // Wait until job 0 is fully done, then idle well past the stall
+    // timeout before the next arrival.
+    for ev in ev_rx.iter() {
+        if matches!(ev, FleetEvent::JobDone { job: 0, .. }) {
+            break;
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_millis(800));
+    {
+        let mut conn = std::net::TcpStream::connect(addr).expect("connect intake again");
+        writeln!(conn, "{}", jobs[1].to_json_line()).expect("send job 1");
+        writeln!(conn, "drain").expect("send drain");
+    }
+    let stats = fleet.join().expect("fleet thread").expect("fleet run");
+
+    assert!(
+        !stats.shards[0].dead,
+        "an idle gap must not read as a stall: {:?}",
+        stats.shards[0].cause
+    );
+    assert_eq!(stats.migrations, 0, "nothing died, nothing migrates");
+    assert!(
+        !stats.events.iter().any(|e| matches!(e.event, FleetEvent::ShardDead { .. })),
+        "no shard-death may be declared: {:?}",
+        stats.events
+    );
+    assert!(stats.drained, "{stats:?}");
+    assert_fleet_matches_solo(&stats, &solo, "idle-gap");
+    let _ = std::fs::remove_dir_all(&dir);
+}
